@@ -1,0 +1,120 @@
+//! Serving example: load a quantized+finetuned model behind the
+//! dynamic-batching server and replay a synthetic request trace,
+//! reporting latency percentiles and throughput.
+//!
+//! Run: `cargo run --release --example serve [--requests N] [--clients N]`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use irqlora::coordinator::{pretrained_base, quantize_model, BatchServer, ServerConfig, RunCfg};
+use irqlora::data::evalset::mmlu_item;
+use irqlora::data::World;
+use irqlora::model::weights;
+use irqlora::quant::Method;
+use irqlora::runtime::Manifest;
+use irqlora::util::timer::Timer;
+use irqlora::util::Rng;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut n_requests = 256usize;
+    let mut n_clients = 8usize;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--requests" => {
+                i += 1;
+                n_requests = args[i].parse()?;
+            }
+            "--clients" => {
+                i += 1;
+                n_clients = args[i].parse()?;
+            }
+            other => anyhow::bail!("unknown arg {other}"),
+        }
+        i += 1;
+    }
+
+    let tag = "xs";
+    let manifest = Manifest::load("artifacts").context("run `make artifacts`")?;
+    let cfg = RunCfg { pretrain_steps: 200, ..Default::default() };
+
+    // base model: pretrained, ICQ-quantized (serving-ready weights)
+    let rt = irqlora::runtime::Runtime::cpu()?;
+    let base = pretrained_base(&rt, &manifest, tag, &cfg)?;
+    let qm = quantize_model(&base, Method::NfIcq { k: 4 }, cfg.seed)?;
+    println!(
+        "quantized base: {:.2} MB, entropy {:.3} bits",
+        qm.storage_mb(),
+        qm.mean_entropy()
+    );
+    // identity adapter (a trained one would come from `irqlora finetune`)
+    let spec = manifest.graph(tag, "train_step")?;
+    let nb = qm.dequantized.len();
+    let nl = irqlora::coordinator::trainer::train_layout(spec.inputs.len(), nb)?;
+    let mut rng = Rng::new(cfg.seed);
+    let lora = weights::init_lora(
+        &spec.inputs[nb..nb + nl],
+        manifest.size(tag)?.config.rank,
+        &mut rng,
+    );
+    drop(rt); // server owns its own runtime
+
+    let server = Arc::new(BatchServer::spawn(
+        manifest,
+        ServerConfig {
+            tag: tag.into(),
+            masks: (1.0, 1.0),
+            max_wait: Duration::from_millis(2),
+        },
+        qm.dequantized,
+        lora,
+    )?);
+    println!("server up; replaying {n_requests} requests from {n_clients} clients…");
+
+    // request trace: 5-shot MMLU prompts
+    let world = World::new(cfg.world_seed);
+    let mut rng = Rng::new(99);
+    let prompts: Vec<Vec<i32>> = (0..n_requests)
+        .map(|_| mmlu_item(&world, rng.below(4), &mut rng, 5).prompt)
+        .collect();
+
+    let t = Timer::start();
+    let mut handles = Vec::new();
+    let per_client = n_requests.div_ceil(n_clients);
+    for c in 0..n_clients {
+        let server = server.clone();
+        let chunk: Vec<Vec<i32>> = prompts
+            [c * per_client..((c + 1) * per_client).min(prompts.len())]
+            .to_vec();
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut lat = Vec::new();
+            for p in chunk {
+                let reply = server.query(p)?;
+                lat.push(reply.latency.as_secs_f64() * 1e3);
+            }
+            Ok(lat)
+        }));
+    }
+    let mut latencies: Vec<f64> = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().expect("client panicked")?);
+    }
+    let wall = t.elapsed_secs();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+    let stats = server.stats();
+    println!("\n== serving results ==");
+    println!("requests          {}", latencies.len());
+    println!("throughput        {:.1} req/s", latencies.len() as f64 / wall);
+    println!("latency p50       {:.1} ms", pct(0.50));
+    println!("latency p90       {:.1} ms", pct(0.90));
+    println!("latency p99       {:.1} ms", pct(0.99));
+    println!("batches           {}", stats.batches);
+    println!("mean batch size   {:.2}", stats.mean_batch_size());
+    Ok(())
+}

@@ -1,0 +1,214 @@
+"""AOT compiler: lower every graph to HLO text + write the manifest.
+
+Run once at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import (
+    SIZES,
+    base_param_specs,
+    config_dict,
+    lora_param_specs,
+    quantized_param_specs,
+)
+from .kernels.icq_entropy import icq_entropy_sweep
+from .kernels.iec_lora import iec_lora
+from .kernels.nf_dequant_matmul import nf_dequant_matmul
+from .kernels.quant_block import quant_block
+
+F32 = "f32"
+I32 = "i32"
+U8 = "u8"
+
+_DTYPES = {F32: jnp.float32, I32: jnp.int32, U8: jnp.uint8}
+
+
+def spec(shape, dtype=F32, name=""):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides array constants as '{...}', which xla_extension 0.5.1's
+    # text parser silently reads back as ZEROS (e.g. the NF4 codebook
+    # becomes all-zero and every downstream number is garbage).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_and_write(fn, input_specs, out_dir, fname):
+    args = [
+        jax.ShapeDtypeStruct(tuple(s["shape"]), _DTYPES[s["dtype"]])
+        for s in input_specs
+    ]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB, {len(input_specs)} inputs)")
+    return text
+
+
+def graph_entry(fname, input_specs, n_outputs):
+    return {"file": fname, "inputs": input_specs, "n_outputs": n_outputs}
+
+
+def build_size(tag, cfg, out_dir, with_forward_q):
+    print(f"[aot] size '{tag}' "
+          f"(d={cfg.d_model} L={cfg.n_layers} params={cfg.n_params():,})")
+    graphs = {}
+    bspecs = base_param_specs(cfg)
+    lspecs = lora_param_specs(cfg)
+    b, s = cfg.batch, cfg.seq
+
+    # pretrain_step
+    ins = (
+        [spec(sh, F32, n) for n, sh in bspecs]
+        + [spec(sh, F32, f"m.{n}") for n, sh in bspecs]
+        + [spec(sh, F32, f"v.{n}") for n, sh in bspecs]
+        + [
+            spec((), F32, "step"),
+            spec((b, s), I32, "tokens"),
+            spec((b, s), I32, "targets"),
+        ]
+    )
+    lower_and_write(M.make_pretrain_step(cfg), ins, out_dir, f"pretrain_{tag}.hlo.txt")
+    graphs["pretrain_step"] = graph_entry(
+        f"pretrain_{tag}.hlo.txt", ins, 1 + 3 * len(bspecs)
+    )
+
+    # train_step
+    ins = (
+        [spec(sh, F32, n) for n, sh in bspecs]
+        + [spec(sh, F32, n) for n, sh in lspecs]
+        + [spec(sh, F32, f"m.{n}") for n, sh in lspecs]
+        + [spec(sh, F32, f"v.{n}") for n, sh in lspecs]
+        + [
+            spec((), F32, "step"),
+            spec((), F32, "m1"),
+            spec((), F32, "m2"),
+            spec((b, s), I32, "tokens"),
+            spec((b, s), I32, "targets"),
+        ]
+    )
+    lower_and_write(M.make_train_step(cfg), ins, out_dir, f"train_{tag}.hlo.txt")
+    graphs["train_step"] = graph_entry(
+        f"train_{tag}.hlo.txt", ins, 1 + 3 * len(lspecs)
+    )
+
+    # forward (eval)
+    ins = (
+        [spec(sh, F32, n) for n, sh in bspecs]
+        + [spec(sh, F32, n) for n, sh in lspecs]
+        + [
+            spec((), F32, "m1"),
+            spec((), F32, "m2"),
+            spec((b, s), I32, "tokens"),
+        ]
+    )
+    lower_and_write(M.make_forward(cfg), ins, out_dir, f"forward_{tag}.hlo.txt")
+    graphs["forward"] = graph_entry(f"forward_{tag}.hlo.txt", ins, 1)
+
+    # forward_q (fused quantized serving; Pallas in-graph)
+    if with_forward_q:
+        qspecs = quantized_param_specs(cfg)
+        ins = [spec(sh, dt, n) for n, sh, dt in qspecs] + [
+            spec((b, s), I32, "tokens")
+        ]
+        lower_and_write(
+            M.make_forward_q(cfg, qspecs), ins, out_dir, f"forward_q_{tag}.hlo.txt"
+        )
+        graphs["forward_q"] = graph_entry(f"forward_q_{tag}.hlo.txt", ins, 1)
+
+    return {"config": config_dict(cfg), "graphs": graphs}
+
+
+def build_kernels(out_dir):
+    """Standalone kernel artifacts for cross-language parity tests."""
+    print("[aot] kernel artifacts")
+    kernels = {}
+
+    ins = [spec((64,), F32, "block"), spec((201,), F32, "taus")]
+    lower_and_write(
+        lambda blk, t: (icq_entropy_sweep(blk, t),), ins, out_dir,
+        "kernel_icq_entropy.hlo.txt",
+    )
+    kernels["icq_entropy"] = graph_entry("kernel_icq_entropy.hlo.txt", ins, 1)
+
+    ins = [spec((1024, 64), F32, "w")]
+    lower_and_write(
+        lambda w: tuple(quant_block(w)), ins, out_dir, "kernel_quant_block.hlo.txt"
+    )
+    kernels["quant_block"] = graph_entry("kernel_quant_block.hlo.txt", ins, 2)
+
+    ins = [
+        spec((8, 256), F32, "x"),
+        spec((256, 16), F32, "l1"),
+        spec((16, 256), F32, "l2"),
+        spec((), F32, "alpha"),
+        spec((), F32, "beta1"),
+        spec((), F32, "beta2"),
+        spec((), F32, "m1"),
+        spec((), F32, "m2"),
+    ]
+    lower_and_write(
+        lambda *a: (iec_lora(*a),), ins, out_dir, "kernel_iec_lora.hlo.txt"
+    )
+    kernels["iec_lora"] = graph_entry("kernel_iec_lora.hlo.txt", ins, 1)
+
+    ins = [
+        spec((4, 64), F32, "x"),
+        spec((64, 128), U8, "packed"),
+        spec((64, 4), F32, "scales"),
+        spec((64, 4), F32, "taus"),
+    ]
+    lower_and_write(
+        lambda *a: (nf_dequant_matmul(*a),), ins, out_dir,
+        "kernel_nf_dequant_matmul.hlo.txt",
+    )
+    kernels["nf_dequant_matmul"] = graph_entry(
+        "kernel_nf_dequant_matmul.hlo.txt", ins, 1
+    )
+    return kernels
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default="xs,s,m,l")
+    ap.add_argument("--forward-q-sizes", default="xs,s")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    fq = set(args.forward_q_sizes.split(","))
+    manifest = {"sizes": {}, "kernels": build_kernels(args.out)}
+    for tag in args.sizes.split(","):
+        cfg = SIZES[tag]
+        manifest["sizes"][tag] = build_size(tag, cfg, args.out, tag in fq)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

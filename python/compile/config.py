@@ -1,0 +1,138 @@
+"""Model configurations and the flat parameter ordering contract.
+
+The Rust coordinator and the AOT-compiled HLO graphs exchange tensors
+positionally; this module is the single source of truth for that order.
+`aot.py` serializes it into artifacts/manifest.json, which the Rust
+side parses (rust/src/runtime/manifest.rs) — neither side hard-codes
+the layout.
+
+NanoLLaMA family: LLaMA architecture (RMSNorm, RoPE, SwiGLU MHA
+decoder) at synthetic-substitute scales. Size tags are analogues of
+the paper's 7B/13B/30B/65B rows (see DESIGN.md §2).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 512
+    seq: int = 128
+    batch: int = 8
+    rank: int = 16           # LoRA r (paper: 64 at d=4096; scaled)
+    lora_alpha: float = 16.0 # paper α
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        return sum(int(np_prod(s)) for _, s in base_param_specs(self))
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+# Size tags -> paper-row analogues (7B, 13B, 30B, 65B).
+SIZES = {
+    "xs": ModelConfig(name="xs", d_model=192, n_layers=3, n_heads=6, d_ff=384),
+    "s": ModelConfig(name="s", d_model=256, n_layers=4, n_heads=8, d_ff=512),
+    "m": ModelConfig(name="m", d_model=320, n_layers=5, n_heads=8, d_ff=640),
+    "l": ModelConfig(name="l", d_model=384, n_layers=6, n_heads=8, d_ff=768),
+}
+
+# Paper-size label each tag stands in for (used by the table renderers).
+PAPER_ANALOG = {"xs": "7B", "s": "13B", "m": "30B", "l": "65B"}
+
+# The seven adapted projections per layer — Figure 5's panel list.
+PROJ_KINDS = ("wq", "wk", "wv", "wo", "w1", "w3", "w2")
+
+
+def proj_dims(cfg: ModelConfig, kind: str):
+    """(in_dim, out_dim) of each adapted projection."""
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wq": (d, d),
+        "wk": (d, d),
+        "wv": (d, d),
+        "wo": (d, d),
+        "w1": (d, f),
+        "w3": (d, f),
+        "w2": (f, d),
+    }[kind]
+
+
+def base_param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) of all base-model tensors."""
+    specs = [("embed", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        specs.append((f"l{i}.attn_norm", (cfg.d_model,)))
+        for kind in ("wq", "wk", "wv", "wo"):
+            specs.append((f"l{i}.{kind}", proj_dims(cfg, kind)))
+        specs.append((f"l{i}.ffn_norm", (cfg.d_model,)))
+        for kind in ("w1", "w3", "w2"):
+            specs.append((f"l{i}.{kind}", proj_dims(cfg, kind)))
+    specs.append(("final_norm", (cfg.d_model,)))
+    specs.append(("lm_head", (cfg.d_model, cfg.vocab)))
+    return specs
+
+
+def lora_param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) of all trainable LoRA tensors.
+
+    Per layer, per projection: a (in×r) and b (r×out). One global
+    `betas` tensor [n_layers, 7, 2] carries the IEC scalars (β1, β2)
+    for every adapted projection.
+    """
+    specs = []
+    for i in range(cfg.n_layers):
+        for kind in PROJ_KINDS:
+            h, o = proj_dims(cfg, kind)
+            specs.append((f"l{i}.{kind}.lora_a", (h, cfg.rank)))
+            specs.append((f"l{i}.{kind}.lora_b", (cfg.rank, o)))
+    specs.append(("betas", (cfg.n_layers, len(PROJ_KINDS), 2)))
+    return specs
+
+
+def quantized_param_specs(cfg: ModelConfig):
+    """Ordered specs for the fused quantized-serving graph (forward_q).
+
+    Every adapted projection weight arrives as NF4 storage: packed
+    codes (uint8, two 4-bit codes per byte along the out dim),
+    per-64-block scales and τ (f32, already double-dequantized on the
+    Rust side). Norms / embeddings / lm_head stay f32 (QLoRA does not
+    quantize them either).
+    """
+    specs = [("embed", (cfg.vocab, cfg.d_model), "f32")]
+    for i in range(cfg.n_layers):
+        specs.append((f"l{i}.attn_norm", (cfg.d_model,), "f32"))
+        for kind in PROJ_KINDS:
+            h, o = proj_dims(cfg, kind)
+            assert o % 64 == 0, "out dim must be a multiple of the block"
+            if kind == "w1":  # keep spec order aligned with base specs
+                specs.append((f"l{i}.ffn_norm", (cfg.d_model,), "f32"))
+            specs.append((f"l{i}.{kind}.codes", (h, o // 2), "u8"))
+            specs.append((f"l{i}.{kind}.scales", (h, o // 64), "f32"))
+            specs.append((f"l{i}.{kind}.taus", (h, o // 64), "f32"))
+            # merged LoRA adapters (IEC folded in — Eq. 16/17)
+            specs.append((f"l{i}.{kind}.lora_a", (h, cfg.rank), "f32"))
+            specs.append((f"l{i}.{kind}.lora_b", (cfg.rank, o), "f32"))
+    specs.append(("final_norm", (cfg.d_model,), "f32"))
+    specs.append(("lm_head", (cfg.d_model, cfg.vocab), "f32"))
+    return specs
+
+
+def config_dict(cfg: ModelConfig):
+    return asdict(cfg)

@@ -1,0 +1,41 @@
+"""Pallas kernel: ICQ τ-candidate entropy sweep (Algorithm 1 inner loop).
+
+For one weight block and T candidate calibration constants, computes
+the Shannon entropy of the NF4 code histogram at every τ in one shot:
+shift → normalize → boundary-compare → one-hot histogram → entropy,
+vectorized over the candidate axis. This is the Pallas twin of
+rust/src/quant/icq.rs::entropy_at, and the exported artifact is used
+by the Rust integration suite as a cross-language parity check.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NF4_CODEBOOK, boundaries
+
+
+def _kernel(block_ref, taus_ref, bounds_ref, h_ref):
+    block = block_ref[...]          # [B]
+    taus = taus_ref[...]            # [T]
+    b = bounds_ref[...]             # [15]
+    shifted = block[None, :] - taus[:, None]            # [T, B]
+    amax = jnp.max(jnp.abs(shifted), axis=1, keepdims=True)
+    normed = shifted / jnp.where(amax > 0, amax, 1.0)
+    codes = jnp.sum(normed[..., None] > b, axis=-1)     # [T, B] int32
+    onehot = (codes[..., None] == jnp.arange(16)).astype(jnp.float32)
+    p = onehot.sum(axis=1) / block.shape[0]             # [T, 16]
+    plogp = jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0)
+    h_ref[...] = -plogp.sum(axis=-1)
+
+
+@jax.jit
+def icq_entropy_sweep(block, taus):
+    """block: [B] f32, taus: [T] f32 -> entropies [T] f32."""
+    (t,) = taus.shape
+    bounds = jnp.asarray(boundaries(NF4_CODEBOOK))
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        interpret=True,
+    )(block, taus, bounds)

@@ -1,0 +1,60 @@
+"""Pallas kernel: fused IEC LoRA forward (paper Eq. 12-15).
+
+Computes α·U2(U1(x)) in one kernel: both LoRA matmuls plus the two
+parameter-free elastic terms (group-average + tile), gated by the
+ablation masks m1/m2. Scalars arrive as (1,1) f32 operands.
+
+Grid: single program — LoRA tiles are tiny (h×r and r×o with r ≤ 64),
+the whole working set fits VMEM comfortably; the win is fusing four
+elementwise/pool steps into the two small GEMMs.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _groupavg_tile(x, groups, dim_out):
+    b, d = x.shape
+    seg = d // groups
+    pooled = jnp.mean(x.reshape(b, groups, seg), axis=2)
+    return jnp.tile(pooled, (1, dim_out // groups))
+
+
+def _kernel(x_ref, l1_ref, l2_ref, sc_ref, o_ref):
+    x = x_ref[...]          # [B, h]
+    l1 = l1_ref[...]        # [h, r]
+    l2 = l2_ref[...]        # [r, o]
+    alpha = sc_ref[0, 0]
+    beta1 = sc_ref[0, 1]
+    beta2 = sc_ref[0, 2]
+    m1 = sc_ref[0, 3]
+    m2 = sc_ref[0, 4]
+
+    h, r = l1.shape
+    o = l2.shape[1]
+    g1 = math.gcd(h, r)
+    g2 = math.gcd(o, r)
+
+    xp = jnp.dot(x, l1, preferred_element_type=jnp.float32)
+    xp = xp + m1 * beta1 * _groupavg_tile(x, g1, r)
+    y = jnp.dot(xp, l2, preferred_element_type=jnp.float32)
+    y = y + m2 * beta2 * _groupavg_tile(xp, g2, o)
+    o_ref[...] = alpha * y
+
+
+@jax.jit
+def iec_lora(x, l1, l2, alpha, beta1, beta2, m1, m2):
+    """α·U2(U1(x)) with IEC gating. x: [B,h]; l1: [h,r]; l2: [r,o]."""
+    b, h = x.shape
+    r, o = l2.shape
+    scalars = jnp.stack(
+        [alpha, beta1, beta2, m1, m2]
+    ).astype(jnp.float32).reshape(1, 5)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        interpret=True,
+    )(x, l1, l2, scalars)

@@ -1,0 +1,95 @@
+"""Pallas kernel: fused NF4 dequantize + matmul — the serving hot spot.
+
+The QLoRA inference insight (keep 4-bit codes resident in fast memory,
+dequantize inside the GEMM tile) mapped to the TPU model:
+
+- the grid tiles the output columns (`bn` per program); each program
+  streams its `[K, bn/2]` packed-code tile, `[K, bn/64]` scale/τ tiles
+  and the full `[B, K]` activation block through VMEM via BlockSpec —
+  the Pallas analogue of the CUDA kernel's threadblock schedule;
+- the 16-entry NF4 LUT lives as a kernel constant (VMEM), standing in
+  for CUDA's shared-memory LUT;
+- the dequantized tile feeds `jnp.dot` with f32 accumulation, which on
+  real TPU lowers to the MXU systolic array (bf16 matmul units); here
+  we keep f32 end-to-end for exact parity with the Rust oracle.
+
+interpret=True lowers to plain HLO at *trace* time — the emitted graph
+runs natively through XLA CPU (Mosaic is TPU-only on this image).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NF4_CODEBOOK
+
+# Output-column tile width. 128 matches the MXU lane width; every
+# weight matrix in the NanoLLaMA family has out-dim % 128 == 0.
+DEFAULT_BN = 128
+
+
+def _kernel(x_ref, packed_ref, scales_ref, taus_ref, cb_ref, o_ref):
+    x = x_ref[...]                      # [B, K]
+    packed = packed_ref[...]            # [K, bn/2]
+    scales = scales_ref[...]            # [K, bn/64]
+    taus = taus_ref[...]                # [K, bn/64]
+    cb = cb_ref[...]                    # [16] VMEM-resident LUT
+
+    # unpack two 4-bit codes per byte (low nibble first)
+    lo = packed & 0xF
+    hi = packed >> 4
+    codes = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+
+    w = cb[codes]                       # [K, bn]
+    s = jnp.repeat(scales, 64, axis=1)
+    t = jnp.repeat(taus, 64, axis=1)
+    w = w * s + t
+
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def nf_dequant_matmul(x, packed, scales, taus, bn: int = DEFAULT_BN):
+    """y = x @ dequant(packed, scales, taus).
+
+    x: [B, K] f32; packed: [K, N/2] uint8; scales/taus: [K, N/64] f32.
+    Returns [B, N] f32.
+    """
+    b, k = x.shape
+    n = packed.shape[1] * 2
+    assert n % 64 == 0, "out dim must cover whole 64-blocks"
+    bn = min(bn, n)
+    if n % bn != 0:
+        bn = 64  # every weight out-dim is a multiple of the 64-block
+    assert n % bn == 0 and bn % 64 == 0, f"bn={bn} must tile n={n}"
+
+    grid = (n // bn,)
+    cb = jnp.asarray(NF4_CODEBOOK)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, bn // 2), lambda j: (0, j)),
+            pl.BlockSpec((k, bn // 64), lambda j: (0, j)),
+            pl.BlockSpec((k, bn // 64), lambda j: (0, j)),
+            pl.BlockSpec((16,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, packed, scales, taus, cb)
+
+
+def vmem_footprint_bytes(b: int, k: int, bn: int = DEFAULT_BN) -> int:
+    """Estimated per-program VMEM residency (see DESIGN.md §9):
+    activations + packed codes + scales/τ + dequantized tile + output."""
+    return (
+        b * k * 4               # x
+        + k * bn // 2           # packed codes (u8)
+        + 2 * k * (bn // 64) * 4  # scales + taus
+        + k * bn * 4            # dequantized tile
+        + b * bn * 4            # output tile
+    )

@@ -1,0 +1,59 @@
+"""Pallas kernel: blockwise NF4 quantization (paper Eq. 1/8).
+
+Maps each 64-element block to (codes, absmax scale). The nearest-level
+search is the branchless comparison-sum over the 15 NF4 decision
+boundaries — the vector-unit formulation of the binary search the Rust
+hot path uses (rust/src/quant/nf.rs::quantize_one).
+
+Grid tiles the block axis so arbitrarily many blocks stream through
+VMEM in chunks of `rows_per_program`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NF4_CODEBOOK, boundaries
+
+ROWS_PER_PROGRAM = 256
+
+
+def _kernel(w_ref, bounds_ref, codes_ref, scales_ref):
+    w = w_ref[...]                                   # [rows, B]
+    b = bounds_ref[...]                              # [15]
+    amax = jnp.max(jnp.abs(w), axis=1)
+    scale = jnp.where(amax > 0, amax, 1.0)
+    normed = w / scale[:, None]
+    codes = jnp.sum(
+        normed[..., None] > b, axis=-1
+    ).astype(jnp.uint8)
+    codes_ref[...] = codes
+    scales_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_program",))
+def quant_block(w, rows_per_program: int = ROWS_PER_PROGRAM):
+    """w: [n_blocks, B] f32 -> (codes uint8 [n_blocks, B], scales [n_blocks])."""
+    n, blk = w.shape
+    rows = min(rows_per_program, n)
+    assert n % rows == 0, f"n_blocks={n} must tile rows={rows}"
+    bounds = jnp.asarray(boundaries(NF4_CODEBOOK))
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, blk), lambda i: (i, 0)),
+            pl.BlockSpec((15,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, blk), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, blk), jnp.uint8),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(w, bounds)

@@ -1,0 +1,157 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness anchors).
+
+These are deliberately written in the most transparent way possible —
+no tiling, no tricks — and double as the reference semantics the Rust
+unit tests mirror. pytest asserts kernel == ref to tight tolerances;
+hypothesis sweeps shapes and bit-widths.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# NF4 codebook — paper Table 13 (must match rust/src/quant/nf.rs).
+NF4_CODEBOOK = np.array(
+    [
+        -1.0,
+        -0.6961928009986877,
+        -0.5250730514526367,
+        -0.39491748809814453,
+        -0.28444138169288635,
+        -0.18477343022823334,
+        -0.09105003625154495,
+        0.0,
+        0.07958029955625534,
+        0.16093020141124725,
+        0.24611230194568634,
+        0.33791524171829224,
+        0.44070982933044434,
+        0.5626170039176941,
+        0.7229568362236023,
+        1.0,
+    ],
+    dtype=np.float32,
+)
+
+# NF3 / NF2 (Tables 12 / 11), used by the quantize oracle sweeps.
+NF3_CODEBOOK = np.array(
+    [
+        -1.0,
+        -0.4786292016506195,
+        -0.217141792178154,
+        0.0,
+        0.16093020141124725,
+        0.33791524171829224,
+        0.5626170039176941,
+        1.0,
+    ],
+    dtype=np.float32,
+)
+
+NF2_CODEBOOK = np.array(
+    [-1.0, -0.25256848335266113, 0.2525685131549835, 1.0], dtype=np.float32
+)
+
+
+def codebook(k: int) -> np.ndarray:
+    return {2: NF2_CODEBOOK, 3: NF3_CODEBOOK, 4: NF4_CODEBOOK}[k]
+
+
+def boundaries(cb: np.ndarray) -> np.ndarray:
+    return (cb[1:] + cb[:-1]) / 2.0
+
+
+def quantize_codes_ref(x, cb):
+    """Nearest-level codes for normalized values x (any shape)."""
+    b = jnp.asarray(boundaries(np.asarray(cb)))
+    # number of boundaries strictly below x == nearest index (ties to lower)
+    return jnp.sum(x[..., None] > b, axis=-1).astype(jnp.uint8)
+
+
+def quant_block_ref(w):
+    """Blockwise NF4 quantization oracle.
+
+    w: [n_blocks, B] f32 -> (codes uint8 [n_blocks, B], scales [n_blocks]).
+    """
+    amax = jnp.max(jnp.abs(w), axis=1)
+    scale = jnp.where(amax > 0, amax, 1.0)
+    normed = w / scale[:, None]
+    codes = quantize_codes_ref(normed, NF4_CODEBOOK)
+    return codes, scale
+
+
+def unpack_nf4_ref(packed):
+    """packed uint8 [K, N/2] -> codes uint8 [K, N] (low nibble first)."""
+    lo = packed & 0xF
+    hi = packed >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+
+
+def dequant_ref(packed, scales, taus):
+    """NF4 storage -> f32 weight [K, N]. scales/taus: [K, N/64]."""
+    codes = unpack_nf4_ref(packed)
+    cb = jnp.asarray(NF4_CODEBOOK)
+    w = cb[codes]
+    s = jnp.repeat(scales, 64, axis=1)
+    t = jnp.repeat(taus, 64, axis=1)
+    return w * s + t
+
+
+def nf_dequant_matmul_ref(x, packed, scales, taus):
+    """y = x @ dequant(w): the QLoRA fused-inference oracle."""
+    return x @ dequant_ref(packed, scales, taus)
+
+
+def _gcd(a, b):
+    while b:
+        a, b = b, a % b
+    return a
+
+
+def groupavg_tile_ref(x, groups, dim_out):
+    """Average x (last dim) within `groups` segments, tile to dim_out."""
+    b, d = x.shape
+    seg = d // groups
+    pooled = x.reshape(b, groups, seg).mean(axis=2)
+    reps = dim_out // groups
+    return jnp.tile(pooled, (1, reps))
+
+
+def iec_lora_ref(x, l1, l2, alpha, beta1, beta2, m1, m2):
+    """IEC LoRA forward oracle (paper Eq. 12-15, tile semantics).
+
+    x: [B, h]; l1: [h, r]; l2: [r, o]; scalars broadcastable.
+    Matches rust/src/lora/iec.rs::lora_iec_forward.
+    """
+    h, r = l1.shape
+    _, o = l2.shape
+    xp = x @ l1
+    g1 = _gcd(h, r)
+    xp = xp + m1 * beta1 * groupavg_tile_ref(x, g1, r)
+    y = xp @ l2
+    g2 = _gcd(o, r)
+    y = y + m2 * beta2 * groupavg_tile_ref(xp, g2, o)
+    return alpha * y
+
+
+def entropy_ref(codes, k):
+    """Shannon entropy (bits) of code histograms along the last axis.
+
+    codes: [..., B] integer; returns [...] f32.
+    """
+    levels = 1 << k
+    onehot = (codes[..., None] == jnp.arange(levels)).astype(jnp.float32)
+    p = onehot.sum(axis=-2) / codes.shape[-1]
+    plogp = jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0)
+    return -plogp.sum(axis=-1)
+
+
+def icq_entropy_sweep_ref(block, taus):
+    """ICQ inner loop oracle: entropy of NF4-quantized (block - tau).
+
+    block: [B] f32; taus: [T] f32 -> [T] f32 entropies.
+    """
+    shifted = block[None, :] - taus[:, None]  # [T, B]
+    amax = jnp.max(jnp.abs(shifted), axis=1, keepdims=True)
+    normed = shifted / jnp.where(amax > 0, amax, 1.0)
+    codes = quantize_codes_ref(normed, NF4_CODEBOOK)
+    return entropy_ref(codes, 4)

@@ -1,0 +1,377 @@
+"""L2: NanoLLaMA in JAX — forward, LoRA+IEC, loss, AdamW train steps.
+
+Everything here is traced once by aot.py and shipped to the Rust
+coordinator as HLO text; Python never runs at serving/training time.
+
+Graphs built from this module:
+- `pretrain_step`: full-parameter AdamW step (produces the "trained
+  base weights" the quantization experiments start from);
+- `train_step`: QLoRA finetuning step — base weights frozen
+  (pre-dequantized on the Rust side), LoRA + IEC trainable, IEC gated
+  by runtime masks (m1, m2) so a single graph serves every ablation
+  arm of Table 4;
+- `forward`: logits for evaluation (same gating);
+- `forward_q`: fused quantized serving path — NF4 codes dequantized
+  in-kernel (Pallas) + merged LoRA (Eq. 16/17 applied Rust-side).
+
+Parameter order is defined by config.py and recorded in the manifest.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import (
+    ModelConfig,
+    PROJ_KINDS,
+    base_param_specs,
+    lora_param_specs,
+    proj_dims,
+)
+from .kernels.iec_lora import iec_lora as iec_lora_kernel
+from .kernels.nf_dequant_matmul import nf_dequant_matmul
+
+# ---------------------------------------------------------------------------
+# Optimizer hyper-parameters (paper Appendix B.4)
+# ---------------------------------------------------------------------------
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999  # "beta2 value of 0.999"
+ADAM_EPS = 1e-8
+GRAD_CLIP = 0.3  # "maximum gradient norm to 0.3" (finetuning, per paper)
+LR_FINETUNE = 2e-4  # "learning rate of 2e-4 for models up to 13B"
+LR_PRETRAIN = 1e-3
+PRETRAIN_CLIP = 1.0  # pretraining needs a looser clip than LoRA finetuning
+
+
+# ---------------------------------------------------------------------------
+# Param plumbing: flat list <-> named dict
+# ---------------------------------------------------------------------------
+def base_to_dict(cfg: ModelConfig, flat):
+    names = [n for n, _ in base_param_specs(cfg)]
+    assert len(flat) == len(names), f"{len(flat)} vs {len(names)}"
+    return dict(zip(names, flat))
+
+
+def lora_to_dict(cfg: ModelConfig, flat):
+    names = [n for n, _ in lora_param_specs(cfg)]
+    assert len(flat) == len(names), f"{len(flat)} vs {len(names)}"
+    return dict(zip(names, flat))
+
+
+def init_base_params(cfg: ModelConfig, seed: int = 0):
+    """Numpy init (GPT-2-style scaled normal) — used by pytest; the Rust
+    coordinator performs its own identical-distribution init."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in base_param_specs(cfg):
+        if name.endswith("norm"):
+            out.append(np.ones(shape, np.float32))
+        else:
+            std = 0.02
+            if name.endswith(".wo") or name.endswith(".w2"):
+                std = 0.02 / math.sqrt(2 * cfg.n_layers)
+            out.append(rng.normal(0.0, std, size=shape).astype(np.float32))
+    return out
+
+
+def init_lora_params(cfg: ModelConfig, seed: int = 0):
+    """ℓ1 ~ N(0, 1/r), ℓ2 = 0, β = 0 (adapter starts as identity)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in lora_param_specs(cfg):
+        if name.endswith("lora_a"):
+            out.append(
+                rng.normal(0.0, 1.0 / math.sqrt(cfg.rank), size=shape).astype(
+                    np.float32
+                )
+            )
+        else:  # lora_b and betas start at zero
+            out.append(np.zeros(shape, np.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model pieces
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope_tables(cfg: ModelConfig):
+    hd = cfg.head_dim
+    pos = np.arange(cfg.seq)[:, None]
+    freqs = cfg.rope_theta ** (-np.arange(0, hd, 2) / hd)
+    ang = pos * freqs[None, :]
+    return (
+        jnp.asarray(np.cos(ang), jnp.float32),
+        jnp.asarray(np.sin(ang), jnp.float32),
+    )
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, S, H, hd] with hd split into (even, odd) interleaved pairs."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    ro = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return ro.reshape(x.shape)
+
+
+def _gcd(a, b):
+    while b:
+        a, b = b, a % b
+    return a
+
+
+def iec_lora_jnp(x2d, l1, l2, alpha_over_r, beta1, beta2, m1, m2):
+    """Differentiable IEC LoRA (Eq. 12-15, tile semantics) on [N, h]."""
+    h, r = l1.shape
+    o = l2.shape[1]
+    xp = x2d @ l1
+    g1 = _gcd(h, r)
+    pooled1 = x2d.reshape(-1, g1, h // g1).mean(axis=2)
+    xp = xp + (m1 * beta1) * jnp.tile(pooled1, (1, r // g1))
+    y = xp @ l2
+    g2 = _gcd(o, r)
+    pooled2 = xp.reshape(-1, g2, r // g2).mean(axis=2)
+    y = y + (m2 * beta2) * jnp.tile(pooled2, (1, o // g2))
+    return alpha_over_r * y
+
+
+def _proj(x, w, lora, m1, m2):
+    """x: [..., h] -> [..., o]; lora = None or (a, b, alpha_over_r, b1, b2)."""
+    y = x @ w
+    if lora is not None:
+        a, b, aor, b1, b2 = lora
+        lead = x.shape[:-1]
+        x2d = x.reshape(-1, x.shape[-1])
+        y = y + iec_lora_jnp(x2d, a, b, aor, b1, b2, m1, m2).reshape(
+            *lead, b.shape[1]
+        )
+    return y
+
+
+def _attention(cfg, x, wq, wk, wv, wo, loras, cos, sin, m1, m2):
+    b, s, d = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    q = _proj(x, wq, loras.get("wq"), m1, m2).reshape(b, s, nh, hd)
+    k = _proj(x, wk, loras.get("wk"), m1, m2).reshape(b, s, nh, hd)
+    v = _proj(x, wv, loras.get("wv"), m1, m2).reshape(b, s, nh, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+    return _proj(out, wo, loras.get("wo"), m1, m2)
+
+
+def _ffn(cfg, x, w1, w3, w2, loras, m1, m2):
+    gate = _proj(x, w1, loras.get("w1"), m1, m2)
+    up = _proj(x, w3, loras.get("w3"), m1, m2)
+    return _proj(jax.nn.silu(gate) * up, w2, loras.get("w2"), m1, m2)
+
+
+def _layer_loras(cfg, lora, i):
+    """Collect per-projection LoRA tuples for layer i (or {} if no LoRA)."""
+    if lora is None:
+        return {}
+    aor = cfg.lora_alpha / cfg.rank
+    betas = lora["betas"]
+    out = {}
+    for pi, kind in enumerate(PROJ_KINDS):
+        out[kind] = (
+            lora[f"l{i}.{kind}.lora_a"],
+            lora[f"l{i}.{kind}.lora_b"],
+            aor,
+            betas[i, pi, 0],
+            betas[i, pi, 1],
+        )
+    return out
+
+
+def forward_logits(cfg: ModelConfig, base, lora, tokens, m1, m2):
+    """Shared decoder body. base/lora are name->tensor dicts; lora may be
+    None (pretraining). tokens: [B, S] int32. Returns [B, S, vocab]."""
+    cos, sin = rope_tables(cfg)
+    x = jnp.take(base["embed"], tokens, axis=0)
+    for i in range(cfg.n_layers):
+        loras = _layer_loras(cfg, lora, i)
+        hx = rmsnorm(x, base[f"l{i}.attn_norm"], cfg.norm_eps)
+        x = x + _attention(
+            cfg, hx, base[f"l{i}.wq"], base[f"l{i}.wk"], base[f"l{i}.wv"],
+            base[f"l{i}.wo"], loras, cos, sin, m1, m2,
+        )
+        hx = rmsnorm(x, base[f"l{i}.ffn_norm"], cfg.norm_eps)
+        x = x + _ffn(
+            cfg, hx, base[f"l{i}.w1"], base[f"l{i}.w3"], base[f"l{i}.w2"],
+            loras, m1, m2,
+        )
+    x = rmsnorm(x, base["final_norm"], cfg.norm_eps)
+    return x @ base["lm_head"]
+
+
+def masked_ce_loss(logits, targets):
+    """Cross-entropy over positions with target >= 0 (prompt tokens are
+    masked with -1 by the data pipeline)."""
+    mask = (targets >= 0).astype(jnp.float32)
+    safe = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (functional)
+# ---------------------------------------------------------------------------
+def adamw_update(params, grads, ms, vs, step, lr, clip=GRAD_CLIP):
+    """Global-norm clip + AdamW. All lists positional; step: f32 scalar
+    (1-based). Returns (new_params, new_ms, new_vs)."""
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in grads) + 1e-12
+    )
+    scale = jnp.minimum(1.0, clip / gnorm)
+    new_p, new_m, new_v = [], [], []
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+    for p, g, m, v in zip(params, grads, ms, vs):
+        g = g * scale
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        new_p.append(p - lr * mh / (jnp.sqrt(vh) + ADAM_EPS))
+        new_m.append(m)
+        new_v.append(v)
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Exported graphs
+# ---------------------------------------------------------------------------
+def make_pretrain_step(cfg: ModelConfig):
+    n = len(base_param_specs(cfg))
+
+    def step_fn(*args):
+        params = list(args[:n])
+        ms = list(args[n : 2 * n])
+        vs = list(args[2 * n : 3 * n])
+        step, tokens, targets = args[3 * n :]
+
+        def loss_of(plist):
+            base = base_to_dict(cfg, plist)
+            logits = forward_logits(cfg, base, None, tokens, 0.0, 0.0)
+            return masked_ce_loss(logits, targets)
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        new_p, new_m, new_v = adamw_update(
+            params, grads, ms, vs, step, LR_PRETRAIN, clip=PRETRAIN_CLIP
+        )
+        return tuple([loss] + new_p + new_m + new_v)
+
+    return step_fn
+
+
+def make_train_step(cfg: ModelConfig):
+    nb = len(base_param_specs(cfg))
+    nl = len(lora_param_specs(cfg))
+
+    def step_fn(*args):
+        base_flat = list(args[:nb])
+        lora_flat = list(args[nb : nb + nl])
+        ms = list(args[nb + nl : nb + 2 * nl])
+        vs = list(args[nb + 2 * nl : nb + 3 * nl])
+        step, m1, m2, tokens, targets = args[nb + 3 * nl :]
+        base = base_to_dict(cfg, base_flat)
+
+        def loss_of(llist):
+            lora = lora_to_dict(cfg, llist)
+            logits = forward_logits(cfg, base, lora, tokens, m1, m2)
+            return masked_ce_loss(logits, targets)
+
+        loss, grads = jax.value_and_grad(loss_of)(lora_flat)
+        new_p, new_m, new_v = adamw_update(
+            lora_flat, grads, ms, vs, step, LR_FINETUNE
+        )
+        return tuple([loss] + new_p + new_m + new_v)
+
+    return step_fn
+
+
+def make_forward(cfg: ModelConfig):
+    nb = len(base_param_specs(cfg))
+    nl = len(lora_param_specs(cfg))
+
+    def fwd(*args):
+        base = base_to_dict(cfg, list(args[:nb]))
+        lora = lora_to_dict(cfg, list(args[nb : nb + nl]))
+        m1, m2, tokens = args[nb + nl :]
+        return (forward_logits(cfg, base, lora, tokens, m1, m2),)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Quantized serving graph (Pallas fused path, merged adapters)
+# ---------------------------------------------------------------------------
+def _proj_q(x, codes, scales, taus, la, lb):
+    """x: [B*S, h]; quantized weight + merged (Eq. 16/17) LoRA."""
+    y = nf_dequant_matmul(x, codes, scales, taus)
+    return y + (x @ la) @ lb
+
+
+def make_forward_q(cfg: ModelConfig, specs):
+    names = [s[0] for s in specs]
+
+    def fwd(*args):
+        p = dict(zip(names, args[:-1]))
+        tokens = args[-1]
+        cos, sin = rope_tables(cfg)
+        b, s = tokens.shape
+        d = cfg.d_model
+        nh, hd = cfg.n_heads, cfg.head_dim
+
+        def qproj(x2d, layer, kind):
+            pre = f"l{layer}.{kind}"
+            return _proj_q(
+                x2d,
+                p[f"{pre}.codes"],
+                p[f"{pre}.scales"],
+                p[f"{pre}.taus"],
+                p[f"{pre}.lora_a"],
+                p[f"{pre}.lora_b"],
+            )
+
+        x = jnp.take(p["embed"], tokens, axis=0)
+        for i in range(cfg.n_layers):
+            hx = rmsnorm(x, p[f"l{i}.attn_norm"], cfg.norm_eps)
+            h2 = hx.reshape(b * s, d)
+            q = qproj(h2, i, "wq").reshape(b, s, nh, hd)
+            k = qproj(h2, i, "wk").reshape(b, s, nh, hd)
+            v = qproj(h2, i, "wv").reshape(b, s, nh, hd)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+            att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+            mask = jnp.tril(jnp.ones((s, s), bool))
+            att = jnp.where(mask[None, None], att, -1e30)
+            att = jax.nn.softmax(att, axis=-1)
+            out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * s, d)
+            x = x + qproj(out, i, "wo").reshape(b, s, d)
+
+            hx = rmsnorm(x, p[f"l{i}.ffn_norm"], cfg.norm_eps)
+            h2 = hx.reshape(b * s, d)
+            gate = qproj(h2, i, "w1")
+            up = qproj(h2, i, "w3")
+            y = qproj(jax.nn.silu(gate) * up, i, "w2")
+            x = x + y.reshape(b, s, d)
+
+        x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+        return (x @ p["lm_head"],)
+
+    return fwd

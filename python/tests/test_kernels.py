@@ -1,0 +1,194 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes and value ranges; fixed-seed cases pin the
+exact semantics (code values, not just allclose).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.icq_entropy import icq_entropy_sweep
+from compile.kernels.iec_lora import iec_lora
+from compile.kernels.nf_dequant_matmul import nf_dequant_matmul, vmem_footprint_bytes
+from compile.kernels.quant_block import quant_block
+
+HYPO = dict(max_examples=12, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# codebooks
+# ---------------------------------------------------------------------------
+def test_nf4_codebook_matches_paper_table13():
+    assert ref.NF4_CODEBOOK.shape == (16,)
+    assert ref.NF4_CODEBOOK[0] == -1.0
+    assert ref.NF4_CODEBOOK[7] == 0.0
+    assert ref.NF4_CODEBOOK[15] == 1.0
+    assert abs(ref.NF4_CODEBOOK[14] - 0.7229568362236023) < 1e-9
+
+
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_codebooks_sorted(k):
+    cb = ref.codebook(k)
+    assert len(cb) == 1 << k
+    assert np.all(np.diff(cb) > 0)
+
+
+def test_quantize_codes_nearest():
+    cb = ref.NF4_CODEBOOK
+    codes = np.asarray(ref.quantize_codes_ref(jnp.asarray(cb), cb))
+    assert np.array_equal(codes, np.arange(16))
+
+
+# ---------------------------------------------------------------------------
+# quant_block
+# ---------------------------------------------------------------------------
+def test_quant_block_matches_ref_fixed():
+    rng = np.random.default_rng(1)
+    w = rng.normal(0, 0.05, size=(512, 64)).astype(np.float32)
+    c_k, s_k = quant_block(w)
+    c_r, s_r = ref.quant_block_ref(w)
+    assert np.array_equal(np.asarray(c_k), np.asarray(c_r))
+    assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=0, atol=0)
+
+
+@settings(**HYPO)
+@given(
+    n_blocks=st.sampled_from([256, 512, 1024]),
+    scale=st.floats(1e-3, 10.0),
+    shift=st.floats(-0.5, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_block_hypothesis(n_blocks, scale, shift, seed):
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(shift, scale, size=(n_blocks, 64))).astype(np.float32)
+    c_k, s_k = quant_block(w, rows_per_program=256)
+    c_r, s_r = ref.quant_block_ref(w)
+    assert np.array_equal(np.asarray(c_k), np.asarray(c_r))
+    assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=0, atol=0)
+
+
+def test_quant_block_zero_block():
+    w = np.zeros((256, 64), np.float32)
+    c, s = quant_block(w)
+    assert np.all(np.asarray(s) == 1.0)
+    # zero maps to the zero level (index 7 in NF4)
+    assert np.all(np.asarray(c) == 7)
+
+
+# ---------------------------------------------------------------------------
+# nf_dequant_matmul
+# ---------------------------------------------------------------------------
+def _dq_inputs(rng, b, k, n):
+    x = rng.normal(size=(b, k)).astype(np.float32)
+    packed = rng.integers(0, 256, size=(k, n // 2)).astype(np.uint8)
+    scales = rng.uniform(0.005, 0.1, size=(k, n // 64)).astype(np.float32)
+    taus = rng.normal(0, 0.01, size=(k, n // 64)).astype(np.float32)
+    return x, packed, scales, taus
+
+
+def test_dequant_matmul_matches_ref_fixed():
+    rng = np.random.default_rng(2)
+    x, packed, scales, taus = _dq_inputs(rng, 8, 128, 256)
+    got = nf_dequant_matmul(x, packed, scales, taus)
+    want = ref.nf_dequant_matmul_ref(x, packed, scales, taus)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**HYPO)
+@given(
+    b=st.sampled_from([1, 4, 8]),
+    k=st.sampled_from([32, 64, 192]),
+    n=st.sampled_from([64, 128, 192, 384]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dequant_matmul_hypothesis(b, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, packed, scales, taus = _dq_inputs(rng, b, k, n)
+    got = nf_dequant_matmul(x, packed, scales, taus)
+    want = ref.nf_dequant_matmul_ref(x, packed, scales, taus)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_unpack_low_nibble_first():
+    packed = np.array([[0x21, 0x43]], np.uint8)  # low nibble first: 1,2,3,4
+    codes = np.asarray(ref.unpack_nf4_ref(packed))
+    assert codes.tolist() == [[1, 2, 3, 4]]
+
+
+def test_vmem_footprint_under_budget():
+    # serving tile must fit comfortably in a 16 MB VMEM (DESIGN.md §9)
+    assert vmem_footprint_bytes(b=8, k=768, bn=128) < 16 * 2**20 // 4
+
+
+# ---------------------------------------------------------------------------
+# iec_lora
+# ---------------------------------------------------------------------------
+@settings(**HYPO)
+@given(
+    h=st.sampled_from([32, 64, 96, 256]),
+    r=st.sampled_from([8, 16]),
+    o=st.sampled_from([32, 64, 96, 512]),
+    m1=st.sampled_from([0.0, 1.0]),
+    m2=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_iec_lora_hypothesis(h, r, o, m1, m2, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(4, h)).astype(np.float32)
+    l1 = rng.normal(size=(h, r)).astype(np.float32) * 0.2
+    l2 = rng.normal(size=(r, o)).astype(np.float32) * 0.2
+    sc = [jnp.float32(v) for v in (1.0, 0.37, -0.21, m1, m2)]
+    got = iec_lora(x, l1, l2, *sc)
+    want = ref.iec_lora_ref(x, l1, l2, *sc)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_iec_masks_recover_vanilla_lora():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(2, 64)).astype(np.float32)
+    l1 = rng.normal(size=(64, 16)).astype(np.float32)
+    l2 = rng.normal(size=(16, 64)).astype(np.float32)
+    sc = [jnp.float32(v) for v in (2.0, 0.9, 0.8, 0.0, 0.0)]
+    got = np.asarray(iec_lora(x, l1, l2, *sc))
+    want = 2.0 * (x @ l1 @ l2)
+    assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# icq_entropy
+# ---------------------------------------------------------------------------
+def test_icq_entropy_matches_ref_fixed():
+    rng = np.random.default_rng(4)
+    block = (rng.normal(0, 0.03, size=64) + 0.01).astype(np.float32)
+    taus = np.linspace(-0.09, 0.11, 201).astype(np.float32)
+    got = icq_entropy_sweep(block, taus)
+    want = ref.icq_entropy_sweep_ref(block, taus)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**HYPO)
+@given(
+    spread=st.floats(1e-3, 1.0),
+    center=st.floats(-0.2, 0.2),
+    t=st.sampled_from([21, 101, 201]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_icq_entropy_hypothesis(spread, center, t, seed):
+    rng = np.random.default_rng(seed)
+    block = rng.normal(center, spread, size=64).astype(np.float32)
+    taus = np.linspace(center - 0.1, center + 0.1, t).astype(np.float32)
+    got = np.asarray(icq_entropy_sweep(block, taus))
+    want = np.asarray(ref.icq_entropy_sweep_ref(block, taus))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # entropies are valid: within [0, 4] bits
+    assert np.all(got >= -1e-6) and np.all(got <= 4.0 + 1e-6)
+
+
+def test_entropy_uniform_codes_is_4_bits():
+    codes = jnp.asarray(np.tile(np.arange(16), 4)[None, :])  # 64 codes uniform
+    h = ref.entropy_ref(codes, 4)
+    assert_allclose(np.asarray(h), [4.0], atol=1e-6)

@@ -1,0 +1,232 @@
+"""L2 correctness: NanoLLaMA forward/train graphs.
+
+Uses a micro config so each test runs in seconds. The key integration
+test (`test_forward_q_parity`) replicates the Rust storage pipeline in
+numpy (blockwise NF4 quantize + bit-pack + merged IEC adapters) and
+asserts the fused Pallas serving graph agrees with the plain forward
+graph on dequantized weights — the same contract the Rust runtime
+relies on.
+"""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.config import (
+    ModelConfig,
+    PROJ_KINDS,
+    base_param_specs,
+    lora_param_specs,
+    quantized_param_specs,
+    proj_dims,
+)
+from compile.kernels import ref
+
+CFG = ModelConfig(
+    name="t", vocab=64, d_model=64, n_layers=2, n_heads=4, d_ff=128,
+    seq=16, batch=2, rank=8,
+)
+
+
+def _batch(rng):
+    tokens = rng.integers(0, CFG.vocab, size=(CFG.batch, CFG.seq)).astype(np.int32)
+    targets = np.roll(tokens, -1, axis=1).astype(np.int32)
+    targets[:, -1] = -1  # masked
+    return jnp.asarray(tokens), jnp.asarray(targets)
+
+
+def test_param_specs_consistent():
+    base = base_param_specs(CFG)
+    names = [n for n, _ in base]
+    assert len(names) == len(set(names))
+    assert names[0] == "embed" and names[-1] == "lm_head"
+    lora = lora_param_specs(CFG)
+    assert lora[-1][0] == "betas"
+    assert len(lora) == 2 * 7 * CFG.n_layers + 1
+
+
+def test_forward_shapes_and_finite():
+    base = M.init_base_params(CFG, seed=0)
+    lora = M.init_lora_params(CFG, seed=0)
+    tokens, _ = _batch(np.random.default_rng(0))
+    bd = M.base_to_dict(CFG, base)
+    ld = M.lora_to_dict(CFG, lora)
+    logits = M.forward_logits(CFG, bd, ld, tokens, 1.0, 1.0)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_lora_init_is_identity():
+    """l2=0 and beta=0 => adapted model == base model exactly."""
+    base = M.init_base_params(CFG, seed=1)
+    lora = M.init_lora_params(CFG, seed=1)
+    tokens, _ = _batch(np.random.default_rng(1))
+    bd = M.base_to_dict(CFG, base)
+    with_lora = M.forward_logits(CFG, bd, M.lora_to_dict(CFG, lora), tokens, 1.0, 1.0)
+    without = M.forward_logits(CFG, bd, None, tokens, 0.0, 0.0)
+    assert_allclose(np.asarray(with_lora), np.asarray(without), atol=1e-6)
+
+
+def test_masks_gate_iec():
+    base = M.init_base_params(CFG, seed=2)
+    lora = M.init_lora_params(CFG, seed=2)
+    # make IEC active: nonzero betas and lora_b
+    rng = np.random.default_rng(2)
+    names = [n for n, _ in lora_param_specs(CFG)]
+    for i, n in enumerate(names):
+        if n.endswith("lora_b"):
+            lora[i] = rng.normal(0, 0.1, size=lora[i].shape).astype(np.float32)
+        if n == "betas":
+            lora[i] = rng.normal(0, 0.5, size=lora[i].shape).astype(np.float32)
+    tokens, _ = _batch(rng)
+    bd = M.base_to_dict(CFG, base)
+    ld = M.lora_to_dict(CFG, lora)
+    off = M.forward_logits(CFG, bd, ld, tokens, 0.0, 0.0)
+    u1 = M.forward_logits(CFG, bd, ld, tokens, 1.0, 0.0)
+    u2 = M.forward_logits(CFG, bd, ld, tokens, 0.0, 1.0)
+    both = M.forward_logits(CFG, bd, ld, tokens, 1.0, 1.0)
+    # each arm produces a distinct function
+    assert not np.allclose(np.asarray(off), np.asarray(u1))
+    assert not np.allclose(np.asarray(off), np.asarray(u2))
+    assert not np.allclose(np.asarray(u1), np.asarray(both))
+
+
+def test_masked_loss_ignores_negative_targets():
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(size=(2, 4, 8)).astype(np.float32))
+    t_all = jnp.asarray(rng.integers(0, 8, size=(2, 4)).astype(np.int32))
+    l_full = M.masked_ce_loss(logits, t_all)
+    t_masked = np.asarray(t_all).copy()
+    t_masked[:, :2] = -1
+    l_masked = M.masked_ce_loss(logits, jnp.asarray(t_masked))
+    assert l_full.shape == () and float(l_full) > 0
+    assert not np.isclose(float(l_full), float(l_masked))
+
+
+def test_pretrain_step_decreases_loss():
+    step_fn = jax.jit(M.make_pretrain_step(CFG))
+    params = [jnp.asarray(p) for p in M.init_base_params(CFG, seed=4)]
+    ms = [jnp.zeros_like(p) for p in params]
+    vs = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(4)
+    tokens, targets = _batch(rng)
+    losses = []
+    for i in range(12):
+        out = step_fn(*params, *ms, *vs, jnp.float32(i + 1), tokens, targets)
+        loss, rest = out[0], out[1:]
+        n = len(params)
+        params, ms, vs = list(rest[:n]), list(rest[n:2 * n]), list(rest[2 * n:])
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_train_step_updates_only_lora_and_decreases_loss():
+    step_fn = jax.jit(M.make_train_step(CFG))
+    base = [jnp.asarray(p) for p in M.init_base_params(CFG, seed=5)]
+    lora = [jnp.asarray(p) for p in M.init_lora_params(CFG, seed=5)]
+    ms = [jnp.zeros_like(p) for p in lora]
+    vs = [jnp.zeros_like(p) for p in lora]
+    rng = np.random.default_rng(5)
+    tokens, targets = _batch(rng)
+    losses = []
+    for i in range(15):
+        out = step_fn(
+            *base, *lora, *ms, *vs,
+            jnp.float32(i + 1), jnp.float32(1.0), jnp.float32(1.0),
+            tokens, targets,
+        )
+        loss, rest = out[0], out[1:]
+        n = len(lora)
+        lora, ms, vs = list(rest[:n]), list(rest[n:2 * n]), list(rest[2 * n:])
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    # betas became trainable signal (IEC active) — they moved off zero
+    betas = np.asarray(lora[-1])
+    assert np.any(betas != 0.0)
+
+
+def _quantize_like_rust(w):
+    """Blockwise NF4 quantization of a [h, o] weight, blocks of 64 along
+    the flattened row-major order (== along o when 64 | o), bit-packed
+    low-nibble-first — byte-identical to rust QuantizedTensor."""
+    h, o = w.shape
+    flat = w.reshape(-1, 64)
+    codes, scales = ref.quant_block_ref(flat)
+    codes = np.asarray(codes)
+    scales = np.asarray(scales)
+    packed = (codes[:, 0::2] | (codes[:, 1::2] << 4)).astype(np.uint8)
+    packed = packed.reshape(h, o // 2)
+    cb = ref.NF4_CODEBOOK
+    dq = (cb[codes] * scales[:, None]).reshape(h, o)
+    return packed, scales.reshape(h, o // 64), dq
+
+
+def _merge_tile(l, rows, cols, beta, g):
+    """Tile-semantics Eq. 16 merge (mirrors rust/src/lora/merge.rs)."""
+    out = l.copy()
+    seg_i = rows // g
+    add = beta * g / rows
+    for i in range(rows):
+        gi = i // seg_i
+        for j in range(cols):
+            if j % g == gi:
+                out[i, j] += add
+    return out
+
+
+def test_forward_q_parity():
+    """Fused quantized serving graph == plain forward on dequantized
+    weights with merged IEC adapters."""
+    rng = np.random.default_rng(6)
+    base = M.init_base_params(CFG, seed=6)
+    lora = M.init_lora_params(CFG, seed=6)
+    lnames = [n for n, _ in lora_param_specs(CFG)]
+    for i, n in enumerate(lnames):
+        if n.endswith("lora_b"):
+            lora[i] = rng.normal(0, 0.05, size=lora[i].shape).astype(np.float32)
+        if n == "betas":
+            lora[i] = rng.normal(0, 0.3, size=lora[i].shape).astype(np.float32)
+    bd = dict(zip([n for n, _ in base_param_specs(CFG)], base))
+    ld = dict(zip(lnames, lora))
+
+    qspecs = quantized_param_specs(CFG)
+    qvals = {}
+    bd_dq = dict(bd)
+    aor = CFG.lora_alpha / CFG.rank
+    for i in range(CFG.n_layers):
+        for pi, kind in enumerate(PROJ_KINDS):
+            h, o = proj_dims(CFG, kind)
+            pre = f"l{i}.{kind}"
+            packed, scales, dq = _quantize_like_rust(bd[pre])
+            qvals[f"{pre}.codes"] = packed
+            qvals[f"{pre}.scales"] = scales
+            qvals[f"{pre}.taus"] = np.zeros_like(scales)
+            bd_dq[pre] = jnp.asarray(dq)
+            b1, b2 = ld["betas"][i, pi]
+            g1 = math.gcd(h, CFG.rank)
+            g2 = math.gcd(o, CFG.rank)
+            # scale alpha/r into the merged b matrix so serving is a plain
+            # two-matmul adapter
+            la = _merge_tile(ld[f"{pre}.lora_a"], h, CFG.rank, float(b1), g1)
+            lb = _merge_tile(ld[f"{pre}.lora_b"], CFG.rank, o, float(b2), g2) * aor
+            qvals[f"{pre}.lora_a"] = la.astype(np.float32)
+            qvals[f"{pre}.lora_b"] = lb.astype(np.float32)
+    for n in ("embed", "final_norm", "lm_head"):
+        qvals[n] = bd[n]
+    for i in range(CFG.n_layers):
+        qvals[f"l{i}.attn_norm"] = bd[f"l{i}.attn_norm"]
+        qvals[f"l{i}.ffn_norm"] = bd[f"l{i}.ffn_norm"]
+
+    tokens, _ = _batch(rng)
+    fwd_q = M.make_forward_q(CFG, qspecs)
+    args = [jnp.asarray(qvals[s[0]]) for s in qspecs] + [tokens]
+    (logits_q,) = jax.jit(fwd_q)(*args)
+
+    logits_ref = M.forward_logits(CFG, bd_dq, ld, tokens, 1.0, 1.0)
+    assert_allclose(
+        np.asarray(logits_q), np.asarray(logits_ref), rtol=5e-4, atol=5e-4
+    )

@@ -1,0 +1,77 @@
+//! Bench: ICQ tau-search cost vs vanilla quantization, and the
+//! paper-relative claim that ICQ adds <1% of finetuning time
+//! (Tables 6/7 and the §4.2 efficiency ablation).
+//! Run: cargo bench --bench icq_overhead
+
+use irqlora::bench_harness::{bench, bench_throughput};
+use irqlora::quant::icq::{self, IcqConfig};
+use irqlora::quant::{blockwise, Method};
+use irqlora::coordinator::quantize_model;
+use irqlora::model::weights::init_base;
+use irqlora::runtime::{Dtype, InputSpec};
+use irqlora::util::Rng;
+
+fn main() {
+    let n = 1 << 18; // 256K weights
+    let mut rng = Rng::new(2);
+    let w = rng.normal_vec(n, 0.005, 0.02);
+
+    let vanilla = bench_throughput(
+        "vanilla_nf4_quantize (256K)",
+        1,
+        5,
+        n as f64,
+        "elem",
+        || {
+            std::hint::black_box(blockwise::quantize(&w, 4, 64, None));
+        },
+    );
+    let icq_r = bench_throughput(
+        "icq_nf4_quantize (256K, 201 taus, parallel)",
+        1,
+        5,
+        n as f64,
+        "elem",
+        || {
+            std::hint::black_box(icq::quantize(&w, 4, 64, &IcqConfig::default()));
+        },
+    );
+    println!(
+        "\nICQ search overhead vs vanilla quantization: {:.1}x",
+        icq_r.mean_secs() / vanilla.mean_secs()
+    );
+
+    // single-block search cost (Algorithm 1 inner loop):
+    // §Perf before/after — the sorted-block fast path vs the naive
+    // reference loop (bit-identical results, property-tested)
+    let block = &w[0..64];
+    let before = bench("icq_search_tau REFERENCE (naive loop)", 10, 50, || {
+        std::hint::black_box(icq::search_tau_reference(block, 4, &IcqConfig::default()));
+    });
+    let after = bench("icq_search_tau FAST (sorted+binary-search)", 10, 50, || {
+        std::hint::black_box(icq::search_tau(block, 4, &IcqConfig::default()));
+    });
+    println!(
+        "
+ICQ inner-loop speedup (fast vs reference): {:.2}x",
+        before.mean_secs() / after.mean_secs()
+    );
+
+    // model-level: quantization time as a fraction of a finetune run.
+    // The paper reports <=0.84% extra; our reference point is the
+    // measured finetune step time (see bench train_step) — printed here
+    // as absolute quantize-time for a ~1.3M-param model.
+    let specs: Vec<InputSpec> = vec![
+        InputSpec { name: "l0.wq".into(), shape: vec![384, 384], dtype: Dtype::F32 },
+        InputSpec { name: "l0.w1".into(), shape: vec![384, 768], dtype: Dtype::F32 },
+        InputSpec { name: "l0.w2".into(), shape: vec![768, 384], dtype: Dtype::F32 },
+    ];
+    let mut rng = Rng::new(3);
+    let model = init_base(&specs, 6, &mut rng);
+    bench("quantize_model NfIcq (0.74M params)", 1, 3, || {
+        std::hint::black_box(quantize_model(&model, Method::NfIcq { k: 4 }, 0).unwrap());
+    });
+    bench("quantize_model Nf (0.74M params)", 1, 3, || {
+        std::hint::black_box(quantize_model(&model, Method::Nf { k: 4 }, 0).unwrap());
+    });
+}

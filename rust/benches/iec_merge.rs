@@ -1,0 +1,43 @@
+//! Bench: IEC forward overhead vs plain LoRA, and the Eq. 16 merge
+//! cost — supporting the paper's "IEC is free at inference" claim.
+//! Run: cargo bench --bench iec_merge
+
+use irqlora::bench_harness::bench;
+use irqlora::lora::iec::lora_iec_forward;
+use irqlora::lora::merge::{merge_l1, merge_l2};
+use irqlora::util::Rng;
+
+fn main() {
+    let (h, r, o) = (1024usize, 64usize, 1024usize);
+    let mut rng = Rng::new(4);
+    let x = rng.normal_vec(h, 0.0, 1.0);
+    let l1 = rng.normal_vec(h * r, 0.0, 0.1);
+    let l2 = rng.normal_vec(r * o, 0.0, 0.1);
+
+    bench("lora_forward plain (h=o=1024, r=64)", 5, 30, || {
+        std::hint::black_box(lora_iec_forward(
+            &x, &l1, &l2, r, o, 1.0, 0.5, 0.5, 0.0, 0.0,
+        ));
+    });
+    bench("lora_forward with IEC (explicit U1+U2)", 5, 30, || {
+        std::hint::black_box(lora_iec_forward(
+            &x, &l1, &l2, r, o, 1.0, 0.5, 0.5, 1.0, 1.0,
+        ));
+    });
+
+    bench("merge_l1 (Eq.16, 1024x64)", 5, 50, || {
+        std::hint::black_box(merge_l1(&l1, h, r, 0.5));
+    });
+    bench("merge_l2 (Eq.16, 64x1024)", 5, 50, || {
+        std::hint::black_box(merge_l2(&l2, r, o, 0.5));
+    });
+
+    // merged adapters: forward is the plain path again (zero overhead)
+    let m1 = merge_l1(&l1, h, r, 0.5);
+    let m2 = merge_l2(&l2, r, o, 0.5);
+    bench("lora_forward merged (inference path)", 5, 30, || {
+        std::hint::black_box(lora_iec_forward(
+            &x, &m1, &m2, r, o, 1.0, 0.0, 0.0, 0.0, 0.0,
+        ));
+    });
+}

@@ -1,0 +1,49 @@
+//! Bench: blockwise NF quant/dequant + packing throughput — the raw
+//! storage-pipeline cost per weight (feeds the Table 6 storage story).
+//! Run: cargo bench --bench quantize_throughput
+
+use irqlora::bench_harness::bench_throughput;
+use irqlora::quant::{blockwise, QuantizedTensor};
+use irqlora::util::{Rng, Tensor};
+
+fn main() {
+    let n = 1 << 20; // 1M weights
+    let mut rng = Rng::new(1);
+    let w = rng.normal_vec(n, 0.0, 0.02);
+    let t = Tensor::new(&[n], w.clone());
+
+    for k in [2u8, 3, 4] {
+        bench_throughput(
+            &format!("blockwise_quantize_nf{k} (1M f32)"),
+            1,
+            10,
+            n as f64,
+            "elem",
+            || {
+                std::hint::black_box(blockwise::quantize(&w, k, 64, None));
+            },
+        );
+    }
+
+    let q = blockwise::quantize(&w, 4, 64, None);
+    bench_throughput("dequantize_nf4 (1M)", 1, 10, n as f64, "elem", || {
+        std::hint::black_box(blockwise::dequantize(&q));
+    });
+    bench_throughput("pack_codes 4bit (1M)", 1, 10, n as f64, "elem", || {
+        std::hint::black_box(blockwise::pack_codes(&q.codes, 4));
+    });
+    let packed = blockwise::pack_codes(&q.codes, 4);
+    bench_throughput("unpack_codes 4bit (1M)", 1, 10, n as f64, "elem", || {
+        std::hint::black_box(blockwise::unpack_codes(&packed, 4, n));
+    });
+    bench_throughput(
+        "full_pipeline_quantize (double-quant incl.)",
+        1,
+        5,
+        n as f64,
+        "elem",
+        || {
+            std::hint::black_box(QuantizedTensor::quantize(&t, 4, 64, None));
+        },
+    );
+}

@@ -1,0 +1,88 @@
+//! Bench: batched serving latency/throughput through the forward graph
+//! under the dynamic batcher, across offered concurrency levels.
+//! Requires `make artifacts`.
+//! Run: cargo bench --bench serve_latency
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use irqlora::coordinator::{BatchServer, ServerConfig};
+use irqlora::data::evalset::mmlu_item;
+use irqlora::data::World;
+use irqlora::model::weights::{init_base, init_lora};
+use irqlora::runtime::Manifest;
+use irqlora::util::timer::Timer;
+use irqlora::util::Rng;
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let tag = "xs";
+    let size = manifest.size(tag).unwrap().clone();
+    let spec = manifest.graph(tag, "pretrain_step").unwrap();
+    let nb = irqlora::coordinator::trainer::pretrain_layout(spec.inputs.len()).unwrap();
+    let mut rng = Rng::new(1);
+    let base = init_base(&spec.inputs[..nb], size.config.n_layers, &mut rng);
+    let tspec = manifest.graph(tag, "train_step").unwrap();
+    let nl = irqlora::coordinator::trainer::train_layout(tspec.inputs.len(), nb).unwrap();
+    let lora = init_lora(&tspec.inputs[nb..nb + nl], size.config.rank, &mut rng);
+
+    let server = Arc::new(
+        BatchServer::spawn(
+            manifest,
+            ServerConfig {
+                tag: tag.into(),
+                masks: (1.0, 1.0),
+                max_wait: Duration::from_millis(2),
+            },
+            base,
+            lora,
+        )
+        .unwrap(),
+    );
+
+    let world = World::new(1);
+    let mut prng = Rng::new(9);
+    let prompts: Vec<Vec<i32>> = (0..512)
+        .map(|_| mmlu_item(&world, prng.below(4), &mut prng, 5).prompt)
+        .collect();
+
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12}",
+        "clients", "req/s", "p50 ms", "p99 ms", "mean batch"
+    );
+    for &clients in &[1usize, 2, 4, 8, 16] {
+        let n = 128usize;
+        let t = Timer::start();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let server = server.clone();
+            let chunk: Vec<Vec<i32>> = (0..n / clients)
+                .map(|i| prompts[(c * 131 + i * 17) % prompts.len()].clone())
+                .collect();
+            handles.push(std::thread::spawn(move || {
+                let mut lat = Vec::new();
+                for p in chunk {
+                    let r = server.query(p).unwrap();
+                    lat.push(r.latency.as_secs_f64() * 1e3);
+                }
+                lat
+            }));
+        }
+        let mut lat: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let wall = t.elapsed_secs();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p = |q: f64| lat[((lat.len() - 1) as f64 * q) as usize];
+        let before = server.stats();
+        println!(
+            "{:>8} {:>12.1} {:>12.1} {:>12.1} {:>12.2}",
+            clients,
+            lat.len() as f64 / wall,
+            p(0.5),
+            p(0.99),
+            before.mean_batch_size(),
+        );
+    }
+}

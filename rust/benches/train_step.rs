@@ -1,0 +1,53 @@
+//! Bench: end-to-end finetune step time through the AOT train graph
+//! (the denominator of the paper's Table 7 overhead percentages), and
+//! pretrain step for comparison. Requires `make artifacts`.
+//! Run: cargo bench --bench train_step
+
+use irqlora::bench_harness::bench;
+use irqlora::coordinator::{Finetuner, Pretrainer};
+use irqlora::coordinator::quantize_model;
+use irqlora::data::instruct::{instruct_batch, Dataset};
+use irqlora::data::{corpus, World};
+use irqlora::model::weights::init_base;
+use irqlora::quant::Method;
+use irqlora::runtime::{Manifest, Runtime};
+use irqlora::util::Rng;
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let tag = "xs";
+    let size = manifest.size(tag).unwrap();
+    let (b, s) = (size.config.batch, size.config.seq);
+    let world = World::new(1);
+    let mut rng = Rng::new(1);
+
+    // pretrain step
+    let mut pre = Pretrainer::new(&rt, &manifest, tag, 1).unwrap();
+    bench("pretrain_step nano-xs (B=8, S=128)", 2, 10, || {
+        let batch = corpus::pretrain_batch(&world, &mut rng, b, s);
+        std::hint::black_box(pre.step(batch.tokens, batch.targets).unwrap());
+    });
+
+    // finetune step (quantized base, LoRA+IEC)
+    let spec = manifest.graph(tag, "pretrain_step").unwrap();
+    let nb = irqlora::coordinator::trainer::pretrain_layout(spec.inputs.len()).unwrap();
+    let mut rng2 = Rng::new(2);
+    let base = init_base(&spec.inputs[..nb], size.config.n_layers, &mut rng2);
+    let qm = quantize_model(&base, Method::NfIcq { k: 4 }, 1).unwrap();
+    let mut ft = Finetuner::new(&rt, &manifest, tag, &qm.dequantized, (1.0, 1.0), 1).unwrap();
+    let mut rng3 = Rng::new(3);
+    bench("finetune_step nano-xs IR-QLoRA (B=8, S=128)", 2, 10, || {
+        let batch = instruct_batch(&world, Dataset::AlpacaSyn, &mut rng3, b, s);
+        std::hint::black_box(ft.step(batch.tokens, batch.targets).unwrap());
+    });
+
+    let mut ft0 = Finetuner::new(&rt, &manifest, tag, &qm.dequantized, (0.0, 0.0), 1).unwrap();
+    bench("finetune_step nano-xs vanilla QLoRA", 2, 10, || {
+        let batch = instruct_batch(&world, Dataset::AlpacaSyn, &mut rng3, b, s);
+        std::hint::black_box(ft0.step(batch.tokens, batch.targets).unwrap());
+    });
+}

@@ -1,0 +1,136 @@
+//! Minimal statistical bench harness (criterion is not in the offline
+//! vendor set). Warms up, runs timed iterations, reports mean ± std,
+//! min, and optional throughput. Used by every target in
+//! `rust/benches/` (all built with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured + `iters` measured calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / iters as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(mean),
+        std: Duration::from_secs_f64(var.sqrt()),
+        min: Duration::from_secs_f64(min),
+    };
+    report(&r, None);
+    r
+}
+
+/// Like [`bench`] but also reports `units_per_iter / sec` throughput.
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    units_per_iter: f64,
+    unit: &str,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / iters as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(mean),
+        std: Duration::from_secs_f64(var.sqrt()),
+        min: Duration::from_secs_f64(min),
+    };
+    report(&r, Some((units_per_iter, unit)));
+    r
+}
+
+fn report(r: &BenchResult, tput: Option<(f64, &str)>) {
+    let fmt = |d: Duration| {
+        let s = d.as_secs_f64();
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else {
+            format!("{:.1} µs", s * 1e6)
+        }
+    };
+    print!(
+        "{:<44} {:>12} ± {:<10} (min {:>10}, n={})",
+        r.name,
+        fmt(r.mean),
+        fmt(r.std),
+        fmt(r.min),
+        r.iters
+    );
+    if let Some((units, name)) = tput {
+        let per_sec = units / r.mean.as_secs_f64();
+        if per_sec >= 1e9 {
+            print!("  {:.2} G{name}/s", per_sec / 1e9);
+        } else if per_sec >= 1e6 {
+            print!("  {:.2} M{name}/s", per_sec / 1e6);
+        } else if per_sec >= 1e3 {
+            print!("  {:.2} K{name}/s", per_sec / 1e3);
+        } else {
+            print!("  {per_sec:.2} {name}/s");
+        }
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0;
+        let r = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn throughput_variant() {
+        let r = bench_throughput("spin", 1, 3, 1000.0, "elem", || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(r.mean_secs() >= 0.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Multiple-choice evaluator: drives the `forward` graph over SynMMLU /
+//! SynCSQA items and scores single-token choices by next-token logit —
+//! the 5-shot / 0-shot MC protocol of the paper's benchmarks.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::data::evalset::McItem;
+use crate::data::PAD;
+use crate::model::weights::NamedTensors;
+use crate::runtime::{Executor, HostTensor, Manifest, Runtime};
+
+/// Accuracy per group plus the average — one table row.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    /// (group index, correct, total)
+    pub per_group: BTreeMap<usize, (usize, usize)>,
+}
+
+impl EvalResult {
+    pub fn group_accuracy(&self, g: usize) -> f64 {
+        match self.per_group.get(&g) {
+            Some(&(c, t)) if t > 0 => c as f64 / t as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Macro-average over groups (the paper's "Avg." column).
+    pub fn avg_accuracy(&self) -> f64 {
+        if self.per_group.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = self
+            .per_group
+            .keys()
+            .map(|&g| self.group_accuracy(g))
+            .sum();
+        s / self.per_group.len() as f64
+    }
+}
+
+/// Evaluator bound to one (base weights, LoRA, masks) configuration.
+pub struct Evaluator<'rt> {
+    exe: Executor<'rt>,
+    fixed_bufs: Vec<xla::PjRtBuffer>,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        tag: &str,
+        base: &NamedTensors,
+        lora: &NamedTensors,
+        masks: (f32, f32),
+    ) -> Result<Self> {
+        let spec = manifest.graph(tag, "forward")?;
+        let cfg = &manifest.size(tag)?.config;
+        let nb = base.len();
+        let nl = lora.len();
+        if spec.inputs.len() != nb + nl + 3 {
+            bail!(
+                "forward graph expects {} inputs, base+lora+3 = {}",
+                spec.inputs.len(),
+                nb + nl + 3
+            );
+        }
+        let exe = rt.load(spec)?;
+        let mut fixed_bufs = Vec::with_capacity(nb + nl + 2);
+        let mut slot = 0usize;
+        for nt in [base, lora] {
+            for t in nt.tensors() {
+                fixed_bufs.push(exe.upload_one(slot, &HostTensor::F32(t.data().to_vec()))?);
+                slot += 1;
+            }
+        }
+        fixed_bufs.push(exe.upload_one(slot, &HostTensor::F32(vec![masks.0]))?);
+        fixed_bufs.push(exe.upload_one(slot + 1, &HostTensor::F32(vec![masks.1]))?);
+        Ok(Evaluator {
+            exe,
+            fixed_bufs,
+            batch: cfg.batch,
+            seq: cfg.seq,
+            vocab: cfg.vocab,
+        })
+    }
+
+    /// Raw next-token logits at the last prompt position of each item.
+    /// Returns one vocab-length row per item.
+    pub fn score_batch(&self, items: &[&McItem]) -> Result<Vec<Vec<f32>>> {
+        if items.len() > self.batch {
+            bail!("batch too large: {} > {}", items.len(), self.batch);
+        }
+        let mut tokens = vec![PAD; self.batch * self.seq];
+        for (i, item) in items.iter().enumerate() {
+            if item.prompt.len() > self.seq {
+                bail!("prompt longer than seq ({})", item.prompt.len());
+            }
+            tokens[i * self.seq..i * self.seq + item.prompt.len()]
+                .copy_from_slice(&item.prompt);
+        }
+        let tok_buf = self
+            .exe
+            .upload_one(self.fixed_bufs.len(), &HostTensor::I32(tokens))?;
+        let mut all: Vec<&xla::PjRtBuffer> = self.fixed_bufs.iter().collect();
+        all.push(&tok_buf);
+        let outs = self.exe.execute(&all)?;
+        let logits = outs[0].as_f32()?;
+
+        let mut rows = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            let pos = item.prompt.len() - 1;
+            let off = (i * self.seq + pos) * self.vocab;
+            rows.push(logits[off..off + self.vocab].to_vec());
+        }
+        Ok(rows)
+    }
+
+    /// Evaluate a full MC item set.
+    pub fn evaluate(&self, items: &[McItem]) -> Result<EvalResult> {
+        let mut per_group: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+        for chunk in items.chunks(self.batch) {
+            let refs: Vec<&McItem> = chunk.iter().collect();
+            let rows = self.score_batch(&refs)?;
+            for (item, row) in chunk.iter().zip(&rows) {
+                let pick = item
+                    .choices
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| {
+                        row[*a.1 as usize]
+                            .partial_cmp(&row[*b.1 as usize])
+                            .unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let e = per_group.entry(item.group).or_insert((0, 0));
+                e.1 += 1;
+                if pick == item.correct {
+                    e.0 += 1;
+                }
+            }
+        }
+        Ok(EvalResult { per_group })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_result_math() {
+        let mut per_group = BTreeMap::new();
+        per_group.insert(0, (8usize, 10usize));
+        per_group.insert(1, (2, 10));
+        let r = EvalResult { per_group };
+        assert!((r.group_accuracy(0) - 0.8).abs() < 1e-12);
+        assert!((r.group_accuracy(1) - 0.2).abs() < 1e-12);
+        assert!((r.avg_accuracy() - 0.5).abs() < 1e-12);
+        assert_eq!(r.group_accuracy(9), 0.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Experiment orchestration: the pretrain → quantize → finetune →
+//! evaluate pipeline each table row runs, with checkpoint caching so
+//! repeated table invocations reuse the pretrained base.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::data::evalset::McItem;
+use crate::data::instruct::{instruct_batch, Dataset};
+use crate::data::{corpus, World};
+use crate::model::{checkpoint, weights::NamedTensors};
+use crate::quant::Method;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::timer::Timer;
+use crate::util::Rng;
+
+use super::evaluator::{EvalResult, Evaluator};
+use super::quantize::{quantize_model, QuantizedModel};
+use super::trainer::{Finetuner, Pretrainer};
+
+/// A named experiment arm = quantizer + IEC gating + finetune or not.
+/// These are exactly the method rows of the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arm {
+    pub name: &'static str,
+    pub method: Method,
+    /// IEC masks (m1, m2).
+    pub masks: (f32, f32),
+    pub finetune: bool,
+}
+
+impl Arm {
+    pub fn fp16() -> Arm {
+        Arm { name: "16-bit", method: Method::Fp16, masks: (0.0, 0.0), finetune: false }
+    }
+
+    pub fn normalfloat(k: u8) -> Arm {
+        Arm { name: "NormalFloat", method: Method::Nf { k }, masks: (0.0, 0.0), finetune: false }
+    }
+
+    pub fn qlora(k: u8) -> Arm {
+        Arm { name: "QLoRA", method: Method::Nf { k }, masks: (0.0, 0.0), finetune: true }
+    }
+
+    pub fn qlora_gptq(k: u8) -> Arm {
+        Arm { name: "QLoRA w/ GPTQ", method: Method::Gptq { k }, masks: (0.0, 0.0), finetune: true }
+    }
+
+    pub fn qalora(k: u8) -> Arm {
+        Arm { name: "QA-LoRA", method: Method::Int { k }, masks: (0.0, 0.0), finetune: true }
+    }
+
+    pub fn ir_qlora(k: u8) -> Arm {
+        Arm { name: "IR-QLoRA", method: Method::NfIcq { k }, masks: (1.0, 1.0), finetune: true }
+    }
+
+    /// Table 4 ablations.
+    pub fn icq_only(k: u8) -> Arm {
+        Arm { name: "ICQ", method: Method::NfIcq { k }, masks: (0.0, 0.0), finetune: true }
+    }
+
+    pub fn iec_only(k: u8) -> Arm {
+        Arm { name: "IEC", method: Method::Nf { k }, masks: (1.0, 1.0), finetune: true }
+    }
+
+    pub fn iec_u1(k: u8) -> Arm {
+        Arm { name: "IEC(U1)", method: Method::Nf { k }, masks: (1.0, 0.0), finetune: true }
+    }
+
+    pub fn iec_u2(k: u8) -> Arm {
+        Arm { name: "IEC(U2)", method: Method::Nf { k }, masks: (0.0, 1.0), finetune: true }
+    }
+
+    /// Table 10 integer-quantizer variants.
+    pub fn ir_qlora_int(k: u8) -> Arm {
+        Arm {
+            name: "IR-QLoRA (QA-LoRA)",
+            method: Method::IntIcq { k },
+            masks: (1.0, 1.0),
+            finetune: true,
+        }
+    }
+
+    /// ICQ without LoRA / finetuning (Table 5).
+    pub fn icq_no_ft(k: u8) -> Arm {
+        Arm { name: "ICQ (no FT)", method: Method::NfIcq { k }, masks: (0.0, 0.0), finetune: false }
+    }
+}
+
+/// Everything a table row needs.
+pub struct ArmResult {
+    pub arm: Arm,
+    pub eval: EvalResult,
+    pub mean_entropy: f64,
+    pub storage_mb: f64,
+    pub quantize_time: Duration,
+    pub finetune_time: Duration,
+    pub loss_curve: Vec<f32>,
+}
+
+/// Experiment-wide knobs (scaled-down defaults keep a full table run
+/// in CPU-minutes; `--full` in the CLI raises them).
+#[derive(Clone, Debug)]
+pub struct RunCfg {
+    pub world_seed: u64,
+    pub pretrain_steps: usize,
+    pub finetune_steps: usize,
+    pub eval_per_group: usize,
+    pub seed: u64,
+    pub cache_dir: PathBuf,
+}
+
+impl Default for RunCfg {
+    fn default() -> Self {
+        RunCfg {
+            world_seed: 2024,
+            pretrain_steps: 300,
+            finetune_steps: 60,
+            eval_per_group: 50,
+            seed: 7,
+            cache_dir: PathBuf::from("runs"),
+        }
+    }
+}
+
+/// Pretrain a base model (or load it from the run cache).
+pub fn pretrained_base(
+    rt: &Runtime,
+    manifest: &Manifest,
+    tag: &str,
+    cfg: &RunCfg,
+) -> Result<NamedTensors> {
+    let ckpt = cfg.cache_dir.join(format!(
+        "base_{tag}_w{}_s{}_n{}.irqc",
+        cfg.world_seed, cfg.seed, cfg.pretrain_steps
+    ));
+    if ckpt.exists() {
+        if let Ok(w) = checkpoint::load(&ckpt) {
+            log::info!("loaded cached base {}", ckpt.display());
+            return Ok(w);
+        }
+        log::warn!("cache {} unreadable; re-pretraining", ckpt.display());
+    }
+    let size = manifest.size(tag)?;
+    let world = World::new(cfg.world_seed);
+    let mut rng = Rng::new(cfg.seed ^ 0xba5e);
+    let mut pre = Pretrainer::new(rt, manifest, tag, cfg.seed)?;
+    let t = Timer::start();
+    for step in 0..cfg.pretrain_steps {
+        let b = corpus::pretrain_batch(&world, &mut rng, size.config.batch, size.config.seq);
+        let loss = pre.step(b.tokens, b.targets)?;
+        if step % 50 == 0 || step + 1 == cfg.pretrain_steps {
+            log::info!("pretrain[{tag}] step {step}: loss {loss:.4}");
+        }
+    }
+    log::info!(
+        "pretrained {tag} in {:.1}s (final loss {:.4})",
+        t.elapsed_secs(),
+        pre.losses.last().copied().unwrap_or(f32::NAN)
+    );
+    checkpoint::save(&pre.params, &ckpt)
+        .with_context(|| format!("caching {}", ckpt.display()))?;
+    Ok(pre.params)
+}
+
+/// Run one arm end to end against a given base; returns the table row.
+pub fn run_arm(
+    rt: &Runtime,
+    manifest: &Manifest,
+    tag: &str,
+    base: &NamedTensors,
+    arm: Arm,
+    dataset: Dataset,
+    eval_items: &[McItem],
+    cfg: &RunCfg,
+) -> Result<ArmResult> {
+    let world = World::new(cfg.world_seed);
+    let qm: QuantizedModel = quantize_model(base, arm.method, cfg.seed)?;
+    let mean_entropy = qm.mean_entropy();
+    let storage_mb = qm.storage_mb();
+    let quantize_time = qm.elapsed;
+    log::info!(
+        "[{}] quantized in {:?} (entropy {:.3}, {:.2} MB)",
+        arm.name, quantize_time, mean_entropy, storage_mb
+    );
+
+    let size = manifest.size(tag)?;
+    let ft_timer = Timer::start();
+    let (lora, losses) = if arm.finetune {
+        let mut rng = Rng::new(cfg.seed ^ 0xf17e);
+        let mut ft = Finetuner::new(rt, manifest, tag, &qm.dequantized, arm.masks, cfg.seed)?;
+        for step in 0..cfg.finetune_steps {
+            let b = instruct_batch(&world, dataset, &mut rng, size.config.batch, size.config.seq);
+            let loss = ft.step(b.tokens, b.targets)?;
+            if step % 20 == 0 || step + 1 == cfg.finetune_steps {
+                log::info!("finetune[{}] step {step}: loss {loss:.4}", arm.name);
+            }
+        }
+        (ft.lora, ft.losses)
+    } else {
+        // zero-initialized adapter == identity (l2 = 0, beta = 0)
+        let spec = manifest.graph(tag, "train_step")?;
+        let nb = qm.dequantized.len();
+        let nl = super::trainer::train_layout(spec.inputs.len(), nb)?;
+        let mut rng = Rng::new(cfg.seed ^ 0xf17e);
+        let lora = crate::model::weights::init_lora(
+            &spec.inputs[nb..nb + nl],
+            size.config.rank,
+            &mut rng,
+        );
+        (lora, Vec::new())
+    };
+    let finetune_time = ft_timer.elapsed();
+
+    let ev = Evaluator::new(rt, manifest, tag, &qm.dequantized, &lora, arm.masks)?;
+    let eval = ev.evaluate(eval_items)?;
+    log::info!("[{}] avg accuracy {:.1}%", arm.name, eval.avg_accuracy() * 100.0);
+
+    Ok(ArmResult {
+        arm,
+        eval,
+        mean_entropy,
+        storage_mb,
+        quantize_time,
+        finetune_time,
+        loss_curve: losses,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_constructors() {
+        assert_eq!(Arm::ir_qlora(4).masks, (1.0, 1.0));
+        assert!(Arm::ir_qlora(4).method.uses_icq());
+        assert!(!Arm::qlora(4).method.uses_icq());
+        assert!(!Arm::normalfloat(4).finetune);
+        assert_eq!(Arm::iec_u1(4).masks, (1.0, 0.0));
+        assert_eq!(Arm::iec_u2(4).masks, (0.0, 1.0));
+        assert_eq!(Arm::qalora(2).method.bits(), 2);
+    }
+
+    #[test]
+    fn run_cfg_defaults() {
+        let c = RunCfg::default();
+        assert!(c.pretrain_steps > 0 && c.finetune_steps > 0);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: the quantize → finetune → evaluate → serve pipeline
+//! (the paper's experimental apparatus as a deployable system).
+//!
+//! - [`quantize`]: model-level quantization with every paper method;
+//! - [`trainer`]: pretraining + QLoRA finetuning over the AOT graphs;
+//! - [`evaluator`]: 5-shot / 0-shot multiple-choice scoring;
+//! - [`server`]: dynamic-batching inference server;
+//! - [`experiment`]: per-table-row orchestration with run caching.
+
+pub mod evaluator;
+pub mod experiment;
+pub mod quantize;
+pub mod server;
+pub mod trainer;
+
+pub use evaluator::{EvalResult, Evaluator};
+pub use experiment::{pretrained_base, run_arm, Arm, ArmResult, RunCfg};
+pub use quantize::{quantize_model, QuantizedModel};
+pub use server::{BatchServer, ServerConfig};
+pub use trainer::{Finetuner, Pretrainer};

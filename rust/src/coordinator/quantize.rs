@@ -1,0 +1,285 @@
+//! Model-level quantization pipeline: applies a [`Method`] to every
+//! projection tensor of a base model, producing (a) the dequantized
+//! weights the AOT graphs consume, (b) the storage representation for
+//! the serving path, and (c) the information/storage report behind
+//! Tables 5/6 and Figures 4/5.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::model::weights::{is_quantized_proj, proj_kind, NamedTensors};
+use crate::quant::{blockwise, gptq, icq, integer, Method, QuantizedTensor};
+use crate::util::f16::round_f16;
+use crate::util::timer::Timer;
+use crate::util::{Rng, Tensor};
+
+/// Per-tensor quantization record.
+#[derive(Clone, Debug)]
+pub struct TensorReport {
+    pub name: String,
+    /// Mean per-block code entropy (bits).
+    pub entropy: f64,
+    /// Entropy of the uncalibrated quantization of the same tensor.
+    pub entropy_vanilla: f64,
+    /// Effective stored bits per weight (codes + constants).
+    pub bits_per_weight: f64,
+    pub n_params: usize,
+}
+
+/// Model-level quantization result.
+pub struct QuantizedModel {
+    /// Dequantized weights (graph inputs). Non-projection tensors pass
+    /// through untouched.
+    pub dequantized: NamedTensors,
+    /// Storage representation per quantized tensor (NF methods only).
+    pub storage: Vec<(String, QuantizedTensor)>,
+    pub reports: Vec<TensorReport>,
+    /// Wall time of the whole pipeline (Table 7's "additional time").
+    pub elapsed: Duration,
+    pub method: Method,
+}
+
+impl QuantizedModel {
+    /// Mean entropy across quantized tensors (Table 5 "Ent.").
+    pub fn mean_entropy(&self) -> f64 {
+        if self.reports.is_empty() {
+            return 0.0;
+        }
+        self.reports.iter().map(|r| r.entropy).sum::<f64>() / self.reports.len() as f64
+    }
+
+    /// Model storage in megabytes: quantized projections at their
+    /// effective bits, everything else at 16-bit (Table 6 #Params).
+    pub fn storage_mb(&self) -> f64 {
+        let mut bits = 0f64;
+        for (name, t) in self.dequantized.iter() {
+            if let Some(rep) = self.reports.iter().find(|r| r.name == name) {
+                bits += rep.bits_per_weight * rep.n_params as f64;
+            } else {
+                bits += 16.0 * t.len() as f64;
+            }
+        }
+        bits / 8.0 / 1e6
+    }
+}
+
+/// Synthetic correlated calibration activations for GPTQ (AR(1) over
+/// features — the substitution for real calibration text documented in
+/// DESIGN.md §2; an identity Hessian would collapse GPTQ to RTN).
+fn gptq_calibration(h: usize, n: usize, rng: &mut Rng) -> Tensor {
+    let mut x = vec![0f32; n * h];
+    for s in 0..n {
+        let mut prev = rng.normal();
+        for j in 0..h {
+            let e = rng.normal();
+            let v = 0.55 * prev + 0.85 * e;
+            x[s * h + j] = v;
+            prev = v;
+        }
+    }
+    Tensor::new(&[n, h], x)
+}
+
+/// Quantize every projection tensor of `weights` with `method`.
+pub fn quantize_model(
+    weights: &NamedTensors,
+    method: Method,
+    seed: u64,
+) -> Result<QuantizedModel> {
+    let timer = Timer::start();
+    let mut dequantized = NamedTensors::new();
+    let mut storage = Vec::new();
+    let mut reports = Vec::new();
+    let mut rng = Rng::new(seed ^ 0x51554e54);
+    let icq_cfg = icq::IcqConfig::default();
+
+    for (name, t) in weights.iter() {
+        if !is_quantized_proj(name) {
+            dequantized.push(name, t.clone());
+            continue;
+        }
+        let w = t.data();
+        let n = w.len();
+        let (dq, entropy, bits): (Vec<f32>, f64, f64) = match method {
+            Method::Fp16 => {
+                let dq = w.iter().map(|&x| round_f16(x)).collect();
+                (dq, 0.0, 16.0)
+            }
+            Method::Nf { k } => {
+                let qt = QuantizedTensor::quantize(t, k, blockwise::DEFAULT_BLOCK, None);
+                let h = qt.mean_entropy();
+                let bits = qt.bits_per_weight();
+                let dq = qt.dequantize().into_data();
+                storage.push((name.to_string(), qt));
+                (dq, h, bits)
+            }
+            Method::NfIcq { k } => {
+                let qt =
+                    QuantizedTensor::quantize(t, k, blockwise::DEFAULT_BLOCK, Some(&icq_cfg));
+                let h = qt.mean_entropy();
+                let bits = qt.bits_per_weight();
+                let dq = qt.dequantize().into_data();
+                storage.push((name.to_string(), qt));
+                (dq, h, bits)
+            }
+            Method::Int { k } => {
+                let q = integer::quantize(w, k, blockwise::DEFAULT_BLOCK);
+                let h = integer::mean_entropy(&q);
+                // group-wise int stores k-bit codes + (s, z) per group
+                let bits = k as f64 + 32.0 / blockwise::DEFAULT_BLOCK as f64;
+                (integer::dequantize(&q), h, bits)
+            }
+            Method::IntIcq { k } => {
+                let q = integer::quantize_icq(w, k, blockwise::DEFAULT_BLOCK, 3);
+                let h = integer::mean_entropy(&q);
+                let bits = k as f64 + 32.0 / blockwise::DEFAULT_BLOCK as f64;
+                (integer::dequantize(&q), h, bits)
+            }
+            Method::Gptq { k } => {
+                // w is [in, out]; GPTQ wants rows = outputs
+                let wt = t.transpose();
+                let calib = gptq_calibration(t.shape()[0], 96, &mut rng);
+                let cfg = gptq::GptqConfig { k, group: 64, damp: 0.01 };
+                let (wq, _) = gptq::gptq_quantize(&wt, &calib, &cfg);
+                let q = integer::quantize(w, k, blockwise::DEFAULT_BLOCK);
+                let h = integer::mean_entropy(&q);
+                let bits = k as f64 + 32.0 / blockwise::DEFAULT_BLOCK as f64;
+                (wq.transpose().into_data(), h, bits)
+            }
+        };
+        // vanilla-NF entropy of the same tensor, for the ICQ-vs-vanilla
+        // comparisons (Figures 4/5); skip for fp16
+        let entropy_vanilla = if method.bits() < 16 {
+            let q0 = blockwise::quantize(w, method.bits(), blockwise::DEFAULT_BLOCK, None);
+            crate::quant::entropy::mean_block_entropy(&q0)
+        } else {
+            0.0
+        };
+        reports.push(TensorReport {
+            name: name.to_string(),
+            entropy,
+            entropy_vanilla,
+            bits_per_weight: bits,
+            n_params: n,
+        });
+        dequantized.push(name, Tensor::new(t.shape(), dq));
+    }
+
+    Ok(QuantizedModel {
+        dequantized,
+        storage,
+        reports,
+        elapsed: timer.elapsed(),
+        method,
+    })
+}
+
+/// Per-(layer, projection) entropy pairs for Figures 4/5.
+pub fn entropy_by_projection(
+    weights: &NamedTensors,
+    k: u8,
+) -> Vec<(String, f64, f64)> {
+    let icq_cfg = icq::IcqConfig::default();
+    weights
+        .iter()
+        .filter(|(n, _)| is_quantized_proj(n))
+        .map(|(name, t)| {
+            let q0 = blockwise::quantize(t.data(), k, 64, None);
+            let h0 = crate::quant::entropy::mean_block_entropy(&q0);
+            let q1 = icq::quantize(t.data(), k, 64, &icq_cfg);
+            let h1 = crate::quant::entropy::mean_block_entropy(&q1);
+            let _ = proj_kind(name);
+            (name.to_string(), h0, h1)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Dtype, InputSpec};
+
+    fn tiny_model(seed: u64) -> NamedTensors {
+        let specs = vec![
+            InputSpec { name: "embed".into(), shape: vec![32, 64], dtype: Dtype::F32 },
+            InputSpec { name: "l0.attn_norm".into(), shape: vec![64], dtype: Dtype::F32 },
+            InputSpec { name: "l0.wq".into(), shape: vec![64, 64], dtype: Dtype::F32 },
+            InputSpec { name: "l0.w2".into(), shape: vec![128, 64], dtype: Dtype::F32 },
+            InputSpec { name: "lm_head".into(), shape: vec![64, 32], dtype: Dtype::F32 },
+        ];
+        let mut rng = Rng::new(seed);
+        crate::model::weights::init_base(&specs, 1, &mut rng)
+    }
+
+    #[test]
+    fn quantizes_only_projections() {
+        let m = tiny_model(1);
+        let q = quantize_model(&m, Method::Nf { k: 4 }, 0).unwrap();
+        assert_eq!(q.reports.len(), 2); // wq, w2
+        assert_eq!(q.dequantized.len(), m.len());
+        // embed untouched
+        assert_eq!(q.dequantized.get("embed").unwrap(), m.get("embed").unwrap());
+        // wq changed (lossy)
+        assert_ne!(q.dequantized.get("l0.wq").unwrap(), m.get("l0.wq").unwrap());
+    }
+
+    #[test]
+    fn icq_entropy_gain_and_storage_cost() {
+        let m = tiny_model(2);
+        let v = quantize_model(&m, Method::Nf { k: 4 }, 0).unwrap();
+        let i = quantize_model(&m, Method::NfIcq { k: 4 }, 0).unwrap();
+        assert!(i.mean_entropy() >= v.mean_entropy());
+        // ICQ stores tau next to scale: slightly more bits
+        assert!(i.storage_mb() > v.storage_mb());
+        assert!(i.storage_mb() < v.storage_mb() * 1.05);
+    }
+
+    #[test]
+    fn methods_all_run() {
+        let m = tiny_model(3);
+        for method in [
+            Method::Fp16,
+            Method::Nf { k: 2 },
+            Method::Nf { k: 3 },
+            Method::Int { k: 4 },
+            Method::IntIcq { k: 4 },
+            Method::Gptq { k: 4 },
+        ] {
+            let q = quantize_model(&m, method, 7).unwrap();
+            assert!(q
+                .dequantized
+                .get("l0.wq")
+                .unwrap()
+                .data()
+                .iter()
+                .all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn lower_bits_higher_error() {
+        let m = tiny_model(4);
+        let orig = m.get("l0.wq").unwrap().data().to_vec();
+        let mut errs = Vec::new();
+        for k in [2u8, 3, 4] {
+            let q = quantize_model(&m, Method::Nf { k }, 0).unwrap();
+            errs.push(crate::util::stats::mse(
+                &orig,
+                q.dequantized.get("l0.wq").unwrap().data(),
+            ));
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn entropy_by_projection_reports_both() {
+        let m = tiny_model(5);
+        let rows = entropy_by_projection(&m, 4);
+        assert_eq!(rows.len(), 2);
+        for (name, h0, h1) in rows {
+            assert!(h1 >= h0 - 1e-9, "{name}: icq {h1} < vanilla {h0}");
+            assert!(h0 > 2.0 && h1 <= 4.0);
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Batched inference server (the serving-path L3 component).
+//!
+//! Requests (token prompts) arrive on a channel; a worker thread
+//! drains up to `batch` of them (waiting at most `max_wait` after the
+//! first), pads them into one fixed-shape forward call, and replies
+//! with the next-token logits per request. This is the dynamic-batching
+//! structure of vLLM-style routers reduced to the single-model,
+//! single-device case this paper needs.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::PAD;
+use crate::model::weights::NamedTensors;
+use crate::runtime::{HostTensor, Manifest, Runtime};
+
+/// One inference reply.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    /// Next-token logits at the last prompt position.
+    pub logits: Vec<f32>,
+    /// Time spent queued before its batch launched.
+    pub queued: Duration,
+    /// Total request latency.
+    pub latency: Duration,
+    /// How many requests shared the batch.
+    pub batch_size: usize,
+}
+
+struct Request {
+    tokens: Vec<i32>,
+    enqueued: Instant,
+    reply: SyncSender<Result<Reply, String>>,
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub batch_occupancy_sum: usize,
+}
+
+impl ServerStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_occupancy_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Handle to a running batch server.
+pub struct BatchServer {
+    tx: Option<SyncSender<Request>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<ServerStats>>,
+    seq: usize,
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub tag: String,
+    /// IEC masks for the forward graph.
+    pub masks: (f32, f32),
+    /// Max time the batcher waits to fill a batch after the first
+    /// request arrives.
+    pub max_wait: Duration,
+}
+
+impl BatchServer {
+    /// Spawn the worker (it owns its own PJRT runtime + executor).
+    pub fn spawn(
+        manifest: Manifest,
+        cfg: ServerConfig,
+        base: NamedTensors,
+        lora: NamedTensors,
+    ) -> Result<BatchServer> {
+        let size = manifest.size(&cfg.tag)?;
+        let (seq, batch, vocab) = (size.config.seq, size.config.batch, size.config.vocab);
+        let spec = manifest.graph(&cfg.tag, "forward")?.clone();
+        let (tx, rx) = sync_channel::<Request>(1024);
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+        let stats_w = stats.clone();
+
+        let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
+        let handle = std::thread::spawn(move || {
+            let init = (|| -> Result<_> {
+                let rt = Runtime::cpu()?;
+                let exe_rt: &'static Runtime = Box::leak(Box::new(rt));
+                let exe = exe_rt.load(&spec)?;
+                let mut fixed = Vec::new();
+                let mut slot = 0usize;
+                for nt in [&base, &lora] {
+                    for t in nt.tensors() {
+                        fixed.push(exe.upload_one(slot, &HostTensor::F32(t.data().to_vec()))?);
+                        slot += 1;
+                    }
+                }
+                fixed.push(exe.upload_one(slot, &HostTensor::F32(vec![cfg.masks.0]))?);
+                fixed.push(exe.upload_one(slot + 1, &HostTensor::F32(vec![cfg.masks.1]))?);
+                Ok((exe, fixed))
+            })();
+            let (exe, fixed) = match init {
+                Ok(v) => {
+                    let _ = ready_tx.send(Ok(()));
+                    v
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+
+            loop {
+                // block for the first request
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break, // all senders dropped: shut down
+                };
+                let mut pending = vec![first];
+                let deadline = Instant::now() + cfg.max_wait;
+                while pending.len() < batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => pending.push(r),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+
+                let bsz = pending.len();
+                let launch = Instant::now();
+                let mut tokens = vec![PAD; batch * seq];
+                let mut positions = Vec::with_capacity(bsz);
+                let mut bad: Vec<Option<String>> = vec![None; bsz];
+                for (i, r) in pending.iter().enumerate() {
+                    if r.tokens.is_empty() || r.tokens.len() > seq {
+                        bad[i] = Some(format!(
+                            "prompt length {} out of range 1..={seq}",
+                            r.tokens.len()
+                        ));
+                        positions.push(0);
+                        continue;
+                    }
+                    tokens[i * seq..i * seq + r.tokens.len()].copy_from_slice(&r.tokens);
+                    positions.push(r.tokens.len() - 1);
+                }
+
+                let result = (|| -> Result<Vec<f32>> {
+                    let tok = exe.upload_one(fixed.len(), &HostTensor::I32(tokens.clone()))?;
+                    let mut all: Vec<&xla::PjRtBuffer> = fixed.iter().collect();
+                    all.push(&tok);
+                    let outs = exe.execute(&all)?;
+                    Ok(outs[0].as_f32()?.to_vec())
+                })();
+
+                {
+                    let mut s = stats_w.lock().unwrap();
+                    s.requests += bsz;
+                    s.batches += 1;
+                    s.batch_occupancy_sum += bsz;
+                }
+
+                match result {
+                    Ok(logits) => {
+                        for (i, r) in pending.into_iter().enumerate() {
+                            let resp = if let Some(msg) = bad[i].take() {
+                                Err(msg)
+                            } else {
+                                let off = (i * seq + positions[i]) * vocab;
+                                Ok(Reply {
+                                    logits: logits[off..off + vocab].to_vec(),
+                                    queued: launch - r.enqueued,
+                                    latency: r.enqueued.elapsed(),
+                                    batch_size: bsz,
+                                })
+                            };
+                            let _ = r.reply.send(resp);
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        for r in pending {
+                            let _ = r.reply.send(Err(msg.clone()));
+                        }
+                    }
+                }
+            }
+        });
+
+        ready_rx
+            .recv()
+            .context("server worker died during init")?
+            .map_err(|e| anyhow!("server init failed: {e}"))?;
+
+        Ok(BatchServer { tx: Some(tx), handle: Some(handle), stats, seq })
+    }
+
+    pub fn max_prompt_len(&self) -> usize {
+        self.seq
+    }
+
+    /// Submit a prompt; returns a receiver for the reply.
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<Result<Reply, String>>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .as_ref()
+            .context("server shut down")?
+            .send(Request { tokens, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow!("server worker exited"))?;
+        Ok(reply_rx)
+    }
+
+    /// Submit and wait.
+    pub fn query(&self, tokens: Vec<i32>) -> Result<Reply> {
+        let rx = self.submit(tokens)?;
+        match rx.recv().context("server dropped reply")? {
+            Ok(r) => Ok(r),
+            Err(e) => bail!("request failed: {e}"),
+        }
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Graceful shutdown (drains in-flight work).
+    pub fn shutdown(mut self) {
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for BatchServer {
+    fn drop(&mut self) {
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = ServerStats { requests: 10, batches: 4, batch_occupancy_sum: 10 };
+        assert!((s.mean_batch_size() - 2.5).abs() < 1e-12);
+        assert_eq!(ServerStats::default().mean_batch_size(), 0.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Training drivers: pre-training (full parameters) and QLoRA
+//! finetuning (frozen base + LoRA/IEC) over the AOT train-step graphs.
+//!
+//! The finetuning trainer uploads the (large, frozen) base weights to
+//! the device once; each step moves only the batch and the small
+//! LoRA + AdamW state. Optimizer math (AdamW, grad clip, LR) lives
+//! inside the graph — Rust just threads state.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::weights::{self, NamedTensors};
+use crate::runtime::{Executor, HostTensor, Manifest, Runtime};
+use crate::util::{Rng, Tensor};
+
+/// Graph-input layout of a train_step graph (see aot.py):
+/// base(nb) | lora(nl) | m(nl) | v(nl) | step m1 m2 tokens targets.
+pub fn train_layout(n_inputs: usize, nb: usize) -> Result<usize> {
+    let rest = n_inputs
+        .checked_sub(nb + 5)
+        .context("train graph has too few inputs")?;
+    if rest % 3 != 0 {
+        bail!("train graph input count {n_inputs} inconsistent with nb={nb}");
+    }
+    Ok(rest / 3)
+}
+
+/// Layout of a pretrain graph: params(nb) | m(nb) | v(nb) | step tokens targets.
+pub fn pretrain_layout(n_inputs: usize) -> Result<usize> {
+    let rest = n_inputs.checked_sub(3).context("too few inputs")?;
+    if rest % 3 != 0 {
+        bail!("pretrain graph input count {n_inputs} not 3n+3");
+    }
+    Ok(rest / 3)
+}
+
+fn tensors_to_hosts(nt: &NamedTensors) -> Vec<HostTensor> {
+    nt.tensors()
+        .iter()
+        .map(|t| HostTensor::F32(t.data().to_vec()))
+        .collect()
+}
+
+fn update_from_hosts(nt: &mut NamedTensors, outs: &[HostTensor]) -> Result<()> {
+    let names: Vec<String> = nt.names().to_vec();
+    for (name, out) in names.iter().zip(outs) {
+        let shape = nt.get(name)?.shape().to_vec();
+        nt.set(name, Tensor::new(&shape, out.as_f32()?.to_vec()))?;
+    }
+    Ok(())
+}
+
+/// Full-parameter pre-training driver.
+pub struct Pretrainer<'rt> {
+    exe: Executor<'rt>,
+    pub params: NamedTensors,
+    m: NamedTensors,
+    v: NamedTensors,
+    step: usize,
+    pub losses: Vec<f32>,
+}
+
+impl<'rt> Pretrainer<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        tag: &str,
+        seed: u64,
+    ) -> Result<Self> {
+        let spec = manifest.graph(tag, "pretrain_step")?;
+        let nb = pretrain_layout(spec.inputs.len())?;
+        let cfg = &manifest.size(tag)?.config;
+        let mut rng = Rng::new(seed);
+        let params = weights::init_base(&spec.inputs[..nb], cfg.n_layers, &mut rng);
+        let m = weights::zeros_like(&spec.inputs[..nb]);
+        let v = weights::zeros_like(&spec.inputs[..nb]);
+        let exe = rt.load(spec)?;
+        Ok(Pretrainer { exe, params, m, v, step: 0, losses: Vec::new() })
+    }
+
+    pub fn step(&mut self, tokens: Vec<i32>, targets: Vec<i32>) -> Result<f32> {
+        self.step += 1;
+        let mut inputs = tensors_to_hosts(&self.params);
+        inputs.extend(tensors_to_hosts(&self.m));
+        inputs.extend(tensors_to_hosts(&self.v));
+        inputs.push(HostTensor::F32(vec![self.step as f32]));
+        inputs.push(HostTensor::I32(tokens));
+        inputs.push(HostTensor::I32(targets));
+        let outs = self.exe.call(&inputs)?;
+        let loss = outs[0].as_f32()?[0];
+        let n = self.params.len();
+        update_from_hosts(&mut self.params, &outs[1..1 + n])?;
+        update_from_hosts(&mut self.m, &outs[1 + n..1 + 2 * n])?;
+        update_from_hosts(&mut self.v, &outs[1 + 2 * n..1 + 3 * n])?;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+}
+
+/// QLoRA finetuning driver (frozen quantized base, trainable LoRA+IEC).
+pub struct Finetuner<'rt> {
+    exe: Executor<'rt>,
+    base_bufs: Vec<xla::PjRtBuffer>,
+    nb: usize,
+    pub lora: NamedTensors,
+    m: NamedTensors,
+    v: NamedTensors,
+    step: usize,
+    /// IEC gating masks (m1, m2): (0,0) = vanilla QLoRA … (1,1) = IR-QLoRA.
+    pub masks: (f32, f32),
+    pub losses: Vec<f32>,
+}
+
+impl<'rt> Finetuner<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        tag: &str,
+        base: &NamedTensors,
+        masks: (f32, f32),
+        seed: u64,
+    ) -> Result<Self> {
+        let spec = manifest.graph(tag, "train_step")?;
+        let nb = base.len();
+        let nl = train_layout(spec.inputs.len(), nb)?;
+        let cfg = &manifest.size(tag)?.config;
+        // sanity: the base tensor names must match the graph's inputs
+        for (i, s) in spec.inputs[..nb].iter().enumerate() {
+            if base.names()[i] != s.name {
+                bail!(
+                    "base weight order mismatch at {i}: '{}' vs graph '{}'",
+                    base.names()[i],
+                    s.name
+                );
+            }
+        }
+        let mut rng = Rng::new(seed);
+        let lora = weights::init_lora(&spec.inputs[nb..nb + nl], cfg.rank, &mut rng);
+        let m = weights::zeros_like(&spec.inputs[nb..nb + nl]);
+        let v = weights::zeros_like(&spec.inputs[nb..nb + nl]);
+
+        let exe = rt.load(spec)?;
+        // upload the frozen base once
+        let mut base_bufs = Vec::with_capacity(nb);
+        for (i, t) in base.tensors().iter().enumerate() {
+            base_bufs.push(exe.upload_one(i, &HostTensor::F32(t.data().to_vec()))?);
+        }
+        Ok(Finetuner {
+            exe,
+            base_bufs,
+            nb,
+            lora,
+            m,
+            v,
+            step: 0,
+            masks,
+            losses: Vec::new(),
+        })
+    }
+
+    pub fn n_trainable(&self) -> usize {
+        self.lora.total_params()
+    }
+
+    pub fn step(&mut self, tokens: Vec<i32>, targets: Vec<i32>) -> Result<f32> {
+        self.step += 1;
+        let nl = self.lora.len();
+        // upload the small mutable state + batch
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(3 * nl + 5);
+        let mut slot = self.nb;
+        for nt in [&self.lora, &self.m, &self.v] {
+            for t in nt.tensors() {
+                bufs.push(
+                    self.exe
+                        .upload_one(slot, &HostTensor::F32(t.data().to_vec()))?,
+                );
+                slot += 1;
+            }
+        }
+        bufs.push(self.exe.upload_one(slot, &HostTensor::F32(vec![self.step as f32]))?);
+        bufs.push(self.exe.upload_one(slot + 1, &HostTensor::F32(vec![self.masks.0]))?);
+        bufs.push(self.exe.upload_one(slot + 2, &HostTensor::F32(vec![self.masks.1]))?);
+        bufs.push(self.exe.upload_one(slot + 3, &HostTensor::I32(tokens))?);
+        bufs.push(self.exe.upload_one(slot + 4, &HostTensor::I32(targets))?);
+
+        let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.nb + bufs.len());
+        all.extend(self.base_bufs.iter());
+        all.extend(bufs.iter());
+        let outs = self.exe.execute(&all)?;
+
+        let loss = outs[0].as_f32()?[0];
+        update_from_hosts(&mut self.lora, &outs[1..1 + nl])?;
+        update_from_hosts(&mut self.m, &outs[1 + nl..1 + 2 * nl])?;
+        update_from_hosts(&mut self.v, &outs[1 + 2 * nl..1 + 3 * nl])?;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layouts() {
+        // nb=38, nl=57: 38 + 3*57 + 5 = 214... synthetic check
+        assert_eq!(train_layout(38 + 3 * 57 + 5, 38).unwrap(), 57);
+        assert_eq!(pretrain_layout(3 * 38 + 3).unwrap(), 38);
+        assert!(train_layout(10, 38).is_err());
+        assert!(pretrain_layout(5).is_err());
+    }
+}

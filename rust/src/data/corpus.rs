@@ -1,0 +1,126 @@
+//! Pre-training corpus: facts stated as sentences, packed into fixed
+//! sequences. The base model learns p(value | category, entity) from
+//! this — the "knowledge" that quantization later erodes.
+
+use crate::util::Rng;
+
+use super::*;
+
+/// One fact sentence: `cat e1 e2 Q SEP val EOS` (7 tokens).
+pub fn fact_sentence(world: &World, cat: usize, e1: u32, e2: u32) -> [i32; 7] {
+    [
+        cat_token(cat),
+        entity_token(e1),
+        entity_token(e2),
+        Q,
+        SEP,
+        world.mmlu_value_token(cat, e1, e2),
+        EOS,
+    ]
+}
+
+/// A pre-training batch: sequences of packed fact sentences. Targets
+/// supervise only the value and EOS positions — entity tokens are
+/// uniform random (unlearnable), and masking them focuses capacity on
+/// the facts themselves (the knowledge quantization later erodes).
+pub struct PretrainBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+pub fn pretrain_batch(
+    world: &World,
+    rng: &mut Rng,
+    batch: usize,
+    seq: usize,
+) -> PretrainBatch {
+    let mut tokens = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let mut row = Vec::with_capacity(seq + 8);
+        row.push(BOS);
+        while row.len() < seq {
+            let cat = rng.below(MMLU_GROUPS.len());
+            let e1 = rng.below(N_ENTITIES) as u32;
+            let e2 = rng.below(N_E2) as u32;
+            row.extend_from_slice(&fact_sentence(world, cat, e1, e2));
+        }
+        row.truncate(seq);
+        tokens.extend_from_slice(&row);
+    }
+    // supervise positions whose next token is a value or EOS
+    let mut targets = vec![-1i32; batch * seq];
+    for b in 0..batch {
+        for t in 0..seq - 1 {
+            let next = tokens[b * seq + t + 1];
+            let is_value = next >= VALUE_BASE && next < VALUE_BASE + N_VALUES as i32;
+            if is_value || next == EOS {
+                targets[b * seq + t] = next;
+            }
+        }
+    }
+    PretrainBatch { tokens, targets }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let w = World::new(1);
+        let mut rng = Rng::new(1);
+        let b = pretrain_batch(&w, &mut rng, 4, 32);
+        assert_eq!(b.tokens.len(), 128);
+        assert_eq!(b.targets.len(), 128);
+    }
+
+    #[test]
+    fn targets_supervise_only_values_and_eos() {
+        let w = World::new(2);
+        let mut rng = Rng::new(2);
+        let b = pretrain_batch(&w, &mut rng, 2, 64);
+        let mut supervised = 0;
+        for row in 0..2 {
+            for t in 0..63 {
+                let tgt = b.targets[row * 64 + t];
+                if tgt >= 0 {
+                    supervised += 1;
+                    assert_eq!(tgt, b.tokens[row * 64 + t + 1]);
+                    assert!(
+                        tgt == EOS || (tgt >= VALUE_BASE && tgt < VALUE_BASE + N_VALUES as i32)
+                    );
+                }
+            }
+            assert_eq!(b.targets[row * 64 + 63], -1);
+        }
+        assert!(supervised > 10, "some positions must be supervised");
+    }
+
+    #[test]
+    fn rows_start_with_bos() {
+        let w = World::new(3);
+        let mut rng = Rng::new(3);
+        let b = pretrain_batch(&w, &mut rng, 3, 24);
+        for row in 0..3 {
+            assert_eq!(b.tokens[row * 24], BOS);
+        }
+    }
+
+    #[test]
+    fn facts_are_consistent_with_world() {
+        let w = World::new(4);
+        let s = fact_sentence(&w, 2, 17, 5);
+        assert_eq!(s[0], cat_token(2));
+        assert_eq!(s[1], entity_token(17));
+        assert_eq!(s[2], entity_token(5));
+        assert_eq!(s[5], w.mmlu_value_token(2, 17, 5));
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let w = World::new(5);
+        let mut rng = Rng::new(5);
+        let b = pretrain_batch(&w, &mut rng, 4, 64);
+        assert!(b.tokens.iter().all(|&t| t >= 0 && (t as usize) < VOCAB));
+    }
+}

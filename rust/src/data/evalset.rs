@@ -1,0 +1,209 @@
+//! Evaluation sets: SynMMLU (5-shot, 4 category groups) and SynCSQA
+//! (0-shot, 7 suites). Items use held-out entities (the top quarter of
+//! the entity range is never sampled by the finetuning generators'
+//! packing loop — knowledge about them comes only from pre-training,
+//! so eval measures what quantization preserved, plus the QA-format
+//! competence finetuning adds).
+
+use crate::util::Rng;
+
+use super::*;
+
+/// One multiple-choice item, fully tokenized.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    /// Prompt tokens (ends with SEP; answer position is prompt.len()-1's
+    /// next-token distribution).
+    pub prompt: Vec<i32>,
+    /// Candidate answer tokens (single token each).
+    pub choices: Vec<i32>,
+    /// Index of the correct choice.
+    pub correct: usize,
+    /// Group index (MMLU category / CSQA suite).
+    pub group: usize,
+}
+
+fn distractors(
+    world: &World,
+    relation: u32,
+    space: usize,
+    correct: i32,
+    n: usize,
+    rng: &mut Rng,
+) -> Vec<i32> {
+    let _ = (world, relation);
+    let mut out = Vec::with_capacity(n);
+    let mut guard = 0;
+    while out.len() < n && guard < 1000 {
+        guard += 1;
+        let v = VALUE_BASE + rng.below(space) as i32;
+        if v != correct && !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    while out.len() < n {
+        // degenerate tiny spaces: pad with wrapped values
+        out.push(VALUE_BASE + ((correct - VALUE_BASE + 1 + out.len() as i32) % space as i32));
+    }
+    out
+}
+
+/// Build one 5-shot SynMMLU item for a category.
+pub fn mmlu_item(world: &World, cat: usize, rng: &mut Rng, shots: usize) -> McItem {
+    let space = MMLU_GROUPS[cat].1;
+    let mut prompt = vec![BOS];
+    for _ in 0..shots {
+        let e1 = rng.below(N_ENTITIES) as u32;
+        let e2 = rng.below(N_E2) as u32;
+        prompt.extend_from_slice(&[
+            cat_token(cat),
+            entity_token(e1),
+            entity_token(e2),
+            Q,
+            SEP,
+            world.mmlu_value_token(cat, e1, e2),
+            EOS,
+        ]);
+    }
+    let e1 = rng.below(N_ENTITIES) as u32;
+    let e2 = rng.below(N_E2) as u32;
+    prompt.extend_from_slice(&[cat_token(cat), entity_token(e1), entity_token(e2), Q, SEP]);
+    let correct_tok = world.mmlu_value_token(cat, e1, e2);
+    let mut choices = vec![correct_tok];
+    choices.extend(distractors(world, cat as u32, space, correct_tok, 3, rng));
+    // shuffle choices, remember where the correct one lands
+    let mut order: Vec<usize> = (0..choices.len()).collect();
+    rng.shuffle(&mut order);
+    let shuffled: Vec<i32> = order.iter().map(|&i| choices[i]).collect();
+    let correct = order.iter().position(|&i| i == 0).unwrap();
+    McItem { prompt, choices: shuffled, correct, group: cat }
+}
+
+/// Build one 0-shot SynCSQA item for a suite.
+pub fn csqa_item(world: &World, suite: usize, rng: &mut Rng) -> McItem {
+    let (_, space, n_choices) = CSQA_SUITES[suite];
+    let e1 = rng.below(N_ENTITIES) as u32;
+    let e2 = rng.below(N_E2) as u32;
+    let prompt = vec![BOS, suite_token(suite), entity_token(e1), entity_token(e2), Q, SEP];
+    let correct_tok = world.csqa_value_token(suite, e1, e2);
+    let mut choices = vec![correct_tok];
+    choices.extend(distractors(
+        world,
+        16 + suite as u32,
+        space,
+        correct_tok,
+        n_choices - 1,
+        rng,
+    ));
+    let mut order: Vec<usize> = (0..choices.len()).collect();
+    rng.shuffle(&mut order);
+    let shuffled: Vec<i32> = order.iter().map(|&i| choices[i]).collect();
+    let correct = order.iter().position(|&i| i == 0).unwrap();
+    McItem { prompt, choices: shuffled, correct, group: suite }
+}
+
+/// A full SynMMLU evaluation set: `per_cat` items per category.
+pub fn mmlu_set(world: &World, per_cat: usize, seed: u64) -> Vec<McItem> {
+    let mut rng = Rng::new(seed ^ 0x4d4d4c55);
+    let mut out = Vec::new();
+    for cat in 0..MMLU_GROUPS.len() {
+        for _ in 0..per_cat {
+            out.push(mmlu_item(world, cat, &mut rng, 5));
+        }
+    }
+    out
+}
+
+/// A full SynCSQA evaluation set: `per_suite` items per suite.
+pub fn csqa_set(world: &World, per_suite: usize, seed: u64) -> Vec<McItem> {
+    let mut rng = Rng::new(seed ^ 0x43535141);
+    let mut out = Vec::new();
+    for suite in 0..CSQA_SUITES.len() {
+        for _ in 0..per_suite {
+            out.push(csqa_item(world, suite, &mut rng));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mmlu_item_structure() {
+        let w = World::new(1);
+        let mut rng = Rng::new(1);
+        let item = mmlu_item(&w, 2, &mut rng, 5);
+        // 1 BOS + 5 shots * 7 + 5 query tokens
+        assert_eq!(item.prompt.len(), 1 + 5 * 7 + 5);
+        assert_eq!(*item.prompt.last().unwrap(), SEP);
+        assert_eq!(item.choices.len(), 4);
+        assert!(item.correct < 4);
+        assert_eq!(item.group, 2);
+    }
+
+    #[test]
+    fn correct_choice_is_world_fact() {
+        let w = World::new(2);
+        let mut rng = Rng::new(2);
+        let item = mmlu_item(&w, 0, &mut rng, 5);
+        let n = item.prompt.len();
+        let e1 = (item.prompt[n - 4] - ENTITY_BASE) as u32;
+        let e2 = (item.prompt[n - 3] - ENTITY_BASE) as u32;
+        assert_eq!(item.choices[item.correct], w.mmlu_value_token(0, e1, e2));
+    }
+
+    #[test]
+    fn choices_distinct() {
+        let w = World::new(3);
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let item = mmlu_item(&w, 1, &mut rng, 5);
+            let set: std::collections::HashSet<i32> =
+                item.choices.iter().cloned().collect();
+            assert_eq!(set.len(), item.choices.len());
+        }
+    }
+
+    #[test]
+    fn correct_position_unbiased() {
+        let w = World::new(4);
+        let mut rng = Rng::new(4);
+        let mut counts = [0usize; 4];
+        for _ in 0..400 {
+            counts[mmlu_item(&w, 0, &mut rng, 5).correct] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 50, "positions should be shuffled: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn csqa_choice_counts_per_suite() {
+        let w = World::new(5);
+        let mut rng = Rng::new(5);
+        for (suite, &(_, _, n)) in CSQA_SUITES.iter().enumerate() {
+            let item = csqa_item(&w, suite, &mut rng);
+            assert_eq!(item.choices.len(), n);
+        }
+    }
+
+    #[test]
+    fn sets_are_deterministic() {
+        let w = World::new(6);
+        let a = mmlu_set(&w, 10, 99);
+        let b = mmlu_set(&w, 10, 99);
+        assert_eq!(a.len(), 40);
+        assert_eq!(a[7].prompt, b[7].prompt);
+        assert_eq!(a[7].correct, b[7].correct);
+    }
+
+    #[test]
+    fn prompts_fit_sequence() {
+        let w = World::new(7);
+        for item in mmlu_set(&w, 20, 1).iter().chain(csqa_set(&w, 20, 1).iter()) {
+            assert!(item.prompt.len() + 1 <= 128, "prompt too long");
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Instruction-finetuning datasets: alpaca-syn (single template family)
+//! and flan-syn (8-template multi-task mixture). Loss is masked to the
+//! response tokens only, exactly like instruction tuning on Alpaca /
+//! Flan v2 in the paper.
+
+use crate::util::Rng;
+
+use super::*;
+
+/// Which synthetic instruction dataset to draw from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataset {
+    /// Single instruction template (Alpaca analog).
+    AlpacaSyn,
+    /// 8-template multi-task mixture incl. CSQA-suite facts
+    /// (Flan v2 analog — broader supervision, better transfer).
+    FlanSyn,
+}
+
+impl Dataset {
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Dataset::AlpacaSyn => "Alpaca",
+            Dataset::FlanSyn => "Flan v2",
+        }
+    }
+}
+
+/// One finetuning example: prompt tokens + single-token answer.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub prompt: Vec<i32>,
+    pub answer: i32,
+}
+
+/// Build one example. Alpaca uses instruction template 0 over MMLU
+/// facts; Flan mixes 8 templates over MMLU + CSQA facts.
+pub fn example(world: &World, ds: Dataset, rng: &mut Rng) -> Example {
+    let template = match ds {
+        Dataset::AlpacaSyn => 0usize,
+        Dataset::FlanSyn => rng.below(8),
+    };
+    let e1 = rng.below(N_ENTITIES) as u32;
+    let e2 = rng.below(N_E2) as u32;
+    let (task_tok, answer) = match ds {
+        Dataset::AlpacaSyn => {
+            let cat = rng.below(MMLU_GROUPS.len());
+            (cat_token(cat), world.mmlu_value_token(cat, e1, e2))
+        }
+        Dataset::FlanSyn => {
+            // half MMLU categories, half CSQA suites — the "1,836 task
+            // mixture" effect at miniature scale
+            if rng.chance(0.5) {
+                let cat = rng.below(MMLU_GROUPS.len());
+                (cat_token(cat), world.mmlu_value_token(cat, e1, e2))
+            } else {
+                let suite = rng.below(CSQA_SUITES.len());
+                (suite_token(suite), world.csqa_value_token(suite, e1, e2))
+            }
+        }
+    };
+    let mut prompt = vec![BOS, INSTR_BASE + template as i32];
+    if template % 2 == 1 {
+        // template variant: entities before task token
+        prompt.push(entity_token(e1));
+        prompt.push(entity_token(e2));
+        prompt.push(task_tok);
+    } else {
+        prompt.push(task_tok);
+        prompt.push(entity_token(e1));
+        prompt.push(entity_token(e2));
+    }
+    prompt.push(Q);
+    if template >= 4 {
+        prompt.push(INSTR_BASE + 8 + template as i32); // extra style token
+    }
+    prompt.push(SEP);
+    Example { prompt, answer }
+}
+
+/// A finetuning batch: fixed-shape token/target arrays; targets are -1
+/// everywhere except the answer and EOS positions.
+pub struct InstructBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+pub fn instruct_batch(
+    world: &World,
+    ds: Dataset,
+    rng: &mut Rng,
+    batch: usize,
+    seq: usize,
+) -> InstructBatch {
+    let mut tokens = vec![PAD; batch * seq];
+    let mut targets = vec![-1i32; batch * seq];
+    for b in 0..batch {
+        // pack several examples per row to use the full context
+        let mut pos = 0usize;
+        loop {
+            let ex = example(world, ds, rng);
+            let need = ex.prompt.len() + 2; // + answer + EOS
+            if pos + need > seq {
+                break;
+            }
+            let row = &mut tokens[b * seq..(b + 1) * seq];
+            let trow = &mut targets[b * seq..(b + 1) * seq];
+            row[pos..pos + ex.prompt.len()].copy_from_slice(&ex.prompt);
+            let ans_pos = pos + ex.prompt.len();
+            row[ans_pos] = ex.answer;
+            row[ans_pos + 1] = EOS;
+            // next-token targets: predict answer at SEP, EOS at answer
+            trow[ans_pos - 1] = ex.answer;
+            trow[ans_pos] = EOS;
+            pos = ans_pos + 2;
+        }
+    }
+    InstructBatch { tokens, targets }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpaca_single_template() {
+        let w = World::new(1);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let ex = example(&w, Dataset::AlpacaSyn, &mut rng);
+            assert_eq!(ex.prompt[1], INSTR_BASE);
+            assert_eq!(*ex.prompt.last().unwrap(), SEP);
+        }
+    }
+
+    #[test]
+    fn flan_uses_many_templates() {
+        let w = World::new(2);
+        let mut rng = Rng::new(2);
+        let templates: std::collections::HashSet<i32> = (0..200)
+            .map(|_| example(&w, Dataset::FlanSyn, &mut rng).prompt[1])
+            .collect();
+        assert!(templates.len() >= 6, "flan should mix templates: {templates:?}");
+    }
+
+    #[test]
+    fn batch_masks_prompts() {
+        let w = World::new(3);
+        let mut rng = Rng::new(3);
+        let b = instruct_batch(&w, Dataset::AlpacaSyn, &mut rng, 4, 64);
+        assert_eq!(b.tokens.len(), 256);
+        // masked positions strictly outnumber supervised ones
+        let masked = b.targets.iter().filter(|&&t| t == -1).count();
+        let supervised = b.targets.iter().filter(|&&t| t >= 0).count();
+        assert!(supervised > 0);
+        assert!(masked > supervised);
+        // every supervised target is a value token or EOS
+        for &t in b.targets.iter().filter(|&&t| t >= 0) {
+            assert!(
+                t == EOS || (t >= VALUE_BASE && t < VALUE_BASE + N_VALUES as i32),
+                "target {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn answers_match_world_facts() {
+        let w = World::new(4);
+        let mut rng = Rng::new(4);
+        let ex = example(&w, Dataset::AlpacaSyn, &mut rng);
+        // reconstruct (cat, e1, e2) from prompt (template 0 order)
+        let cat = (ex.prompt[2] - CAT_BASE) as usize;
+        let e1 = (ex.prompt[3] - ENTITY_BASE) as u32;
+        let e2 = (ex.prompt[4] - ENTITY_BASE) as u32;
+        assert_eq!(ex.answer, w.mmlu_value_token(cat, e1, e2));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let w = World::new(5);
+        let b1 = instruct_batch(&w, Dataset::FlanSyn, &mut Rng::new(9), 2, 48);
+        let b2 = instruct_batch(&w, Dataset::FlanSyn, &mut Rng::new(9), 2, 48);
+        assert_eq!(b1.tokens, b2.tokens);
+        assert_eq!(b1.targets, b2.targets);
+    }
+}

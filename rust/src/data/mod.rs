@@ -1,0 +1,194 @@
+//! Synthetic data substrate — the substitution for Alpaca / Flan v2 /
+//! MMLU / CommonsenseQA (see DESIGN.md §2).
+//!
+//! A deterministic "relational world" maps (category, entity-pair)
+//! triples to value tokens via seeded hashing. Pair facts put the base
+//! model in a capacity-limited regime (~8K facts, see [`N_E2`]), so
+//! knowledge is partial and *graded* — quantization noise measurably
+//! erases marginal facts instead of leaving a saturated benchmark. Pre-training sees facts stated as
+//! sentences; instruction finetuning sees the same facts in QA format;
+//! evaluation asks multiple-choice questions about held-out entities.
+//! Because facts are stored in the base model's weights, quantization
+//! that loses weight information measurably loses facts — which is
+//! exactly the degradation ICQ/IEC are designed to mitigate.
+//!
+//! Vocabulary layout (512 tokens):
+//! ```text
+//! 0 PAD | 1 BOS | 2 EOS | 3 SEP | 4 Q
+//! 8..16    category tokens (4 MMLU groups + 4 spare)
+//! 16..32   CSQA suite tokens
+//! 32..64   instruction-template tokens
+//! 64..320  entity tokens (256)
+//! 320..448 value tokens (128)
+//! 448..512 filler tokens
+//! ```
+
+pub mod corpus;
+pub mod evalset;
+pub mod instruct;
+
+use crate::util::rng::splitmix64;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const Q: i32 = 4;
+
+pub const CAT_BASE: i32 = 8;
+pub const SUITE_BASE: i32 = 16;
+pub const INSTR_BASE: i32 = 32;
+pub const ENTITY_BASE: i32 = 64;
+pub const N_ENTITIES: usize = 256;
+/// Second-slot entity range (facts are (cat, e1, e2) with e2 < N_E2).
+/// 2 gives 4·256·2 = 2,048 facts — calibrated so a NanoLLaMA base
+/// reaches high-but-fragile knowledge within ~1K pretraining steps,
+/// the regime where low-bit weight corruption measurably erases facts
+/// (random associative triples are slow to memorize; see
+/// EXPERIMENTS.md §Calibration for the sweep that picked this).
+pub const N_E2: usize = 2;
+pub const VALUE_BASE: i32 = 320;
+pub const N_VALUES: usize = 128;
+pub const FILLER_BASE: i32 = 448;
+pub const VOCAB: usize = 512;
+
+/// The four MMLU category groups and their value-space sizes (the
+/// difficulty knob: more candidate values = harder category, mirroring
+/// the Hums/STEM/Social/Other accuracy spread in the paper's tables).
+pub const MMLU_GROUPS: [(&str, usize); 4] = [
+    ("Hums.", 48),
+    ("STEM", 64),
+    ("Social", 32),
+    ("Other", 24),
+];
+
+/// The seven CommonsenseQA-analog suites: (name, value-space, #choices).
+pub const CSQA_SUITES: [(&str, usize, usize); 7] = [
+    ("HellaSwag", 48, 4),
+    ("PIQA", 24, 2),
+    ("WinoGrande", 28, 2),
+    ("ARC-e", 24, 4),
+    ("ARC-c", 56, 4),
+    ("BoolQ", 16, 2),
+    ("OBQA", 40, 4),
+];
+
+/// A deterministic relational world.
+#[derive(Clone, Copy, Debug)]
+pub struct World {
+    pub seed: u64,
+}
+
+impl World {
+    pub fn new(seed: u64) -> World {
+        World { seed }
+    }
+
+    /// The ground-truth value index for (relation, e1, e2), uniform in
+    /// [0, space). `relation` namespaces MMLU categories (0..4) and
+    /// CSQA suites (16..23). e1 ranges over all entities, e2 over the
+    /// first [`N_E2`] (the capacity-limit knob).
+    pub fn value_of(&self, relation: u32, e1: u32, e2: u32, space: usize) -> u32 {
+        let mut s = self.seed
+            ^ ((relation as u64) << 48)
+            ^ (e1 as u64).wrapping_mul(0x9E37_79B9)
+            ^ (e2 as u64).wrapping_mul(0xC2B2_AE3D);
+        (splitmix64(&mut s) % space as u64) as u32
+    }
+
+    /// Value token for an MMLU category fact.
+    pub fn mmlu_value_token(&self, cat: usize, e1: u32, e2: u32) -> i32 {
+        let space = MMLU_GROUPS[cat].1;
+        VALUE_BASE + self.value_of(cat as u32, e1, e2, space) as i32
+    }
+
+    /// Value token for a CSQA suite fact.
+    pub fn csqa_value_token(&self, suite: usize, e1: u32, e2: u32) -> i32 {
+        let space = CSQA_SUITES[suite].1;
+        VALUE_BASE + self.value_of(16 + suite as u32, e1, e2, space) as i32
+    }
+}
+
+pub fn cat_token(cat: usize) -> i32 {
+    CAT_BASE + cat as i32
+}
+
+pub fn suite_token(suite: usize) -> i32 {
+    SUITE_BASE + suite as i32
+}
+
+pub fn entity_token(e: u32) -> i32 {
+    ENTITY_BASE + e as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_ranges_disjoint() {
+        assert!(CAT_BASE >= 8 && (CAT_BASE + 8) <= SUITE_BASE);
+        assert!(SUITE_BASE + 7 < INSTR_BASE);
+        assert!(INSTR_BASE + 32 <= ENTITY_BASE);
+        assert!(ENTITY_BASE + N_ENTITIES as i32 <= VALUE_BASE);
+        assert!(VALUE_BASE + N_VALUES as i32 <= FILLER_BASE);
+        assert!(FILLER_BASE < VOCAB as i32);
+    }
+
+    #[test]
+    fn world_is_deterministic() {
+        let w1 = World::new(42);
+        let w2 = World::new(42);
+        for e in 0..50 {
+            for c in 0..4 {
+                assert_eq!(w1.mmlu_value_token(c, e, e % 7), w2.mmlu_value_token(c, e, e % 7));
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let w1 = World::new(1);
+        let w2 = World::new(2);
+        let diff = (0..100)
+            .filter(|&e| w1.mmlu_value_token(0, e, 3) != w2.mmlu_value_token(0, e, 3))
+            .count();
+        assert!(diff > 50);
+    }
+
+    #[test]
+    fn values_span_space() {
+        let w = World::new(7);
+        let space = MMLU_GROUPS[1].1;
+        let mut seen = std::collections::HashSet::new();
+        for e in 0..1000u32 {
+            let v = w.value_of(1, e, e % N_E2 as u32, space);
+            assert!((v as usize) < space);
+            seen.insert(v);
+        }
+        assert!(seen.len() > space * 3 / 4, "values should cover the space");
+    }
+
+    #[test]
+    fn both_pair_slots_matter() {
+        let w = World::new(8);
+        let d1 = (0..200u32)
+            .filter(|&e| w.mmlu_value_token(0, e, 0) != w.mmlu_value_token(0, e, 1))
+            .count();
+        let d2 = (0..200u32)
+            .filter(|&e| w.mmlu_value_token(0, 0, e % N_E2 as u32) != w.mmlu_value_token(0, 1, e % N_E2 as u32))
+            .count();
+        assert!(d1 > 100 && d2 > 100);
+    }
+
+    #[test]
+    fn value_tokens_in_range() {
+        let w = World::new(9);
+        for s in 0..7 {
+            for e in 0..100 {
+                let t = w.csqa_value_token(s, e, e % N_E2 as u32);
+                assert!(t >= VALUE_BASE && t < VALUE_BASE + N_VALUES as i32);
+            }
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! # IR-QLoRA
+//!
+//! Reproduction of *"Accurate LoRA-Finetuning Quantization of LLMs via
+//! Information Retention"* (ICML 2024) as a three-layer Rust + JAX +
+//! Pallas system. See `DESIGN.md` for the architecture and the
+//! per-experiment index.
+//!
+//! Layer map:
+//! - [`quant`] + [`lora`] — the paper's contribution (ICQ, IEC) and all
+//!   baselines, in Rust;
+//! - [`model`] / [`data`] — NanoLLaMA substrate and synthetic corpora;
+//! - [`runtime`] — PJRT loader/executor for the AOT HLO artifacts;
+//! - [`coordinator`] — quantize → finetune → evaluate → serve pipeline;
+//! - [`tables`] — paper-format table/figure regeneration.
+
+pub mod util;
+pub mod quant;
+pub mod lora;
+pub mod model;
+pub mod data;
+pub mod coordinator;
+
+pub use util::{Rng, Tensor};
+pub mod runtime;
+pub mod tables;
+pub mod bench_harness;

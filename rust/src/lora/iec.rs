@@ -1,0 +1,242 @@
+//! Information Elastic Connection — paper §3.3, Eq. 12–14.
+//!
+//! IEC adds parameter-free elastic skip paths around both LoRA
+//! matrices so each sub-unit can see the *original* representation,
+//! not only the transformed one:
+//!
+//! - `U1(x) = x·ℓ1 + β1 · tile_{r/g}( groupavg_g(x) )` where
+//!   g = gcd(h, r): the h-dim input is partitioned into g groups of
+//!   h/g, averaged within each group (the paper's (g/h)·Σ term), and
+//!   the g-dim result is repeat-concatenated to dimension r.
+//! - `U2(x') = x'·ℓ2 + β2 · tile_{o/g'}( groupavg_{g'}(x') )` with
+//!   g' = gcd(o, r); when r | o this degenerates to plain repetition
+//!   of x' (Eq. 14).
+//!
+//! β1/β2 are layerwise learnable scalars (2 params per layer — the
+//! whole storage cost of IEC, Table 6).
+
+/// Greatest common divisor.
+pub fn gcd(a: usize, b: usize) -> usize {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Group-average a `dim_in`-vector into `groups` equal segments
+/// (average within each segment), then tile the result to `dim_out`.
+/// Requires groups | dim_in and groups | dim_out.
+pub fn groupavg_tile(x: &[f32], groups: usize, dim_out: usize) -> Vec<f32> {
+    let dim_in = x.len();
+    assert!(groups > 0 && dim_in % groups == 0 && dim_out % groups == 0,
+        "groupavg_tile: dim_in={dim_in} groups={groups} dim_out={dim_out}");
+    let seg = dim_in / groups;
+    let scale = 1.0 / seg as f32;
+    let mut pooled = vec![0f32; groups];
+    for (g, p) in pooled.iter_mut().enumerate() {
+        let mut s = 0.0;
+        for &v in &x[g * seg..(g + 1) * seg] {
+            s += v;
+        }
+        *p = s * scale;
+    }
+    let reps = dim_out / groups;
+    let mut out = Vec::with_capacity(dim_out);
+    for _ in 0..reps {
+        out.extend_from_slice(&pooled);
+    }
+    out
+}
+
+/// The parameter-free term of U1 (Eq. 12): dim h -> dim r.
+pub fn u1_elastic(x: &[f32], r: usize) -> Vec<f32> {
+    let h = x.len();
+    groupavg_tile(x, gcd(h, r), r)
+}
+
+/// The parameter-free term of U2 (Eq. 13): dim r -> dim o.
+pub fn u2_elastic(xp: &[f32], o: usize) -> Vec<f32> {
+    let r = xp.len();
+    groupavg_tile(xp, gcd(o, r), o)
+}
+
+/// Full IEC LoRA forward for a single example (Eq. 15):
+/// `out = α · U2(U1(x))`, with the elastic terms gated by masks
+/// (m1, m2) so one code path serves Vanilla/(U1)/(U2)/full ablations.
+///
+/// `l1` is (h×r) row-major, `l2` is (r×o) row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn lora_iec_forward(
+    x: &[f32],
+    l1: &[f32],
+    l2: &[f32],
+    r: usize,
+    o: usize,
+    alpha: f32,
+    beta1: f32,
+    beta2: f32,
+    m1: f32,
+    m2: f32,
+) -> Vec<f32> {
+    let h = x.len();
+    assert_eq!(l1.len(), h * r, "l1 must be h x r");
+    assert_eq!(l2.len(), r * o, "l2 must be r x o");
+
+    // U1
+    let mut xp = vec![0f32; r];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &l1[i * r..(i + 1) * r];
+        for j in 0..r {
+            xp[j] += xi * row[j];
+        }
+    }
+    if m1 != 0.0 && beta1 != 0.0 {
+        let el = u1_elastic(x, r);
+        for j in 0..r {
+            xp[j] += m1 * beta1 * el[j];
+        }
+    }
+
+    // U2
+    let mut y = vec![0f32; o];
+    for (i, &xi) in xp.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &l2[i * o..(i + 1) * o];
+        for j in 0..o {
+            y[j] += xi * row[j];
+        }
+    }
+    if m2 != 0.0 && beta2 != 0.0 {
+        let el = u2_elastic(&xp, o);
+        for j in 0..o {
+            y[j] += m2 * beta2 * el[j];
+        }
+    }
+
+    for v in &mut y {
+        *v *= alpha;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gcd_basic() {
+        assert_eq!(gcd(4096, 64), 64);
+        assert_eq!(gcd(64, 4096), 64);
+        assert_eq!(gcd(7, 3), 1);
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(5, 0), 5);
+    }
+
+    #[test]
+    fn u1_simplified_case() {
+        // r | h: per Eq. 14, output j is the mean of segment j of size h/r
+        let h = 8;
+        let r = 4;
+        let x: Vec<f32> = (0..h).map(|i| i as f32).collect();
+        let e = u1_elastic(&x, r);
+        assert_eq!(e.len(), r);
+        assert_eq!(e, vec![0.5, 2.5, 4.5, 6.5]);
+    }
+
+    #[test]
+    fn u2_simplified_case() {
+        // r | o: plain repetition of x'
+        let xp = vec![1.0f32, 2.0, 3.0, 4.0];
+        let e = u2_elastic(&xp, 8);
+        assert_eq!(e, vec![1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn non_multiple_dims_use_gcd() {
+        // h=6, r=4 -> g=2: pool to 2 groups of 3, tile twice
+        let x = vec![1.0f32, 2.0, 3.0, 10.0, 11.0, 12.0];
+        let e = u1_elastic(&x, 4);
+        assert_eq!(e, vec![2.0, 11.0, 2.0, 11.0]);
+        // o=6, r=4 -> g=2: pool x' (len 4) into 2 groups of 2, tile 3x
+        let xp = vec![1.0f32, 3.0, 5.0, 7.0];
+        let e2 = u2_elastic(&xp, 6);
+        assert_eq!(e2, vec![2.0, 6.0, 2.0, 6.0, 2.0, 6.0]);
+    }
+
+    #[test]
+    fn mean_preserving() {
+        // group-averaging + tiling preserves the global mean
+        let mut rng = Rng::new(61);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let e = u1_elastic(&x, 16);
+        let m_in: f32 = x.iter().sum::<f32>() / 64.0;
+        let m_out: f32 = e.iter().sum::<f32>() / 16.0;
+        assert!((m_in - m_out).abs() < 1e-5);
+    }
+
+    #[test]
+    fn masks_gate_elastic_terms() {
+        let mut rng = Rng::new(62);
+        let (h, r, o) = (16, 4, 8);
+        let x = rng.normal_vec(h, 0.0, 1.0);
+        let l1 = rng.normal_vec(h * r, 0.0, 0.1);
+        let l2 = rng.normal_vec(r * o, 0.0, 0.1);
+        let vanilla = lora_iec_forward(&x, &l1, &l2, r, o, 1.0, 0.5, 0.5, 0.0, 0.0);
+        let full = lora_iec_forward(&x, &l1, &l2, r, o, 1.0, 0.5, 0.5, 1.0, 1.0);
+        assert_ne!(vanilla, full);
+        // beta = 0 equals masked-off
+        let beta0 = lora_iec_forward(&x, &l1, &l2, r, o, 1.0, 0.0, 0.0, 1.0, 1.0);
+        for (a, b) in vanilla.iter().zip(&beta0) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn vanilla_matches_plain_lora() {
+        let mut rng = Rng::new(63);
+        let (h, r, o) = (12, 3, 6);
+        let x = rng.normal_vec(h, 0.0, 1.0);
+        let l1 = rng.normal_vec(h * r, 0.0, 0.2);
+        let l2 = rng.normal_vec(r * o, 0.0, 0.2);
+        let got = lora_iec_forward(&x, &l1, &l2, r, o, 2.0, 0.7, 0.7, 0.0, 0.0);
+        // oracle: alpha * x l1 l2
+        let mut xp = vec![0f32; r];
+        for i in 0..h {
+            for j in 0..r {
+                xp[j] += x[i] * l1[i * r + j];
+            }
+        }
+        let mut want = vec![0f32; o];
+        for i in 0..r {
+            for j in 0..o {
+                want[j] += xp[i] * l2[i * o + j];
+            }
+        }
+        for (g, w) in got.iter().zip(want.iter().map(|v| v * 2.0)) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn paper_dims_shape_check() {
+        // the paper's running example: h=o=4096, r=64
+        let mut rng = Rng::new(64);
+        let x = rng.normal_vec(4096, 0.0, 1.0);
+        let e1 = u1_elastic(&x, 64);
+        assert_eq!(e1.len(), 64);
+        let e2 = u2_elastic(&e1, 4096);
+        assert_eq!(e2.len(), 4096);
+        // e2 is 64 copies of e1
+        assert_eq!(&e2[0..64], &e1[..]);
+        assert_eq!(&e2[4032..4096], &e1[..]);
+    }
+}

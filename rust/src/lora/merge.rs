@@ -1,0 +1,140 @@
+//! Merging IEC into the LoRA matrices — paper Appendix A.2, Eq. 16/17.
+//!
+//! The elastic terms are linear in the input, so β1/β2 fold into the
+//! adapter weights and serving runs plain LoRA matmuls — IEC costs
+//! nothing at inference (the property Table 6 relies on).
+//!
+//! Note on Eq. 16: taken literally, its floor-based index condition
+//! places the pooled groups in *block-repeat* order
+//! (p₀…p₀ p₁…p₁ …), while Eq. 13/14 and Algorithm 2 define the
+//! elastic term as *repeated concatenation* (tile) of the pooled
+//! vector (p₀ p₁ … p₀ p₁ …). The two differ by a fixed output
+//! permutation of the elastic term only; since the forward pass
+//! follows Eq. 13/14 (see [`super::iec`]), the merge here uses the
+//! tile-consistent condition `group(i) == j mod g` so that
+//! x·ℓ̃1·ℓ̃2 == U2(U1(x)) holds exactly (the property Eq. 17 asserts).
+
+use super::iec::gcd;
+
+/// Merge β1 into ℓ1 (h×r row-major): ℓ̃1[i,j] = ℓ1[i,j] + β1·g/h
+/// where floor(i/(h/g)) == j mod g, g = gcd(h, r).
+pub fn merge_l1(l1: &[f32], h: usize, r: usize, beta1: f32) -> Vec<f32> {
+    assert_eq!(l1.len(), h * r);
+    let g = gcd(h, r);
+    let seg_i = h / g; // input rows per pooled group
+    let add = beta1 * g as f32 / h as f32; // = beta1 / seg_i
+    let mut out = l1.to_vec();
+    for i in 0..h {
+        let gi = i / seg_i;
+        for j in 0..r {
+            if j % g == gi {
+                out[i * r + j] += add;
+            }
+        }
+    }
+    out
+}
+
+/// Merge β2 into ℓ2 (r×o row-major): ℓ̃2[i,j] = ℓ2[i,j] + β2·g/r
+/// where floor(i/(r/g)) == j mod g, g = gcd(o, r).
+pub fn merge_l2(l2: &[f32], r: usize, o: usize, beta2: f32) -> Vec<f32> {
+    assert_eq!(l2.len(), r * o);
+    let g = gcd(o, r);
+    let seg_i = r / g;
+    let add = beta2 * g as f32 / r as f32;
+    let mut out = l2.to_vec();
+    for i in 0..r {
+        let gi = i / seg_i;
+        for j in 0..o {
+            if j % g == gi {
+                out[i * o + j] += add;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lora::iec::lora_iec_forward;
+    use crate::util::Rng;
+
+    /// Merged adapters must reproduce the explicit elastic computation
+    /// exactly (Eq. 17): x·ℓ̃1·ℓ̃2 == U2(U1(x)).
+    fn check_equivalence(h: usize, r: usize, o: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let x = rng.normal_vec(h, 0.0, 1.0);
+        let l1 = rng.normal_vec(h * r, 0.0, 0.15);
+        let l2 = rng.normal_vec(r * o, 0.0, 0.15);
+        let (b1, b2) = (rng.normal(), rng.normal());
+
+        let explicit = lora_iec_forward(&x, &l1, &l2, r, o, 1.0, b1, b2, 1.0, 1.0);
+
+        let m1 = merge_l1(&l1, h, r, b1);
+        let m2 = merge_l2(&l2, r, o, b2);
+        let merged = lora_iec_forward(&x, &m1, &m2, r, o, 1.0, 0.0, 0.0, 0.0, 0.0);
+
+        for (a, b) in explicit.iter().zip(&merged) {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                "h={h} r={r} o={o}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equivalence_multiple_dims() {
+        check_equivalence(16, 4, 8, 71); // r | h, r | o
+        check_equivalence(64, 8, 64, 72);
+        check_equivalence(128, 16, 32, 73);
+    }
+
+    #[test]
+    fn merge_equivalence_non_multiple_dims() {
+        check_equivalence(12, 8, 20, 74); // gcd(12,8)=4, gcd(20,8)=4
+        check_equivalence(18, 12, 30, 75); // gcd=6
+    }
+
+    #[test]
+    fn merge_equivalence_paper_dims() {
+        check_equivalence(128, 64, 128, 77); // shrunk 4096/64/4096 shape
+    }
+
+    #[test]
+    fn merge_zero_beta_is_identity() {
+        let mut rng = Rng::new(76);
+        let l1 = rng.normal_vec(32 * 4, 0.0, 1.0);
+        assert_eq!(merge_l1(&l1, 32, 4, 0.0), l1);
+        let l2 = rng.normal_vec(4 * 16, 0.0, 1.0);
+        assert_eq!(merge_l2(&l2, 4, 16, 0.0), l2);
+    }
+
+    #[test]
+    fn merged_l1_structure() {
+        // zero l1: column j reads the mean of input segment (j mod g)
+        let (h, r) = (8usize, 4usize);
+        let m = merge_l1(&vec![0.0; h * r], h, r, 1.0);
+        let g = gcd(h, r); // 4
+        let add = g as f32 / h as f32; // 0.5
+        for i in 0..h {
+            for j in 0..r {
+                let want = if j % g == i / (h / g) { add } else { 0.0 };
+                assert_eq!(m[i * r + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn merged_l2_tile_structure() {
+        // r | o, zero l2: out = x' tiled o/r times => m[i,j]=β iff i == j mod r
+        let (r, o) = (2usize, 6usize);
+        let m = merge_l2(&vec![0.0; r * o], r, o, 1.0);
+        for i in 0..r {
+            for j in 0..o {
+                let want = if j % r == i { 1.0 } else { 0.0 };
+                assert_eq!(m[i * o + j], want, "({i},{j})");
+            }
+        }
+    }
+}

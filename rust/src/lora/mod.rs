@@ -1,0 +1,116 @@
+//! LoRA adapters with Information Elastic Connection (paper §3.3).
+//!
+//! - [`iec`]: the elastic transforms U1/U2 (Eq. 12–14) and the gated
+//!   forward used by the ablation arms;
+//! - [`merge`]: folding β1/β2 into ℓ̃1/ℓ̃2 for zero-cost inference
+//!   (Eq. 16/17).
+//!
+//! [`LoraAdapter`] is the host-side state for one adapted projection;
+//! the actual finetuning math runs inside the AOT train-step graph —
+//! this struct is what the coordinator initializes, checkpoints, and
+//! uploads as device buffers.
+
+pub mod iec;
+pub mod merge;
+
+use crate::util::Rng;
+
+/// Host-side LoRA + IEC state for one linear projection (h → o).
+#[derive(Clone, Debug)]
+pub struct LoraAdapter {
+    pub h: usize,
+    pub o: usize,
+    pub r: usize,
+    /// ℓ1, h×r row-major. Kaiming-ish init.
+    pub l1: Vec<f32>,
+    /// ℓ2, r×o row-major. Zero init (standard LoRA).
+    pub l2: Vec<f32>,
+    /// Scaling α (paper default 16).
+    pub alpha: f32,
+    /// IEC layerwise scalars (learnable; init 0 so finetuning starts
+    /// exactly at the vanilla-LoRA function).
+    pub beta1: f32,
+    pub beta2: f32,
+}
+
+impl LoraAdapter {
+    /// Standard initialization: ℓ1 ~ N(0, 1/r), ℓ2 = 0, β = 0.
+    pub fn init(h: usize, o: usize, r: usize, alpha: f32, rng: &mut Rng) -> LoraAdapter {
+        let std = 1.0 / (r as f32).sqrt();
+        LoraAdapter {
+            h,
+            o,
+            r,
+            l1: rng.normal_vec(h * r, 0.0, std),
+            l2: vec![0.0; r * o],
+            alpha,
+            beta1: 0.0,
+            beta2: 0.0,
+        }
+    }
+
+    /// Trainable parameter count (the paper's efficiency argument:
+    /// IEC adds exactly 2 scalars per adapted projection).
+    pub fn n_params(&self) -> usize {
+        self.h * self.r + self.r * self.o + 2
+    }
+
+    /// Forward for a single example, with IEC gating masks.
+    pub fn forward(&self, x: &[f32], m1: f32, m2: f32) -> Vec<f32> {
+        iec::lora_iec_forward(
+            x, &self.l1, &self.l2, self.r, self.o, self.alpha, self.beta1, self.beta2,
+            m1, m2,
+        )
+    }
+
+    /// Produce inference-time merged matrices (ℓ̃1, ℓ̃2): IEC folded in.
+    pub fn merged(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            merge::merge_l1(&self.l1, self.h, self.r, self.beta1),
+            merge::merge_l2(&self.l2, self.r, self.o, self.beta2),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_and_zero_output() {
+        let mut rng = Rng::new(81);
+        let a = LoraAdapter::init(32, 16, 4, 16.0, &mut rng);
+        assert_eq!(a.l1.len(), 128);
+        assert_eq!(a.l2.len(), 64);
+        // l2 = 0 and beta = 0 => adapter output is exactly zero at init
+        let x = rng.normal_vec(32, 0.0, 1.0);
+        let y = a.forward(&x, 1.0, 1.0);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn param_count() {
+        let mut rng = Rng::new(82);
+        let a = LoraAdapter::init(64, 32, 8, 16.0, &mut rng);
+        assert_eq!(a.n_params(), 64 * 8 + 8 * 32 + 2);
+    }
+
+    #[test]
+    fn merged_equals_forward_after_training_sim() {
+        let mut rng = Rng::new(83);
+        let mut a = LoraAdapter::init(24, 12, 6, 16.0, &mut rng);
+        // simulate finetuned state
+        a.l2 = rng.normal_vec(6 * 12, 0.0, 0.1);
+        a.beta1 = 0.4;
+        a.beta2 = -0.3;
+        let x = rng.normal_vec(24, 0.0, 1.0);
+        let explicit = a.forward(&x, 1.0, 1.0);
+        let (m1, m2) = a.merged();
+        let merged = iec::lora_iec_forward(
+            &x, &m1, &m2, a.r, a.o, a.alpha, 0.0, 0.0, 0.0, 0.0,
+        );
+        for (e, m) in explicit.iter().zip(&merged) {
+            assert!((e - m).abs() < 1e-4, "{e} vs {m}");
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! irqlora — CLI for the IR-QLoRA reproduction.
+//!
+//! ```text
+//! irqlora pretrain --size s [--steps N]        pretrain + cache a base model
+//! irqlora quantize --size s --method ir-qlora  quantize + report entropy/storage
+//! irqlora finetune --size s --arm ir-qlora     full arm: quantize + LoRA finetune + eval
+//! irqlora table <1|2|3|4|5|6|7|8|9|10|11>      regenerate a paper table
+//! irqlora figure <4|5>                         regenerate a paper figure
+//! irqlora all                                  every table + figure
+//! ```
+//! Global flags: --sizes xs,s  --pretrain-steps N  --finetune-steps N
+//!               --eval-per-group N  --seed N  --full (paper-scale settings)
+
+use anyhow::{bail, Context, Result};
+
+use irqlora::coordinator::{pretrained_base, run_arm, Arm, RunCfg};
+use irqlora::data::evalset::mmlu_set;
+use irqlora::data::instruct::Dataset;
+use irqlora::data::World;
+use irqlora::runtime::{Manifest, Runtime};
+use irqlora::tables;
+
+struct Cli {
+    cmd: String,
+    arg: Option<String>,
+    sizes: Vec<String>,
+    cfg: RunCfg,
+    method: String,
+    bits: u8,
+    full: bool,
+}
+
+fn parse_args() -> Result<Cli> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        bail!(USAGE);
+    }
+    let cmd = args[0].clone();
+    let mut arg = None;
+    let mut sizes = vec!["xs".to_string()];
+    let mut cfg = RunCfg::default();
+    let mut method = "ir-qlora".to_string();
+    let mut bits = 4u8;
+    let mut full = false;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--size" | "--sizes" => {
+                i += 1;
+                sizes = args
+                    .get(i)
+                    .context("--sizes needs a value")?
+                    .split(',')
+                    .map(String::from)
+                    .collect();
+            }
+            "--pretrain-steps" => {
+                i += 1;
+                cfg.pretrain_steps = args.get(i).context("value")?.parse()?;
+            }
+            "--finetune-steps" | "--steps" => {
+                i += 1;
+                cfg.finetune_steps = args.get(i).context("value")?.parse()?;
+            }
+            "--eval-per-group" => {
+                i += 1;
+                cfg.eval_per_group = args.get(i).context("value")?.parse()?;
+            }
+            "--seed" => {
+                i += 1;
+                cfg.seed = args.get(i).context("value")?.parse()?;
+            }
+            "--method" | "--arm" => {
+                i += 1;
+                method = args.get(i).context("value")?.clone();
+            }
+            "--bits" => {
+                i += 1;
+                bits = args.get(i).context("value")?.parse()?;
+            }
+            "--full" => {
+                full = true;
+            }
+            s if arg.is_none() && !s.starts_with("--") => arg = Some(s.to_string()),
+            s => bail!("unknown flag {s}\n{USAGE}"),
+        }
+        i += 1;
+    }
+    if full {
+        cfg.pretrain_steps = cfg.pretrain_steps.max(800);
+        cfg.finetune_steps = cfg.finetune_steps.max(200);
+        cfg.eval_per_group = cfg.eval_per_group.max(150);
+    }
+    Ok(Cli { cmd, arg, sizes, cfg, method, bits, full })
+}
+
+const USAGE: &str = "usage: irqlora <pretrain|quantize|finetune|table N|figure N|all> \
+[--sizes xs,s] [--pretrain-steps N] [--finetune-steps N] [--eval-per-group N] \
+[--seed N] [--method ARM] [--bits K] [--full]";
+
+fn arm_by_name(name: &str, k: u8) -> Result<Arm> {
+    Ok(match name {
+        "16-bit" | "fp16" => Arm::fp16(),
+        "normalfloat" | "nf" => Arm::normalfloat(k),
+        "qlora" => Arm::qlora(k),
+        "qlora-gptq" | "gptq" => Arm::qlora_gptq(k),
+        "qa-lora" | "qalora" => Arm::qalora(k),
+        "ir-qlora" | "irqlora" => Arm::ir_qlora(k),
+        "icq" => Arm::icq_only(k),
+        "iec" => Arm::iec_only(k),
+        "iec-u1" => Arm::iec_u1(k),
+        "iec-u2" => Arm::iec_u2(k),
+        "ir-qlora-int" => Arm::ir_qlora_int(k),
+        _ => bail!("unknown arm '{name}'"),
+    })
+}
+
+fn main() -> Result<()> {
+    init_logger();
+    let cli = parse_args()?;
+    let sizes: Vec<&str> = cli.sizes.iter().map(String::as_str).collect();
+
+    if cli.cmd == "table" && cli.arg.as_deref() == Some("11") {
+        tables::table_codebooks();
+        return Ok(());
+    }
+
+    let manifest = Manifest::load("artifacts").context(
+        "loading artifacts/manifest.json (run `make artifacts` first)",
+    )?;
+    let rt = Runtime::cpu()?;
+    log::info!("PJRT platform: {}", rt.platform());
+
+    match cli.cmd.as_str() {
+        "pretrain" => {
+            for tag in &sizes {
+                let base = pretrained_base(&rt, &manifest, tag, &cli.cfg)?;
+                println!(
+                    "pretrained nano-{tag}: {} params cached under runs/",
+                    base.total_params()
+                );
+            }
+        }
+        "quantize" => {
+            let arm = arm_by_name(&cli.method, cli.bits)?;
+            for tag in &sizes {
+                let base = pretrained_base(&rt, &manifest, tag, &cli.cfg)?;
+                let q = irqlora::coordinator::quantize_model(&base, arm.method, cli.cfg.seed)?;
+                println!(
+                    "nano-{tag} {} -> {:.2} MB, mean entropy {:.3} bits, {:?}",
+                    arm.method.paper_name(),
+                    q.storage_mb(),
+                    q.mean_entropy(),
+                    q.elapsed
+                );
+            }
+        }
+        "finetune" => {
+            let arm = arm_by_name(&cli.method, cli.bits)?;
+            let world = World::new(cli.cfg.world_seed);
+            for tag in &sizes {
+                let base = pretrained_base(&rt, &manifest, tag, &cli.cfg)?;
+                let items = mmlu_set(&world, cli.cfg.eval_per_group, cli.cfg.seed);
+                let r = run_arm(
+                    &rt, &manifest, tag, &base, arm,
+                    Dataset::AlpacaSyn, &items, &cli.cfg,
+                )?;
+                println!(
+                    "nano-{tag} {}: avg {:.1}% (finetune {:?})",
+                    arm.name,
+                    r.eval.avg_accuracy() * 100.0,
+                    r.finetune_time
+                );
+            }
+        }
+        "table" => {
+            let n: u32 = cli
+                .arg
+                .context("table needs a number (1-11)")?
+                .parse()
+                .context("table number")?;
+            match n {
+                1 => tables::table_main(&rt, &manifest, Dataset::AlpacaSyn, &sizes, &cli.cfg)?,
+                2 => tables::table_main(&rt, &manifest, Dataset::FlanSyn, &sizes, &cli.cfg)?,
+                3 => tables::table3(&rt, &manifest, &sizes, &cli.cfg)?,
+                4 => tables::table4(&rt, &manifest, sizes[0], &cli.cfg)?,
+                5 => tables::table5(&rt, &manifest, sizes[0], &cli.cfg)?,
+                6 | 7 | 15 => tables::table6_7(&rt, &manifest, &sizes, &cli.cfg)?,
+                8 => tables::table8(&rt, &manifest, sizes[0], &cli.cfg)?,
+                9 => tables::table9(&rt, &manifest, sizes[0], &cli.cfg)?,
+                10 => tables::table10(&rt, &manifest, sizes[0], &cli.cfg)?,
+                _ => bail!("unknown table {n}"),
+            }
+        }
+        "figure" => {
+            let n: u32 = cli.arg.context("figure needs 4 or 5")?.parse()?;
+            match n {
+                4 | 5 => tables::figures_4_5(&rt, &manifest, sizes[0], &cli.cfg)?,
+                _ => bail!("unknown figure {n}"),
+            }
+        }
+        "all" => {
+            let _ = cli.full;
+            tables::table_codebooks();
+            tables::table_main(&rt, &manifest, Dataset::AlpacaSyn, &sizes, &cli.cfg)?;
+            tables::table_main(&rt, &manifest, Dataset::FlanSyn, &sizes, &cli.cfg)?;
+            tables::table3(&rt, &manifest, &sizes[..1], &cli.cfg)?;
+            tables::table4(&rt, &manifest, sizes[0], &cli.cfg)?;
+            tables::table5(&rt, &manifest, sizes[0], &cli.cfg)?;
+            tables::table6_7(&rt, &manifest, &sizes, &cli.cfg)?;
+            tables::table8(&rt, &manifest, sizes[0], &cli.cfg)?;
+            tables::table9(&rt, &manifest, sizes[0], &cli.cfg)?;
+            tables::table10(&rt, &manifest, sizes[0], &cli.cfg)?;
+            tables::figures_4_5(&rt, &manifest, sizes[0], &cli.cfg)?;
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+    Ok(())
+}
+
+/// Minimal env-driven logger (RUST_LOG=info|debug).
+fn init_logger() {
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, _: &log::Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &log::Record) {
+            eprintln!("[{}] {}", record.level(), record.args());
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}

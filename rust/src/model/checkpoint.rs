@@ -1,0 +1,182 @@
+//! Binary checkpoint format for [`NamedTensors`].
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "IRQC" | version u32 | count u32
+//! per tensor: name_len u32 | name bytes | rank u32 | dims u64* | f32 data
+//! trailer: crc-ish checksum u64 (FNV-1a over all tensor bytes)
+//! ```
+//! Used to cache pretrained base weights and finetuned adapters under
+//! `runs/` so the table harness doesn't re-train on every invocation.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Tensor;
+
+use super::weights::NamedTensors;
+
+const MAGIC: &[u8; 4] = b"IRQC";
+const VERSION: u32 = 1;
+
+fn fnv1a(state: u64, bytes: &[u8]) -> u64 {
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+pub fn save(nt: &NamedTensors, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(nt.len() as u32).to_le_bytes())?;
+    let mut check = 0xcbf29ce484222325u64;
+    for (name, t) in nt.iter() {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let bytes: Vec<u8> = t.data().iter().flat_map(|v| v.to_le_bytes()).collect();
+        check = fnv1a(check, &bytes);
+        f.write_all(&bytes)?;
+    }
+    f.write_all(&check.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<NamedTensors> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an IRQC checkpoint", path.display());
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    f.read_exact(&mut u32b)?;
+    let count = u32::from_le_bytes(u32b) as usize;
+
+    let mut out = NamedTensors::new();
+    let mut check = 0xcbf29ce484222325u64;
+    for _ in 0..count {
+        f.read_exact(&mut u32b)?;
+        let name_len = u32::from_le_bytes(u32b) as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("non-utf8 tensor name")?;
+        f.read_exact(&mut u32b)?;
+        let rank = u32::from_le_bytes(u32b) as usize;
+        if rank > 8 {
+            bail!("corrupt checkpoint: rank {rank}");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        let mut u64b = [0u8; 8];
+        for _ in 0..rank {
+            f.read_exact(&mut u64b)?;
+            dims.push(u64::from_le_bytes(u64b) as usize);
+        }
+        let n: usize = dims.iter().product();
+        if n > 1 << 30 {
+            bail!("corrupt checkpoint: tensor too large ({n} elems)");
+        }
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        check = fnv1a(check, &bytes);
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(name, Tensor::new(&dims, data));
+    }
+    let mut u64b = [0u8; 8];
+    f.read_exact(&mut u64b)
+        .context("truncated checkpoint (missing checksum)")?;
+    if u64::from_le_bytes(u64b) != check {
+        bail!("checkpoint checksum mismatch — file corrupt");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("irqc_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(3);
+        let mut nt = NamedTensors::new();
+        nt.push("embed", Tensor::new(&[4, 8], rng.normal_vec(32, 0.0, 1.0)));
+        nt.push("scalar", Tensor::scalar(3.25));
+        nt.push("l0.wq", Tensor::new(&[8, 8], rng.normal_vec(64, 0.0, 0.02)));
+        let p = tmp("roundtrip");
+        save(&nt, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.names(), nt.names());
+        for (name, t) in nt.iter() {
+            assert_eq!(back.get(name).unwrap(), t, "{name}");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let p = tmp("corrupt");
+        std::fs::write(&p, b"IRQC\x01\x00\x00\x00garbage").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn checksum_detects_bitflip() {
+        let mut nt = NamedTensors::new();
+        nt.push("w", Tensor::full(&[16], 1.0));
+        let p = tmp("bitflip");
+        save(&nt, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum") || err.contains("corrupt"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn missing_file_clear_error() {
+        let err = load("/nonexistent/ckpt.irqc").unwrap_err().to_string();
+        assert!(err.contains("opening checkpoint"));
+    }
+}

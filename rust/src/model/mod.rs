@@ -1,0 +1,8 @@
+//! NanoLLaMA host-side model state: named tensors, initialization,
+//! checkpoints. The actual math lives in the AOT graphs; this module
+//! owns what the coordinator uploads to them.
+
+pub mod checkpoint;
+pub mod weights;
+
+pub use weights::NamedTensors;

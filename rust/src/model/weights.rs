@@ -1,0 +1,226 @@
+//! Named tensor collections + weight initialization.
+//!
+//! The manifest's input specs define tensor names and shapes; this
+//! module materializes values for them. Initialization mirrors
+//! python/compile/model.py (GPT-2-style scaled normal, ones for norms,
+//! ℓ1 ~ N(0, 1/√r) / ℓ2 = 0 / β = 0 for LoRA) so the Rust-driven
+//! pretraining starts from the same distribution family the pytest
+//! suite validates.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::InputSpec;
+use crate::util::{Rng, Tensor};
+
+/// Ordered, name-indexed tensor collection.
+#[derive(Clone, Debug, Default)]
+pub struct NamedTensors {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl NamedTensors {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, t: Tensor) {
+        let name = name.into();
+        assert!(
+            !self.index.contains_key(&name),
+            "duplicate tensor name '{name}'"
+        );
+        self.index.insert(name.clone(), self.tensors.len());
+        self.names.push(name);
+        self.tensors.push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| anyhow!("tensor '{name}' not found"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor '{name}' not found"))?;
+        Ok(&mut self.tensors[i])
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        *self.get_mut(name)? = t;
+        Ok(())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.names.iter().map(|s| s.as_str()).zip(self.tensors.iter())
+    }
+
+    /// Tensors in push order (the manifest contract order).
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+}
+
+/// Does this base tensor get quantized? (norms / embeddings / head stay
+/// fp16 in QLoRA; only the 7 projection matrices per layer quantize.)
+pub fn is_quantized_proj(name: &str) -> bool {
+    name.starts_with('l')
+        && (name.ends_with(".wq")
+            || name.ends_with(".wk")
+            || name.ends_with(".wv")
+            || name.ends_with(".wo")
+            || name.ends_with(".w1")
+            || name.ends_with(".w3")
+            || name.ends_with(".w2"))
+}
+
+/// The projection kind ("wq".."w2") of a quantized tensor name.
+pub fn proj_kind(name: &str) -> Option<&str> {
+    name.rsplit('.').next().filter(|k| {
+        matches!(*k, "wq" | "wk" | "wv" | "wo" | "w1" | "w3" | "w2")
+    })
+}
+
+/// Initialize base weights for the given graph input specs (the first
+/// `n` specs of the pretrain graph are the base tensors).
+pub fn init_base(specs: &[InputSpec], n_layers: usize, rng: &mut Rng) -> NamedTensors {
+    let mut out = NamedTensors::new();
+    let residual_scale = 1.0 / (2.0 * n_layers as f32).sqrt();
+    for s in specs {
+        let n: usize = s.shape.iter().product();
+        let t = if s.name.ends_with("norm") {
+            Tensor::new(&s.shape, vec![1.0; n])
+        } else {
+            let mut std = 0.02f32;
+            if s.name.ends_with(".wo") || s.name.ends_with(".w2") {
+                std *= residual_scale;
+            }
+            Tensor::new(&s.shape, rng.normal_vec(n, 0.0, std))
+        };
+        out.push(s.name.clone(), t);
+    }
+    out
+}
+
+/// Initialize LoRA state for the given specs: a ~ N(0, 1/√r), b = 0,
+/// betas = 0.
+pub fn init_lora(specs: &[InputSpec], rank: usize, rng: &mut Rng) -> NamedTensors {
+    let mut out = NamedTensors::new();
+    let std = 1.0 / (rank as f32).sqrt();
+    for s in specs {
+        let n: usize = s.shape.iter().product();
+        let t = if s.name.ends_with("lora_a") {
+            Tensor::new(&s.shape, rng.normal_vec(n, 0.0, std))
+        } else {
+            Tensor::zeros(&s.shape)
+        };
+        out.push(s.name.clone(), t);
+    }
+    out
+}
+
+/// All-zeros state matching specs (Adam moments).
+pub fn zeros_like(specs: &[InputSpec]) -> NamedTensors {
+    let mut out = NamedTensors::new();
+    for s in specs {
+        out.push(s.name.clone(), Tensor::zeros(&s.shape));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Dtype;
+
+    fn spec(name: &str, shape: &[usize]) -> InputSpec {
+        InputSpec { name: name.into(), shape: shape.to_vec(), dtype: Dtype::F32 }
+    }
+
+    #[test]
+    fn named_tensors_roundtrip() {
+        let mut nt = NamedTensors::new();
+        nt.push("a", Tensor::full(&[2, 2], 1.0));
+        nt.push("b", Tensor::zeros(&[3]));
+        assert_eq!(nt.len(), 2);
+        assert_eq!(nt.get("a").unwrap().len(), 4);
+        assert!(nt.get("c").is_err());
+        nt.set("b", Tensor::full(&[3], 5.0)).unwrap();
+        assert_eq!(nt.get("b").unwrap().data(), &[5.0; 3]);
+        assert_eq!(nt.total_params(), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_names_panic() {
+        let mut nt = NamedTensors::new();
+        nt.push("a", Tensor::zeros(&[1]));
+        nt.push("a", Tensor::zeros(&[1]));
+    }
+
+    #[test]
+    fn quantized_proj_detection() {
+        assert!(is_quantized_proj("l0.wq"));
+        assert!(is_quantized_proj("l11.w2"));
+        assert!(!is_quantized_proj("embed"));
+        assert!(!is_quantized_proj("l0.attn_norm"));
+        assert!(!is_quantized_proj("lm_head"));
+        assert_eq!(proj_kind("l3.w1"), Some("w1"));
+        assert_eq!(proj_kind("final_norm"), None);
+    }
+
+    #[test]
+    fn init_base_distributions() {
+        let specs = vec![
+            spec("embed", &[64, 32]),
+            spec("l0.attn_norm", &[32]),
+            spec("l0.wq", &[32, 32]),
+            spec("l0.wo", &[32, 32]),
+        ];
+        let mut rng = Rng::new(1);
+        let w = init_base(&specs, 4, &mut rng);
+        assert!(w.get("l0.attn_norm").unwrap().data().iter().all(|&x| x == 1.0));
+        let std_q = crate::util::stats::std(w.get("l0.wq").unwrap().data());
+        let std_o = crate::util::stats::std(w.get("l0.wo").unwrap().data());
+        assert!((std_q - 0.02).abs() < 0.005, "{std_q}");
+        assert!(std_o < std_q, "residual projections scaled down");
+    }
+
+    #[test]
+    fn init_lora_structure() {
+        let specs = vec![
+            spec("l0.wq.lora_a", &[32, 8]),
+            spec("l0.wq.lora_b", &[8, 32]),
+            spec("betas", &[2, 7, 2]),
+        ];
+        let mut rng = Rng::new(2);
+        let w = init_lora(&specs, 8, &mut rng);
+        assert!(w.get("l0.wq.lora_b").unwrap().data().iter().all(|&x| x == 0.0));
+        assert!(w.get("betas").unwrap().data().iter().all(|&x| x == 0.0));
+        let std_a = crate::util::stats::std(w.get("l0.wq.lora_a").unwrap().data());
+        assert!((std_a - 1.0 / (8.0f32).sqrt()).abs() < 0.05);
+    }
+}

@@ -1,0 +1,234 @@
+//! Blockwise absmax NF-k quantization (paper Eq. 1) and bit-packing.
+//!
+//! Weights are split into contiguous blocks (default 64 elements, the
+//! paper's setting); each block is normalized by its absmax and each
+//! element mapped to the nearest NF-k level. Codes are bit-packed
+//! (2/3/4 bits per element) for storage accounting; the compute path
+//! works on unpacked `u8` codes.
+
+use super::nf;
+
+/// Paper-default quantization block size.
+pub const DEFAULT_BLOCK: usize = 64;
+
+/// A blockwise-quantized tensor (codes + one scale per block, plus an
+/// optional per-block shift τ — ICQ fills it, vanilla leaves it None).
+#[derive(Clone, Debug)]
+pub struct QuantizedBlocks {
+    /// Bit width k.
+    pub k: u8,
+    /// Block size in elements.
+    pub block: usize,
+    /// Original element count (last block may be partial).
+    pub len: usize,
+    /// Unpacked code per element (values in 0..2^k).
+    pub codes: Vec<u8>,
+    /// absmax scale per block.
+    pub scales: Vec<f32>,
+    /// Optional calibration constant per block (ICQ).
+    pub taus: Option<Vec<f32>>,
+}
+
+impl QuantizedBlocks {
+    pub fn n_blocks(&self) -> usize {
+        self.len.div_ceil(self.block)
+    }
+
+    /// Storage in bits: packed codes + one f32-equivalent scale slot per
+    /// block (double quantization shrinks the scale term further; see
+    /// `double_quant::storage_bits`).
+    pub fn packed_code_bits(&self) -> usize {
+        self.len * self.k as usize
+    }
+}
+
+/// Quantize `w` blockwise with the NF-k codebook. `taus[i]` (if given)
+/// is subtracted from block i before normalization (ICQ, Eq. 8).
+pub fn quantize(w: &[f32], k: u8, block: usize, taus: Option<&[f32]>) -> QuantizedBlocks {
+    assert!(block > 0);
+    let cb = nf::codebook(k);
+    let bounds = nf::boundaries(&cb);
+    let n_blocks = w.len().div_ceil(block);
+    if let Some(t) = taus {
+        assert_eq!(t.len(), n_blocks, "one tau per block");
+    }
+    let mut codes = vec![0u8; w.len()];
+    let mut scales = vec![0f32; n_blocks];
+
+    for (bi, chunk) in w.chunks(block).enumerate() {
+        let tau = taus.map_or(0.0, |t| t[bi]);
+        let mut amax = 0f32;
+        for &x in chunk {
+            amax = amax.max((x - tau).abs());
+        }
+        let s = if amax > 0.0 { amax } else { 1.0 };
+        scales[bi] = s;
+        let out = &mut codes[bi * block..bi * block + chunk.len()];
+        let inv = 1.0 / s;
+        for (o, &x) in out.iter_mut().zip(chunk) {
+            *o = nf::quantize_one(&bounds, (x - tau) * inv);
+        }
+    }
+
+    QuantizedBlocks {
+        k,
+        block,
+        len: w.len(),
+        codes,
+        scales,
+        taus: taus.map(|t| t.to_vec()),
+    }
+}
+
+/// Dequantize back to f32: `ŵ = cb[code] * s + τ` (Eq. 10 without the
+/// double-quantization of s/τ — see `double_quant` for that layer).
+pub fn dequantize(q: &QuantizedBlocks) -> Vec<f32> {
+    let cb = nf::codebook(q.k);
+    let mut out = vec![0f32; q.len];
+    for bi in 0..q.n_blocks() {
+        let lo = bi * q.block;
+        let hi = (lo + q.block).min(q.len);
+        let s = q.scales[bi];
+        let tau = q.taus.as_ref().map_or(0.0, |t| t[bi]);
+        for i in lo..hi {
+            out[i] = cb[q.codes[i] as usize] * s + tau;
+        }
+    }
+    out
+}
+
+/// Pack k-bit codes into bytes (little-endian bit order within bytes).
+pub fn pack_codes(codes: &[u8], k: u8) -> Vec<u8> {
+    assert!((1..=8).contains(&k));
+    let total_bits = codes.len() * k as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!((c as u16) < (1u16 << k), "code {c} out of range for k={k}");
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= c << off;
+        if off + k as usize > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+        bitpos += k as usize;
+    }
+    out
+}
+
+/// Unpack k-bit codes from bytes.
+pub fn unpack_codes(packed: &[u8], k: u8, n: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&k));
+    let mask = ((1u16 << k) - 1) as u8;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = packed[byte] >> off;
+        if off + k as usize > 8 {
+            v |= packed[byte + 1] << (8 - off);
+        }
+        out.push(v & mask);
+        bitpos += k as usize;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{stats, Rng};
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let w = rng.normal_vec(1024, 0.0, 0.02);
+        let q = quantize(&w, 4, 64, None);
+        let wh = dequantize(&q);
+        // worst-case NF4 step near 0 is ~0.08 of absmax; blocks of
+        // normals have absmax ~3σ, so error per element << σ.
+        let err = stats::max_abs_diff(&w, &wh);
+        assert!(err < 0.02 * 3.5 * 0.15, "err {err}");
+        // and strictly positive — quantization is lossy
+        assert!(stats::mse(&w, &wh) > 0.0);
+    }
+
+    #[test]
+    fn exact_levels_roundtrip_exactly() {
+        // a block consisting of exact scaled codebook values survives
+        let cb = nf::codebook(4);
+        let s = 0.05f32;
+        let w: Vec<f32> = cb.iter().map(|&c| c * s).collect();
+        let q = quantize(&w, 4, 16, None);
+        let wh = dequantize(&q);
+        for (a, b) in w.iter().zip(&wh) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn partial_last_block() {
+        let mut rng = Rng::new(2);
+        let w = rng.normal_vec(100, 0.0, 1.0); // 64 + 36
+        let q = quantize(&w, 4, 64, None);
+        assert_eq!(q.n_blocks(), 2);
+        assert_eq!(dequantize(&q).len(), 100);
+    }
+
+    #[test]
+    fn zero_block_safe() {
+        let w = vec![0.0f32; 64];
+        let q = quantize(&w, 4, 64, None);
+        let wh = dequantize(&q);
+        assert!(wh.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn tau_shift_applied() {
+        // constant block: with tau = the constant, everything quantizes
+        // to (near) zero code and reconstructs exactly.
+        let w = vec![0.7f32; 64];
+        let q = quantize(&w, 4, 64, Some(&[0.7]));
+        let wh = dequantize(&q);
+        for &x in &wh {
+            assert!((x - 0.7).abs() < 1e-6, "{x}");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_identity_all_k() {
+        let mut rng = Rng::new(3);
+        for k in 1..=8u8 {
+            for n in [0usize, 1, 7, 64, 65, 1000] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.below(1 << k)) as u8).collect();
+                let packed = pack_codes(&codes, k);
+                assert_eq!(packed.len(), (n * k as usize).div_ceil(8));
+                let back = unpack_codes(&packed, k, n);
+                assert_eq!(back, codes, "k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_size_4bit() {
+        let codes = vec![0xFu8; 128];
+        assert_eq!(pack_codes(&codes, 4).len(), 64);
+    }
+
+    #[test]
+    fn bitwidths_2_and_3() {
+        let mut rng = Rng::new(4);
+        let w = rng.normal_vec(256, 0.0, 1.0);
+        for k in [2u8, 3] {
+            let q = quantize(&w, k, 64, None);
+            assert!(q.codes.iter().all(|&c| c < (1 << k)));
+            let wh = dequantize(&q);
+            // lower bit-width => higher error than NF4
+            let e_k = stats::mse(&w, &wh);
+            let e_4 = stats::mse(&w, &dequantize(&quantize(&w, 4, 64, None)));
+            assert!(e_k > e_4, "k={k}: {e_k} vs {e_4}");
+        }
+    }
+}

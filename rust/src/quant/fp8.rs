@@ -1,0 +1,152 @@
+//! Emulated FP8 E4M3 codec.
+//!
+//! Double quantization stores first-level scale codes as FP8
+//! (`s₁^FP8`, `τ₁^FP8` in the paper). This image has no hardware FP8,
+//! so we emulate the OCP E4M3 format exactly: 1 sign, 4 exponent
+//! (bias 7), 3 mantissa bits; max finite value 448; no infinities
+//! (S.1111.111 is NaN).
+
+/// Largest finite E4M3 magnitude.
+pub const E4M3_MAX: f32 = 448.0;
+/// Smallest positive normal.
+pub const E4M3_MIN_NORMAL: f32 = 0.015625; // 2^-6
+/// Smallest positive subnormal.
+pub const E4M3_MIN_SUBNORMAL: f32 = 0.001953125; // 2^-9
+
+/// Encode f32 -> E4M3 bits (round-to-nearest-even, saturating).
+pub fn f32_to_e4m3(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0x7F;
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let a = x.abs();
+    if a == 0.0 {
+        return sign;
+    }
+    if a >= E4M3_MAX {
+        return sign | 0x7E; // saturate to ±448 (E4M3 has no inf)
+    }
+    // Decompose |x| = m * 2^e with m in [1, 2).
+    let bits = a.to_bits();
+    let mut e = ((bits >> 23) & 0xFF) as i32 - 127;
+    let frac = bits & 0x7F_FFFF;
+
+    if e >= -6 {
+        // Normal E4M3: 3 mantissa bits.
+        let mut m = frac >> 20;
+        let rem = frac & 0xF_FFFF;
+        if rem > 0x8_0000 || (rem == 0x8_0000 && (m & 1) == 1) {
+            m += 1;
+        }
+        if m == 8 {
+            m = 0;
+            e += 1;
+        }
+        if e > 8 {
+            return sign | 0x7E; // overflow after rounding
+        }
+        sign | (((e + 7) as u8) << 3) | m as u8
+    } else {
+        // Subnormal: value = m/8 * 2^-6.
+        let scaled = a / E4M3_MIN_SUBNORMAL; // in units of 2^-9
+        let mut m = scaled.floor() as u32;
+        let rem = scaled - m as f32;
+        if rem > 0.5 || (rem == 0.5 && (m & 1) == 1) {
+            m += 1;
+        }
+        if m >= 8 {
+            return sign | (1 << 3); // rounds up to min normal
+        }
+        sign | m as u8
+    }
+}
+
+/// Decode E4M3 bits -> f32 (exact).
+pub fn e4m3_to_f32(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((b >> 3) & 0xF) as i32;
+    let m = (b & 0x7) as f32;
+    if e == 0xF && (b & 0x7) == 0x7 {
+        return f32::NAN;
+    }
+    if e == 0 {
+        sign * m * E4M3_MIN_SUBNORMAL
+    } else {
+        sign * (1.0 + m / 8.0) * (2.0f32).powi(e - 7)
+    }
+}
+
+/// Quantize-dequantize through E4M3.
+#[inline]
+pub fn round_e4m3(x: f32) -> f32 {
+    e4m3_to_f32(f32_to_e4m3(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_representables_roundtrip() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 448.0, -448.0, 0.015625, 1.75, 240.0] {
+            assert_eq!(round_e4m3(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(round_e4m3(1e9), 448.0);
+        assert_eq!(round_e4m3(-1e9), -448.0);
+        assert_eq!(round_e4m3(460.0), 448.0);
+    }
+
+    #[test]
+    fn nan_encoding() {
+        assert!(round_e4m3(f32::NAN).is_nan());
+        assert_eq!(f32_to_e4m3(f32::NAN), 0x7F);
+    }
+
+    #[test]
+    fn subnormals() {
+        assert_eq!(round_e4m3(E4M3_MIN_SUBNORMAL), E4M3_MIN_SUBNORMAL);
+        assert_eq!(round_e4m3(E4M3_MIN_SUBNORMAL * 3.0), E4M3_MIN_SUBNORMAL * 3.0);
+        assert_eq!(round_e4m3(1e-5), 0.0);
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        // 3 mantissa bits -> relative error <= 2^-4 for normals.
+        let mut x = 0.02f32;
+        while x < 440.0 {
+            let y = round_e4m3(x);
+            assert!(((x - y) / x).abs() <= 1.0 / 16.0 + 1e-6, "x={x} y={y}");
+            x *= 1.171;
+        }
+    }
+
+    #[test]
+    fn all_256_codes_decode_finite_or_nan() {
+        let mut distinct = std::collections::HashSet::new();
+        for b in 0..=255u8 {
+            let v = e4m3_to_f32(b);
+            if v.is_nan() {
+                continue;
+            }
+            assert!(v.abs() <= 448.0);
+            distinct.insert(v.to_bits());
+        }
+        // 254 non-NaN codes; +0.0 and -0.0 share a value magnitude-wise
+        assert!(distinct.len() >= 253);
+    }
+
+    #[test]
+    fn encode_decode_monotone() {
+        // decoding should be monotone in the positive code range
+        let mut prev = f32::NEG_INFINITY;
+        for b in 0..0x7Fu8 {
+            let v = e4m3_to_f32(b);
+            assert!(v > prev, "code {b:#x} not monotone");
+            prev = v;
+        }
+    }
+}

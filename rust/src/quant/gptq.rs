@@ -1,0 +1,275 @@
+//! GPTQ baseline (Frantar et al., 2022) — the "QLoRA w/ GPTQ" rows.
+//!
+//! GPTQ quantizes a linear layer's weight rows one column at a time,
+//! propagating the rounding error of each column into the not-yet-
+//! quantized columns through the inverse Hessian of the layer inputs
+//! (H = 2XᵀX + λI). This is a faithful (unblocked) implementation —
+//! adequate at our layer widths (h ≤ 1024) where the O(h³) Cholesky is
+//! cheap — with the same group-wise integer grid the QA-LoRA rows use.
+
+use crate::util::Tensor;
+
+use super::integer;
+
+/// Symmetric positive-definite Cholesky factorization: A = L·Lᵀ.
+/// Returns the lower factor row-major, or None if not PD.
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Inverse of an SPD matrix via Cholesky (A⁻¹ = L⁻ᵀ·L⁻¹).
+pub fn spd_inverse(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let l = cholesky(a, n)?;
+    // invert L (lower triangular) by forward substitution
+    let mut linv = vec![0f64; n * n];
+    for i in 0..n {
+        linv[i * n + i] = 1.0 / l[i * n + i];
+        for j in 0..i {
+            let mut sum = 0.0;
+            for k in j..i {
+                sum -= l[i * n + k] * linv[k * n + j];
+            }
+            linv[i * n + j] = sum / l[i * n + i];
+        }
+    }
+    // A^-1 = L^-T * L^-1
+    let mut inv = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut sum = 0.0;
+            // (L^-T)[i,k] = linv[k,i]; nonzero for k >= i
+            for k in i.max(j)..n {
+                sum += linv[k * n + i] * linv[k * n + j];
+            }
+            inv[i * n + j] = sum;
+        }
+    }
+    Some(inv)
+}
+
+/// GPTQ configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GptqConfig {
+    pub k: u8,
+    /// Integer quantization group size along the input dimension.
+    pub group: usize,
+    /// Hessian damping fraction (of the mean diagonal).
+    pub damp: f64,
+}
+
+impl Default for GptqConfig {
+    fn default() -> Self {
+        GptqConfig { k: 4, group: 64, damp: 0.01 }
+    }
+}
+
+/// Quantize a linear layer weight `w` (o×h, row-major; rows are output
+/// neurons) given calibration inputs `x` (n×h). Returns the
+/// dequantized weight (o×h) and the total squared compensation error.
+pub fn gptq_quantize(w: &Tensor, x: &Tensor, cfg: &GptqConfig) -> (Tensor, f64) {
+    assert_eq!(w.rank(), 2);
+    assert_eq!(x.rank(), 2);
+    let (o, h) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(x.shape()[1], h, "calibration width mismatch");
+    let n = x.shape()[0];
+
+    // H = 2 XᵀX + λI  (f64 accumulation)
+    let mut hmat = vec![0f64; h * h];
+    for s in 0..n {
+        let row = x.row(s);
+        for i in 0..h {
+            let xi = row[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            for j in i..h {
+                hmat[i * h + j] += 2.0 * xi * row[j] as f64;
+            }
+        }
+    }
+    for i in 0..h {
+        for j in 0..i {
+            hmat[i * h + j] = hmat[j * h + i];
+        }
+    }
+    let mean_diag = (0..h).map(|i| hmat[i * h + i]).sum::<f64>() / h as f64;
+    let damp = (cfg.damp * mean_diag).max(1e-8);
+    for i in 0..h {
+        hmat[i * h + i] += damp;
+    }
+
+    let hinv = spd_inverse(&hmat, h).expect("damped Hessian must be SPD");
+
+    // Per-group integer grids calibrated on the original weights.
+    let qmax = ((1u32 << cfg.k) - 1) as f32;
+    let n_groups = h.div_ceil(cfg.group);
+    // (scale, zero) per (row, group)
+    let mut grids = vec![(1.0f32, 0.0f32); o * n_groups];
+    for r in 0..o {
+        let row = w.row(r);
+        for g in 0..n_groups {
+            let lo = g * cfg.group;
+            let hi = (lo + cfg.group).min(h);
+            let chunk = &row[lo..hi];
+            let mn = chunk.iter().cloned().fold(f32::INFINITY, f32::min);
+            let mx = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            if mx > mn {
+                let s = (mx - mn) / qmax;
+                grids[r * n_groups + g] = (s, (-mn / s).round());
+            }
+        }
+    }
+
+    // Column-wise greedy rounding with error propagation.
+    let mut wk: Vec<f32> = w.data().to_vec(); // working copy, mutated
+    let mut out = vec![0f32; o * h];
+    let mut total_err = 0.0f64;
+    for j in 0..h {
+        let d = hinv[j * h + j];
+        let g = j / cfg.group;
+        for r in 0..o {
+            let (s, z) = grids[r * n_groups + g];
+            let wj = wk[r * h + j];
+            let q = ((wj / s + z).round()).clamp(0.0, qmax);
+            let wq = (q - z) * s;
+            out[r * h + j] = wq;
+            let err = (wj - wq) as f64 / d;
+            total_err += err * err * d;
+            // propagate into remaining columns of this row
+            let roww = &mut wk[r * h..(r + 1) * h];
+            for jj in (j + 1)..h {
+                roww[jj] -= (err * hinv[j * h + jj]) as f32;
+            }
+        }
+    }
+
+    (Tensor::new(&[o, h], out), total_err)
+}
+
+/// Round-to-nearest baseline on the same grid, for comparison: returns
+/// the dequantized weight.
+pub fn rtn_quantize(w: &Tensor, k: u8, group: usize) -> Tensor {
+    assert_eq!(w.rank(), 2);
+    let (o, h) = (w.shape()[0], w.shape()[1]);
+    let mut out = vec![0f32; o * h];
+    for r in 0..o {
+        let q = integer::quantize(w.row(r), k, group);
+        out[r * h..(r + 1) * h].copy_from_slice(&integer::dequantize(&q));
+    }
+    Tensor::new(&[o, h], out)
+}
+
+/// Layer output MSE of a quantized weight vs the original, under
+/// calibration inputs — the quantity GPTQ minimizes.
+pub fn layer_mse(w: &Tensor, wq: &Tensor, x: &Tensor) -> f64 {
+    let y = x.matmul(&w.transpose());
+    let yq = x.matmul(&wq.transpose());
+    crate::util::stats::mse(y.data(), yq.data())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_layer(rng: &mut Rng, o: usize, h: usize, n: usize) -> (Tensor, Tensor) {
+        let w = Tensor::new(&[o, h], rng.normal_vec(o * h, 0.0, 0.05));
+        // correlated inputs make the Hessian non-trivial
+        let base = rng.normal_vec(n * h, 0.0, 1.0);
+        let mut xv = base.clone();
+        for s in 0..n {
+            for j in 1..h {
+                xv[s * h + j] = 0.6 * xv[s * h + j - 1] + 0.8 * base[s * h + j];
+            }
+        }
+        (w, Tensor::new(&[n, h], xv))
+    }
+
+    #[test]
+    fn cholesky_identity() {
+        let n = 4;
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let l = cholesky(&a, n).unwrap();
+        assert_eq!(l, a);
+        let inv = spd_inverse(&a, n).unwrap();
+        assert_eq!(inv, a);
+    }
+
+    #[test]
+    fn spd_inverse_correct() {
+        // A = M Mᵀ + I is SPD; check A·A⁻¹ ≈ I
+        let mut rng = Rng::new(31);
+        let n = 8;
+        let m: Vec<f64> = (0..n * n).map(|_| rng.normal() as f64).collect();
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    a[i * n + j] += m[i * n + k] * m[j * n + k];
+                }
+            }
+            a[i * n + i] += 1.0;
+        }
+        let inv = spd_inverse(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[i * n + k] * inv[k * n + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-8, "({i},{j}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_none());
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_layer_mse() {
+        let mut rng = Rng::new(32);
+        let (w, x) = random_layer(&mut rng, 16, 64, 128);
+        let cfg = GptqConfig { k: 3, ..Default::default() };
+        let (wq, _) = gptq_quantize(&w, &x, &cfg);
+        let wr = rtn_quantize(&w, cfg.k, cfg.group);
+        let e_gptq = layer_mse(&w, &wq, &x);
+        let e_rtn = layer_mse(&w, &wr, &x);
+        assert!(
+            e_gptq <= e_rtn * 1.02,
+            "gptq {e_gptq} should not lose to rtn {e_rtn}"
+        );
+    }
+
+    #[test]
+    fn gptq_output_finite() {
+        let mut rng = Rng::new(33);
+        let (w, x) = random_layer(&mut rng, 8, 32, 64);
+        let (wq, err) = gptq_quantize(&w, &x, &GptqConfig::default());
+        assert!(wq.data().iter().all(|v| v.is_finite()));
+        assert!(err.is_finite() && err >= 0.0);
+    }
+}

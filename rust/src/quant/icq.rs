@@ -1,0 +1,343 @@
+//! Information Calibration Quantization — the paper's core technique
+//! (§3.2, Algorithm 1).
+//!
+//! Per quantization block, ICQ introduces a calibration constant τ:
+//! `ŵ = NFk((w − τ) / absmax(w − τ))` (Eq. 8), chosen to maximize the
+//! Shannon entropy of the quantized codes (Eq. 9):
+//!
+//! 1. init τ₀ = median(block) — robust to outliers, centers the NF grid
+//!    on the densest region of a (roughly) symmetric distribution;
+//! 2. exhaustive search over `linspace(τ₀ − λσ, τ₀ + λσ)` with 2n+1
+//!    candidates (paper defaults λ = 0.1, n = 100, σ = 1 — the std of
+//!    N(0,1));
+//! 3. keep the entropy-maximizing τ*; τ* and the resulting scale are
+//!    then double-quantized (see `double_quant`).
+//!
+//! The search is embarrassingly parallel across blocks; `quantize`
+//! fans out with `util::threads::par_map`.
+
+use crate::util::stats::{self, entropy_bits};
+use crate::util::threads::par_map;
+
+use super::blockwise::QuantizedBlocks;
+use super::nf;
+
+/// ICQ hyper-parameters (paper §3.2.2 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct IcqConfig {
+    /// Half-width coefficient λ of the search interval.
+    pub lambda: f32,
+    /// Half the candidate count: the grid has 2n+1 points.
+    pub n: usize,
+    /// σ in the interval [τ₀ − λσ, τ₀ + λσ]. The paper fixes σ = 1
+    /// (the std of N(0,1)); `SigmaMode::BlockStd` instead scales the
+    /// interval to each block's own spread (ablation option).
+    pub sigma_mode: SigmaMode,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SigmaMode {
+    /// σ = 1 (paper setting).
+    Unit,
+    /// σ = std of the block (adaptive variant).
+    BlockStd,
+}
+
+impl Default for IcqConfig {
+    fn default() -> Self {
+        IcqConfig { lambda: 0.1, n: 100, sigma_mode: SigmaMode::Unit }
+    }
+}
+
+/// Result of the per-block τ search.
+#[derive(Clone, Copy, Debug)]
+pub struct TauSearch {
+    pub tau: f32,
+    /// Entropy (bits) achieved at τ*.
+    pub entropy: f64,
+    /// Entropy (bits) of the uncalibrated (τ = 0) quantization, for
+    /// the Figure-4 style comparisons.
+    pub entropy_vanilla: f64,
+}
+
+/// Entropy of one block quantized with shift `tau` (Algorithm 1 body).
+#[inline]
+fn entropy_at(
+    block: &[f32],
+    tau: f32,
+    bounds: &[f32],
+    counts: &mut [u32],
+) -> f64 {
+    let mut amax = 0f32;
+    for &x in block {
+        amax = amax.max((x - tau).abs());
+    }
+    if amax == 0.0 {
+        return 0.0; // constant block: a single code, zero entropy
+    }
+    counts.fill(0);
+    let inv = 1.0 / amax;
+    for &x in block {
+        let c = nf::quantize_one(bounds, (x - tau) * inv);
+        counts[c as usize] += 1;
+    }
+    entropy_bits(counts)
+}
+
+/// Entropy at shift `tau` over a PRE-SORTED block: absmax comes from
+/// the extremes in O(1) and each histogram bin from a binary search
+/// over the sorted values (15·log B instead of B·log 16 comparisons).
+/// This is the optimized inner loop of Algorithm 1 — bit-identical to
+/// [`entropy_at`] (property-tested) but ~2-4x faster, which matters
+/// because it runs 201 times per 64-weight block of the model.
+#[inline]
+fn entropy_at_sorted(
+    sorted: &[f32],
+    tau: f32,
+    bounds: &[f32],
+    counts: &mut [u32],
+) -> f64 {
+    let lo = sorted[0] - tau;
+    let hi = sorted[sorted.len() - 1] - tau;
+    let amax = lo.abs().max(hi.abs());
+    if amax == 0.0 {
+        return 0.0;
+    }
+    // element i falls in bin b iff (x - tau)/amax > bounds[b-1] etc.
+    // cumulative counts via partition points of tau + amax*bound.
+    counts.fill(0);
+    let mut prev = 0usize;
+    for (b, &bound) in bounds.iter().enumerate() {
+        let threshold = tau + amax * bound;
+        // number of elements with (x - tau) <= amax*bound, i.e. NOT in
+        // a later bin; quantize_one uses strict '>', so count x <= thr
+        let mut l = prev; // thresholds ascend, so resume from prev
+        let mut r = sorted.len();
+        while l < r {
+            let mid = (l + r) / 2;
+            if sorted[mid] <= threshold {
+                l = mid + 1;
+            } else {
+                r = mid;
+            }
+        }
+        counts[b] = (l - prev) as u32;
+        prev = l;
+    }
+    counts[bounds.len()] = (sorted.len() - prev) as u32;
+    entropy_bits(counts)
+}
+
+/// Exhaustive τ search for one block (Algorithm 1), using the
+/// sorted-block fast path.
+pub fn search_tau(block: &[f32], k: u8, cfg: &IcqConfig) -> TauSearch {
+    let cb = nf::codebook(k);
+    let bounds = nf::boundaries(&cb);
+    let mut counts = vec![0u32; 1 << k];
+
+    let entropy_vanilla = entropy_at(block, 0.0, &bounds, &mut counts);
+
+    let mut sorted = block.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let tau0 = stats::quantile_sorted(&sorted, 0.5);
+    let sigma = match cfg.sigma_mode {
+        SigmaMode::Unit => 1.0,
+        SigmaMode::BlockStd => stats::std(block).max(1e-12),
+    };
+    let half = cfg.lambda * sigma;
+    let steps = 2 * cfg.n; // grid points besides the left endpoint
+
+    let mut best_tau = tau0;
+    let mut best_h = entropy_at_sorted(&sorted, tau0, &bounds, &mut counts);
+    for i in 0..=steps {
+        let tau = tau0 - half + (2.0 * half) * i as f32 / steps as f32;
+        let h = entropy_at_sorted(&sorted, tau, &bounds, &mut counts);
+        if h > best_h {
+            best_h = h;
+            best_tau = tau;
+        }
+    }
+
+    TauSearch { tau: best_tau, entropy: best_h, entropy_vanilla }
+}
+
+/// Reference (unsorted) τ search — kept as the oracle for the fast
+/// path; see `fast_path_matches_reference` below.
+pub fn search_tau_reference(block: &[f32], k: u8, cfg: &IcqConfig) -> TauSearch {
+    let cb = nf::codebook(k);
+    let bounds = nf::boundaries(&cb);
+    let mut counts = vec![0u32; 1 << k];
+    let entropy_vanilla = entropy_at(block, 0.0, &bounds, &mut counts);
+    let tau0 = stats::median(block);
+    let sigma = match cfg.sigma_mode {
+        SigmaMode::Unit => 1.0,
+        SigmaMode::BlockStd => stats::std(block).max(1e-12),
+    };
+    let half = cfg.lambda * sigma;
+    let steps = 2 * cfg.n;
+    let mut best_tau = tau0;
+    let mut best_h = entropy_at(block, tau0, &bounds, &mut counts);
+    for i in 0..=steps {
+        let tau = tau0 - half + (2.0 * half) * i as f32 / steps as f32;
+        let h = entropy_at(block, tau, &bounds, &mut counts);
+        if h > best_h {
+            best_h = h;
+            best_tau = tau;
+        }
+    }
+    TauSearch { tau: best_tau, entropy: best_h, entropy_vanilla }
+}
+
+/// ICQ-quantize a tensor: per-block τ search (parallel across blocks),
+/// then blockwise NF-k quantization with the found shifts.
+pub fn quantize(w: &[f32], k: u8, block: usize, cfg: &IcqConfig) -> QuantizedBlocks {
+    let n_blocks = w.len().div_ceil(block);
+    let taus: Vec<f32> = par_map(n_blocks, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(w.len());
+        search_tau(&w[lo..hi], k, cfg).tau
+    });
+    super::blockwise::quantize(w, k, block, Some(&taus))
+}
+
+/// Per-block search results (τ + both entropies) — used by the
+/// Figure 4/5 harness and Table 5.
+pub fn search_all(w: &[f32], k: u8, block: usize, cfg: &IcqConfig) -> Vec<TauSearch> {
+    let n_blocks = w.len().div_ceil(block);
+    par_map(n_blocks, |bi| {
+        let lo = bi * block;
+        let hi = (lo + block).min(w.len());
+        search_tau(&w[lo..hi], k, cfg)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{blockwise, entropy};
+    use crate::util::Rng;
+
+    #[test]
+    fn icq_entropy_never_below_vanilla() {
+        // The search grid includes entropies >= the best found; vanilla
+        // (tau=0) is not on the grid, but ICQ must beat or match it on
+        // average by a clear margin for skewed blocks.
+        let mut rng = Rng::new(11);
+        // skewed blocks: normal + constant shift stresses absmax quant
+        let w: Vec<f32> = (0..64 * 50)
+            .map(|_| rng.normal_ms(0.03, 0.02))
+            .collect();
+        let q_van = blockwise::quantize(&w, 4, 64, None);
+        let q_icq = quantize(&w, 4, 64, &IcqConfig::default());
+        let h_van = entropy::mean_block_entropy(&q_van);
+        let h_icq = entropy::mean_block_entropy(&q_icq);
+        assert!(
+            h_icq > h_van,
+            "ICQ {h_icq:.4} should exceed vanilla {h_van:.4} on shifted data"
+        );
+    }
+
+    #[test]
+    fn tau_near_median_for_symmetric_data() {
+        let mut rng = Rng::new(12);
+        let block: Vec<f32> = (0..64).map(|_| rng.normal_ms(0.0, 0.02)).collect();
+        let r = search_tau(&block, 4, &IcqConfig::default());
+        // tau* stays within the search interval around the median
+        let med = crate::util::stats::median(&block);
+        assert!((r.tau - med).abs() <= 0.1 + 1e-6);
+    }
+
+    #[test]
+    fn search_interval_respected() {
+        let mut rng = Rng::new(13);
+        let block: Vec<f32> = (0..64).map(|_| rng.normal_ms(0.5, 0.1)).collect();
+        let cfg = IcqConfig { lambda: 0.05, n: 10, sigma_mode: SigmaMode::Unit };
+        let r = search_tau(&block, 4, &cfg);
+        let med = crate::util::stats::median(&block);
+        assert!((r.tau - med).abs() <= 0.05 + 1e-6);
+    }
+
+    #[test]
+    fn entropy_reported_matches_requantization() {
+        let mut rng = Rng::new(14);
+        let block: Vec<f32> = (0..64).map(|_| rng.normal_ms(0.01, 0.03)).collect();
+        let r = search_tau(&block, 4, &IcqConfig::default());
+        let q = blockwise::quantize(&block, 4, 64, Some(&[r.tau]));
+        let h = entropy::code_entropy(&q.codes, 4);
+        assert!((h - r.entropy).abs() < 1e-9, "{h} vs {}", r.entropy);
+    }
+
+    #[test]
+    fn reconstruction_still_faithful() {
+        // ICQ must not hurt reconstruction error materially
+        let mut rng = Rng::new(15);
+        let w = rng.normal_vec(64 * 20, 0.01, 0.02);
+        let q = quantize(&w, 4, 64, &IcqConfig::default());
+        let wh = blockwise::dequantize(&q);
+        let mse_icq = crate::util::stats::mse(&w, &wh);
+        let q0 = blockwise::quantize(&w, 4, 64, None);
+        let mse_van = crate::util::stats::mse(&w, &blockwise::dequantize(&q0));
+        assert!(mse_icq < mse_van * 1.5, "icq {mse_icq} vanilla {mse_van}");
+    }
+
+    #[test]
+    fn block_std_mode_adapts() {
+        // with tiny-spread data, Unit mode's +-0.1 interval is mostly
+        // wasted; BlockStd zooms in and must find at least as good tau
+        let mut rng = Rng::new(16);
+        let block: Vec<f32> = (0..64).map(|_| rng.normal_ms(0.0, 0.001)).collect();
+        let unit = search_tau(&block, 4, &IcqConfig::default());
+        let adaptive = search_tau(
+            &block,
+            4,
+            &IcqConfig { sigma_mode: SigmaMode::BlockStd, ..Default::default() },
+        );
+        assert!(adaptive.entropy >= unit.entropy - 1e-9);
+    }
+
+    #[test]
+    fn fast_path_matches_reference() {
+        // the sorted-block fast path must agree with the naive
+        // Algorithm-1 loop on tau and entropy across random blocks
+        for seed in 0..30u64 {
+            let mut rng = Rng::new(900 + seed);
+            let shift = rng.range_f32(-0.05, 0.05);
+            let scale = rng.range_f32(0.002, 0.1);
+            let block: Vec<f32> = (0..64).map(|_| rng.normal_ms(shift, scale)).collect();
+            let fast = search_tau(&block, 4, &IcqConfig::default());
+            let slow = search_tau_reference(&block, 4, &IcqConfig::default());
+            assert!(
+                (fast.entropy - slow.entropy).abs() < 1e-9,
+                "seed {seed}: entropy {} vs {}",
+                fast.entropy,
+                slow.entropy
+            );
+            assert!(
+                (fast.tau - slow.tau).abs() < 1e-6,
+                "seed {seed}: tau {} vs {}",
+                fast.tau,
+                slow.tau
+            );
+        }
+    }
+
+    #[test]
+    fn constant_block_degenerates_gracefully() {
+        let block = vec![0.25f32; 64];
+        let r = search_tau(&block, 4, &IcqConfig::default());
+        assert!(r.entropy >= 0.0 && r.tau.is_finite());
+    }
+
+    #[test]
+    fn ultra_low_bitwidths() {
+        let mut rng = Rng::new(17);
+        let w = rng.normal_vec(64 * 30, 0.02, 0.05);
+        for k in [2u8, 3] {
+            let q_icq = quantize(&w, k, 64, &IcqConfig::default());
+            let q_van = blockwise::quantize(&w, k, 64, None);
+            let h_icq = entropy::mean_block_entropy(&q_icq);
+            let h_van = entropy::mean_block_entropy(&q_van);
+            assert!(h_icq >= h_van, "k={k}: {h_icq} < {h_van}");
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Group-wise affine integer quantization — the QA-LoRA-style baseline
+//! (paper §4.3, Table 10), plus the ICQ variant that searches the zero
+//! point by entropy maximization ("IR-QLoRA (QA-LoRA)" row).
+//!
+//! q = clamp(round(w/s) + z, 0, 2^k − 1), ŵ = (q − z)·s, with one
+//! (s, z) pair per group. The vanilla min/max calibration uses
+//! s = (max − min)/(2^k − 1), z = round(−min/s). The ICQ variant sweeps
+//! z over an integer window around the min/max zero point and keeps the
+//! entropy-maximizing one (the paper notes the calibration constant τ
+//! can be merged into the integer zero point, so the gain is cost-free).
+
+use crate::util::stats::entropy_bits;
+use crate::util::threads::par_map;
+
+/// Group-wise integer-quantized tensor.
+#[derive(Clone, Debug)]
+pub struct IntQuantized {
+    pub k: u8,
+    pub group: usize,
+    pub len: usize,
+    /// Unsigned codes in 0..2^k.
+    pub codes: Vec<u8>,
+    /// Scale per group.
+    pub scales: Vec<f32>,
+    /// Zero point per group (integer, stored as f32 for arithmetic).
+    pub zeros: Vec<f32>,
+}
+
+impl IntQuantized {
+    pub fn n_groups(&self) -> usize {
+        self.len.div_ceil(self.group)
+    }
+}
+
+fn quantize_group(chunk: &[f32], k: u8, s: f32, z: f32, out: &mut [u8]) {
+    let qmax = ((1u32 << k) - 1) as f32;
+    let inv = 1.0 / s;
+    for (o, &x) in out.iter_mut().zip(chunk) {
+        let q = (x * inv + z).round().clamp(0.0, qmax);
+        *o = q as u8;
+    }
+}
+
+/// Min/max affine calibration for one group.
+fn minmax_params(chunk: &[f32], k: u8) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in chunk {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || hi <= lo {
+        return (1.0, 0.0);
+    }
+    let qmax = ((1u32 << k) - 1) as f32;
+    let s = (hi - lo) / qmax;
+    let z = (-lo / s).round();
+    (s, z)
+}
+
+/// Vanilla group-wise integer quantization (QA-LoRA baseline).
+pub fn quantize(w: &[f32], k: u8, group: usize) -> IntQuantized {
+    let n_groups = w.len().div_ceil(group);
+    let mut codes = vec![0u8; w.len()];
+    let mut scales = vec![0f32; n_groups];
+    let mut zeros = vec![0f32; n_groups];
+    for (gi, chunk) in w.chunks(group).enumerate() {
+        let (s, z) = minmax_params(chunk, k);
+        scales[gi] = s;
+        zeros[gi] = z;
+        quantize_group(chunk, k, s, z, &mut codes[gi * group..gi * group + chunk.len()]);
+    }
+    IntQuantized { k, group, len: w.len(), codes, scales, zeros }
+}
+
+/// ICQ variant: per group, search the zero point over an integer window
+/// around the min/max zero point, maximizing code entropy (Table 10).
+pub fn quantize_icq(w: &[f32], k: u8, group: usize, window: u32) -> IntQuantized {
+    let n_groups = w.len().div_ceil(group);
+    let per_group: Vec<(f32, f32)> = par_map(n_groups, |gi| {
+        let lo = gi * group;
+        let hi = (lo + group).min(w.len());
+        let chunk = &w[lo..hi];
+        let (s, z0) = minmax_params(chunk, k);
+        let qmax = (1u32 << k) - 1;
+        let mut counts = vec![0u32; 1 << k];
+        let mut best = (s, z0);
+        let mut best_h = f64::NEG_INFINITY;
+        let lo_z = z0 - window as f32;
+        let hi_z = z0 + window as f32;
+        let mut z = lo_z;
+        while z <= hi_z {
+            counts.fill(0);
+            let inv = 1.0 / s;
+            for &x in chunk {
+                let q = (x * inv + z).round().clamp(0.0, qmax as f32) as usize;
+                counts[q] += 1;
+            }
+            let h = entropy_bits(&counts);
+            if h > best_h {
+                best_h = h;
+                best = (s, z);
+            }
+            z += 1.0;
+        }
+        best
+    });
+
+    let mut codes = vec![0u8; w.len()];
+    let mut scales = vec![0f32; n_groups];
+    let mut zeros = vec![0f32; n_groups];
+    for (gi, chunk) in w.chunks(group).enumerate() {
+        let (s, z) = per_group[gi];
+        scales[gi] = s;
+        zeros[gi] = z;
+        quantize_group(chunk, k, s, z, &mut codes[gi * group..gi * group + chunk.len()]);
+    }
+    IntQuantized { k, group, len: w.len(), codes, scales, zeros }
+}
+
+/// Dequantize: ŵ = (q − z)·s.
+pub fn dequantize(q: &IntQuantized) -> Vec<f32> {
+    let mut out = vec![0f32; q.len];
+    for gi in 0..q.n_groups() {
+        let lo = gi * q.group;
+        let hi = (lo + q.group).min(q.len);
+        let s = q.scales[gi];
+        let z = q.zeros[gi];
+        for i in lo..hi {
+            out[i] = (q.codes[i] as f32 - z) * s;
+        }
+    }
+    out
+}
+
+/// Mean per-group code entropy.
+pub fn mean_entropy(q: &IntQuantized) -> f64 {
+    let mut total = 0.0;
+    let n = q.n_groups();
+    for gi in 0..n {
+        let lo = gi * q.group;
+        let hi = (lo + q.group).min(q.len);
+        let mut counts = vec![0u32; 1 << q.k];
+        for &c in &q.codes[lo..hi] {
+            counts[c as usize] += 1;
+        }
+        total += entropy_bits(&counts);
+    }
+    if n == 0 {
+        0.0
+    } else {
+        total / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{stats, Rng};
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(21);
+        let w = rng.normal_vec(1024, 0.0, 0.02);
+        let q = quantize(&w, 4, 64);
+        let wh = dequantize(&q);
+        // int4 min/max: step = range/15, max err = step/2
+        let err = stats::max_abs_diff(&w, &wh);
+        assert!(err < 0.02 * 7.0 / 15.0, "err {err}");
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Rng::new(22);
+        let w = rng.normal_vec(300, 0.0, 1.0);
+        for k in [2u8, 3, 4] {
+            let q = quantize(&w, k, 64);
+            assert!(q.codes.iter().all(|&c| (c as u32) < (1 << k)));
+        }
+    }
+
+    #[test]
+    fn icq_zero_point_entropy_gain() {
+        let mut rng = Rng::new(23);
+        // heavily skewed data: min/max zero point underuses the grid
+        let w: Vec<f32> = (0..64 * 40)
+            .map(|_| {
+                let x = rng.normal_ms(0.0, 0.02);
+                if rng.chance(0.02) { x + 0.3 } else { x } // outliers
+            })
+            .collect();
+        let q_v = quantize(&w, 4, 64);
+        let q_i = quantize_icq(&w, 4, 64, 3);
+        assert!(
+            mean_entropy(&q_i) >= mean_entropy(&q_v),
+            "{} < {}",
+            mean_entropy(&q_i),
+            mean_entropy(&q_v)
+        );
+    }
+
+    #[test]
+    fn constant_group_safe() {
+        let w = vec![3.0f32; 64];
+        let q = quantize(&w, 4, 64);
+        let wh = dequantize(&q);
+        assert!(wh.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn exact_grid_values_roundtrip() {
+        // values already on the int grid come back exactly
+        let s = 0.1f32;
+        let w: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * s).collect();
+        let q = quantize(&w, 4, 16);
+        let wh = dequantize(&q);
+        for (a, b) in w.iter().zip(&wh) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Quantization stack — the paper's §3 plus every baseline its
+//! evaluation compares against.
+//!
+//! - [`nf`]: NormalFloat codebooks (Tables 11–13)
+//! - [`blockwise`]: blocksize-64 absmax NF-k quantization + bit packing
+//! - [`fp8`] / [`double_quant`]: E4M3 + FP16 double quantization of
+//!   per-block constants
+//! - [`icq`]: Information Calibration Quantization (the contribution)
+//! - [`entropy`]: the information metric (Eq. 7)
+//! - [`integer`]: group-wise affine integer quantization (QA-LoRA) and
+//!   its ICQ zero-point variant (Table 10)
+//! - [`gptq`]: Hessian-compensated GPTQ baseline
+//! - [`percentile`]: quantile-quantization codebooks
+//!
+//! [`QuantizedTensor`] bundles the full storage pipeline of Eq. 10 —
+//! packed NF codes + double-quantized scales (and τ, for ICQ) — and is
+//! the unit the model-level pipeline moves around. [`Method`] names
+//! every quantization scheme that appears as a table row.
+
+pub mod blockwise;
+pub mod double_quant;
+pub mod entropy;
+pub mod fp8;
+pub mod gptq;
+pub mod icq;
+pub mod integer;
+pub mod nf;
+pub mod percentile;
+
+use crate::util::Tensor;
+
+use blockwise::QuantizedBlocks;
+use double_quant::DoubleQuant;
+
+/// Every weight-quantization scheme that appears in the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// No quantization (16-bit rows).
+    Fp16,
+    /// Vanilla blockwise NF-k (QLoRA / "NormalFloat" rows).
+    Nf { k: u8 },
+    /// NF-k with ICQ calibration (IR-QLoRA / "ICQ" rows).
+    NfIcq { k: u8 },
+    /// Group-wise integer min/max (QA-LoRA rows).
+    Int { k: u8 },
+    /// Integer with ICQ zero-point search ("IR-QLoRA (QA-LoRA)").
+    IntIcq { k: u8 },
+    /// GPTQ on the integer grid ("QLoRA w/ GPTQ" rows).
+    Gptq { k: u8 },
+}
+
+impl Method {
+    pub fn bits(&self) -> u8 {
+        match *self {
+            Method::Fp16 => 16,
+            Method::Nf { k }
+            | Method::NfIcq { k }
+            | Method::Int { k }
+            | Method::IntIcq { k }
+            | Method::Gptq { k } => k,
+        }
+    }
+
+    pub fn uses_icq(&self) -> bool {
+        matches!(self, Method::NfIcq { .. } | Method::IntIcq { .. })
+    }
+
+    pub fn paper_name(&self) -> String {
+        match *self {
+            Method::Fp16 => "16-bit".into(),
+            Method::Nf { k } => format!("NormalFloat NF{k}"),
+            Method::NfIcq { k } => format!("ICQ NF{k}"),
+            Method::Int { k } => format!("Integer g64 INT{k}"),
+            Method::IntIcq { k } => format!("Integer+ICQ INT{k}"),
+            Method::Gptq { k } => format!("GPTQ INT{k}"),
+        }
+    }
+}
+
+/// Full storage-pipeline quantized tensor (paper Eq. 10): packed NF
+/// codes, double-quantized scales s₁/s₂ and (ICQ) τ₁/τ₂, original
+/// shape. Dequantization reproduces ŵ^FP16 exactly as inference would.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub shape: Vec<usize>,
+    pub k: u8,
+    pub block: usize,
+    /// Bit-packed codes.
+    pub packed: Vec<u8>,
+    /// Element count.
+    pub len: usize,
+    /// Double-quantized per-block scales.
+    pub scales: DoubleQuant,
+    /// Double-quantized per-block τ (ICQ only).
+    pub taus: Option<DoubleQuant>,
+}
+
+impl QuantizedTensor {
+    /// Quantize with the full pipeline. `icq` enables the τ search.
+    pub fn quantize(
+        w: &Tensor,
+        k: u8,
+        block: usize,
+        icq: Option<&icq::IcqConfig>,
+    ) -> QuantizedTensor {
+        let qb: QuantizedBlocks = match icq {
+            Some(cfg) => icq::quantize(w.data(), k, block, cfg),
+            None => blockwise::quantize(w.data(), k, block, None),
+        };
+        Self::from_blocks(w.shape(), qb)
+    }
+
+    /// Pack a [`QuantizedBlocks`] into the storage representation.
+    pub fn from_blocks(shape: &[usize], qb: QuantizedBlocks) -> QuantizedTensor {
+        let packed = blockwise::pack_codes(&qb.codes, qb.k);
+        let scales = DoubleQuant::quantize(&qb.scales, double_quant::DEFAULT_GROUP);
+        let taus = qb
+            .taus
+            .as_ref()
+            .map(|t| DoubleQuant::quantize(t, double_quant::DEFAULT_GROUP));
+        QuantizedTensor {
+            shape: shape.to_vec(),
+            k: qb.k,
+            block: qb.block,
+            packed,
+            len: qb.len,
+            scales,
+            taus,
+        }
+    }
+
+    /// Unpack into code + reconstructed per-block constants.
+    pub fn to_blocks(&self) -> QuantizedBlocks {
+        QuantizedBlocks {
+            k: self.k,
+            block: self.block,
+            len: self.len,
+            codes: blockwise::unpack_codes(&self.packed, self.k, self.len),
+            scales: self.scales.dequantize(),
+            taus: self.taus.as_ref().map(|t| t.dequantize()),
+        }
+    }
+
+    /// Dequantize to ŵ^FP16 (f32 container) — Eq. 10.
+    pub fn dequantize(&self) -> Tensor {
+        let data = blockwise::dequantize(&self.to_blocks());
+        Tensor::new(&self.shape, data)
+    }
+
+    /// Total storage in bits: packed codes + double-quantized constants.
+    pub fn storage_bits(&self) -> usize {
+        let mut bits = self.len * self.k as usize + self.scales.storage_bits();
+        if let Some(t) = &self.taus {
+            bits += t.storage_bits();
+        }
+        bits
+    }
+
+    /// Effective bits per weight.
+    pub fn bits_per_weight(&self) -> f64 {
+        self.storage_bits() as f64 / self.len as f64
+    }
+
+    /// Mean per-block code entropy (Table 5 "Ent." / Figures 4–5).
+    pub fn mean_entropy(&self) -> f64 {
+        entropy::mean_block_entropy(&self.to_blocks())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{stats, Rng};
+
+    #[test]
+    fn full_pipeline_roundtrip() {
+        let mut rng = Rng::new(51);
+        let w = Tensor::new(&[32, 64], rng.normal_vec(2048, 0.0, 0.04));
+        let q = QuantizedTensor::quantize(&w, 4, 64, None);
+        let wh = q.dequantize();
+        assert_eq!(wh.shape(), w.shape());
+        // double quantization adds scale error (<~7%) on top of NF4
+        let err = stats::max_abs_diff(w.data(), wh.data());
+        assert!(err < 0.04 * 4.0 * 0.2, "err {err}");
+    }
+
+    #[test]
+    fn icq_pipeline_has_taus() {
+        let mut rng = Rng::new(52);
+        let w = Tensor::new(&[8, 64], rng.normal_vec(512, 0.02, 0.05));
+        let q = QuantizedTensor::quantize(&w, 4, 64, Some(&icq::IcqConfig::default()));
+        assert!(q.taus.is_some());
+        let wh = q.dequantize();
+        assert!(stats::mse(w.data(), wh.data()) < 1e-4);
+    }
+
+    #[test]
+    fn storage_accounting_4bit() {
+        let mut rng = Rng::new(53);
+        let n = 64 * 256; // whole number of blocks and dq groups
+        let w = Tensor::new(&[n], rng.normal_vec(n, 0.0, 1.0));
+        let q = QuantizedTensor::quantize(&w, 4, 64, None);
+        // 4 bits/code + (8b per block scale + 16b per 256 scales)/64
+        let expect = n * 4 + (n / 64) * 8 + 16;
+        assert_eq!(q.storage_bits(), expect);
+        assert!((q.bits_per_weight() - 4.126).abs() < 0.01);
+    }
+
+    #[test]
+    fn icq_storage_overhead_matches_paper_ratio() {
+        // ICQ doubles the per-block constant storage (τ next to s):
+        // paper Table 6 reports ~2% model-level increase at 4-bit.
+        let mut rng = Rng::new(54);
+        let n = 64 * 256;
+        let w = Tensor::new(&[n], rng.normal_vec(n, 0.0, 1.0));
+        let q0 = QuantizedTensor::quantize(&w, 4, 64, None);
+        let q1 = QuantizedTensor::quantize(&w, 4, 64, Some(&icq::IcqConfig::default()));
+        let ratio = q1.storage_bits() as f64 / q0.storage_bits() as f64;
+        assert!(ratio > 1.0 && ratio < 1.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn method_names_and_bits() {
+        assert_eq!(Method::Nf { k: 4 }.bits(), 4);
+        assert_eq!(Method::Fp16.bits(), 16);
+        assert!(Method::NfIcq { k: 2 }.uses_icq());
+        assert!(!Method::Gptq { k: 4 }.uses_icq());
+        assert!(Method::IntIcq { k: 4 }.paper_name().contains("ICQ"));
+    }
+
+    #[test]
+    fn entropy_icq_beats_vanilla_model_level() {
+        let mut rng = Rng::new(55);
+        // mildly skewed weights, as after pre-training
+        let w = Tensor::new(
+            &[64, 64],
+            (0..4096).map(|_| rng.normal_ms(0.015, 0.03)).collect(),
+        );
+        let q0 = QuantizedTensor::quantize(&w, 4, 64, None);
+        let q1 = QuantizedTensor::quantize(&w, 4, 64, Some(&icq::IcqConfig::default()));
+        assert!(q1.mean_entropy() > q0.mean_entropy());
+    }
+}

@@ -1,0 +1,241 @@
+//! NormalFloat (NF-k) data types — paper §3.1 / Appendix B.2.
+//!
+//! NF-k places the 2^k quantization levels at (averaged) quantiles of
+//! N(0,1), normalized to [-1, 1], so that a normally-distributed weight
+//! tensor uses all levels equally often (information-theoretically
+//! optimal for that prior). The exact level values the paper prints in
+//! Tables 11–13 come from the QLoRA construction:
+//!
+//! - NF4 / NF3 (asymmetric, "extra value" on the positive side):
+//!   positive levels = Φ⁻¹(linspace(δ, 0.5, 2^(k-1)+1))[:-1],
+//!   negative levels = −Φ⁻¹(linspace(δ, 0.5, 2^(k-1)))[:-1],
+//!   plus 0, all divided by the largest magnitude; δ = 0.9677083.
+//! - NF2 (symmetric — the paper uses "symmetrical settings in NF2 to
+//!   prevent excessive deviation of information"): ±Φ⁻¹(linspace(δ₂,
+//!   0.5, 3))[:-1] normalized, with δ₂ = 0.9959171689 reproducing the
+//!   published ±0.2525685 level.
+//!
+//! `codebook(k)` returns the authoritative values (asserted against the
+//! paper's tables in unit tests); `construct_asymmetric` /
+//! `construct_symmetric` expose the generative recipe.
+
+use crate::util::mathfn::norm_ppf;
+
+/// QLoRA offset δ for the asymmetric NF3/NF4 construction.
+pub const NF_OFFSET: f64 = 0.9677083;
+/// Offset reproducing the paper's symmetric NF2 levels (Table 11).
+pub const NF2_OFFSET: f64 = 0.9959171689285915;
+
+/// Paper Table 11 — NF2.
+pub const NF2: [f32; 4] = [-1.0, -0.25256848335266113, 0.2525685131549835, 1.0];
+
+/// Paper Table 12 — NF3.
+pub const NF3: [f32; 8] = [
+    -1.0,
+    -0.4786292016506195,
+    -0.217141792178154,
+    0.0,
+    0.16093020141124725,
+    0.33791524171829224,
+    0.5626170039176941,
+    1.0,
+];
+
+/// Paper Table 13 — NF4.
+pub const NF4: [f32; 16] = [
+    -1.0,
+    -0.6961928009986877,
+    -0.5250730514526367,
+    -0.39491748809814453,
+    -0.28444138169288635,
+    -0.18477343022823334,
+    -0.09105003625154495,
+    0.0,
+    0.07958029955625534,
+    0.16093020141124725,
+    0.24611230194568634,
+    0.33791524171829224,
+    0.44070982933044434,
+    0.5626170039176941,
+    0.7229568362236023,
+    1.0,
+];
+
+/// Generic asymmetric NF-k construction (QLoRA recipe, k >= 3).
+pub fn construct_asymmetric(k: u8, offset: f64) -> Vec<f32> {
+    assert!((2..=8).contains(&k), "NF-k supports k in 2..=8, got {k}");
+    let n_pos = 1usize << (k - 1); // positive side levels (incl. max)
+    let n_neg = (1usize << (k - 1)) - 1; // negative side levels
+    let mut v: Vec<f64> = Vec::with_capacity(1 << k);
+    // positive side: Φ⁻¹ over linspace(offset, 0.5, n_pos+1) minus endpoint 0.5
+    for i in 0..n_pos {
+        let p = offset + (0.5 - offset) * i as f64 / n_pos as f64;
+        v.push(norm_ppf(p));
+    }
+    v.push(0.0);
+    for i in 0..n_neg {
+        let p = offset + (0.5 - offset) * i as f64 / n_neg as f64;
+        v.push(-norm_ppf(p));
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let max = v.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+    v.into_iter().map(|x| (x / max) as f32).collect()
+}
+
+/// Symmetric NF-k construction (used for NF2).
+pub fn construct_symmetric(k: u8, offset: f64) -> Vec<f32> {
+    assert!((2..=8).contains(&k));
+    let n_side = 1usize << (k - 1);
+    let mut v: Vec<f64> = Vec::with_capacity(1 << k);
+    for i in 0..n_side {
+        let p = offset + (0.5 - offset) * i as f64 / n_side as f64;
+        let q = norm_ppf(p);
+        v.push(q);
+        v.push(-q);
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let max = v.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+    v.into_iter().map(|x| (x / max) as f32).collect()
+}
+
+/// Authoritative NF-k codebook (ascending). k in {2, 3, 4} returns the
+/// paper's exact table values; other k uses the generic construction.
+pub fn codebook(k: u8) -> Vec<f32> {
+    match k {
+        2 => NF2.to_vec(),
+        3 => NF3.to_vec(),
+        4 => NF4.to_vec(),
+        _ => construct_asymmetric(k, NF_OFFSET),
+    }
+}
+
+/// Decision boundaries (midpoints) for nearest-level quantization.
+pub fn boundaries(codebook: &[f32]) -> Vec<f32> {
+    codebook
+        .windows(2)
+        .map(|w| 0.5 * (w[0] + w[1]))
+        .collect()
+}
+
+/// Quantize one normalized value (expected in [-1, 1]) to a code index
+/// by nearest level, via branchy binary search on the boundaries.
+#[inline]
+pub fn quantize_one(bounds: &[f32], x: f32) -> u8 {
+    // partition_point: number of boundaries strictly below x.
+    let mut lo = 0usize;
+    let mut hi = bounds.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if x > bounds[mid] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo as u8
+}
+
+/// Quantize a slice of normalized values into code indices.
+pub fn quantize_codes(cb: &[f32], xs: &[f32], out: &mut Vec<u8>) {
+    let bounds = boundaries(cb);
+    out.clear();
+    out.reserve(xs.len());
+    for &x in xs {
+        out.push(quantize_one(&bounds, x));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nf4_construction_matches_table13() {
+        let got = construct_asymmetric(4, NF_OFFSET);
+        assert_eq!(got.len(), 16);
+        for (g, w) in got.iter().zip(NF4.iter()) {
+            assert!((g - w).abs() < 1e-6, "got {g} want {w}");
+        }
+    }
+
+    #[test]
+    fn nf3_construction_matches_table12() {
+        let got = construct_asymmetric(3, NF_OFFSET);
+        for (g, w) in got.iter().zip(NF3.iter()) {
+            assert!((g - w).abs() < 1e-6, "got {g} want {w}");
+        }
+    }
+
+    #[test]
+    fn nf2_symmetric_matches_table11() {
+        let got = construct_symmetric(2, NF2_OFFSET);
+        for (g, w) in got.iter().zip(NF2.iter()) {
+            assert!((g - w).abs() < 1e-6, "got {g} want {w}");
+        }
+    }
+
+    #[test]
+    fn codebooks_sorted_and_bounded() {
+        for k in 2..=6u8 {
+            let cb = codebook(k);
+            assert_eq!(cb.len(), 1 << k);
+            assert_eq!(cb[0], -1.0);
+            assert_eq!(*cb.last().unwrap(), 1.0);
+            for w in cb.windows(2) {
+                assert!(w[0] < w[1], "not strictly ascending at k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn nf4_contains_zero() {
+        assert!(NF4.contains(&0.0));
+        assert!(NF3.contains(&0.0));
+        // symmetric NF2 has no zero — by design
+        assert!(!NF2.contains(&0.0));
+    }
+
+    #[test]
+    fn quantize_one_nearest() {
+        let cb = codebook(4);
+        let bounds = boundaries(&cb);
+        // exact levels map to themselves
+        for (i, &v) in cb.iter().enumerate() {
+            assert_eq!(quantize_one(&bounds, v) as usize, i);
+        }
+        // extremes clamp
+        assert_eq!(quantize_one(&bounds, -5.0), 0);
+        assert_eq!(quantize_one(&bounds, 5.0), 15);
+        // midpoint-ish value picks the nearer level
+        assert_eq!(quantize_one(&bounds, 0.05) as usize, 8); // 0.0796 closer than 0.0
+    }
+
+    #[test]
+    fn quantize_codes_batch() {
+        let cb = codebook(2);
+        let mut out = Vec::new();
+        quantize_codes(&cb, &[-1.0, -0.3, 0.3, 1.0], &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn nearest_is_truly_nearest() {
+        // property: quantize_one returns the index minimizing |cb[i]-x|
+        let cb = codebook(4);
+        let bounds = boundaries(&cb);
+        let mut x = -1.2f32;
+        while x <= 1.2 {
+            let i = quantize_one(&bounds, x) as usize;
+            let best = cb
+                .iter()
+                .map(|&c| (c - x).abs())
+                .fold(f32::INFINITY, f32::min);
+            assert!(
+                (cb[i] - x).abs() <= best + 1e-6,
+                "x={x} picked {} best dist {best}",
+                cb[i]
+            );
+            x += 0.013;
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Percentile / quantile quantization (Dettmers et al., 2021) — the
+//! information-theoretically optimal data-dependent codebook the paper
+//! references when constructing NF2/NF3 (§4.3, Appendix B.2).
+//!
+//! Level i is the midpoint of adjacent (i/(2^k+1))-quantiles of the
+//! data (paper Eq. 2 with the empirical quantile function in place of
+//! Φ⁻¹), normalized to [-1, 1].
+
+use crate::util::stats::quantile_sorted;
+
+/// Build a 2^k-level codebook from the empirical quantiles of `data`,
+/// normalized to [-1, 1] (ascending).
+pub fn percentile_codebook(data: &[f32], k: u8) -> Vec<f32> {
+    assert!(!data.is_empty());
+    assert!((1..=8).contains(&k));
+    let mut sorted = data.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let levels = 1usize << k;
+    // Level i sits at the median of equal-mass bin i (the symmetric
+    // empirical counterpart of Eq. 2 — the paper's averaged-adjacent-
+    // quantile form is asymmetric at the edges because Q(0) = -inf for
+    // the normal prior; with empirical quantiles bin medians give exact
+    // equal occupancy on the calibration data).
+    let mut cb: Vec<f32> = (0..levels)
+        .map(|i| quantile_sorted(&sorted, (i as f32 + 0.5) / levels as f32))
+        .collect();
+    // Normalize by the data absmax (not the codebook max): blockwise
+    // quantization feeds the codebook values normalized by absmax, so
+    // this convention keeps bin occupancy uniform under that pipeline.
+    let amax = sorted
+        .first()
+        .unwrap()
+        .abs()
+        .max(sorted.last().unwrap().abs());
+    if amax > 0.0 {
+        for v in &mut cb {
+            *v /= amax;
+        }
+    }
+    // enforce strict monotonicity for boundary construction
+    for i in 1..cb.len() {
+        if cb[i] <= cb[i - 1] {
+            cb[i] = cb[i - 1] + f32::EPSILON.max(cb[i - 1].abs() * 1e-6);
+        }
+    }
+    cb
+}
+
+/// Fraction of data per bin when quantized with this codebook — the
+/// "equal occupancy" property quantile quantization targets.
+pub fn bin_occupancy(data: &[f32], cb: &[f32]) -> Vec<f32> {
+    let bounds = crate::quant::nf::boundaries(cb);
+    let amax = data.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-12);
+    let mut counts = vec![0u32; cb.len()];
+    for &x in data {
+        counts[crate::quant::nf::quantize_one(&bounds, x / amax) as usize] += 1;
+    }
+    counts
+        .into_iter()
+        .map(|c| c as f32 / data.len() as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn codebook_sorted_normalized() {
+        let mut rng = Rng::new(41);
+        let data = rng.normal_vec(10_000, 0.0, 1.0);
+        for k in [2u8, 3, 4] {
+            let cb = percentile_codebook(&data, k);
+            assert_eq!(cb.len(), 1 << k);
+            assert!(cb.windows(2).all(|w| w[0] < w[1]));
+            assert!(cb.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn normal_data_approximates_nf() {
+        // percentile codebook on big N(0,1) sample ≈ NF codebook shape:
+        // inner levels denser than outer
+        let mut rng = Rng::new(42);
+        let data = rng.normal_vec(200_000, 0.0, 1.0);
+        let cb = percentile_codebook(&data, 4);
+        let inner_gap = cb[8] - cb[7];
+        let outer_gap = cb[15] - cb[14];
+        assert!(outer_gap > inner_gap * 1.5, "{outer_gap} vs {inner_gap}");
+    }
+
+    #[test]
+    fn occupancy_roughly_uniform() {
+        let mut rng = Rng::new(43);
+        let data = rng.normal_vec(100_000, 0.0, 1.0);
+        let cb = percentile_codebook(&data, 3);
+        let occ = bin_occupancy(&data, &cb);
+        let target = 1.0 / 8.0;
+        for (i, &o) in occ.iter().enumerate() {
+            assert!((o - target).abs() < 0.06, "bin {i}: {o}");
+        }
+    }
+
+    #[test]
+    fn skewed_data_supported() {
+        let mut rng = Rng::new(44);
+        let data: Vec<f32> = (0..5000).map(|_| rng.f32().powi(3) * 2.0 - 0.1).collect();
+        let cb = percentile_codebook(&data, 4);
+        assert!(cb.windows(2).all(|w| w[0] < w[1]));
+    }
+}

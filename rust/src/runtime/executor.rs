@@ -1,0 +1,230 @@
+//! PJRT executor: load HLO text, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API, xla_extension 0.5.1 CPU) behind a
+//! typed interface driven by the manifest's [`GraphSpec`]: inputs are
+//! validated against the recorded shapes/dtypes before every call —
+//! a wrong buffer order fails loudly instead of silently miscomputing.
+//!
+//! aot.py lowers every graph with `return_tuple=True`, and this PJRT
+//! wrapper returns the tuple as a *single* device buffer; outputs are
+//! therefore downloaded and decomposed on the host after each call.
+//! Large read-only inputs (base weights) are uploaded once as device
+//! buffers and reused across calls — the per-step traffic is only the
+//! batch plus the small LoRA/optimizer state.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Dtype, GraphSpec};
+
+/// Typed host-side tensor handed to / received from a graph.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+            HostTensor::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(_) => Dtype::F32,
+            HostTensor::I32(_) => Dtype::I32,
+            HostTensor::U8(_) => Dtype::U8,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor, got {}", self.dtype()),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            HostTensor::U8(v) => Ok(v),
+            _ => bail!("expected u8 tensor, got {}", self.dtype()),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor, got {}", self.dtype()),
+        }
+    }
+}
+
+/// Shared PJRT client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile a graph described by the manifest.
+    pub fn load(&self, spec: &GraphSpec) -> Result<Executor<'_>> {
+        let exe = self.compile_file(&spec.file)?;
+        Ok(Executor { runtime: self, exe, spec: spec.clone() })
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        if !path.exists() {
+            bail!(
+                "HLO artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Upload a host tensor as a device buffer (for long-lived state).
+    pub fn to_device(&self, t: &HostTensor, shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            HostTensor::F32(v) => {
+                self.client.buffer_from_host_buffer::<f32>(v, shape, None)?
+            }
+            HostTensor::I32(v) => {
+                self.client.buffer_from_host_buffer::<i32>(v, shape, None)?
+            }
+            HostTensor::U8(v) => {
+                self.client.buffer_from_host_buffer::<u8>(v, shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+}
+
+/// A compiled graph bound to its manifest contract.
+pub struct Executor<'rt> {
+    runtime: &'rt Runtime,
+    exe: xla::PjRtLoadedExecutable,
+    spec: GraphSpec,
+}
+
+impl<'rt> Executor<'rt> {
+    pub fn spec(&self) -> &GraphSpec {
+        &self.spec
+    }
+
+    /// Validate one host tensor against input slot `i`.
+    fn check(&self, i: usize, t: &HostTensor) -> Result<()> {
+        let s = &self.spec.inputs[i];
+        if t.dtype() != s.dtype {
+            bail!(
+                "input {} ('{}'): dtype {} != manifest {}",
+                i, s.name, t.dtype(), s.dtype
+            );
+        }
+        if t.len() != s.elems() {
+            bail!(
+                "input {} ('{}'): {} elems != manifest shape {:?} ({})",
+                i, s.name, t.len(), s.shape, s.elems()
+            );
+        }
+        Ok(())
+    }
+
+    /// Upload host tensors per the manifest order (with validation).
+    pub fn upload_inputs(&self, inputs: &[HostTensor]) -> Result<Vec<xla::PjRtBuffer>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "graph {} expects {} inputs, got {}",
+                self.spec.file.display(), self.spec.inputs.len(), inputs.len()
+            );
+        }
+        inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                self.check(i, t)?;
+                self.runtime.to_device(t, &self.spec.inputs[i].shape)
+            })
+            .collect()
+    }
+
+    /// Upload a single input by slot index.
+    pub fn upload_one(&self, i: usize, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        self.check(i, t)?;
+        self.runtime.to_device(t, &self.spec.inputs[i].shape)
+    }
+
+    /// Execute over device buffers; download + decompose the result
+    /// tuple into typed host tensors (manifest-checked count).
+    pub fn execute(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "graph {} expects {} inputs, got {}",
+                self.spec.file.display(), self.spec.inputs.len(), inputs.len()
+            );
+        }
+        let mut res = self.exe.execute_b(inputs).context("execute_b")?;
+        let replica = res.pop().context("no device results")?;
+        let buf = replica.first().context("empty replica result")?;
+        let mut lit = buf.to_literal_sync()?;
+        let parts = lit.decompose_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.spec.n_outputs {
+            bail!(
+                "graph {} returned {} outputs, manifest says {}",
+                self.spec.file.display(), parts.len(), self.spec.n_outputs
+            );
+        }
+        parts.into_iter().map(literal_to_host).collect()
+    }
+
+    /// Upload + execute host tensors.
+    pub fn call(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let bufs = self.upload_inputs(inputs)?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.execute(&refs)
+    }
+
+    /// Upload + execute, converting every output to f32.
+    pub fn call_f32(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        self.call(inputs)?.into_iter().map(|t| t.into_f32()).collect()
+    }
+}
+
+/// Convert a downloaded literal into a typed host tensor.
+pub fn literal_to_host(lit: xla::Literal) -> Result<HostTensor> {
+    Ok(match lit.ty()? {
+        xla::ElementType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => HostTensor::I32(lit.to_vec::<i32>()?),
+        xla::ElementType::U8 => HostTensor::U8(lit.to_vec::<u8>()?),
+        other => {
+            // everything else (f64 accumulators etc.) flows back as f32
+            let conv = lit.convert(xla::PrimitiveType::F32)?;
+            let _ = other;
+            HostTensor::F32(conv.to_vec::<f32>()?)
+        }
+    })
+}

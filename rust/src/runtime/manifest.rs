@@ -1,0 +1,470 @@
+//! artifacts/manifest.json parser.
+//!
+//! The manifest is the contract between `python/compile/aot.py` and the
+//! Rust runtime: which HLO file implements which graph, the positional
+//! input specs (name/shape/dtype) and output counts, plus each model
+//! size's configuration. serde is not in the offline vendor set, so
+//! this module includes a small recursive-descent JSON parser —
+//! sufficient for the manifest subset (objects, arrays, strings,
+//! numbers, bools) and fully unit-tested.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+// ---------------------------------------------------------------------------
+// Minimal JSON value + parser
+// ---------------------------------------------------------------------------
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            bail!("trailing characters at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("expected object, got {self:?}"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of JSON"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>().context("bad number")?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(
+                                self.b
+                                    .get(self.i..self.i + 4)
+                                    .ok_or_else(|| anyhow!("bad \\u"))?,
+                            )?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            out.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| anyhow!("bad codepoint"))?,
+                            );
+                        }
+                        _ => bail!("bad escape at byte {}", self.i),
+                    }
+                }
+                _ => out.push(c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                c => bail!("expected ',' or ']' got '{}'", c as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut out = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let val = self.value()?;
+            out.insert(key, val);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                c => bail!("expected ',' or '}}' got '{}'", c as char),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed manifest
+// ---------------------------------------------------------------------------
+
+/// Element dtype of a graph input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U8,
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dtype::F32 => write!(f, "f32"),
+            Dtype::I32 => write!(f, "i32"),
+            Dtype::U8 => write!(f, "u8"),
+        }
+    }
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "u8" => Ok(Dtype::U8),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+}
+
+/// One positional graph input.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl InputSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT graph (HLO file + I/O contract).
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub file: PathBuf,
+    pub inputs: Vec<InputSpec>,
+    pub n_outputs: usize,
+}
+
+/// Model configuration as recorded by aot.py.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub rank: usize,
+    pub lora_alpha: f32,
+}
+
+/// One model size: config + its graphs.
+#[derive(Clone, Debug)]
+pub struct SizeEntry {
+    pub config: ModelCfg,
+    pub graphs: BTreeMap<String, GraphSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub sizes: BTreeMap<String, SizeEntry>,
+    pub kernels: BTreeMap<String, GraphSpec>,
+}
+
+fn parse_graph(dir: &Path, j: &Json) -> Result<GraphSpec> {
+    let inputs = j
+        .req("inputs")?
+        .as_arr()?
+        .iter()
+        .map(|s| {
+            Ok(InputSpec {
+                name: s.req("name")?.as_str()?.to_string(),
+                shape: s
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                dtype: Dtype::parse(s.req("dtype")?.as_str()?)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(GraphSpec {
+        file: dir.join(j.req("file")?.as_str()?),
+        inputs,
+        n_outputs: j.req("n_outputs")?.as_usize()?,
+    })
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut sizes = BTreeMap::new();
+        for (tag, entry) in j.req("sizes")?.as_obj()? {
+            let c = entry.req("config")?;
+            let config = ModelCfg {
+                name: c.req("name")?.as_str()?.to_string(),
+                vocab: c.req("vocab")?.as_usize()?,
+                d_model: c.req("d_model")?.as_usize()?,
+                n_layers: c.req("n_layers")?.as_usize()?,
+                n_heads: c.req("n_heads")?.as_usize()?,
+                d_ff: c.req("d_ff")?.as_usize()?,
+                seq: c.req("seq")?.as_usize()?,
+                batch: c.req("batch")?.as_usize()?,
+                rank: c.req("rank")?.as_usize()?,
+                lora_alpha: c.req("lora_alpha")?.as_f64()? as f32,
+            };
+            let mut graphs = BTreeMap::new();
+            for (gname, gj) in entry.req("graphs")?.as_obj()? {
+                graphs.insert(gname.clone(), parse_graph(&dir, gj)?);
+            }
+            sizes.insert(tag.clone(), SizeEntry { config, graphs });
+        }
+
+        let mut kernels = BTreeMap::new();
+        for (kname, kj) in j.req("kernels")?.as_obj()? {
+            kernels.insert(kname.clone(), parse_graph(&dir, kj)?);
+        }
+
+        Ok(Manifest { dir, sizes, kernels })
+    }
+
+    pub fn size(&self, tag: &str) -> Result<&SizeEntry> {
+        self.sizes
+            .get(tag)
+            .ok_or_else(|| anyhow!("size '{tag}' not in manifest (have: {:?})",
+                self.sizes.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn graph(&self, tag: &str, name: &str) -> Result<&GraphSpec> {
+        self.size(tag)?
+            .graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("graph '{name}' missing for size '{tag}'"))
+    }
+
+    pub fn kernel(&self, name: &str) -> Result<&GraphSpec> {
+        self.kernels
+            .get(name)
+            .ok_or_else(|| anyhow!("kernel '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(
+            Json::parse("\"a\\nb\"").unwrap(),
+            Json::Str("a\nb".into())
+        );
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "c"}], "d": {}}"#).unwrap();
+        let arr = j.req("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].req("b").unwrap().as_str().unwrap(), "c");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{}extra").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn unicode_escape() {
+        assert_eq!(
+            Json::parse("\"\\u0041\"").unwrap(),
+            Json::Str("A".into())
+        );
+    }
+
+    #[test]
+    fn graph_spec_roundtrip() {
+        let text = r#"{
+            "file": "g.hlo.txt",
+            "inputs": [
+                {"name": "x", "shape": [2, 3], "dtype": "f32"},
+                {"name": "t", "shape": [], "dtype": "i32"}
+            ],
+            "n_outputs": 2
+        }"#;
+        let g = parse_graph(Path::new("/art"), &Json::parse(text).unwrap()).unwrap();
+        assert_eq!(g.file, PathBuf::from("/art/g.hlo.txt"));
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].elems(), 6);
+        assert_eq!(g.inputs[1].dtype, Dtype::I32);
+        assert_eq!(g.n_outputs, 2);
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+}

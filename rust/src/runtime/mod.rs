@@ -1,0 +1,9 @@
+//! PJRT runtime layer: manifest parsing ([`manifest`]) and compiled
+//! graph execution ([`executor`]). The coordinator builds everything
+//! above this; nothing below it knows about the paper.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{literal_to_host, Executor, HostTensor, Runtime};
+pub use manifest::{Dtype, GraphSpec, InputSpec, Manifest, ModelCfg, SizeEntry};

@@ -1,0 +1,149 @@
+//! IEEE-754 binary16 (half precision) codec.
+//!
+//! The paper stores double-quantization scales as FP16 (`s₂^FP16`,
+//! `τ₂^FP16`); storage accounting (Tables 6/15) and the emulated
+//! double-quantization pipeline both need a faithful f32 ⇄ f16
+//! round-trip, including subnormals and rounding-to-nearest-even.
+
+/// Encode an f32 into binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+
+    // Re-bias: f32 exp bias 127, f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal range in f16.
+        let mut m = mant >> 13; // keep 10 bits
+        let rem = mant & 0x1FFF;
+        // round to nearest even
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut e = (unbiased + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            e += 1;
+            if e >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+        sign | ((e as u16) << 10) | m as u16
+    } else if unbiased >= -25 {
+        // Subnormal in f16.
+        let full = mant | 0x80_0000; // implicit 1
+        let shift = (-14 - unbiased) as u32 + 13;
+        let mut m = full >> shift;
+        let rem_mask = (1u32 << shift) - 1;
+        let rem = full & rem_mask;
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1;
+        }
+        sign | m as u16
+    } else {
+        sign // underflow to signed zero
+    }
+}
+
+/// Decode binary16 bits into f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            let exp32 = (e + 1 - 15 + 127) as u32;
+            sign | (exp32 << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 precision (quantize-dequantize).
+#[inline]
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.099976] {
+            let y = round_f16(x);
+            assert!(
+                (x - y).abs() <= x.abs() * 1e-3 + 1e-7,
+                "{x} -> {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x3555), 0.33325195);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00);
+        assert!(f16_bits_to_f32(0x7C00).is_infinite());
+        assert_eq!(f32_to_f16_bits(-1e6), 0xFC00);
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = 5.96e-8f32; // smallest positive f16 subnormal ≈ 5.96e-8
+        let y = round_f16(tiny);
+        assert!(y > 0.0 && y < 1.3e-7);
+        let zero = round_f16(1e-9);
+        assert_eq!(zero, 0.0);
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn relative_error_bound_normals() {
+        // f16 has 11 significand bits -> rel err <= 2^-11.
+        let mut x = 1e-4f32;
+        while x < 6e4 {
+            let y = round_f16(x);
+            assert!(((x - y) / x).abs() <= 1.0 / 2048.0 + 1e-9, "{x}");
+            x *= 1.37;
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Foundational utilities: deterministic RNG, special functions,
+//! statistics, a small tensor type, half-precision codec, threading
+//! helpers, and timers. Everything above `util` builds on these.
+
+pub mod f16;
+pub mod mathfn;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod threads;
+pub mod timer;
+
+pub use rng::Rng;
+pub use tensor::Tensor;

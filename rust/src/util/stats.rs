@@ -1,0 +1,178 @@
+//! Descriptive statistics over f32 slices: the ICQ search (median
+//! initialization, entropy metric) and the evaluation harness both sit
+//! on these primitives.
+
+/// Arithmetic mean. Empty slices return 0.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64) as f32
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    let var = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    var.sqrt() as f32
+}
+
+/// Maximum of |x| over the slice. Empty slices return 0.
+pub fn absmax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |acc, &x| acc.max(x.abs()))
+}
+
+/// Linear-interpolation quantile (same convention as numpy's default).
+/// `q` in [0, 1]. Sorts a copy — use [`quantile_sorted`] in hot loops.
+pub fn quantile(xs: &[f32], q: f32) -> f32 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Quantile over an already-sorted slice.
+pub fn quantile_sorted(sorted: &[f32], q: f32) -> f32 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q), "quantile q out of range: {q}");
+    let pos = q as f64 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = (pos - lo as f64) as f32;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median (0.5 quantile).
+pub fn median(xs: &[f32]) -> f32 {
+    quantile(xs, 0.5)
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Max absolute difference between two equal-length slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .fold(0.0f32, |acc, (&x, &y)| acc.max((x - y).abs()))
+}
+
+/// Shannon entropy (bits) of a discrete histogram of counts.
+/// Zero-count bins contribute nothing (lim p→0 of −p·log p = 0).
+pub fn entropy_bits(counts: &[u32]) -> f64 {
+    let total: u64 = counts.iter().map(|&c| c as u64).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let total_f = total as f64;
+    let mut h = 0.0;
+    for &c in counts {
+        if c > 0 {
+            let p = c as f64 / total_f;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// Softmax over a slice (numerically stable).
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|&x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z).collect()
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .fold((0usize, f32::NEG_INFINITY), |(bi, bv), (i, &v)| {
+            if v > bv {
+                (i, v)
+            } else {
+                (bi, bv)
+            }
+        })
+        .0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-6);
+        assert!((std(&xs) - 1.1180340).abs() < 1e-5);
+    }
+
+    #[test]
+    fn quantile_matches_numpy_convention() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-6);
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-6);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-6);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((median(&[4.0, 1.0, 2.0, 3.0]) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_uniform_is_log2_n() {
+        assert!((entropy_bits(&[5, 5, 5, 5]) - 2.0).abs() < 1e-12);
+        assert!((entropy_bits(&[1; 16]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_degenerate_is_zero() {
+        assert_eq!(entropy_bits(&[10, 0, 0, 0]), 0.0);
+        assert_eq!(entropy_bits(&[]), 0.0);
+        assert_eq!(entropy_bits(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn entropy_monotone_in_spread() {
+        // Flatter histograms have strictly larger entropy.
+        let h1 = entropy_bits(&[16, 0, 0, 0]);
+        let h2 = entropy_bits(&[8, 8, 0, 0]);
+        let h3 = entropy_bits(&[4, 4, 4, 4]);
+        assert!(h1 < h2 && h2 < h3);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn absmax_and_argmax() {
+        assert_eq!(absmax(&[-3.0, 2.0]), 3.0);
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+}

@@ -1,0 +1,137 @@
+//! Tiny data-parallel helpers on std::thread::scope.
+//!
+//! The ICQ τ search is embarrassingly parallel across quantization
+//! blocks; rayon is not in the offline vendor set, so this module
+//! provides the two primitives the pipeline needs: parallel map over an
+//! index range with static chunking, and a mutable-chunks variant.
+
+/// Number of worker threads to use (available_parallelism, capped).
+pub fn worker_count() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}
+
+/// Parallel map `f(i)` for `i in 0..n`, preserving order.
+///
+/// `f` must be `Sync` (shared across workers). Falls back to the serial
+/// path for small `n` where spawn overhead would dominate.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = worker_count();
+    if n < 64 || workers <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let slots = out.as_mut_slice();
+
+    std::thread::scope(|scope| {
+        // Hand each worker a disjoint sub-slice of the output.
+        let mut rest = slots;
+        let mut start = 0usize;
+        let mut handles = Vec::new();
+        while start < n {
+            let take = chunk.min(n - start);
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let begin = start;
+            let fref = &f;
+            handles.push(scope.spawn(move || {
+                for (k, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(fref(begin + k));
+                }
+            }));
+            start += take;
+        }
+        for h in handles {
+            h.join().expect("par_map worker panicked");
+        }
+    });
+
+    out.into_iter().map(|o| o.expect("slot unfilled")).collect()
+}
+
+/// Parallel for-each over mutable, equally-sized chunks of a slice.
+/// `f(chunk_index, chunk)` runs on worker threads.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_size: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_size > 0);
+    let n_chunks = data.len().div_ceil(chunk_size);
+    if n_chunks <= 1 || worker_count() <= 1 {
+        for (i, c) in data.chunks_mut(chunk_size).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let workers = worker_count().min(n_chunks);
+    let per_worker = n_chunks.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut chunk_idx = 0usize;
+        let fref = &f;
+        while !rest.is_empty() {
+            let take = (per_worker * chunk_size).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let base = chunk_idx;
+            scope.spawn(move || {
+                for (k, c) in head.chunks_mut(chunk_size).enumerate() {
+                    fref(base + k, c);
+                }
+            });
+            chunk_idx += take.div_ceil(chunk_size);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let got = par_map(1000, |i| i * i);
+        let want: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_small_n() {
+        assert_eq!(par_map(3, |i| i + 1), vec![1, 2, 3]);
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_all() {
+        let mut v = vec![0u32; 1037];
+        par_chunks_mut(&mut v, 64, |ci, c| {
+            for x in c.iter_mut() {
+                *x = ci as u32 + 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x > 0));
+        assert_eq!(v[0], 1);
+        assert_eq!(v[64], 2);
+        assert_eq!(*v.last().unwrap(), 1037u32.div_ceil(64));
+    }
+
+    #[test]
+    fn par_chunks_uneven_tail() {
+        let mut v = vec![1.0f32; 130];
+        par_chunks_mut(&mut v, 64, |_, c| {
+            let s: f32 = c.iter().sum();
+            c[0] = s;
+        });
+        assert_eq!(v[0], 64.0);
+        assert_eq!(v[128], 2.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Failure injection: the coordinator must fail loudly and precisely,
+//! never silently miscompute — missing artifacts, wrong shapes, wrong
+//! dtypes, corrupt checkpoints, oversized requests.
+
+use irqlora::model::{checkpoint, weights::NamedTensors};
+use irqlora::runtime::{Dtype, GraphSpec, HostTensor, InputSpec, Manifest, Runtime};
+use irqlora::util::Tensor;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load("artifacts").ok()
+}
+
+#[test]
+fn missing_artifact_dir_is_clear_error() {
+    let err = Manifest::load("/tmp/definitely-not-artifacts-xyz").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest.json"), "{msg}");
+}
+
+#[test]
+fn missing_hlo_file_mentions_make_artifacts() {
+    let Some(_) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let spec = GraphSpec {
+        file: "artifacts/no_such_graph.hlo.txt".into(),
+        inputs: vec![],
+        n_outputs: 1,
+    };
+    let err = match rt.load(&spec) {
+        Err(e) => e,
+        Ok(_) => panic!("loading a missing artifact should fail"),
+    };
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+#[test]
+fn wrong_input_count_rejected() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(m.kernel("icq_entropy").unwrap()).unwrap();
+    let err = exe.call(&[HostTensor::F32(vec![0.0; 64])]).unwrap_err();
+    assert!(format!("{err:#}").contains("expects 2 inputs"));
+}
+
+#[test]
+fn wrong_shape_rejected_with_name() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(m.kernel("icq_entropy").unwrap()).unwrap();
+    let err = exe
+        .call(&[
+            HostTensor::F32(vec![0.0; 63]), // should be 64
+            HostTensor::F32(vec![0.0; 201]),
+        ])
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("block") && msg.contains("63"), "{msg}");
+}
+
+#[test]
+fn wrong_dtype_rejected() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(m.kernel("icq_entropy").unwrap()).unwrap();
+    let err = exe
+        .call(&[
+            HostTensor::I32(vec![0; 64]), // f32 expected
+            HostTensor::F32(vec![0.0; 201]),
+        ])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("dtype"));
+}
+
+#[test]
+fn corrupt_hlo_text_rejected() {
+    let Some(_) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let path = std::env::temp_dir().join(format!("bad_{}.hlo.txt", std::process::id()));
+    std::fs::write(&path, "HloModule garbage\nENTRY { this is not hlo }").unwrap();
+    let spec = GraphSpec {
+        file: path.clone(),
+        inputs: vec![InputSpec { name: "x".into(), shape: vec![1], dtype: Dtype::F32 }],
+        n_outputs: 1,
+    };
+    assert!(rt.load(&spec).is_err());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn truncated_checkpoint_detected() {
+    let mut nt = NamedTensors::new();
+    nt.push("w", Tensor::full(&[256], 1.5));
+    let path = std::env::temp_dir().join(format!("trunc_{}.irqc", std::process::id()));
+    checkpoint::save(&nt, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+    assert!(checkpoint::load(&path).is_err());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn server_rejects_oversized_prompt_without_crashing() {
+    let Some(m) = manifest() else { return };
+    use irqlora::coordinator::{BatchServer, ServerConfig};
+    use irqlora::model::weights::{init_base, init_lora};
+    use irqlora::util::Rng;
+    use std::time::Duration;
+
+    let tag = "xs";
+    let size = m.size(tag).unwrap().clone();
+    let spec = m.graph(tag, "pretrain_step").unwrap();
+    let nb = irqlora::coordinator::trainer::pretrain_layout(spec.inputs.len()).unwrap();
+    let mut rng = Rng::new(1);
+    let base = init_base(&spec.inputs[..nb], size.config.n_layers, &mut rng);
+    let tspec = m.graph(tag, "train_step").unwrap();
+    let nl = irqlora::coordinator::trainer::train_layout(tspec.inputs.len(), nb).unwrap();
+    let lora = init_lora(&tspec.inputs[nb..nb + nl], size.config.rank, &mut rng);
+
+    let server = BatchServer::spawn(
+        m,
+        ServerConfig {
+            tag: tag.into(),
+            masks: (0.0, 0.0),
+            max_wait: Duration::from_millis(1),
+        },
+        base,
+        lora,
+    )
+    .unwrap();
+
+    // oversized prompt -> per-request error
+    let err = server.query(vec![1; size.config.seq + 5]).unwrap_err();
+    assert!(format!("{err:#}").contains("out of range"));
+    // empty prompt -> per-request error
+    assert!(server.query(vec![]).is_err());
+    // server still healthy afterwards
+    let ok = server.query(vec![1, 8, 70, 70, 4, 3]).unwrap();
+    assert_eq!(ok.logits.len(), size.config.vocab);
+    server.shutdown();
+}

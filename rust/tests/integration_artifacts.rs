@@ -1,0 +1,81 @@
+//! Cross-language parity: AOT HLO kernel artifacts vs the Rust
+//! implementations of the same math. These tests require
+//! `make artifacts` to have been run (skipped with a clear message
+//! otherwise) and exercise the full path rust -> PJRT -> HLO -> host.
+
+use irqlora::quant::{blockwise, entropy, nf};
+use irqlora::runtime::{HostTensor, Manifest, Runtime};
+use irqlora::util::Rng;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping artifact tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn icq_entropy_kernel_matches_rust() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(m.kernel("icq_entropy").unwrap()).unwrap();
+
+    let mut rng = Rng::new(101);
+    let block: Vec<f32> = (0..64).map(|_| rng.normal_ms(0.01, 0.03)).collect();
+    let taus: Vec<f32> = (0..201).map(|i| -0.09 + 0.2 * i as f32 / 200.0).collect();
+
+    let outs = exe
+        .call_f32(&[
+            HostTensor::F32(block.clone()),
+            HostTensor::F32(taus.clone()),
+        ])
+        .unwrap();
+    let hlo_entropies = &outs[0];
+    assert_eq!(hlo_entropies.len(), 201);
+
+    // Rust oracle: same sweep
+    let cb = nf::codebook(4);
+    let bounds = nf::boundaries(&cb);
+    for (i, &tau) in taus.iter().enumerate() {
+        let mut amax = 0f32;
+        for &x in &block {
+            amax = amax.max((x - tau).abs());
+        }
+        let mut counts = [0u32; 16];
+        for &x in &block {
+            counts[nf::quantize_one(&bounds, (x - tau) / amax) as usize] += 1;
+        }
+        let h = irqlora::util::stats::entropy_bits(&counts) as f32;
+        assert!(
+            (h - hlo_entropies[i]).abs() < 1e-4,
+            "tau[{i}]={tau}: rust {h} vs hlo {}",
+            hlo_entropies[i]
+        );
+    }
+}
+
+#[test]
+fn quant_block_kernel_matches_rust() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(m.kernel("quant_block").unwrap()).unwrap();
+
+    let mut rng = Rng::new(102);
+    let w: Vec<f32> = (0..1024 * 64).map(|_| rng.normal_ms(0.0, 0.05)).collect();
+
+    let outs = exe.call(&[HostTensor::F32(w.clone())]).unwrap();
+    let codes = outs[0].as_u8().unwrap().to_vec();
+    let scales = outs[1].as_f32().unwrap().to_vec();
+
+    let q = blockwise::quantize(&w, 4, 64, None);
+    assert_eq!(codes, q.codes, "codes must match bit-exactly");
+    for (a, b) in scales.iter().zip(&q.scales) {
+        assert!((a - b).abs() < 1e-7);
+    }
+    // and entropy computed from either side agrees
+    let h = entropy::code_entropy(&codes, 4);
+    assert!((h - entropy::code_entropy(&q.codes, 4)).abs() < 1e-12);
+}

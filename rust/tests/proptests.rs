@@ -1,0 +1,182 @@
+//! Property-based tests (seeded random-case runner — proptest is not
+//! in the offline vendor set). Each property runs over many random
+//! configurations; failures print the case seed for reproduction.
+
+use irqlora::lora::iec::{gcd, lora_iec_forward, u1_elastic, u2_elastic};
+use irqlora::lora::merge::{merge_l1, merge_l2};
+use irqlora::quant::{blockwise, double_quant::DoubleQuant, entropy, fp8, icq, integer, nf};
+use irqlora::util::f16;
+use irqlora::util::{stats, Rng};
+
+/// Run `f` over `n` random cases derived from a base seed.
+fn cases(n: usize, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
+    for i in 0..n {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15) ^ (i as u64);
+        let mut rng = Rng::new(seed);
+        f(seed, &mut rng);
+    }
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    cases(50, 1, |seed, rng| {
+        let k = 1 + rng.below(8) as u8;
+        let n = rng.below(2000);
+        let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << k) as u8).collect();
+        let packed = blockwise::pack_codes(&codes, k);
+        let back = blockwise::unpack_codes(&packed, k, n);
+        assert_eq!(back, codes, "seed={seed} k={k} n={n}");
+    });
+}
+
+#[test]
+fn prop_quant_error_bounded_by_block_absmax() {
+    // |w - dq(q(w))| <= absmax(block) * max_gap(codebook)/2 per element
+    cases(30, 2, |seed, rng| {
+        let k = 2 + rng.below(3) as u8;
+        let n = 64 * (1 + rng.below(20));
+        let scale = rng.range_f32(1e-3, 10.0);
+        let w: Vec<f32> = (0..n).map(|_| rng.normal_ms(0.0, scale)).collect();
+        let q = blockwise::quantize(&w, k, 64, None);
+        let wh = blockwise::dequantize(&q);
+        let cb = nf::codebook(k);
+        let max_gap = cb.windows(2).map(|p| p[1] - p[0]).fold(0f32, f32::max);
+        for (bi, chunk) in w.chunks(64).enumerate() {
+            let amax = stats::absmax(chunk);
+            let bound = amax * max_gap / 2.0 + 1e-6;
+            for (i, &x) in chunk.iter().enumerate() {
+                let err = (x - wh[bi * 64 + i]).abs();
+                assert!(err <= bound, "seed={seed} k={k} block={bi}: {err} > {bound}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_icq_entropy_at_least_vanilla_on_average() {
+    // across random shifted distributions, mean ICQ entropy must not
+    // lose to vanilla (the paper's core claim, Figure 4)
+    cases(15, 3, |seed, rng| {
+        let shift = rng.range_f32(-0.05, 0.05);
+        let scale = rng.range_f32(0.005, 0.1);
+        let w: Vec<f32> = (0..64 * 30).map(|_| rng.normal_ms(shift, scale)).collect();
+        let q0 = blockwise::quantize(&w, 4, 64, None);
+        let q1 = icq::quantize(&w, 4, 64, &icq::IcqConfig::default());
+        let h0 = entropy::mean_block_entropy(&q0);
+        let h1 = entropy::mean_block_entropy(&q1);
+        assert!(h1 >= h0 - 1e-6, "seed={seed}: icq {h1} < vanilla {h0}");
+    });
+}
+
+#[test]
+fn prop_iec_merge_equivalence_random_dims() {
+    // x·ℓ̃1·ℓ̃2 == U2(U1(x)) for random (h, r, o) triples
+    let dims = [4usize, 6, 8, 12, 16, 24, 32, 48, 64];
+    cases(40, 4, |seed, rng| {
+        let h = *rng.pick(&dims);
+        let r = *rng.pick(&dims[..5]);
+        let o = *rng.pick(&dims);
+        let x = rng.normal_vec(h, 0.0, 1.0);
+        let l1 = rng.normal_vec(h * r, 0.0, 0.2);
+        let l2 = rng.normal_vec(r * o, 0.0, 0.2);
+        let (b1, b2) = (rng.normal(), rng.normal());
+        let explicit = lora_iec_forward(&x, &l1, &l2, r, o, 1.0, b1, b2, 1.0, 1.0);
+        let m1 = merge_l1(&l1, h, r, b1);
+        let m2 = merge_l2(&l2, r, o, b2);
+        let merged = lora_iec_forward(&x, &m1, &m2, r, o, 1.0, 0.0, 0.0, 0.0, 0.0);
+        for (i, (a, b)) in explicit.iter().zip(&merged).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                "seed={seed} h={h} r={r} o={o} idx={i}: {a} vs {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_elastic_terms_preserve_mean() {
+    cases(40, 5, |seed, rng| {
+        let dims = [8usize, 16, 32, 64, 128];
+        let h = *rng.pick(&dims);
+        let r = *rng.pick(&dims[..3]);
+        let x = rng.normal_vec(h, 0.0, 1.0);
+        let e1 = u1_elastic(&x, r);
+        let m_in = stats::mean(&x);
+        let m_out = stats::mean(&e1);
+        assert!((m_in - m_out).abs() < 1e-4, "seed={seed}");
+        let e2 = u2_elastic(&e1, h);
+        assert!((stats::mean(&e2) - m_out).abs() < 1e-4, "seed={seed}");
+    });
+}
+
+#[test]
+fn prop_double_quant_relative_error() {
+    cases(30, 6, |seed, rng| {
+        let n = 1 + rng.below(600);
+        let scale = rng.range_f32(1e-3, 100.0);
+        let vals: Vec<f32> = (0..n).map(|_| rng.range_f32(0.1, 1.0) * scale).collect();
+        let dq = DoubleQuant::quantize(&vals, 256);
+        for (i, (&a, b)) in vals.iter().zip(dq.dequantize()).enumerate() {
+            let rel = ((a - b) / a).abs();
+            assert!(rel < 0.08, "seed={seed} i={i}: {a} -> {b} ({rel})");
+        }
+    });
+}
+
+#[test]
+fn prop_fp8_f16_monotone_rounding() {
+    // quantize-dequantize must be monotone (order-preserving)
+    cases(20, 7, |seed, rng| {
+        let mut xs: Vec<f32> = (0..200).map(|_| rng.normal_ms(0.0, 50.0)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let e4m3: Vec<f32> = xs.iter().map(|&x| fp8::round_e4m3(x)).collect();
+        let h: Vec<f32> = xs.iter().map(|&x| f16::round_f16(x)).collect();
+        for w in e4m3.windows(2) {
+            assert!(w[0] <= w[1], "seed={seed}: e4m3 not monotone");
+        }
+        for w in h.windows(2) {
+            assert!(w[0] <= w[1], "seed={seed}: f16 not monotone");
+        }
+    });
+}
+
+#[test]
+fn prop_integer_quant_idempotent() {
+    // quantizing an already-dequantized tensor is (near) lossless
+    cases(25, 8, |seed, rng| {
+        let n = 64 * (1 + rng.below(8));
+        let w = rng.normal_vec(n, 0.0, 0.1);
+        let q1 = integer::quantize(&w, 4, 64);
+        let d1 = integer::dequantize(&q1);
+        let q2 = integer::quantize(&d1, 4, 64);
+        let d2 = integer::dequantize(&q2);
+        let err = stats::max_abs_diff(&d1, &d2);
+        assert!(err < 1e-5, "seed={seed}: idempotency violated ({err})");
+    });
+}
+
+#[test]
+fn prop_gcd_properties() {
+    cases(100, 9, |seed, rng| {
+        let a = 1 + rng.below(512);
+        let b = 1 + rng.below(512);
+        let g = gcd(a, b);
+        assert!(g >= 1 && a % g == 0 && b % g == 0, "seed={seed}");
+        assert_eq!(gcd(a, b), gcd(b, a));
+        assert_eq!(gcd(a, a), a);
+    });
+}
+
+#[test]
+fn prop_entropy_bounds_and_permutation_invariance() {
+    cases(30, 10, |seed, rng| {
+        let k = 2 + rng.below(3) as u8;
+        let n = 1 + rng.below(500);
+        let mut codes: Vec<u8> = (0..n).map(|_| rng.below(1 << k) as u8).collect();
+        let h1 = entropy::code_entropy(&codes, k);
+        assert!(h1 >= 0.0 && h1 <= k as f64 + 1e-9, "seed={seed}");
+        rng.shuffle(&mut codes);
+        let h2 = entropy::code_entropy(&codes, k);
+        assert!((h1 - h2).abs() < 1e-12, "seed={seed}: entropy not permutation-invariant");
+    });
+}
