@@ -3,7 +3,7 @@
 //! (Tables 6/7 and the §4.2 efficiency ablation).
 //! Run: cargo bench --bench icq_overhead
 
-use irqlora::bench_harness::{bench, bench_throughput};
+use irqlora::bench_harness::{bench, bench_throughput, iters};
 use irqlora::quant::icq::{self, IcqConfig};
 use irqlora::quant::{blockwise, Method};
 use irqlora::coordinator::quantize_model;
@@ -19,7 +19,7 @@ fn main() {
     let vanilla = bench_throughput(
         "vanilla_nf4_quantize (256K)",
         1,
-        5,
+        iters(5),
         n as f64,
         "elem",
         || {
@@ -29,7 +29,7 @@ fn main() {
     let icq_r = bench_throughput(
         "icq_nf4_quantize (256K, 201 taus, parallel)",
         1,
-        5,
+        iters(5),
         n as f64,
         "elem",
         || {
@@ -45,10 +45,10 @@ fn main() {
     // §Perf before/after — the sorted-block fast path vs the naive
     // reference loop (bit-identical results, property-tested)
     let block = &w[0..64];
-    let before = bench("icq_search_tau REFERENCE (naive loop)", 10, 50, || {
+    let before = bench("icq_search_tau REFERENCE (naive loop)", 10, iters(50), || {
         std::hint::black_box(icq::search_tau_reference(block, 4, &IcqConfig::default()));
     });
-    let after = bench("icq_search_tau FAST (sorted+binary-search)", 10, 50, || {
+    let after = bench("icq_search_tau FAST (sorted+binary-search)", 10, iters(50), || {
         std::hint::black_box(icq::search_tau(block, 4, &IcqConfig::default()));
     });
     println!(
@@ -68,10 +68,10 @@ ICQ inner-loop speedup (fast vs reference): {:.2}x",
     ];
     let mut rng = Rng::new(3);
     let model = init_base(&specs, 6, &mut rng);
-    bench("quantize_model NfIcq (0.74M params)", 1, 3, || {
+    bench("quantize_model NfIcq (0.74M params)", 1, iters(3), || {
         std::hint::black_box(quantize_model(&model, Method::NfIcq { k: 4 }, 0).unwrap());
     });
-    bench("quantize_model Nf (0.74M params)", 1, 3, || {
+    bench("quantize_model Nf (0.74M params)", 1, iters(3), || {
         std::hint::black_box(quantize_model(&model, Method::Nf { k: 4 }, 0).unwrap());
     });
 }

@@ -1,10 +1,12 @@
 //! Bench: IEC forward overhead vs plain LoRA, and the Eq. 16 merge
 //! cost — supporting the paper's "IEC is free at inference" claim.
+//! The `_into` rows reuse one scratch pair across iterations (the
+//! serving adapter-reload path).
 //! Run: cargo bench --bench iec_merge
 
-use irqlora::bench_harness::bench;
+use irqlora::bench_harness::{bench, iters};
 use irqlora::lora::iec::lora_iec_forward;
-use irqlora::lora::merge::{merge_l1, merge_l2};
+use irqlora::lora::merge::{merge_l1, merge_l1_into, merge_l2, merge_l2_into};
 use irqlora::util::Rng;
 
 fn main() {
@@ -14,28 +16,40 @@ fn main() {
     let l1 = rng.normal_vec(h * r, 0.0, 0.1);
     let l2 = rng.normal_vec(r * o, 0.0, 0.1);
 
-    bench("lora_forward plain (h=o=1024, r=64)", 5, 30, || {
+    bench("lora_forward plain (h=o=1024, r=64)", 5, iters(30), || {
         std::hint::black_box(lora_iec_forward(
             &x, &l1, &l2, r, o, 1.0, 0.5, 0.5, 0.0, 0.0,
         ));
     });
-    bench("lora_forward with IEC (explicit U1+U2)", 5, 30, || {
+    bench("lora_forward with IEC (explicit U1+U2)", 5, iters(30), || {
         std::hint::black_box(lora_iec_forward(
             &x, &l1, &l2, r, o, 1.0, 0.5, 0.5, 1.0, 1.0,
         ));
     });
 
-    bench("merge_l1 (Eq.16, 1024x64)", 5, 50, || {
+    bench("merge_l1 (Eq.16, 1024x64)", 5, iters(50), || {
         std::hint::black_box(merge_l1(&l1, h, r, 0.5));
     });
-    bench("merge_l2 (Eq.16, 64x1024)", 5, 50, || {
+    bench("merge_l2 (Eq.16, 64x1024)", 5, iters(50), || {
         std::hint::black_box(merge_l2(&l2, r, o, 0.5));
+    });
+
+    // allocation-free variants: one scratch pair reused per iteration
+    let mut s1 = Vec::new();
+    let mut s2 = Vec::new();
+    bench("merge_l1_into (scratch reuse)", 5, iters(50), || {
+        merge_l1_into(&l1, h, r, 0.5, &mut s1);
+        std::hint::black_box(&s1);
+    });
+    bench("merge_l2_into (scratch reuse)", 5, iters(50), || {
+        merge_l2_into(&l2, r, o, 0.5, &mut s2);
+        std::hint::black_box(&s2);
     });
 
     // merged adapters: forward is the plain path again (zero overhead)
     let m1 = merge_l1(&l1, h, r, 0.5);
     let m2 = merge_l2(&l2, r, o, 0.5);
-    bench("lora_forward merged (inference path)", 5, 30, || {
+    bench("lora_forward merged (inference path)", 5, iters(30), || {
         std::hint::black_box(lora_iec_forward(
             &x, &m1, &m2, r, o, 1.0, 0.0, 0.0, 0.0, 0.0,
         ));

@@ -1,9 +1,20 @@
 //! Bench: blockwise NF quant/dequant + packing throughput — the raw
-//! storage-pipeline cost per weight (feeds the Table 6 storage story).
+//! storage-pipeline cost per weight (feeds the Table 6 storage story
+//! and the §Perf claims of the fused packed-domain pipeline).
+//!
+//! Every operation is measured twice: the `[reference serial]` rows run
+//! the original element-at-a-time implementations (kept in-tree as the
+//! property-test oracles), the unsuffixed rows run the parallel /
+//! fused fast paths. Both land in `BENCH_quant.json` so the before /
+//! after ratio is recorded with the code that produced it.
+//!
 //! Run: cargo bench --bench quantize_throughput
+//! Env: IRQLORA_BENCH_QUICK=1 (1 iter smoke), IRQLORA_THREADS=n,
+//!      IRQLORA_BENCH_JSON=path
 
-use irqlora::bench_harness::bench_throughput;
-use irqlora::quant::{blockwise, QuantizedTensor};
+use irqlora::bench_harness::{bench_json_path, bench_throughput, iters, JsonSink};
+use irqlora::quant::blockwise::{self, QuantizedBlocks};
+use irqlora::quant::{DequantScratch, QuantizedTensor};
 use irqlora::util::{Rng, Tensor};
 
 fn main() {
@@ -11,39 +22,142 @@ fn main() {
     let mut rng = Rng::new(1);
     let w = rng.normal_vec(n, 0.0, 0.02);
     let t = Tensor::new(&[n], w.clone());
+    let it = iters(10);
+    let mut sink = JsonSink::new();
 
+    // --- blockwise quantization: reference serial vs parallel ---
     for k in [2u8, 3, 4] {
-        bench_throughput(
-            &format!("blockwise_quantize_nf{k} (1M f32)"),
+        let r = bench_throughput(
+            &format!("blockwise_quantize_nf{k} (1M f32) [reference serial]"),
             1,
-            10,
+            it,
             n as f64,
             "elem",
             || {
-                std::hint::black_box(blockwise::quantize(&w, k, 64, None));
+                std::hint::black_box(blockwise::quantize_reference(&w, k, 64, None));
             },
         );
+        sink.push(&r, Some(n as f64));
+        let mut q_scratch = QuantizedBlocks::scratch();
+        let r = bench_throughput(
+            &format!("blockwise_quantize_nf{k} (1M f32)"),
+            1,
+            it,
+            n as f64,
+            "elem",
+            || {
+                blockwise::quantize_into(&w, k, 64, None, &mut q_scratch);
+                std::hint::black_box(&q_scratch);
+            },
+        );
+        sink.push(&r, Some(n as f64));
     }
 
+    // --- dequantization (unpacked domain): reference vs parallel ---
     let q = blockwise::quantize(&w, 4, 64, None);
-    bench_throughput("dequantize_nf4 (1M)", 1, 10, n as f64, "elem", || {
-        std::hint::black_box(blockwise::dequantize(&q));
+    let r = bench_throughput(
+        "dequantize_nf4 unpacked (1M) [reference serial]",
+        1,
+        it,
+        n as f64,
+        "elem",
+        || {
+            std::hint::black_box(blockwise::dequantize_reference(&q));
+        },
+    );
+    sink.push(&r, Some(n as f64));
+    let mut deq = vec![0f32; n];
+    let r = bench_throughput(
+        "dequantize_nf4 unpacked (1M)",
+        1,
+        it,
+        n as f64,
+        "elem",
+        || {
+            blockwise::dequantize_into(&q, &mut deq);
+            std::hint::black_box(&deq);
+        },
+    );
+    sink.push(&r, Some(n as f64));
+
+    // --- bit packing: reference vs byte-aligned parallel ---
+    let r = bench_throughput(
+        "pack_codes 4bit (1M) [reference serial]",
+        1,
+        it,
+        n as f64,
+        "elem",
+        || {
+            std::hint::black_box(blockwise::pack_codes_reference(&q.codes, 4));
+        },
+    );
+    sink.push(&r, Some(n as f64));
+    let mut packed_buf = Vec::new();
+    let r = bench_throughput("pack_codes 4bit (1M)", 1, it, n as f64, "elem", || {
+        blockwise::pack_codes_into(&q.codes, 4, &mut packed_buf);
+        std::hint::black_box(&packed_buf);
     });
-    bench_throughput("pack_codes 4bit (1M)", 1, 10, n as f64, "elem", || {
-        std::hint::black_box(blockwise::pack_codes(&q.codes, 4));
-    });
+    sink.push(&r, Some(n as f64));
+
     let packed = blockwise::pack_codes(&q.codes, 4);
-    bench_throughput("unpack_codes 4bit (1M)", 1, 10, n as f64, "elem", || {
-        std::hint::black_box(blockwise::unpack_codes(&packed, 4, n));
+    let r = bench_throughput(
+        "unpack_codes 4bit (1M) [reference serial]",
+        1,
+        it,
+        n as f64,
+        "elem",
+        || {
+            std::hint::black_box(blockwise::unpack_codes_reference(&packed, 4, n));
+        },
+    );
+    sink.push(&r, Some(n as f64));
+    let mut codes_buf = Vec::new();
+    let r = bench_throughput("unpack_codes 4bit (1M)", 1, it, n as f64, "elem", || {
+        blockwise::unpack_codes_into(&packed, 4, n, &mut codes_buf);
+        std::hint::black_box(&codes_buf);
     });
-    bench_throughput(
+    sink.push(&r, Some(n as f64));
+
+    // --- the headline: full storage-pipeline dequantization ---
+    // reference = unpack every code to a byte, reconstruct constants,
+    // serial dequant (the pre-fusion pipeline); fast = fused LUT dequant
+    // straight from packed bytes with reused scratch.
+    let qt = QuantizedTensor::quantize(&t, 4, 64, None);
+    let r = bench_throughput(
+        "dequantize_nf4 (1M) [reference serial]",
+        1,
+        it,
+        n as f64,
+        "elem",
+        || {
+            std::hint::black_box(qt.dequantize_reference());
+        },
+    );
+    sink.push(&r, Some(n as f64));
+    let mut out = vec![0f32; n];
+    let mut scratch = DequantScratch::default();
+    let r = bench_throughput("dequantize_nf4 (1M)", 1, it, n as f64, "elem", || {
+        qt.dequantize_into(&mut out, &mut scratch);
+        std::hint::black_box(&out);
+    });
+    sink.push(&r, Some(n as f64));
+
+    // --- full pipeline quantize (pack + double-quant included) ---
+    let r = bench_throughput(
         "full_pipeline_quantize (double-quant incl.)",
         1,
-        5,
+        iters(5),
         n as f64,
         "elem",
         || {
             std::hint::black_box(QuantizedTensor::quantize(&t, 4, 64, None));
         },
     );
+    sink.push(&r, Some(n as f64));
+
+    let path = bench_json_path("BENCH_quant.json");
+    match sink.write_merged(&path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
 }

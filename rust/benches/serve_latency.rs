@@ -1,11 +1,16 @@
 //! Bench: batched serving latency/throughput through the forward graph
 //! under the dynamic batcher, across offered concurrency levels.
-//! Requires `make artifacts`.
+//! Requires `make artifacts`. Rows are also recorded into
+//! `BENCH_quant.json` under names carrying their own semantics
+//! (`serve_latency p50 clients=N`): unlike `bench()`-produced rows,
+//! ns_per_iter holds the p50 request latency under contention, ns_min
+//! the fastest request, iters the request count, per_sec requests/s.
 //! Run: cargo bench --bench serve_latency
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use irqlora::bench_harness::{bench_json_path, JsonSink};
 use irqlora::coordinator::{BatchServer, ServerConfig};
 use irqlora::data::evalset::mmlu_item;
 use irqlora::data::World;
@@ -49,6 +54,7 @@ fn main() {
         .map(|_| mmlu_item(&world, prng.below(4), &mut prng, 5).prompt)
         .collect();
 
+    let mut sink = JsonSink::new();
     println!(
         "{:>8} {:>12} {:>12} {:>12} {:>12}",
         "clients", "req/s", "p50 ms", "p99 ms", "mean batch"
@@ -84,5 +90,18 @@ fn main() {
             p(0.99),
             before.mean_batch_size(),
         );
+        sink.push_raw(
+            &format!("serve_latency p50 clients={clients}"),
+            lat.len(), // request count, not closure iterations
+            p(0.5) * 1e6, // p50 ms -> ns per request
+            lat[0] * 1e6, // fastest request, ns
+            Some(lat.len() as f64 / wall),
+        );
+    }
+
+    let path = bench_json_path("BENCH_quant.json");
+    match sink.write_merged(&path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
     }
 }

@@ -3,7 +3,7 @@
 //! pretrain step for comparison. Requires `make artifacts`.
 //! Run: cargo bench --bench train_step
 
-use irqlora::bench_harness::bench;
+use irqlora::bench_harness::{bench, iters};
 use irqlora::coordinator::{Finetuner, Pretrainer};
 use irqlora::coordinator::quantize_model;
 use irqlora::data::instruct::{instruct_batch, Dataset};
@@ -27,7 +27,7 @@ fn main() {
 
     // pretrain step
     let mut pre = Pretrainer::new(&rt, &manifest, tag, 1).unwrap();
-    bench("pretrain_step nano-xs (B=8, S=128)", 2, 10, || {
+    bench("pretrain_step nano-xs (B=8, S=128)", 2, iters(10), || {
         let batch = corpus::pretrain_batch(&world, &mut rng, b, s);
         std::hint::black_box(pre.step(batch.tokens, batch.targets).unwrap());
     });
@@ -40,13 +40,13 @@ fn main() {
     let qm = quantize_model(&base, Method::NfIcq { k: 4 }, 1).unwrap();
     let mut ft = Finetuner::new(&rt, &manifest, tag, &qm.dequantized, (1.0, 1.0), 1).unwrap();
     let mut rng3 = Rng::new(3);
-    bench("finetune_step nano-xs IR-QLoRA (B=8, S=128)", 2, 10, || {
+    bench("finetune_step nano-xs IR-QLoRA (B=8, S=128)", 2, iters(10), || {
         let batch = instruct_batch(&world, Dataset::AlpacaSyn, &mut rng3, b, s);
         std::hint::black_box(ft.step(batch.tokens, batch.targets).unwrap());
     });
 
     let mut ft0 = Finetuner::new(&rt, &manifest, tag, &qm.dequantized, (0.0, 0.0), 1).unwrap();
-    bench("finetune_step nano-xs vanilla QLoRA", 2, 10, || {
+    bench("finetune_step nano-xs vanilla QLoRA", 2, iters(10), || {
         let batch = instruct_batch(&world, Dataset::AlpacaSyn, &mut rng3, b, s);
         std::hint::black_box(ft0.step(batch.tokens, batch.targets).unwrap());
     });

@@ -2,7 +2,19 @@
 //! vendor set). Warms up, runs timed iterations, reports mean ± std,
 //! min, and optional throughput. Used by every target in
 //! `rust/benches/` (all built with `harness = false`).
+//!
+//! Besides stdout, benches can record results machine-readably through
+//! [`JsonSink`], which merges into `BENCH_quant.json` at the repo root
+//! (same-name entries are replaced, other benches' entries are kept) so
+//! the perf trajectory is tracked across PRs. Environment knobs:
+//!
+//! - `IRQLORA_BENCH_QUICK=1` — [`iters`] returns 1 (CI smoke mode;
+//!   `scripts/verify.sh` sets it);
+//! - `IRQLORA_BENCH_JSON=path` — override the JSON output path;
+//! - `IRQLORA_THREADS=n` — pin the worker pool for reproducible runs
+//!   (see `util::threads::worker_count`).
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark.
@@ -21,8 +33,23 @@ impl BenchResult {
     }
 }
 
-/// Run `f` repeatedly: `warmup` unmeasured + `iters` measured calls.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+/// Measured-iteration count for a bench: `default_iters`, or 1 when
+/// `IRQLORA_BENCH_QUICK` is set to a non-empty, non-"0" value.
+pub fn iters(default_iters: usize) -> usize {
+    if quick_mode(std::env::var("IRQLORA_BENCH_QUICK").ok().as_deref()) {
+        1
+    } else {
+        default_iters
+    }
+}
+
+/// Whether an `IRQLORA_BENCH_QUICK` value means "quick mode on".
+/// Pure so it is testable without process-global env mutation.
+fn quick_mode(v: Option<&str>) -> bool {
+    matches!(v, Some(s) if !s.is_empty() && s != "0")
+}
+
+fn sample<F: FnMut()>(warmup: usize, iters: usize, f: &mut F) -> (f64, f64, f64) {
     assert!(iters > 0);
     for _ in 0..warmup {
         f();
@@ -36,15 +63,31 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     let mean = samples.iter().sum::<f64>() / iters as f64;
     let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / iters as f64;
     let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    (mean, var.sqrt(), min)
+}
+
+fn bench_inner<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    tput: Option<(f64, &str)>,
+    mut f: F,
+) -> BenchResult {
+    let (mean, std, min) = sample(warmup, iters, &mut f);
     let r = BenchResult {
         name: name.to_string(),
         iters,
         mean: Duration::from_secs_f64(mean),
-        std: Duration::from_secs_f64(var.sqrt()),
+        std: Duration::from_secs_f64(std),
         min: Duration::from_secs_f64(min),
     };
-    report(&r, None);
+    report(&r, tput);
     r
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured + `iters` measured calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> BenchResult {
+    bench_inner(name, warmup, iters, None, f)
 }
 
 /// Like [`bench`] but also reports `units_per_iter / sec` throughput.
@@ -54,29 +97,9 @@ pub fn bench_throughput<F: FnMut()>(
     iters: usize,
     units_per_iter: f64,
     unit: &str,
-    mut f: F,
+    f: F,
 ) -> BenchResult {
-    for _ in 0..warmup {
-        f();
-    }
-    let mut samples = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t = Instant::now();
-        f();
-        samples.push(t.elapsed().as_secs_f64());
-    }
-    let mean = samples.iter().sum::<f64>() / iters as f64;
-    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / iters as f64;
-    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
-    let r = BenchResult {
-        name: name.to_string(),
-        iters,
-        mean: Duration::from_secs_f64(mean),
-        std: Duration::from_secs_f64(var.sqrt()),
-        min: Duration::from_secs_f64(min),
-    };
-    report(&r, Some((units_per_iter, unit)));
-    r
+    bench_inner(name, warmup, iters, Some((units_per_iter, unit)), f)
 }
 
 fn report(r: &BenchResult, tput: Option<(f64, &str)>) {
@@ -91,7 +114,7 @@ fn report(r: &BenchResult, tput: Option<(f64, &str)>) {
         }
     };
     print!(
-        "{:<44} {:>12} ± {:<10} (min {:>10}, n={})",
+        "{:<52} {:>12} ± {:<10} (min {:>10}, n={})",
         r.name,
         fmt(r.mean),
         fmt(r.std),
@@ -113,6 +136,174 @@ fn report(r: &BenchResult, tput: Option<(f64, &str)>) {
     println!();
 }
 
+/// One machine-readable benchmark record (see [`JsonSink`]).
+///
+/// Rows pushed via [`JsonSink::push_raw`] may carry different
+/// statistics than the mean-over-iterations of [`bench`]-produced
+/// rows; such rows must say so in their name (e.g. the
+/// `serve_latency p50 clients=N` rows record p50 request latency) so
+/// cross-row tooling never mixes semantics silently.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JsonEntry {
+    pub name: String,
+    pub iters: usize,
+    /// Mean wall time per iteration, nanoseconds.
+    pub ns_per_iter: f64,
+    /// Fastest iteration, nanoseconds.
+    pub ns_min: f64,
+    /// Units (elements, requests, …) per second, when the bench
+    /// reported throughput.
+    pub per_sec: Option<f64>,
+}
+
+/// Collects [`JsonEntry`]s and writes them as a stable, dependency-free
+/// JSON document (one entry per line under `"results"`). Writing merges
+/// with an existing file: entries sharing a name are replaced, entries
+/// from other benches are preserved.
+#[derive(Debug, Default)]
+pub struct JsonSink {
+    entries: Vec<JsonEntry>,
+}
+
+impl JsonSink {
+    pub fn new() -> JsonSink {
+        JsonSink::default()
+    }
+
+    /// Record a finished benchmark. `units_per_iter` (if given) adds a
+    /// derived `per_sec` throughput field.
+    pub fn push(&mut self, r: &BenchResult, units_per_iter: Option<f64>) {
+        self.push_raw(
+            &r.name,
+            r.iters,
+            r.mean.as_secs_f64() * 1e9,
+            r.min.as_secs_f64() * 1e9,
+            units_per_iter.map(|u| u / r.mean.as_secs_f64()),
+        );
+    }
+
+    /// Record an arbitrary measurement (e.g. a serving-latency row that
+    /// did not come from [`bench`]).
+    pub fn push_raw(
+        &mut self,
+        name: &str,
+        iters: usize,
+        ns_per_iter: f64,
+        ns_min: f64,
+        per_sec: Option<f64>,
+    ) {
+        self.entries.push(JsonEntry {
+            name: sanitize(name),
+            iters,
+            ns_per_iter,
+            ns_min,
+            per_sec,
+        });
+    }
+
+    /// Merge with any entries already in `path` and (re)write the file.
+    pub fn write_merged(&self, path: &Path) -> std::io::Result<()> {
+        let mut merged = read_entries(path).unwrap_or_default();
+        merged.retain(|e| !self.entries.iter().any(|n| n.name == e.name));
+        merged.extend(self.entries.iter().cloned());
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"irqlora-bench-v1\",\n  \"results\": [\n");
+        for (i, e) in merged.iter().enumerate() {
+            let per_sec = match e.per_sec {
+                Some(p) => fnum(p),
+                None => "null".to_string(),
+            };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"ns_per_iter\": {}, \"ns_min\": {}, \"per_sec\": {}}}{}\n",
+                e.name,
+                e.iters,
+                fnum(e.ns_per_iter),
+                fnum(e.ns_min),
+                per_sec,
+                if i + 1 == merged.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, s)
+    }
+}
+
+/// Keep names trivially JSON-safe (the parser in [`read_entries`] and
+/// downstream tooling rely on it).
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c == '"' || c == '\\' || c.is_control() { '_' } else { c })
+        .collect()
+}
+
+fn fnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "0.000".to_string()
+    }
+}
+
+/// Parse a file previously written by [`JsonSink::write_merged`]. Only
+/// understands that exact line-per-entry layout — enough for merging.
+pub fn read_entries(path: &Path) -> Option<Vec<JsonEntry>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        if !line.starts_with("{\"name\": \"") {
+            continue;
+        }
+        let (Some(name), Some(iters), Some(ns), Some(ns_min)) = (
+            field_str(line, "name"),
+            field_num(line, "iters"),
+            field_num(line, "ns_per_iter"),
+            field_num(line, "ns_min"),
+        ) else {
+            continue;
+        };
+        out.push(JsonEntry {
+            name,
+            iters: iters as usize,
+            ns_per_iter: ns,
+            ns_min,
+            per_sec: field_num(line, "per_sec"),
+        });
+    }
+    Some(out)
+}
+
+fn field_str(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\": \"");
+    let start = line.find(&pat)? + pat.len();
+    let end = line[start..].find('"')? + start;
+    Some(line[start..end].to_string())
+}
+
+fn field_num(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\": ");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest
+        .find(|c: char| c == ',' || c == '}')
+        .unwrap_or(rest.len());
+    rest[..end].trim().parse::<f64>().ok()
+}
+
+/// Default output path for a bench JSON artifact: honors the
+/// `IRQLORA_BENCH_JSON` override, else places `name` at the repo root
+/// (benches run with CWD = `rust/`, so that is usually `../name`).
+pub fn bench_json_path(name: &str) -> PathBuf {
+    if let Ok(p) = std::env::var("IRQLORA_BENCH_JSON") {
+        return PathBuf::from(p);
+    }
+    let parent = Path::new("..");
+    if parent.join(".git").exists() && !Path::new(".git").exists() {
+        return parent.join(name);
+    }
+    PathBuf::from(name)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +323,64 @@ mod tests {
             std::hint::black_box((0..100).sum::<usize>());
         });
         assert!(r.mean_secs() >= 0.0);
+    }
+
+    #[test]
+    fn json_sink_roundtrip_and_merge() {
+        let dir = std::env::temp_dir().join(format!(
+            "irqlora_bench_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+
+        let mut a = JsonSink::new();
+        a.push_raw("alpha (1M)", 10, 1234.5, 1000.0, Some(8.1e8));
+        a.push_raw("beta", 3, 50.0, 49.0, None);
+        a.write_merged(&path).unwrap();
+
+        let back = read_entries(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "alpha (1M)");
+        assert_eq!(back[0].iters, 10);
+        assert!((back[0].ns_per_iter - 1234.5).abs() < 1e-9);
+        assert!((back[0].per_sec.unwrap() - 8.1e8).abs() < 1.0);
+        assert_eq!(back[1].per_sec, None);
+
+        // second sink replaces same-name entries, keeps the rest
+        let mut b = JsonSink::new();
+        b.push_raw("beta", 5, 40.0, 39.0, Some(100.0));
+        b.write_merged(&path).unwrap();
+        let back = read_entries(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        let beta = back.iter().find(|e| e.name == "beta").unwrap();
+        assert_eq!(beta.iters, 5);
+        assert!((beta.per_sec.unwrap() - 100.0).abs() < 1e-9);
+        assert!(back.iter().any(|e| e.name == "alpha (1M)"));
+
+        // the document is self-describing
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("irqlora-bench-v1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quick_mode_iters() {
+        // the env-value interpretation is tested through the pure
+        // helper; no process-global env mutation (tests run in
+        // parallel and benches rely on the caller's pin).
+        assert!(!quick_mode(None));
+        assert!(!quick_mode(Some("")));
+        assert!(!quick_mode(Some("0")));
+        assert!(quick_mode(Some("1")));
+        assert!(quick_mode(Some("yes")));
+        // iters() itself just routes through quick_mode
+        assert!(iters(10) == 10 || iters(10) == 1);
+    }
+
+    #[test]
+    fn sanitize_names() {
+        assert_eq!(sanitize("ok name (1M)"), "ok name (1M)");
+        assert_eq!(sanitize("bad\"name\\x"), "bad_name_x");
     }
 }

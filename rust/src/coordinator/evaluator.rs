@@ -1,7 +1,14 @@
 //! Multiple-choice evaluator: drives the `forward` graph over SynMMLU /
 //! SynCSQA items and scores single-token choices by next-token logit —
 //! the 5-shot / 0-shot MC protocol of the paper's benchmarks.
+//!
+//! Hot-loop discipline: the frozen base weights are dequantized **once**
+//! (by `quantize_model`) and uploaded **once** at construction via the
+//! zero-copy `upload_f32` path — nothing re-dequantizes or re-uploads
+//! them per batch. Inside the eval loop only the token tensor changes;
+//! it is filled into one reused scratch buffer and uploaded per batch.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
@@ -9,7 +16,9 @@ use anyhow::{bail, Result};
 use crate::data::evalset::McItem;
 use crate::data::PAD;
 use crate::model::weights::NamedTensors;
-use crate::runtime::{Executor, HostTensor, Manifest, Runtime};
+use crate::runtime::{Executor, Manifest, Runtime};
+
+use super::quantize::QuantizedModel;
 
 /// Accuracy per group plus the average — one table row.
 #[derive(Clone, Debug)]
@@ -44,6 +53,9 @@ impl EvalResult {
 pub struct Evaluator<'rt> {
     exe: Executor<'rt>,
     fixed_bufs: Vec<xla::PjRtBuffer>,
+    /// Reused per-batch token scratch (batch × seq), so the eval loop
+    /// allocates nothing on the host side.
+    tok_scratch: RefCell<Vec<i32>>,
     batch: usize,
     seq: usize,
     vocab: usize,
@@ -74,19 +86,36 @@ impl<'rt> Evaluator<'rt> {
         let mut slot = 0usize;
         for nt in [base, lora] {
             for t in nt.tensors() {
-                fixed_bufs.push(exe.upload_one(slot, &HostTensor::F32(t.data().to_vec()))?);
+                // zero-copy upload: no per-tensor host clone
+                fixed_bufs.push(exe.upload_f32(slot, t.data())?);
                 slot += 1;
             }
         }
-        fixed_bufs.push(exe.upload_one(slot, &HostTensor::F32(vec![masks.0]))?);
-        fixed_bufs.push(exe.upload_one(slot + 1, &HostTensor::F32(vec![masks.1]))?);
+        fixed_bufs.push(exe.upload_f32(slot, &[masks.0])?);
+        fixed_bufs.push(exe.upload_f32(slot + 1, &[masks.1])?);
         Ok(Evaluator {
             exe,
             fixed_bufs,
+            tok_scratch: RefCell::new(Vec::new()),
             batch: cfg.batch,
             seq: cfg.seq,
             vocab: cfg.vocab,
         })
+    }
+
+    /// Build an evaluator straight from a [`QuantizedModel`]: the base
+    /// was dequantized exactly once by `quantize_model` (fused packed-
+    /// domain path) and that buffer is reused here — callers should
+    /// never re-dequantize storage tensors per evaluation.
+    pub fn from_quantized(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        tag: &str,
+        qm: &QuantizedModel,
+        lora: &NamedTensors,
+        masks: (f32, f32),
+    ) -> Result<Self> {
+        Self::new(rt, manifest, tag, &qm.dequantized, lora, masks)
     }
 
     /// Raw next-token logits at the last prompt position of each item.
@@ -95,17 +124,19 @@ impl<'rt> Evaluator<'rt> {
         if items.len() > self.batch {
             bail!("batch too large: {} > {}", items.len(), self.batch);
         }
-        let mut tokens = vec![PAD; self.batch * self.seq];
-        for (i, item) in items.iter().enumerate() {
-            if item.prompt.len() > self.seq {
-                bail!("prompt longer than seq ({})", item.prompt.len());
+        let tok_buf = {
+            let mut tokens = self.tok_scratch.borrow_mut();
+            tokens.clear();
+            tokens.resize(self.batch * self.seq, PAD);
+            for (i, item) in items.iter().enumerate() {
+                if item.prompt.len() > self.seq {
+                    bail!("prompt longer than seq ({})", item.prompt.len());
+                }
+                tokens[i * self.seq..i * self.seq + item.prompt.len()]
+                    .copy_from_slice(&item.prompt);
             }
-            tokens[i * self.seq..i * self.seq + item.prompt.len()]
-                .copy_from_slice(&item.prompt);
-        }
-        let tok_buf = self
-            .exe
-            .upload_one(self.fixed_bufs.len(), &HostTensor::I32(tokens))?;
+            self.exe.upload_i32(self.fixed_bufs.len(), tokens.as_slice())?
+        };
         let mut all: Vec<&xla::PjRtBuffer> = self.fixed_bufs.iter().collect();
         all.push(&tok_buf);
         let outs = self.exe.execute(&all)?;

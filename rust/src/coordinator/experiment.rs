@@ -214,7 +214,7 @@ pub fn run_arm(
     };
     let finetune_time = ft_timer.elapsed();
 
-    let ev = Evaluator::new(rt, manifest, tag, &qm.dequantized, &lora, arm.masks)?;
+    let ev = Evaluator::from_quantized(rt, manifest, tag, &qm, &lora, arm.masks)?;
     let eval = ev.evaluate(eval_items)?;
     log::info!("[{}] avg accuracy {:.1}%", arm.name, eval.avg_accuracy() * 100.0);
 

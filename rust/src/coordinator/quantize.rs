@@ -9,7 +9,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::model::weights::{is_quantized_proj, proj_kind, NamedTensors};
-use crate::quant::{blockwise, gptq, icq, integer, Method, QuantizedTensor};
+use crate::quant::{blockwise, gptq, icq, integer, DequantScratch, Method, QuantizedTensor};
 use crate::util::f16::round_f16;
 use crate::util::timer::Timer;
 use crate::util::{Rng, Tensor};
@@ -93,6 +93,10 @@ pub fn quantize_model(
     let mut reports = Vec::new();
     let mut rng = Rng::new(seed ^ 0x51554e54);
     let icq_cfg = icq::IcqConfig::default();
+    // one dequant scratch reused across every tensor: the per-block
+    // constants buffers are recycled, and the fused packed-domain path
+    // writes each tensor's weights straight into its output vec
+    let mut dq_scratch = DequantScratch::default();
 
     for (name, t) in weights.iter() {
         if !is_quantized_proj(name) {
@@ -110,7 +114,8 @@ pub fn quantize_model(
                 let qt = QuantizedTensor::quantize(t, k, blockwise::DEFAULT_BLOCK, None);
                 let h = qt.mean_entropy();
                 let bits = qt.bits_per_weight();
-                let dq = qt.dequantize().into_data();
+                let mut dq = vec![0f32; qt.len];
+                qt.dequantize_into(&mut dq, &mut dq_scratch);
                 storage.push((name.to_string(), qt));
                 (dq, h, bits)
             }
@@ -119,7 +124,8 @@ pub fn quantize_model(
                     QuantizedTensor::quantize(t, k, blockwise::DEFAULT_BLOCK, Some(&icq_cfg));
                 let h = qt.mean_entropy();
                 let bits = qt.bits_per_weight();
-                let dq = qt.dequantize().into_data();
+                let mut dq = vec![0f32; qt.len];
+                qt.dequantize_into(&mut dq, &mut dq_scratch);
                 storage.push((name.to_string(), qt));
                 (dq, h, bits)
             }

@@ -15,7 +15,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::PAD;
 use crate::model::weights::NamedTensors;
-use crate::runtime::{HostTensor, Manifest, Runtime};
+use crate::runtime::{Manifest, Runtime};
 
 /// One inference reply.
 #[derive(Clone, Debug)]
@@ -97,12 +97,13 @@ impl BatchServer {
                 let mut slot = 0usize;
                 for nt in [&base, &lora] {
                     for t in nt.tensors() {
-                        fixed.push(exe.upload_one(slot, &HostTensor::F32(t.data().to_vec()))?);
+                        // zero-copy upload: no per-tensor host clone
+                        fixed.push(exe.upload_f32(slot, t.data())?);
                         slot += 1;
                     }
                 }
-                fixed.push(exe.upload_one(slot, &HostTensor::F32(vec![cfg.masks.0]))?);
-                fixed.push(exe.upload_one(slot + 1, &HostTensor::F32(vec![cfg.masks.1]))?);
+                fixed.push(exe.upload_f32(slot, &[cfg.masks.0])?);
+                fixed.push(exe.upload_f32(slot + 1, &[cfg.masks.1])?);
                 Ok((exe, fixed))
             })();
             let (exe, fixed) = match init {
@@ -155,7 +156,8 @@ impl BatchServer {
                 }
 
                 let result = (|| -> Result<Vec<f32>> {
-                    let tok = exe.upload_one(fixed.len(), &HostTensor::I32(tokens.clone()))?;
+                    // borrowed upload: no per-batch token clone
+                    let tok = exe.upload_i32(fixed.len(), &tokens)?;
                     let mut all: Vec<&xla::PjRtBuffer> = fixed.iter().collect();
                     all.push(&tok);
                     let outs = exe.execute(&all)?;

@@ -15,43 +15,61 @@
 //! x·ℓ̃1·ℓ̃2 == U2(U1(x)) holds exactly (the property Eq. 17 asserts).
 
 use super::iec::gcd;
+use crate::util::threads;
 
 /// Merge β1 into ℓ1 (h×r row-major): ℓ̃1[i,j] = ℓ1[i,j] + β1·g/h
 /// where floor(i/(h/g)) == j mod g, g = gcd(h, r).
 pub fn merge_l1(l1: &[f32], h: usize, r: usize, beta1: f32) -> Vec<f32> {
+    let mut out = Vec::new();
+    merge_l1_into(l1, h, r, beta1, &mut out);
+    out
+}
+
+/// Allocation-free [`merge_l1`] into a reused buffer (cleared and
+/// refilled) — serving reloads adapters often enough that the merge
+/// scratch is worth keeping around. Parallel over output rows.
+pub fn merge_l1_into(l1: &[f32], h: usize, r: usize, beta1: f32, out: &mut Vec<f32>) {
     assert_eq!(l1.len(), h * r);
     let g = gcd(h, r);
     let seg_i = h / g; // input rows per pooled group
     let add = beta1 * g as f32 / h as f32; // = beta1 / seg_i
-    let mut out = l1.to_vec();
-    for i in 0..h {
+    out.clear();
+    out.extend_from_slice(l1);
+    threads::par_chunks_mut_with(out.as_mut_slice(), r, 64, |i, row| {
         let gi = i / seg_i;
-        for j in 0..r {
+        for (j, v) in row.iter_mut().enumerate() {
             if j % g == gi {
-                out[i * r + j] += add;
+                *v += add;
             }
         }
-    }
-    out
+    });
 }
 
 /// Merge β2 into ℓ2 (r×o row-major): ℓ̃2[i,j] = ℓ2[i,j] + β2·g/r
 /// where floor(i/(r/g)) == j mod g, g = gcd(o, r).
 pub fn merge_l2(l2: &[f32], r: usize, o: usize, beta2: f32) -> Vec<f32> {
+    let mut out = Vec::new();
+    merge_l2_into(l2, r, o, beta2, &mut out);
+    out
+}
+
+/// Allocation-free [`merge_l2`] into a reused buffer. Parallel over
+/// output rows.
+pub fn merge_l2_into(l2: &[f32], r: usize, o: usize, beta2: f32, out: &mut Vec<f32>) {
     assert_eq!(l2.len(), r * o);
     let g = gcd(o, r);
     let seg_i = r / g;
     let add = beta2 * g as f32 / r as f32;
-    let mut out = l2.to_vec();
-    for i in 0..r {
+    out.clear();
+    out.extend_from_slice(l2);
+    threads::par_chunks_mut_with(out.as_mut_slice(), o, 64, |i, row| {
         let gi = i / seg_i;
-        for j in 0..o {
+        for (j, v) in row.iter_mut().enumerate() {
             if j % g == gi {
-                out[i * o + j] += add;
+                *v += add;
             }
         }
-    }
-    out
+    });
 }
 
 #[cfg(test)]
@@ -122,6 +140,24 @@ mod tests {
                 let want = if j % g == i / (h / g) { add } else { 0.0 };
                 assert_eq!(m[i * r + j], want, "({i},{j})");
             }
+        }
+    }
+
+    #[test]
+    fn into_variants_reuse_scratch() {
+        // one pair of buffers reused across differently-sized merges
+        // must match the allocating variants exactly
+        let mut rng = Rng::new(78);
+        let mut m1 = Vec::new();
+        let mut m2 = Vec::new();
+        for (h, r, o) in [(16usize, 4usize, 8usize), (64, 8, 64), (12, 8, 20)] {
+            let l1 = rng.normal_vec(h * r, 0.0, 0.2);
+            let l2 = rng.normal_vec(r * o, 0.0, 0.2);
+            let (b1, b2) = (rng.normal(), rng.normal());
+            merge_l1_into(&l1, h, r, b1, &mut m1);
+            merge_l2_into(&l2, r, o, b2, &mut m2);
+            assert_eq!(m1, merge_l1(&l1, h, r, b1), "h={h} r={r}");
+            assert_eq!(m2, merge_l2(&l2, r, o, b2), "r={r} o={o}");
         }
     }
 

@@ -65,10 +65,18 @@ impl LoraAdapter {
 
     /// Produce inference-time merged matrices (ℓ̃1, ℓ̃2): IEC folded in.
     pub fn merged(&self) -> (Vec<f32>, Vec<f32>) {
-        (
-            merge::merge_l1(&self.l1, self.h, self.r, self.beta1),
-            merge::merge_l2(&self.l2, self.r, self.o, self.beta2),
-        )
+        let mut m1 = Vec::new();
+        let mut m2 = Vec::new();
+        self.merged_into(&mut m1, &mut m2);
+        (m1, m2)
+    }
+
+    /// Allocation-free [`Self::merged`]: writes into reused buffers so
+    /// a serving loop re-merging many adapters recycles one scratch
+    /// pair instead of allocating per projection.
+    pub fn merged_into(&self, m1: &mut Vec<f32>, m2: &mut Vec<f32>) {
+        merge::merge_l1_into(&self.l1, self.h, self.r, self.beta1, m1);
+        merge::merge_l2_into(&self.l2, self.r, self.o, self.beta2, m2);
     }
 }
 

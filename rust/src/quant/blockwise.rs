@@ -3,13 +3,41 @@
 //! Weights are split into contiguous blocks (default 64 elements, the
 //! paper's setting); each block is normalized by its absmax and each
 //! element mapped to the nearest NF-k level. Codes are bit-packed
-//! (2/3/4 bits per element) for storage accounting; the compute path
-//! works on unpacked `u8` codes.
+//! (1..=8 bits per element) for storage.
+//!
+//! Two implementations coexist:
+//!
+//! - **Fast path** (the public [`quantize`] / [`dequantize`] /
+//!   [`pack_codes`] / [`unpack_codes`] and their allocation-free
+//!   `*_into` variants): parallel over blocks via
+//!   [`crate::util::threads`], with scratch-buffer reuse across calls.
+//!   Packing parallelizes on byte-aligned spans (any 8 consecutive
+//!   k-bit codes occupy exactly k whole bytes, so chunks of a multiple
+//!   of 8 elements own disjoint output bytes). For dequantization
+//!   *directly from packed bytes* — no unpacked `u8` intermediate at
+//!   all — see [`super::fused`].
+//! - **Reference path** ([`quantize_reference`],
+//!   [`dequantize_reference`], [`pack_codes_reference`],
+//!   [`unpack_codes_reference`]): the original serial loops, kept as
+//!   the oracle the fast paths are property-tested bit-identical
+//!   against (`rust/tests/proptests.rs` and the tests below).
+//!
+//! Every fast path computes exactly the same f32 expressions in the
+//! same per-element order as the reference, so equality is exact
+//! (bit-identical), not approximate.
 
 use super::nf;
+use crate::util::threads;
 
 /// Paper-default quantization block size.
 pub const DEFAULT_BLOCK: usize = 64;
+
+/// Elements per parallel packing task. Must be a multiple of 8 so each
+/// task's k-bit codes cover whole output bytes (8 codes ↔ k bytes).
+const PACK_CHUNK_ELEMS: usize = 8192;
+
+/// Blocks per task when computing per-block scales in parallel.
+const SCALE_CHUNK_BLOCKS: usize = 256;
 
 /// A blockwise-quantized tensor (codes + one scale per block, plus an
 /// optional per-block shift τ — ICQ fills it, vanilla leaves it None).
@@ -30,6 +58,12 @@ pub struct QuantizedBlocks {
 }
 
 impl QuantizedBlocks {
+    /// An empty container to be filled by [`quantize_into`]; reusing
+    /// one across calls makes repeated quantization allocation-free.
+    pub fn scratch() -> QuantizedBlocks {
+        QuantizedBlocks { k: 0, block: 1, len: 0, codes: Vec::new(), scales: Vec::new(), taus: None }
+    }
+
     pub fn n_blocks(&self) -> usize {
         self.len.div_ceil(self.block)
     }
@@ -44,7 +78,86 @@ impl QuantizedBlocks {
 
 /// Quantize `w` blockwise with the NF-k codebook. `taus[i]` (if given)
 /// is subtracted from block i before normalization (ICQ, Eq. 8).
+/// Parallel over blocks; allocates a fresh [`QuantizedBlocks`] — use
+/// [`quantize_into`] to reuse buffers across calls.
 pub fn quantize(w: &[f32], k: u8, block: usize, taus: Option<&[f32]>) -> QuantizedBlocks {
+    let mut q = QuantizedBlocks::scratch();
+    quantize_into(w, k, block, taus, &mut q);
+    q
+}
+
+/// Allocation-free quantization into a reused [`QuantizedBlocks`]:
+/// `q`'s buffers are cleared and refilled (growing only when the input
+/// outgrows them). Bit-identical to [`quantize_reference`].
+pub fn quantize_into(
+    w: &[f32],
+    k: u8,
+    block: usize,
+    taus: Option<&[f32]>,
+    q: &mut QuantizedBlocks,
+) {
+    assert!(block > 0);
+    let n_blocks = w.len().div_ceil(block);
+    if let Some(t) = taus {
+        assert_eq!(t.len(), n_blocks, "one tau per block");
+    }
+    let cb = nf::codebook(k);
+    let bounds = nf::boundaries(&cb);
+
+    q.k = k;
+    q.block = block;
+    q.len = w.len();
+    q.codes.clear();
+    q.codes.resize(w.len(), 0);
+    q.scales.clear();
+    q.scales.resize(n_blocks, 0.0);
+    match taus {
+        Some(t) => match &mut q.taus {
+            Some(v) => {
+                v.clear();
+                v.extend_from_slice(t);
+            }
+            None => q.taus = Some(t.to_vec()),
+        },
+        None => q.taus = None,
+    }
+
+    // Pass 1: per-block absmax scales, parallel over scale chunks.
+    threads::par_chunks_mut_with(&mut q.scales, SCALE_CHUNK_BLOCKS, 2, |ci, sc| {
+        for (j, s) in sc.iter_mut().enumerate() {
+            let bi = ci * SCALE_CHUNK_BLOCKS + j;
+            let lo = bi * block;
+            let hi = (lo + block).min(w.len());
+            let tau = taus.map_or(0.0, |t| t[bi]);
+            let mut amax = 0f32;
+            for &x in &w[lo..hi] {
+                amax = amax.max((x - tau).abs());
+            }
+            *s = if amax > 0.0 { amax } else { 1.0 };
+        }
+    });
+
+    // Pass 2: codes, parallel over blocks (disjoint code chunks).
+    let scales = &q.scales;
+    threads::par_chunks_mut_with(&mut q.codes, block, 2, |bi, out| {
+        let lo = bi * block;
+        let chunk = &w[lo..lo + out.len()];
+        let tau = taus.map_or(0.0, |t| t[bi]);
+        let inv = 1.0 / scales[bi];
+        for (o, &x) in out.iter_mut().zip(chunk) {
+            *o = nf::quantize_one(&bounds, (x - tau) * inv);
+        }
+    });
+}
+
+/// Reference implementation of [`quantize`]: the original serial loop,
+/// kept as the property-test oracle for the parallel path.
+pub fn quantize_reference(
+    w: &[f32],
+    k: u8,
+    block: usize,
+    taus: Option<&[f32]>,
+) -> QuantizedBlocks {
     assert!(block > 0);
     let cb = nf::codebook(k);
     let bounds = nf::boundaries(&cb);
@@ -82,7 +195,37 @@ pub fn quantize(w: &[f32], k: u8, block: usize, taus: Option<&[f32]>) -> Quantiz
 
 /// Dequantize back to f32: `ŵ = cb[code] * s + τ` (Eq. 10 without the
 /// double-quantization of s/τ — see `double_quant` for that layer).
+/// Parallel over blocks; use [`dequantize_into`] to reuse the output
+/// buffer across calls.
 pub fn dequantize(q: &QuantizedBlocks) -> Vec<f32> {
+    let mut out = vec![0f32; q.len];
+    dequantize_into(q, &mut out);
+    out
+}
+
+/// Allocation-free dequantization into a caller-provided buffer
+/// (`out.len()` must equal `q.len`). Parallel over blocks,
+/// bit-identical to [`dequantize_reference`].
+pub fn dequantize_into(q: &QuantizedBlocks, out: &mut [f32]) {
+    assert_eq!(out.len(), q.len, "output buffer length != element count");
+    let cb = nf::codebook(q.k);
+    let codes = &q.codes;
+    let scales = &q.scales;
+    let taus = q.taus.as_deref();
+    let block = q.block;
+    threads::par_chunks_mut_with(out, block, 8, |bi, chunk| {
+        let lo = bi * block;
+        let s = scales[bi];
+        let tau = taus.map_or(0.0, |t| t[bi]);
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o = cb[codes[lo + j] as usize] * s + tau;
+        }
+    });
+}
+
+/// Reference implementation of [`dequantize`]: the original serial
+/// loop, kept as the property-test oracle.
+pub fn dequantize_reference(q: &QuantizedBlocks) -> Vec<f32> {
     let cb = nf::codebook(q.k);
     let mut out = vec![0f32; q.len];
     for bi in 0..q.n_blocks() {
@@ -97,11 +240,10 @@ pub fn dequantize(q: &QuantizedBlocks) -> Vec<f32> {
     out
 }
 
-/// Pack k-bit codes into bytes (little-endian bit order within bytes).
-pub fn pack_codes(codes: &[u8], k: u8) -> Vec<u8> {
-    assert!((1..=8).contains(&k));
-    let total_bits = codes.len() * k as usize;
-    let mut out = vec![0u8; total_bits.div_ceil(8)];
+/// Serial bit-packer over a local span. `out` must be zeroed and hold
+/// exactly `ceil(codes.len() * k / 8)` bytes; bit 0 of `out[0]` is the
+/// low bit of `codes[0]` (little-endian bit order within bytes).
+fn pack_slice(codes: &[u8], k: u8, out: &mut [u8]) {
     let mut bitpos = 0usize;
     for &c in codes {
         debug_assert!((c as u16) < (1u16 << k), "code {c} out of range for k={k}");
@@ -113,25 +255,81 @@ pub fn pack_codes(codes: &[u8], k: u8) -> Vec<u8> {
         }
         bitpos += k as usize;
     }
-    out
 }
 
-/// Unpack k-bit codes from bytes.
-pub fn unpack_codes(packed: &[u8], k: u8, n: usize) -> Vec<u8> {
-    assert!((1..=8).contains(&k));
+/// Serial bit-unpacker over a local span: fills `out` with
+/// `out.len()` k-bit codes read from `packed` starting at bit 0.
+fn unpack_slice(packed: &[u8], k: u8, out: &mut [u8]) {
     let mask = ((1u16 << k) - 1) as u8;
-    let mut out = Vec::with_capacity(n);
     let mut bitpos = 0usize;
-    for _ in 0..n {
+    for o in out.iter_mut() {
         let byte = bitpos / 8;
         let off = bitpos % 8;
         let mut v = packed[byte] >> off;
         if off + k as usize > 8 {
             v |= packed[byte + 1] << (8 - off);
         }
-        out.push(v & mask);
+        *o = v & mask;
         bitpos += k as usize;
     }
+}
+
+/// Pack k-bit codes into bytes (little-endian bit order within bytes).
+/// Parallel over byte-aligned spans of [`PACK_CHUNK_ELEMS`] codes.
+pub fn pack_codes(codes: &[u8], k: u8) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_codes_into(codes, k, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`pack_codes`] writing into a reused
+/// buffer (cleared and refilled).
+pub fn pack_codes_into(codes: &[u8], k: u8, out: &mut Vec<u8>) {
+    assert!((1..=8).contains(&k));
+    let total_bits = codes.len() * k as usize;
+    out.clear();
+    out.resize(total_bits.div_ceil(8), 0);
+    let bytes_per_chunk = PACK_CHUNK_ELEMS * k as usize / 8;
+    threads::par_chunks_mut_with(out, bytes_per_chunk, 2, |ci, bytes| {
+        let start = ci * PACK_CHUNK_ELEMS;
+        let end = (start + PACK_CHUNK_ELEMS).min(codes.len());
+        pack_slice(&codes[start..end], k, bytes);
+    });
+}
+
+/// Reference implementation of [`pack_codes`] (original serial loop).
+pub fn pack_codes_reference(codes: &[u8], k: u8) -> Vec<u8> {
+    assert!((1..=8).contains(&k));
+    let total_bits = codes.len() * k as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    pack_slice(codes, k, &mut out);
+    out
+}
+
+/// Unpack k-bit codes from bytes. Parallel over byte-aligned spans.
+pub fn unpack_codes(packed: &[u8], k: u8, n: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    unpack_codes_into(packed, k, n, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`unpack_codes`] writing into a reused
+/// buffer (cleared and refilled).
+pub fn unpack_codes_into(packed: &[u8], k: u8, n: usize, out: &mut Vec<u8>) {
+    assert!((1..=8).contains(&k));
+    out.clear();
+    out.resize(n, 0);
+    let byte_per_chunk = PACK_CHUNK_ELEMS * k as usize / 8;
+    threads::par_chunks_mut_with(out, PACK_CHUNK_ELEMS, 2, |ci, chunk| {
+        unpack_slice(&packed[ci * byte_per_chunk..], k, chunk);
+    });
+}
+
+/// Reference implementation of [`unpack_codes`] (original serial loop).
+pub fn unpack_codes_reference(packed: &[u8], k: u8, n: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&k));
+    let mut out = vec![0u8; n];
+    unpack_slice(packed, k, &mut out);
     out
 }
 
@@ -230,5 +428,91 @@ mod tests {
             let e_4 = stats::mse(&w, &dequantize(&quantize(&w, 4, 64, None)));
             assert!(e_k > e_4, "k={k}: {e_k} vs {e_4}");
         }
+    }
+
+    #[test]
+    fn parallel_quantize_matches_reference_bitwise() {
+        let mut rng = Rng::new(40);
+        for k in 1..=8u8 {
+            // sizes exercising empty, single, partial-last-block, many
+            for n in [0usize, 1, 63, 64, 65, 100, 64 * 300 + 17] {
+                let w = rng.normal_vec(n, 0.01, 0.05);
+                let taus: Vec<f32> = (0..n.div_ceil(64))
+                    .map(|_| rng.range_f32(-0.02, 0.02))
+                    .collect();
+                for taus_opt in [None, Some(taus.as_slice())] {
+                    let fast = quantize(&w, k, 64, taus_opt);
+                    let refr = quantize_reference(&w, k, 64, taus_opt);
+                    assert_eq!(fast.codes, refr.codes, "k={k} n={n}");
+                    assert_eq!(fast.scales, refr.scales, "k={k} n={n}");
+                    assert_eq!(fast.taus, refr.taus, "k={k} n={n}");
+                    let d_fast = dequantize(&fast);
+                    let d_ref = dequantize_reference(&refr);
+                    for (i, (a, b)) in d_fast.iter().zip(&d_ref).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "k={k} n={n} i={i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_pack_unpack_matches_reference() {
+        let mut rng = Rng::new(41);
+        for k in 1..=8u8 {
+            // spans crossing multiple PACK_CHUNK_ELEMS chunks
+            for n in [0usize, 5, 8191, 8192, 8193, 3 * 8192 + 100] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.below(1 << k) as u8).collect();
+                let fast = pack_codes(&codes, k);
+                let refr = pack_codes_reference(&codes, k);
+                assert_eq!(fast, refr, "pack k={k} n={n}");
+                let ufast = unpack_codes(&fast, k, n);
+                let urefr = unpack_codes_reference(&refr, k, n);
+                assert_eq!(ufast, urefr, "unpack k={k} n={n}");
+                assert_eq!(ufast, codes, "roundtrip k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_calls() {
+        // one QuantizedBlocks + one packed buffer reused across inputs
+        // of different sizes and bit widths must match fresh results.
+        let mut rng = Rng::new(42);
+        let mut q = QuantizedBlocks::scratch();
+        let mut packed = Vec::new();
+        let mut out = Vec::new();
+        for (k, n) in [(4u8, 1000usize), (2, 130), (3, 64), (4, 8200)] {
+            let w = rng.normal_vec(n, 0.0, 0.1);
+            quantize_into(&w, k, 64, None, &mut q);
+            let fresh = quantize_reference(&w, k, 64, None);
+            assert_eq!(q.codes, fresh.codes);
+            assert_eq!(q.scales, fresh.scales);
+            pack_codes_into(&q.codes, k, &mut packed);
+            assert_eq!(packed, pack_codes_reference(&fresh.codes, k));
+            unpack_codes_into(&packed, k, n, &mut out);
+            assert_eq!(out, fresh.codes);
+            let mut deq = vec![0f32; n];
+            dequantize_into(&q, &mut deq);
+            assert_eq!(deq, dequantize_reference(&fresh));
+        }
+    }
+
+    #[test]
+    fn scratch_tau_transitions() {
+        // Some -> None -> Some tau transitions through a reused scratch
+        let w = vec![0.7f32; 64];
+        let mut q = QuantizedBlocks::scratch();
+        quantize_into(&w, 4, 64, Some(&[0.7]), &mut q);
+        assert_eq!(q.taus.as_deref(), Some(&[0.7f32][..]));
+        quantize_into(&w, 4, 64, None, &mut q);
+        assert!(q.taus.is_none());
+        quantize_into(&w, 4, 64, Some(&[0.1]), &mut q);
+        assert_eq!(q.taus.as_deref(), Some(&[0.1f32][..]));
     }
 }

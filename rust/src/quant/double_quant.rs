@@ -8,6 +8,7 @@
 //! 32/64 ≈ 0.5 bit to (8 + 16/256)/64 ≈ 0.126 bit.
 
 use crate::util::f16;
+use crate::util::threads;
 
 use super::fp8;
 
@@ -26,24 +27,36 @@ pub struct DoubleQuant {
 }
 
 impl DoubleQuant {
-    /// Quantize a vector of constants.
+    /// Quantize a vector of constants. Parallel over groups (a large
+    /// model quantizes tens of thousands of per-block constants).
     pub fn quantize(values: &[f32], group: usize) -> DoubleQuant {
         assert!(group > 0);
         let n_groups = values.len().div_ceil(group);
-        let mut codes = Vec::with_capacity(values.len());
-        let mut group_scales = Vec::with_capacity(n_groups);
-        for chunk in values.chunks(group) {
-            let amax = chunk.iter().fold(0f32, |m, &x| m.max(x.abs()));
-            // map the group's absmax to FP8's max magnitude
-            let gs = if amax > 0.0 { amax / fp8::E4M3_MAX } else { 1.0 };
-            let gs = f16::round_f16(gs);
-            // guard: f16 rounding of tiny scales can underflow to 0
-            let gs = if gs > 0.0 { gs } else { f16::round_f16(f32::MIN_POSITIVE * 1e30) };
-            group_scales.push(gs);
-            for &v in chunk {
-                codes.push(fp8::f32_to_e4m3(v / gs));
+        let mut codes = vec![0u8; values.len()];
+        let mut group_scales = vec![0f32; n_groups];
+        // pass 1: one f16-rounded scale per group of `group` constants
+        threads::par_chunks_mut_with(&mut group_scales, 64, 2, |ci, gs| {
+            for (j, s) in gs.iter_mut().enumerate() {
+                let gi = ci * 64 + j;
+                let lo = gi * group;
+                let hi = (lo + group).min(values.len());
+                let amax = values[lo..hi].iter().fold(0f32, |m, &x| m.max(x.abs()));
+                // map the group's absmax to FP8's max magnitude
+                let g = if amax > 0.0 { amax / fp8::E4M3_MAX } else { 1.0 };
+                let g = f16::round_f16(g);
+                // guard: f16 rounding of tiny scales can underflow to 0
+                *s = if g > 0.0 { g } else { f16::round_f16(f32::MIN_POSITIVE * 1e30) };
             }
-        }
+        });
+        // pass 2: E4M3 codes, parallel over groups (disjoint chunks)
+        let gs_ref = &group_scales;
+        threads::par_chunks_mut_with(&mut codes, group, 2, |gi, chunk| {
+            let lo = gi * group;
+            let gs = gs_ref[gi];
+            for (j, c) in chunk.iter_mut().enumerate() {
+                *c = fp8::f32_to_e4m3(values[lo + j] / gs);
+            }
+        });
         DoubleQuant { codes, group_scales, group }
     }
 
@@ -55,7 +68,20 @@ impl DoubleQuant {
 
     /// Reconstruct all constants.
     pub fn dequantize(&self) -> Vec<f32> {
-        (0..self.codes.len()).map(|i| self.get(i)).collect()
+        let mut out = Vec::new();
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Allocation-free reconstruction into a reused buffer (cleared
+    /// and refilled) — the scratch path of
+    /// [`super::QuantizedTensor::dequantize_into`].
+    pub fn dequantize_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.codes.len());
+        for i in 0..self.codes.len() {
+            out.push(self.get(i));
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -131,6 +157,37 @@ mod tests {
         assert_eq!(dq.storage_bits(), 512 * 8 + 2 * 16);
         let ov = overhead_bits_per_weight(64, 256);
         assert!((ov - 0.1259765625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_groups_match_serial_oracle() {
+        use crate::quant::fp8;
+        use crate::util::f16;
+        let mut rng = Rng::new(9);
+        for n in [0usize, 1, 255, 256, 257, 300, 64 * 256 + 3] {
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal_ms(0.0, 0.1)).collect();
+            let dq = DoubleQuant::quantize(&vals, 256);
+            // inline serial oracle (the original algorithm)
+            let mut codes = Vec::new();
+            let mut gss = Vec::new();
+            for chunk in vals.chunks(256) {
+                let amax = chunk.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                let gs = if amax > 0.0 { amax / fp8::E4M3_MAX } else { 1.0 };
+                let gs = f16::round_f16(gs);
+                let gs =
+                    if gs > 0.0 { gs } else { f16::round_f16(f32::MIN_POSITIVE * 1e30) };
+                gss.push(gs);
+                for &v in chunk {
+                    codes.push(fp8::f32_to_e4m3(v / gs));
+                }
+            }
+            assert_eq!(dq.codes, codes, "n={n}");
+            assert_eq!(dq.group_scales, gss, "n={n}");
+            // dequantize_into reuse matches dequantize
+            let mut out = vec![7.0f32; 3];
+            dq.dequantize_into(&mut out);
+            assert_eq!(out, dq.dequantize(), "n={n}");
+        }
     }
 
     #[test]

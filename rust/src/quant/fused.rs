@@ -1,0 +1,298 @@
+//! Fused packed-domain dequantization — `packed bytes → f32` with no
+//! unpacked `Vec<u8>` code intermediate (the hot serving/eval path).
+//!
+//! The reference pipeline ([`super::blockwise::unpack_codes_reference`]
+//! followed by [`super::blockwise::dequantize_reference`]) walks every
+//! element twice and materializes one byte per element in between. This
+//! module fuses the two walks and removes the intermediate entirely:
+//!
+//! - **k ∈ {1, 2, 4, 8}** (k divides 8): a precomputed 256-entry
+//!   byte → `[f32; 8/k]` lookup table maps each packed byte straight to
+//!   its `8/k` codebook values — for NF4 one table hit emits two
+//!   weights. Tables are scale-free (they hold raw codebook levels);
+//!   the per-block `s`/`τ` are applied in the same `cb[c] * s + τ`
+//!   expression the reference uses, so results are bit-identical.
+//! - **k ∈ {3, 5, 6, 7}**: word-at-a-time unpacking through a `u64`
+//!   bit accumulator (one shift/mask per code, one byte load per 8
+//!   bits) feeding the same codebook lookup.
+//!
+//! Work is parallel across quantization blocks whenever a block spans
+//! whole bytes (`block * k ≡ 0 (mod 8)` — always true for the paper's
+//! block = 64); otherwise a serial bit-walk fallback handles the
+//! unaligned geometry, still without the unpacked intermediate.
+//!
+//! Bit-identity with the reference path is property-tested for
+//! k ∈ 1..=8 including partial last blocks and zero/constant blocks
+//! (see tests below and `rust/tests/proptests.rs`).
+
+use std::sync::OnceLock;
+
+use super::nf;
+use crate::util::threads;
+
+/// Precomputed per-k lookup structure. For k dividing 8 it holds the
+/// byte → values table; for other k just the codebook (word-at-a-time
+/// path). Obtain via [`lut`] — instances are built once per process.
+#[derive(Clone, Debug)]
+pub struct DequantLut {
+    k: u8,
+    /// Codes per byte when k divides 8, else 0.
+    cpb: usize,
+    /// `256 * cpb` raw codebook values when `cpb > 0`, else empty.
+    table: Vec<f32>,
+    /// The plain NF-k codebook (always present; serial fallback and
+    /// word-at-a-time path read it).
+    codebook: Vec<f32>,
+}
+
+impl DequantLut {
+    fn new(k: u8) -> DequantLut {
+        assert!((1..=8).contains(&k));
+        let codebook = nf::codebook(k);
+        if 8 % (k as usize) == 0 {
+            let cpb = 8 / k as usize;
+            let mask = (1usize << k) - 1;
+            let mut table = vec![0f32; 256 * cpb];
+            for (b, row) in table.chunks_mut(cpb).enumerate() {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = codebook[(b >> (j * k as usize)) & mask];
+                }
+            }
+            DequantLut { k, cpb, table, codebook }
+        } else {
+            DequantLut { k, cpb: 0, table: Vec::new(), codebook }
+        }
+    }
+}
+
+/// Process-wide cached [`DequantLut`] for bit width `k` (1..=8).
+pub fn lut(k: u8) -> &'static DequantLut {
+    assert!((1..=8).contains(&k), "k={k} out of range 1..=8");
+    static LUTS: OnceLock<Vec<DequantLut>> = OnceLock::new();
+    let all = LUTS.get_or_init(|| (1..=8u8).map(DequantLut::new).collect());
+    &all[(k - 1) as usize]
+}
+
+/// Dequantize `len` elements directly from `packed` k-bit codes:
+/// `out[i] = cb[code_i] * scales[i / block] + taus[i / block]`.
+///
+/// `scales` (and `taus`, if given) must hold at least
+/// `ceil(len / block)` entries. `out.len()` must equal `len`.
+/// Bit-identical to unpack + reference dequantization.
+pub fn dequantize_packed_into(
+    packed: &[u8],
+    k: u8,
+    len: usize,
+    block: usize,
+    scales: &[f32],
+    taus: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert!(block > 0);
+    assert_eq!(out.len(), len, "output buffer length != element count");
+    let n_blocks = len.div_ceil(block);
+    assert!(scales.len() >= n_blocks, "need one scale per block");
+    if let Some(t) = taus {
+        assert!(t.len() >= n_blocks, "need one tau per block");
+    }
+    if len == 0 {
+        return;
+    }
+    let l = lut(k);
+    let kb = k as usize;
+    if (block * kb) % 8 != 0 {
+        return dequantize_packed_serial(packed, k, len, block, scales, taus, out);
+    }
+    let bytes_per_block = block * kb / 8;
+    threads::par_chunks_mut_with(out, block, 8, |bi, chunk| {
+        let s = scales[bi];
+        let tau = taus.map_or(0.0, |t| t[bi]);
+        let bytes = &packed[bi * bytes_per_block..];
+        if l.cpb > 0 {
+            let cpb = l.cpb;
+            let tab = &l.table;
+            let full = chunk.len() / cpb;
+            for j in 0..full {
+                let base = bytes[j] as usize * cpb;
+                for t in 0..cpb {
+                    chunk[j * cpb + t] = tab[base + t] * s + tau;
+                }
+            }
+            let rem = chunk.len() - full * cpb;
+            if rem > 0 {
+                // partial trailing byte (only the tensor's last block);
+                // table rows depend on the low j*k bits only, so the
+                // padding bits in the byte are harmless.
+                let base = bytes[full] as usize * cpb;
+                for t in 0..rem {
+                    chunk[full * cpb + t] = tab[base + t] * s + tau;
+                }
+            }
+        } else {
+            // word-at-a-time path: k ∈ {3, 5, 6, 7}
+            let cb = &l.codebook;
+            walk_codes(bytes, k, chunk.len(), |j, code| {
+                chunk[j] = cb[code] * s + tau;
+            });
+        }
+    });
+}
+
+/// Shared word-at-a-time k-bit walk through a `u64` bit accumulator:
+/// calls `emit(i, code)` for each of the first `len` codes in
+/// `packed`, reading from bit 0. Both the parallel per-block path and
+/// the unaligned serial fallback run exactly this loop, so the subtle
+/// shift/mask/refill logic exists once.
+#[inline]
+fn walk_codes(packed: &[u8], k: u8, len: usize, mut emit: impl FnMut(usize, usize)) {
+    let mask = (1u64 << k) - 1;
+    let kw = k as u32;
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    let mut byte_idx = 0usize;
+    for i in 0..len {
+        while nbits < kw {
+            acc |= (packed[byte_idx] as u64) << nbits;
+            byte_idx += 1;
+            nbits += 8;
+        }
+        emit(i, (acc & mask) as usize);
+        acc >>= kw;
+        nbits -= kw;
+    }
+}
+
+/// Serial packed-domain fallback for geometries where blocks do not
+/// align to byte boundaries (`block * k % 8 != 0`). Still avoids the
+/// unpacked intermediate.
+fn dequantize_packed_serial(
+    packed: &[u8],
+    k: u8,
+    len: usize,
+    block: usize,
+    scales: &[f32],
+    taus: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let cb = &lut(k).codebook;
+    walk_codes(packed, k, len, |i, code| {
+        let bi = i / block;
+        let tau = taus.map_or(0.0, |t| t[bi]);
+        out[i] = cb[code] * scales[bi] + tau;
+    });
+}
+
+/// Reusable scratch for [`super::QuantizedTensor::dequantize_into`]:
+/// holds the dequantized per-block constants between calls so repeated
+/// tensor dequantization allocates nothing.
+#[derive(Debug, Default)]
+pub struct DequantScratch {
+    pub(crate) scales: Vec<f32>,
+    pub(crate) taus: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::blockwise;
+    use crate::util::Rng;
+
+    fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: length");
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx} i={i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fused_matches_reference_all_k() {
+        let mut rng = Rng::new(60);
+        for k in 1..=8u8 {
+            for n in [1usize, 63, 64, 65, 100, 64 * 40 + 7] {
+                let w = rng.normal_vec(n, 0.01, 0.05);
+                let taus: Vec<f32> = (0..n.div_ceil(64))
+                    .map(|_| rng.range_f32(-0.02, 0.02))
+                    .collect();
+                for taus_opt in [None, Some(taus.as_slice())] {
+                    let q = blockwise::quantize_reference(&w, k, 64, taus_opt);
+                    let packed = blockwise::pack_codes_reference(&q.codes, k);
+                    let want = blockwise::dequantize_reference(&q);
+                    let mut got = vec![0f32; n];
+                    dequantize_packed_into(
+                        &packed,
+                        k,
+                        n,
+                        64,
+                        &q.scales,
+                        q.taus.as_deref(),
+                        &mut got,
+                    );
+                    assert_bits_eq(&got, &want, &format!("k={k} n={n}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_unaligned_block_serial_fallback() {
+        // block sizes where block*k % 8 != 0 exercise the serial
+        // bit-walk (e.g. block=7 k=4 -> 28 bits, block=10 k=3 -> 30).
+        let mut rng = Rng::new(61);
+        for (k, block) in [(4u8, 7usize), (3, 10), (5, 9), (2, 3), (7, 11)] {
+            let n = block * 13 + block / 2; // partial last block too
+            let w = rng.normal_vec(n, 0.0, 0.1);
+            let q = blockwise::quantize_reference(&w, k, block, None);
+            let packed = blockwise::pack_codes_reference(&q.codes, k);
+            let want = blockwise::dequantize_reference(&q);
+            let mut got = vec![0f32; n];
+            dequantize_packed_into(&packed, k, n, block, &q.scales, None, &mut got);
+            assert_bits_eq(&got, &want, &format!("k={k} block={block}"));
+        }
+    }
+
+    #[test]
+    fn zero_and_constant_blocks() {
+        // zero block: scale forced to 1.0, codes hit cb near 0
+        let w = vec![0.0f32; 64];
+        let q = blockwise::quantize_reference(&w, 4, 64, None);
+        let packed = blockwise::pack_codes_reference(&q.codes, 4);
+        let mut got = vec![1f32; 64];
+        dequantize_packed_into(&packed, 4, 64, 64, &q.scales, None, &mut got);
+        assert!(got.iter().all(|&x| x == 0.0));
+
+        // constant block with tau = the constant reconstructs exactly
+        let w = vec![0.7f32; 64];
+        let q = blockwise::quantize_reference(&w, 4, 64, Some(&[0.7]));
+        let packed = blockwise::pack_codes_reference(&q.codes, 4);
+        let want = blockwise::dequantize_reference(&q);
+        let mut got = vec![0f32; 64];
+        dequantize_packed_into(&packed, 4, 64, 64, &q.scales, q.taus.as_deref(), &mut got);
+        assert_bits_eq(&got, &want, "constant block");
+    }
+
+    #[test]
+    fn lut_table_contents_nf4() {
+        let l = lut(4);
+        assert_eq!(l.cpb, 2);
+        assert_eq!(l.table.len(), 512);
+        let cb = nf::codebook(4);
+        // byte 0xA3 -> low nibble 0x3, high nibble 0xA
+        assert_eq!(l.table[0xA3 * 2], cb[0x3]);
+        assert_eq!(l.table[0xA3 * 2 + 1], cb[0xA]);
+        assert_eq!(l.k, 4);
+    }
+
+    #[test]
+    fn word_at_a_time_k3_bit_order() {
+        // hand-packed k=3 stream: codes 5, 2, 7 -> bits 101 010 111
+        // little-endian within bytes: byte0 = 0b11_010_101 = 0xD5,
+        // byte1 = 0b0000000_1 = 0x01
+        let codes = vec![5u8, 2, 7];
+        let packed = blockwise::pack_codes_reference(&codes, 3);
+        assert_eq!(packed, vec![0xD5, 0x01]);
+        let cb = nf::codebook(3);
+        let mut got = vec![0f32; 3];
+        dequantize_packed_into(&packed, 3, 3, 64, &[2.0], None, &mut got);
+        assert_eq!(got, vec![cb[5] * 2.0, cb[2] * 2.0, cb[7] * 2.0]);
+    }
+}

@@ -14,10 +14,11 @@
 //!    then double-quantized (see `double_quant`).
 //!
 //! The search is embarrassingly parallel across blocks; `quantize`
-//! fans out with `util::threads::par_map`.
+//! fans out with `util::threads::par_map_with` (low serial-fallback
+//! threshold — each block runs 2n+1 entropy evaluations).
 
 use crate::util::stats::{self, entropy_bits};
-use crate::util::threads::par_map;
+use crate::util::threads::par_map_with;
 
 use super::blockwise::QuantizedBlocks;
 use super::nf;
@@ -192,7 +193,10 @@ pub fn search_tau_reference(block: &[f32], k: u8, cfg: &IcqConfig) -> TauSearch 
 /// then blockwise NF-k quantization with the found shifts.
 pub fn quantize(w: &[f32], k: u8, block: usize, cfg: &IcqConfig) -> QuantizedBlocks {
     let n_blocks = w.len().div_ceil(block);
-    let taus: Vec<f32> = par_map(n_blocks, |bi| {
+    // the τ search runs 2n+1 entropy evaluations per block, so fanning
+    // out pays off from 2 blocks up (low threshold, unlike the cheap
+    // per-item maps elsewhere)
+    let taus: Vec<f32> = par_map_with(n_blocks, 2, |bi| {
         let lo = bi * block;
         let hi = (lo + block).min(w.len());
         search_tau(&w[lo..hi], k, cfg).tau
@@ -204,7 +208,7 @@ pub fn quantize(w: &[f32], k: u8, block: usize, cfg: &IcqConfig) -> QuantizedBlo
 /// Figure 4/5 harness and Table 5.
 pub fn search_all(w: &[f32], k: u8, block: usize, cfg: &IcqConfig) -> Vec<TauSearch> {
     let n_blocks = w.len().div_ceil(block);
-    par_map(n_blocks, |bi| {
+    par_map_with(n_blocks, 2, |bi| {
         let lo = bi * block;
         let hi = (lo + block).min(w.len());
         search_tau(&w[lo..hi], k, cfg)

@@ -3,6 +3,8 @@
 //!
 //! - [`nf`]: NormalFloat codebooks (Tables 11–13)
 //! - [`blockwise`]: blocksize-64 absmax NF-k quantization + bit packing
+//! - [`fused`]: packed-domain dequantization (bytes → f32 with no
+//!   unpacked intermediate) — the serving/eval fast path
 //! - [`fp8`] / [`double_quant`]: E4M3 + FP16 double quantization of
 //!   per-block constants
 //! - [`icq`]: Information Calibration Quantization (the contribution)
@@ -16,11 +18,29 @@
 //! packed NF codes + double-quantized scales (and τ, for ICQ) — and is
 //! the unit the model-level pipeline moves around. [`Method`] names
 //! every quantization scheme that appears as a table row.
+//!
+//! ## Fast path vs. reference path
+//!
+//! Every hot operation has two implementations. The **fast path**
+//! (what the public entry points run) is parallel over quantization
+//! blocks and works in the packed domain where possible:
+//! [`QuantizedTensor::dequantize`] / [`QuantizedTensor::dequantize_into`]
+//! go straight from packed bytes to f32 through the per-k lookup
+//! tables in [`fused`], reusing caller scratch ([`DequantScratch`])
+//! for the per-block constants. The **reference path** (the
+//! `*_reference` functions in [`blockwise`], plus
+//! [`QuantizedTensor::to_blocks`] + [`blockwise::dequantize_reference`])
+//! is the original serial element-at-a-time pipeline, kept as the
+//! oracle: property tests assert the fast paths are bit-identical to
+//! it for k ∈ 1..=8, including partial last blocks and zero/constant
+//! blocks. Throughput of both is tracked in `BENCH_quant.json` by
+//! `benches/quantize_throughput.rs`.
 
 pub mod blockwise;
 pub mod double_quant;
 pub mod entropy;
 pub mod fp8;
+pub mod fused;
 pub mod gptq;
 pub mod icq;
 pub mod integer;
@@ -31,6 +51,7 @@ use crate::util::Tensor;
 
 use blockwise::QuantizedBlocks;
 use double_quant::DoubleQuant;
+pub use fused::DequantScratch;
 
 /// Every weight-quantization scheme that appears in the paper's tables.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -129,7 +150,8 @@ impl QuantizedTensor {
         }
     }
 
-    /// Unpack into code + reconstructed per-block constants.
+    /// Unpack into code + reconstructed per-block constants (the
+    /// reference-path representation; entropy accounting reads it).
     pub fn to_blocks(&self) -> QuantizedBlocks {
         QuantizedBlocks {
             k: self.k,
@@ -141,10 +163,55 @@ impl QuantizedTensor {
         }
     }
 
-    /// Dequantize to ŵ^FP16 (f32 container) — Eq. 10.
+    /// Dequantize to ŵ^FP16 (f32 container) — Eq. 10. Runs the fused
+    /// packed-domain fast path; see [`Self::dequantize_into`] to also
+    /// reuse buffers across calls.
     pub fn dequantize(&self) -> Tensor {
-        let data = blockwise::dequantize(&self.to_blocks());
+        let mut data = vec![0f32; self.len];
+        let mut scratch = DequantScratch::default();
+        self.dequantize_into(&mut data, &mut scratch);
         Tensor::new(&self.shape, data)
+    }
+
+    /// Allocation-free fused dequantization: packed codes → `out`
+    /// directly (no unpacked `Vec<u8>` intermediate), per-block
+    /// constants double-dequantized into `scratch` and reused across
+    /// calls. `out.len()` must equal `self.len`. Bit-identical to the
+    /// reference pipeline [`Self::dequantize_reference`].
+    pub fn dequantize_into(&self, out: &mut [f32], scratch: &mut DequantScratch) {
+        self.scales.dequantize_into(&mut scratch.scales);
+        let taus = match &self.taus {
+            Some(t) => {
+                t.dequantize_into(&mut scratch.taus);
+                Some(scratch.taus.as_slice())
+            }
+            None => None,
+        };
+        fused::dequantize_packed_into(
+            &self.packed,
+            self.k,
+            self.len,
+            self.block,
+            &scratch.scales,
+            taus,
+            out,
+        );
+    }
+
+    /// Reference (pre-fusion) dequantization pipeline: unpack every
+    /// code to a byte, reconstruct constants, then a serial
+    /// element-at-a-time walk. Kept as the oracle for the fused path
+    /// and as the before-side of the `quantize_throughput` bench.
+    pub fn dequantize_reference(&self) -> Tensor {
+        let qb = QuantizedBlocks {
+            k: self.k,
+            block: self.block,
+            len: self.len,
+            codes: blockwise::unpack_codes_reference(&self.packed, self.k, self.len),
+            scales: self.scales.dequantize(),
+            taus: self.taus.as_ref().map(|t| t.dequantize()),
+        };
+        Tensor::new(&self.shape, blockwise::dequantize_reference(&qb))
     }
 
     /// Total storage in bits: packed codes + double-quantized constants.
@@ -226,6 +293,31 @@ mod tests {
         assert!(Method::NfIcq { k: 2 }.uses_icq());
         assert!(!Method::Gptq { k: 4 }.uses_icq());
         assert!(Method::IntIcq { k: 4 }.paper_name().contains("ICQ"));
+    }
+
+    #[test]
+    fn fused_dequantize_matches_reference_pipeline() {
+        let mut rng = Rng::new(56);
+        for k in [2u8, 3, 4] {
+            for icq_cfg in [None, Some(icq::IcqConfig::default())] {
+                let n = 64 * 9 + 17; // partial last block
+                let w = Tensor::new(&[n], rng.normal_vec(n, 0.01, 0.05));
+                let q = QuantizedTensor::quantize(&w, k, 64, icq_cfg.as_ref());
+                let want = q.dequantize_reference();
+                let got = q.dequantize();
+                let mut into = vec![0f32; n];
+                let mut scratch = DequantScratch::default();
+                q.dequantize_into(&mut into, &mut scratch);
+                for i in 0..n {
+                    assert_eq!(
+                        got.data()[i].to_bits(),
+                        want.data()[i].to_bits(),
+                        "k={k} i={i}"
+                    );
+                    assert_eq!(into[i].to_bits(), want.data()[i].to_bits(), "k={k} i={i}");
+                }
+            }
+        }
     }
 
     #[test]

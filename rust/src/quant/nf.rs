@@ -98,10 +98,16 @@ pub fn construct_symmetric(k: u8, offset: f64) -> Vec<f32> {
     v.into_iter().map(|x| (x / max) as f32).collect()
 }
 
+/// Degenerate 1-bit codebook (sign quantization). Not in the paper's
+/// tables; defined so the packed-domain pipeline covers k ∈ 1..=8.
+pub const NF1: [f32; 2] = [-1.0, 1.0];
+
 /// Authoritative NF-k codebook (ascending). k in {2, 3, 4} returns the
-/// paper's exact table values; other k uses the generic construction.
+/// paper's exact table values; k = 1 is the sign codebook; other k
+/// uses the generic construction.
 pub fn codebook(k: u8) -> Vec<f32> {
     match k {
+        1 => NF1.to_vec(),
         2 => NF2.to_vec(),
         3 => NF3.to_vec(),
         4 => NF4.to_vec(),
@@ -193,6 +199,16 @@ mod tests {
         assert!(NF3.contains(&0.0));
         // symmetric NF2 has no zero — by design
         assert!(!NF2.contains(&0.0));
+    }
+
+    #[test]
+    fn nf1_sign_codebook() {
+        let cb = codebook(1);
+        assert_eq!(cb, vec![-1.0, 1.0]);
+        let bounds = boundaries(&cb);
+        assert_eq!(bounds, vec![0.0]);
+        assert_eq!(quantize_one(&bounds, -0.3), 0);
+        assert_eq!(quantize_one(&bounds, 0.3), 1);
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //! typed interface driven by the manifest's [`GraphSpec`]: inputs are
 //! validated against the recorded shapes/dtypes before every call —
 //! a wrong buffer order fails loudly instead of silently miscomputing.
+//! (Offline builds resolve `xla` to the stub in `rust/vendor/xla`,
+//! where [`Runtime::cpu`] returns a clear "PJRT unavailable" error;
+//! everything above this module is runtime-agnostic.)
 //!
 //! aot.py lowers every graph with `return_tuple=True`, and this PJRT
 //! wrapper returns the tuple as a *single* device buffer; outputs are
@@ -16,7 +19,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::manifest::{Dtype, GraphSpec};
+use super::manifest::{Dtype, GraphSpec, InputSpec};
 
 /// Typed host-side tensor handed to / received from a graph.
 #[derive(Clone, Debug)]
@@ -136,22 +139,25 @@ impl<'rt> Executor<'rt> {
         &self.spec
     }
 
-    /// Validate one host tensor against input slot `i`.
-    fn check(&self, i: usize, t: &HostTensor) -> Result<()> {
+    /// Validate dtype + element count against input slot `i`; every
+    /// upload path (owned or borrowed) funnels through here.
+    fn validate_input(&self, i: usize, dtype: Dtype, len: usize) -> Result<&InputSpec> {
         let s = &self.spec.inputs[i];
-        if t.dtype() != s.dtype {
-            bail!(
-                "input {} ('{}'): dtype {} != manifest {}",
-                i, s.name, t.dtype(), s.dtype
-            );
+        if dtype != s.dtype {
+            bail!("input {} ('{}'): dtype {} != manifest {}", i, s.name, dtype, s.dtype);
         }
-        if t.len() != s.elems() {
+        if len != s.elems() {
             bail!(
                 "input {} ('{}'): {} elems != manifest shape {:?} ({})",
-                i, s.name, t.len(), s.shape, s.elems()
+                i, s.name, len, s.shape, s.elems()
             );
         }
-        Ok(())
+        Ok(s)
+    }
+
+    /// Validate one host tensor against input slot `i`.
+    fn check(&self, i: usize, t: &HostTensor) -> Result<()> {
+        self.validate_input(i, t.dtype(), t.len()).map(|_| ())
     }
 
     /// Upload host tensors per the manifest order (with validation).
@@ -176,6 +182,21 @@ impl<'rt> Executor<'rt> {
     pub fn upload_one(&self, i: usize, t: &HostTensor) -> Result<xla::PjRtBuffer> {
         self.check(i, t)?;
         self.runtime.to_device(t, &self.spec.inputs[i].shape)
+    }
+
+    /// Upload an f32 slice into input slot `i` without building an
+    /// owned [`HostTensor`] first — the zero-copy path the evaluator
+    /// and batch server use for long-lived weights and per-batch
+    /// scratch buffers.
+    pub fn upload_f32(&self, i: usize, v: &[f32]) -> Result<xla::PjRtBuffer> {
+        let s = self.validate_input(i, Dtype::F32, v.len())?;
+        Ok(self.runtime.client.buffer_from_host_buffer::<f32>(v, &s.shape, None)?)
+    }
+
+    /// Upload an i32 slice into input slot `i` (see [`Self::upload_f32`]).
+    pub fn upload_i32(&self, i: usize, v: &[i32]) -> Result<xla::PjRtBuffer> {
+        let s = self.validate_input(i, Dtype::I32, v.len())?;
+        Ok(self.runtime.client.buffer_from_host_buffer::<i32>(v, &s.shape, None)?)
     }
 
     /// Execute over device buffers; download + decompose the result

@@ -3,10 +3,13 @@
 //! configurations; failures print the case seed for reproduction.
 
 use irqlora::lora::iec::{gcd, lora_iec_forward, u1_elastic, u2_elastic};
-use irqlora::lora::merge::{merge_l1, merge_l2};
-use irqlora::quant::{blockwise, double_quant::DoubleQuant, entropy, fp8, icq, integer, nf};
+use irqlora::lora::merge::{merge_l1, merge_l1_into, merge_l2, merge_l2_into};
+use irqlora::quant::{
+    blockwise, double_quant::DoubleQuant, entropy, fp8, fused, icq, integer, nf,
+    DequantScratch, QuantizedTensor,
+};
 use irqlora::util::f16;
-use irqlora::util::{stats, Rng};
+use irqlora::util::{stats, Rng, Tensor};
 
 /// Run `f` over `n` random cases derived from a base seed.
 fn cases(n: usize, base_seed: u64, f: impl Fn(u64, &mut Rng)) {
@@ -49,6 +52,133 @@ fn prop_quant_error_bounded_by_block_absmax() {
                 assert!(err <= bound, "seed={seed} k={k} block={bi}: {err} > {bound}");
             }
         }
+    });
+}
+
+#[test]
+fn prop_fast_paths_bit_identical_to_reference() {
+    // parallel quantize / dequantize / pack / unpack must reproduce the
+    // serial reference implementations exactly — codes, scales, and
+    // every output f32 bit — for k in 1..=8 including empty inputs,
+    // partial last blocks, and zero blocks.
+    cases(40, 20, |seed, rng| {
+        let k = 1 + rng.below(8) as u8;
+        let block = [16usize, 32, 64, 128][rng.below(4)];
+        let n = rng.below(5000);
+        let mut w: Vec<f32> = (0..n).map(|_| rng.normal_ms(0.01, 0.05)).collect();
+        if n > 0 && rng.chance(0.2) {
+            // force a zero block at the front
+            for x in w.iter_mut().take(block.min(n)) {
+                *x = 0.0;
+            }
+        }
+        let n_blocks = n.div_ceil(block);
+        let taus: Vec<f32> = (0..n_blocks).map(|_| rng.range_f32(-0.02, 0.02)).collect();
+        let taus_opt = if rng.chance(0.5) { Some(taus.as_slice()) } else { None };
+
+        let fast = blockwise::quantize(&w, k, block, taus_opt);
+        let refr = blockwise::quantize_reference(&w, k, block, taus_opt);
+        assert_eq!(fast.codes, refr.codes, "seed={seed} k={k} n={n}");
+        assert_eq!(fast.scales, refr.scales, "seed={seed} k={k} n={n}");
+
+        let d_fast = blockwise::dequantize(&fast);
+        let d_ref = blockwise::dequantize_reference(&refr);
+        for (i, (a, b)) in d_fast.iter().zip(&d_ref).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed={seed} k={k} i={i}");
+        }
+
+        let p_fast = blockwise::pack_codes(&fast.codes, k);
+        let p_ref = blockwise::pack_codes_reference(&refr.codes, k);
+        assert_eq!(p_fast, p_ref, "seed={seed} k={k} n={n}");
+        assert_eq!(
+            blockwise::unpack_codes(&p_fast, k, n),
+            blockwise::unpack_codes_reference(&p_ref, k, n),
+            "seed={seed} k={k} n={n}"
+        );
+    });
+}
+
+#[test]
+fn prop_fused_packed_dequant_bit_identical() {
+    // packed-domain dequantization (LUT / word-at-a-time, parallel or
+    // the unaligned serial fallback) must equal unpack + reference
+    // dequantize bit-for-bit for k in 1..=8.
+    cases(60, 21, |seed, rng| {
+        let k = 1 + rng.below(8) as u8;
+        // blocks where block*k % 8 may or may not vanish — both the
+        // parallel byte-aligned path and the serial fallback get hit
+        let block = [7usize, 10, 16, 64, 96][rng.below(5)];
+        let n = 1 + rng.below(4000);
+        let w: Vec<f32> = (0..n).map(|_| rng.normal_ms(0.0, 0.08)).collect();
+        let n_blocks = n.div_ceil(block);
+        let taus: Vec<f32> = (0..n_blocks).map(|_| rng.range_f32(-0.03, 0.03)).collect();
+        let taus_opt = if rng.chance(0.5) { Some(taus.as_slice()) } else { None };
+
+        let q = blockwise::quantize_reference(&w, k, block, taus_opt);
+        let packed = blockwise::pack_codes_reference(&q.codes, k);
+        let want = blockwise::dequantize_reference(&q);
+        let mut got = vec![0f32; n];
+        fused::dequantize_packed_into(
+            &packed,
+            k,
+            n,
+            block,
+            &q.scales,
+            q.taus.as_deref(),
+            &mut got,
+        );
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "seed={seed} k={k} block={block} n={n} i={i}: {a} vs {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_quantized_tensor_fused_matches_reference_pipeline() {
+    // the full Eq. 10 storage pipeline: fused dequantize (with scratch
+    // reuse across iterations) == unpack-everything reference
+    let scratch = std::cell::RefCell::new(DequantScratch::default());
+    let seen_icq = std::cell::Cell::new(false);
+    cases(20, 22, |seed, rng| {
+        let k = 2 + rng.below(3) as u8;
+        let n = 64 * (1 + rng.below(12)) + rng.below(64);
+        let t = Tensor::new(&[n], (0..n).map(|_| rng.normal_ms(0.01, 0.04)).collect());
+        let icq_cfg = icq::IcqConfig { n: 10, ..Default::default() };
+        let use_icq = rng.chance(0.4);
+        let q = QuantizedTensor::quantize(&t, k, 64, use_icq.then_some(&icq_cfg));
+        let want = q.dequantize_reference();
+        let mut got = vec![0f32; n];
+        q.dequantize_into(&mut got, &mut scratch.borrow_mut());
+        for (i, (a, b)) in got.iter().zip(want.data()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed={seed} k={k} n={n} i={i}");
+        }
+        seen_icq.set(seen_icq.get() | use_icq);
+    });
+    assert!(seen_icq.get(), "expected at least one ICQ case");
+}
+
+#[test]
+fn prop_merge_into_matches_alloc_variant() {
+    // scratch-reuse merge == allocating merge across random dims
+    let dims = [4usize, 6, 8, 12, 16, 24, 32];
+    let scratch = std::cell::RefCell::new((Vec::new(), Vec::new()));
+    cases(30, 23, |seed, rng| {
+        let h = *rng.pick(&dims);
+        let r = *rng.pick(&dims[..4]);
+        let o = *rng.pick(&dims);
+        let l1 = rng.normal_vec(h * r, 0.0, 0.2);
+        let l2 = rng.normal_vec(r * o, 0.0, 0.2);
+        let (b1, b2) = (rng.normal(), rng.normal());
+        let mut s = scratch.borrow_mut();
+        let (m1, m2) = &mut *s;
+        merge_l1_into(&l1, h, r, b1, m1);
+        merge_l2_into(&l2, r, o, b2, m2);
+        assert_eq!(*m1, merge_l1(&l1, h, r, b1), "seed={seed} h={h} r={r}");
+        assert_eq!(*m2, merge_l2(&l2, r, o, b2), "seed={seed} r={r} o={o}");
     });
 }
 

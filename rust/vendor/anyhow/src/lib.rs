@@ -1,0 +1,246 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The real `anyhow` is not in the offline vendor set, so this shim
+//! provides the exact API surface the repo uses — [`Result`],
+//! [`Error`], the [`Context`] extension trait for `Result`/`Option`,
+//! and the [`anyhow!`] / [`bail!`] / [`ensure!`] macros — with the same
+//! semantics the call sites rely on:
+//!
+//! - `{e}` prints the outermost message, `{e:#}` the whole context
+//!   chain joined by `": "`, `{e:?}` the message plus a `Caused by:`
+//!   list (what `fn main() -> Result<()>` prints on error);
+//! - `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its `source()` chain;
+//! - `.context(..)` works on `Result<_, E: std::error::Error>`,
+//!   `Result<_, Error>`, and `Option<_>`.
+//!
+//! Deliberately not implemented (unused in this repo): downcasting,
+//! backtraces, `Error::new`/`chain` adaptors beyond [`Error::chain`].
+//! Like the real crate, [`Error`] does **not** implement
+//! `std::error::Error` — that is what lets the blanket `From` impl
+//! coexist with the reflexive `From<Error> for Error`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`, with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error: a chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn from_std<E: StdError + ?Sized>(e: &E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message (what [`Context`] calls).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+mod private {
+    use std::error::Error as StdError;
+
+    /// Sealed bridge: either a std error or already an [`crate::Error`].
+    /// Mirrors the real anyhow's `ext::StdError` trick — the two impls
+    /// don't overlap because `crate::Error` is not a `std` error.
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> crate::Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoAnyhow for E {
+        fn into_anyhow(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoAnyhow for crate::Error {
+        fn into_anyhow(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to a `Result` or `Option` error path.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoAnyhow> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err()
+            .context("starting up");
+        assert_eq!(format!("{e}"), "starting up");
+        assert_eq!(format!("{e:#}"), "starting up: reading config: file gone");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:") && dbg.contains("file gone"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{:#}", inner().unwrap_err()), "file gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        let e = Some(7u32).with_context(|| "unused").unwrap();
+        assert_eq!(e, 7);
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let n = 3;
+        let e = anyhow!("n = {}", n);
+        assert_eq!(format!("{e}"), "n = 3");
+        let e = anyhow!("inline {n}");
+        assert_eq!(format!("{e}"), "inline 3");
+
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(format!("{:#}", f(false).unwrap_err()), "flag was false");
+    }
+}

@@ -1,0 +1,59 @@
+#!/usr/bin/env bash
+# Tier-1 verification + quick-mode bench smoke.
+#
+#   scripts/verify.sh            # build + tests + 1-iter bench smoke
+#   VERIFY_SKIP_BENCH=1 ...      # tier-1 only
+#   VERIFY_REQUIRE_TOOLCHAIN=1   # hard-fail when cargo is missing
+#
+# The bench smoke runs every CPU-only bench with IRQLORA_BENCH_QUICK=1
+# (one measured iteration each) so perf-path regressions — panics,
+# non-termination, broken bench-JSON emission — fail loudly in CI even
+# when full benchmarking is too slow. The smoke's JSON goes to a
+# scratch path (IRQLORA_BENCH_JSON) so 1-iteration noise never
+# overwrites measured rows in the tracked BENCH_quant.json; only real
+# `cargo bench` runs (no QUICK/JSON override) update the tracked file.
+# IRQLORA_THREADS is pinned for determinism unless the caller
+# overrides it.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "verify.sh: WARNING: no cargo on PATH — Rust tier-1 skipped." >&2
+  echo "verify.sh: (this container lacks the Rust toolchain; see ROADMAP open items)" >&2
+  if [[ "${VERIFY_REQUIRE_TOOLCHAIN:-0}" != 0 ]]; then
+    exit 3
+  fi
+  exit 0
+fi
+
+export IRQLORA_THREADS="${IRQLORA_THREADS:-4}"
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+(cd rust && cargo build --release && cargo test -q)
+
+if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
+  echo "== bench smoke (IRQLORA_BENCH_QUICK=1) =="
+  SMOKE_JSON="$(mktemp -t irqlora_bench_smoke.XXXXXX.json)"
+  trap 'rm -f "$SMOKE_JSON"' EXIT
+  (
+    cd rust
+    export IRQLORA_BENCH_QUICK=1
+    export IRQLORA_BENCH_JSON="$SMOKE_JSON"
+    cargo bench --bench quantize_throughput
+    cargo bench --bench iec_merge
+    cargo bench --bench icq_overhead
+    # serve_latency / train_step need `make artifacts`; they self-skip
+    # when artifacts are absent, so running them is always safe.
+    cargo bench --bench serve_latency
+    cargo bench --bench train_step
+  )
+  echo "== bench smoke JSON ($SMOKE_JSON) =="
+  if [[ -s "$SMOKE_JSON" ]]; then
+    cat "$SMOKE_JSON"
+  else
+    echo "verify.sh: ERROR: bench smoke JSON was not produced" >&2
+    exit 4
+  fi
+fi
+
+echo "verify.sh: OK"
