@@ -1,29 +1,53 @@
-//! Bench: batched serving latency/throughput through the forward graph
-//! under the dynamic batcher, across offered concurrency levels.
-//! Requires `make artifacts`. Rows are also recorded into
-//! `BENCH_quant.json` under names carrying their own semantics
-//! (`serve_latency p50 clients=N`): unlike `bench()`-produced rows,
-//! ns_per_iter holds the p50 request latency under contention, ns_min
-//! the fastest request, iters the request count, per_sec requests/s.
+//! Bench: batched serving latency/throughput under the dynamic
+//! batcher, across offered concurrency levels and adapter counts.
+//!
+//! Two scenario families:
+//! - **PJRT** (requires `make artifacts`): the forward graph under
+//!   contention, single-adapter baseline rows (`serve_latency p50
+//!   clients=N`, same semantics as before: ns_per_iter = p50 request
+//!   latency, ns_min = fastest request, per_sec = requests/s) plus
+//!   multi-adapter rows (`... adapters=K`) so routing overhead is
+//!   visible next to the baseline.
+//! - **Reference** (always runs, offline included): the registry +
+//!   batcher over the deterministic host backend, with per-adapter
+//!   occupancy rows (`serve_latency multi-adapter adapter=NAME`:
+//!   ns_per_iter = mean request latency, per_sec = that adapter's
+//!   requests/s). This is the path `scripts/verify.sh` smokes under
+//!   `IRQLORA_BENCH_QUICK=1`.
+//!
 //! Run: cargo bench --bench serve_latency
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use irqlora::bench_harness::{bench_json_path, JsonSink};
-use irqlora::coordinator::{BatchServer, ServerConfig};
+use irqlora::coordinator::backend::{ReferenceBackend, ServeBackend};
+use irqlora::coordinator::{AdapterRegistry, BatchServer, ServerConfig};
 use irqlora::data::evalset::mmlu_item;
 use irqlora::data::World;
-use irqlora::model::weights::{init_base, init_lora};
+use irqlora::model::weights::{init_base, init_lora, NamedTensors};
 use irqlora::runtime::Manifest;
 use irqlora::util::timer::Timer;
-use irqlora::util::Rng;
+use irqlora::util::{Rng, Tensor};
 
 fn main() {
-    let Ok(manifest) = Manifest::load("artifacts") else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
+    let mut sink = JsonSink::new();
+    match Manifest::load("artifacts") {
+        Ok(m) => pjrt_scenarios(m, &mut sink),
+        Err(e) => eprintln!("skipping PJRT serve scenarios ({e})"),
+    }
+    reference_multi_adapter(&mut sink);
+
+    let path = bench_json_path("BENCH_quant.json");
+    match sink.write_merged(&path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}
+
+/// Forward-graph serving under contention: single-adapter baseline
+/// sweeps plus mixed-adapter sweeps over one shared base.
+fn pjrt_scenarios(manifest: Manifest, sink: &mut JsonSink) {
     let tag = "xs";
     let size = manifest.size(tag).unwrap().clone();
     let spec = manifest.graph(tag, "pretrain_step").unwrap();
@@ -32,18 +56,26 @@ fn main() {
     let base = init_base(&spec.inputs[..nb], size.config.n_layers, &mut rng);
     let tspec = manifest.graph(tag, "train_step").unwrap();
     let nl = irqlora::coordinator::trainer::train_layout(tspec.inputs.len(), nb).unwrap();
-    let lora = init_lora(&tspec.inputs[nb..nb + nl], size.config.rank, &mut rng);
+    let lora_specs = tspec.inputs[nb..nb + nl].to_vec();
+
+    let registry = Arc::new(AdapterRegistry::new(base, (1.0, 1.0)));
+    let n_adapters = 3usize;
+    for i in 0..n_adapters {
+        let mut arng = Rng::new(2 + i as u64);
+        registry
+            .register(
+                &format!("tenant{i}"),
+                init_lora(&lora_specs, size.config.rank, &mut arng),
+            )
+            .unwrap();
+    }
 
     let server = Arc::new(
         BatchServer::spawn(
             manifest,
-            ServerConfig {
-                tag: tag.into(),
-                masks: (1.0, 1.0),
-                max_wait: Duration::from_millis(2),
-            },
-            base,
-            lora,
+            tag,
+            ServerConfig { max_wait: Duration::from_millis(2) },
+            registry,
         )
         .unwrap(),
     );
@@ -54,54 +86,171 @@ fn main() {
         .map(|_| mmlu_item(&world, prng.below(4), &mut prng, 5).prompt)
         .collect();
 
-    let mut sink = JsonSink::new();
+    let n = irqlora::bench_harness::iters(128).max(16);
     println!(
-        "{:>8} {:>12} {:>12} {:>12} {:>12}",
-        "clients", "req/s", "p50 ms", "p99 ms", "mean batch"
+        "{:>8} {:>9} {:>12} {:>12} {:>12} {:>12}",
+        "clients", "adapters", "req/s", "p50 ms", "p99 ms", "mean batch"
     );
-    for &clients in &[1usize, 2, 4, 8, 16] {
-        let n = 128usize;
+    let sweeps: &[(usize, usize)] =
+        &[(1, 1), (2, 1), (4, 1), (8, 1), (16, 1), (4, 3), (8, 3), (16, 3)];
+    for &(clients, adapters) in sweeps {
+        let per_client = (n / clients).max(1);
         let t = Timer::start();
         let mut handles = Vec::new();
         for c in 0..clients {
             let server = server.clone();
-            let chunk: Vec<Vec<i32>> = (0..n / clients)
+            let chunk: Vec<Vec<i32>> = (0..per_client)
                 .map(|i| prompts[(c * 131 + i * 17) % prompts.len()].clone())
                 .collect();
+            let adapter = format!("tenant{}", c % adapters);
             handles.push(std::thread::spawn(move || {
                 let mut lat = Vec::new();
                 for p in chunk {
-                    let r = server.query(p).unwrap();
+                    let r = server.query(&adapter, p).unwrap();
                     lat.push(r.latency.as_secs_f64() * 1e3);
                 }
                 lat
             }));
         }
-        let mut lat: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let mut lat: Vec<f64> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
         let wall = t.elapsed_secs();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let p = |q: f64| lat[((lat.len() - 1) as f64 * q) as usize];
-        let before = server.stats();
         println!(
-            "{:>8} {:>12.1} {:>12.1} {:>12.1} {:>12.2}",
+            "{:>8} {:>9} {:>12.1} {:>12.1} {:>12.1} {:>12.2}",
             clients,
+            adapters,
             lat.len() as f64 / wall,
             p(0.5),
             p(0.99),
-            before.mean_batch_size(),
+            server.stats().mean_batch_size(),
         );
+        // single-adapter rows keep their PR-1 names so the perf
+        // trajectory stays comparable across PRs
+        let name = if adapters == 1 {
+            format!("serve_latency p50 clients={clients}")
+        } else {
+            format!("serve_latency p50 clients={clients} adapters={adapters}")
+        };
         sink.push_raw(
-            &format!("serve_latency p50 clients={clients}"),
+            &name,
             lat.len(), // request count, not closure iterations
             p(0.5) * 1e6, // p50 ms -> ns per request
             lat[0] * 1e6, // fastest request, ns
             Some(lat.len() as f64 / wall),
         );
     }
+}
 
-    let path = bench_json_path("BENCH_quant.json");
-    match sink.write_merged(&path) {
-        Ok(()) => println!("\nwrote {}", path.display()),
-        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+/// Registry + batcher throughput over the deterministic reference
+/// backend: no artifacts needed, so the multi-adapter serving path is
+/// exercised (and its JSON rows emitted) even in offline CI smoke.
+fn reference_multi_adapter(sink: &mut JsonSink) {
+    const BATCH: usize = 8;
+    const SEQ: usize = 32;
+    const VOCAB: usize = 64;
+    let n_adapters = 4usize;
+    let per_adapter = irqlora::bench_harness::iters(256).max(32);
+
+    let mut rng = Rng::new(5);
+    let mut base = NamedTensors::new();
+    base.push("embed", Tensor::new(&[VOCAB, 64], rng.normal_vec(VOCAB * 64, 0.0, 0.02)));
+    base.push("l0.wq", Tensor::new(&[64, 64], rng.normal_vec(64 * 64, 0.0, 0.02)));
+    base.push("lm_head", Tensor::new(&[64, VOCAB], rng.normal_vec(64 * VOCAB, 0.0, 0.02)));
+
+    let registry = Arc::new(AdapterRegistry::new(base, (1.0, 1.0)));
+    for i in 0..n_adapters {
+        let mut a = NamedTensors::new();
+        a.push("l0.wq.lora_a", Tensor::new(&[64, 4], rng.normal_vec(64 * 4, 0.0, 0.3)));
+        a.push("l0.wq.lora_b", Tensor::new(&[4, 64], rng.normal_vec(4 * 64, 0.0, 0.3)));
+        a.push("betas", Tensor::new(&[1, 7, 2], rng.normal_vec(14, 0.0, 0.3)));
+        registry.register(&format!("tenant{i}"), a).unwrap();
     }
+
+    let reg = registry.clone();
+    let server = Arc::new(
+        BatchServer::spawn_with(
+            ServerConfig { max_wait: Duration::from_millis(2) },
+            registry,
+            move || {
+                Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                    as Box<dyn ServeBackend>)
+            },
+        )
+        .unwrap(),
+    );
+
+    println!(
+        "\nmulti-adapter routing (reference backend, {n_adapters} adapters, \
+         {per_adapter} req/adapter):"
+    );
+    let t = Timer::start();
+    let mut handles = Vec::new();
+    for a in 0..n_adapters {
+        let server = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let name = format!("tenant{a}");
+            let mut rng = Rng::new(100 + a as u64);
+            let mut total = Duration::ZERO;
+            let mut fastest = Duration::MAX;
+            for _ in 0..per_adapter {
+                let len = 1 + rng.below(SEQ - 1);
+                let prompt: Vec<i32> =
+                    (0..len).map(|_| 1 + rng.below(VOCAB - 1) as i32).collect();
+                let r = server.query(&name, prompt).unwrap();
+                total += r.latency;
+                fastest = fastest.min(r.latency);
+            }
+            (name, total, fastest)
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall = t.elapsed_secs();
+    let stats = server.stats();
+
+    println!(
+        "{:>10} {:>10} {:>12} {:>12} {:>12}",
+        "adapter", "requests", "mean ms", "req/s", "mean batch"
+    );
+    for (name, total, fastest) in &results {
+        let a = stats.per_adapter.get(name.as_str()).cloned().unwrap_or_default();
+        let mean = total.as_secs_f64() / per_adapter as f64;
+        println!(
+            "{:>10} {:>10} {:>12.3} {:>12.1} {:>12.2}",
+            name,
+            a.requests,
+            mean * 1e3,
+            a.requests as f64 / wall,
+            a.mean_batch_size(),
+        );
+        sink.push_raw(
+            &format!("serve_latency multi-adapter adapter={name}"),
+            per_adapter,
+            mean * 1e9,
+            fastest.as_secs_f64() * 1e9,
+            Some(per_adapter as f64 / wall),
+        );
+    }
+    let total_req = n_adapters * per_adapter;
+    let fast = results
+        .iter()
+        .map(|(_, _, f)| *f)
+        .min()
+        .unwrap_or(Duration::ZERO);
+    println!(
+        "{:>10} {:>10} {:>12.3} {:>12.1} {:>12.2}",
+        "all",
+        stats.requests,
+        wall / total_req as f64 * 1e3,
+        total_req as f64 / wall,
+        stats.mean_batch_size(),
+    );
+    sink.push_raw(
+        "serve_latency multi-adapter total",
+        total_req,
+        wall / total_req as f64 * 1e9,
+        fast.as_secs_f64() * 1e9,
+        Some(total_req as f64 / wall),
+    );
 }

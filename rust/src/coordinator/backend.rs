@@ -1,0 +1,288 @@
+//! Serving execution backends: the forward-pass engines behind
+//! [`super::server::BatchServer`], abstracted so the batching/routing
+//! layer is independent of (and testable without) PJRT.
+//!
+//! - [`PjrtBackend`] runs the manifest's `forward` graph on a PJRT
+//!   runtime it **owns** (an [`OwnedExecutor`] — the worker no longer
+//!   `Box::leak`s a `Runtime` per spawn). The shared base uploads to
+//!   the device once; the active adapter's merged tensors upload on
+//!   adapter switch and are reused while consecutive batches stay on
+//!   one adapter.
+//! - [`ReferenceBackend`] is a deterministic host-side stand-in (no
+//!   artifacts, no PJRT — it works in the offline stub build): logits
+//!   are a fixed synthetic function of the shared base, the adapter
+//!   weights, and the token prefix. Not a transformer — it exists to
+//!   give routing tests and the offline bench smoke exactly the
+//!   properties they check: adapter-sensitivity, prompt-sensitivity,
+//!   and bit-exact determinism.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::PAD;
+use crate::model::weights::NamedTensors;
+use crate::runtime::{Manifest, OwnedExecutor, Runtime};
+
+/// A batched forward engine: given one adapter's merged weights and a
+/// padded `[batch, seq]` token matrix, produce `[batch, seq, vocab]`
+/// next-token logits.
+pub trait ServeBackend {
+    /// (max rows per forward call, padded sequence length, vocab).
+    fn shape(&self) -> (usize, usize, usize);
+
+    /// Run one padded batch under `weights` (the merged tensors of
+    /// adapter `name`, at registry registration `generation` — see
+    /// `AdapterRegistry::merged_tagged`; backends may key device-side
+    /// caches by `(name, generation)`). `tokens.len()` must equal
+    /// `batch * seq`.
+    fn forward(
+        &mut self,
+        name: &str,
+        generation: u64,
+        weights: &Arc<NamedTensors>,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>>;
+}
+
+/// PJRT-backed [`ServeBackend`] over the manifest's `forward` graph.
+pub struct PjrtBackend {
+    exe: OwnedExecutor,
+    base_bufs: Vec<xla::PjRtBuffer>,
+    mask_bufs: [xla::PjRtBuffer; 2],
+    adapter_bufs: Vec<xla::PjRtBuffer>,
+    /// (adapter name, registration generation) the device-side
+    /// adapter buffers currently hold; both must match to reuse. The
+    /// generation is bumped by the registry on every re-register, so
+    /// — unlike a pointer address — it cannot collide after a
+    /// drop/realloc; and since merges of one generation are
+    /// bit-identical, reuse across evict/re-merge is exact.
+    cached: Option<(String, u64)>,
+    nb: usize,
+    nl: usize,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+}
+
+impl PjrtBackend {
+    /// Compile the `forward` graph on a fresh CPU runtime (owned by
+    /// the returned value) and upload the shared base once. The IEC
+    /// mask inputs are pinned to 0: registry adapters arrive
+    /// pre-merged (Eq. 16/17), so the elastic path is off at serving.
+    pub fn new(manifest: &Manifest, tag: &str, base: &NamedTensors) -> Result<PjrtBackend> {
+        let spec = manifest.graph(tag, "forward")?;
+        let cfg = &manifest.size(tag)?.config;
+        let nb = base.len();
+        let nl = spec
+            .inputs
+            .len()
+            .checked_sub(nb + 3)
+            .context("forward graph has fewer inputs than base + masks + tokens")?;
+        let runtime = Arc::new(Runtime::cpu()?);
+        let exe = runtime.load_owned(spec)?;
+        let mut base_bufs = Vec::with_capacity(nb);
+        for (i, t) in base.tensors().iter().enumerate() {
+            // zero-copy upload: no per-tensor host clone
+            base_bufs.push(exe.upload_f32(i, t.data())?);
+        }
+        let mask_bufs = [
+            exe.upload_f32(nb + nl, &[0.0])?,
+            exe.upload_f32(nb + nl + 1, &[0.0])?,
+        ];
+        Ok(PjrtBackend {
+            exe,
+            base_bufs,
+            mask_bufs,
+            adapter_bufs: Vec::new(),
+            cached: None,
+            nb,
+            nl,
+            batch: cfg.batch,
+            seq: cfg.seq,
+            vocab: cfg.vocab,
+        })
+    }
+}
+
+impl ServeBackend for PjrtBackend {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.batch, self.seq, self.vocab)
+    }
+
+    fn forward(
+        &mut self,
+        name: &str,
+        generation: u64,
+        weights: &Arc<NamedTensors>,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        if weights.len() != self.nl {
+            bail!(
+                "adapter '{name}' has {} tensors, forward graph expects {}",
+                weights.len(),
+                self.nl
+            );
+        }
+        let reuse =
+            matches!(&self.cached, Some((n, g)) if n == name && *g == generation);
+        if !reuse {
+            self.cached = None;
+            self.adapter_bufs.clear();
+            for (i, t) in weights.tensors().iter().enumerate() {
+                self.adapter_bufs.push(self.exe.upload_f32(self.nb + i, t.data())?);
+            }
+            self.cached = Some((name.to_string(), generation));
+        }
+        let tok = self.exe.upload_i32(self.nb + self.nl + 2, tokens)?;
+        let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.nb + self.nl + 3);
+        all.extend(self.base_bufs.iter());
+        all.extend(self.adapter_bufs.iter());
+        all.push(&self.mask_bufs[0]);
+        all.push(&self.mask_bufs[1]);
+        all.push(&tok);
+        let outs = self.exe.execute(&all)?;
+        outs.into_iter()
+            .next()
+            .context("forward graph returned no outputs")?
+            .into_f32()
+    }
+}
+
+/// Deterministic host-side [`ServeBackend`] for routing tests and the
+/// offline bench smoke (see module docs). Logit `[b, t, v]` is a
+/// fixed function of the base fingerprint, the adapter fingerprint,
+/// and the weighted non-PAD token prefix of row `b` up to `t` — rows
+/// are independent, so a request's logits cannot depend on its
+/// batchmates, and any change to adapter weights or prompt moves the
+/// output.
+pub struct ReferenceBackend {
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    base_fp: f64,
+    /// Artificial per-forward latency, for tests that need requests to
+    /// pile up behind a busy worker (shutdown/in-flight coverage).
+    pub forward_delay: std::time::Duration,
+}
+
+impl ReferenceBackend {
+    pub fn new(batch: usize, seq: usize, vocab: usize, base: &NamedTensors) -> ReferenceBackend {
+        assert!(batch > 0 && seq > 0 && vocab > 0);
+        ReferenceBackend {
+            batch,
+            seq,
+            vocab,
+            base_fp: fingerprint(base),
+            forward_delay: std::time::Duration::ZERO,
+        }
+    }
+}
+
+/// Order- and position-sensitive weighted sum over every tensor value:
+/// any change anywhere in the collection moves it.
+fn fingerprint(nt: &NamedTensors) -> f64 {
+    let mut fp = 0f64;
+    let mut i = 0u64;
+    for t in nt.tensors() {
+        for &v in t.data() {
+            i += 1;
+            fp += v as f64 * ((i % 127) + 1) as f64;
+        }
+    }
+    fp
+}
+
+impl ServeBackend for ReferenceBackend {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.batch, self.seq, self.vocab)
+    }
+
+    fn forward(
+        &mut self,
+        _name: &str,
+        _generation: u64,
+        weights: &Arc<NamedTensors>,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        if tokens.len() != self.batch * self.seq {
+            bail!(
+                "token matrix has {} elems, expected batch*seq = {}",
+                tokens.len(),
+                self.batch * self.seq
+            );
+        }
+        if !self.forward_delay.is_zero() {
+            std::thread::sleep(self.forward_delay);
+        }
+        let afp = fingerprint(weights);
+        let mut out = vec![0f32; self.batch * self.seq * self.vocab];
+        for b in 0..self.batch {
+            let mut prefix = 0f64;
+            for t in 0..self.seq {
+                let tok = tokens[b * self.seq + t];
+                if tok != PAD {
+                    prefix += (t as f64 + 1.0) * (tok as f64 + 1.0);
+                }
+                let row = &mut out
+                    [(b * self.seq + t) * self.vocab..(b * self.seq + t + 1) * self.vocab];
+                for (v, slot) in row.iter_mut().enumerate() {
+                    *slot = (1e-3 * self.base_fp
+                        + 1e-2 * afp * ((v % 31) as f64 + 1.0)
+                        + 1e-4 * prefix * ((v % 7) as f64 + 1.0))
+                        as f32;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Rng, Tensor};
+
+    fn named(seed: u64, n: usize) -> NamedTensors {
+        let mut rng = Rng::new(seed);
+        let mut nt = NamedTensors::new();
+        nt.push("w", Tensor::new(&[n], rng.normal_vec(n, 0.0, 1.0)));
+        nt
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_value_sensitive() {
+        let a = named(1, 64);
+        let b = named(2, 64);
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        assert_eq!(fingerprint(&a), fingerprint(&a.clone()));
+        // swapping two values moves the fingerprint (position weights)
+        let mut swapped = a.clone();
+        let d = swapped.get_mut("w").unwrap().data_mut();
+        d.swap(0, 1);
+        assert_ne!(fingerprint(&a), fingerprint(&swapped));
+    }
+
+    #[test]
+    fn reference_backend_contract() {
+        let base = named(3, 32);
+        let mut be = ReferenceBackend::new(2, 4, 8, &base);
+        assert_eq!(be.shape(), (2, 4, 8));
+        let w1 = Arc::new(named(4, 16));
+        let w2 = Arc::new(named(5, 16));
+        let toks = vec![1, 2, 3, PAD, 4, 5, PAD, PAD];
+        let l1 = be.forward("a", 0, &w1, &toks).unwrap();
+        assert_eq!(l1.len(), 2 * 4 * 8);
+        // deterministic
+        assert_eq!(l1, be.forward("a", 0, &w1, &toks).unwrap());
+        // adapter-sensitive
+        assert_ne!(l1, be.forward("b", 1, &w2, &toks).unwrap());
+        // prompt-sensitive at the changed row only
+        let toks2 = vec![1, 2, 9, PAD, 4, 5, PAD, PAD];
+        let l2 = be.forward("a", 0, &w1, &toks2).unwrap();
+        assert_ne!(l1[..4 * 8], l2[..4 * 8]);
+        assert_eq!(l1[4 * 8..], l2[4 * 8..], "row 1 must not see row 0's change");
+        // wrong token-matrix size is rejected
+        assert!(be.forward("a", 0, &w1, &[1, 2, 3]).is_err());
+    }
+}

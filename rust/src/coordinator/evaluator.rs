@@ -19,6 +19,7 @@ use crate::model::weights::NamedTensors;
 use crate::runtime::{Executor, Manifest, Runtime};
 
 use super::quantize::QuantizedModel;
+use super::registry::AdapterRegistry;
 
 /// Accuracy per group plus the average — one table row.
 #[derive(Clone, Debug)]
@@ -116,6 +117,22 @@ impl<'rt> Evaluator<'rt> {
         masks: (f32, f32),
     ) -> Result<Self> {
         Self::new(rt, manifest, tag, &qm.dequantized, lora, masks)
+    }
+
+    /// Evaluator for one registry adapter: scores over the registry's
+    /// shared dequantized base and the adapter's cached merged weights
+    /// (IEC folded in ⇒ masks off). N adapters evaluate against one
+    /// base with no re-dequantization, and a warm registry charges no
+    /// re-merge either.
+    pub fn for_adapter(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        tag: &str,
+        registry: &AdapterRegistry,
+        adapter: &str,
+    ) -> Result<Self> {
+        let merged = registry.merged(adapter)?;
+        Self::new(rt, manifest, tag, registry.base(), &merged, (0.0, 0.0))
     }
 
     /// Raw next-token logits at the last prompt position of each item.

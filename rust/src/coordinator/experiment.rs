@@ -18,6 +18,7 @@ use crate::util::Rng;
 
 use super::evaluator::{EvalResult, Evaluator};
 use super::quantize::{quantize_model, QuantizedModel};
+use super::registry::AdapterRegistry;
 use super::trainer::{Finetuner, Pretrainer};
 
 /// A named experiment arm = quantizer + IEC gating + finetune or not.
@@ -165,6 +166,18 @@ pub fn pretrained_base(
     Ok(pre.params)
 }
 
+/// Build a serving registry straight from a [`QuantizedModel`]: the
+/// ICQ base was dequantized exactly once by `quantize_model` (fused
+/// packed-domain path); that buffer becomes the shared base every
+/// registered adapter serves over, with `masks` (the arm's IEC
+/// gating) folded into each adapter at merge time. Register the
+/// finetuned `lora` tensors of each tenant (e.g. `ArmResult` loras or
+/// cached `.irqc` checkpoints) on the returned registry, then hand it
+/// to `BatchServer::spawn`.
+pub fn serve_registry(qm: &QuantizedModel, masks: (f32, f32)) -> AdapterRegistry {
+    AdapterRegistry::new(qm.dequantized.clone(), masks)
+}
+
 /// Run one arm end to end against a given base; returns the table row.
 pub fn run_arm(
     rt: &Runtime,
@@ -248,5 +261,36 @@ mod tests {
     fn run_cfg_defaults() {
         let c = RunCfg::default();
         assert!(c.pretrain_steps > 0 && c.finetune_steps > 0);
+    }
+
+    #[test]
+    fn serve_registry_shares_dequantized_base() {
+        use crate::runtime::{Dtype, InputSpec};
+        use crate::util::Tensor;
+
+        let specs = vec![
+            InputSpec { name: "embed".into(), shape: vec![16, 32], dtype: Dtype::F32 },
+            InputSpec { name: "l0.wq".into(), shape: vec![32, 64], dtype: Dtype::F32 },
+            InputSpec { name: "lm_head".into(), shape: vec![32, 16], dtype: Dtype::F32 },
+        ];
+        let mut rng = Rng::new(9);
+        let base = crate::model::weights::init_base(&specs, 1, &mut rng);
+        let qm = quantize_model(&base, Method::NfIcq { k: 4 }, 0).unwrap();
+
+        let reg = serve_registry(&qm, (1.0, 1.0));
+        assert_eq!(reg.masks(), (1.0, 1.0));
+        // the registry's base IS the once-dequantized ICQ output
+        assert_eq!(
+            reg.base().get("l0.wq").unwrap(),
+            qm.dequantized.get("l0.wq").unwrap()
+        );
+
+        let mut adapter = NamedTensors::new();
+        adapter.push("l0.wq.lora_a", Tensor::new(&[32, 4], rng.normal_vec(128, 0.0, 0.3)));
+        adapter.push("l0.wq.lora_b", Tensor::new(&[4, 64], rng.normal_vec(256, 0.0, 0.3)));
+        adapter.push("betas", Tensor::new(&[1, 7, 2], rng.normal_vec(14, 0.0, 0.5)));
+        reg.register("tenant", adapter).unwrap();
+        let merged = reg.merged("tenant").unwrap();
+        assert!(merged.get("betas").unwrap().data().iter().all(|&x| x == 0.0));
     }
 }

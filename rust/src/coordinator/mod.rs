@@ -4,17 +4,25 @@
 //! - [`quantize`]: model-level quantization with every paper method;
 //! - [`trainer`]: pretraining + QLoRA finetuning over the AOT graphs;
 //! - [`evaluator`]: 5-shot / 0-shot multiple-choice scoring;
-//! - [`server`]: dynamic-batching inference server;
+//! - [`registry`]: named IEC-LoRA adapters over one shared
+//!   dequantized base (LRU-cached merged weights);
+//! - [`backend`]: serving forward engines (PJRT-owning + offline
+//!   reference);
+//! - [`server`]: multi-adapter dynamic-batching inference server;
 //! - [`experiment`]: per-table-row orchestration with run caching.
 
+pub mod backend;
 pub mod evaluator;
 pub mod experiment;
 pub mod quantize;
+pub mod registry;
 pub mod server;
 pub mod trainer;
 
+pub use backend::{PjrtBackend, ReferenceBackend, ServeBackend};
 pub use evaluator::{EvalResult, Evaluator};
-pub use experiment::{pretrained_base, run_arm, Arm, ArmResult, RunCfg};
+pub use experiment::{pretrained_base, run_arm, serve_registry, Arm, ArmResult, RunCfg};
 pub use quantize::{quantize_model, QuantizedModel};
-pub use server::{BatchServer, ServerConfig};
+pub use registry::{AdapterRegistry, RegistryStats};
+pub use server::{BatchServer, Reply, ServerConfig, ServerStats};
 pub use trainer::{Finetuner, Pretrainer};

@@ -1,0 +1,438 @@
+//! Multi-adapter registry: one shared dequantized base, many cheap
+//! per-tenant IEC-LoRA adapters.
+//!
+//! QA-LoRA / LoftQ / IR-QLoRA all share the same serving economics:
+//! the quantized base is the expensive, shared artifact while each
+//! adapter is two small matrices per projection plus two scalars per
+//! layer. The registry exploits that structure — the base is
+//! dequantized **once** (by `quantize_model`'s fused packed-domain
+//! path) and held behind an `Arc`; adapters register by name and are
+//! folded (IEC β1/β2 merged via Eq. 16/17, `lora::merge::merge_adapter`)
+//! into serving-ready tensors on first use. Merged weights live in an
+//! LRU-bounded cache so a long tail of tenants doesn't pin memory:
+//! evicted adapters re-merge (bit-identically) on their next request.
+//!
+//! Adapter sources are either in-memory ([`AdapterRegistry::register`],
+//! e.g. fresh out of a finetune run) or `.irqc` checkpoints
+//! ([`AdapterRegistry::register_file`]) whose headers are validated
+//! cheaply up front (`checkpoint::peek_entries`) and whose data loads
+//! lazily on each cache miss.
+//!
+//! Cache capacity comes from the `IRQLORA_ADAPTER_CACHE` environment
+//! variable (mirroring `IRQLORA_THREADS`: positive integers honored,
+//! zero/garbage ignored), default [`DEFAULT_CACHE_CAPACITY`].
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::lora::merge::merge_adapter;
+use crate::model::checkpoint;
+use crate::model::weights::{validate_adapter, validate_adapter_shapes, NamedTensors};
+
+/// Merged-weight cache capacity when `IRQLORA_ADAPTER_CACHE` is unset.
+pub const DEFAULT_CACHE_CAPACITY: usize = 8;
+
+/// Resolve the merged-cache capacity: the `IRQLORA_ADAPTER_CACHE`
+/// override, else [`DEFAULT_CACHE_CAPACITY`].
+pub fn cache_capacity() -> usize {
+    std::env::var("IRQLORA_ADAPTER_CACHE")
+        .ok()
+        .and_then(|v| parse_cache_override(&v))
+        .unwrap_or(DEFAULT_CACHE_CAPACITY)
+}
+
+/// Interpret an `IRQLORA_ADAPTER_CACHE` value: positive integers are
+/// honored (capped at 4096); zero and garbage are ignored. Pure so it
+/// is testable without process-global env mutation.
+fn parse_cache_override(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n.min(4096)),
+        _ => None,
+    }
+}
+
+/// Where an adapter's raw (unmerged) tensors live.
+#[derive(Clone)]
+enum AdapterSource {
+    /// Registered in-memory.
+    Memory(Arc<NamedTensors>),
+    /// An `.irqc` checkpoint, reloaded lazily on each cache miss.
+    File(PathBuf),
+}
+
+/// Monotonic cache counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Lookups served from the merged cache.
+    pub hits: usize,
+    /// Lookups that merged (and possibly reloaded) the adapter.
+    pub misses: usize,
+    /// Merged entries dropped to stay within capacity.
+    pub evictions: usize,
+}
+
+struct Inner {
+    /// name → (registration generation, raw tensors). The generation
+    /// is a registry-wide monotonic id bumped on every (re)register,
+    /// so backends can key device-side caches by (name, generation)
+    /// without pointer-address ABA hazards.
+    sources: BTreeMap<String, (u64, AdapterSource)>,
+    merged: BTreeMap<String, (u64, Arc<NamedTensors>)>,
+    /// LRU order over `merged` keys: front = coldest.
+    order: VecDeque<String>,
+    next_gen: u64,
+    stats: RegistryStats,
+}
+
+impl Inner {
+    fn touch(&mut self, name: &str) {
+        if let Some(pos) = self.order.iter().position(|n| n == name) {
+            let n = self.order.remove(pos).unwrap();
+            self.order.push_back(n);
+        }
+    }
+
+    fn drop_merged(&mut self, name: &str) {
+        if self.merged.remove(name).is_some() {
+            if let Some(pos) = self.order.iter().position(|n| n == name) {
+                self.order.remove(pos);
+            }
+        }
+    }
+}
+
+/// Named IEC-LoRA adapters over one shared dequantized base, with an
+/// LRU-bounded cache of serving-ready (merged) weights. All methods
+/// take `&self`; the registry is safe to share behind an `Arc`
+/// between submitters and the serving worker.
+pub struct AdapterRegistry {
+    base: Arc<NamedTensors>,
+    masks: (f32, f32),
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl AdapterRegistry {
+    /// Registry over `base` with the [`cache_capacity`] env default.
+    /// `masks` is the IEC gating the adapters were trained under; it
+    /// is folded into each adapter at merge time (after which serving
+    /// runs mask-free).
+    pub fn new(base: NamedTensors, masks: (f32, f32)) -> AdapterRegistry {
+        Self::with_capacity(base, masks, cache_capacity())
+    }
+
+    /// Registry with an explicit merged-cache capacity (min 1).
+    pub fn with_capacity(
+        base: NamedTensors,
+        masks: (f32, f32),
+        capacity: usize,
+    ) -> AdapterRegistry {
+        AdapterRegistry {
+            base: Arc::new(base),
+            masks,
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner {
+                sources: BTreeMap::new(),
+                merged: BTreeMap::new(),
+                order: VecDeque::new(),
+                next_gen: 0,
+                stats: RegistryStats::default(),
+            }),
+        }
+    }
+
+    /// The shared dequantized base every adapter serves over.
+    pub fn base(&self) -> &Arc<NamedTensors> {
+        &self.base
+    }
+
+    /// IEC masks folded into adapters at merge time.
+    pub fn masks(&self) -> (f32, f32) {
+        self.masks
+    }
+
+    /// Merged-cache capacity (adapters beyond this re-merge on demand).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Register an in-memory adapter under `name`, replacing any
+    /// previous adapter of that name (and dropping its cached merge).
+    pub fn register(&self, name: &str, adapter: NamedTensors) -> Result<()> {
+        validate_adapter(&adapter)
+            .with_context(|| format!("registering adapter '{name}'"))?;
+        self.insert_source(name, AdapterSource::Memory(Arc::new(adapter)));
+        Ok(())
+    }
+
+    /// Register a checkpoint-backed adapter: the header is validated
+    /// now (cheap, via [`checkpoint::peek_entries`] — no tensor data
+    /// is read); the data loads lazily on each merged-cache miss.
+    pub fn register_file(&self, name: &str, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let entries = checkpoint::peek_entries(path)?;
+        validate_adapter_shapes(&entries).with_context(|| {
+            format!("registering adapter '{name}' from {}", path.display())
+        })?;
+        self.insert_source(name, AdapterSource::File(path.to_path_buf()));
+        Ok(())
+    }
+
+    fn insert_source(&self, name: &str, src: AdapterSource) {
+        let mut inner = self.inner.lock().unwrap();
+        let g = inner.next_gen;
+        inner.next_gen += 1;
+        inner.sources.insert(name.to_string(), (g, src));
+        inner.drop_merged(name);
+    }
+
+    /// Registration generation of `name` (bumped on every
+    /// (re)register), if registered.
+    pub fn generation(&self, name: &str) -> Option<u64> {
+        self.inner.lock().unwrap().sources.get(name).map(|(g, _)| *g)
+    }
+
+    /// Is `name` registered (regardless of cache state)?
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().sources.contains_key(name)
+    }
+
+    /// Registered adapter names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().sources.keys().cloned().collect()
+    }
+
+    /// Number of registered adapters.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().sources.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop `name`'s cached merged weights; the source stays, so the
+    /// next lookup re-merges. No-op when not cached.
+    pub fn evict(&self, name: &str) {
+        self.inner.lock().unwrap().drop_merged(name);
+    }
+
+    /// Remove an adapter entirely (source + cached merge). Returns
+    /// whether it was registered.
+    pub fn remove(&self, name: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner.drop_merged(name);
+        inner.sources.remove(name).is_some()
+    }
+
+    /// Cache counters so far.
+    pub fn stats(&self) -> RegistryStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    /// Serving weights for `name`: the IEC-merged LoRA tensors, from
+    /// cache when warm. Merging is deterministic, so an evict/reload
+    /// round-trip yields bit-identical weights.
+    pub fn merged(&self, name: &str) -> Result<Arc<NamedTensors>> {
+        self.merged_tagged(name).map(|(_, w)| w)
+    }
+
+    /// [`Self::merged`] plus the adapter's registration generation —
+    /// the cache key backends use for device-side buffers (stable
+    /// across evict/re-merge of the same source, bumped on
+    /// re-register; unlike `Arc` addresses it cannot suffer ABA
+    /// reuse). The expensive part of a miss (checkpoint reload +
+    /// merge) runs *outside* the registry lock so concurrent
+    /// `submit()` calls never stall behind disk I/O; a raced
+    /// duplicate merge is tolerated (both results are bit-identical)
+    /// and the cache may evict its coldest entry on insert.
+    pub fn merged_tagged(&self, name: &str) -> Result<(u64, Arc<NamedTensors>)> {
+        let (generation, src) = {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some((g, m)) = inner.merged.get(name).cloned() {
+                inner.stats.hits += 1;
+                inner.touch(name);
+                return Ok((g, m));
+            }
+            inner.stats.misses += 1;
+            match inner.sources.get(name) {
+                Some((g, s)) => (*g, s.clone()),
+                None => {
+                    return Err(anyhow!(
+                        "unknown adapter '{name}' (registered: {:?})",
+                        inner.sources.keys().collect::<Vec<_>>()
+                    ))
+                }
+            }
+        };
+
+        // expensive section — no lock held
+        let raw: Arc<NamedTensors> = match src {
+            AdapterSource::Memory(a) => a,
+            AdapterSource::File(p) => Arc::new(
+                checkpoint::load(&p)
+                    .with_context(|| format!("reloading adapter '{name}'"))?,
+            ),
+        };
+        let merged = Arc::new(
+            merge_adapter(&raw, self.masks)
+                .with_context(|| format!("merging adapter '{name}'"))?,
+        );
+
+        let mut inner = self.inner.lock().unwrap();
+        // another thread merged the same generation while we worked?
+        if let Some((g, m)) = inner.merged.get(name).cloned() {
+            if g == generation {
+                inner.touch(name);
+                return Ok((g, m));
+            }
+        }
+        // cache only if the source wasn't replaced meanwhile (a stale
+        // insert would serve outdated weights to later requests)
+        let current =
+            matches!(inner.sources.get(name), Some((g, _)) if *g == generation);
+        if current {
+            inner.drop_merged(name);
+            inner.merged.insert(name.to_string(), (generation, merged.clone()));
+            inner.order.push_back(name.to_string());
+            while inner.merged.len() > self.capacity {
+                match inner.order.pop_front() {
+                    Some(cold) => {
+                        inner.merged.remove(&cold);
+                        inner.stats.evictions += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        Ok((generation, merged))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Rng, Tensor};
+
+    fn adapter(seed: u64) -> NamedTensors {
+        let mut rng = Rng::new(seed);
+        let (h, r, o) = (16usize, 4usize, 8usize);
+        let mut nt = NamedTensors::new();
+        nt.push("l0.wq.lora_a", Tensor::new(&[h, r], rng.normal_vec(h * r, 0.0, 0.3)));
+        nt.push("l0.wq.lora_b", Tensor::new(&[r, o], rng.normal_vec(r * o, 0.0, 0.3)));
+        nt.push("betas", Tensor::new(&[1, 7, 2], rng.normal_vec(14, 0.0, 0.5)));
+        nt
+    }
+
+    fn base() -> NamedTensors {
+        let mut nt = NamedTensors::new();
+        nt.push("embed", Tensor::full(&[4, 4], 0.5));
+        nt
+    }
+
+    #[test]
+    fn env_override_parsing() {
+        assert_eq!(parse_cache_override("2"), Some(2));
+        assert_eq!(parse_cache_override(" 16 "), Some(16));
+        assert_eq!(parse_cache_override("999999"), Some(4096)); // capped
+        assert_eq!(parse_cache_override("0"), None);
+        assert_eq!(parse_cache_override("nope"), None);
+        assert_eq!(parse_cache_override(""), None);
+        assert!(cache_capacity() >= 1);
+    }
+
+    #[test]
+    fn register_lookup_and_stats() {
+        let reg = AdapterRegistry::with_capacity(base(), (1.0, 1.0), 4);
+        assert!(reg.is_empty());
+        reg.register("a", adapter(1)).unwrap();
+        reg.register("b", adapter(2)).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert!(reg.contains("a") && !reg.contains("c"));
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+
+        let m1 = reg.merged("a").unwrap(); // miss
+        let m2 = reg.merged("a").unwrap(); // hit — same Arc
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert_eq!(
+            reg.stats(),
+            RegistryStats { hits: 1, misses: 1, evictions: 0 }
+        );
+        // merged output folded the betas away
+        assert!(m1.get("betas").unwrap().data().iter().all(|&x| x == 0.0));
+
+        let err = reg.merged("missing").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown adapter"), "{err:#}");
+    }
+
+    #[test]
+    fn lru_evicts_coldest_not_most_recent() {
+        let reg = AdapterRegistry::with_capacity(base(), (0.0, 0.0), 2);
+        for (n, s) in [("a", 1u64), ("b", 2), ("c", 3)] {
+            reg.register(n, adapter(s)).unwrap();
+        }
+        reg.merged("a").unwrap();
+        reg.merged("b").unwrap();
+        reg.merged("a").unwrap(); // touch: LRU order now [b, a]
+        reg.merged("c").unwrap(); // evicts b, not a
+        let s = reg.stats();
+        assert_eq!(s.evictions, 1);
+        let before = reg.stats().hits;
+        reg.merged("a").unwrap(); // still cached
+        assert_eq!(reg.stats().hits, before + 1);
+        reg.merged("b").unwrap(); // re-merge (was evicted)
+        assert_eq!(reg.stats().misses, 4);
+    }
+
+    #[test]
+    fn reregister_drops_stale_cache_and_bumps_generation() {
+        let reg = AdapterRegistry::with_capacity(base(), (0.0, 0.0), 4);
+        reg.register("a", adapter(1)).unwrap();
+        let (g1, m1) = reg.merged_tagged("a").unwrap();
+        assert_eq!(reg.generation("a"), Some(g1));
+        reg.register("a", adapter(99)).unwrap(); // replace source
+        let (g2, m2) = reg.merged_tagged("a").unwrap();
+        // the generation moves, so backend device caches keyed on
+        // (name, generation) can never serve the stale upload
+        assert!(g2 > g1, "generation must bump on re-register: {g1} -> {g2}");
+        assert!(!Arc::ptr_eq(&m1, &m2));
+        assert_ne!(
+            m1.get("l0.wq.lora_a").unwrap().data(),
+            m2.get("l0.wq.lora_a").unwrap().data()
+        );
+        // evict + re-merge of an UNCHANGED source keeps its generation
+        reg.evict("a");
+        let (g3, _) = reg.merged_tagged("a").unwrap();
+        assert_eq!(g2, g3);
+        assert_eq!(reg.generation("missing"), None);
+    }
+
+    #[test]
+    fn evict_and_remove() {
+        let reg = AdapterRegistry::with_capacity(base(), (1.0, 1.0), 4);
+        reg.register("a", adapter(5)).unwrap();
+        let m1 = reg.merged("a").unwrap();
+        reg.evict("a"); // cache dropped, source kept
+        assert!(reg.contains("a"));
+        let m2 = reg.merged("a").unwrap();
+        assert!(!Arc::ptr_eq(&m1, &m2));
+        for (name, t) in m1.iter() {
+            assert_eq!(t.data(), m2.get(name).unwrap().data(), "{name}");
+        }
+        assert!(reg.remove("a"));
+        assert!(!reg.remove("a"));
+        assert!(reg.merged("a").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_adapter() {
+        let reg = AdapterRegistry::new(base(), (1.0, 1.0));
+        let mut bad = NamedTensors::new();
+        bad.push("l0.wq.lora_a", Tensor::zeros(&[8, 4]));
+        assert!(reg.register("bad", bad).is_err());
+        assert!(!reg.contains("bad"));
+    }
+}

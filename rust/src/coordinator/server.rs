@@ -1,12 +1,28 @@
-//! Batched inference server (the serving-path L3 component).
+//! Multi-adapter batched inference server (the serving-path L3
+//! component).
 //!
-//! Requests (token prompts) arrive on a channel; a worker thread
-//! drains up to `batch` of them (waiting at most `max_wait` after the
-//! first), pads them into one fixed-shape forward call, and replies
-//! with the next-token logits per request. This is the dynamic-batching
-//! structure of vLLM-style routers reduced to the single-model,
-//! single-device case this paper needs.
+//! Requests (adapter id + token prompt) arrive on a channel; a worker
+//! thread drains up to `batch` of them (waiting at most `max_wait`
+//! after the first), groups them by adapter, pads each group into one
+//! fixed-shape forward call, and replies with the next-token logits
+//! per request. One worker serves many adapters over one *shared*
+//! base: the expensive artifact (the dequantized ICQ-quantized base)
+//! exists once per worker, uploaded once by the backend, while
+//! adapters are cheap per-tenant state routed through an
+//! [`AdapterRegistry`] (merged on demand, LRU-cached). This is the
+//! dynamic-batching structure of vLLM-style multi-LoRA routers
+//! reduced to the single-device case this paper needs.
+//!
+//! Malformed prompts (empty / over-length) and unknown adapters are
+//! rejected at [`BatchServer::submit`] time — a bad request never
+//! occupies a batch slot, so no all-PAD row ever runs through the
+//! forward pass.
+//!
+//! The worker owns its execution backend (for PJRT: an
+//! `OwnedExecutor` holding the runtime by `Arc`), so spawning N
+//! servers no longer leaks N runtimes.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -14,34 +30,64 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::PAD;
-use crate::model::weights::NamedTensors;
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::Manifest;
+
+use super::backend::{PjrtBackend, ServeBackend};
+use super::registry::AdapterRegistry;
 
 /// One inference reply.
 #[derive(Clone, Debug)]
 pub struct Reply {
+    /// Adapter that served the request.
+    pub adapter: String,
     /// Next-token logits at the last prompt position.
     pub logits: Vec<f32>,
     /// Time spent queued before its batch launched.
     pub queued: Duration,
     /// Total request latency.
     pub latency: Duration,
-    /// How many requests shared the batch.
+    /// How many requests shared the forward call (all same-adapter).
     pub batch_size: usize,
 }
 
 struct Request {
+    adapter: String,
     tokens: Vec<i32>,
     enqueued: Instant,
     reply: SyncSender<Result<Reply, String>>,
+}
+
+/// Per-adapter serving counters.
+#[derive(Clone, Debug, Default)]
+pub struct AdapterServeStats {
+    pub requests: usize,
+    /// Forward calls run for this adapter.
+    pub batches: usize,
+    pub occupancy_sum: usize,
+}
+
+impl AdapterServeStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.batches as f64
+        }
+    }
 }
 
 /// Aggregate serving metrics.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     pub requests: usize,
+    /// Total forward calls (one per same-adapter group).
     pub batches: usize,
     pub batch_occupancy_sum: usize,
+    /// Requests rejected at submit time (malformed prompt / unknown
+    /// adapter); they never occupied a batch slot.
+    pub rejected: usize,
+    /// Per-adapter occupancy breakdown.
+    pub per_adapter: BTreeMap<String, AdapterServeStats>,
 }
 
 impl ServerStats {
@@ -54,68 +100,73 @@ impl ServerStats {
     }
 }
 
-/// Handle to a running batch server.
-pub struct BatchServer {
-    tx: Option<SyncSender<Request>>,
-    handle: Option<std::thread::JoinHandle<()>>,
-    stats: Arc<Mutex<ServerStats>>,
-    seq: usize,
-}
-
 /// Server configuration.
 pub struct ServerConfig {
-    pub tag: String,
-    /// IEC masks for the forward graph.
-    pub masks: (f32, f32),
     /// Max time the batcher waits to fill a batch after the first
     /// request arrives.
     pub max_wait: Duration,
 }
 
+/// Handle to a running batch server.
+pub struct BatchServer {
+    tx: Option<SyncSender<Request>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<ServerStats>>,
+    registry: Arc<AdapterRegistry>,
+    seq: usize,
+    vocab: usize,
+}
+
 impl BatchServer {
-    /// Spawn the worker (it owns its own PJRT runtime + executor).
+    /// Spawn a PJRT-backed worker over the manifest's `forward` graph
+    /// for `tag`. The worker owns its runtime (dropped with the
+    /// worker — nothing leaks) and shares one uploaded base across
+    /// every adapter in `registry`.
     pub fn spawn(
         manifest: Manifest,
+        tag: &str,
         cfg: ServerConfig,
-        base: NamedTensors,
-        lora: NamedTensors,
+        registry: Arc<AdapterRegistry>,
     ) -> Result<BatchServer> {
-        let size = manifest.size(&cfg.tag)?;
-        let (seq, batch, vocab) = (size.config.seq, size.config.batch, size.config.vocab);
-        let spec = manifest.graph(&cfg.tag, "forward")?.clone();
+        let tag = tag.to_string();
+        let reg = registry.clone();
+        Self::spawn_with(cfg, registry, move || {
+            Ok(Box::new(PjrtBackend::new(&manifest, &tag, reg.base())?)
+                as Box<dyn ServeBackend>)
+        })
+    }
+
+    /// Spawn over an explicit backend factory. The factory runs on the
+    /// worker thread, so the backend may own thread-bound resources
+    /// (the PJRT runtime, device buffers). Tests and the offline bench
+    /// smoke pass a [`super::backend::ReferenceBackend`] here.
+    pub fn spawn_with<F>(
+        cfg: ServerConfig,
+        registry: Arc<AdapterRegistry>,
+        make_backend: F,
+    ) -> Result<BatchServer>
+    where
+        F: FnOnce() -> Result<Box<dyn ServeBackend>> + Send + 'static,
+    {
         let (tx, rx) = sync_channel::<Request>(1024);
         let stats = Arc::new(Mutex::new(ServerStats::default()));
         let stats_w = stats.clone();
+        let registry_w = registry.clone();
 
-        let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
+        let (ready_tx, ready_rx) = sync_channel::<Result<(usize, usize, usize), String>>(1);
         let handle = std::thread::spawn(move || {
-            let init = (|| -> Result<_> {
-                let rt = Runtime::cpu()?;
-                let exe_rt: &'static Runtime = Box::leak(Box::new(rt));
-                let exe = exe_rt.load(&spec)?;
-                let mut fixed = Vec::new();
-                let mut slot = 0usize;
-                for nt in [&base, &lora] {
-                    for t in nt.tensors() {
-                        // zero-copy upload: no per-tensor host clone
-                        fixed.push(exe.upload_f32(slot, t.data())?);
-                        slot += 1;
-                    }
-                }
-                fixed.push(exe.upload_f32(slot, &[cfg.masks.0])?);
-                fixed.push(exe.upload_f32(slot + 1, &[cfg.masks.1])?);
-                Ok((exe, fixed))
-            })();
-            let (exe, fixed) = match init {
-                Ok(v) => {
-                    let _ = ready_tx.send(Ok(()));
-                    v
+            let mut backend = match make_backend() {
+                Ok(b) => {
+                    let _ = ready_tx.send(Ok(b.shape()));
+                    b
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(format!("{e:#}")));
                     return;
                 }
             };
+            let (batch, _, _) = backend.shape();
+            let mut tok_scratch: Vec<i32> = Vec::new();
 
             loop {
                 // block for the first request
@@ -137,93 +188,89 @@ impl BatchServer {
                     }
                 }
 
-                let bsz = pending.len();
-                let launch = Instant::now();
-                let mut tokens = vec![PAD; batch * seq];
-                let mut positions = Vec::with_capacity(bsz);
-                let mut bad: Vec<Option<String>> = vec![None; bsz];
-                for (i, r) in pending.iter().enumerate() {
-                    if r.tokens.is_empty() || r.tokens.len() > seq {
-                        bad[i] = Some(format!(
-                            "prompt length {} out of range 1..={seq}",
-                            r.tokens.len()
-                        ));
-                        positions.push(0);
-                        continue;
+                // group by adapter, preserving first-arrival order; each
+                // group runs as its own forward call so replies can never
+                // read another adapter's logits
+                let mut groups: Vec<(String, Vec<Request>)> = Vec::new();
+                for r in pending {
+                    match groups.iter().position(|(a, _)| *a == r.adapter) {
+                        Some(i) => groups[i].1.push(r),
+                        None => groups.push((r.adapter.clone(), vec![r])),
                     }
-                    tokens[i * seq..i * seq + r.tokens.len()].copy_from_slice(&r.tokens);
-                    positions.push(r.tokens.len() - 1);
                 }
-
-                let result = (|| -> Result<Vec<f32>> {
-                    // borrowed upload: no per-batch token clone
-                    let tok = exe.upload_i32(fixed.len(), &tokens)?;
-                    let mut all: Vec<&xla::PjRtBuffer> = fixed.iter().collect();
-                    all.push(&tok);
-                    let outs = exe.execute(&all)?;
-                    Ok(outs[0].as_f32()?.to_vec())
-                })();
-
-                {
-                    let mut s = stats_w.lock().unwrap();
-                    s.requests += bsz;
-                    s.batches += 1;
-                    s.batch_occupancy_sum += bsz;
-                }
-
-                match result {
-                    Ok(logits) => {
-                        for (i, r) in pending.into_iter().enumerate() {
-                            let resp = if let Some(msg) = bad[i].take() {
-                                Err(msg)
-                            } else {
-                                let off = (i * seq + positions[i]) * vocab;
-                                Ok(Reply {
-                                    logits: logits[off..off + vocab].to_vec(),
-                                    queued: launch - r.enqueued,
-                                    latency: r.enqueued.elapsed(),
-                                    batch_size: bsz,
-                                })
-                            };
-                            let _ = r.reply.send(resp);
-                        }
-                    }
-                    Err(e) => {
-                        let msg = format!("{e:#}");
-                        for r in pending {
-                            let _ = r.reply.send(Err(msg.clone()));
-                        }
-                    }
+                for (adapter, group) in groups {
+                    run_group(
+                        backend.as_mut(),
+                        &registry_w,
+                        &stats_w,
+                        &adapter,
+                        group,
+                        &mut tok_scratch,
+                    );
                 }
             }
         });
 
-        ready_rx
+        let (_batch, seq, vocab) = ready_rx
             .recv()
             .context("server worker died during init")?
             .map_err(|e| anyhow!("server init failed: {e}"))?;
 
-        Ok(BatchServer { tx: Some(tx), handle: Some(handle), stats, seq })
+        Ok(BatchServer { tx: Some(tx), handle: Some(handle), stats, registry, seq, vocab })
     }
 
+    /// Largest prompt (in tokens) the server accepts.
     pub fn max_prompt_len(&self) -> usize {
         self.seq
     }
 
-    /// Submit a prompt; returns a receiver for the reply.
-    pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<Result<Reply, String>>> {
+    /// Logit width of every reply.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// The registry this server routes through (register/evict
+    /// adapters on it while the server runs).
+    pub fn registry(&self) -> &Arc<AdapterRegistry> {
+        &self.registry
+    }
+
+    /// Submit a prompt for `adapter`; returns a receiver for the
+    /// reply. Empty / over-length prompts and unknown adapters are
+    /// rejected here, before they can occupy a batch slot.
+    pub fn submit(
+        &self,
+        adapter: &str,
+        tokens: Vec<i32>,
+    ) -> Result<Receiver<Result<Reply, String>>> {
+        if tokens.is_empty() || tokens.len() > self.seq {
+            self.stats.lock().unwrap().rejected += 1;
+            bail!("prompt length {} out of range 1..={}", tokens.len(), self.seq);
+        }
+        if !self.registry.contains(adapter) {
+            self.stats.lock().unwrap().rejected += 1;
+            bail!(
+                "unknown adapter '{adapter}' (registered: {:?})",
+                self.registry.names()
+            );
+        }
         let (reply_tx, reply_rx) = sync_channel(1);
         self.tx
             .as_ref()
             .context("server shut down")?
-            .send(Request { tokens, enqueued: Instant::now(), reply: reply_tx })
+            .send(Request {
+                adapter: adapter.to_string(),
+                tokens,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            })
             .map_err(|_| anyhow!("server worker exited"))?;
         Ok(reply_rx)
     }
 
     /// Submit and wait.
-    pub fn query(&self, tokens: Vec<i32>) -> Result<Reply> {
-        let rx = self.submit(tokens)?;
+    pub fn query(&self, adapter: &str, tokens: Vec<i32>) -> Result<Reply> {
+        let rx = self.submit(adapter, tokens)?;
         match rx.recv().context("server dropped reply")? {
             Ok(r) => Ok(r),
             Err(e) => bail!("request failed: {e}"),
@@ -234,7 +281,9 @@ impl BatchServer {
         self.stats.lock().unwrap().clone()
     }
 
-    /// Graceful shutdown (drains in-flight work).
+    /// Graceful shutdown: already-submitted requests drain first
+    /// (every in-flight receiver still gets its reply), then the
+    /// worker exits and its backend (runtime included) drops.
     pub fn shutdown(mut self) {
         self.tx = None;
         if let Some(h) = self.handle.take() {
@@ -252,14 +301,93 @@ impl Drop for BatchServer {
     }
 }
 
+/// Pad one same-adapter group into a single forward call and deliver
+/// per-request replies (or the shared error).
+fn run_group(
+    backend: &mut dyn ServeBackend,
+    registry: &AdapterRegistry,
+    stats: &Mutex<ServerStats>,
+    adapter: &str,
+    group: Vec<Request>,
+    tok_scratch: &mut Vec<i32>,
+) {
+    let (batch, seq, vocab) = backend.shape();
+    debug_assert!(group.len() <= batch);
+    let bsz = group.len();
+    let launch = Instant::now();
+
+    // prompts were validated at submit time: 1..=seq tokens each
+    tok_scratch.clear();
+    tok_scratch.resize(batch * seq, PAD);
+    let mut positions = Vec::with_capacity(bsz);
+    for (i, r) in group.iter().enumerate() {
+        tok_scratch[i * seq..i * seq + r.tokens.len()].copy_from_slice(&r.tokens);
+        positions.push(r.tokens.len() - 1);
+    }
+
+    let result = registry.merged_tagged(adapter).and_then(|(generation, w)| {
+        backend.forward(adapter, generation, &w, tok_scratch.as_slice())
+    });
+
+    {
+        let mut s = stats.lock().unwrap();
+        s.requests += bsz;
+        s.batches += 1;
+        s.batch_occupancy_sum += bsz;
+        let a = s.per_adapter.entry(adapter.to_string()).or_default();
+        a.requests += bsz;
+        a.batches += 1;
+        a.occupancy_sum += bsz;
+    }
+
+    match result {
+        Ok(logits) => {
+            for (i, r) in group.into_iter().enumerate() {
+                let off = (i * seq + positions[i]) * vocab;
+                let resp = if off + vocab <= logits.len() {
+                    Ok(Reply {
+                        adapter: adapter.to_string(),
+                        logits: logits[off..off + vocab].to_vec(),
+                        queued: launch - r.enqueued,
+                        latency: r.enqueued.elapsed(),
+                        batch_size: bsz,
+                    })
+                } else {
+                    Err(format!(
+                        "backend returned {} logits, need at least {}",
+                        logits.len(),
+                        off + vocab
+                    ))
+                };
+                let _ = r.reply.send(resp);
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for r in group {
+                let _ = r.reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn stats_math() {
-        let s = ServerStats { requests: 10, batches: 4, batch_occupancy_sum: 10 };
+        let s = ServerStats {
+            requests: 10,
+            batches: 4,
+            batch_occupancy_sum: 10,
+            ..ServerStats::default()
+        };
         assert!((s.mean_batch_size() - 2.5).abs() < 1e-12);
         assert_eq!(ServerStats::default().mean_batch_size(), 0.0);
+
+        let a = AdapterServeStats { requests: 6, batches: 3, occupancy_sum: 6 };
+        assert!((a.mean_batch_size() - 2.0).abs() < 1e-12);
+        assert_eq!(AdapterServeStats::default().mean_batch_size(), 0.0);
     }
 }

@@ -14,8 +14,12 @@
 //! tile-consistent condition `group(i) == j mod g` so that
 //! x·ℓ̃1·ℓ̃2 == U2(U1(x)) holds exactly (the property Eq. 17 asserts).
 
+use anyhow::{anyhow, Result};
+
 use super::iec::gcd;
+use crate::model::weights::{parse_layer_proj, validate_adapter, NamedTensors};
 use crate::util::threads;
+use crate::util::Tensor;
 
 /// Merge β1 into ℓ1 (h×r row-major): ℓ̃1[i,j] = ℓ1[i,j] + β1·g/h
 /// where floor(i/(h/g)) == j mod g, g = gcd(h, r).
@@ -70,6 +74,52 @@ pub fn merge_l2_into(l2: &[f32], r: usize, o: usize, beta2: f32, out: &mut Vec<f
             }
         }
     });
+}
+
+/// Fold every layer's IEC scalars (β1, β2), gated by the serving
+/// masks, into an adapter's LoRA matrices — Eq. 16/17 applied
+/// model-wide. The result serves through the plain-LoRA forward path
+/// (masks (0,0), `betas` zeroed), which is how the multi-adapter
+/// registry caches adapters: merge once per adapter, then every batch
+/// runs mask-free. Each output tensor is produced by one
+/// `merge_l*_into` call writing the buffer that becomes the cached
+/// tensor, so there are no intermediate copies. The merge is
+/// deterministic: re-merging the same source is bit-identical, which
+/// the registry's evict/reload path relies on.
+pub fn merge_adapter(lora: &NamedTensors, masks: (f32, f32)) -> Result<NamedTensors> {
+    validate_adapter(lora)?;
+    let betas = lora.get("betas")?;
+    let n_proj = betas.shape()[1];
+    let beta_at = |stem: &str, which: usize| -> Result<f32> {
+        let (layer, pi) = parse_layer_proj(stem)
+            .ok_or_else(|| anyhow!("bad adapter tensor stem '{stem}'"))?;
+        // validate_adapter bounds every stem; .get keeps a future
+        // validation gap an Err instead of a panic under callers' locks
+        betas
+            .data()
+            .get((layer * n_proj + pi) * 2 + which)
+            .copied()
+            .ok_or_else(|| anyhow!("'{stem}' indexes outside betas"))
+    };
+    let mut out = NamedTensors::new();
+    for (name, t) in lora.iter() {
+        if name == "betas" {
+            out.push(name, Tensor::zeros(t.shape()));
+        } else if let Some(stem) = name.strip_suffix(".lora_a") {
+            let (h, r) = (t.shape()[0], t.shape()[1]);
+            let mut v = Vec::new();
+            merge_l1_into(t.data(), h, r, masks.0 * beta_at(stem, 0)?, &mut v);
+            out.push(name, Tensor::new(t.shape(), v));
+        } else if let Some(stem) = name.strip_suffix(".lora_b") {
+            let (r, o) = (t.shape()[0], t.shape()[1]);
+            let mut v = Vec::new();
+            merge_l2_into(t.data(), r, o, masks.1 * beta_at(stem, 1)?, &mut v);
+            out.push(name, Tensor::new(t.shape(), v));
+        } else {
+            out.push(name, t.clone());
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -159,6 +209,92 @@ mod tests {
             assert_eq!(m1, merge_l1(&l1, h, r, b1), "h={h} r={r}");
             assert_eq!(m2, merge_l2(&l2, r, o, b2), "r={r} o={o}");
         }
+    }
+
+    fn adapter_fixture(seed: u64) -> NamedTensors {
+        let mut rng = Rng::new(seed);
+        let (h, r, o) = (16usize, 4usize, 8usize);
+        let mut nt = NamedTensors::new();
+        nt.push("l0.wq.lora_a", Tensor::new(&[h, r], rng.normal_vec(h * r, 0.0, 0.2)));
+        nt.push("l0.wq.lora_b", Tensor::new(&[r, o], rng.normal_vec(r * o, 0.0, 0.2)));
+        nt.push("l1.w2.lora_a", Tensor::new(&[o, r], rng.normal_vec(o * r, 0.0, 0.2)));
+        nt.push("l1.w2.lora_b", Tensor::new(&[r, h], rng.normal_vec(r * h, 0.0, 0.2)));
+        nt.push("betas", Tensor::new(&[2, 7, 2], rng.normal_vec(2 * 7 * 2, 0.0, 0.5)));
+        nt
+    }
+
+    #[test]
+    fn merge_adapter_matches_per_tensor_merges() {
+        let adapter = adapter_fixture(91);
+        let merged = merge_adapter(&adapter, (1.0, 1.0)).unwrap();
+        let betas = adapter.get("betas").unwrap().data().to_vec();
+        // l0.wq is (layer 0, proj 0); l1.w2 is (layer 1, proj 6)
+        let cases = [("l0.wq", 16usize, 8usize, 0usize), ("l1.w2", 8, 16, 1 * 7 + 6)];
+        for (stem, h, o, bi) in cases {
+            let (b1, b2) = (betas[bi * 2], betas[bi * 2 + 1]);
+            let a = adapter.get(&format!("{stem}.lora_a")).unwrap();
+            let b = adapter.get(&format!("{stem}.lora_b")).unwrap();
+            assert_eq!(
+                merged.get(&format!("{stem}.lora_a")).unwrap().data(),
+                merge_l1(a.data(), h, 4, b1).as_slice(),
+                "{stem}.lora_a"
+            );
+            assert_eq!(
+                merged.get(&format!("{stem}.lora_b")).unwrap().data(),
+                merge_l2(b.data(), 4, o, b2).as_slice(),
+                "{stem}.lora_b"
+            );
+        }
+        // betas are consumed by the merge: zeroed in the output
+        assert!(merged.get("betas").unwrap().data().iter().all(|&x| x == 0.0));
+        assert_eq!(merged.names(), adapter.names());
+    }
+
+    #[test]
+    fn merge_adapter_masks_gate_folding() {
+        let adapter = adapter_fixture(92);
+        // masks (0,0): vanilla-LoRA serving — matrices pass through
+        let off = merge_adapter(&adapter, (0.0, 0.0)).unwrap();
+        for (name, t) in adapter.iter() {
+            if name == "betas" {
+                continue;
+            }
+            assert_eq!(off.get(name).unwrap().data(), t.data(), "{name}");
+        }
+        // masks (1,0): only lora_a moves
+        let u1 = merge_adapter(&adapter, (1.0, 0.0)).unwrap();
+        assert_ne!(
+            u1.get("l0.wq.lora_a").unwrap().data(),
+            adapter.get("l0.wq.lora_a").unwrap().data()
+        );
+        assert_eq!(
+            u1.get("l0.wq.lora_b").unwrap().data(),
+            adapter.get("l0.wq.lora_b").unwrap().data()
+        );
+        // deterministic: same input, bit-identical output
+        let again = merge_adapter(&adapter, (1.0, 0.0)).unwrap();
+        for (name, t) in u1.iter() {
+            assert_eq!(again.get(name).unwrap().data(), t.data(), "{name}");
+        }
+    }
+
+    #[test]
+    fn merge_adapter_rejects_malformed() {
+        let mut no_betas = NamedTensors::new();
+        no_betas.push("l0.wq.lora_a", Tensor::zeros(&[8, 4]));
+        no_betas.push("l0.wq.lora_b", Tensor::zeros(&[4, 8]));
+        assert!(merge_adapter(&no_betas, (1.0, 1.0)).is_err());
+
+        let mut widowed = NamedTensors::new();
+        widowed.push("l0.wq.lora_a", Tensor::zeros(&[8, 4]));
+        widowed.push("betas", Tensor::zeros(&[1, 7, 2]));
+        assert!(merge_adapter(&widowed, (1.0, 1.0)).is_err());
+
+        let mut out_of_range = NamedTensors::new();
+        out_of_range.push("l3.wq.lora_a", Tensor::zeros(&[8, 4]));
+        out_of_range.push("l3.wq.lora_b", Tensor::zeros(&[4, 8]));
+        out_of_range.push("betas", Tensor::zeros(&[1, 7, 2]));
+        assert!(merge_adapter(&out_of_range, (1.0, 1.0)).is_err());
     }
 
     #[test]

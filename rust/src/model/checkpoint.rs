@@ -58,6 +58,16 @@ pub fn save(nt: &NamedTensors, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
+/// Element count of a header's dims with overflow treated as
+/// corruption (a crafted header like [2^33, 2^31] must not wrap to a
+/// small product and dodge the size cap).
+fn checked_elems(dims: &[usize]) -> Result<usize> {
+    dims.iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .filter(|&n| n <= 1 << 30)
+        .ok_or_else(|| anyhow::anyhow!("corrupt checkpoint: tensor too large {dims:?}"))
+}
+
 pub fn load(path: impl AsRef<Path>) -> Result<NamedTensors> {
     let path = path.as_ref();
     let mut f = std::io::BufReader::new(
@@ -100,10 +110,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<NamedTensors> {
             f.read_exact(&mut u64b)?;
             dims.push(u64::from_le_bytes(u64b) as usize);
         }
-        let n: usize = dims.iter().product();
-        if n > 1 << 30 {
-            bail!("corrupt checkpoint: tensor too large ({n} elems)");
-        }
+        let n = checked_elems(&dims)?;
         let mut bytes = vec![0u8; n * 4];
         f.read_exact(&mut bytes)?;
         check = fnv1a(check, &bytes);
@@ -118,6 +125,62 @@ pub fn load(path: impl AsRef<Path>) -> Result<NamedTensors> {
         .context("truncated checkpoint (missing checksum)")?;
     if u64::from_le_bytes(u64b) != check {
         bail!("checkpoint checksum mismatch — file corrupt");
+    }
+    Ok(out)
+}
+
+/// Read just the tensor names + shapes of a checkpoint, seeking past
+/// the (potentially large) data payloads. Does NOT verify the
+/// checksum — use [`load`] for a validated read; this exists for
+/// cheap structural checks (e.g. "is this file an adapter?") before
+/// committing to a full load, as the adapter registry does when
+/// registering file-backed adapters.
+pub fn peek_entries(path: impl AsRef<Path>) -> Result<Vec<(String, Vec<usize>)>> {
+    use std::io::{Seek, SeekFrom};
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an IRQC checkpoint", path.display());
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    f.read_exact(&mut u32b)?;
+    let count = u32::from_le_bytes(u32b) as usize;
+
+    let mut out = Vec::with_capacity(count.min(4096));
+    for _ in 0..count {
+        f.read_exact(&mut u32b)?;
+        let name_len = u32::from_le_bytes(u32b) as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("non-utf8 tensor name")?;
+        f.read_exact(&mut u32b)?;
+        let rank = u32::from_le_bytes(u32b) as usize;
+        if rank > 8 {
+            bail!("corrupt checkpoint: rank {rank}");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        let mut u64b = [0u8; 8];
+        for _ in 0..rank {
+            f.read_exact(&mut u64b)?;
+            dims.push(u64::from_le_bytes(u64b) as usize);
+        }
+        let n = checked_elems(&dims)?;
+        f.seek(SeekFrom::Current(n as i64 * 4))
+            .context("seeking past tensor data")?;
+        out.push((name, dims));
     }
     Ok(out)
 }
@@ -171,6 +234,51 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let err = load(&p).unwrap_err().to_string();
         assert!(err.contains("checksum") || err.contains("corrupt"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn peek_matches_saved_structure() {
+        let mut nt = NamedTensors::new();
+        nt.push("l0.wq.lora_a", Tensor::zeros(&[8, 4]));
+        nt.push("l0.wq.lora_b", Tensor::zeros(&[4, 16]));
+        nt.push("betas", Tensor::zeros(&[1, 7, 2]));
+        let p = tmp("peek");
+        save(&nt, &p).unwrap();
+        let entries = peek_entries(&p).unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0], ("l0.wq.lora_a".to_string(), vec![8, 4]));
+        assert_eq!(entries[2], ("betas".to_string(), vec![1, 7, 2]));
+        // peek is header-only; the full load still validates
+        assert!(load(&p).is_ok());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn peek_rejects_non_checkpoint() {
+        let p = tmp("peek_bad");
+        std::fs::write(&p, b"NOPEnope").unwrap();
+        assert!(peek_entries(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn overflowing_dims_rejected_not_wrapped() {
+        // dims [2^33, 2^31] multiply to 2^64 ≡ 0 in wrapping usize —
+        // must be treated as corruption, not a zero-element tensor
+        let p = tmp("peek_overflow");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"IRQC");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // version
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // count
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        bytes.push(b'w');
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // rank
+        bytes.extend_from_slice(&(1u64 << 33).to_le_bytes());
+        bytes.extend_from_slice(&(1u64 << 31).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(peek_entries(&p).is_err());
+        assert!(load(&p).is_err());
         std::fs::remove_file(p).ok();
     }
 

@@ -9,7 +9,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::InputSpec;
 use crate::util::{Rng, Tensor};
@@ -104,6 +104,104 @@ pub fn proj_kind(name: &str) -> Option<&str> {
     })
 }
 
+/// The adapted projection kinds, in the order the `betas` tensor
+/// `[n_layers, 7, 2]` is indexed (must match
+/// `python/compile/config.py` `PROJ_KINDS`).
+pub const PROJ_KINDS: [&str; 7] = ["wq", "wk", "wv", "wo", "w1", "w3", "w2"];
+
+/// Index of a projection kind within [`PROJ_KINDS`] (= its middle
+/// index into the `betas` tensor).
+pub fn proj_index(kind: &str) -> Option<usize> {
+    PROJ_KINDS.iter().position(|k| *k == kind)
+}
+
+/// Parse an adapted-projection stem `l{layer}.{kind}` (the prefix of
+/// `*.lora_a` / `*.lora_b` tensor names) into (layer, betas
+/// projection index).
+pub fn parse_layer_proj(stem: &str) -> Option<(usize, usize)> {
+    let rest = stem.strip_prefix('l')?;
+    let (num, kind) = rest.split_once('.')?;
+    if num.is_empty() || !num.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    Some((num.parse().ok()?, proj_index(kind)?))
+}
+
+/// Validate (name, shape) entries as an IEC-LoRA adapter: one `betas`
+/// tensor `[n_layers, 7, 2]` plus at least one
+/// `l{i}.{kind}.lora_a`/`.lora_b` pair agreeing on the LoRA rank,
+/// with every pair's layer/kind indexable into `betas`. Shape-only on
+/// purpose so it runs both on loaded adapters ([`validate_adapter`])
+/// and on checkpoint headers (`checkpoint::peek_entries`) before the
+/// data is read.
+pub fn validate_adapter_shapes(entries: &[(String, Vec<usize>)]) -> Result<()> {
+    let (_, bshape) = entries
+        .iter()
+        .find(|(n, _)| n == "betas")
+        .ok_or_else(|| anyhow!("adapter has no 'betas' tensor"))?;
+    if bshape.len() != 3 || bshape[1] != PROJ_KINDS.len() || bshape[2] != 2 {
+        bail!(
+            "betas shape {:?} != [n_layers, {}, 2]",
+            bshape,
+            PROJ_KINDS.len()
+        );
+    }
+    let n_layers = bshape[0];
+    let mut pairs = 0usize;
+    for (name, shape) in entries {
+        let Some(stem) = name.strip_suffix(".lora_a") else {
+            continue;
+        };
+        let (layer, _) = parse_layer_proj(stem)
+            .ok_or_else(|| anyhow!("'{name}' is not an adapted-projection tensor"))?;
+        if layer >= n_layers {
+            bail!("'{name}': layer {layer} outside betas ({n_layers} layers)");
+        }
+        if shape.len() != 2 {
+            bail!("'{name}': lora_a must be rank 2, got {shape:?}");
+        }
+        let b_name = format!("{stem}.lora_b");
+        let (_, b_shape) = entries
+            .iter()
+            .find(|(n, _)| n == &b_name)
+            .ok_or_else(|| anyhow!("'{stem}': lora_a without lora_b"))?;
+        if b_shape.len() != 2 || b_shape[0] != shape[1] {
+            bail!(
+                "'{stem}': lora_a {:?} and lora_b {:?} disagree on rank",
+                shape,
+                b_shape
+            );
+        }
+        pairs += 1;
+    }
+    if pairs == 0 {
+        bail!("adapter has no lora_a/lora_b pairs");
+    }
+    // orphan lora_b tensors would otherwise dodge the layer-bounds
+    // check above and index out of `betas` at merge time
+    for (name, _) in entries {
+        let Some(stem) = name.strip_suffix(".lora_b") else {
+            continue;
+        };
+        parse_layer_proj(stem)
+            .ok_or_else(|| anyhow!("'{name}' is not an adapted-projection tensor"))?;
+        let a_name = format!("{stem}.lora_a");
+        if !entries.iter().any(|(n, _)| n == &a_name) {
+            bail!("'{stem}': lora_b without lora_a");
+        }
+    }
+    Ok(())
+}
+
+/// [`validate_adapter_shapes`] over a loaded adapter.
+pub fn validate_adapter(nt: &NamedTensors) -> Result<()> {
+    let entries: Vec<(String, Vec<usize>)> = nt
+        .iter()
+        .map(|(n, t)| (n.to_string(), t.shape().to_vec()))
+        .collect();
+    validate_adapter_shapes(&entries)
+}
+
 /// Initialize base weights for the given graph input specs (the first
 /// `n` specs of the pretrain graph are the base tensors).
 pub fn init_base(specs: &[InputSpec], n_layers: usize, rng: &mut Rng) -> NamedTensors {
@@ -190,6 +288,61 @@ mod tests {
         assert!(!is_quantized_proj("lm_head"));
         assert_eq!(proj_kind("l3.w1"), Some("w1"));
         assert_eq!(proj_kind("final_norm"), None);
+    }
+
+    #[test]
+    fn layer_proj_parsing() {
+        assert_eq!(proj_index("wq"), Some(0));
+        assert_eq!(proj_index("w2"), Some(6));
+        assert_eq!(proj_index("norm"), None);
+        assert_eq!(parse_layer_proj("l0.wq"), Some((0, 0)));
+        assert_eq!(parse_layer_proj("l11.w3"), Some((11, 5)));
+        assert_eq!(parse_layer_proj("lm_head"), None);
+        assert_eq!(parse_layer_proj("l2.attn_norm"), None);
+        assert_eq!(parse_layer_proj("lx.wq"), None);
+    }
+
+    #[test]
+    fn adapter_validation() {
+        let ok = vec![
+            ("l0.wq.lora_a".to_string(), vec![32usize, 8]),
+            ("l0.wq.lora_b".to_string(), vec![8, 32]),
+            ("betas".to_string(), vec![1, 7, 2]),
+        ];
+        assert!(validate_adapter_shapes(&ok).is_ok());
+
+        let mut no_betas = ok.clone();
+        no_betas.retain(|(n, _)| n != "betas");
+        assert!(validate_adapter_shapes(&no_betas).is_err());
+
+        let mut bad_betas = ok.clone();
+        bad_betas[2].1 = vec![1, 3, 2];
+        assert!(validate_adapter_shapes(&bad_betas).is_err());
+
+        let mut widowed = ok.clone();
+        widowed.retain(|(n, _)| n != "l0.wq.lora_b");
+        assert!(validate_adapter_shapes(&widowed).is_err());
+
+        let mut rank_mismatch = ok.clone();
+        rank_mismatch[1].1 = vec![4, 32];
+        assert!(validate_adapter_shapes(&rank_mismatch).is_err());
+
+        let mut layer_oob = ok.clone();
+        layer_oob[0].0 = "l9.wq.lora_a".to_string();
+        layer_oob[1].0 = "l9.wq.lora_b".to_string();
+        assert!(validate_adapter_shapes(&layer_oob).is_err());
+
+        // orphan lora_b: would index betas out of bounds at merge time
+        let mut orphan_b = ok.clone();
+        orphan_b.push(("l5.wk.lora_b".to_string(), vec![8, 32]));
+        assert!(validate_adapter_shapes(&orphan_b).is_err());
+
+        // the NamedTensors flavor goes through the same checks
+        let mut nt = NamedTensors::new();
+        nt.push("l0.wq.lora_a", Tensor::zeros(&[32, 8]));
+        nt.push("l0.wq.lora_b", Tensor::zeros(&[8, 32]));
+        nt.push("betas", Tensor::zeros(&[1, 7, 2]));
+        assert!(validate_adapter(&nt).is_ok());
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! batch plus the small LoRA/optimizer state.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -93,6 +94,16 @@ impl Runtime {
         Ok(Executor { runtime: self, exe, spec: spec.clone() })
     }
 
+    /// Like [`Runtime::load`], but the executor *owns* the runtime via
+    /// `Arc` — for worker threads that must not borrow. The batch
+    /// server used to `Box::leak` a `Runtime` per spawn to satisfy
+    /// [`Executor`]'s lifetime; an [`OwnedExecutor`] drops its runtime
+    /// with the worker instead of leaking one per spawn.
+    pub fn load_owned(self: Arc<Self>, spec: &GraphSpec) -> Result<OwnedExecutor> {
+        let exe = self.compile_file(&spec.file)?;
+        Ok(OwnedExecutor { runtime: self, exe, spec: spec.clone() })
+    }
+
     fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
         if !path.exists() {
             bail!(
@@ -127,6 +138,56 @@ impl Runtime {
     }
 }
 
+/// Validate dtype + element count against input slot `i` of `spec`;
+/// every upload path of both executor flavors funnels through here.
+fn validate_slot(spec: &GraphSpec, i: usize, dtype: Dtype, len: usize) -> Result<&InputSpec> {
+    let Some(s) = spec.inputs.get(i) else {
+        bail!(
+            "input slot {} out of range: graph {} has {} inputs",
+            i,
+            spec.file.display(),
+            spec.inputs.len()
+        );
+    };
+    if dtype != s.dtype {
+        bail!("input {} ('{}'): dtype {} != manifest {}", i, s.name, dtype, s.dtype);
+    }
+    if len != s.elems() {
+        bail!(
+            "input {} ('{}'): {} elems != manifest shape {:?} ({})",
+            i, s.name, len, s.shape, s.elems()
+        );
+    }
+    Ok(s)
+}
+
+/// Execute a compiled graph over device buffers; download + decompose
+/// the result tuple into typed host tensors (manifest-checked count).
+fn execute_with(
+    exe: &xla::PjRtLoadedExecutable,
+    spec: &GraphSpec,
+    inputs: &[&xla::PjRtBuffer],
+) -> Result<Vec<HostTensor>> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "graph {} expects {} inputs, got {}",
+            spec.file.display(), spec.inputs.len(), inputs.len()
+        );
+    }
+    let mut res = exe.execute_b(inputs).context("execute_b")?;
+    let replica = res.pop().context("no device results")?;
+    let buf = replica.first().context("empty replica result")?;
+    let mut lit = buf.to_literal_sync()?;
+    let parts = lit.decompose_tuple().context("decomposing result tuple")?;
+    if parts.len() != spec.n_outputs {
+        bail!(
+            "graph {} returned {} outputs, manifest says {}",
+            spec.file.display(), parts.len(), spec.n_outputs
+        );
+    }
+    parts.into_iter().map(literal_to_host).collect()
+}
+
 /// A compiled graph bound to its manifest contract.
 pub struct Executor<'rt> {
     runtime: &'rt Runtime,
@@ -139,20 +200,9 @@ impl<'rt> Executor<'rt> {
         &self.spec
     }
 
-    /// Validate dtype + element count against input slot `i`; every
-    /// upload path (owned or borrowed) funnels through here.
+    /// Validate dtype + element count against input slot `i`.
     fn validate_input(&self, i: usize, dtype: Dtype, len: usize) -> Result<&InputSpec> {
-        let s = &self.spec.inputs[i];
-        if dtype != s.dtype {
-            bail!("input {} ('{}'): dtype {} != manifest {}", i, s.name, dtype, s.dtype);
-        }
-        if len != s.elems() {
-            bail!(
-                "input {} ('{}'): {} elems != manifest shape {:?} ({})",
-                i, s.name, len, s.shape, s.elems()
-            );
-        }
-        Ok(s)
+        validate_slot(&self.spec, i, dtype, len)
     }
 
     /// Validate one host tensor against input slot `i`.
@@ -202,24 +252,7 @@ impl<'rt> Executor<'rt> {
     /// Execute over device buffers; download + decompose the result
     /// tuple into typed host tensors (manifest-checked count).
     pub fn execute(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "graph {} expects {} inputs, got {}",
-                self.spec.file.display(), self.spec.inputs.len(), inputs.len()
-            );
-        }
-        let mut res = self.exe.execute_b(inputs).context("execute_b")?;
-        let replica = res.pop().context("no device results")?;
-        let buf = replica.first().context("empty replica result")?;
-        let mut lit = buf.to_literal_sync()?;
-        let parts = lit.decompose_tuple().context("decomposing result tuple")?;
-        if parts.len() != self.spec.n_outputs {
-            bail!(
-                "graph {} returned {} outputs, manifest says {}",
-                self.spec.file.display(), parts.len(), self.spec.n_outputs
-            );
-        }
-        parts.into_iter().map(literal_to_host).collect()
+        execute_with(&self.exe, &self.spec, inputs)
     }
 
     /// Upload + execute host tensors.
@@ -232,6 +265,46 @@ impl<'rt> Executor<'rt> {
     /// Upload + execute, converting every output to f32.
     pub fn call_f32(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
         self.call(inputs)?.into_iter().map(|t| t.into_f32()).collect()
+    }
+}
+
+/// A compiled graph that owns its PJRT runtime (see
+/// [`Runtime::load_owned`]). Exposes the subset of [`Executor`]'s
+/// surface the serving worker needs; both flavors share the same
+/// validation and execution cores, so behavior is identical.
+pub struct OwnedExecutor {
+    runtime: Arc<Runtime>,
+    exe: xla::PjRtLoadedExecutable,
+    spec: GraphSpec,
+}
+
+impl OwnedExecutor {
+    pub fn spec(&self) -> &GraphSpec {
+        &self.spec
+    }
+
+    /// The runtime this executor keeps alive.
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    /// Upload an f32 slice into input slot `i` (zero-copy host side,
+    /// see [`Executor::upload_f32`]).
+    pub fn upload_f32(&self, i: usize, v: &[f32]) -> Result<xla::PjRtBuffer> {
+        let s = validate_slot(&self.spec, i, Dtype::F32, v.len())?;
+        Ok(self.runtime.client.buffer_from_host_buffer::<f32>(v, &s.shape, None)?)
+    }
+
+    /// Upload an i32 slice into input slot `i`.
+    pub fn upload_i32(&self, i: usize, v: &[i32]) -> Result<xla::PjRtBuffer> {
+        let s = validate_slot(&self.spec, i, Dtype::I32, v.len())?;
+        Ok(self.runtime.client.buffer_from_host_buffer::<i32>(v, &s.shape, None)?)
+    }
+
+    /// Execute over device buffers (manifest-checked, as
+    /// [`Executor::execute`]).
+    pub fn execute(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        execute_with(&self.exe, &self.spec, inputs)
     }
 }
 

@@ -5,5 +5,5 @@
 pub mod executor;
 pub mod manifest;
 
-pub use executor::{literal_to_host, Executor, HostTensor, Runtime};
+pub use executor::{literal_to_host, Executor, HostTensor, OwnedExecutor, Runtime};
 pub use manifest::{Dtype, GraphSpec, InputSpec, Manifest, ModelCfg, SizeEntry};

@@ -101,9 +101,10 @@ fn truncated_checkpoint_detected() {
 #[test]
 fn server_rejects_oversized_prompt_without_crashing() {
     let Some(m) = manifest() else { return };
-    use irqlora::coordinator::{BatchServer, ServerConfig};
+    use irqlora::coordinator::{AdapterRegistry, BatchServer, ServerConfig};
     use irqlora::model::weights::{init_base, init_lora};
     use irqlora::util::Rng;
+    use std::sync::Arc;
     use std::time::Duration;
 
     let tag = "xs";
@@ -116,25 +117,26 @@ fn server_rejects_oversized_prompt_without_crashing() {
     let nl = irqlora::coordinator::trainer::train_layout(tspec.inputs.len(), nb).unwrap();
     let lora = init_lora(&tspec.inputs[nb..nb + nl], size.config.rank, &mut rng);
 
+    let registry = Arc::new(AdapterRegistry::new(base, (0.0, 0.0)));
+    registry.register("default", lora).unwrap();
     let server = BatchServer::spawn(
         m,
-        ServerConfig {
-            tag: tag.into(),
-            masks: (0.0, 0.0),
-            max_wait: Duration::from_millis(1),
-        },
-        base,
-        lora,
+        tag,
+        ServerConfig { max_wait: Duration::from_millis(1) },
+        registry,
     )
     .unwrap();
 
-    // oversized prompt -> per-request error
-    let err = server.query(vec![1; size.config.seq + 5]).unwrap_err();
+    // oversized prompt -> rejected at submit, before any batch slot
+    let err = server.query("default", vec![1; size.config.seq + 5]).unwrap_err();
     assert!(format!("{err:#}").contains("out of range"));
-    // empty prompt -> per-request error
-    assert!(server.query(vec![]).is_err());
+    // empty prompt -> rejected at submit
+    assert!(server.query("default", vec![]).is_err());
+    // unknown adapter -> rejected at submit
+    assert!(server.query("ghost", vec![1, 2, 3]).is_err());
+    assert_eq!(server.stats().rejected, 3);
     // server still healthy afterwards
-    let ok = server.query(vec![1, 8, 70, 70, 4, 3]).unwrap();
+    let ok = server.query("default", vec![1, 8, 70, 70, 4, 3]).unwrap();
     assert_eq!(ok.logits.len(), size.config.vocab);
     server.shutdown();
 }

@@ -1,17 +1,25 @@
-//! Integration: the dynamic-batching server under concurrent load —
-//! correct replies, actual batching, clean shutdown.
+//! Integration: the dynamic-batching server under concurrent load
+//! with real PJRT artifacts — correct replies, actual batching,
+//! multi-adapter routing, clean shutdown. Self-skips without
+//! `make artifacts` (the offline routing coverage lives in
+//! multi_adapter_serve.rs over the reference backend).
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use irqlora::coordinator::{BatchServer, ServerConfig};
+use irqlora::coordinator::{AdapterRegistry, BatchServer, ServerConfig};
 use irqlora::data::evalset::mmlu_item;
 use irqlora::data::World;
 use irqlora::model::weights::{init_base, init_lora};
 use irqlora::runtime::Manifest;
 use irqlora::util::Rng;
 
-fn spawn_server(max_wait: Duration) -> Option<(BatchServer, usize, usize)> {
+/// Spawn a PJRT server with `n_adapters` registered tenants
+/// ("tenant0".. differ in their random LoRA init).
+fn spawn_server(
+    max_wait: Duration,
+    n_adapters: usize,
+) -> Option<(BatchServer, usize, usize)> {
     let m = match Manifest::load("artifacts") {
         Ok(m) => m,
         Err(e) => {
@@ -27,12 +35,31 @@ fn spawn_server(max_wait: Duration) -> Option<(BatchServer, usize, usize)> {
     let base = init_base(&spec.inputs[..nb], size.config.n_layers, &mut rng);
     let tspec = m.graph(tag, "train_step").unwrap();
     let nl = irqlora::coordinator::trainer::train_layout(tspec.inputs.len(), nb).unwrap();
-    let lora = init_lora(&tspec.inputs[nb..nb + nl], size.config.rank, &mut rng);
+    let lora_specs = tspec.inputs[nb..nb + nl].to_vec();
+
+    let registry = Arc::new(AdapterRegistry::new(base, (1.0, 1.0)));
+    for i in 0..n_adapters {
+        let mut arng = Rng::new(100 + i as u64);
+        let mut lora = init_lora(&lora_specs, size.config.rank, &mut arng);
+        // init_lora zeroes lora_b/betas (identity adapter); give each
+        // tenant a distinct nonzero adapter so routing is observable
+        let names: Vec<String> = lora.names().to_vec();
+        for name in names {
+            if name.ends_with("lora_b") || name == "betas" {
+                let t = lora.get_mut(&name).unwrap();
+                for v in t.data_mut() {
+                    *v = arng.normal() * 0.05;
+                }
+            }
+        }
+        registry.register(&format!("tenant{i}"), lora).unwrap();
+    }
+
     let server = BatchServer::spawn(
         m,
-        ServerConfig { tag: tag.into(), masks: (1.0, 1.0), max_wait },
-        base,
-        lora,
+        tag,
+        ServerConfig { max_wait },
+        registry,
     )
     .unwrap();
     Some((server, size.config.vocab, size.config.batch))
@@ -40,13 +67,14 @@ fn spawn_server(max_wait: Duration) -> Option<(BatchServer, usize, usize)> {
 
 #[test]
 fn single_request_roundtrip() {
-    let Some((server, vocab, _)) = spawn_server(Duration::from_millis(1)) else {
+    let Some((server, vocab, _)) = spawn_server(Duration::from_millis(1), 1) else {
         return;
     };
     let world = World::new(1);
     let mut rng = Rng::new(1);
     let item = mmlu_item(&world, 0, &mut rng, 5);
-    let reply = server.query(item.prompt.clone()).unwrap();
+    let reply = server.query("tenant0", item.prompt.clone()).unwrap();
+    assert_eq!(reply.adapter, "tenant0");
     assert_eq!(reply.logits.len(), vocab);
     assert!(reply.logits.iter().all(|x| x.is_finite()));
     assert!(reply.batch_size >= 1);
@@ -57,7 +85,7 @@ fn single_request_roundtrip() {
 fn replies_match_request_not_batchmate() {
     // two different prompts served concurrently must get *different*
     // logits (guards against row-swap bugs in the batcher)
-    let Some((server, _, _)) = spawn_server(Duration::from_millis(20)) else {
+    let Some((server, _, _)) = spawn_server(Duration::from_millis(20), 1) else {
         return;
     };
     let server = Arc::new(server);
@@ -68,9 +96,9 @@ fn replies_match_request_not_batchmate() {
     assert_ne!(p1, p2);
 
     let s1 = server.clone();
-    let h1 = std::thread::spawn(move || s1.query(p1).unwrap());
+    let h1 = std::thread::spawn(move || s1.query("tenant0", p1).unwrap());
     let s2 = server.clone();
-    let h2 = std::thread::spawn(move || s2.query(p2).unwrap());
+    let h2 = std::thread::spawn(move || s2.query("tenant0", p2).unwrap());
     let r1 = h1.join().unwrap();
     let r2 = h2.join().unwrap();
     let diff: f32 = r1
@@ -83,8 +111,49 @@ fn replies_match_request_not_batchmate() {
 }
 
 #[test]
+fn mixed_adapter_batch_each_gets_own_logits() {
+    // one prompt through 3 different adapters concurrently: each
+    // reply must match that adapter's solo answer, and distinct
+    // adapters (nonzero, independently-random LoRA) must disagree
+    let Some((server, _, _)) = spawn_server(Duration::from_millis(30), 3) else {
+        return;
+    };
+    let server = Arc::new(server);
+    let world = World::new(7);
+    let mut rng = Rng::new(7);
+    let prompt = mmlu_item(&world, 1, &mut rng, 5).prompt;
+
+    // solo oracles first (sequential, one request per batch)
+    let solo: Vec<Vec<f32>> = (0..3)
+        .map(|i| server.query(&format!("tenant{i}"), prompt.clone()).unwrap().logits)
+        .collect();
+
+    let mut handles = Vec::new();
+    for i in 0..3 {
+        let server = server.clone();
+        let prompt = prompt.clone();
+        handles.push(std::thread::spawn(move || {
+            server.query(&format!("tenant{i}"), prompt).unwrap()
+        }));
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.join().unwrap();
+        assert_eq!(r.adapter, format!("tenant{i}"));
+        for (a, b) in r.logits.iter().zip(&solo[i]) {
+            assert!((a - b).abs() < 1e-5, "tenant{i} contaminated under mixed load");
+        }
+    }
+    // the adapters genuinely disagree on this prompt
+    let d01: f32 = solo[0].iter().zip(&solo[1]).map(|(a, b)| (a - b).abs()).sum();
+    assert!(d01 > 1e-4, "tenant0/tenant1 adapters served identical logits");
+    let stats = server.stats();
+    assert_eq!(stats.per_adapter.len(), 3);
+    server.shutdown();
+}
+
+#[test]
 fn concurrent_load_batches_requests() {
-    let Some((server, _, max_batch)) = spawn_server(Duration::from_millis(30)) else {
+    let Some((server, _, max_batch)) = spawn_server(Duration::from_millis(30), 1) else {
         return;
     };
     let server = Arc::new(server);
@@ -95,7 +164,9 @@ fn concurrent_load_batches_requests() {
         let server = server.clone();
         let mut rng = Rng::new(100 + i as u64);
         let prompt = mmlu_item(&world, i % 4, &mut rng, 5).prompt;
-        handles.push(std::thread::spawn(move || server.query(prompt).unwrap()));
+        handles.push(std::thread::spawn(move || {
+            server.query("tenant0", prompt).unwrap()
+        }));
     }
     let replies: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
     let stats = server.stats();
@@ -112,14 +183,14 @@ fn concurrent_load_batches_requests() {
 
 #[test]
 fn deterministic_same_prompt_same_logits() {
-    let Some((server, _, _)) = spawn_server(Duration::from_millis(1)) else {
+    let Some((server, _, _)) = spawn_server(Duration::from_millis(1), 1) else {
         return;
     };
     let world = World::new(4);
     let mut rng = Rng::new(4);
     let prompt = mmlu_item(&world, 2, &mut rng, 5).prompt;
-    let a = server.query(prompt.clone()).unwrap();
-    let b = server.query(prompt).unwrap();
+    let a = server.query("tenant0", prompt.clone()).unwrap();
+    let b = server.query("tenant0", prompt).unwrap();
     for (x, y) in a.logits.iter().zip(&b.logits) {
         assert!((x - y).abs() < 1e-5);
     }

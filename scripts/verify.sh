@@ -42,8 +42,10 @@ if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
     cargo bench --bench quantize_throughput
     cargo bench --bench iec_merge
     cargo bench --bench icq_overhead
-    # serve_latency / train_step need `make artifacts`; they self-skip
-    # when artifacts are absent, so running them is always safe.
+    # serve_latency's PJRT scenarios need `make artifacts` (self-skip
+    # when absent), but its reference-backend multi-adapter scenario
+    # always runs — the smoke spins up the registry + batch server and
+    # must emit per-adapter rows. train_step self-skips w/o artifacts.
     cargo bench --bench serve_latency
     cargo bench --bench train_step
   )
@@ -53,6 +55,11 @@ if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
   else
     echo "verify.sh: ERROR: bench smoke JSON was not produced" >&2
     exit 4
+  fi
+  if ! grep -q "serve_latency multi-adapter" "$SMOKE_JSON"; then
+    echo "verify.sh: ERROR: serve_latency smoke emitted no multi-adapter rows" >&2
+    echo "verify.sh: (the multi-adapter server path should run without artifacts)" >&2
+    exit 5
   fi
 fi
 
