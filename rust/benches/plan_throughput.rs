@@ -1,0 +1,65 @@
+//! Bench: mixed-precision planner cost — per-tensor information
+//! profiling (the dominant term: an ICQ τ search per candidate
+//! bit-width per block) and the greedy budget solve, at increasing
+//! synthetic model sizes. Rows land in `BENCH_quant.json` so the
+//! planner's overhead trajectory travels with the code, next to the
+//! quantization throughput it gates.
+//!
+//! Run: cargo bench --bench plan_throughput
+//! Env: IRQLORA_BENCH_QUICK=1 (1 iter smoke), IRQLORA_THREADS=n,
+//!      IRQLORA_BENCH_JSON=path
+
+use irqlora::bench_harness::{bench_json_path, bench_throughput, iters, JsonSink};
+use irqlora::model::weights::is_quantized_proj;
+use irqlora::precision::{
+    plan, profile_model, synthetic_model, PlannerConfig, ProfileConfig,
+};
+
+fn main() {
+    let mut sink = JsonSink::new();
+    let it = iters(3);
+
+    // (layers, hidden) — ~41k / ~82k / ~328k quantized params
+    for (layers, h) in [(1usize, 64usize), (2, 64), (2, 128)] {
+        let model = synthetic_model(layers, h, 9);
+        let pcfg = ProfileConfig::default();
+        let params: usize = model
+            .iter()
+            .filter(|(n, _)| is_quantized_proj(n))
+            .map(|(_, t)| t.len())
+            .sum();
+
+        let mut profile = None;
+        let r = bench_throughput(
+            &format!("plan_profile l{layers} h{h} ({params} params)"),
+            0,
+            it,
+            params as f64,
+            "elem",
+            || {
+                profile = Some(profile_model(&model, &pcfg));
+            },
+        );
+        sink.push(&r, Some(params as f64));
+
+        let profile = profile.expect("profiled at least once");
+        let cfg = PlannerConfig::new(3.2);
+        let r = bench_throughput(
+            &format!("plan_solve l{layers} h{h} ({params} params)"),
+            1,
+            it,
+            params as f64,
+            "elem",
+            || {
+                std::hint::black_box(plan(&profile, &cfg).expect("solvable"));
+            },
+        );
+        sink.push(&r, Some(params as f64));
+    }
+
+    let path = bench_json_path("BENCH_quant.json");
+    match sink.write_merged(&path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}

@@ -107,7 +107,9 @@ impl<'rt> Evaluator<'rt> {
     /// Build an evaluator straight from a [`QuantizedModel`]: the base
     /// was dequantized exactly once by `quantize_model` (fused packed-
     /// domain path) and that buffer is reused here — callers should
-    /// never re-dequantize storage tensors per evaluation.
+    /// never re-dequantize storage tensors per evaluation. Works for
+    /// uniform-k and mixed-k (plan-driven) models alike: by this point
+    /// the base is plain f32, so per-tensor bit-widths are invisible.
     pub fn from_quantized(
         rt: &'rt Runtime,
         manifest: &Manifest,

@@ -11,6 +11,7 @@ use crate::data::evalset::McItem;
 use crate::data::instruct::{instruct_batch, Dataset};
 use crate::data::{corpus, World};
 use crate::model::{checkpoint, weights::NamedTensors};
+use crate::precision::{self, PlannerConfig, PrecisionPlan, ProfileConfig};
 use crate::quant::Method;
 use crate::runtime::{Manifest, Runtime};
 use crate::util::timer::Timer;
@@ -173,9 +174,25 @@ pub fn pretrained_base(
 /// gating) folded into each adapter at merge time. Register the
 /// finetuned `lora` tensors of each tenant (e.g. `ArmResult` loras or
 /// cached `.irqc` checkpoints) on the returned registry, then hand it
-/// to `BatchServer::spawn`.
+/// to `BatchServer::spawn`. Mixed-k bases (from
+/// [`plan_quantized`] / `quantize_model_planned`) serve identically —
+/// the base is already dequantized, so nothing downstream sees k.
 pub fn serve_registry(qm: &QuantizedModel, masks: (f32, f32)) -> AdapterRegistry {
     AdapterRegistry::new(qm.dequantized.clone(), masks)
+}
+
+/// Plan + quantize a base under a storage budget: profile every
+/// projection's ICQ entropy across the candidate bit-widths, solve
+/// the greedy information-per-bit allocation, and quantize mixed-k
+/// (the `plan` CLI verb's engine). The returned model drops into
+/// [`serve_registry`] / `Evaluator::from_quantized` exactly like a
+/// uniform-k one and carries its plan for `.irqc` persistence
+/// (`checkpoint::save_with_plan`).
+pub fn plan_quantized(
+    base: &NamedTensors,
+    cfg: &PlannerConfig,
+) -> Result<(PrecisionPlan, QuantizedModel)> {
+    precision::plan_and_quantize(base, &ProfileConfig::default(), cfg)
 }
 
 /// Run one arm end to end against a given base; returns the table row.
@@ -261,6 +278,19 @@ mod tests {
     fn run_cfg_defaults() {
         let c = RunCfg::default();
         assert!(c.pretrain_steps > 0 && c.finetune_steps > 0);
+    }
+
+    #[test]
+    fn plan_quantized_serves_like_uniform() {
+        let base = crate::precision::synthetic_model(1, 32, 13);
+        let (plan, qm) = plan_quantized(&base, &PlannerConfig::new(3.2)).unwrap();
+        assert!(plan.is_mixed());
+        // the mixed-k model drops into the registry unchanged
+        let reg = serve_registry(&qm, (1.0, 1.0));
+        assert_eq!(
+            reg.base().get("l0.wq").unwrap(),
+            qm.dequantized.get("l0.wq").unwrap()
+        );
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! L3 coordinator: the quantize → finetune → evaluate → serve pipeline
 //! (the paper's experimental apparatus as a deployable system).
 //!
-//! - [`quantize`]: model-level quantization with every paper method;
+//! - [`quantize`]: model-level quantization with every paper method,
+//!   uniform-k or mixed-k from a `precision::PrecisionPlan`;
 //! - [`trainer`]: pretraining + QLoRA finetuning over the AOT graphs;
 //! - [`evaluator`]: 5-shot / 0-shot multiple-choice scoring;
 //! - [`registry`]: named IEC-LoRA adapters over one shared
@@ -21,8 +22,10 @@ pub mod trainer;
 
 pub use backend::{PjrtBackend, ReferenceBackend, ServeBackend};
 pub use evaluator::{EvalResult, Evaluator};
-pub use experiment::{pretrained_base, run_arm, serve_registry, Arm, ArmResult, RunCfg};
-pub use quantize::{quantize_model, QuantizedModel};
+pub use experiment::{
+    plan_quantized, pretrained_base, run_arm, serve_registry, Arm, ArmResult, RunCfg,
+};
+pub use quantize::{quantize_model, quantize_model_planned, QuantizedModel};
 pub use registry::{AdapterRegistry, RegistryStats};
 pub use server::{BatchServer, Reply, ServerConfig, ServerStats};
 pub use trainer::{Finetuner, Pretrainer};

@@ -6,9 +6,10 @@
 
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::model::weights::{is_quantized_proj, proj_kind, NamedTensors};
+use crate::precision::PrecisionPlan;
 use crate::quant::{blockwise, gptq, icq, integer, DequantScratch, Method, QuantizedTensor};
 use crate::util::f16::round_f16;
 use crate::util::timer::Timer;
@@ -27,7 +28,11 @@ pub struct TensorReport {
     pub n_params: usize,
 }
 
-/// Model-level quantization result.
+/// Model-level quantization result. Bit-widths are **per tensor**:
+/// each storage entry carries its own k (uniform-k models simply have
+/// them all equal), and dequantization dispatches per-k through the
+/// fused LUTs, so every downstream consumer (evaluator, registry,
+/// server, `lora::merge`) handles mixed-k bases unchanged.
 pub struct QuantizedModel {
     /// Dequantized weights (graph inputs). Non-projection tensors pass
     /// through untouched.
@@ -38,6 +43,9 @@ pub struct QuantizedModel {
     /// Wall time of the whole pipeline (Table 7's "additional time").
     pub elapsed: Duration,
     pub method: Method,
+    /// The precision plan behind a mixed-k model
+    /// ([`quantize_model_planned`]); `None` for uniform-k models.
+    pub plan: Option<PrecisionPlan>,
 }
 
 impl QuantizedModel {
@@ -81,12 +89,34 @@ fn gptq_calibration(h: usize, n: usize, rng: &mut Rng) -> Tensor {
     Tensor::new(&[n, h], x)
 }
 
+/// NF-path quantization of one projection tensor at bit-width `k`
+/// (ICQ when `icq_cfg` is set): dequantized weights, mean code
+/// entropy, effective stored bits/weight and the storage tensor.
+/// Shared by the uniform-k and plan-driven pipelines.
+fn quantize_nf_tensor(
+    t: &Tensor,
+    k: u8,
+    block: usize,
+    icq_cfg: Option<&icq::IcqConfig>,
+    dq_scratch: &mut DequantScratch,
+) -> (Vec<f32>, f64, f64, QuantizedTensor) {
+    let qt = QuantizedTensor::quantize(t, k, block, icq_cfg);
+    let h = qt.mean_entropy();
+    let bits = qt.bits_per_weight();
+    let mut dq = vec![0f32; qt.len];
+    qt.dequantize_into(&mut dq, dq_scratch);
+    (dq, h, bits, qt)
+}
+
 /// Quantize every projection tensor of `weights` with `method`.
 pub fn quantize_model(
     weights: &NamedTensors,
     method: Method,
     seed: u64,
 ) -> Result<QuantizedModel> {
+    if method == Method::Planned {
+        bail!("Method::Planned carries no uniform k — use quantize_model_planned");
+    }
     let timer = Timer::start();
     let mut dequantized = NamedTensors::new();
     let mut storage = Vec::new();
@@ -111,24 +141,23 @@ pub fn quantize_model(
                 (dq, 0.0, 16.0)
             }
             Method::Nf { k } => {
-                let qt = QuantizedTensor::quantize(t, k, blockwise::DEFAULT_BLOCK, None);
-                let h = qt.mean_entropy();
-                let bits = qt.bits_per_weight();
-                let mut dq = vec![0f32; qt.len];
-                qt.dequantize_into(&mut dq, &mut dq_scratch);
+                let (dq, h, bits, qt) =
+                    quantize_nf_tensor(t, k, blockwise::DEFAULT_BLOCK, None, &mut dq_scratch);
                 storage.push((name.to_string(), qt));
                 (dq, h, bits)
             }
             Method::NfIcq { k } => {
-                let qt =
-                    QuantizedTensor::quantize(t, k, blockwise::DEFAULT_BLOCK, Some(&icq_cfg));
-                let h = qt.mean_entropy();
-                let bits = qt.bits_per_weight();
-                let mut dq = vec![0f32; qt.len];
-                qt.dequantize_into(&mut dq, &mut dq_scratch);
+                let (dq, h, bits, qt) = quantize_nf_tensor(
+                    t,
+                    k,
+                    blockwise::DEFAULT_BLOCK,
+                    Some(&icq_cfg),
+                    &mut dq_scratch,
+                );
                 storage.push((name.to_string(), qt));
                 (dq, h, bits)
             }
+            Method::Planned => unreachable!("rejected before the loop"),
             Method::Int { k } => {
                 let q = integer::quantize(w, k, blockwise::DEFAULT_BLOCK);
                 let h = integer::mean_entropy(&q);
@@ -178,6 +207,90 @@ pub fn quantize_model(
         reports,
         elapsed: timer.elapsed(),
         method,
+        plan: None,
+    })
+}
+
+/// Quantize every projection tensor with its plan-assigned bit-width
+/// (ICQ NF-k, per-tensor k) — the mixed-k pipeline behind
+/// `precision::apply`. The result serves and evaluates through
+/// exactly the same downstream paths as a uniform-k model; errors if
+/// plan and model disagree in either direction — a projection tensor
+/// with no plan entry, or a plan entry matching no tensor (both are
+/// stale-plan-applied-to-a-different-model symptoms).
+pub fn quantize_model_planned(
+    weights: &NamedTensors,
+    plan: &PrecisionPlan,
+    icq_cfg: &icq::IcqConfig,
+) -> Result<QuantizedModel> {
+    let timer = Timer::start();
+    let mut dequantized = NamedTensors::new();
+    let mut storage = Vec::new();
+    let mut reports = Vec::new();
+    let mut dq_scratch = DequantScratch::default();
+    // quantize at the block size the plan was profiled at — its
+    // entropy/storage numbers describe exactly that blocking
+    let block = plan.block;
+    if block == 0 {
+        bail!("precision plan has block size 0");
+    }
+
+    for (name, t) in weights.iter() {
+        if !is_quantized_proj(name) {
+            dequantized.push(name, t.clone());
+            continue;
+        }
+        let entry = plan
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("tensor '{name}' is missing from precision plan"))?;
+        // names like "l0.wq" are size-independent, so a stale plan for
+        // a differently-sized model would otherwise match silently
+        if entry.n_params != t.len() {
+            bail!(
+                "plan entry '{name}' describes {} params but the tensor has {} — \
+                 the plan was built for a different model",
+                entry.n_params,
+                t.len()
+            );
+        }
+        let k = entry.k;
+        let (dq, entropy, bits, qt) =
+            quantize_nf_tensor(t, k, block, Some(icq_cfg), &mut dq_scratch);
+        let q0 = blockwise::quantize(t.data(), k, block, None);
+        let entropy_vanilla = crate::quant::entropy::mean_block_entropy(&q0);
+        storage.push((name.to_string(), qt));
+        reports.push(TensorReport {
+            name: name.to_string(),
+            entropy,
+            entropy_vanilla,
+            bits_per_weight: bits,
+            n_params: t.len(),
+        });
+        dequantized.push(name, Tensor::new(t.shape(), dq));
+    }
+
+    // the converse validation: every plan entry must have matched a
+    // model tensor, or a stale plan's bookkeeping (total params/bits)
+    // would travel with an artifact it does not describe
+    if storage.len() != plan.entries.len() {
+        let unmatched: Vec<&str> = plan
+            .entries
+            .iter()
+            .filter(|e| !storage.iter().any(|(n, _)| *n == e.name))
+            .map(|e| e.name.as_str())
+            .collect();
+        bail!("plan entries match no model tensor: {unmatched:?}");
+    }
+
+    Ok(QuantizedModel {
+        dequantized,
+        storage,
+        reports,
+        elapsed: timer.elapsed(),
+        method: Method::Planned,
+        plan: Some(plan.clone()),
     })
 }
 
@@ -276,6 +389,68 @@ mod tests {
             ));
         }
         assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn planned_method_requires_a_plan() {
+        let m = tiny_model(6);
+        let err = quantize_model(&m, Method::Planned, 0).unwrap_err().to_string();
+        assert!(err.contains("quantize_model_planned"), "{err}");
+        // the guard is unconditional — even with zero projection
+        // tensors there is no silent Ok(Planned-without-plan)
+        let mut bare = NamedTensors::new();
+        bare.push("embed", Tensor::zeros(&[4, 4]));
+        assert!(quantize_model(&bare, Method::Planned, 0).is_err());
+    }
+
+    #[test]
+    fn planned_model_matches_per_tensor_uniform_oracles() {
+        use crate::precision::{PlanEntry, PrecisionPlan};
+
+        let m = tiny_model(7);
+        let icq_cfg = icq::IcqConfig::default();
+        // hand-built mixed plan: wq at 2 bits, w2 at 4
+        let plan = PrecisionPlan {
+            budget_bits: 3.0,
+            block: blockwise::DEFAULT_BLOCK,
+            entries: vec![
+                PlanEntry {
+                    name: "l0.wq".into(),
+                    k: 2,
+                    n_params: m.get("l0.wq").unwrap().len(),
+                    entropy: 0.0,
+                    bits_per_weight: 0.0,
+                },
+                PlanEntry {
+                    name: "l0.w2".into(),
+                    k: 4,
+                    n_params: m.get("l0.w2").unwrap().len(),
+                    entropy: 0.0,
+                    bits_per_weight: 0.0,
+                },
+            ],
+        };
+        let qm = quantize_model_planned(&m, &plan, &icq_cfg).unwrap();
+        assert_eq!(qm.method, Method::Planned);
+        assert!(qm.plan.is_some());
+        assert_eq!(qm.storage.len(), 2);
+        // each tensor must be bit-identical to quantizing it alone at
+        // its uniform k — mixed-k is per-tensor uniform-k, nothing else
+        for (name, k) in [("l0.wq", 2u8), ("l0.w2", 4u8)] {
+            let t = m.get(name).unwrap();
+            let oracle =
+                QuantizedTensor::quantize(t, k, blockwise::DEFAULT_BLOCK, Some(&icq_cfg));
+            let (_, qt) = qm.storage.iter().find(|(n, _)| n == name).unwrap();
+            assert_eq!(qt.k, k, "{name}");
+            assert_eq!(qt.packed, oracle.packed, "{name}");
+            let got = qm.dequantized.get(name).unwrap();
+            let want = oracle.dequantize();
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name}");
+            }
+        }
+        // non-projection tensors pass through
+        assert_eq!(qm.dequantized.get("embed").unwrap(), m.get("embed").unwrap());
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! QA-LoRA / LoftQ / IR-QLoRA all share the same serving economics:
 //! the quantized base is the expensive, shared artifact while each
 //! adapter is two small matrices per projection plus two scalars per
-//! layer. The registry exploits that structure — the base is
+//! layer. The base's bit-widths never reach this layer — uniform-k
+//! and mixed-k (`precision::PrecisionPlan`-driven) models hand over
+//! the same dequantized f32 tensors. The registry exploits that structure — the base is
 //! dequantized **once** (by `quantize_model`'s fused packed-domain
 //! path) and held behind an `Arc`; adapters register by name and are
 //! folded (IEC β1/β2 merged via Eq. 16/17, `lora::merge::merge_adapter`)

@@ -8,6 +8,8 @@
 //! Layer map:
 //! - [`quant`] + [`lora`] — the paper's contribution (ICQ, IEC) and all
 //!   baselines, in Rust;
+//! - [`precision`] — information-budgeted mixed-precision planning
+//!   (profile → plan → apply over the ICQ entropy metric);
 //! - [`model`] / [`data`] — NanoLLaMA substrate and synthetic corpora;
 //! - [`runtime`] — PJRT loader/executor for the AOT HLO artifacts;
 //! - [`coordinator`] — quantize → finetune → evaluate → serve pipeline;
@@ -15,6 +17,7 @@
 
 pub mod util;
 pub mod quant;
+pub mod precision;
 pub mod lora;
 pub mod model;
 pub mod data;

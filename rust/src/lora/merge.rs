@@ -2,7 +2,10 @@
 //!
 //! The elastic terms are linear in the input, so β1/β2 fold into the
 //! adapter weights and serving runs plain LoRA matmuls — IEC costs
-//! nothing at inference (the property Table 6 relies on).
+//! nothing at inference (the property Table 6 relies on). Merging is
+//! independent of the base's quantization: adapters fold identically
+//! over uniform-k and mixed-k (plan-driven) bases, since only the
+//! adapter matrices and β scalars participate.
 //!
 //! Note on Eq. 16: taken literally, its floor-based index condition
 //! places the pooled groups in *block-repeat* order

@@ -3,9 +3,20 @@
 //! Layout (little-endian):
 //! ```text
 //! magic "IRQC" | version u32 | count u32
+//! version 2 only: plan_len u32 | plan bytes (precision::PrecisionPlan)
 //! per tensor: name_len u32 | name bytes | rank u32 | dims u64* | f32 data
-//! trailer: crc-ish checksum u64 (FNV-1a over all tensor bytes)
+//! trailer: crc-ish checksum u64 (FNV-1a over plan bytes, then all
+//!          tensor bytes; version 1 has no plan bytes)
 //! ```
+//! Version 1 is the original uniform-k format; [`save`] still writes
+//! it byte-for-byte, so checkpoints produced before the mixed-
+//! precision planner existed — and new plan-less saves — stay
+//! identical and keep loading everywhere. Version 2
+//! ([`save_with_plan`]) prepends a serialized
+//! [`PrecisionPlan`] so a mixed-k artifact travels with the
+//! allocation that produced it; [`load`] accepts both and plan-aware
+//! callers use [`load_with_plan`] / [`peek_plan`].
+//!
 //! Used to cache pretrained base weights and finetuned adapters under
 //! `runs/` so the table harness doesn't re-train on every invocation.
 
@@ -14,12 +25,18 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::precision::PrecisionPlan;
 use crate::util::Tensor;
 
 use super::weights::NamedTensors;
 
 const MAGIC: &[u8; 4] = b"IRQC";
 const VERSION: u32 = 1;
+/// Version written when a precision plan is attached.
+const VERSION_PLANNED: u32 = 2;
+/// Cap on the serialized plan section (a plan is a few dozen bytes per
+/// tensor; anything near this is corruption).
+const MAX_PLAN_BYTES: usize = 1 << 24;
 
 fn fnv1a(state: u64, bytes: &[u8]) -> u64 {
     let mut h = state;
@@ -30,8 +47,22 @@ fn fnv1a(state: u64, bytes: &[u8]) -> u64 {
     h
 }
 
+/// Save without a plan — version-1 bytes, identical to every
+/// checkpoint written before the mixed-precision planner existed.
 pub fn save(nt: &NamedTensors, path: impl AsRef<Path>) -> Result<()> {
-    let path = path.as_ref();
+    save_impl(nt, None, path.as_ref())
+}
+
+/// Save with an attached [`PrecisionPlan`] (version-2 header).
+pub fn save_with_plan(
+    nt: &NamedTensors,
+    plan: &PrecisionPlan,
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    save_impl(nt, Some(plan), path.as_ref())
+}
+
+fn save_impl(nt: &NamedTensors, plan: Option<&PrecisionPlan>, path: &Path) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -40,9 +71,24 @@ pub fn save(nt: &NamedTensors, path: impl AsRef<Path>) -> Result<()> {
             .with_context(|| format!("creating {}", path.display()))?,
     );
     f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
+    let version = if plan.is_some() { VERSION_PLANNED } else { VERSION };
+    f.write_all(&version.to_le_bytes())?;
     f.write_all(&(nt.len() as u32).to_le_bytes())?;
     let mut check = 0xcbf29ce484222325u64;
+    if let Some(p) = plan {
+        let blob = p.to_bytes();
+        // refuse at write time what every reader would reject as
+        // corrupt (and what the u32 length field cannot represent)
+        if blob.len() > MAX_PLAN_BYTES {
+            bail!(
+                "precision plan serializes to {} bytes (cap {MAX_PLAN_BYTES})",
+                blob.len()
+            );
+        }
+        f.write_all(&(blob.len() as u32).to_le_bytes())?;
+        check = fnv1a(check, &blob);
+        f.write_all(&blob)?;
+    }
     for (name, t) in nt.iter() {
         f.write_all(&(name.len() as u32).to_le_bytes())?;
         f.write_all(name.as_bytes())?;
@@ -58,6 +104,38 @@ pub fn save(nt: &NamedTensors, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
+/// Shared header prelude of every reader: magic, version (validated
+/// against the two known formats), tensor count.
+fn read_prelude(f: &mut impl Read) -> Result<(u32, usize)> {
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an IRQC checkpoint");
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    if version != VERSION && version != VERSION_PLANNED {
+        bail!("unsupported checkpoint version {version}");
+    }
+    f.read_exact(&mut u32b)?;
+    Ok((version, u32::from_le_bytes(u32b) as usize))
+}
+
+/// The version-2 plan section: length-prefixed blob, capped at
+/// [`MAX_PLAN_BYTES`].
+fn read_plan_blob(f: &mut impl Read) -> Result<Vec<u8>> {
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let plan_len = u32::from_le_bytes(u32b) as usize;
+    if plan_len > MAX_PLAN_BYTES {
+        bail!("corrupt checkpoint: plan section of {plan_len} bytes");
+    }
+    let mut blob = vec![0u8; plan_len];
+    f.read_exact(&mut blob)?;
+    Ok(blob)
+}
+
 /// Element count of a header's dims with overflow treated as
 /// corruption (a crafted header like [2^33, 2^31] must not wrap to a
 /// small product and dodge the size cap).
@@ -68,28 +146,35 @@ fn checked_elems(dims: &[usize]) -> Result<usize> {
         .ok_or_else(|| anyhow::anyhow!("corrupt checkpoint: tensor too large {dims:?}"))
 }
 
+/// Load the tensors of a (version 1 or 2) checkpoint, discarding any
+/// attached plan — see [`load_with_plan`] to keep it.
 pub fn load(path: impl AsRef<Path>) -> Result<NamedTensors> {
+    Ok(load_with_plan(path)?.0)
+}
+
+/// Load a checkpoint plus its attached [`PrecisionPlan`], if the file
+/// carries one (version-1 files never do).
+pub fn load_with_plan(
+    path: impl AsRef<Path>,
+) -> Result<(NamedTensors, Option<PrecisionPlan>)> {
     let path = path.as_ref();
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path)
             .with_context(|| format!("opening checkpoint {}", path.display()))?,
     );
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{} is not an IRQC checkpoint", path.display());
-    }
-    let mut u32b = [0u8; 4];
-    f.read_exact(&mut u32b)?;
-    let version = u32::from_le_bytes(u32b);
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
-    f.read_exact(&mut u32b)?;
-    let count = u32::from_le_bytes(u32b) as usize;
+    let (version, count) =
+        read_prelude(&mut f).with_context(|| format!("reading {}", path.display()))?;
 
     let mut out = NamedTensors::new();
     let mut check = 0xcbf29ce484222325u64;
+    let plan = if version == VERSION_PLANNED {
+        let blob = read_plan_blob(&mut f)?;
+        check = fnv1a(check, &blob);
+        Some(PrecisionPlan::from_bytes(&blob).context("checkpoint precision plan")?)
+    } else {
+        None
+    };
+    let mut u32b = [0u8; 4];
     for _ in 0..count {
         f.read_exact(&mut u32b)?;
         let name_len = u32::from_le_bytes(u32b) as usize;
@@ -126,7 +211,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<NamedTensors> {
     if u64::from_le_bytes(u64b) != check {
         bail!("checkpoint checksum mismatch — file corrupt");
     }
-    Ok(out)
+    Ok((out, plan))
 }
 
 /// Read just the tensor names + shapes of a checkpoint, seeking past
@@ -142,20 +227,13 @@ pub fn peek_entries(path: impl AsRef<Path>) -> Result<Vec<(String, Vec<usize>)>>
         std::fs::File::open(path)
             .with_context(|| format!("opening checkpoint {}", path.display()))?,
     );
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{} is not an IRQC checkpoint", path.display());
+    let (version, count) =
+        read_prelude(&mut f).with_context(|| format!("reading {}", path.display()))?;
+    if version == VERSION_PLANNED {
+        read_plan_blob(&mut f)?; // peek skips the plan (it is small)
     }
-    let mut u32b = [0u8; 4];
-    f.read_exact(&mut u32b)?;
-    let version = u32::from_le_bytes(u32b);
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
-    f.read_exact(&mut u32b)?;
-    let count = u32::from_le_bytes(u32b) as usize;
 
+    let mut u32b = [0u8; 4];
     let mut out = Vec::with_capacity(count.min(4096));
     for _ in 0..count {
         f.read_exact(&mut u32b)?;
@@ -183,6 +261,26 @@ pub fn peek_entries(path: impl AsRef<Path>) -> Result<Vec<(String, Vec<usize>)>>
         out.push((name, dims));
     }
     Ok(out)
+}
+
+/// Read just the attached [`PrecisionPlan`] of a checkpoint, without
+/// touching tensor data. `Ok(None)` for version-1 (plan-less) files.
+/// Like [`peek_entries`], this does NOT verify the file checksum.
+pub fn peek_plan(path: impl AsRef<Path>) -> Result<Option<PrecisionPlan>> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?,
+    );
+    let (version, _count) =
+        read_prelude(&mut f).with_context(|| format!("reading {}", path.display()))?;
+    if version != VERSION_PLANNED {
+        return Ok(None);
+    }
+    let blob = read_plan_blob(&mut f)?;
+    PrecisionPlan::from_bytes(&blob)
+        .context("checkpoint precision plan")
+        .map(Some)
 }
 
 #[cfg(test)]
@@ -286,5 +384,81 @@ mod tests {
     fn missing_file_clear_error() {
         let err = load("/nonexistent/ckpt.irqc").unwrap_err().to_string();
         assert!(err.contains("opening checkpoint"));
+    }
+
+    fn sample_plan() -> PrecisionPlan {
+        use crate::precision::PlanEntry;
+        PrecisionPlan {
+            budget_bits: 3.2,
+            block: 64,
+            entries: vec![
+                PlanEntry {
+                    name: "l0.wq".into(),
+                    k: 4,
+                    n_params: 64,
+                    entropy: 3.5,
+                    bits_per_weight: 4.26,
+                },
+                PlanEntry {
+                    name: "l0.wk".into(),
+                    k: 2,
+                    n_params: 64,
+                    entropy: 1.9,
+                    bits_per_weight: 2.26,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn plan_section_roundtrips() {
+        let mut nt = NamedTensors::new();
+        nt.push("l0.wq", Tensor::full(&[8, 8], 0.25));
+        let p = tmp("plan_roundtrip");
+        let plan = sample_plan();
+        save_with_plan(&nt, &plan, &p).unwrap();
+        // header says version 2
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..4], b"IRQC");
+        assert_eq!(u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]), 2);
+        // all three readers agree
+        let (back, got) = load_with_plan(&p).unwrap();
+        assert_eq!(back.get("l0.wq").unwrap(), nt.get("l0.wq").unwrap());
+        assert_eq!(got.as_ref(), Some(&plan));
+        assert_eq!(peek_plan(&p).unwrap().as_ref(), Some(&plan));
+        // plan-unaware load and peek_entries still work on v2 files
+        let plain = load(&p).unwrap();
+        assert_eq!(plain.len(), 1);
+        assert_eq!(peek_entries(&p).unwrap(), vec![("l0.wq".to_string(), vec![8, 8])]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn plain_save_stays_version1_and_planless() {
+        let mut nt = NamedTensors::new();
+        nt.push("w", Tensor::full(&[4], 1.0));
+        let p = tmp("still_v1");
+        save(&nt, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]), 1);
+        let (_, plan) = load_with_plan(&p).unwrap();
+        assert!(plan.is_none());
+        assert!(peek_plan(&p).unwrap().is_none());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn corrupt_plan_section_rejected() {
+        let mut nt = NamedTensors::new();
+        nt.push("w", Tensor::full(&[4], 1.0));
+        let p = tmp("plan_bitflip");
+        save_with_plan(&nt, &sample_plan(), &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // flip a byte inside the plan blob (starts after the 16-byte
+        // header incl. plan_len)
+        bytes[20] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_with_plan(&p).is_err());
+        std::fs::remove_file(p).ok();
     }
 }

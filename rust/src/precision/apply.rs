@@ -1,0 +1,136 @@
+//! Applying a [`PrecisionPlan`] — the execution half of the
+//! mixed-precision planner.
+//!
+//! Thin orchestration over
+//! [`crate::coordinator::quantize::quantize_model_planned`]: each
+//! projection tensor is ICQ-quantized at its plan-assigned bit-width,
+//! producing a mixed-k `QuantizedModel` that flows through the same
+//! evaluator / registry / server paths as a uniform-k one
+//! (dequantization already dispatches per-tensor k through the fused
+//! per-k LUTs in [`crate::quant::fused`]).
+
+use anyhow::Result;
+
+use crate::coordinator::quantize::{quantize_model_planned, QuantizedModel};
+use crate::model::weights::NamedTensors;
+use crate::quant::icq::IcqConfig;
+
+use super::planner::{plan, PlannerConfig, PrecisionPlan};
+use super::profile::{profile_model, ProfileConfig};
+
+/// Profile `weights` and solve for a plan under `cfg`'s budget.
+pub fn plan_model(
+    weights: &NamedTensors,
+    pcfg: &ProfileConfig,
+    cfg: &PlannerConfig,
+) -> Result<PrecisionPlan> {
+    plan(&profile_model(weights, pcfg), cfg)
+}
+
+/// Quantize `weights` per the plan (ICQ NF-k with per-tensor k).
+pub fn apply_plan(
+    weights: &NamedTensors,
+    plan: &PrecisionPlan,
+    icq: &IcqConfig,
+) -> Result<QuantizedModel> {
+    quantize_model_planned(weights, plan, icq)
+}
+
+/// The full profile → plan → apply pipeline in one call.
+pub fn plan_and_quantize(
+    weights: &NamedTensors,
+    pcfg: &ProfileConfig,
+    cfg: &PlannerConfig,
+) -> Result<(PrecisionPlan, QuantizedModel)> {
+    let p = plan_model(weights, pcfg, cfg)?;
+    let qm = apply_plan(weights, &p, &pcfg.icq)?;
+    Ok((p, qm))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::profile::synthetic_model;
+
+    #[test]
+    fn plan_and_quantize_end_to_end() {
+        let base = synthetic_model(1, 32, 11);
+        let cfg = PlannerConfig::new(3.2);
+        let (p, qm) = plan_and_quantize(&base, &ProfileConfig::default(), &cfg).unwrap();
+        assert!(p.is_mixed());
+        assert!(qm.plan.is_some());
+        assert_eq!(qm.storage.len(), p.entries.len());
+        // every stored tensor carries its planned k
+        for (name, qt) in &qm.storage {
+            assert_eq!(Some(qt.k), p.k_for(name), "{name}");
+            assert!(qt.taus.is_some(), "{name}: planned path is ICQ");
+        }
+        // actual packed code bits honor the budget exactly
+        let code_bits: usize = qm.storage.iter().map(|(_, qt)| qt.len * qt.k as usize).sum();
+        let params: usize = qm.storage.iter().map(|(_, qt)| qt.len).sum();
+        assert!(code_bits as f64 <= 3.2 * params as f64 + 1e-6);
+        // non-projection tensors pass through untouched
+        assert_eq!(
+            qm.dequantized.get("embed").unwrap(),
+            base.get("embed").unwrap()
+        );
+    }
+
+    #[test]
+    fn plan_block_size_is_honored_when_applying() {
+        // regression: the planned path must quantize at the block the
+        // plan was profiled at, not silently at DEFAULT_BLOCK
+        let base = synthetic_model(1, 32, 14);
+        let pcfg = ProfileConfig { block: 32, ..ProfileConfig::default() };
+        let (p, qm) = plan_and_quantize(&base, &pcfg, &PlannerConfig::new(3.2)).unwrap();
+        assert_eq!(p.block, 32);
+        for (name, qt) in &qm.storage {
+            assert_eq!(qt.block, 32, "{name}");
+        }
+        // the plan's exact storage accounting matches the artifacts
+        let storage_bits: usize = qm.storage.iter().map(|(_, qt)| qt.storage_bits()).sum();
+        assert_eq!(storage_bits, p.total_storage_bits());
+    }
+
+    #[test]
+    fn apply_rejects_plan_missing_a_tensor() {
+        let base = synthetic_model(1, 32, 12);
+        let cfg = PlannerConfig::new(3.2);
+        let mut p = plan_model(&base, &ProfileConfig::default(), &cfg).unwrap();
+        p.entries.retain(|e| !e.name.ends_with(".wo"));
+        let err = apply_plan(&base, &p, &IcqConfig::default()).unwrap_err().to_string();
+        assert!(err.contains("missing from precision plan"), "{err}");
+    }
+
+    #[test]
+    fn apply_rejects_plan_for_differently_sized_model() {
+        // same architecture, same tensor NAMES, different width — the
+        // likeliest stale-plan mistake; must error, not silently apply
+        let small = synthetic_model(1, 32, 16);
+        let large = synthetic_model(1, 64, 16);
+        let p = plan_model(&small, &ProfileConfig::default(), &PlannerConfig::new(3.2))
+            .unwrap();
+        let err = apply_plan(&large, &p, &IcqConfig::default()).unwrap_err().to_string();
+        assert!(err.contains("built for a different model"), "{err}");
+    }
+
+    #[test]
+    fn apply_rejects_plan_with_unmatched_entries() {
+        use crate::precision::planner::PlanEntry;
+
+        // a stale plan (entries for tensors this model does not have)
+        // must be rejected, not silently partially applied
+        let base = synthetic_model(1, 32, 15);
+        let cfg = PlannerConfig::new(3.2);
+        let mut p = plan_model(&base, &ProfileConfig::default(), &cfg).unwrap();
+        p.entries.push(PlanEntry {
+            name: "l9.wq".into(),
+            k: 4,
+            n_params: 1024,
+            entropy: 3.0,
+            bits_per_weight: 4.25,
+        });
+        let err = apply_plan(&base, &p, &IcqConfig::default()).unwrap_err().to_string();
+        assert!(err.contains("match no model tensor"), "{err}");
+    }
+}

@@ -1,0 +1,40 @@
+//! Information-budgeted mixed-precision planning.
+//!
+//! IR-QLoRA's premise is that the Shannon entropy of quantized codes
+//! measures retained information (paper Eq. 7). This subsystem spends
+//! a storage budget where that information is densest, turning the
+//! single uniform bit-width the pipeline used to apply into a
+//! per-tensor assignment over the whole 2–8-bit accuracy/size
+//! frontier (cf. LowRA's fine-grained precision assignment and
+//! QA-LoRA's adaptation balance in PAPERS.md):
+//!
+//! 1. **profile** ([`profile`]) — measure every projection tensor's
+//!    ICQ code entropy at each candidate bit-width (k ∈ {2, 3, 4, 8}),
+//!    reusing `quant::icq::search_all` (parallel across blocks via
+//!    `util::threads`) and `quant::entropy`;
+//! 2. **plan** ([`planner`]) — deterministic greedy marginal-gain
+//!    solve maximizing total retained information under an average
+//!    code-bits-per-weight budget (`IRQLORA_BIT_BUDGET`, e.g. `3.2`),
+//!    with global and per-projection floor/ceiling constraints; the
+//!    resulting [`PrecisionPlan`] serializes into version-2 `.irqc`
+//!    checkpoints (`model::checkpoint::save_with_plan`);
+//! 3. **apply** ([`apply`]) — drive
+//!    `coordinator::quantize::quantize_model_planned` with the
+//!    per-tensor assignments, producing a mixed-k `QuantizedModel`
+//!    that serves/evaluates through the unchanged downstream paths.
+//!
+//! The budget counts **packed code bits** per weight: the
+//! double-quantized s/τ constants cost the same at every k (≈0.25 b/w
+//! at block 64), so they are reported but not budgeted. The `plan`
+//! CLI verb prints the chosen allocation table.
+
+pub mod apply;
+pub mod planner;
+pub mod profile;
+
+pub use apply::{apply_plan, plan_and_quantize, plan_model};
+pub use planner::{parse_budget, plan, PlanEntry, PlannerConfig, PrecisionPlan};
+pub use profile::{
+    profile_model, profile_tensor, synthetic_model, KProfile, ModelProfile, ProfileConfig,
+    TensorProfile, CANDIDATE_KS,
+};

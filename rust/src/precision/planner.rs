@@ -1,0 +1,590 @@
+//! Information-budgeted bit allocation — the solver half of the
+//! mixed-precision planner.
+//!
+//! Given a [`ModelProfile`] (per-tensor ICQ entropy at each candidate
+//! bit-width) and a storage budget expressed as **average packed code
+//! bits per weight** (`IRQLORA_BIT_BUDGET`, e.g. `3.2`), the planner
+//! maximizes total retained information `Σ entropy(kᵢ) · nᵢ` subject
+//! to `Σ kᵢ · nᵢ ≤ budget · Σ nᵢ` by deterministic greedy
+//! marginal-gain ascent: every tensor starts at its floor bit-width
+//! and the upgrade with the best Δinformation/Δbits ratio that still
+//! fits is applied until nothing fits.
+//!
+//! The budget deliberately counts code bits only: the double-quantized
+//! s/τ constants cost the same (≈0.25 b/w at block 64) at every k, so
+//! they are not a quantity any allocation can trade — plans report the
+//! full effective bits/weight per tensor alongside the budgeted code
+//! bits.
+//!
+//! Floors/ceilings come from [`PlannerConfig`]: global bounds
+//! (`IRQLORA_BIT_FLOOR` / `IRQLORA_BIT_CEIL`, defaults 2/8) plus
+//! per-projection-kind overrides (e.g. pin `w2` — the residual-path
+//! down-projection — to ≥ 3 bits).
+
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::profile::{storage_bits, ModelProfile};
+
+/// One tensor's slot in a [`PrecisionPlan`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanEntry {
+    pub name: String,
+    /// Chosen bit-width.
+    pub k: u8,
+    pub n_params: usize,
+    /// Expected mean code entropy (bits) at the chosen k, from the
+    /// profile.
+    pub entropy: f64,
+    /// Full effective storage bits/weight at the chosen k (codes +
+    /// double-quantized constants).
+    pub bits_per_weight: f64,
+}
+
+/// A deterministic, serializable per-tensor bit-width assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrecisionPlan {
+    /// The code-bit budget the plan was solved under (avg bits/weight).
+    pub budget_bits: f64,
+    /// Quantization block size the plan was profiled at.
+    pub block: usize,
+    /// One entry per quantized projection, in model (push) order.
+    pub entries: Vec<PlanEntry>,
+}
+
+const PLAN_MAGIC: &[u8; 4] = b"IRQP";
+const PLAN_VERSION: u32 = 1;
+const MAX_NAME_LEN: usize = 4096;
+const MAX_ENTRIES: usize = 1 << 20;
+
+impl PrecisionPlan {
+    /// Assigned bit-width for a tensor, if planned.
+    pub fn k_for(&self, name: &str) -> Option<u8> {
+        self.entries.iter().find(|e| e.name == name).map(|e| e.k)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.entries.iter().map(|e| e.n_params).sum()
+    }
+
+    /// Total packed code bits (the budgeted quantity). Exact integer
+    /// accounting.
+    pub fn total_code_bits(&self) -> usize {
+        self.entries.iter().map(|e| e.n_params * e.k as usize).sum()
+    }
+
+    /// Average packed code bits per weight — must be ≤ `budget_bits`.
+    pub fn avg_code_bits(&self) -> f64 {
+        let n = self.total_params();
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_code_bits() as f64 / n as f64
+    }
+
+    /// Total full storage bits (codes + double-quantized constants),
+    /// mirroring `QuantizedTensor::storage_bits` exactly.
+    pub fn total_storage_bits(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|e| storage_bits(e.n_params, e.k, self.block, true))
+            .sum()
+    }
+
+    /// Average full storage bits per weight.
+    pub fn avg_bits(&self) -> f64 {
+        let n = self.total_params();
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_storage_bits() as f64 / n as f64
+    }
+
+    /// Unweighted mean expected entropy across entries (the semantics
+    /// of `QuantizedModel::mean_entropy`).
+    pub fn mean_entropy(&self) -> f64 {
+        if self.entries.is_empty() {
+            return 0.0;
+        }
+        self.entries.iter().map(|e| e.entropy).sum::<f64>() / self.entries.len() as f64
+    }
+
+    /// Does the plan use more than one bit-width?
+    pub fn is_mixed(&self) -> bool {
+        self.entries
+            .windows(2)
+            .any(|w| w[0].k != w[1].k)
+    }
+
+    /// Serialize to the `IRQP` binary blob embedded in version-2
+    /// `.irqc` checkpoints. Round-trips bit-identically through
+    /// [`PrecisionPlan::from_bytes`] (f64 fields travel as raw LE bit
+    /// patterns).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(PLAN_MAGIC);
+        b.extend_from_slice(&PLAN_VERSION.to_le_bytes());
+        b.extend_from_slice(&self.budget_bits.to_le_bytes());
+        b.extend_from_slice(&(self.block as u64).to_le_bytes());
+        b.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for e in &self.entries {
+            b.extend_from_slice(&(e.name.len() as u32).to_le_bytes());
+            b.extend_from_slice(e.name.as_bytes());
+            b.push(e.k);
+            b.extend_from_slice(&(e.n_params as u64).to_le_bytes());
+            b.extend_from_slice(&e.entropy.to_le_bytes());
+            b.extend_from_slice(&e.bits_per_weight.to_le_bytes());
+        }
+        b
+    }
+
+    /// Parse a blob written by [`PrecisionPlan::to_bytes`]. Every read
+    /// is bounds-checked so corrupt checkpoints fail with an error,
+    /// never a panic.
+    pub fn from_bytes(bytes: &[u8]) -> Result<PrecisionPlan> {
+        let mut c = Cursor { b: bytes, pos: 0 };
+        if c.take(4)? != PLAN_MAGIC {
+            bail!("not a precision plan (bad magic)");
+        }
+        let version = c.u32()?;
+        if version != PLAN_VERSION {
+            bail!("unsupported precision plan version {version}");
+        }
+        let budget_bits = c.f64()?;
+        let block = c.u64()? as usize;
+        if block == 0 {
+            bail!("corrupt precision plan: block size 0");
+        }
+        let count = c.u32()? as usize;
+        if count > MAX_ENTRIES {
+            bail!("corrupt precision plan: {count} entries");
+        }
+        let mut entries = Vec::with_capacity(count.min(4096));
+        for _ in 0..count {
+            let name_len = c.u32()? as usize;
+            if name_len > MAX_NAME_LEN {
+                bail!("corrupt precision plan: name length {name_len}");
+            }
+            let name = String::from_utf8(c.take(name_len)?.to_vec())
+                .map_err(|_| anyhow!("corrupt precision plan: non-utf8 name"))?;
+            let k = c.u8()?;
+            if !(1..=8).contains(&k) {
+                bail!("corrupt precision plan: bit-width {k}");
+            }
+            let n_params = c.u64()? as usize;
+            let entropy = c.f64()?;
+            let bits_per_weight = c.f64()?;
+            entries.push(PlanEntry { name, k, n_params, entropy, bits_per_weight });
+        }
+        if c.pos != bytes.len() {
+            bail!("corrupt precision plan: {} trailing bytes", bytes.len() - c.pos);
+        }
+        Ok(PrecisionPlan { budget_bits, block, entries })
+    }
+
+    /// Human-readable allocation table (the `plan` CLI verb output).
+    pub fn render_table(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{:<16} {:>10} {:>3} {:>8} {:>9}",
+            "tensor", "params", "k", "bits/w", "ent(bits)"
+        );
+        for e in &self.entries {
+            let _ = writeln!(
+                s,
+                "{:<16} {:>10} {:>3} {:>8.3} {:>9.3}",
+                e.name, e.n_params, e.k, e.bits_per_weight, e.entropy
+            );
+        }
+        let _ = writeln!(
+            s,
+            "total: {} params | code {:.3} b/w (budget {:.3}) | storage {:.3} b/w | mean entropy {:.3} bits",
+            self.total_params(),
+            self.avg_code_bits(),
+            self.budget_bits,
+            self.avg_bits(),
+            self.mean_entropy()
+        );
+        s
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| anyhow!("corrupt precision plan: truncated"))?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let s = self.take(8)?;
+        Ok(f64::from_le_bytes(s.try_into().unwrap()))
+    }
+}
+
+/// Solver knobs. Environment counterparts: `IRQLORA_BIT_BUDGET`
+/// (average code bits/weight), `IRQLORA_BIT_FLOOR`, `IRQLORA_BIT_CEIL`.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Target average packed code bits per weight.
+    pub budget_bits: f64,
+    /// Global minimum bit-width (default 2).
+    pub floor: u8,
+    /// Global maximum bit-width (default 8).
+    pub ceil: u8,
+    /// Per-projection-kind overrides: (kind, floor, ceiling). First
+    /// match wins; kinds not listed use the global bounds.
+    pub proj_limits: Vec<(String, u8, u8)>,
+}
+
+impl PlannerConfig {
+    pub fn new(budget_bits: f64) -> PlannerConfig {
+        PlannerConfig { budget_bits, floor: 2, ceil: 8, proj_limits: Vec::new() }
+    }
+
+    /// Config from the environment with a fallback budget: the three
+    /// knobs are independent — budget from `IRQLORA_BIT_BUDGET` when
+    /// set (else `default_budget`), bounds from `IRQLORA_BIT_FLOOR` /
+    /// `IRQLORA_BIT_CEIL` whenever THEY are set. Invalid values are
+    /// ignored, mirroring `IRQLORA_THREADS`.
+    pub fn from_env_or(default_budget: f64) -> PlannerConfig {
+        let budget = std::env::var("IRQLORA_BIT_BUDGET")
+            .ok()
+            .as_deref()
+            .and_then(parse_budget)
+            .unwrap_or(default_budget);
+        let mut cfg = PlannerConfig::new(budget);
+        if let Ok(v) = std::env::var("IRQLORA_BIT_FLOOR") {
+            if let Some(f) = parse_k(&v) {
+                cfg.floor = f;
+            }
+        }
+        if let Ok(v) = std::env::var("IRQLORA_BIT_CEIL") {
+            if let Some(c) = parse_k(&v) {
+                cfg.ceil = c;
+            }
+        }
+        cfg
+    }
+
+    /// Effective (floor, ceiling) for a projection kind.
+    pub fn limits_for(&self, proj: Option<&str>) -> (u8, u8) {
+        if let Some(p) = proj {
+            for (kind, f, c) in &self.proj_limits {
+                if kind == p {
+                    return (*f, *c);
+                }
+            }
+        }
+        (self.floor, self.ceil)
+    }
+}
+
+/// Interpret an `IRQLORA_BIT_BUDGET` value: positive finite numbers are
+/// honored; garbage is ignored. Pure so it is testable without
+/// process-global env mutation.
+pub fn parse_budget(v: &str) -> Option<f64> {
+    match v.trim().parse::<f64>() {
+        Ok(b) if b.is_finite() && b > 0.0 => Some(b),
+        _ => None,
+    }
+}
+
+/// Interpret a floor/ceiling value: integers in 1..=8.
+fn parse_k(v: &str) -> Option<u8> {
+    match v.trim().parse::<u8>() {
+        Ok(k) if (1..=8).contains(&k) => Some(k),
+        _ => None,
+    }
+}
+
+/// Solve the allocation: deterministic greedy marginal-gain ascent
+/// from the per-tensor floors. Two invocations over the same profile
+/// and config produce identical plans (stable iteration order, no
+/// randomness, first-wins tie-breaking).
+pub fn plan(profile: &ModelProfile, cfg: &PlannerConfig) -> Result<PrecisionPlan> {
+    if profile.tensors.is_empty() {
+        bail!("nothing to plan: the profile has no quantized projections");
+    }
+    if !(cfg.budget_bits.is_finite() && cfg.budget_bits > 0.0) {
+        bail!("invalid bit budget {}", cfg.budget_bits);
+    }
+
+    // Per tensor: the candidate ladder within its floor/ceiling.
+    let mut ladders: Vec<Vec<(u8, f64)>> = Vec::with_capacity(profile.tensors.len());
+    for tp in &profile.tensors {
+        let (floor, ceil) = cfg.limits_for(tp.proj.as_deref());
+        if floor > ceil {
+            bail!("floor {floor} > ceiling {ceil} for '{}'", tp.name);
+        }
+        let ladder: Vec<(u8, f64)> = tp
+            .levels
+            .iter()
+            .filter(|l| l.k >= floor && l.k <= ceil)
+            .map(|l| (l.k, l.entropy))
+            .collect();
+        if ladder.is_empty() {
+            bail!(
+                "no candidate bit-width within [{floor}, {ceil}] for '{}' (profiled: {:?})",
+                tp.name,
+                tp.levels.iter().map(|l| l.k).collect::<Vec<_>>()
+            );
+        }
+        ladders.push(ladder);
+    }
+
+    let total_params: usize = profile.tensors.iter().map(|t| t.n_params).sum();
+    let budget_total = cfg.budget_bits * total_params as f64;
+    let mut idx = vec![0usize; ladders.len()];
+    let code_bits =
+        |ti: usize, li: usize| -> f64 { (profile.tensors[ti].n_params * ladders[ti][li].0 as usize) as f64 };
+    let mut current: f64 = (0..ladders.len()).map(|ti| code_bits(ti, 0)).sum();
+    if current > budget_total + 1e-6 {
+        bail!(
+            "budget {:.3} b/w is below the floor allocation ({:.3} b/w): raise \
+             IRQLORA_BIT_BUDGET or lower the floors",
+            cfg.budget_bits,
+            current / total_params as f64
+        );
+    }
+
+    loop {
+        // best upgrade by Δinformation/Δbits, considering EVERY higher
+        // rung of each tensor's ladder (not just the adjacent one) so
+        // a flat intermediate step — entropy(k+1) == entropy(k) on
+        // near-discrete data — cannot wall off a genuinely profitable
+        // jump further up
+        let mut best: Option<(f64, usize, usize, f64)> = None; // (ratio, tensor, rung, dbits)
+        for ti in 0..ladders.len() {
+            let li = idx[ti];
+            for li2 in li + 1..ladders[ti].len() {
+                let dbits = code_bits(ti, li2) - code_bits(ti, li);
+                let dh = (ladders[ti][li2].1 - ladders[ti][li].1)
+                    * profile.tensors[ti].n_params as f64;
+                if dh <= 1e-9 {
+                    continue; // no information gained — never spend bits on it
+                }
+                if current + dbits > budget_total + 1e-6 {
+                    continue;
+                }
+                let ratio = dh / dbits;
+                if best.map_or(true, |(br, _, _, _)| ratio > br) {
+                    best = Some((ratio, ti, li2, dbits));
+                }
+            }
+        }
+        match best {
+            Some((_, ti, li2, dbits)) => {
+                idx[ti] = li2;
+                current += dbits;
+            }
+            None => break,
+        }
+    }
+
+    let entries = profile
+        .tensors
+        .iter()
+        .zip(ladders.iter().zip(&idx))
+        .map(|(tp, (ladder, &li))| {
+            let (k, entropy) = ladder[li];
+            PlanEntry {
+                name: tp.name.clone(),
+                k,
+                n_params: tp.n_params,
+                entropy,
+                bits_per_weight: storage_bits(tp.n_params, k, profile.block, true) as f64
+                    / tp.n_params.max(1) as f64,
+            }
+        })
+        .collect();
+    Ok(PrecisionPlan { budget_bits: cfg.budget_bits, block: profile.block, entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::profile::{profile_model, synthetic_model, ProfileConfig};
+
+    fn tiny_profile() -> ModelProfile {
+        profile_model(&synthetic_model(1, 32, 5), &ProfileConfig::default())
+    }
+
+    #[test]
+    fn env_value_parsing() {
+        assert_eq!(parse_budget("3.2"), Some(3.2));
+        assert_eq!(parse_budget(" 4 "), Some(4.0));
+        assert_eq!(parse_budget("0"), None);
+        assert_eq!(parse_budget("-1"), None);
+        assert_eq!(parse_budget("inf"), None);
+        assert_eq!(parse_budget("nope"), None);
+        assert_eq!(parse_k("3"), Some(3));
+        assert_eq!(parse_k("9"), None);
+        assert_eq!(parse_k("0"), None);
+        assert_eq!(parse_k("x"), None);
+    }
+
+    #[test]
+    fn plan_respects_budget_and_is_mixed() {
+        let prof = tiny_profile();
+        let p = plan(&prof, &PlannerConfig::new(3.2)).unwrap();
+        assert!(p.avg_code_bits() <= 3.2 + 1e-9, "{}", p.avg_code_bits());
+        assert!(p.is_mixed(), "expected a mixed-k plan:\n{}", p.render_table());
+        // low-information wk/wv stay at the floor; normal tensors rise
+        for e in &p.entries {
+            if e.name.ends_with(".wk") || e.name.ends_with(".wv") {
+                assert_eq!(e.k, 2, "{}", e.name);
+            } else {
+                assert!(e.k >= 3, "{} got k={}", e.name, e.k);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_beats_uniform_3bit_at_same_or_less_storage() {
+        let prof = tiny_profile();
+        let p = plan(&prof, &PlannerConfig::new(3.0)).unwrap();
+        assert!(p.avg_code_bits() <= 3.0 + 1e-9);
+        assert!(
+            p.mean_entropy() >= prof.mean_entropy_at(3) - 1e-9,
+            "planned {:.4} < uniform-3 {:.4}",
+            p.mean_entropy(),
+            prof.mean_entropy_at(3)
+        );
+    }
+
+    #[test]
+    fn planning_is_deterministic() {
+        let prof = tiny_profile();
+        let cfg = PlannerConfig::new(3.2);
+        let a = plan(&prof, &cfg).unwrap();
+        let b = plan(&prof, &cfg).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn floors_and_ceilings_respected() {
+        let prof = tiny_profile();
+        let mut cfg = PlannerConfig::new(3.2);
+        cfg.proj_limits.push(("wk".to_string(), 3, 4));
+        cfg.proj_limits.push(("wq".to_string(), 2, 2));
+        let p = plan(&prof, &cfg).unwrap();
+        for e in &p.entries {
+            if e.name.ends_with(".wk") {
+                assert!((3..=4).contains(&e.k), "{} k={}", e.name, e.k);
+            }
+            if e.name.ends_with(".wq") {
+                assert_eq!(e.k, 2, "{}", e.name);
+            }
+        }
+    }
+
+    #[test]
+    fn flat_intermediate_rung_does_not_block_higher_k() {
+        use crate::precision::profile::{KProfile, TensorProfile};
+        let mk = |k: u8, h: f64| KProfile {
+            k,
+            entropy: h,
+            entropy_vanilla: h,
+            bits_per_weight: k as f64,
+        };
+        let prof = ModelProfile {
+            block: 64,
+            tensors: vec![TensorProfile {
+                name: "l0.wq".into(),
+                proj: Some("wq".into()),
+                n_params: 640,
+                // flat 2 -> 3 (discrete-data bin collision), rising at 4
+                levels: vec![mk(2, 2.0), mk(3, 2.0), mk(4, 3.5), mk(8, 3.6)],
+            }],
+        };
+        let p = plan(&prof, &PlannerConfig::new(4.0)).unwrap();
+        assert_eq!(p.entries[0].k, 4, "{}", p.render_table());
+    }
+
+    #[test]
+    fn budget_below_floor_errors() {
+        let prof = tiny_profile();
+        let err = plan(&prof, &PlannerConfig::new(1.5)).unwrap_err().to_string();
+        assert!(err.contains("below the floor"), "{err}");
+    }
+
+    #[test]
+    fn conflicting_limits_error() {
+        let prof = tiny_profile();
+        let mut cfg = PlannerConfig::new(3.2);
+        cfg.proj_limits.push(("wq".to_string(), 4, 3));
+        assert!(plan(&prof, &cfg).is_err());
+    }
+
+    #[test]
+    fn serialization_roundtrip_bit_identical() {
+        let prof = tiny_profile();
+        let p = plan(&prof, &PlannerConfig::new(3.2)).unwrap();
+        let bytes = p.to_bytes();
+        let back = PrecisionPlan::from_bytes(&bytes).unwrap();
+        assert_eq!(back.budget_bits.to_bits(), p.budget_bits.to_bits());
+        assert_eq!(back.block, p.block);
+        assert_eq!(back.entries.len(), p.entries.len());
+        for (a, b) in p.entries.iter().zip(&back.entries) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.n_params, b.n_params);
+            assert_eq!(a.entropy.to_bits(), b.entropy.to_bits());
+            assert_eq!(a.bits_per_weight.to_bits(), b.bits_per_weight.to_bits());
+        }
+    }
+
+    #[test]
+    fn corrupt_plan_bytes_rejected() {
+        assert!(PrecisionPlan::from_bytes(b"NOPE").is_err());
+        assert!(PrecisionPlan::from_bytes(b"").is_err());
+        let prof = tiny_profile();
+        let p = plan(&prof, &PlannerConfig::new(3.2)).unwrap();
+        let bytes = p.to_bytes();
+        // truncation at every prefix must error, never panic
+        for cut in [4usize, 8, 16, 24, bytes.len() - 1] {
+            assert!(PrecisionPlan::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // trailing garbage rejected
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(PrecisionPlan::from_bytes(&long).is_err());
+    }
+
+    #[test]
+    fn render_table_mentions_budget_and_tensors() {
+        let prof = tiny_profile();
+        let p = plan(&prof, &PlannerConfig::new(3.2)).unwrap();
+        let t = p.render_table();
+        assert!(t.contains("budget 3.200"), "{t}");
+        assert!(t.contains("l0.wq"), "{t}");
+    }
+}

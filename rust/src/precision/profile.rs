@@ -1,0 +1,307 @@
+//! Per-tensor information profiles — the measurement half of the
+//! mixed-precision planner.
+//!
+//! For every quantized projection tensor, a [`TensorProfile`] records
+//! the ICQ code entropy (paper Eq. 7, the "retained information"
+//! metric) the tensor would achieve at each candidate bit-width,
+//! alongside its size and projection kind. The profile is what the
+//! greedy solver in [`super::planner`] trades against the storage
+//! budget: information-dense tensors (entropy keeps growing with k)
+//! earn extra bits, information-sparse ones (entropy saturates early)
+//! release them.
+//!
+//! The ICQ τ search inside [`icq::search_all`] already fans out across
+//! blocks via [`crate::util::threads`]; the tensor × k outer loop here
+//! stays serial on purpose so the two levels never oversubscribe the
+//! worker pool.
+
+use crate::model::weights::{is_quantized_proj, proj_kind, NamedTensors, PROJ_KINDS};
+use crate::quant::double_quant;
+use crate::quant::{blockwise, icq};
+use crate::util::{Rng, Tensor};
+
+/// Candidate bit-widths the planner chooses from (the paper's 2/3/4-bit
+/// operating points plus an 8-bit headroom tier).
+pub const CANDIDATE_KS: [u8; 4] = [2, 3, 4, 8];
+
+/// Information/storage numbers for one tensor at one bit-width.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KProfile {
+    pub k: u8,
+    /// Mean per-block ICQ code entropy (bits) at this k.
+    pub entropy: f64,
+    /// Mean per-block entropy of the uncalibrated (τ = 0) quantization.
+    pub entropy_vanilla: f64,
+    /// Full effective storage bits/weight at this k: packed codes plus
+    /// the double-quantized s/τ constants. The constants term is
+    /// k-independent (≈0.25 b/w at block 64), which is why the planner
+    /// budgets *code* bits only — see [`super::planner`].
+    pub bits_per_weight: f64,
+}
+
+/// Information profile of one quantized projection tensor.
+#[derive(Clone, Debug)]
+pub struct TensorProfile {
+    pub name: String,
+    /// Projection kind ("wq".."w2"), used for per-projection
+    /// floor/ceiling constraints.
+    pub proj: Option<String>,
+    pub n_params: usize,
+    /// One entry per candidate k, ascending.
+    pub levels: Vec<KProfile>,
+}
+
+impl TensorProfile {
+    /// The profile entry for bit-width `k`, if it was a candidate.
+    pub fn level(&self, k: u8) -> Option<&KProfile> {
+        self.levels.iter().find(|l| l.k == k)
+    }
+}
+
+/// Profiles of every quantized projection of a model.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub tensors: Vec<TensorProfile>,
+    /// Quantization block size the entropies were measured at.
+    pub block: usize,
+}
+
+impl ModelProfile {
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.n_params).sum()
+    }
+
+    /// Unweighted mean entropy if every tensor used bit-width `k` —
+    /// the uniform-k baseline the planner must beat (matches the
+    /// semantics of `QuantizedModel::mean_entropy`). Averages over the
+    /// tensors that actually profiled `k`; NaN when none did (so a
+    /// baseline comparison against an unprofiled k fails loudly
+    /// instead of passing against a silent 0.0).
+    pub fn mean_entropy_at(&self, k: u8) -> f64 {
+        let hs: Vec<f64> = self
+            .tensors
+            .iter()
+            .filter_map(|t| t.level(k).map(|l| l.entropy))
+            .collect();
+        if hs.is_empty() {
+            return f64::NAN;
+        }
+        hs.iter().sum::<f64>() / hs.len() as f64
+    }
+}
+
+/// Profiling knobs.
+#[derive(Clone, Debug)]
+pub struct ProfileConfig {
+    /// ICQ search hyper-parameters (paper §3.2.2 defaults).
+    pub icq: icq::IcqConfig,
+    /// Quantization block size (paper default 64).
+    pub block: usize,
+    /// Candidate bit-widths, ascending (deduped/sorted defensively).
+    pub candidates: Vec<u8>,
+    /// Cap on profiled blocks per tensor (a deterministic prefix
+    /// sample keeps profiling cheap on large tensors); `None` profiles
+    /// every block.
+    pub max_blocks: Option<usize>,
+}
+
+impl Default for ProfileConfig {
+    fn default() -> Self {
+        ProfileConfig {
+            icq: icq::IcqConfig::default(),
+            block: blockwise::DEFAULT_BLOCK,
+            candidates: CANDIDATE_KS.to_vec(),
+            max_blocks: Some(512),
+        }
+    }
+}
+
+/// Exact full storage bits of an ICQ-quantized tensor of `n` elements
+/// at bit-width `k`: packed codes + double-quantized per-block s (and
+/// τ, when `icq`). Mirrors `QuantizedTensor::storage_bits` term for
+/// term so plans account storage identically to the artifacts they
+/// describe.
+pub fn storage_bits(n: usize, k: u8, block: usize, icq: bool) -> usize {
+    let n_blocks = n.div_ceil(block);
+    let n_groups = n_blocks.div_ceil(double_quant::DEFAULT_GROUP);
+    let consts = n_blocks * 8 + n_groups * 16;
+    n * k as usize + if icq { 2 * consts } else { consts }
+}
+
+/// Profile one tensor: ICQ entropy at every candidate k over a
+/// deterministic prefix sample of its blocks.
+pub fn profile_tensor(name: &str, w: &[f32], cfg: &ProfileConfig) -> TensorProfile {
+    let mut candidates = cfg.candidates.clone();
+    candidates.sort_unstable();
+    candidates.dedup();
+    let sample = match cfg.max_blocks {
+        Some(mb) => &w[..w.len().min(mb.max(1) * cfg.block)],
+        None => w,
+    };
+    let levels = candidates
+        .iter()
+        .map(|&k| {
+            let searches = icq::search_all(sample, k, cfg.block, &cfg.icq);
+            let nb = searches.len().max(1) as f64;
+            let entropy = searches.iter().map(|s| s.entropy).sum::<f64>() / nb;
+            let entropy_vanilla =
+                searches.iter().map(|s| s.entropy_vanilla).sum::<f64>() / nb;
+            let bits_per_weight = if w.is_empty() {
+                k as f64
+            } else {
+                storage_bits(w.len(), k, cfg.block, true) as f64 / w.len() as f64
+            };
+            KProfile { k, entropy, entropy_vanilla, bits_per_weight }
+        })
+        .collect();
+    TensorProfile {
+        name: name.to_string(),
+        proj: proj_kind(name).map(|p| p.to_string()),
+        n_params: w.len(),
+        levels,
+    }
+}
+
+/// Profile every quantized projection tensor of `weights` (the same
+/// selection rule as `coordinator::quantize::quantize_model`).
+pub fn profile_model(weights: &NamedTensors, cfg: &ProfileConfig) -> ModelProfile {
+    let tensors = weights
+        .iter()
+        .filter(|(n, _)| is_quantized_proj(n))
+        .map(|(name, t)| profile_tensor(name, t.data(), cfg))
+        .collect();
+    ModelProfile { tensors, block: cfg.block }
+}
+
+/// Deterministic synthetic base model with heterogeneous information
+/// density — the fixture behind the planner smoke (`irqlora plan
+/// --synthetic --check`), the acceptance tests and the
+/// `plan_throughput` bench. `wk`/`wv` carry ~2 bits of information per
+/// weight (four discrete values, so code entropy saturates by k = 2
+/// and extra bits buy nothing); every other projection is normal
+/// noise whose entropy keeps growing with k. A budget planner
+/// therefore has a real allocation decision to make.
+pub fn synthetic_model(n_layers: usize, h: usize, seed: u64) -> NamedTensors {
+    // spread so the four values land in distinct NF2 bins at τ = 0
+    const LEVELS: [f32; 4] = [-1.0, -0.3, 0.35, 1.0];
+    let mut rng = Rng::new(seed ^ 0x9c15);
+    let mut nt = NamedTensors::new();
+    nt.push("embed", Tensor::new(&[32, h], rng.normal_vec(32 * h, 0.0, 0.02)));
+    for l in 0..n_layers {
+        nt.push(format!("l{l}.attn_norm"), Tensor::full(&[h], 1.0));
+        for kind in PROJ_KINDS {
+            let (r, c) = match kind {
+                "w1" | "w3" => (h, 2 * h),
+                "w2" => (2 * h, h),
+                _ => (h, h),
+            };
+            let n = r * c;
+            let data: Vec<f32> = match kind {
+                "wk" | "wv" => (0..n).map(|_| LEVELS[rng.below(4)] * 0.02).collect(),
+                _ => rng.normal_vec(n, 0.01, 0.02),
+            };
+            nt.push(format!("l{l}.{kind}"), Tensor::new(&[r, c], data));
+        }
+    }
+    nt.push("lm_head", Tensor::new(&[h, 32], rng.normal_vec(h * 32, 0.0, 0.02)));
+    nt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storage_bits_matches_quantized_tensor() {
+        let mut rng = Rng::new(21);
+        for (n, k) in [(64 * 256, 4u8), (1000, 2), (64 * 300 + 17, 3), (64, 8)] {
+            let t = Tensor::new(&[n], rng.normal_vec(n, 0.0, 0.05));
+            let qt = crate::quant::QuantizedTensor::quantize(
+                &t,
+                k,
+                64,
+                Some(&icq::IcqConfig::default()),
+            );
+            assert_eq!(storage_bits(n, k, 64, true), qt.storage_bits(), "n={n} k={k}");
+            let q0 = crate::quant::QuantizedTensor::quantize(&t, k, 64, None);
+            assert_eq!(storage_bits(n, k, 64, false), q0.storage_bits(), "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn profile_covers_candidates_ascending() {
+        let mut rng = Rng::new(22);
+        let w = rng.normal_vec(64 * 8, 0.01, 0.02);
+        let cfg = ProfileConfig::default();
+        let tp = profile_tensor("l0.wq", &w, &cfg);
+        assert_eq!(tp.proj.as_deref(), Some("wq"));
+        assert_eq!(tp.n_params, w.len());
+        let ks: Vec<u8> = tp.levels.iter().map(|l| l.k).collect();
+        assert_eq!(ks, CANDIDATE_KS.to_vec());
+        // entropy is (weakly) monotone in k for normal data
+        for pair in tp.levels.windows(2) {
+            assert!(
+                pair[1].entropy >= pair[0].entropy - 1e-9,
+                "entropy not monotone: {:?}",
+                tp.levels
+            );
+        }
+        // the constants overhead is k-independent: bits/weight differ
+        // by exactly the code-bit delta
+        for pair in tp.levels.windows(2) {
+            let want = (pair[1].k - pair[0].k) as f64;
+            assert!(
+                (pair[1].bits_per_weight - pair[0].bits_per_weight - want).abs() < 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn profile_model_selects_projections_only() {
+        let m = synthetic_model(1, 32, 7);
+        let prof = profile_model(&m, &ProfileConfig::default());
+        assert_eq!(prof.tensors.len(), PROJ_KINDS.len());
+        assert!(prof.tensors.iter().all(|t| t.proj.is_some()));
+        assert!(prof.total_params() > 0);
+    }
+
+    #[test]
+    fn synthetic_model_is_heterogeneous() {
+        let m = synthetic_model(1, 32, 3);
+        let prof = profile_model(&m, &ProfileConfig::default());
+        let wv = prof.tensors.iter().find(|t| t.proj.as_deref() == Some("wv")).unwrap();
+        let wq = prof.tensors.iter().find(|t| t.proj.as_deref() == Some("wq")).unwrap();
+        // discrete wv: four codes regardless of k — upgrading 2 -> 8
+        // buys (almost) nothing
+        let wv_gain = wv.level(8).unwrap().entropy - wv.level(2).unwrap().entropy;
+        assert!(wv_gain < 0.05, "wv gain {wv_gain}");
+        assert!(wv.level(2).unwrap().entropy > 1.8);
+        // normal wq keeps gaining information with k
+        let wq_gain = wq.level(4).unwrap().entropy - wq.level(2).unwrap().entropy;
+        assert!(wq_gain > 1.0, "wq gain {wq_gain}");
+    }
+
+    #[test]
+    fn prefix_sample_caps_cost_deterministically() {
+        let mut rng = Rng::new(23);
+        let w = rng.normal_vec(64 * 64, 0.0, 0.02);
+        let full = ProfileConfig { max_blocks: None, ..ProfileConfig::default() };
+        let capped = ProfileConfig { max_blocks: Some(8), ..ProfileConfig::default() };
+        let a = profile_tensor("l0.wq", &w, &capped);
+        let b = profile_tensor("l0.wq", &w, &capped);
+        // deterministic, and a genuine estimate of the full profile
+        for (x, y) in a.levels.iter().zip(&b.levels) {
+            assert_eq!(x.entropy.to_bits(), y.entropy.to_bits());
+        }
+        let f = profile_tensor("l0.wq", &w, &full);
+        for (x, y) in a.levels.iter().zip(&f.levels) {
+            assert!((x.entropy - y.entropy).abs() < 0.3, "{} vs {}", x.entropy, y.entropy);
+        }
+        // sizes/bits always reflect the FULL tensor, not the sample
+        assert_eq!(a.n_params, w.len());
+        assert_eq!(
+            a.levels[0].bits_per_weight.to_bits(),
+            f.levels[0].bits_per_weight.to_bits()
+        );
+    }
+}

@@ -4,17 +4,37 @@
 //! quantized block; this module provides the histogram/entropy helpers
 //! plus model-level aggregates used for Figure 4/5 and Table 5.
 
+use anyhow::{bail, Result};
+
 use crate::util::stats::entropy_bits;
 
 use super::blockwise::QuantizedBlocks;
 
-/// Histogram of k-bit codes.
+/// Histogram of k-bit codes. Out-of-range codes (corrupt storage, a
+/// k/codes mismatch) saturate into the top bin instead of indexing
+/// past the histogram — the entropy they contribute is then slightly
+/// off, but callers deep in the serving/report path never panic. Use
+/// [`try_code_histogram`] where a corrupt input should surface as an
+/// error instead.
 pub fn code_histogram(codes: &[u8], k: u8) -> Vec<u32> {
+    let top = (1usize << k) - 1;
     let mut counts = vec![0u32; 1 << k];
     for &c in codes {
-        counts[c as usize] += 1;
+        counts[(c as usize).min(top)] += 1;
     }
     counts
+}
+
+/// Strict [`code_histogram`]: errors on the first code ≥ 2^k.
+pub fn try_code_histogram(codes: &[u8], k: u8) -> Result<Vec<u32>> {
+    let mut counts = vec![0u32; 1 << k];
+    for (i, &c) in codes.iter().enumerate() {
+        match counts.get_mut(c as usize) {
+            Some(slot) => *slot += 1,
+            None => bail!("code {c} at index {i} out of range for k={k}"),
+        }
+    }
+    Ok(counts)
 }
 
 /// Shannon entropy (bits) of a slice of k-bit codes.
@@ -59,6 +79,31 @@ mod tests {
     fn histogram_counts() {
         let h = code_histogram(&[0, 0, 1, 3, 3, 3], 2);
         assert_eq!(h, vec![2, 1, 0, 3]);
+    }
+
+    #[test]
+    fn out_of_range_codes_saturate_instead_of_panicking() {
+        // regression: code 9 at k=2 used to index past the 4-slot
+        // histogram and panic; it must now count into the top bin
+        let h = code_histogram(&[0, 1, 9, 255], 2);
+        assert_eq!(h, vec![1, 1, 0, 2]);
+        assert_eq!(h.iter().sum::<u32>(), 4); // nothing dropped
+        // entropy over such codes is finite, not a crash
+        assert!(code_entropy(&[0, 9, 9, 255], 2).is_finite());
+        // k = 8 covers the full u8 range: nothing can saturate
+        let h8 = code_histogram(&[255], 8);
+        assert_eq!(h8[255], 1);
+    }
+
+    #[test]
+    fn strict_histogram_rejects_out_of_range() {
+        assert_eq!(
+            try_code_histogram(&[0, 0, 1, 3], 2).unwrap(),
+            vec![2, 1, 0, 1]
+        );
+        let err = try_code_histogram(&[0, 4], 2).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(try_code_histogram(&[255], 8).is_ok());
     }
 
     #[test]

@@ -68,12 +68,19 @@ pub enum Method {
     IntIcq { k: u8 },
     /// GPTQ on the integer grid ("QLoRA w/ GPTQ" rows).
     Gptq { k: u8 },
+    /// Mixed per-tensor bit-widths from a `precision::PrecisionPlan`
+    /// (ICQ NF-k with plan-assigned k; built by
+    /// `coordinator::quantize::quantize_model_planned`).
+    Planned,
 }
 
 impl Method {
+    /// Uniform bit-width of the method; 0 for [`Method::Planned`],
+    /// whose per-tensor widths live in the model's plan.
     pub fn bits(&self) -> u8 {
         match *self {
             Method::Fp16 => 16,
+            Method::Planned => 0,
             Method::Nf { k }
             | Method::NfIcq { k }
             | Method::Int { k }
@@ -83,7 +90,10 @@ impl Method {
     }
 
     pub fn uses_icq(&self) -> bool {
-        matches!(self, Method::NfIcq { .. } | Method::IntIcq { .. })
+        matches!(
+            self,
+            Method::NfIcq { .. } | Method::IntIcq { .. } | Method::Planned
+        )
     }
 
     pub fn paper_name(&self) -> String {
@@ -94,6 +104,7 @@ impl Method {
             Method::Int { k } => format!("Integer g64 INT{k}"),
             Method::IntIcq { k } => format!("Integer+ICQ INT{k}"),
             Method::Gptq { k } => format!("GPTQ INT{k}"),
+            Method::Planned => "ICQ mixed-k (planned)".into(),
         }
     }
 }
@@ -293,6 +304,9 @@ mod tests {
         assert!(Method::NfIcq { k: 2 }.uses_icq());
         assert!(!Method::Gptq { k: 4 }.uses_icq());
         assert!(Method::IntIcq { k: 4 }.paper_name().contains("ICQ"));
+        assert_eq!(Method::Planned.bits(), 0); // per-tensor: see the plan
+        assert!(Method::Planned.uses_icq());
+        assert!(Method::Planned.paper_name().contains("mixed"));
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! Integration: the information-budgeted mixed-precision planner.
+//!
+//! Covers the subsystem's acceptance contract end to end, fully
+//! offline: (1) planning a synthetic model at an average budget of
+//! 3.2 code bits/weight yields a mixed-k plan that stays within
+//! budget while matching or beating the uniform 3-bit ICQ baseline's
+//! mean code entropy; (2) plans round-trip bit-identically through
+//! `.irqc` serialize / peek / load; (3) a mixed-k `QuantizedModel`
+//! dequantizes bit-identically to per-tensor uniform-k oracles; and
+//! (4) version-1 (pre-planner) uniform-k checkpoints still load and
+//! serve unchanged.
+
+use irqlora::coordinator::{quantize_model, quantize_model_planned, serve_registry};
+use irqlora::model::checkpoint;
+use irqlora::model::weights::NamedTensors;
+use irqlora::precision::{
+    plan, plan_model, profile_model, synthetic_model, PlannerConfig, ProfileConfig,
+};
+use irqlora::quant::icq::IcqConfig;
+use irqlora::quant::{Method, QuantizedTensor};
+use irqlora::util::{Rng, Tensor};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("irqc_plan_test_{name}_{}", std::process::id()))
+}
+
+/// Exact (all-blocks) profile so entropy numbers match the quantized
+/// artifacts bit for bit.
+fn full_profile_cfg() -> ProfileConfig {
+    ProfileConfig { max_blocks: None, ..ProfileConfig::default() }
+}
+
+#[test]
+fn budget_3_2_yields_mixed_plan_within_budget_beating_uniform3() {
+    let base = synthetic_model(2, 64, 42);
+    let plan = plan_model(&base, &full_profile_cfg(), &PlannerConfig::new(3.2)).unwrap();
+
+    // a genuinely mixed assignment
+    let mut ks: Vec<u8> = plan.entries.iter().map(|e| e.k).collect();
+    ks.sort_unstable();
+    ks.dedup();
+    assert!(ks.len() >= 2, "plan is uniform: {}", plan.render_table());
+    assert!(plan.is_mixed());
+
+    // total storage within budget — checked on the plan's exact
+    // integer accounting AND on the actually-quantized artifacts
+    assert!(
+        plan.avg_code_bits() <= 3.2 + 1e-9,
+        "plan over budget: {}",
+        plan.avg_code_bits()
+    );
+    let qm = quantize_model_planned(&base, &plan, &IcqConfig::default()).unwrap();
+    let code_bits: usize = qm.storage.iter().map(|(_, qt)| qt.len * qt.k as usize).sum();
+    let params: usize = qm.storage.iter().map(|(_, qt)| qt.len).sum();
+    assert_eq!(code_bits, plan.total_code_bits());
+    assert_eq!(params, plan.total_params());
+    assert!(code_bits as f64 <= 3.2 * params as f64 + 1e-6);
+
+    // model mean code entropy >= the uniform 3-bit ICQ baseline's
+    let uniform3 = quantize_model(&base, Method::NfIcq { k: 3 }, 0).unwrap();
+    assert!(
+        qm.mean_entropy() >= uniform3.mean_entropy() - 1e-9,
+        "planned {:.4} < uniform-3 {:.4}\n{}",
+        qm.mean_entropy(),
+        uniform3.mean_entropy(),
+        plan.render_table()
+    );
+}
+
+#[test]
+fn mixed_k_model_dequantizes_bit_identically_to_uniform_oracles() {
+    let base = synthetic_model(1, 64, 7);
+    let icq_cfg = IcqConfig::default();
+    let plan = plan_model(&base, &full_profile_cfg(), &PlannerConfig::new(3.2)).unwrap();
+    let qm = quantize_model_planned(&base, &plan, &icq_cfg).unwrap();
+    assert!(plan.is_mixed());
+
+    for (name, qt) in &qm.storage {
+        let k = plan.k_for(name).unwrap();
+        assert_eq!(qt.k, k, "{name}");
+        // oracle: quantize THIS tensor alone, uniformly, at the same k
+        let oracle = QuantizedTensor::quantize(base.get(name).unwrap(), k, 64, Some(&icq_cfg));
+        assert_eq!(qt.packed, oracle.packed, "{name}: packed codes differ");
+        let want = oracle.dequantize();
+        let got = qm.dequantized.get(name).unwrap();
+        assert_eq!(got.shape(), want.shape(), "{name}");
+        for (i, (a, b)) in got.data().iter().zip(want.data()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name}[{i}]: {a} vs {b}");
+        }
+    }
+    // entropy bookkeeping matches the plan's prediction exactly (the
+    // profile measured every block)
+    for e in &plan.entries {
+        let r = qm.reports.iter().find(|r| r.name == e.name).unwrap();
+        assert!(
+            (r.entropy - e.entropy).abs() < 1e-9,
+            "{}: report {} vs plan {}",
+            e.name,
+            r.entropy,
+            e.entropy
+        );
+    }
+}
+
+#[test]
+fn plan_roundtrips_bit_identically_through_irqc() {
+    let base = synthetic_model(1, 32, 5);
+    // several budgets to vary the entry set
+    for (i, budget) in [2.5f64, 3.0, 3.2, 4.5].iter().enumerate() {
+        let profile = profile_model(&base, &ProfileConfig::default());
+        let p = plan(&profile, &PlannerConfig::new(*budget)).unwrap();
+        let mut nt = NamedTensors::new();
+        nt.push("l0.wq", base.get("l0.wq").unwrap().clone());
+        let path = tmp(&format!("roundtrip_{i}"));
+        checkpoint::save_with_plan(&nt, &p, &path).unwrap();
+
+        // peek (header-only) and load must both reproduce the plan
+        // bit for bit
+        for got in [
+            checkpoint::peek_plan(&path).unwrap().unwrap(),
+            checkpoint::load_with_plan(&path).unwrap().1.unwrap(),
+        ] {
+            assert_eq!(got.budget_bits.to_bits(), p.budget_bits.to_bits());
+            assert_eq!(got.block, p.block);
+            assert_eq!(got.entries.len(), p.entries.len());
+            for (a, b) in p.entries.iter().zip(&got.entries) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.k, b.k);
+                assert_eq!(a.n_params, b.n_params);
+                assert_eq!(a.entropy.to_bits(), b.entropy.to_bits());
+                assert_eq!(a.bits_per_weight.to_bits(), b.bits_per_weight.to_bits());
+            }
+        }
+        // the tensor payload survives alongside the plan
+        let (back, _) = checkpoint::load_with_plan(&path).unwrap();
+        assert_eq!(back.get("l0.wq").unwrap(), nt.get("l0.wq").unwrap());
+        std::fs::remove_file(path).ok();
+    }
+}
+
+#[test]
+fn pre_planner_uniform_v1_checkpoints_load_and_serve_unchanged() {
+    // (a) plain save() still writes version-1 bytes — the exact
+    // format every pre-planner checkpoint on disk uses
+    let mut rng = Rng::new(3);
+    let base = synthetic_model(1, 32, 9);
+    let p = tmp("v1_base");
+    checkpoint::save(&base, &p).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    assert_eq!(&bytes[..4], b"IRQC");
+    assert_eq!(u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]), 1);
+
+    // (b) all readers handle it; no phantom plan appears
+    let loaded = checkpoint::load(&p).unwrap();
+    assert_eq!(loaded.names(), base.names());
+    for (name, t) in base.iter() {
+        assert_eq!(loaded.get(name).unwrap(), t, "{name}");
+    }
+    let (_, plan) = checkpoint::load_with_plan(&p).unwrap();
+    assert!(plan.is_none());
+    assert!(checkpoint::peek_plan(&p).unwrap().is_none());
+    assert!(!checkpoint::peek_entries(&p).unwrap().is_empty());
+    std::fs::remove_file(&p).ok();
+
+    // (c) the uniform-k pipeline over a v1-loaded base serves through
+    // the registry exactly as before, including a v1 adapter file
+    let qm = quantize_model(&loaded, Method::NfIcq { k: 4 }, 0).unwrap();
+    let reg = serve_registry(&qm, (1.0, 1.0));
+    let mut adapter = NamedTensors::new();
+    adapter.push("l0.wq.lora_a", Tensor::new(&[64, 4], rng.normal_vec(256, 0.0, 0.3)));
+    adapter.push("l0.wq.lora_b", Tensor::new(&[4, 64], rng.normal_vec(256, 0.0, 0.3)));
+    adapter.push("betas", Tensor::new(&[1, 7, 2], rng.normal_vec(14, 0.0, 0.5)));
+    let ap = tmp("v1_adapter");
+    checkpoint::save(&adapter, &ap).unwrap();
+    reg.register_file("tenant", &ap).unwrap();
+    let merged = reg.merged("tenant").unwrap();
+    assert!(merged.get("betas").unwrap().data().iter().all(|&x| x == 0.0));
+    std::fs::remove_file(&ap).ok();
+}
+
+#[test]
+fn corrupt_plan_blob_in_checkpoint_is_an_error_not_a_panic() {
+    let base = synthetic_model(1, 32, 21);
+    let plan = plan_model(&base, &ProfileConfig::default(), &PlannerConfig::new(3.2)).unwrap();
+    let mut nt = NamedTensors::new();
+    nt.push("w", Tensor::full(&[8], 1.0));
+    let p = tmp("corrupt_plan");
+    checkpoint::save_with_plan(&nt, &plan, &p).unwrap();
+    let good = std::fs::read(&p).unwrap();
+    // flip one byte at every offset inside the plan section
+    let plan_len =
+        u32::from_le_bytes([good[12], good[13], good[14], good[15]]) as usize;
+    for off in (16..16 + plan_len).step_by(7) {
+        let mut bad = good.clone();
+        bad[off] ^= 0x5a;
+        std::fs::write(&p, &bad).unwrap();
+        // any outcome but a panic is fine for peek; the checksummed
+        // full load must reject the file whenever the plan parses at
+        // all (fnv covers the plan bytes)
+        let _ = checkpoint::peek_plan(&p);
+        assert!(checkpoint::load_with_plan(&p).is_err(), "offset {off} accepted");
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn planned_avg_bits_accounts_constants_on_top_of_code_bits() {
+    // budget governs code bits; full storage = code + ~0.25 b/w of
+    // double-quantized s/τ constants at block 64
+    let base = synthetic_model(1, 32, 33);
+    let plan = plan_model(&base, &full_profile_cfg(), &PlannerConfig::new(3.0)).unwrap();
+    let overhead = plan.avg_bits() - plan.avg_code_bits();
+    assert!(
+        (0.2..0.3).contains(&overhead),
+        "constants overhead {overhead} outside the expected band"
+    );
+    let qm = quantize_model_planned(&base, &plan, &IcqConfig::default()).unwrap();
+    let storage_bits: usize = qm.storage.iter().map(|(_, qt)| qt.storage_bits()).sum();
+    assert_eq!(storage_bits, plan.total_storage_bits());
+}

@@ -31,6 +31,27 @@ export IRQLORA_THREADS="${IRQLORA_THREADS:-4}"
 echo "== tier-1: cargo build --release && cargo test -q =="
 (cd rust && cargo build --release && cargo test -q)
 
+# Formatting gate. Advisory by default (the tree predates the check
+# and this container has no rustfmt to normalize it with); set
+# VERIFY_FMT_STRICT=1 to hard-fail once `cargo fmt` has run.
+if (cd rust && cargo fmt --version >/dev/null 2>&1); then
+  echo "== cargo fmt --check =="
+  if ! (cd rust && cargo fmt --check); then
+    echo "verify.sh: WARNING: cargo fmt --check found unformatted code" >&2
+    if [[ "${VERIFY_FMT_STRICT:-0}" != 0 ]]; then
+      exit 6
+    fi
+  fi
+else
+  echo "verify.sh: rustfmt unavailable — skipping cargo fmt --check" >&2
+fi
+
+echo "== planner smoke (plan --synthetic --budget 3.0 --check) =="
+# Plans the offline synthetic fixture at an average budget of 3.0 code
+# bits/weight; --check asserts the plan stays within budget AND its
+# mean code entropy matches or beats the uniform 3-bit ICQ baseline.
+(cd rust && cargo run --release --quiet -- plan --synthetic --budget 3.0 --check)
+
 if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
   echo "== bench smoke (IRQLORA_BENCH_QUICK=1) =="
   SMOKE_JSON="$(mktemp -t irqlora_bench_smoke.XXXXXX.json)"
@@ -42,6 +63,7 @@ if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
     cargo bench --bench quantize_throughput
     cargo bench --bench iec_merge
     cargo bench --bench icq_overhead
+    cargo bench --bench plan_throughput
     # serve_latency's PJRT scenarios need `make artifacts` (self-skip
     # when absent), but its reference-backend multi-adapter scenario
     # always runs — the smoke spins up the registry + batch server and
