@@ -14,6 +14,13 @@
 //!   ns_per_iter = mean request latency, per_sec = that adapter's
 //!   requests/s). This is the path `scripts/verify.sh` smokes under
 //!   `IRQLORA_BENCH_QUICK=1`.
+//! - **Pool scale-out** (always runs): the same mixed-adapter offered
+//!   load against 1/2/4-worker `ServerPool`s sharing ONE registry
+//!   (`serve_latency pool workers=N adapters=K`: ns_per_iter = mean
+//!   request latency, per_sec = requests/s), plus per-worker routing
+//!   rows for the 2-worker pool (`... workers=2 worker=I`: iters =
+//!   requests routed there, per_sec = that worker's requests/s) that
+//!   `scripts/verify.sh` asserts on.
 //!
 //! Run: cargo bench --bench serve_latency
 
@@ -22,13 +29,16 @@ use std::time::Duration;
 
 use irqlora::bench_harness::{bench_json_path, JsonSink};
 use irqlora::coordinator::backend::{ReferenceBackend, ServeBackend};
-use irqlora::coordinator::{AdapterRegistry, BatchServer, ServerConfig};
+use irqlora::coordinator::pool::{PoolConfig, ServerPool};
+use irqlora::coordinator::{
+    synthetic_serve_registry, AdapterRegistry, BatchServer, ServerConfig,
+};
 use irqlora::data::evalset::mmlu_item;
 use irqlora::data::World;
-use irqlora::model::weights::{init_base, init_lora, NamedTensors};
+use irqlora::model::weights::{init_base, init_lora};
 use irqlora::runtime::Manifest;
 use irqlora::util::timer::Timer;
-use irqlora::util::{Rng, Tensor};
+use irqlora::util::Rng;
 
 fn main() {
     let mut sink = JsonSink::new();
@@ -37,6 +47,7 @@ fn main() {
         Err(e) => eprintln!("skipping PJRT serve scenarios ({e})"),
     }
     reference_multi_adapter(&mut sink);
+    pool_scaling(&mut sink);
 
     let path = bench_json_path("BENCH_quant.json");
     match sink.write_merged(&path) {
@@ -153,20 +164,7 @@ fn reference_multi_adapter(sink: &mut JsonSink) {
     let n_adapters = 4usize;
     let per_adapter = irqlora::bench_harness::iters(256).max(32);
 
-    let mut rng = Rng::new(5);
-    let mut base = NamedTensors::new();
-    base.push("embed", Tensor::new(&[VOCAB, 64], rng.normal_vec(VOCAB * 64, 0.0, 0.02)));
-    base.push("l0.wq", Tensor::new(&[64, 64], rng.normal_vec(64 * 64, 0.0, 0.02)));
-    base.push("lm_head", Tensor::new(&[64, VOCAB], rng.normal_vec(64 * VOCAB, 0.0, 0.02)));
-
-    let registry = Arc::new(AdapterRegistry::new(base, (1.0, 1.0)));
-    for i in 0..n_adapters {
-        let mut a = NamedTensors::new();
-        a.push("l0.wq.lora_a", Tensor::new(&[64, 4], rng.normal_vec(64 * 4, 0.0, 0.3)));
-        a.push("l0.wq.lora_b", Tensor::new(&[4, 64], rng.normal_vec(4 * 64, 0.0, 0.3)));
-        a.push("betas", Tensor::new(&[1, 7, 2], rng.normal_vec(14, 0.0, 0.3)));
-        registry.register(&format!("tenant{i}"), a).unwrap();
-    }
+    let registry = synthetic_serve_registry(n_adapters, 5);
 
     let reg = registry.clone();
     let server = Arc::new(
@@ -253,4 +251,116 @@ fn reference_multi_adapter(sink: &mut JsonSink) {
         fast.as_secs_f64() * 1e9,
         Some(total_req as f64 / wall),
     );
+}
+
+/// Pool scale-out: 1/2/4 `BatchServer` workers sharing ONE registry
+/// under the same mixed-adapter offered load (2 async clients per
+/// worker, reference backend — runs offline, so the sharded serving
+/// path is smoked in CI). The 2-worker sweep also emits per-worker
+/// routing rows so affinity skew travels with the numbers.
+fn pool_scaling(sink: &mut JsonSink) {
+    const BATCH: usize = 8;
+    const SEQ: usize = 32;
+    const VOCAB: usize = 64;
+    let n_adapters = 4usize;
+    let per_client = irqlora::bench_harness::iters(128).max(16);
+
+    let registry = synthetic_serve_registry(n_adapters, 7);
+
+    println!(
+        "\npool scale-out (reference backend, {n_adapters} adapters, \
+         {per_client} req/client, 2 clients/worker):"
+    );
+    println!(
+        "{:>8} {:>9} {:>12} {:>12} {:>8} {:>9}",
+        "workers", "clients", "req/s", "mean ms", "spills", "reroutes"
+    );
+    for &workers in &[1usize, 2, 4] {
+        let reg = registry.clone();
+        let pool = Arc::new(
+            ServerPool::spawn_with(
+                PoolConfig::new(workers, Duration::from_millis(2)),
+                registry.clone(),
+                move |_w| {
+                    Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                        as Box<dyn ServeBackend>)
+                },
+            )
+            .unwrap(),
+        );
+        let clients = 2 * workers;
+        let t = Timer::start();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(40 + c as u64);
+                let mut total = Duration::ZERO;
+                let mut fastest = Duration::MAX;
+                let mut window = Vec::new();
+                for i in 0..per_client {
+                    let adapter = format!("tenant{}", (c + i) % n_adapters);
+                    let len = 1 + rng.below(SEQ - 1);
+                    let prompt: Vec<i32> =
+                        (0..len).map(|_| 1 + rng.below(VOCAB - 1) as i32).collect();
+                    window.push(pool.submit_async(&adapter, prompt).unwrap());
+                    if window.len() >= 8 {
+                        for p in window.drain(..) {
+                            let r = p.wait().unwrap();
+                            total += r.latency;
+                            fastest = fastest.min(r.latency);
+                        }
+                    }
+                }
+                for p in window.drain(..) {
+                    let r = p.wait().unwrap();
+                    total += r.latency;
+                    fastest = fastest.min(r.latency);
+                }
+                (total, fastest)
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let wall = t.elapsed_secs();
+        let n_req = clients * per_client;
+        let total: Duration = results.iter().map(|(t, _)| *t).sum();
+        let fastest = results
+            .iter()
+            .map(|(_, f)| *f)
+            .min()
+            .unwrap_or(Duration::ZERO);
+        let stats = pool.stats();
+        println!(
+            "{:>8} {:>9} {:>12.1} {:>12.3} {:>8} {:>9}",
+            workers,
+            clients,
+            n_req as f64 / wall,
+            total.as_secs_f64() / n_req as f64 * 1e3,
+            stats.spills,
+            stats.reroutes
+        );
+        sink.push_raw(
+            &format!("serve_latency pool workers={workers} adapters={n_adapters}"),
+            n_req,
+            total.as_secs_f64() / n_req as f64 * 1e9,
+            fastest.as_secs_f64() * 1e9,
+            Some(n_req as f64 / wall),
+        );
+        if workers == 2 {
+            // per-worker ROUTING rows: only iters (requests routed
+            // there) and per_sec carry meaning; the ns fields are
+            // zeroed rather than filled with inter-arrival pseudo-
+            // latency that tooling could mistake for request latency
+            for (i, w) in stats.workers.iter().enumerate() {
+                sink.push_raw(
+                    &format!("serve_latency pool workers=2 worker={i}"),
+                    w.routed,
+                    0.0,
+                    0.0,
+                    Some(w.routed as f64 / wall),
+                );
+            }
+        }
+        drop(pool); // BatchServer::drop joins each worker cleanly
+    }
 }

@@ -1,6 +1,9 @@
 //! Serving execution backends: the forward-pass engines behind
 //! [`super::server::BatchServer`], abstracted so the batching/routing
-//! layer is independent of (and testable without) PJRT.
+//! layer is independent of (and testable without) PJRT. Backends are
+//! per-worker state: an N-worker [`super::pool::ServerPool`] builds
+//! one backend per worker thread (N runtimes, N base uploads) while
+//! the registry's merged-weight cache stays shared.
 //!
 //! - [`PjrtBackend`] runs the manifest's `forward` graph on a PJRT
 //!   runtime it **owns** (an [`OwnedExecutor`] — the worker no longer
@@ -176,6 +179,13 @@ impl ReferenceBackend {
             base_fp: fingerprint(base),
             forward_delay: std::time::Duration::ZERO,
         }
+    }
+
+    /// Builder-style `forward_delay` (handy inside the `move` backend
+    /// factories servers and pools take).
+    pub fn with_forward_delay(mut self, delay: std::time::Duration) -> ReferenceBackend {
+        self.forward_delay = delay;
+        self
     }
 }
 

@@ -18,6 +18,7 @@ use crate::util::timer::Timer;
 use crate::util::Rng;
 
 use super::evaluator::{EvalResult, Evaluator};
+use super::pool::{PoolConfig, ServerPool};
 use super::quantize::{quantize_model, QuantizedModel};
 use super::registry::AdapterRegistry;
 use super::trainer::{Finetuner, Pretrainer};
@@ -174,11 +175,62 @@ pub fn pretrained_base(
 /// gating) folded into each adapter at merge time. Register the
 /// finetuned `lora` tensors of each tenant (e.g. `ArmResult` loras or
 /// cached `.irqc` checkpoints) on the returned registry, then hand it
-/// to `BatchServer::spawn`. Mixed-k bases (from
-/// [`plan_quantized`] / `quantize_model_planned`) serve identically —
-/// the base is already dequantized, so nothing downstream sees k.
+/// to `BatchServer::spawn` — or wrap it in an `Arc` and share it
+/// across an N-worker [`ServerPool`] (see [`serve_pool`]). Mixed-k
+/// bases (from [`plan_quantized`] / `quantize_model_planned`) serve
+/// identically — the base is already dequantized, so nothing
+/// downstream sees k.
 pub fn serve_registry(qm: &QuantizedModel, masks: (f32, f32)) -> AdapterRegistry {
     AdapterRegistry::new(qm.dequantized.clone(), masks)
+}
+
+/// Synthetic serving fixture shared by the offline bench scenarios
+/// (`serve_latency`'s reference/pool sweeps) and the
+/// `irqlora serve --reference` demo: a tiny three-tensor base with
+/// `n_adapters` registered tenants, seeded deterministically. Shapes
+/// only matter for merge validity — the `ReferenceBackend` consumes
+/// the tensors through fingerprints. Kept in one place so the bench
+/// rows and the CLI demo can never silently drift apart.
+pub fn synthetic_serve_registry(
+    n_adapters: usize,
+    seed: u64,
+) -> std::sync::Arc<AdapterRegistry> {
+    use crate::util::Tensor;
+    const VOCAB: usize = 64;
+    let mut rng = Rng::new(seed);
+    let mut base = NamedTensors::new();
+    base.push("embed", Tensor::new(&[VOCAB, 64], rng.normal_vec(VOCAB * 64, 0.0, 0.02)));
+    base.push("l0.wq", Tensor::new(&[64, 64], rng.normal_vec(64 * 64, 0.0, 0.02)));
+    base.push("lm_head", Tensor::new(&[64, VOCAB], rng.normal_vec(64 * VOCAB, 0.0, 0.02)));
+    let registry = std::sync::Arc::new(AdapterRegistry::new(base, (1.0, 1.0)));
+    for i in 0..n_adapters {
+        let mut a = NamedTensors::new();
+        a.push("l0.wq.lora_a", Tensor::new(&[64, 4], rng.normal_vec(64 * 4, 0.0, 0.3)));
+        a.push("l0.wq.lora_b", Tensor::new(&[4, 64], rng.normal_vec(4 * 64, 0.0, 0.3)));
+        a.push("betas", Tensor::new(&[1, 7, 2], rng.normal_vec(14, 0.0, 0.3)));
+        registry
+            .register(&format!("tenant{i}"), a)
+            .expect("synthetic adapter shapes are valid");
+    }
+    registry
+}
+
+/// [`serve_registry`] scaled out: one shared registry under an
+/// N-worker PJRT [`ServerPool`] (each worker owns its runtime and
+/// uploads the base once; merged adapters are computed once in the
+/// shared LRU cache). Returns the registry alongside the pool so
+/// callers can register/evict adapters while it serves. This is the
+/// engine behind `irqlora serve --workers N`.
+pub fn serve_pool(
+    manifest: Manifest,
+    tag: &str,
+    qm: &QuantizedModel,
+    masks: (f32, f32),
+    cfg: PoolConfig,
+) -> Result<(std::sync::Arc<AdapterRegistry>, ServerPool)> {
+    let registry = std::sync::Arc::new(serve_registry(qm, masks));
+    let pool = ServerPool::spawn(manifest, tag, cfg, registry.clone())?;
+    Ok((registry, pool))
 }
 
 /// Plan + quantize a base under a storage budget: profile every

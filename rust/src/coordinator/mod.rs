@@ -9,12 +9,16 @@
 //!   dequantized base (LRU-cached merged weights);
 //! - [`backend`]: serving forward engines (PJRT-owning + offline
 //!   reference);
-//! - [`server`]: multi-adapter dynamic-batching inference server;
+//! - [`server`]: multi-adapter dynamic-batching inference server
+//!   (one worker);
+//! - [`pool`]: N server workers sharded over one registry, with
+//!   adapter-affinity routing and async submission;
 //! - [`experiment`]: per-table-row orchestration with run caching.
 
 pub mod backend;
 pub mod evaluator;
 pub mod experiment;
+pub mod pool;
 pub mod quantize;
 pub mod registry;
 pub mod server;
@@ -23,9 +27,11 @@ pub mod trainer;
 pub use backend::{PjrtBackend, ReferenceBackend, ServeBackend};
 pub use evaluator::{EvalResult, Evaluator};
 pub use experiment::{
-    plan_quantized, pretrained_base, run_arm, serve_registry, Arm, ArmResult, RunCfg,
+    plan_quantized, pretrained_base, run_arm, serve_pool, serve_registry,
+    synthetic_serve_registry, Arm, ArmResult, RunCfg,
 };
+pub use pool::{Pending, PoolConfig, PoolStats, PoolWorkerStats, ServerPool};
 pub use quantize::{quantize_model, quantize_model_planned, QuantizedModel};
 pub use registry::{AdapterRegistry, RegistryStats};
-pub use server::{BatchServer, Reply, ServerConfig, ServerStats};
+pub use server::{BatchServer, Reply, ServerConfig, ServerStats, SubmitError};
 pub use trainer::{Finetuner, Pretrainer};

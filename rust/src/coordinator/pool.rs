@@ -1,0 +1,705 @@
+//! Sharded serving pool: N batch-serving workers over ONE shared
+//! [`AdapterRegistry`] (the serving-path scale-out layer above
+//! [`super::server::BatchServer`]).
+//!
+//! `BatchServer` gives one worker thread per server, so the
+//! shared-base + LRU-merge architecture saturates at one core. The
+//! pool spawns N workers (default [`serve_workers`], the
+//! `IRQLORA_SERVE_WORKERS` knob mirroring `IRQLORA_THREADS`) that all
+//! route through one registry — merged adapter weights are computed
+//! once and shared, while each worker owns its execution backend (for
+//! PJRT: its own runtime + device buffers, built on the worker thread
+//! by the factory passed to [`ServerPool::spawn_with`]).
+//!
+//! Routing is adapter-affine: [`home_worker`] consistent-hashes the
+//! adapter id onto a worker so consecutive requests for one tenant hit
+//! the same backend (keeping its device-side adapter upload and the
+//! registry's LRU entry warm). Two situations move a request off its
+//! home worker, both counted in [`PoolStats`]:
+//!
+//! - **spill** — the home worker's queue depth reached the spill
+//!   threshold (default `2 × backend batch`); the request goes to the
+//!   least-loaded alive worker instead, trading cache affinity for
+//!   latency on hot adapters;
+//! - **reroute** — the home worker is dead (its backend panicked or
+//!   its thread exited); the request probes forward around the ring
+//!   to the next alive worker. Dead workers stay dead (their reason
+//!   string is kept in [`PoolStats`]) and the rest of the pool keeps
+//!   serving: requests already queued on the dying worker fail with
+//!   the worker-died error (their handles resolve, nothing hangs),
+//!   while all *subsequent* traffic for its adapters reroutes — one
+//!   poisoned tenant cannot take down its neighbours' ongoing
+//!   service.
+//!
+//! Submission is asynchronous: [`ServerPool::submit_async`] returns a
+//! [`Pending`] handle without waiting for the reply (validation
+//! failures — malformed prompt, unknown adapter — still fail fast at
+//! submit time, exactly like `BatchServer::submit`; a completely
+//! saturated pool applies backpressure — see the method docs).
+//! `Pending::wait` blocks for the reply;
+//! `Pending::try_wait` polls. The blocking [`ServerPool::query`] is
+//! submit + wait. [`ServerPool::shutdown`] drains every worker:
+//! already-submitted `Pending` handles all resolve before the workers
+//! exit (same drain semantics as `BatchServer::shutdown`, per worker).
+//!
+//! Replies are bit-identical to a single `BatchServer` serving the
+//! same (adapter, prompt) stream: workers share the dequantized base
+//! through the registry, merges are deterministic, and each forward
+//! batches only same-adapter rows — which worker ran the forward can
+//! never leak into the logits (the pool concurrency battery in
+//! `rust/tests/pool_concurrency.rs` asserts this under contention).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvError, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::Manifest;
+use crate::util::hash::{fnv1a, FNV1A_SEED};
+
+use super::backend::{PjrtBackend, ServeBackend};
+use super::registry::AdapterRegistry;
+use super::server::{
+    AdapterServeStats, BatchServer, Reply, ServerConfig, ServerStats, SubmitError,
+};
+
+/// Worker count when `IRQLORA_SERVE_WORKERS` is unset.
+pub const DEFAULT_SERVE_WORKERS: usize = 2;
+
+/// Resolve the pool worker count: the `IRQLORA_SERVE_WORKERS`
+/// override, else [`DEFAULT_SERVE_WORKERS`].
+pub fn serve_workers() -> usize {
+    std::env::var("IRQLORA_SERVE_WORKERS")
+        .ok()
+        .and_then(|v| parse_workers_override(&v))
+        .unwrap_or(DEFAULT_SERVE_WORKERS)
+}
+
+/// Interpret an `IRQLORA_SERVE_WORKERS` value: positive integers are
+/// honored (capped at 64); zero and garbage are ignored. Pure so it is
+/// testable without process-global env mutation (mirrors
+/// `util::threads::parse_thread_override`).
+fn parse_workers_override(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n.min(64)),
+        _ => None,
+    }
+}
+
+/// Consistent adapter→worker assignment: FNV-1a over the adapter id
+/// (`util::hash`, the same hash checkpoint checksums use), reduced mod
+/// `n_workers`. Deterministic across processes and runs (no
+/// per-process hash seed), so a tenant's home worker is stable for a
+/// fixed pool size — the property the merged-weight and device buffer
+/// caches rely on.
+pub fn home_worker(adapter: &str, n_workers: usize) -> usize {
+    assert!(n_workers > 0, "home_worker needs at least one worker");
+    (fnv1a(FNV1A_SEED, adapter.as_bytes()) % n_workers as u64) as usize
+}
+
+/// Pool configuration.
+pub struct PoolConfig {
+    /// Worker count; `0` means [`serve_workers`] (the
+    /// `IRQLORA_SERVE_WORKERS` env default). Clamped to 1..=64 at
+    /// spawn (the same cap the env override has), so a typo'd
+    /// `--workers 1000000` can't spawn unbounded threads/runtimes.
+    pub workers: usize,
+    /// Per-worker batcher window (see [`ServerConfig::max_wait`]).
+    pub max_wait: Duration,
+    /// Queue depth at which a request spills off its home worker to
+    /// the least-loaded one; `None` means `2 × backend batch`.
+    pub spill_depth: Option<usize>,
+}
+
+impl PoolConfig {
+    pub fn new(workers: usize, max_wait: Duration) -> PoolConfig {
+        PoolConfig { workers, max_wait, spill_depth: None }
+    }
+}
+
+/// State shared between the pool, its routing decisions, and the
+/// [`Pending`] handles in flight against one worker.
+#[derive(Default)]
+struct WorkerShared {
+    /// Requests routed here whose [`Pending`] handle has not settled
+    /// yet (waited, polled to completion, or dropped). This is the
+    /// queue-depth signal spill decisions use; note a reply that has
+    /// been *delivered* but not yet harvested by its handle still
+    /// counts, so a large un-harvested `submit_async` burst reads as
+    /// depth — which is the intended hot-adapter spill trigger.
+    in_flight: AtomicUsize,
+    /// Total requests ever routed here.
+    routed: AtomicUsize,
+    /// `Some(reason)` once the worker is known dead. Sticky: a dead
+    /// worker is never routed to again.
+    dead: Mutex<Option<String>>,
+}
+
+impl WorkerShared {
+    fn is_alive(&self) -> bool {
+        self.dead.lock().unwrap().is_none()
+    }
+
+    /// First reason wins; later observers of the same death are no-ops.
+    fn mark_dead(&self, reason: String) {
+        let mut d = self.dead.lock().unwrap();
+        if d.is_none() {
+            *d = Some(reason);
+        }
+    }
+}
+
+struct PoolWorker {
+    server: BatchServer,
+    shared: Arc<WorkerShared>,
+}
+
+#[derive(Default)]
+struct RoutingCounters {
+    spills: usize,
+    reroutes: usize,
+}
+
+/// One worker's slice of [`PoolStats`].
+#[derive(Clone, Debug)]
+pub struct PoolWorkerStats {
+    /// Requests routed to this worker over the pool's lifetime.
+    pub routed: usize,
+    /// Requests currently queued/executing here (snapshot).
+    pub in_flight: usize,
+    /// Why this worker died, if it did.
+    pub dead: Option<String>,
+    /// The worker's own serving counters.
+    pub server: ServerStats,
+}
+
+/// Aggregate pool metrics: per-worker occupancy + liveness, routing
+/// counters, and the per-adapter breakdown summed across workers.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    pub workers: Vec<PoolWorkerStats>,
+    /// Requests sent off their home worker because it was saturated.
+    pub spills: usize,
+    /// Requests sent off their home worker because it was dead.
+    pub reroutes: usize,
+    /// Served requests, summed across workers.
+    pub requests: usize,
+    /// Forward calls, summed across workers.
+    pub batches: usize,
+    /// Submit-time rejections, summed across workers.
+    pub rejected: usize,
+    /// Per-adapter occupancy, summed across workers.
+    pub per_adapter: BTreeMap<String, AdapterServeStats>,
+}
+
+impl PoolStats {
+    /// Workers still accepting traffic.
+    pub fn alive(&self) -> usize {
+        self.workers.iter().filter(|w| w.dead.is_none()).count()
+    }
+
+    /// Requests submitted but not yet resolved, across all workers.
+    pub fn queue_depth(&self) -> usize {
+        self.workers.iter().map(|w| w.in_flight).sum()
+    }
+
+    /// Mean same-adapter group size across every worker's forwards.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.workers
+                .iter()
+                .map(|w| w.server.batch_occupancy_sum)
+                .sum::<usize>() as f64
+                / self.batches as f64
+        }
+    }
+}
+
+/// A reply that has been submitted but not yet received. Dropping the
+/// handle abandons the reply (the worker still serves the request);
+/// the pool's in-flight accounting settles either way.
+pub struct Pending {
+    rx: Receiver<Result<Reply, String>>,
+    shared: Arc<WorkerShared>,
+    worker: usize,
+    adapter: String,
+    settled: bool,
+}
+
+impl Pending {
+    /// Worker index this request was routed to.
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Adapter the request targets.
+    pub fn adapter(&self) -> &str {
+        &self.adapter
+    }
+
+    fn settle(&mut self) {
+        if !self.settled {
+            self.settled = true;
+            self.shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    fn resolve(&mut self, got: Result<Result<Reply, String>, RecvError>) -> Result<Reply> {
+        self.settle();
+        match got {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => Err(anyhow!("request failed: {e}")),
+            Err(_) => {
+                // the worker dropped our reply sender without
+                // answering: its thread died (panicking backend) —
+                // record the death so routing stops using it. The
+                // adapter named here is the first to OBSERVE the
+                // death, not necessarily the one whose forward killed
+                // the worker (other queued requests die with it).
+                let reason = format!(
+                    "worker died (first observed by a request for adapter '{}')",
+                    self.adapter
+                );
+                self.shared.mark_dead(reason);
+                Err(anyhow!(
+                    "pool worker {} died while serving adapter '{}'",
+                    self.worker,
+                    self.adapter
+                ))
+            }
+        }
+    }
+
+    /// Block until the reply arrives (or the worker dies). Like
+    /// [`Self::try_wait`], a reply already consumed by an earlier poll
+    /// reports an error — it must not be misread as a worker death.
+    pub fn wait(mut self) -> Result<Reply> {
+        if self.settled {
+            return Err(anyhow!(
+                "reply for adapter '{}' already consumed",
+                self.adapter
+            ));
+        }
+        let got = self.rx.recv();
+        self.resolve(got)
+    }
+
+    /// Poll for the reply: `None` while still in flight. After it has
+    /// returned `Some`, the reply is consumed — further polls report
+    /// an error rather than misreading the closed channel as a death.
+    pub fn try_wait(&mut self) -> Option<Result<Reply>> {
+        if self.settled {
+            return Some(Err(anyhow!(
+                "reply for adapter '{}' already consumed",
+                self.adapter
+            )));
+        }
+        match self.rx.try_recv() {
+            Ok(r) => Some(self.resolve(Ok(r))),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(self.resolve(Err(RecvError))),
+        }
+    }
+}
+
+impl Drop for Pending {
+    fn drop(&mut self) {
+        self.settle();
+    }
+}
+
+/// N [`BatchServer`] workers over one shared [`AdapterRegistry`], with
+/// adapter-affinity routing and async submission (module docs).
+pub struct ServerPool {
+    workers: Vec<PoolWorker>,
+    registry: Arc<AdapterRegistry>,
+    routing: Mutex<RoutingCounters>,
+    spill_depth: usize,
+    seq: usize,
+    vocab: usize,
+}
+
+impl ServerPool {
+    /// Spawn a pool of PJRT-backed workers over the manifest's
+    /// `forward` graph for `tag`. Each worker owns its runtime and
+    /// uploads the shared base once; the registry (and its merged
+    /// cache) is shared across all of them.
+    pub fn spawn(
+        manifest: Manifest,
+        tag: &str,
+        cfg: PoolConfig,
+        registry: Arc<AdapterRegistry>,
+    ) -> Result<ServerPool> {
+        let tag = tag.to_string();
+        let reg = registry.clone();
+        Self::spawn_with(cfg, registry, move |_worker| {
+            Ok(Box::new(PjrtBackend::new(&manifest, &tag, reg.base())?)
+                as Box<dyn ServeBackend>)
+        })
+    }
+
+    /// Spawn over an explicit backend factory, called once per worker
+    /// (with the worker index) on that worker's thread — backends may
+    /// own thread-bound resources. Tests and the offline bench smoke
+    /// pass [`super::backend::ReferenceBackend`] factories here.
+    pub fn spawn_with<F>(
+        cfg: PoolConfig,
+        registry: Arc<AdapterRegistry>,
+        make_backend: F,
+    ) -> Result<ServerPool>
+    where
+        F: Fn(usize) -> Result<Box<dyn ServeBackend>> + Send + Sync + 'static,
+    {
+        let n = (if cfg.workers == 0 { serve_workers() } else { cfg.workers }).clamp(1, 64);
+        let factory = Arc::new(make_backend);
+        let mut workers = Vec::with_capacity(n);
+        for w in 0..n {
+            let f = factory.clone();
+            let server = BatchServer::spawn_with(
+                ServerConfig { max_wait: cfg.max_wait },
+                registry.clone(),
+                move || f(w),
+            )
+            .with_context(|| format!("spawning pool worker {w} of {n}"))?;
+            workers.push(PoolWorker { server, shared: Arc::new(WorkerShared::default()) });
+        }
+        let spill_depth = cfg
+            .spill_depth
+            .unwrap_or_else(|| 2 * workers[0].server.max_batch())
+            .max(1);
+        let seq = workers[0].server.max_prompt_len();
+        let vocab = workers[0].server.vocab();
+        // routing assumes interchangeable workers: a factory returning
+        // per-worker shapes would make accept/reject depend on where a
+        // request happened to land
+        for (i, w) in workers.iter().enumerate() {
+            anyhow::ensure!(
+                w.server.max_batch() == workers[0].server.max_batch()
+                    && w.server.max_prompt_len() == seq
+                    && w.server.vocab() == vocab,
+                "pool worker {i} has a different backend shape than worker 0"
+            );
+        }
+        Ok(ServerPool {
+            workers,
+            registry,
+            routing: Mutex::new(RoutingCounters::default()),
+            spill_depth,
+            seq,
+            vocab,
+        })
+    }
+
+    /// Pool size (including dead workers).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Largest prompt (in tokens) the pool accepts.
+    pub fn max_prompt_len(&self) -> usize {
+        self.seq
+    }
+
+    /// Logit width of every reply.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// The registry every worker routes through.
+    pub fn registry(&self) -> &Arc<AdapterRegistry> {
+        &self.registry
+    }
+
+    /// Pick a target worker for an adapter whose home index is `home`:
+    /// the first alive worker probing forward from home, spilled to
+    /// the least-loaded alive worker when saturated. `None` when every
+    /// worker is dead. Returns (index, spilled, rerouted).
+    fn route(&self, home: usize) -> Option<(usize, bool, bool)> {
+        let n = self.workers.len();
+        let mut primary = None;
+        for off in 0..n {
+            let i = (home + off) % n;
+            if self.workers[i].shared.is_alive() {
+                primary = Some((i, off != 0));
+                break;
+            }
+        }
+        let (pi, rerouted) = primary?;
+        let depth = self.workers[pi].shared.in_flight.load(Ordering::Acquire);
+        if depth >= self.spill_depth {
+            let spill = self
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(i, w)| *i != pi && w.shared.is_alive())
+                .min_by_key(|(_, w)| w.shared.in_flight.load(Ordering::Acquire));
+            if let Some((si, sw)) = spill {
+                if sw.shared.in_flight.load(Ordering::Acquire) < depth {
+                    return Some((si, true, rerouted));
+                }
+            }
+        }
+        Some((pi, false, rerouted))
+    }
+
+    /// Submit without waiting for the reply: returns a [`Pending`]
+    /// handle. Malformed prompts and unknown adapters fail here,
+    /// before routing; a dead target worker is marked and the request
+    /// reroutes transparently. Backpressure caveat: each worker's
+    /// request queue is bounded (1024 slots), so once every alive
+    /// worker is saturated past its spill depth AND the target queue
+    /// is full, this call blocks until a slot frees — an open-loop
+    /// submitter that never harvests its handles will eventually stall
+    /// here instead of exhausting memory (turning a full queue into an
+    /// error return is a ROADMAP next step).
+    pub fn submit_async(&self, adapter: &str, tokens: Vec<i32>) -> Result<Pending> {
+        let n = self.workers.len();
+        let home = home_worker(adapter, n);
+        let mut tokens = tokens;
+        loop {
+            let (idx, spilled, rerouted) = self.route(home).ok_or_else(|| {
+                anyhow!("all {n} pool workers are dead (adapter '{adapter}')")
+            })?;
+            let w = &self.workers[idx];
+            match w.server.try_submit(adapter, tokens) {
+                Ok(rx) => {
+                    // one off-home cause per request: a dead home is
+                    // the root cause even if the replacement was also
+                    // saturated, so the counters stay disjoint and
+                    // spills + reroutes never exceeds off-home requests
+                    if spilled || rerouted {
+                        let mut r = self.routing.lock().unwrap();
+                        if rerouted {
+                            r.reroutes += 1;
+                        } else if spilled {
+                            r.spills += 1;
+                        }
+                    }
+                    w.shared.routed.fetch_add(1, Ordering::AcqRel);
+                    w.shared.in_flight.fetch_add(1, Ordering::AcqRel);
+                    return Ok(Pending {
+                        rx,
+                        shared: w.shared.clone(),
+                        worker: idx,
+                        adapter: adapter.to_string(),
+                        settled: false,
+                    });
+                }
+                Err(SubmitError::Rejected(e)) => return Err(e),
+                Err(SubmitError::WorkerGone(t)) => {
+                    // found dead at submit (raced its death): mark it
+                    // so route() skips it, and try the next worker
+                    w.shared
+                        .mark_dead("worker exited before accepting a request".to_string());
+                    tokens = t;
+                }
+            }
+        }
+    }
+
+    /// Submit and wait (the blocking path `BatchServer::query` users
+    /// expect).
+    pub fn query(&self, adapter: &str, tokens: Vec<i32>) -> Result<Reply> {
+        self.submit_async(adapter, tokens)?.wait()
+    }
+
+    /// Aggregate metrics snapshot (module docs).
+    pub fn stats(&self) -> PoolStats {
+        let (spills, reroutes) = {
+            let r = self.routing.lock().unwrap();
+            (r.spills, r.reroutes)
+        };
+        let mut out = PoolStats { spills, reroutes, ..PoolStats::default() };
+        for w in &self.workers {
+            let server = w.server.stats();
+            out.requests += server.requests;
+            out.batches += server.batches;
+            out.rejected += server.rejected;
+            for (name, a) in &server.per_adapter {
+                let e = out.per_adapter.entry(name.clone()).or_default();
+                e.requests += a.requests;
+                e.batches += a.batches;
+                e.occupancy_sum += a.occupancy_sum;
+            }
+            out.workers.push(PoolWorkerStats {
+                routed: w.shared.routed.load(Ordering::Acquire),
+                in_flight: w.shared.in_flight.load(Ordering::Acquire),
+                dead: w.shared.dead.lock().unwrap().clone(),
+                server,
+            });
+        }
+        out
+    }
+
+    /// Graceful shutdown: every worker drains its queue first, so all
+    /// outstanding [`Pending`] handles resolve (with a reply, or with
+    /// the dead-worker error for workers that already died).
+    pub fn shutdown(self) {
+        for w in self.workers {
+            w.server.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::ReferenceBackend;
+    use crate::model::weights::NamedTensors;
+    use crate::util::{Rng, Tensor};
+
+    fn base(seed: u64) -> NamedTensors {
+        let mut rng = Rng::new(seed);
+        let mut nt = NamedTensors::new();
+        nt.push("embed", Tensor::new(&[8, 16], rng.normal_vec(128, 0.0, 0.05)));
+        nt
+    }
+
+    fn adapter(seed: u64) -> NamedTensors {
+        let mut rng = Rng::new(seed);
+        let (h, r, o) = (16usize, 4usize, 8usize);
+        let mut nt = NamedTensors::new();
+        nt.push("l0.wq.lora_a", Tensor::new(&[h, r], rng.normal_vec(h * r, 0.0, 0.3)));
+        nt.push("l0.wq.lora_b", Tensor::new(&[r, o], rng.normal_vec(r * o, 0.0, 0.3)));
+        nt.push("betas", Tensor::new(&[1, 7, 2], rng.normal_vec(14, 0.0, 0.5)));
+        nt
+    }
+
+    fn reference_pool(workers: usize, registry: Arc<AdapterRegistry>) -> ServerPool {
+        let reg = registry.clone();
+        ServerPool::spawn_with(
+            PoolConfig::new(workers, Duration::from_millis(1)),
+            registry,
+            move |_w| {
+                Ok(Box::new(ReferenceBackend::new(4, 8, 12, reg.base()))
+                    as Box<dyn ServeBackend>)
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn workers_env_override_parsing() {
+        assert_eq!(parse_workers_override("4"), Some(4));
+        assert_eq!(parse_workers_override(" 2 "), Some(2));
+        assert_eq!(parse_workers_override("9999"), Some(64)); // capped
+        assert_eq!(parse_workers_override("0"), None);
+        assert_eq!(parse_workers_override("nope"), None);
+        assert_eq!(parse_workers_override(""), None);
+        assert!(serve_workers() >= 1);
+    }
+
+    #[test]
+    fn home_worker_deterministic_in_range() {
+        for n in 1..=8 {
+            for name in ["a", "tenant0", "tenant1", "a-long-adapter-id"] {
+                let h = home_worker(name, n);
+                assert!(h < n);
+                assert_eq!(h, home_worker(name, n), "{name} n={n}");
+            }
+        }
+        // single worker: everything homes to 0
+        assert_eq!(home_worker("anything", 1), 0);
+        // distinct ids do spread (not all on one worker)
+        let homes: std::collections::BTreeSet<usize> =
+            (0..32).map(|i| home_worker(&format!("t{i}"), 4)).collect();
+        assert!(homes.len() > 1, "hash collapsed: {homes:?}");
+    }
+
+    #[test]
+    fn pool_serves_and_aggregates_stats() {
+        let registry = Arc::new(AdapterRegistry::with_capacity(base(1), (1.0, 1.0), 4));
+        for i in 0..3 {
+            registry.register(&format!("t{i}"), adapter(10 + i)).unwrap();
+        }
+        let pool = reference_pool(2, registry.clone());
+        assert_eq!(pool.workers(), 2);
+        assert_eq!(pool.max_prompt_len(), 8);
+        assert_eq!(pool.vocab(), 12);
+
+        // blocking queries across adapters
+        let mut replies = Vec::new();
+        for i in 0..9 {
+            let a = format!("t{}", i % 3);
+            replies.push(pool.query(&a, vec![1 + (i % 5) as i32, 2]).unwrap());
+        }
+        // async handles resolve too, bit-identical to the blocking path
+        let h = pool.submit_async("t0", vec![1, 2]).unwrap();
+        assert!(h.worker() < 2);
+        assert_eq!(h.adapter(), "t0");
+        let r = h.wait().unwrap();
+        assert_eq!(r.logits, replies[0].logits);
+
+        let s = pool.stats();
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.alive(), 2);
+        assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.per_adapter.len(), 3);
+        assert_eq!(s.per_adapter["t0"].requests, 4);
+        assert_eq!(s.workers.len(), 2);
+        assert_eq!(s.workers.iter().map(|w| w.routed).sum::<usize>(), 10);
+        // affinity: with no spills, each adapter's requests all landed
+        // on its home worker
+        assert_eq!(s.spills, 0);
+        assert_eq!(s.reroutes, 0);
+        for i in 0..3 {
+            let name = format!("t{i}");
+            let home = home_worker(&name, 2);
+            assert_eq!(
+                s.workers[home].server.per_adapter[&name].requests,
+                s.per_adapter[&name].requests,
+                "adapter {name} strayed off worker {home}: {s:?}"
+            );
+        }
+        assert!(s.mean_batch_size() >= 1.0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_rejects_bad_requests_at_submit() {
+        let registry = Arc::new(AdapterRegistry::with_capacity(base(2), (0.0, 0.0), 4));
+        registry.register("good", adapter(20)).unwrap();
+        let pool = reference_pool(2, registry);
+        assert!(pool.submit_async("good", vec![]).is_err());
+        assert!(pool.submit_async("good", vec![1; 9]).is_err()); // seq = 8
+        let err = pool.submit_async("ghost", vec![1, 2]).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown adapter"), "{err:#}");
+        assert_eq!(pool.stats().rejected, 3);
+        assert_eq!(pool.stats().requests, 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn zero_workers_falls_back_to_env_default() {
+        let registry = Arc::new(AdapterRegistry::with_capacity(base(3), (0.0, 0.0), 2));
+        registry.register("a", adapter(30)).unwrap();
+        let pool = reference_pool(0, registry);
+        assert!(pool.workers() >= 1);
+        assert!(pool.query("a", vec![3, 1]).is_ok());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn worker_init_failure_fails_spawn() {
+        let registry = Arc::new(AdapterRegistry::with_capacity(base(4), (0.0, 0.0), 2));
+        let err = ServerPool::spawn_with(
+            PoolConfig::new(3, Duration::from_millis(1)),
+            registry,
+            |w| {
+                if w == 2 {
+                    anyhow::bail!("no device {w}")
+                }
+                Ok(Box::new(ReferenceBackend::new(2, 4, 4, &NamedTensors::new()))
+                    as Box<dyn ServeBackend>)
+            },
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pool worker 2") && msg.contains("no device"), "{msg}");
+    }
+}

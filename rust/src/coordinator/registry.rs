@@ -37,6 +37,11 @@ use crate::model::weights::{validate_adapter, validate_adapter_shapes, NamedTens
 /// Merged-weight cache capacity when `IRQLORA_ADAPTER_CACHE` is unset.
 pub const DEFAULT_CACHE_CAPACITY: usize = 8;
 
+/// How many times [`AdapterRegistry::merged_tagged`] re-merges when a
+/// concurrent re-register keeps invalidating its work before it gives
+/// up and returns the last (self-consistent) result.
+pub const MAX_MERGE_RETRIES: usize = 3;
+
 /// Resolve the merged-cache capacity: the `IRQLORA_ADAPTER_CACHE`
 /// override, else [`DEFAULT_CACHE_CAPACITY`].
 pub fn cache_capacity() -> usize {
@@ -249,68 +254,114 @@ impl AdapterRegistry {
     /// reuse). The expensive part of a miss (checkpoint reload +
     /// merge) runs *outside* the registry lock so concurrent
     /// `submit()` calls never stall behind disk I/O; a raced
-    /// duplicate merge is tolerated (both results are bit-identical)
-    /// and the cache may evict its coldest entry on insert.
+    /// duplicate merge of one generation is tolerated (both results
+    /// are bit-identical) and the cache may evict its coldest entry
+    /// on insert.
+    ///
+    /// Freshness: the generation is re-read under the cache lock
+    /// before the result is committed. If a concurrent `register`
+    /// replaced the source while the merge ran, the stale merge is
+    /// discarded and the lookup retries against the new source —
+    /// callers never receive a (generation, weights) pair older than
+    /// the registration that was current when the result was
+    /// determined. (Before this check-and-retry, a lookup racing a
+    /// re-register could hand back the *previous* generation's
+    /// weights even though the new registration had already
+    /// completed.) Retries are bounded: under a pathological register
+    /// storm (every merge outpaced by another re-register) the lookup
+    /// gives up after [`MAX_MERGE_RETRIES`] and returns its last
+    /// merge — still a self-consistent (generation, weights) pair,
+    /// just not the newest, and never cached — rather than livelock
+    /// the serving worker. A removal racing the merge surfaces as
+    /// "unknown adapter", same as a lookup after the removal.
     pub fn merged_tagged(&self, name: &str) -> Result<(u64, Arc<NamedTensors>)> {
-        let (generation, src) = {
+        let mut attempts = 0usize;
+        loop {
+            let (generation, src) = {
+                let mut inner = self.inner.lock().unwrap();
+                if let Some((g, m)) = inner.merged.get(name).cloned() {
+                    // a retry that finds another thread's commit is
+                    // still the same logical lookup — it already
+                    // counted its miss, so don't also count a hit
+                    if attempts == 0 {
+                        inner.stats.hits += 1;
+                    }
+                    inner.touch(name);
+                    return Ok((g, m));
+                }
+                if attempts == 0 {
+                    // one logical lookup = at most one miss, however
+                    // many times a racing re-register forces a re-merge
+                    inner.stats.misses += 1;
+                }
+                match inner.sources.get(name) {
+                    Some((g, s)) => (*g, s.clone()),
+                    None => {
+                        return Err(anyhow!(
+                            "unknown adapter '{name}' (registered: {:?})",
+                            inner.sources.keys().collect::<Vec<_>>()
+                        ))
+                    }
+                }
+            };
+
+            // expensive section — no lock held
+            let raw: Arc<NamedTensors> = match src {
+                AdapterSource::Memory(a) => a,
+                AdapterSource::File(p) => Arc::new(
+                    checkpoint::load(&p)
+                        .with_context(|| format!("reloading adapter '{name}'"))?,
+                ),
+            };
+            let merged = Arc::new(
+                merge_adapter(&raw, self.masks)
+                    .with_context(|| format!("merging adapter '{name}'"))?,
+            );
+
             let mut inner = self.inner.lock().unwrap();
+            // another thread merged the same generation while we worked?
             if let Some((g, m)) = inner.merged.get(name).cloned() {
-                inner.stats.hits += 1;
-                inner.touch(name);
-                return Ok((g, m));
+                if g == generation {
+                    inner.touch(name);
+                    return Ok((g, m));
+                }
             }
-            inner.stats.misses += 1;
-            match inner.sources.get(name) {
-                Some((g, s)) => (*g, s.clone()),
+            // commit only while the source we merged is still the
+            // registered one — checked under the same lock that
+            // `register`/`evict` take, so the generation cannot move
+            // between this check and the insert
+            let source_gen = inner.sources.get(name).map(|(g, _)| *g);
+            match source_gen {
+                Some(g) if g == generation => {
+                    inner.drop_merged(name);
+                    inner.merged.insert(name.to_string(), (generation, merged.clone()));
+                    inner.order.push_back(name.to_string());
+                    while inner.merged.len() > self.capacity {
+                        match inner.order.pop_front() {
+                            Some(cold) => {
+                                inner.merged.remove(&cold);
+                                inner.stats.evictions += 1;
+                            }
+                            None => break,
+                        }
+                    }
+                    return Ok((generation, merged));
+                }
+                // source replaced mid-merge: our merge is stale — drop
+                // it and retry against the fresh source (bounded; see
+                // the freshness note above)
+                Some(_) if attempts < MAX_MERGE_RETRIES => {
+                    attempts += 1;
+                    continue;
+                }
+                Some(_) => return Ok((generation, merged)),
                 None => {
                     return Err(anyhow!(
-                        "unknown adapter '{name}' (registered: {:?})",
-                        inner.sources.keys().collect::<Vec<_>>()
+                        "unknown adapter '{name}' (removed during merge)"
                     ))
                 }
             }
-        };
-
-        // expensive section — no lock held
-        let raw: Arc<NamedTensors> = match src {
-            AdapterSource::Memory(a) => a,
-            AdapterSource::File(p) => Arc::new(
-                checkpoint::load(&p)
-                    .with_context(|| format!("reloading adapter '{name}'"))?,
-            ),
-        };
-        let merged = Arc::new(
-            merge_adapter(&raw, self.masks)
-                .with_context(|| format!("merging adapter '{name}'"))?,
-        );
-
-        let mut inner = self.inner.lock().unwrap();
-        // another thread merged the same generation while we worked?
-        if let Some((g, m)) = inner.merged.get(name).cloned() {
-            if g == generation {
-                inner.touch(name);
-                return Ok((g, m));
-            }
         }
-        // cache only if the source wasn't replaced meanwhile (a stale
-        // insert would serve outdated weights to later requests)
-        let current =
-            matches!(inner.sources.get(name), Some((g, _)) if *g == generation);
-        if current {
-            inner.drop_merged(name);
-            inner.merged.insert(name.to_string(), (generation, merged.clone()));
-            inner.order.push_back(name.to_string());
-            while inner.merged.len() > self.capacity {
-                match inner.order.pop_front() {
-                    Some(cold) => {
-                        inner.merged.remove(&cold);
-                        inner.stats.evictions += 1;
-                    }
-                    None => break,
-                }
-            }
-        }
-        Ok((generation, merged))
     }
 }
 

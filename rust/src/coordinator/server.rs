@@ -107,12 +107,27 @@ pub struct ServerConfig {
     pub max_wait: Duration,
 }
 
+/// Why a submission did not enqueue — split so routing layers
+/// ([`super::pool::ServerPool`]) can tell a bad *request* (propagate
+/// to the caller) from a bad *worker* (mark it dead and reroute).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Malformed prompt or unknown adapter. Counted in
+    /// [`ServerStats::rejected`]; resubmitting elsewhere is pointless.
+    Rejected(anyhow::Error),
+    /// The worker thread is gone (panicked backend or shut down); the
+    /// request never reached a queue. The prompt tokens are handed
+    /// back so the caller can reroute without a clone.
+    WorkerGone(Vec<i32>),
+}
+
 /// Handle to a running batch server.
 pub struct BatchServer {
     tx: Option<SyncSender<Request>>,
     handle: Option<std::thread::JoinHandle<()>>,
     stats: Arc<Mutex<ServerStats>>,
     registry: Arc<AdapterRegistry>,
+    batch: usize,
     seq: usize,
     vocab: usize,
 }
@@ -211,17 +226,23 @@ impl BatchServer {
             }
         });
 
-        let (_batch, seq, vocab) = ready_rx
+        let (batch, seq, vocab) = ready_rx
             .recv()
             .context("server worker died during init")?
             .map_err(|e| anyhow!("server init failed: {e}"))?;
 
-        Ok(BatchServer { tx: Some(tx), handle: Some(handle), stats, registry, seq, vocab })
+        Ok(BatchServer { tx: Some(tx), handle: Some(handle), stats, registry, batch, seq, vocab })
     }
 
     /// Largest prompt (in tokens) the server accepts.
     pub fn max_prompt_len(&self) -> usize {
         self.seq
+    }
+
+    /// Max requests one forward call can carry (the backend's batch
+    /// dimension). Routing layers size their spill thresholds off it.
+    pub fn max_batch(&self) -> usize {
+        self.batch
     }
 
     /// Logit width of every reply.
@@ -243,29 +264,51 @@ impl BatchServer {
         adapter: &str,
         tokens: Vec<i32>,
     ) -> Result<Receiver<Result<Reply, String>>> {
+        match self.try_submit(adapter, tokens) {
+            Ok(rx) => Ok(rx),
+            Err(SubmitError::Rejected(e)) => Err(e),
+            Err(SubmitError::WorkerGone(_)) => Err(anyhow!("server worker exited")),
+        }
+    }
+
+    /// [`Self::submit`] with the failure mode split for routing layers:
+    /// request problems come back as [`SubmitError::Rejected`] (and are
+    /// counted in [`ServerStats::rejected`]), a dead worker comes back
+    /// as [`SubmitError::WorkerGone`] with the tokens returned so the
+    /// caller can reroute them to another worker.
+    pub fn try_submit(
+        &self,
+        adapter: &str,
+        tokens: Vec<i32>,
+    ) -> Result<Receiver<Result<Reply, String>>, SubmitError> {
         if tokens.is_empty() || tokens.len() > self.seq {
             self.stats.lock().unwrap().rejected += 1;
-            bail!("prompt length {} out of range 1..={}", tokens.len(), self.seq);
+            return Err(SubmitError::Rejected(anyhow!(
+                "prompt length {} out of range 1..={}",
+                tokens.len(),
+                self.seq
+            )));
         }
         if !self.registry.contains(adapter) {
             self.stats.lock().unwrap().rejected += 1;
-            bail!(
+            return Err(SubmitError::Rejected(anyhow!(
                 "unknown adapter '{adapter}' (registered: {:?})",
                 self.registry.names()
-            );
+            )));
         }
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(SubmitError::WorkerGone(tokens));
+        };
         let (reply_tx, reply_rx) = sync_channel(1);
-        self.tx
-            .as_ref()
-            .context("server shut down")?
-            .send(Request {
-                adapter: adapter.to_string(),
-                tokens,
-                enqueued: Instant::now(),
-                reply: reply_tx,
-            })
-            .map_err(|_| anyhow!("server worker exited"))?;
-        Ok(reply_rx)
+        match tx.send(Request {
+            adapter: adapter.to_string(),
+            tokens,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        }) {
+            Ok(()) => Ok(reply_rx),
+            Err(std::sync::mpsc::SendError(req)) => Err(SubmitError::WorkerGone(req.tokens)),
+        }
     }
 
     /// Submit and wait.

@@ -5,6 +5,7 @@
 //! irqlora quantize --size s --method ir-qlora  quantize + report entropy/storage
 //! irqlora plan [--budget 3.2] [--synthetic]    mixed-precision allocation table
 //! irqlora finetune --size s --arm ir-qlora     full arm: quantize + LoRA finetune + eval
+//! irqlora serve [--workers N] [--reference]    N-worker sharded serving pool demo
 //! irqlora table <1|2|3|4|5|6|7|8|9|10|11>      regenerate a paper table
 //! irqlora figure <4|5>                         regenerate a paper figure
 //! irqlora all                                  every table + figure
@@ -15,6 +16,10 @@
 //!               IRQLORA_BIT_BUDGET or 3.2)  --floor K  --ceil K
 //!               --synthetic (offline fixture model)  --check (assert
 //!               budget met + entropy ≥ uniform 3-bit)
+//! Serve flags:  --workers N (0 = IRQLORA_SERVE_WORKERS, default 2)
+//!               --adapters K  --requests M  --reference (offline
+//!               deterministic backend; also the fallback when
+//!               artifacts are missing)
 
 use anyhow::{bail, Context, Result};
 
@@ -38,6 +43,10 @@ struct Cli {
     ceil: Option<u8>,
     synthetic: bool,
     check: bool,
+    workers: usize,
+    adapters: usize,
+    requests: usize,
+    reference: bool,
 }
 
 fn parse_args() -> Result<Cli> {
@@ -57,6 +66,10 @@ fn parse_args() -> Result<Cli> {
     let mut ceil = None;
     let mut synthetic = false;
     let mut check = false;
+    let mut workers = 0usize;
+    let mut adapters = 4usize;
+    let mut requests = 64usize;
+    let mut reference = false;
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
@@ -122,6 +135,21 @@ fn parse_args() -> Result<Cli> {
             "--check" => {
                 check = true;
             }
+            "--workers" => {
+                i += 1;
+                workers = args.get(i).context("--workers needs a value")?.parse()?;
+            }
+            "--adapters" => {
+                i += 1;
+                adapters = args.get(i).context("--adapters needs a value")?.parse()?;
+            }
+            "--requests" => {
+                i += 1;
+                requests = args.get(i).context("--requests needs a value")?.parse()?;
+            }
+            "--reference" => {
+                reference = true;
+            }
             s if arg.is_none() && !s.starts_with("--") => arg = Some(s.to_string()),
             s => bail!("unknown flag {s}\n{USAGE}"),
         }
@@ -145,13 +173,18 @@ fn parse_args() -> Result<Cli> {
         ceil,
         synthetic,
         check,
+        workers,
+        adapters,
+        requests,
+        reference,
     })
 }
 
-const USAGE: &str = "usage: irqlora <pretrain|quantize|plan|finetune|table N|figure N|all> \
+const USAGE: &str = "usage: irqlora <pretrain|quantize|plan|finetune|serve|table N|figure N|all> \
 [--sizes xs,s] [--pretrain-steps N] [--finetune-steps N] [--eval-per-group N] \
 [--seed N] [--method ARM] [--bits K] [--full] \
-[--budget B] [--floor K] [--ceil K] [--synthetic] [--check]";
+[--budget B] [--floor K] [--ceil K] [--synthetic] [--check] \
+[--workers N] [--adapters K] [--requests M] [--reference]";
 
 fn arm_by_name(name: &str, k: u8) -> Result<Arm> {
     Ok(match name {
@@ -183,6 +216,11 @@ fn main() -> Result<()> {
         // loads the manifest itself only when a real base is needed,
         // so `plan --synthetic` runs in toolchain-only environments
         return cmd_plan(&cli);
+    }
+    if cli.cmd == "serve" {
+        // loads the manifest itself (the --reference demo and the
+        // artifacts-missing fallback run without it)
+        return cmd_serve(&cli);
     }
 
     let manifest = Manifest::load("artifacts").context(
@@ -354,6 +392,188 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
         println!("planner check OK");
     }
     Ok(())
+}
+
+/// The `serve` verb: spin up an N-worker [`ServerPool`] over one
+/// shared `AdapterRegistry`, fire a mixed-adapter request stream
+/// through `submit_async`, and print the aggregate `PoolStats`
+/// (per-worker routing/occupancy, per-adapter requests, spills).
+/// With artifacts present it serves the quantized pretrained base
+/// through PJRT workers; `--reference` (or missing artifacts) runs
+/// the deterministic offline backend instead, so the scale-out path
+/// is demo-able in toolchain-only environments.
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    use irqlora::coordinator::pool::{serve_workers, PoolConfig, ServerPool};
+    use irqlora::coordinator::{synthetic_serve_registry, ReferenceBackend, ServeBackend};
+    use irqlora::util::Rng;
+    use std::time::Duration;
+
+    let workers = if cli.workers == 0 { serve_workers() } else { cli.workers };
+    let n_adapters = cli.adapters.max(1);
+    let n_requests = cli.requests.max(1);
+
+    if !cli.reference {
+        match Manifest::load("artifacts") {
+            Ok(manifest) => return cmd_serve_pjrt(cli, manifest, workers, n_adapters, n_requests),
+            Err(e) => log::warn!("no artifacts ({e:#}) — serving the reference-backend demo"),
+        }
+    }
+
+    // offline demo: the shared synthetic fixture over the
+    // deterministic reference backend (same path the bench smoke
+    // exercises)
+    const BATCH: usize = 8;
+    const SEQ: usize = 32;
+    const VOCAB: usize = 64;
+    let registry = synthetic_serve_registry(n_adapters, cli.cfg.seed);
+    let reg = registry.clone();
+    let pool = ServerPool::spawn_with(
+        PoolConfig::new(workers, Duration::from_millis(2)),
+        registry,
+        move |_w| {
+            Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                as Box<dyn ServeBackend>)
+        },
+    )?;
+    println!(
+        "reference pool: {} workers, {n_adapters} adapters, {n_requests} requests",
+        pool.workers()
+    );
+
+    let mut prng = Rng::new(cli.cfg.seed ^ 0x5e21);
+    let (done, wall) = drive_pool(&pool, n_requests, 64, |i| {
+        let adapter = format!("tenant{}", i % n_adapters);
+        let len = 1 + prng.below(SEQ - 1);
+        (adapter, (0..len).map(|_| 1 + prng.below(VOCAB - 1) as i32).collect())
+    })?;
+    print_pool_report(&pool.stats(), done, wall);
+    pool.shutdown();
+    Ok(())
+}
+
+/// Drive `n_requests` through `pool.submit_async`, keeping up to
+/// `window` handles in flight before draining; `next(i)` produces the
+/// (adapter, prompt) of request `i`. Returns (completed, wall secs).
+fn drive_pool(
+    pool: &irqlora::coordinator::ServerPool,
+    n_requests: usize,
+    window: usize,
+    mut next: impl FnMut(usize) -> (String, Vec<i32>),
+) -> Result<(usize, f64)> {
+    let t = irqlora::util::timer::Timer::start();
+    let mut pending = Vec::new();
+    let mut done = 0usize;
+    for i in 0..n_requests {
+        let (adapter, prompt) = next(i);
+        pending.push(pool.submit_async(&adapter, prompt)?);
+        if pending.len() >= window.max(1) {
+            for p in pending.drain(..) {
+                p.wait()?;
+                done += 1;
+            }
+        }
+    }
+    for p in pending.drain(..) {
+        p.wait()?;
+        done += 1;
+    }
+    Ok((done, t.elapsed_secs()))
+}
+
+/// PJRT arm of `serve`: quantized pretrained base, one registry, N
+/// PJRT workers (each owning its runtime), seeded LoRA adapters.
+fn cmd_serve_pjrt(
+    cli: &Cli,
+    manifest: Manifest,
+    workers: usize,
+    n_adapters: usize,
+    n_requests: usize,
+) -> Result<()> {
+    use irqlora::coordinator::{quantize_model, serve_pool, PoolConfig};
+    use irqlora::model::weights::init_lora;
+    use irqlora::util::Rng;
+    use std::time::Duration;
+
+    let rt = Runtime::cpu()?;
+    log::info!("PJRT platform: {}", rt.platform());
+    let tag = cli.sizes[0].as_str();
+    let arm = arm_by_name(&cli.method, cli.bits)?;
+    let base = pretrained_base(&rt, &manifest, tag, &cli.cfg)?;
+    let qm = quantize_model(&base, arm.method, cli.cfg.seed)?;
+
+    let size = manifest.size(tag)?.clone();
+    let tspec = manifest.graph(tag, "train_step")?;
+    let nb = qm.dequantized.len();
+    let nl = irqlora::coordinator::trainer::train_layout(tspec.inputs.len(), nb)?;
+    let lora_specs = tspec.inputs[nb..nb + nl].to_vec();
+
+    let (registry, pool) = serve_pool(
+        manifest,
+        tag,
+        &qm,
+        arm.masks,
+        PoolConfig::new(workers, Duration::from_millis(2)),
+    )?;
+    for i in 0..n_adapters {
+        let mut arng = Rng::new(cli.cfg.seed ^ (0xada0 + i as u64));
+        registry.register(
+            &format!("tenant{i}"),
+            init_lora(&lora_specs, size.config.rank, &mut arng),
+        )?;
+    }
+    println!(
+        "pjrt pool: {} workers over nano-{tag} ({}), {n_adapters} adapters, {n_requests} requests",
+        pool.workers(),
+        arm.name
+    );
+
+    let world = World::new(cli.cfg.world_seed);
+    let mut prng = Rng::new(cli.cfg.seed ^ 0x9e37);
+    let max_len = pool.max_prompt_len();
+    let (done, wall) = drive_pool(&pool, n_requests, 32, |i| {
+        let adapter = format!("tenant{}", i % n_adapters);
+        let cat = prng.below(4);
+        let mut prompt = irqlora::data::evalset::mmlu_item(&world, cat, &mut prng, 5).prompt;
+        prompt.truncate(max_len);
+        if prompt.is_empty() {
+            prompt.push(1);
+        }
+        (adapter, prompt)
+    })?;
+    print_pool_report(&pool.stats(), done, wall);
+    pool.shutdown();
+    Ok(())
+}
+
+/// Render a [`PoolStats`] snapshot: totals, per-worker routing and
+/// occupancy (with liveness), and the per-adapter breakdown.
+fn print_pool_report(stats: &irqlora::coordinator::PoolStats, done: usize, wall: f64) {
+    println!(
+        "\nserved {done} requests in {wall:.2}s ({:.1} req/s, mean batch {:.2}, \
+         spills {}, reroutes {})",
+        done as f64 / wall.max(1e-9),
+        stats.mean_batch_size(),
+        stats.spills,
+        stats.reroutes
+    );
+    println!(
+        "{:>7} {:>9} {:>9} {:>11} {:>6}",
+        "worker", "routed", "batches", "mean batch", "alive"
+    );
+    for (i, w) in stats.workers.iter().enumerate() {
+        println!(
+            "{:>7} {:>9} {:>9} {:>11.2} {:>6}",
+            i,
+            w.routed,
+            w.server.batches,
+            w.server.mean_batch_size(),
+            if w.dead.is_some() { "DEAD" } else { "yes" }
+        );
+    }
+    println!("{:>10} {:>9} {:>11}", "adapter", "requests", "mean batch");
+    for (name, a) in &stats.per_adapter {
+        println!("{:>10} {:>9} {:>11.2}", name, a.requests, a.mean_batch_size());
+    }
 }
 
 /// Minimal env-driven logger (RUST_LOG=info|debug).

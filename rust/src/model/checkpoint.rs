@@ -26,6 +26,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::precision::PrecisionPlan;
+use crate::util::hash::{fnv1a, FNV1A_SEED};
 use crate::util::Tensor;
 
 use super::weights::NamedTensors;
@@ -37,15 +38,6 @@ const VERSION_PLANNED: u32 = 2;
 /// Cap on the serialized plan section (a plan is a few dozen bytes per
 /// tensor; anything near this is corruption).
 const MAX_PLAN_BYTES: usize = 1 << 24;
-
-fn fnv1a(state: u64, bytes: &[u8]) -> u64 {
-    let mut h = state;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
 
 /// Save without a plan — version-1 bytes, identical to every
 /// checkpoint written before the mixed-precision planner existed.
@@ -74,7 +66,7 @@ fn save_impl(nt: &NamedTensors, plan: Option<&PrecisionPlan>, path: &Path) -> Re
     let version = if plan.is_some() { VERSION_PLANNED } else { VERSION };
     f.write_all(&version.to_le_bytes())?;
     f.write_all(&(nt.len() as u32).to_le_bytes())?;
-    let mut check = 0xcbf29ce484222325u64;
+    let mut check = FNV1A_SEED;
     if let Some(p) = plan {
         let blob = p.to_bytes();
         // refuse at write time what every reader would reject as
@@ -166,7 +158,7 @@ pub fn load_with_plan(
         read_prelude(&mut f).with_context(|| format!("reading {}", path.display()))?;
 
     let mut out = NamedTensors::new();
-    let mut check = 0xcbf29ce484222325u64;
+    let mut check = FNV1A_SEED;
     let plan = if version == VERSION_PLANNED {
         let blob = read_plan_blob(&mut f)?;
         check = fnv1a(check, &blob);

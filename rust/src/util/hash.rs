@@ -1,0 +1,41 @@
+//! Non-cryptographic hashing shared across the crate: FNV-1a, used by
+//! checkpoint integrity checksums (`model::checkpoint`) and the
+//! serving pool's consistent adapter→worker assignment
+//! (`coordinator::pool::home_worker`). Deterministic across processes
+//! and runs — no per-process seed — which is exactly the property both
+//! call sites rely on.
+
+/// The FNV-1a 64-bit offset basis (the initial `state`).
+pub const FNV1A_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into an FNV-1a 64-bit state. Chainable: feed the
+/// result back as `state` to hash a sequence of byte blocks.
+pub fn fnv1a(state: u64, bytes: &[u8]) -> u64 {
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // standard FNV-1a test vectors (seeded with the offset basis)
+        assert_eq!(fnv1a(FNV1A_SEED, b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(FNV1A_SEED, b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(FNV1A_SEED, b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv1a_chains() {
+        let whole = fnv1a(FNV1A_SEED, b"hello world");
+        let chained = fnv1a(fnv1a(FNV1A_SEED, b"hello "), b"world");
+        assert_eq!(whole, chained);
+        assert_ne!(whole, fnv1a(FNV1A_SEED, b"hello_world"));
+    }
+}

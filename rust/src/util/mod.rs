@@ -3,6 +3,7 @@
 //! helpers, and timers. Everything above `util` builds on these.
 
 pub mod f16;
+pub mod hash;
 pub mod mathfn;
 pub mod rng;
 pub mod stats;

@@ -1,6 +1,8 @@
 //! Failure injection: the coordinator must fail loudly and precisely,
 //! never silently miscompute — missing artifacts, wrong shapes, wrong
-//! dtypes, corrupt checkpoints, oversized requests.
+//! dtypes, corrupt checkpoints, oversized requests, and a serving
+//! backend that panics mid-pool (the blast radius must stop at its
+//! worker).
 
 use irqlora::model::{checkpoint, weights::NamedTensors};
 use irqlora::runtime::{Dtype, GraphSpec, HostTensor, InputSpec, Manifest, Runtime};
@@ -139,4 +141,110 @@ fn server_rejects_oversized_prompt_without_crashing() {
     let ok = server.query("default", vec![1, 8, 70, 70, 4, 3]).unwrap();
     assert_eq!(ok.logits.len(), size.config.vocab);
     server.shutdown();
+}
+
+/// A backend panic must be contained to its pool worker: the pool
+/// marks that worker dead (with the reason in `PoolStats`), reroutes
+/// the worker's other adapters, and keeps serving them bit-identically
+/// — one poisoned tenant cannot take down its neighbours.
+#[test]
+fn pool_worker_death_is_isolated_and_rerouted() {
+    use irqlora::coordinator::backend::{ReferenceBackend, ServeBackend};
+    use irqlora::coordinator::pool::{home_worker, PoolConfig, ServerPool};
+    use irqlora::coordinator::AdapterRegistry;
+    use irqlora::util::Rng;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    const N_WORKERS: usize = 3;
+
+    fn adapter(seed: u64) -> NamedTensors {
+        let mut rng = Rng::new(seed);
+        let mut nt = NamedTensors::new();
+        nt.push("l0.wq.lora_a", Tensor::new(&[16, 4], rng.normal_vec(64, 0.0, 0.4)));
+        nt.push("l0.wq.lora_b", Tensor::new(&[4, 16], rng.normal_vec(64, 0.0, 0.4)));
+        nt.push("betas", Tensor::new(&[1, 7, 2], rng.normal_vec(14, 0.0, 0.4)));
+        nt
+    }
+
+    /// `ReferenceBackend` wrapper that panics when the poison adapter
+    /// id reaches the forward pass.
+    struct PoisonOnAdapter(ReferenceBackend);
+    impl ServeBackend for PoisonOnAdapter {
+        fn shape(&self) -> (usize, usize, usize) {
+            self.0.shape()
+        }
+        fn forward(
+            &mut self,
+            name: &str,
+            generation: u64,
+            weights: &Arc<NamedTensors>,
+            tokens: &[i32],
+        ) -> anyhow::Result<Vec<f32>> {
+            if name == "poison" {
+                panic!("injected backend fault for adapter '{name}'");
+            }
+            self.0.forward(name, generation, weights, tokens)
+        }
+    }
+
+    let mut base = NamedTensors::new();
+    base.push("embed", Tensor::full(&[8, 8], 0.25));
+    let registry = Arc::new(AdapterRegistry::with_capacity(base, (1.0, 1.0), 4));
+    registry.register("poison", adapter(1)).unwrap();
+    // healthy tenants, including one guaranteed to share the poison
+    // adapter's home worker (so rerouting is actually exercised)
+    let poison_home = home_worker("poison", N_WORKERS);
+    let mut healthy: Vec<String> = (0..4).map(|i| format!("h{i}")).collect();
+    let mate = (0..64)
+        .map(|i| format!("mate{i}"))
+        .find(|n| home_worker(n, N_WORKERS) == poison_home)
+        .expect("no adapter id hashed onto the poison worker");
+    healthy.push(mate.clone());
+    for (i, name) in healthy.iter().enumerate() {
+        registry.register(name, adapter(10 + i as u64)).unwrap();
+    }
+
+    let reg = registry.clone();
+    let pool = ServerPool::spawn_with(
+        PoolConfig::new(N_WORKERS, Duration::from_millis(1)),
+        registry,
+        move |_w| {
+            Ok(Box::new(PoisonOnAdapter(ReferenceBackend::new(4, 8, 12, reg.base())))
+                as Box<dyn ServeBackend>)
+        },
+    )
+    .unwrap();
+
+    // pre-death replies for every healthy tenant
+    let before: Vec<Vec<f32>> = healthy
+        .iter()
+        .map(|n| pool.query(n, vec![2, 3]).unwrap().logits)
+        .collect();
+    assert_eq!(pool.stats().alive(), N_WORKERS);
+
+    // the poison adapter kills its home worker — surfaced as an error,
+    // not a hang
+    let err = pool.query("poison", vec![1, 2, 3]).unwrap_err();
+    assert!(format!("{err:#}").contains("died"), "{err:#}");
+
+    let s = pool.stats();
+    assert_eq!(s.alive(), N_WORKERS - 1, "{s:?}");
+    let reason = s.workers[poison_home].dead.as_deref().unwrap_or_else(|| {
+        panic!("worker {poison_home} (the poison home) should be the dead one: {s:?}")
+    });
+    assert!(reason.contains("poison"), "{reason}");
+
+    // every healthy tenant keeps serving, bit-identical to pre-death —
+    // including the one whose home worker just died
+    for (name, want) in healthy.iter().zip(&before) {
+        let r = pool
+            .query(name, vec![2, 3])
+            .unwrap_or_else(|e| panic!("healthy adapter '{name}' failed after death: {e:#}"));
+        assert_eq!(&r.logits, want, "'{name}' changed answers after the worker death");
+    }
+    let s = pool.stats();
+    assert!(s.reroutes >= 1, "the dead worker's tenants were not rerouted: {s:?}");
+    assert_eq!(s.rejected, 0);
+    pool.shutdown();
 }

@@ -1,0 +1,403 @@
+//! Concurrency battery for the sharded serving pool and the registry
+//! it routes through — the PR-2/PR-3 claims (LRU eviction
+//! bit-identity, no cross-tenant contamination, generation tagging)
+//! exercised under *actual* multi-threaded contention.
+//!
+//! Everything runs offline on the deterministic `ReferenceBackend`:
+//! the shared base really goes through ICQ quantization, the merged
+//! cache is forced *below* the adapter count so eviction/re-merge
+//! races stay hot, and every pooled reply is compared bit-for-bit
+//! against a serially-computed single-`BatchServer` oracle.
+//!
+//! `scripts/verify.sh` runs this file a second time with
+//! `IRQLORA_SERVE_WORKERS=4` exported so the env-sized pool path is
+//! covered explicitly (the tests themselves also floor the worker
+//! count at 4).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use irqlora::coordinator::backend::{ReferenceBackend, ServeBackend};
+use irqlora::coordinator::pool::{home_worker, serve_workers, PoolConfig, ServerPool};
+use irqlora::coordinator::{quantize_model, AdapterRegistry, BatchServer, ServerConfig};
+use irqlora::lora::merge::merge_adapter;
+use irqlora::model::weights::NamedTensors;
+use irqlora::quant::Method;
+use irqlora::util::{Rng, Tensor};
+
+const BATCH: usize = 4;
+const SEQ: usize = 16;
+const VOCAB: usize = 24;
+const N_ADAPTERS: usize = 8;
+/// Merged-weight cache capacity — deliberately below [`N_ADAPTERS`]
+/// (the `IRQLORA_ADAPTER_CACHE=2` regime) so concurrent lookups keep
+/// evicting and re-merging each other's entries.
+const CACHE_CAP: usize = 2;
+
+fn tiny_base(seed: u64) -> NamedTensors {
+    let mut rng = Rng::new(seed);
+    let mut nt = NamedTensors::new();
+    nt.push("embed", Tensor::new(&[VOCAB, 32], rng.normal_vec(VOCAB * 32, 0.0, 0.02)));
+    nt.push("l0.wq", Tensor::new(&[32, 64], rng.normal_vec(32 * 64, 0.0, 0.02)));
+    nt.push("lm_head", Tensor::new(&[32, VOCAB], rng.normal_vec(32 * VOCAB, 0.0, 0.02)));
+    nt
+}
+
+fn tiny_adapter(seed: u64) -> NamedTensors {
+    let mut rng = Rng::new(seed);
+    let (h, r, o) = (32usize, 4usize, 64usize);
+    let mut nt = NamedTensors::new();
+    nt.push("l0.wq.lora_a", Tensor::new(&[h, r], rng.normal_vec(h * r, 0.0, 0.5)));
+    nt.push("l0.wq.lora_b", Tensor::new(&[r, o], rng.normal_vec(r * o, 0.0, 0.5)));
+    nt.push("betas", Tensor::new(&[1, 7, 2], rng.normal_vec(14, 0.0, 0.5)));
+    nt
+}
+
+/// Registry over an actually-ICQ-quantized base, with the merged
+/// cache forced below the adapter count.
+fn contended_registry(seed: u64) -> Arc<AdapterRegistry> {
+    let base = tiny_base(seed);
+    let qm = quantize_model(&base, Method::NfIcq { k: 4 }, seed ^ 1).unwrap();
+    let registry = Arc::new(AdapterRegistry::with_capacity(
+        qm.dequantized.clone(),
+        (1.0, 1.0),
+        CACHE_CAP,
+    ));
+    for i in 0..N_ADAPTERS {
+        registry
+            .register(&format!("tenant{i}"), tiny_adapter(100 + seed + i as u64))
+            .unwrap();
+    }
+    registry
+}
+
+fn reference_pool(
+    workers: usize,
+    registry: Arc<AdapterRegistry>,
+    delay: Duration,
+) -> ServerPool {
+    let reg = registry.clone();
+    ServerPool::spawn_with(
+        PoolConfig::new(workers, Duration::from_millis(2)),
+        registry,
+        move |_w| {
+            Ok(Box::new(
+                ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()).with_forward_delay(delay),
+            ) as Box<dyn ServeBackend>)
+        },
+    )
+    .unwrap()
+}
+
+/// The unique (adapter, prompt) stream every test thread replays.
+fn request_stream() -> Vec<(String, Vec<i32>)> {
+    (0..48)
+        .map(|i| {
+            let adapter = format!("tenant{}", i % N_ADAPTERS);
+            let len = 1 + (i * 5) % SEQ;
+            let prompt: Vec<i32> = (0..len)
+                .map(|t| ((i * 13 + t * 7) % (VOCAB - 1)) as i32 + 1)
+                .collect();
+            (adapter, prompt)
+        })
+        .collect()
+}
+
+/// ≥4 workers, 8 adapters, cache capacity 2: a storm of submitters
+/// replaying one request stream from different offsets. Every pooled
+/// reply must be bit-identical to the same (adapter, prompt) served
+/// serially by a single `BatchServer` — across worker shards, LRU
+/// evictions, re-merges, and mixed batches, no reply may ever see
+/// another adapter's weights or another batch's composition.
+#[test]
+fn pool_replies_bit_identical_to_serial_oracle_under_contention() {
+    let registry = contended_registry(11);
+    let stream = request_stream();
+
+    // oracle: one worker, every request served alone, in order
+    let mut expected: Vec<Vec<f32>> = Vec::with_capacity(stream.len());
+    {
+        let reg = registry.clone();
+        let solo = BatchServer::spawn_with(
+            ServerConfig { max_wait: Duration::from_millis(1) },
+            registry.clone(),
+            move || {
+                Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                    as Box<dyn ServeBackend>)
+            },
+        )
+        .unwrap();
+        for (adapter, prompt) in &stream {
+            expected.push(solo.query(adapter, prompt.clone()).unwrap().logits);
+        }
+        solo.shutdown();
+    }
+    // the oracle alone must already have churned the tiny cache
+    let oracle_evictions = registry.stats().evictions;
+    assert!(
+        oracle_evictions > 0,
+        "cache capacity {CACHE_CAP} did not force evictions: {:?}",
+        registry.stats()
+    );
+
+    let n_workers = serve_workers().max(4);
+    let pool = reference_pool(n_workers, registry.clone(), Duration::ZERO);
+    assert!(pool.workers() >= 4);
+
+    const SUBMITTERS: usize = 6;
+    let mismatches = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..SUBMITTERS {
+            let pool = &pool;
+            let stream = &stream;
+            let expected = &expected;
+            let mismatches = &mismatches;
+            scope.spawn(move || {
+                // each thread walks the stream from its own offset and
+                // keeps a window of async handles in flight
+                let mut inflight: Vec<(usize, irqlora::coordinator::Pending)> = Vec::new();
+                for k in 0..stream.len() {
+                    let i = (k + t * 7) % stream.len();
+                    let (adapter, prompt) = &stream[i];
+                    inflight.push((i, pool.submit_async(adapter, prompt.clone()).unwrap()));
+                    if inflight.len() >= 8 {
+                        for (j, h) in inflight.drain(..) {
+                            let r = h.wait().unwrap();
+                            if r.logits != expected[j] {
+                                mismatches.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+                for (j, h) in inflight.drain(..) {
+                    let r = h.wait().unwrap();
+                    if r.logits != expected[j] {
+                        mismatches.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(
+        mismatches.load(Ordering::Relaxed),
+        0,
+        "pooled replies diverged from the serial oracle"
+    );
+
+    let s = pool.stats();
+    let total = SUBMITTERS * stream.len();
+    assert_eq!(s.requests, total, "{s:?}");
+    assert_eq!(s.alive(), n_workers);
+    assert_eq!(s.queue_depth(), 0);
+    assert_eq!(s.rejected, 0);
+    assert_eq!(s.per_adapter.len(), N_ADAPTERS);
+    for i in 0..N_ADAPTERS {
+        assert_eq!(
+            s.per_adapter[&format!("tenant{i}")].requests,
+            total / N_ADAPTERS,
+            "{s:?}"
+        );
+    }
+    assert_eq!(s.workers.iter().map(|w| w.routed).sum::<usize>(), total);
+    // contention kept re-merging past the oracle's churn
+    assert!(
+        registry.stats().evictions > oracle_evictions,
+        "pooled run added no evictions: {:?}",
+        registry.stats()
+    );
+    pool.shutdown();
+}
+
+/// Shutdown drains: handles submitted (not yet replied) before
+/// `shutdown` all resolve with correct logits — none may hang or get
+/// dropped, even with a slow backend and requests queued on several
+/// workers.
+#[test]
+fn shutdown_drains_all_inflight_async_handles() {
+    let registry = contended_registry(23);
+    let stream = request_stream();
+
+    // oracle for the wave we will strand in flight
+    let mut expected: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
+    {
+        let reg = registry.clone();
+        let solo = BatchServer::spawn_with(
+            ServerConfig { max_wait: Duration::from_millis(1) },
+            registry.clone(),
+            move || {
+                Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                    as Box<dyn ServeBackend>)
+            },
+        )
+        .unwrap();
+        for i in 0..16 {
+            let (adapter, prompt) = &stream[i];
+            expected.insert(i, solo.query(adapter, prompt.clone()).unwrap().logits);
+        }
+        solo.shutdown();
+    }
+
+    let pool = reference_pool(
+        serve_workers().max(4),
+        registry,
+        Duration::from_millis(5), // keep the queues non-empty at shutdown
+    );
+    let handles: Vec<(usize, _)> = (0..16)
+        .map(|i| {
+            let (adapter, prompt) = &stream[i];
+            (i, pool.submit_async(adapter, prompt.clone()).unwrap())
+        })
+        .collect();
+    pool.shutdown(); // joins every worker; queued requests drain first
+    for (i, h) in handles {
+        let r = h
+            .wait()
+            .unwrap_or_else(|e| panic!("handle {i} lost in shutdown: {e:#}"));
+        assert_eq!(r.logits, expected[&i], "handle {i} got wrong logits");
+    }
+}
+
+/// Satellite regression (registry race): `merged_tagged` must never
+/// hand back a (generation, weights) pair that doesn't match — under
+/// a register/evict storm, every returned tensor must be bit-identical
+/// to the merge of exactly the source registered at the returned
+/// generation, and a completed re-register must not be bypassed by a
+/// lookup that finishes after it (the pre-fix code could return the
+/// previous generation's weights without retrying).
+#[test]
+fn registry_no_stale_generation_under_register_evict_storm() {
+    const SEEDS: u64 = 5;
+    const MASKS: (f32, f32) = (1.0, 1.0);
+    let registry = Arc::new(AdapterRegistry::with_capacity(tiny_base(31), MASKS, CACHE_CAP));
+
+    // expected merged weights per seed, computed serially up front
+    let expected: Vec<NamedTensors> = (0..SEEDS)
+        .map(|s| merge_adapter(&tiny_adapter(500 + s), MASKS).unwrap())
+        .collect();
+
+    registry.register("x", tiny_adapter(500)).unwrap();
+    let log: Arc<Mutex<BTreeMap<u64, u64>>> = Arc::new(Mutex::new(BTreeMap::new()));
+    log.lock()
+        .unwrap()
+        .insert(registry.generation("x").unwrap(), 0);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        // mutator: re-register (bumping the generation) and evict in a
+        // tight loop; the single mutator means generation("x") right
+        // after register is exactly the generation it created
+        {
+            let registry = registry.clone();
+            let log = log.clone();
+            let stop = stop.clone();
+            scope.spawn(move || {
+                for i in 1..=300u64 {
+                    let seed = i % SEEDS;
+                    registry.register("x", tiny_adapter(500 + seed)).unwrap();
+                    log.lock()
+                        .unwrap()
+                        .insert(registry.generation("x").unwrap(), seed);
+                    if i % 3 == 0 {
+                        registry.evict("x");
+                    }
+                }
+                stop.store(true, Ordering::Release);
+            });
+        }
+
+        for _ in 0..4 {
+            let registry = registry.clone();
+            let log = log.clone();
+            let stop = stop.clone();
+            let expected = &expected;
+            scope.spawn(move || {
+                let mut lookups = 0usize;
+                while !stop.load(Ordering::Acquire) || lookups == 0 {
+                    let (g, m) = registry.merged_tagged("x").unwrap();
+                    lookups += 1;
+                    // the mutator logs each generation right after
+                    // registering it; spin briefly for the log entry
+                    let t0 = Instant::now();
+                    let seed = loop {
+                        if let Some(s) = log.lock().unwrap().get(&g) {
+                            break *s;
+                        }
+                        assert!(
+                            t0.elapsed() < Duration::from_secs(5),
+                            "generation {g} was returned but never registered"
+                        );
+                        std::thread::yield_now();
+                    };
+                    let want = &expected[seed as usize];
+                    assert_eq!(m.names(), want.names(), "generation {g}");
+                    for (name, t) in want.iter() {
+                        assert_eq!(
+                            m.get(name).unwrap().data(),
+                            t.data(),
+                            "generation {g} ('{name}') returned weights that are not \
+                             the merge of the source registered at that generation"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    // steady state: the surviving entry is the final registration
+    let final_gen = registry.generation("x").unwrap();
+    let (g, m) = registry.merged_tagged("x").unwrap();
+    assert_eq!(g, final_gen, "post-storm lookup returned a stale generation");
+    let want = &expected[(300 % SEEDS) as usize];
+    for (name, t) in want.iter() {
+        assert_eq!(m.get(name).unwrap().data(), t.data(), "{name}");
+    }
+}
+
+/// The worker-count env knob must actually be honored: when
+/// `scripts/verify.sh` reruns this file with `IRQLORA_SERVE_WORKERS=4`
+/// exported, `serve_workers()` (and thus every `workers: 0` pool) must
+/// return exactly that value — without this assertion the rerun could
+/// not tell a broken knob from the `.max(4)` floor the other tests
+/// apply. Read-only env access; nothing here mutates process state.
+#[test]
+fn serve_workers_honors_env_when_set() {
+    if let Ok(v) = std::env::var("IRQLORA_SERVE_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if (1..=64).contains(&n) {
+                assert_eq!(
+                    serve_workers(),
+                    n,
+                    "IRQLORA_SERVE_WORKERS={v} was not honored"
+                );
+            }
+        }
+    }
+}
+
+/// Adapter-affinity sanity at the pool level: with no contention, an
+/// adapter's traffic lands entirely on `home_worker(adapter, N)`, so
+/// its merged-weight lookups always come from the same worker thread.
+#[test]
+fn affinity_routes_every_adapter_to_its_home_worker() {
+    let registry = contended_registry(47);
+    let n_workers = serve_workers().max(4);
+    let pool = reference_pool(n_workers, registry, Duration::ZERO);
+    for i in 0..N_ADAPTERS {
+        let name = format!("tenant{i}");
+        for round in 0..3 {
+            let h = pool.submit_async(&name, vec![1 + round as i32, 2]).unwrap();
+            assert_eq!(
+                h.worker(),
+                home_worker(&name, n_workers),
+                "{name} strayed off its home worker"
+            );
+            h.wait().unwrap();
+        }
+    }
+    let s = pool.stats();
+    assert_eq!(s.spills, 0, "uncontended traffic must not spill: {s:?}");
+    assert_eq!(s.reroutes, 0);
+    pool.shutdown();
+}

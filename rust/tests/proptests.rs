@@ -298,6 +298,43 @@ fn prop_gcd_properties() {
 }
 
 #[test]
+fn prop_pool_affinity_deterministic_and_balanced() {
+    use irqlora::coordinator::pool::home_worker;
+    // adapter-affinity routing must be a pure function of (adapter id,
+    // pool size) — stable across calls and processes — and a uniform
+    // population of adapter ids must spread within 2x of the ideal
+    // per-worker load (the consistent-hash quality the merged-weight
+    // and device-buffer caches rely on).
+    cases(20, 30, |seed, rng| {
+        let n = 1 + rng.below(8);
+        for _ in 0..32 {
+            let len = 1 + rng.below(24);
+            let id: String = (0..len)
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect();
+            let h = home_worker(&id, n);
+            assert!(h < n, "seed={seed} n={n} id={id}: {h} out of range");
+            assert_eq!(h, home_worker(&id, n), "seed={seed}: routing not deterministic");
+        }
+        // balance over distinct uniform ids
+        let per_worker = 200usize;
+        let mut counts = vec![0usize; n];
+        for i in 0..per_worker * n {
+            counts[home_worker(&format!("adapter-{seed}-{i}"), n)] += 1;
+        }
+        let max = counts.iter().copied().max().unwrap();
+        assert!(
+            max <= 2 * per_worker,
+            "seed={seed} n={n}: worst worker got {max} of ideal {per_worker}: {counts:?}"
+        );
+        if n > 1 {
+            let min = counts.iter().copied().min().unwrap();
+            assert!(min > 0, "seed={seed} n={n}: a worker got no adapters: {counts:?}");
+        }
+    });
+}
+
+#[test]
 fn prop_entropy_bounds_and_permutation_invariance() {
     cases(30, 10, |seed, rng| {
         let k = 2 + rng.below(3) as u8;

@@ -31,6 +31,13 @@ export IRQLORA_THREADS="${IRQLORA_THREADS:-4}"
 echo "== tier-1: cargo build --release && cargo test -q =="
 (cd rust && cargo build --release && cargo test -q)
 
+echo "== pool concurrency battery (IRQLORA_SERVE_WORKERS=4) =="
+# Re-run the sharded-serving tests with the worker-count env knob set
+# explicitly: the pool must honor IRQLORA_SERVE_WORKERS and the
+# eviction/re-merge races stay hot with 4 workers over a capacity-2
+# merged cache (the tests pin the cache capacity themselves).
+(cd rust && IRQLORA_SERVE_WORKERS=4 cargo test -q --test pool_concurrency)
+
 # Formatting gate. Advisory by default (the tree predates the check
 # and this container has no rustfmt to normalize it with); set
 # VERIFY_FMT_STRICT=1 to hard-fail once `cargo fmt` has run.
@@ -82,6 +89,11 @@ if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
     echo "verify.sh: ERROR: serve_latency smoke emitted no multi-adapter rows" >&2
     echo "verify.sh: (the multi-adapter server path should run without artifacts)" >&2
     exit 5
+  fi
+  if ! grep -q "serve_latency pool workers=2 worker=" "$SMOKE_JSON"; then
+    echo "verify.sh: ERROR: serve_latency smoke emitted no per-worker pool rows" >&2
+    echo "verify.sh: (the 2-worker reference-backend pool scenario should run without artifacts)" >&2
+    exit 7
   fi
 fi
 
