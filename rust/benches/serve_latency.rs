@@ -17,10 +17,21 @@
 //! - **Pool scale-out** (always runs): the same mixed-adapter offered
 //!   load against 1/2/4-worker `ServerPool`s sharing ONE registry
 //!   (`serve_latency pool workers=N adapters=K`: ns_per_iter = mean
-//!   request latency, per_sec = requests/s), plus per-worker routing
-//!   rows for the 2-worker pool (`... workers=2 worker=I`: iters =
-//!   requests routed there, per_sec = that worker's requests/s) that
+//!   request latency, per_sec = requests/s; fused + stealing, the
+//!   production defaults), plus per-worker routing rows for the
+//!   2-worker pool (`... workers=2 worker=I`: iters = requests routed
+//!   there, per_sec = that worker's requests/s) that
 //!   `scripts/verify.sh` asserts on.
+//! - **Fused vs per-group serial** (always runs): paired rows for the
+//!   mixed-adapter sweep at 1/4/8 adapters × 1/2/4 workers —
+//!   `serve_latency fused workers=W adapters=K` next to
+//!   `... [per-group serial]` (the pre-fusion oracle path) so the
+//!   before/after ratio of the one-forward-per-drain rewrite travels
+//!   with the code. `scripts/verify.sh` asserts both flavors exist.
+//! - **Steal on/off** (always runs): a skewed hot-adapter burst
+//!   against a 4-worker pool with the work-stealing scheduler on vs
+//!   off (`serve_latency pool steal=on|off workers=4 adapters=8`);
+//!   the printed table carries the steal/spill counters.
 //!
 //! Run: cargo bench --bench serve_latency
 
@@ -48,6 +59,8 @@ fn main() {
     }
     reference_multi_adapter(&mut sink);
     pool_scaling(&mut sink);
+    fused_vs_serial(&mut sink);
+    steal_on_off(&mut sink);
 
     let path = bench_json_path("BENCH_quant.json");
     match sink.write_merged(&path) {
@@ -85,7 +98,7 @@ fn pjrt_scenarios(manifest: Manifest, sink: &mut JsonSink) {
         BatchServer::spawn(
             manifest,
             tag,
-            ServerConfig { max_wait: Duration::from_millis(2) },
+            ServerConfig::new(Duration::from_millis(2)),
             registry,
         )
         .unwrap(),
@@ -169,7 +182,7 @@ fn reference_multi_adapter(sink: &mut JsonSink) {
     let reg = registry.clone();
     let server = Arc::new(
         BatchServer::spawn_with(
-            ServerConfig { max_wait: Duration::from_millis(2) },
+            ServerConfig::new(Duration::from_millis(2)),
             registry,
             move || {
                 Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
@@ -362,5 +375,202 @@ fn pool_scaling(sink: &mut JsonSink) {
             }
         }
         drop(pool); // BatchServer::drop joins each worker cleanly
+    }
+}
+
+/// Paired fused-vs-serial rows: the same mixed-adapter offered load at
+/// 1/4/8 adapters × 1/2/4 workers, once through the fused
+/// one-forward-per-drain path and once through the pre-fusion
+/// per-adapter-group serial oracle (`[per-group serial]` suffix, the
+/// PR-1 naming convention for kept reference paths). Stealing is off
+/// in BOTH arms so the pair isolates exactly the forward-call fusion.
+fn fused_vs_serial(sink: &mut JsonSink) {
+    const BATCH: usize = 8;
+    const SEQ: usize = 32;
+    const VOCAB: usize = 64;
+    let per_client = irqlora::bench_harness::iters(96).max(16);
+
+    println!(
+        "\nfused vs per-group serial (reference backend, {per_client} req/client, \
+         2 clients/worker):"
+    );
+    println!(
+        "{:>8} {:>9} {:>9} {:>12} {:>12} {:>11} {:>13}",
+        "workers", "adapters", "mode", "req/s", "mean ms", "fwd calls", "mean fused occ"
+    );
+    for &workers in &[1usize, 2, 4] {
+        for &n_adapters in &[1usize, 4, 8] {
+            let registry = synthetic_serve_registry(n_adapters, 11);
+            for &fused in &[true, false] {
+                let reg = registry.clone();
+                let mut cfg =
+                    PoolConfig::new(workers, Duration::from_millis(2)).no_steal();
+                if !fused {
+                    cfg = cfg.serial();
+                }
+                let pool = Arc::new(
+                    ServerPool::spawn_with(cfg, registry.clone(), move |_w| {
+                        Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                            as Box<dyn ServeBackend>)
+                    })
+                    .unwrap(),
+                );
+                let clients = 2 * workers;
+                let t = Timer::start();
+                let mut handles = Vec::new();
+                for c in 0..clients {
+                    let pool = pool.clone();
+                    handles.push(std::thread::spawn(move || {
+                        let mut rng = Rng::new(60 + c as u64);
+                        let mut total = Duration::ZERO;
+                        let mut fastest = Duration::MAX;
+                        let mut window = Vec::new();
+                        for i in 0..per_client {
+                            let adapter = format!("tenant{}", (c + i) % n_adapters);
+                            let len = 1 + rng.below(SEQ - 1);
+                            let prompt: Vec<i32> = (0..len)
+                                .map(|_| 1 + rng.below(VOCAB - 1) as i32)
+                                .collect();
+                            window.push(pool.submit_async(&adapter, prompt).unwrap());
+                            if window.len() >= 8 {
+                                for p in window.drain(..) {
+                                    let r = p.wait().unwrap();
+                                    total += r.latency;
+                                    fastest = fastest.min(r.latency);
+                                }
+                            }
+                        }
+                        for p in window.drain(..) {
+                            let r = p.wait().unwrap();
+                            total += r.latency;
+                            fastest = fastest.min(r.latency);
+                        }
+                        (total, fastest)
+                    }));
+                }
+                let results: Vec<_> =
+                    handles.into_iter().map(|h| h.join().unwrap()).collect();
+                let wall = t.elapsed_secs();
+                let n_req = clients * per_client;
+                let total: Duration = results.iter().map(|(t, _)| *t).sum();
+                let fastest = results
+                    .iter()
+                    .map(|(_, f)| *f)
+                    .min()
+                    .unwrap_or(Duration::ZERO);
+                let stats = pool.stats();
+                let fwd: usize = stats.batches;
+                let occ: f64 = stats
+                    .workers
+                    .iter()
+                    .map(|w| w.server.mean_fused_occupancy() * w.server.fused_batches as f64)
+                    .sum::<f64>()
+                    / stats.fused_batches.max(1) as f64;
+                println!(
+                    "{:>8} {:>9} {:>9} {:>12.1} {:>12.3} {:>11} {:>13.2}",
+                    workers,
+                    n_adapters,
+                    if fused { "fused" } else { "serial" },
+                    n_req as f64 / wall,
+                    total.as_secs_f64() / n_req as f64 * 1e3,
+                    fwd,
+                    occ,
+                );
+                let suffix = if fused { "" } else { " [per-group serial]" };
+                sink.push_raw(
+                    &format!(
+                        "serve_latency fused workers={workers} adapters={n_adapters}{suffix}"
+                    ),
+                    n_req,
+                    total.as_secs_f64() / n_req as f64 * 1e9,
+                    fastest.as_secs_f64() * 1e9,
+                    Some(n_req as f64 / wall),
+                );
+                drop(pool);
+            }
+        }
+    }
+}
+
+/// Steal on/off: a skewed burst (half the load on one hot adapter)
+/// against a 4-worker pool, once with the work-stealing scheduler and
+/// once with the legacy push-spill scheduler. Open-loop submission
+/// (handles harvested at the end) so the hot home worker really
+/// saturates past its park/spill threshold.
+fn steal_on_off(sink: &mut JsonSink) {
+    const BATCH: usize = 8;
+    const SEQ: usize = 32;
+    const VOCAB: usize = 64;
+    const WORKERS: usize = 4;
+    let n_adapters = 8usize;
+    let n_req = (irqlora::bench_harness::iters(384).max(64)).min(900);
+
+    let registry = synthetic_serve_registry(n_adapters, 13);
+    println!(
+        "\nwork stealing (reference backend, {WORKERS} workers, {n_adapters} adapters, \
+         {n_req} open-loop requests, 50% on one hot adapter):"
+    );
+    println!(
+        "{:>6} {:>12} {:>12} {:>8} {:>8} {:>9}",
+        "steal", "req/s", "mean ms", "steals", "spills", "reroutes"
+    );
+    for &steal in &[true, false] {
+        let reg = registry.clone();
+        let mut cfg = PoolConfig::new(WORKERS, Duration::from_millis(2));
+        if !steal {
+            cfg = cfg.no_steal();
+        }
+        let pool = ServerPool::spawn_with(cfg, registry.clone(), move |_w| {
+            Ok(Box::new(
+                ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base())
+                    .with_forward_delay(Duration::from_micros(300)),
+            ) as Box<dyn ServeBackend>)
+        })
+        .unwrap();
+        let mut rng = Rng::new(21);
+        let t = Timer::start();
+        let handles: Vec<_> = (0..n_req)
+            .map(|i| {
+                // every other request hammers tenant0; the rest spread
+                let adapter = if i % 2 == 0 {
+                    "tenant0".to_string()
+                } else {
+                    format!("tenant{}", 1 + i % (n_adapters - 1))
+                };
+                let len = 1 + rng.below(SEQ - 1);
+                let prompt: Vec<i32> =
+                    (0..len).map(|_| 1 + rng.below(VOCAB - 1) as i32).collect();
+                pool.submit_async(&adapter, prompt).unwrap()
+            })
+            .collect();
+        let mut total = Duration::ZERO;
+        let mut fastest = Duration::MAX;
+        for h in handles {
+            let r = h.wait().unwrap();
+            total += r.latency;
+            fastest = fastest.min(r.latency);
+        }
+        let wall = t.elapsed_secs();
+        let stats = pool.stats();
+        println!(
+            "{:>6} {:>12.1} {:>12.3} {:>8} {:>8} {:>9}",
+            if steal { "on" } else { "off" },
+            n_req as f64 / wall,
+            total.as_secs_f64() / n_req as f64 * 1e3,
+            stats.steals,
+            stats.spills,
+            stats.reroutes,
+        );
+        sink.push_raw(
+            &format!(
+                "serve_latency pool steal={} workers={WORKERS} adapters={n_adapters}",
+                if steal { "on" } else { "off" }
+            ),
+            n_req,
+            total.as_secs_f64() / n_req as f64 * 1e9,
+            fastest.as_secs_f64() * 1e9,
+            Some(n_req as f64 / wall),
+        );
+        pool.shutdown();
     }
 }

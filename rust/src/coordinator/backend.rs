@@ -5,20 +5,48 @@
 //! one backend per worker thread (N runtimes, N base uploads) while
 //! the registry's merged-weight cache stays shared.
 //!
+//! Two forward entry points:
+//!
+//! - [`ServeBackend::forward`] — one adapter, one padded batch (the
+//!   pre-fusion contract, kept as the per-group serial oracle);
+//! - [`ServeBackend::forward_fused`] — ONE padded `[batch, seq]` call
+//!   for a drained batch that spans several adapters, each adapter
+//!   owning a contiguous row span ([`AdapterGroup`]). The contract is
+//!   bit-identity with running each group alone through `forward` and
+//!   scattering the rows back; the default implementation does exactly
+//!   that scatter, so engines that are inherently one-adapter-per-call
+//!   inherit a correct fused path.
+//!
+//! Backends key adapter-side caches by `(name, generation)` — the
+//! registry bumps the generation on every re-register, so the key can
+//! never alias stale weights (no pointer-ABA), while evict/re-merge of
+//! an unchanged source keeps its generation and its cached state:
+//!
 //! - [`PjrtBackend`] runs the manifest's `forward` graph on a PJRT
 //!   runtime it **owns** (an [`OwnedExecutor`] — the worker no longer
 //!   `Box::leak`s a `Runtime` per spawn). The shared base uploads to
-//!   the device once; the active adapter's merged tensors upload on
-//!   adapter switch and are reused while consecutive batches stay on
-//!   one adapter.
+//!   the device once; merged adapter tensors live in a
+//!   generation-keyed device-buffer LRU ([`device_cache_capacity`],
+//!   env `IRQLORA_DEVICE_CACHE`, default = the registry's merged-cache
+//!   size) so alternating tenants stop re-uploading on every switch.
+//!   Note the PJRT graph takes ONE adapter's weights per call, so a
+//!   mixed batch always *executes* group by group (the inherited
+//!   scatter); what the cache changes is the upload step — a hit
+//!   executes straight from resident buffers, a miss uploads first
+//!   (both counted in [`UploadStats`]). A true single-launch
+//!   multi-adapter graph is a ROADMAP next step.
 //! - [`ReferenceBackend`] is a deterministic host-side stand-in (no
 //!   artifacts, no PJRT — it works in the offline stub build): logits
 //!   are a fixed synthetic function of the shared base, the adapter
 //!   weights, and the token prefix. Not a transformer — it exists to
 //!   give routing tests and the offline bench smoke exactly the
 //!   properties they check: adapter-sensitivity, prompt-sensitivity,
-//!   and bit-exact determinism.
+//!   and bit-exact determinism. Its `forward_fused` is a true
+//!   single-pass implementation (per-row adapter fingerprint
+//!   selection), and its fingerprint cache mirrors the device-buffer
+//!   cache's keying/counters so the plumbing is covered offline.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -27,8 +55,111 @@ use crate::data::PAD;
 use crate::model::weights::NamedTensors;
 use crate::runtime::{Manifest, OwnedExecutor, Runtime};
 
-/// A batched forward engine: given one adapter's merged weights and a
-/// padded `[batch, seq]` token matrix, produce `[batch, seq, vocab]`
+/// One adapter's slice of a fused mixed-adapter batch: the merged
+/// serving weights (tagged with their registry generation) and the
+/// contiguous row span the adapter's requests occupy in the padded
+/// `[batch, seq]` token matrix.
+#[derive(Clone)]
+pub struct AdapterGroup {
+    /// Adapter name (cache key part 1).
+    pub name: String,
+    /// Registry registration generation (cache key part 2).
+    pub generation: u64,
+    /// Merged (Eq. 16/17-folded) serving tensors.
+    pub weights: Arc<NamedTensors>,
+    /// Rows of the fused token matrix owned by this adapter.
+    pub rows: std::ops::Range<usize>,
+}
+
+/// Adapter-side cache counters: [`PjrtBackend`]'s device-buffer
+/// upload LRU, mirrored by [`ReferenceBackend`]'s fingerprint cache so
+/// the counter plumbing is exercised offline. Monotonic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct UploadStats {
+    /// Forwards whose adapter-side state was already resident.
+    pub hits: usize,
+    /// Forwards that had to upload (PJRT) / recompute (reference) it.
+    pub misses: usize,
+}
+
+/// Device-buffer cache capacity cap (mirrors the registry's cap).
+const DEVICE_CACHE_MAX: usize = 4096;
+
+/// Resolve the per-worker adapter device-buffer cache capacity: the
+/// `IRQLORA_DEVICE_CACHE` override, else the registry's merged-cache
+/// size ([`super::registry::cache_capacity`]) — one device slot per
+/// host-cached merge, so a tenant set that fits the merge cache also
+/// fits the device. Caveat: device memory is a SEPARATE budget from
+/// host RAM — an operator who raises `IRQLORA_ADAPTER_CACHE` for a
+/// large host cache should set `IRQLORA_DEVICE_CACHE` explicitly to
+/// what the accelerator can actually hold (this knob exists precisely
+/// to decouple the two tiers).
+pub fn device_cache_capacity() -> usize {
+    std::env::var("IRQLORA_DEVICE_CACHE")
+        .ok()
+        .and_then(|v| parse_device_cache_override(&v))
+        .unwrap_or_else(super::registry::cache_capacity)
+}
+
+/// Interpret an `IRQLORA_DEVICE_CACHE` value: positive integers are
+/// honored (capped at 4096); zero and garbage are ignored. Pure so it
+/// is testable without process-global env mutation.
+fn parse_device_cache_override(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n.min(DEVICE_CACHE_MAX)),
+        _ => None,
+    }
+}
+
+/// Tiny `(adapter name, generation)`-keyed LRU shared by the PJRT
+/// device-buffer cache and the reference fingerprint cache — ONE
+/// implementation of the touch/insert/evict/counter logic, so the
+/// offline tests really exercise the same aging the device path uses.
+/// Linear scan: capacities are small (≤4096) and lookups happen once
+/// per forward, not per element.
+struct KeyedLru<V> {
+    /// front = coldest, back = hottest.
+    entries: VecDeque<((String, u64), V)>,
+    cap: usize,
+    stats: UploadStats,
+}
+
+impl<V> KeyedLru<V> {
+    fn new(cap: usize) -> KeyedLru<V> {
+        KeyedLru { entries: VecDeque::new(), cap: cap.max(1), stats: UploadStats::default() }
+    }
+
+    /// Hit path: move the entry to the hottest slot, count the hit,
+    /// and return its index (valid until the next mutation).
+    fn touch(&mut self, name: &str, generation: u64) -> Option<usize> {
+        let pos = self
+            .entries
+            .iter()
+            .position(|((n, g), _)| n == name && *g == generation)?;
+        let entry = self.entries.remove(pos).unwrap();
+        self.entries.push_back(entry);
+        self.stats.hits += 1;
+        Some(self.entries.len() - 1)
+    }
+
+    /// Miss path: insert as hottest, count the miss, evict the coldest
+    /// beyond capacity, and return the new entry's index.
+    fn insert(&mut self, name: &str, generation: u64, value: V) -> usize {
+        self.stats.misses += 1;
+        self.entries.push_back(((name.to_string(), generation), value));
+        while self.entries.len() > self.cap {
+            self.entries.pop_front();
+        }
+        self.entries.len() - 1
+    }
+
+    fn get(&self, idx: usize) -> &V {
+        &self.entries[idx].1
+    }
+}
+
+/// A batched forward engine: given adapter weights and a padded
+/// `[batch, seq]` token matrix, produce `[batch, seq, vocab]`
 /// next-token logits.
 pub trait ServeBackend {
     /// (max rows per forward call, padded sequence length, vocab).
@@ -46,6 +177,80 @@ pub trait ServeBackend {
         weights: &Arc<NamedTensors>,
         tokens: &[i32],
     ) -> Result<Vec<f32>>;
+
+    /// Run ONE padded `[batch, seq]` forward for a drained batch that
+    /// spans multiple adapters: `groups` assigns each adapter its
+    /// contiguous row span inside `tokens`, and row `b` of the
+    /// returned `[batch, seq, vocab]` logits is computed under the
+    /// weights of the group owning `b` (rows owned by no group are
+    /// unspecified padding).
+    ///
+    /// Contract: bit-identical to running each group alone through
+    /// [`Self::forward`] (rows packed from 0, the rest PAD) and
+    /// scattering the rows back. The default implementation does
+    /// exactly that scatter, so engines whose execution is inherently
+    /// per-adapter (one weight set per graph call, e.g.
+    /// [`PjrtBackend`]) inherit a correct fused path and win through
+    /// adapter-side caching instead; [`ReferenceBackend`] overrides it
+    /// with a true single-pass implementation.
+    fn forward_fused(&mut self, groups: &[AdapterGroup], tokens: &[i32]) -> Result<Vec<f32>> {
+        let (batch, seq, vocab) = self.shape();
+        if tokens.len() != batch * seq {
+            bail!(
+                "token matrix has {} elems, expected batch*seq = {}",
+                tokens.len(),
+                batch * seq
+            );
+        }
+        // dominant case under affinity routing: the whole drain is one
+        // adapter packed from row 0 — the fused matrix already IS the
+        // per-group layout, so skip the scatter buffers entirely
+        if let [g] = groups {
+            if g.rows.start == 0 {
+                if g.rows.end > batch {
+                    bail!(
+                        "adapter group '{}' rows {}..{} exceed batch {batch}",
+                        g.name,
+                        g.rows.start,
+                        g.rows.end
+                    );
+                }
+                return self.forward(&g.name, g.generation, &g.weights, tokens);
+            }
+        }
+        let mut out = vec![0f32; batch * seq * vocab];
+        let mut group_toks = vec![PAD; batch * seq];
+        for g in groups {
+            if g.rows.end > batch {
+                bail!(
+                    "adapter group '{}' rows {}..{} exceed batch {batch}",
+                    g.name,
+                    g.rows.start,
+                    g.rows.end
+                );
+            }
+            for t in group_toks.iter_mut() {
+                *t = PAD;
+            }
+            for (i, row) in g.rows.clone().enumerate() {
+                group_toks[i * seq..(i + 1) * seq]
+                    .copy_from_slice(&tokens[row * seq..(row + 1) * seq]);
+            }
+            let logits = self.forward(&g.name, g.generation, &g.weights, &group_toks)?;
+            for (i, row) in g.rows.clone().enumerate() {
+                out[row * seq * vocab..(row + 1) * seq * vocab]
+                    .copy_from_slice(&logits[i * seq * vocab..(i + 1) * seq * vocab]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Adapter-side cache counters so far (uploads for PJRT,
+    /// fingerprint recomputes for the reference stand-in). Default:
+    /// zeros, for backends without such a cache.
+    fn upload_stats(&self) -> UploadStats {
+        UploadStats::default()
+    }
 }
 
 /// PJRT-backed [`ServeBackend`] over the manifest's `forward` graph.
@@ -53,14 +258,13 @@ pub struct PjrtBackend {
     exe: OwnedExecutor,
     base_bufs: Vec<xla::PjRtBuffer>,
     mask_bufs: [xla::PjRtBuffer; 2],
-    adapter_bufs: Vec<xla::PjRtBuffer>,
-    /// (adapter name, registration generation) the device-side
-    /// adapter buffers currently hold; both must match to reuse. The
-    /// generation is bumped by the registry on every re-register, so
-    /// — unlike a pointer address — it cannot collide after a
-    /// drop/realloc; and since merges of one generation are
-    /// bit-identical, reuse across evict/re-merge is exact.
-    cached: Option<(String, u64)>,
+    /// Generation-keyed device-buffer LRU: `(name, generation)` → the
+    /// adapter's uploaded tensors. The generation is bumped by the
+    /// registry on every re-register, so — unlike a pointer address —
+    /// a key cannot alias stale weights after a drop/realloc; and
+    /// since merges of one generation are bit-identical, reuse across
+    /// evict/re-merge is exact.
+    device_cache: KeyedLru<Vec<xla::PjRtBuffer>>,
     nb: usize,
     nl: usize,
     batch: usize,
@@ -73,6 +277,7 @@ impl PjrtBackend {
     /// the returned value) and upload the shared base once. The IEC
     /// mask inputs are pinned to 0: registry adapters arrive
     /// pre-merged (Eq. 16/17), so the elastic path is off at serving.
+    /// The adapter device cache is sized by [`device_cache_capacity`].
     pub fn new(manifest: &Manifest, tag: &str, base: &NamedTensors) -> Result<PjrtBackend> {
         let spec = manifest.graph(tag, "forward")?;
         let cfg = &manifest.size(tag)?.config;
@@ -97,14 +302,39 @@ impl PjrtBackend {
             exe,
             base_bufs,
             mask_bufs,
-            adapter_bufs: Vec::new(),
-            cached: None,
+            device_cache: KeyedLru::new(device_cache_capacity()),
             nb,
             nl,
             batch: cfg.batch,
             seq: cfg.seq,
             vocab: cfg.vocab,
         })
+    }
+
+    /// Make `(name, generation)`'s buffers resident (uploading on a
+    /// miss, touching the LRU on a hit) and return their cache index —
+    /// always the hottest (back) slot.
+    fn ensure_uploaded(
+        &mut self,
+        name: &str,
+        generation: u64,
+        weights: &Arc<NamedTensors>,
+    ) -> Result<usize> {
+        if weights.len() != self.nl {
+            bail!(
+                "adapter '{name}' has {} tensors, forward graph expects {}",
+                weights.len(),
+                self.nl
+            );
+        }
+        if let Some(idx) = self.device_cache.touch(name, generation) {
+            return Ok(idx);
+        }
+        let mut bufs = Vec::with_capacity(self.nl);
+        for (i, t) in weights.tensors().iter().enumerate() {
+            bufs.push(self.exe.upload_f32(self.nb + i, t.data())?);
+        }
+        Ok(self.device_cache.insert(name, generation, bufs))
     }
 }
 
@@ -120,27 +350,12 @@ impl ServeBackend for PjrtBackend {
         weights: &Arc<NamedTensors>,
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
-        if weights.len() != self.nl {
-            bail!(
-                "adapter '{name}' has {} tensors, forward graph expects {}",
-                weights.len(),
-                self.nl
-            );
-        }
-        let reuse =
-            matches!(&self.cached, Some((n, g)) if n == name && *g == generation);
-        if !reuse {
-            self.cached = None;
-            self.adapter_bufs.clear();
-            for (i, t) in weights.tensors().iter().enumerate() {
-                self.adapter_bufs.push(self.exe.upload_f32(self.nb + i, t.data())?);
-            }
-            self.cached = Some((name.to_string(), generation));
-        }
+        let idx = self.ensure_uploaded(name, generation, weights)?;
         let tok = self.exe.upload_i32(self.nb + self.nl + 2, tokens)?;
+        let adapter_bufs = self.device_cache.get(idx);
         let mut all: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.nb + self.nl + 3);
         all.extend(self.base_bufs.iter());
-        all.extend(self.adapter_bufs.iter());
+        all.extend(adapter_bufs.iter());
         all.push(&self.mask_bufs[0]);
         all.push(&self.mask_bufs[1]);
         all.push(&tok);
@@ -150,6 +365,15 @@ impl ServeBackend for PjrtBackend {
             .context("forward graph returned no outputs")?
             .into_f32()
     }
+
+    // forward_fused: the default per-group scatter — the graph takes
+    // one adapter's weight set per call, so a mixed batch executes
+    // group by group; the device cache (warmed across batches AND
+    // across groups of one batch) is what removes the re-upload cost.
+
+    fn upload_stats(&self) -> UploadStats {
+        self.device_cache.stats
+    }
 }
 
 /// Deterministic host-side [`ServeBackend`] for routing tests and the
@@ -158,12 +382,19 @@ impl ServeBackend for PjrtBackend {
 /// and the weighted non-PAD token prefix of row `b` up to `t` — rows
 /// are independent, so a request's logits cannot depend on its
 /// batchmates, and any change to adapter weights or prompt moves the
-/// output.
+/// output. (Row independence is also why its single-pass
+/// `forward_fused` is bit-identical to the per-group serial path.)
 pub struct ReferenceBackend {
     batch: usize,
     seq: usize,
     vocab: usize,
+    /// Base fingerprint, reduced once at construction.
     base_fp: f64,
+    /// `(name, generation)` → adapter fingerprint. The same
+    /// [`KeyedLru`] the PJRT device-buffer cache uses (safe because
+    /// one generation's merged weights are bit-identical), so serving
+    /// stops re-reducing every adapter tensor on every forward.
+    fp_cache: KeyedLru<f64>,
     /// Artificial per-forward latency, for tests that need requests to
     /// pile up behind a busy worker (shutdown/in-flight coverage).
     pub forward_delay: std::time::Duration,
@@ -177,6 +408,7 @@ impl ReferenceBackend {
             seq,
             vocab,
             base_fp: fingerprint(base),
+            fp_cache: KeyedLru::new(device_cache_capacity()),
             forward_delay: std::time::Duration::ZERO,
         }
     }
@@ -186,6 +418,39 @@ impl ReferenceBackend {
     pub fn with_forward_delay(mut self, delay: std::time::Duration) -> ReferenceBackend {
         self.forward_delay = delay;
         self
+    }
+
+    /// Cached adapter fingerprint (computed on miss, LRU-touched on
+    /// hit) — the reference analogue of [`PjrtBackend::ensure_uploaded`].
+    fn adapter_fp(&mut self, name: &str, generation: u64, weights: &Arc<NamedTensors>) -> f64 {
+        if let Some(idx) = self.fp_cache.touch(name, generation) {
+            return *self.fp_cache.get(idx);
+        }
+        let fp = fingerprint(weights);
+        self.fp_cache.insert(name, generation, fp);
+        fp
+    }
+
+    /// Fill one row's `[seq, vocab]` logits. Shared verbatim by
+    /// `forward` and `forward_fused` so the two paths cannot drift
+    /// even by a rounding step.
+    fn row_into(&self, afp: f64, row_tokens: &[i32], out_row: &mut [f32]) {
+        debug_assert_eq!(row_tokens.len(), self.seq);
+        debug_assert_eq!(out_row.len(), self.seq * self.vocab);
+        let mut prefix = 0f64;
+        for t in 0..self.seq {
+            let tok = row_tokens[t];
+            if tok != PAD {
+                prefix += (t as f64 + 1.0) * (tok as f64 + 1.0);
+            }
+            let row = &mut out_row[t * self.vocab..(t + 1) * self.vocab];
+            for (v, slot) in row.iter_mut().enumerate() {
+                *slot = (1e-3 * self.base_fp
+                    + 1e-2 * afp * ((v % 31) as f64 + 1.0)
+                    + 1e-4 * prefix * ((v % 7) as f64 + 1.0))
+                    as f32;
+            }
+        }
     }
 }
 
@@ -210,8 +475,8 @@ impl ServeBackend for ReferenceBackend {
 
     fn forward(
         &mut self,
-        _name: &str,
-        _generation: u64,
+        name: &str,
+        generation: u64,
         weights: &Arc<NamedTensors>,
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
@@ -225,26 +490,63 @@ impl ServeBackend for ReferenceBackend {
         if !self.forward_delay.is_zero() {
             std::thread::sleep(self.forward_delay);
         }
-        let afp = fingerprint(weights);
+        let afp = self.adapter_fp(name, generation, weights);
         let mut out = vec![0f32; self.batch * self.seq * self.vocab];
         for b in 0..self.batch {
-            let mut prefix = 0f64;
-            for t in 0..self.seq {
-                let tok = tokens[b * self.seq + t];
-                if tok != PAD {
-                    prefix += (t as f64 + 1.0) * (tok as f64 + 1.0);
-                }
-                let row = &mut out
-                    [(b * self.seq + t) * self.vocab..(b * self.seq + t + 1) * self.vocab];
-                for (v, slot) in row.iter_mut().enumerate() {
-                    *slot = (1e-3 * self.base_fp
-                        + 1e-2 * afp * ((v % 31) as f64 + 1.0)
-                        + 1e-4 * prefix * ((v % 7) as f64 + 1.0))
-                        as f32;
-                }
+            self.row_into(
+                afp,
+                &tokens[b * self.seq..(b + 1) * self.seq],
+                &mut out[b * self.seq * self.vocab..(b + 1) * self.seq * self.vocab],
+            );
+        }
+        Ok(out)
+    }
+
+    /// True single-pass fused forward: resolve each group's adapter
+    /// fingerprint (cached), then fill every row under its owner's
+    /// fingerprint. One `forward_delay` sleep per fused batch — one
+    /// "launch", however many adapters ride in it.
+    fn forward_fused(&mut self, groups: &[AdapterGroup], tokens: &[i32]) -> Result<Vec<f32>> {
+        if tokens.len() != self.batch * self.seq {
+            bail!(
+                "token matrix has {} elems, expected batch*seq = {}",
+                tokens.len(),
+                self.batch * self.seq
+            );
+        }
+        for g in groups {
+            if g.rows.end > self.batch {
+                bail!(
+                    "adapter group '{}' rows {}..{} exceed batch {}",
+                    g.name,
+                    g.rows.start,
+                    g.rows.end,
+                    self.batch
+                );
+            }
+        }
+        if !self.forward_delay.is_zero() {
+            std::thread::sleep(self.forward_delay);
+        }
+        let fps: Vec<f64> = groups
+            .iter()
+            .map(|g| self.adapter_fp(&g.name, g.generation, &g.weights))
+            .collect();
+        let mut out = vec![0f32; self.batch * self.seq * self.vocab];
+        for (g, &afp) in groups.iter().zip(&fps) {
+            for row in g.rows.clone() {
+                self.row_into(
+                    afp,
+                    &tokens[row * self.seq..(row + 1) * self.seq],
+                    &mut out[row * self.seq * self.vocab..(row + 1) * self.seq * self.vocab],
+                );
             }
         }
         Ok(out)
+    }
+
+    fn upload_stats(&self) -> UploadStats {
+        self.fp_cache.stats
     }
 }
 
@@ -274,6 +576,16 @@ mod tests {
     }
 
     #[test]
+    fn device_cache_env_parsing() {
+        assert_eq!(parse_device_cache_override("2"), Some(2));
+        assert_eq!(parse_device_cache_override(" 16 "), Some(16));
+        assert_eq!(parse_device_cache_override("999999"), Some(4096)); // capped
+        assert_eq!(parse_device_cache_override("0"), None);
+        assert_eq!(parse_device_cache_override("nope"), None);
+        assert!(device_cache_capacity() >= 1);
+    }
+
+    #[test]
     fn reference_backend_contract() {
         let base = named(3, 32);
         let mut be = ReferenceBackend::new(2, 4, 8, &base);
@@ -294,5 +606,113 @@ mod tests {
         assert_eq!(l1[4 * 8..], l2[4 * 8..], "row 1 must not see row 0's change");
         // wrong token-matrix size is rejected
         assert!(be.forward("a", 0, &w1, &[1, 2, 3]).is_err());
+        // the fingerprint cache served the repeats without recomputing
+        let s = be.upload_stats();
+        assert_eq!(s.misses, 2, "{s:?}"); // one per (name, generation)
+        assert!(s.hits >= 2, "{s:?}");
+    }
+
+    /// The heart of the fused contract: a mixed-adapter fused forward
+    /// must be bit-identical, row for row, to each group served alone
+    /// through the per-group serial path.
+    #[test]
+    fn reference_fused_bit_identical_to_per_group_serial() {
+        let base = named(7, 48);
+        let (batch, seq, vocab) = (5usize, 4usize, 6usize);
+        let w: Vec<Arc<NamedTensors>> =
+            (0..3).map(|i| Arc::new(named(10 + i, 24))).collect();
+
+        // fused batch: adapter 0 owns rows 0..2, adapter 1 rows 2..3,
+        // adapter 2 rows 3..5 (row 4 padded inside the group span)
+        let mut tokens = vec![PAD; batch * seq];
+        for (row, len) in [(0usize, 3usize), (1, 1), (2, 4), (3, 2), (4, 3)] {
+            for t in 0..len {
+                tokens[row * seq + t] = (row * 7 + t * 3 + 1) as i32;
+            }
+        }
+        let groups: Vec<AdapterGroup> = [(0usize, 0usize..2), (1, 2..3), (2, 3..5)]
+            .into_iter()
+            .map(|(i, rows)| AdapterGroup {
+                name: format!("t{i}"),
+                generation: i as u64,
+                weights: w[i].clone(),
+                rows,
+            })
+            .collect();
+
+        let mut fused_be = ReferenceBackend::new(batch, seq, vocab, &base);
+        let fused = fused_be.forward_fused(&groups, &tokens).unwrap();
+        assert_eq!(fused.len(), batch * seq * vocab);
+
+        let mut serial_be = ReferenceBackend::new(batch, seq, vocab, &base);
+        for g in &groups {
+            // serial path: the group's rows packed from 0, rest PAD
+            let mut gt = vec![PAD; batch * seq];
+            for (i, row) in g.rows.clone().enumerate() {
+                gt[i * seq..(i + 1) * seq].copy_from_slice(&tokens[row * seq..(row + 1) * seq]);
+            }
+            let logits = serial_be
+                .forward(&g.name, g.generation, &g.weights, &gt)
+                .unwrap();
+            for (i, row) in g.rows.clone().enumerate() {
+                let f = &fused[row * seq * vocab..(row + 1) * seq * vocab];
+                let s = &logits[i * seq * vocab..(i + 1) * seq * vocab];
+                for (a, b) in f.iter().zip(s) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "row {row} of '{}'", g.name);
+                }
+            }
+        }
+
+        // the default scatter implementation agrees too (it is what
+        // PjrtBackend inherits) — compare through a wrapper that hides
+        // the override
+        struct NoOverride(ReferenceBackend);
+        impl ServeBackend for NoOverride {
+            fn shape(&self) -> (usize, usize, usize) {
+                self.0.shape()
+            }
+            fn forward(
+                &mut self,
+                name: &str,
+                generation: u64,
+                weights: &Arc<NamedTensors>,
+                tokens: &[i32],
+            ) -> Result<Vec<f32>> {
+                self.0.forward(name, generation, weights, tokens)
+            }
+        }
+        let mut default_be = NoOverride(ReferenceBackend::new(batch, seq, vocab, &base));
+        let scattered = default_be.forward_fused(&groups, &tokens).unwrap();
+        for g in &groups {
+            for row in g.rows.clone() {
+                let a = &fused[row * seq * vocab..(row + 1) * seq * vocab];
+                let b = &scattered[row * seq * vocab..(row + 1) * seq * vocab];
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "default scatter row {row}");
+                }
+            }
+        }
+        // out-of-range group rows are rejected, not misindexed
+        let bad = AdapterGroup {
+            name: "t0".into(),
+            generation: 0,
+            weights: w[0].clone(),
+            rows: 4..batch + 1,
+        };
+        assert!(fused_be.forward_fused(&[bad], &tokens).is_err());
+    }
+
+    #[test]
+    fn fingerprint_cache_keys_by_name_and_generation() {
+        let base = named(20, 16);
+        let mut be = ReferenceBackend::new(1, 2, 4, &base);
+        let w = Arc::new(named(21, 8));
+        let toks = vec![1, 2];
+        be.forward("a", 0, &w, &toks).unwrap();
+        be.forward("a", 0, &w, &toks).unwrap(); // hit
+        be.forward("a", 1, &w, &toks).unwrap(); // new generation: miss
+        be.forward("b", 0, &w, &toks).unwrap(); // new name: miss
+        let s = be.upload_stats();
+        assert_eq!((s.hits, s.misses), (1, 3), "{s:?}");
     }
 }

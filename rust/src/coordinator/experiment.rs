@@ -216,11 +216,17 @@ pub fn synthetic_serve_registry(
 }
 
 /// [`serve_registry`] scaled out: one shared registry under an
-/// N-worker PJRT [`ServerPool`] (each worker owns its runtime and
-/// uploads the base once; merged adapters are computed once in the
-/// shared LRU cache). Returns the registry alongside the pool so
-/// callers can register/evict adapters while it serves. This is the
-/// engine behind `irqlora serve --workers N`.
+/// N-worker PJRT [`ServerPool`] (each worker owns its runtime,
+/// uploads the base once, and keeps a generation-keyed device-buffer
+/// LRU of merged adapters; merged weights are computed once in the
+/// shared LRU cache). Workers serve each drained batch with one fused
+/// mixed-adapter forward and steal parked work from saturated
+/// siblings when idle — both defaults of `cfg`
+/// (`PoolConfig::{fused, steal}`); `cfg.serial()` / `cfg.no_steal()`
+/// pin the pre-fusion per-group path and the legacy push-spill
+/// scheduler. Returns the registry alongside the pool so callers can
+/// register/evict adapters while it serves. This is the engine behind
+/// `irqlora serve --workers N [--no-fused] [--no-steal]`.
 pub fn serve_pool(
     manifest: Manifest,
     tag: &str,

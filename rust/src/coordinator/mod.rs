@@ -8,11 +8,13 @@
 //! - [`registry`]: named IEC-LoRA adapters over one shared
 //!   dequantized base (LRU-cached merged weights);
 //! - [`backend`]: serving forward engines (PJRT-owning + offline
-//!   reference);
+//!   reference), with fused mixed-adapter forwards and
+//!   generation-keyed adapter device caches;
 //! - [`server`]: multi-adapter dynamic-batching inference server
-//!   (one worker);
+//!   (one worker, one fused forward per drained batch);
 //! - [`pool`]: N server workers sharded over one registry, with
-//!   adapter-affinity routing and async submission;
+//!   adapter-affinity routing, work stealing between idle workers,
+//!   and async submission;
 //! - [`experiment`]: per-table-row orchestration with run caching.
 
 pub mod backend;
@@ -24,14 +26,17 @@ pub mod registry;
 pub mod server;
 pub mod trainer;
 
-pub use backend::{PjrtBackend, ReferenceBackend, ServeBackend};
+pub use backend::{
+    device_cache_capacity, AdapterGroup, PjrtBackend, ReferenceBackend, ServeBackend,
+    UploadStats,
+};
 pub use evaluator::{EvalResult, Evaluator};
 pub use experiment::{
     plan_quantized, pretrained_base, run_arm, serve_pool, serve_registry,
     synthetic_serve_registry, Arm, ArmResult, RunCfg,
 };
-pub use pool::{Pending, PoolConfig, PoolStats, PoolWorkerStats, ServerPool};
+pub use pool::{serve_steal, Pending, PoolConfig, PoolStats, PoolWorkerStats, ServerPool};
 pub use quantize::{quantize_model, quantize_model_planned, QuantizedModel};
 pub use registry::{AdapterRegistry, RegistryStats};
-pub use server::{BatchServer, Reply, ServerConfig, ServerStats, SubmitError};
+pub use server::{fused_slot_plan, BatchServer, Reply, ServerConfig, ServerStats, SubmitError};
 pub use trainer::{Finetuner, Pretrainer};

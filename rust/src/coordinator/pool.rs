@@ -8,19 +8,33 @@
 //! `IRQLORA_SERVE_WORKERS` knob mirroring `IRQLORA_THREADS`) that all
 //! route through one registry — merged adapter weights are computed
 //! once and shared, while each worker owns its execution backend (for
-//! PJRT: its own runtime + device buffers, built on the worker thread
-//! by the factory passed to [`ServerPool::spawn_with`]).
+//! PJRT: its own runtime + device buffers + generation-keyed adapter
+//! upload LRU, built on the worker thread by the factory passed to
+//! [`ServerPool::spawn_with`]). Each worker serves its drained batch
+//! with ONE fused forward even when it spans adapters
+//! (`PoolConfig::fused`, default on; `.serial()` pins the pre-fusion
+//! per-group oracle path).
 //!
 //! Routing is adapter-affine: [`home_worker`] consistent-hashes the
 //! adapter id onto a worker so consecutive requests for one tenant hit
 //! the same backend (keeping its device-side adapter upload and the
-//! registry's LRU entry warm). Two situations move a request off its
-//! home worker, both counted in [`PoolStats`]:
+//! registry's LRU entry warm). Three situations move a request off its
+//! home worker, all counted in [`PoolStats`]:
 //!
-//! - **spill** — the home worker's queue depth reached the spill
-//!   threshold (default `2 × backend batch`); the request goes to the
-//!   least-loaded alive worker instead, trading cache affinity for
-//!   latency on hot adapters;
+//! - **steal** (default scheduler, `PoolConfig::steal` /
+//!   `IRQLORA_SERVE_STEAL=0` kill switch) — a saturated home worker
+//!   (queue depth at the spill threshold, default `2 × backend
+//!   batch`) *parks* the request in its overflow queue instead of
+//!   pushing it off-affinity; the home worker tops spare batch slots
+//!   from its own overflow when it catches up, and any worker with
+//!   spare batch capacity (idle, or launching a non-full batch) whose
+//!   own overflow is empty pulls from the most-loaded sibling's —
+//!   affinity is traded away only when capacity would otherwise go
+//!   unused (pull-based balancing; this also rescues requests parked
+//!   for a worker that later died);
+//! - **spill** (legacy scheduler, stealing disabled) — the saturated
+//!   home's request is pushed to the least-loaded alive worker at
+//!   submit time;
 //! - **reroute** — the home worker is dead (its backend panicked or
 //!   its thread exited); the request probes forward around the ring
 //!   to the next alive worker. Dead workers stay dead (their reason
@@ -40,20 +54,25 @@
 //! `Pending::try_wait` polls. The blocking [`ServerPool::query`] is
 //! submit + wait. [`ServerPool::shutdown`] drains every worker:
 //! already-submitted `Pending` handles all resolve before the workers
-//! exit (same drain semantics as `BatchServer::shutdown`, per worker).
+//! exit (same drain semantics as `BatchServer::shutdown`, per worker;
+//! each exiting worker also drains the parked overflow, stealing
+//! whatever a dead sibling stranded).
 //!
-//! Replies are bit-identical to a single `BatchServer` serving the
-//! same (adapter, prompt) stream: workers share the dequantized base
-//! through the registry, merges are deterministic, and each forward
-//! batches only same-adapter rows — which worker ran the forward can
-//! never leak into the logits (the pool concurrency battery in
-//! `rust/tests/pool_concurrency.rs` asserts this under contention).
+//! Replies are bit-identical to a single serial `BatchServer` serving
+//! the same (adapter, prompt) stream: workers share the dequantized
+//! base through the registry, merges are deterministic, and the fused
+//! forward contract guarantees a row's logits depend only on its own
+//! adapter and prompt — which worker ran the forward, which tenants
+//! co-rode the batch, and whether the request was stolen can never
+//! leak into the logits (the pool concurrency battery in
+//! `rust/tests/pool_concurrency.rs` asserts this under contention,
+//! against a `ServerConfig::serial` single-server oracle).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, RecvError, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvError, TryRecvError};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -63,7 +82,8 @@ use crate::util::hash::{fnv1a, FNV1A_SEED};
 use super::backend::{PjrtBackend, ServeBackend};
 use super::registry::AdapterRegistry;
 use super::server::{
-    AdapterServeStats, BatchServer, Reply, ServerConfig, ServerStats, SubmitError,
+    AdapterServeStats, BatchServer, ExitHook, Feeder, Reply, Request, ServerConfig,
+    ServerStats, SubmitError,
 };
 
 /// Worker count when `IRQLORA_SERVE_WORKERS` is unset.
@@ -89,6 +109,25 @@ fn parse_workers_override(v: &str) -> Option<usize> {
     }
 }
 
+/// Is work-stealing allowed by the environment? `IRQLORA_SERVE_STEAL`
+/// set to `0` / `false` / `off` / `no` disables it (the kill switch
+/// `scripts/verify.sh` uses to pin the legacy spill scheduler);
+/// anything else — including unset — leaves it on.
+pub fn serve_steal() -> bool {
+    std::env::var("IRQLORA_SERVE_STEAL")
+        .map(|v| parse_steal_override(&v))
+        .unwrap_or(true)
+}
+
+/// Interpret an `IRQLORA_SERVE_STEAL` value. Pure so it is testable
+/// without process-global env mutation.
+fn parse_steal_override(v: &str) -> bool {
+    !matches!(
+        v.trim().to_ascii_lowercase().as_str(),
+        "0" | "false" | "off" | "no"
+    )
+}
+
 /// Consistent adapter→worker assignment: FNV-1a over the adapter id
 /// (`util::hash`, the same hash checkpoint checksums use), reduced mod
 /// `n_workers`. Deterministic across processes and runs (no
@@ -109,36 +148,181 @@ pub struct PoolConfig {
     pub workers: usize,
     /// Per-worker batcher window (see [`ServerConfig::max_wait`]).
     pub max_wait: Duration,
-    /// Queue depth at which a request spills off its home worker to
-    /// the least-loaded one; `None` means `2 × backend batch`.
+    /// Queue depth at which a request leaves the direct path on its
+    /// home worker — parked in its overflow (stealing on) or spilled
+    /// to the least-loaded worker (stealing off); `None` means
+    /// `2 × backend batch`.
     pub spill_depth: Option<usize>,
+    /// One fused forward per drained batch (default). `false` pins
+    /// every worker to the per-group serial oracle path.
+    pub fused: bool,
+    /// Work-stealing scheduler (default). Gated additionally by the
+    /// `IRQLORA_SERVE_STEAL` env kill switch ([`serve_steal`]), and
+    /// inert on single-worker pools.
+    pub steal: bool,
 }
 
 impl PoolConfig {
     pub fn new(workers: usize, max_wait: Duration) -> PoolConfig {
-        PoolConfig { workers, max_wait, spill_depth: None }
+        PoolConfig { workers, max_wait, spill_depth: None, fused: true, steal: true }
+    }
+
+    /// Pin the per-group serial oracle forward path.
+    pub fn serial(mut self) -> PoolConfig {
+        self.fused = false;
+        self
+    }
+
+    /// Disable the work-stealing scheduler (legacy push-spill).
+    pub fn no_steal(mut self) -> PoolConfig {
+        self.steal = false;
+        self
+    }
+}
+
+/// Pool-level store of parked requests, shared between the submit path
+/// (which parks when a home worker saturates) and the worker feeders
+/// (which pull): one FIFO overflow queue per worker, a pool-wide
+/// parked count for cheap idle checks, and the steal counter.
+struct StealBus {
+    queues: Vec<Mutex<VecDeque<Request>>>,
+    parked: AtomicUsize,
+    steals: AtomicUsize,
+}
+
+impl StealBus {
+    fn new(n: usize) -> StealBus {
+        StealBus {
+            queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            parked: AtomicUsize::new(0),
+            steals: AtomicUsize::new(0),
+        }
+    }
+
+    fn park(&self, worker: usize, r: Request) {
+        // increment BEFORE pushing: every item visible in a queue has
+        // its increment completed, so a drain's decrement can never
+        // underflow the counter (the transient add-done/push-pending
+        // overcount only costs a harmless empty poll)
+        self.parked.fetch_add(1, Ordering::AcqRel);
+        self.queues[worker].lock().unwrap().push_back(r);
+    }
+
+    /// Pop up to `max` requests parked for `worker` (FIFO).
+    fn pop_own(&self, worker: usize, max: usize) -> Vec<Request> {
+        if max == 0 || self.parked.load(Ordering::Acquire) == 0 {
+            return Vec::new();
+        }
+        let mut q = self.queues[worker].lock().unwrap();
+        let take = q.len().min(max);
+        let out: Vec<Request> = q.drain(..take).collect();
+        drop(q);
+        if take > 0 {
+            self.parked.fetch_sub(take, Ordering::AcqRel);
+        }
+        out
+    }
+
+    /// Steal up to `max` requests from the longest overflow queue of
+    /// any *other* worker (dead ones included — that is how requests
+    /// stranded by a worker death get rescued). FIFO within the
+    /// victim's queue.
+    fn steal_from_busiest(&self, thief: usize, max: usize) -> Vec<Request> {
+        if max == 0 || self.parked.load(Ordering::Acquire) == 0 {
+            return Vec::new();
+        }
+        let mut victim = None;
+        let mut longest = 0usize;
+        for (i, q) in self.queues.iter().enumerate() {
+            if i == thief {
+                continue;
+            }
+            let len = q.lock().unwrap().len();
+            if len > longest {
+                longest = len;
+                victim = Some(i);
+            }
+        }
+        let Some(v) = victim else { return Vec::new() };
+        let mut q = self.queues[v].lock().unwrap();
+        let take = q.len().min(max);
+        let out: Vec<Request> = q.drain(..take).collect();
+        drop(q);
+        if take > 0 {
+            self.parked.fetch_sub(take, Ordering::AcqRel);
+            self.steals.fetch_add(take, Ordering::AcqRel);
+        }
+        out
+    }
+
+    /// Drop every parked request (closing their reply senders, so
+    /// outstanding [`Pending`] handles resolve with the dropped-reply
+    /// error instead of hanging). Called when the LAST worker dies —
+    /// with no worker left to pull the overflow, the bus would
+    /// otherwise keep the senders alive until pool teardown.
+    fn purge(&self) {
+        for q in &self.queues {
+            let drained: Vec<Request> = q.lock().unwrap().drain(..).collect();
+            if !drained.is_empty() {
+                self.parked.fetch_sub(drained.len(), Ordering::AcqRel);
+            }
+            drop(drained);
+        }
+    }
+}
+
+/// Pool-wide liveness tally: when the last worker is marked dead, no
+/// thread will ever pull the parked overflow again, so the watch
+/// purges the [`StealBus`] — already-parked [`Pending`] handles
+/// resolve (with an error) instead of blocking forever. (A death can
+/// only be *observed* through a handle or a submit, so any thread
+/// that could block on a parked reply either triggers this purge
+/// itself or was already answered.)
+struct DeathWatch {
+    alive: AtomicUsize,
+    bus: Option<Arc<StealBus>>,
+}
+
+impl DeathWatch {
+    fn worker_died(&self) {
+        if self.alive.fetch_sub(1, Ordering::AcqRel) == 1 {
+            if let Some(bus) = &self.bus {
+                bus.purge();
+            }
+        }
     }
 }
 
 /// State shared between the pool, its routing decisions, and the
 /// [`Pending`] handles in flight against one worker.
-#[derive(Default)]
 struct WorkerShared {
     /// Requests routed here whose [`Pending`] handle has not settled
     /// yet (waited, polled to completion, or dropped). This is the
-    /// queue-depth signal spill decisions use; note a reply that has
-    /// been *delivered* but not yet harvested by its handle still
+    /// queue-depth signal spill/park decisions use; note a reply that
+    /// has been *delivered* but not yet harvested by its handle still
     /// counts, so a large un-harvested `submit_async` burst reads as
-    /// depth — which is the intended hot-adapter spill trigger.
+    /// depth — which is the intended hot-adapter trigger.
     in_flight: AtomicUsize,
     /// Total requests ever routed here.
     routed: AtomicUsize,
     /// `Some(reason)` once the worker is known dead. Sticky: a dead
     /// worker is never routed to again.
     dead: Mutex<Option<String>>,
+    /// Pool-wide liveness watch, notified on this worker's first
+    /// recorded death.
+    watch: Arc<DeathWatch>,
 }
 
 impl WorkerShared {
+    fn new(watch: Arc<DeathWatch>) -> WorkerShared {
+        WorkerShared {
+            in_flight: AtomicUsize::new(0),
+            routed: AtomicUsize::new(0),
+            dead: Mutex::new(None),
+            watch,
+        }
+    }
+
     fn is_alive(&self) -> bool {
         self.dead.lock().unwrap().is_none()
     }
@@ -148,6 +332,7 @@ impl WorkerShared {
         let mut d = self.dead.lock().unwrap();
         if d.is_none() {
             *d = Some(reason);
+            self.watch.worker_died();
         }
     }
 }
@@ -181,14 +366,26 @@ pub struct PoolWorkerStats {
 #[derive(Clone, Debug, Default)]
 pub struct PoolStats {
     pub workers: Vec<PoolWorkerStats>,
-    /// Requests sent off their home worker because it was saturated.
+    /// Requests sent off their home worker because it was saturated
+    /// (legacy scheduler; always 0 with stealing on).
     pub spills: usize,
     /// Requests sent off their home worker because it was dead.
     pub reroutes: usize,
+    /// Parked requests served by a non-home worker (stealing
+    /// scheduler; always 0 with stealing off).
+    pub steals: usize,
+    /// Requests currently parked in overflow queues (snapshot).
+    pub parked: usize,
     /// Served requests, summed across workers.
     pub requests: usize,
     /// Forward calls, summed across workers.
     pub batches: usize,
+    /// Fused forward calls, summed across workers.
+    pub fused_batches: usize,
+    /// Backend adapter-cache hits (device uploads avoided), summed.
+    pub upload_hits: usize,
+    /// Backend adapter-cache misses (uploads performed), summed.
+    pub upload_misses: usize,
     /// Submit-time rejections, summed across workers.
     pub rejected: usize,
     /// Per-adapter occupancy, summed across workers.
@@ -206,7 +403,7 @@ impl PoolStats {
         self.workers.iter().map(|w| w.in_flight).sum()
     }
 
-    /// Mean same-adapter group size across every worker's forwards.
+    /// Mean rows per forward call across every worker's forwards.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -228,11 +425,20 @@ pub struct Pending {
     shared: Arc<WorkerShared>,
     worker: usize,
     adapter: String,
+    /// True when the request was parked in an overflow queue rather
+    /// than submitted to `worker`'s own channel. A parked request may
+    /// be served by ANY worker (the home when it catches up, a thief
+    /// when idle), so a dropped reply cannot be blamed on `worker` —
+    /// see [`Self::resolve`].
+    parked: bool,
     settled: bool,
 }
 
 impl Pending {
-    /// Worker index this request was routed to.
+    /// Worker index this request was routed to (with stealing enabled
+    /// a *parked* request may ultimately be served by a different,
+    /// idle worker — the logits are identical either way; this is the
+    /// routing target whose load the request counted against).
     pub fn worker(&self) -> usize {
         self.worker
     }
@@ -254,6 +460,20 @@ impl Pending {
         match got {
             Ok(Ok(r)) => Ok(r),
             Ok(Err(e)) => Err(anyhow!("request failed: {e}")),
+            Err(_) if self.parked => {
+                // a parked request's reply sender can be dropped by
+                // whichever worker pulled it — a dying thief, not
+                // necessarily the (possibly healthy) home this handle
+                // counted against — or by pool teardown. Blame nobody:
+                // an actually-dead server gets marked by its OWN
+                // requests (reply drop above, WorkerGone at submit).
+                Err(anyhow!(
+                    "request for adapter '{}' (parked for worker {}) was dropped \
+                     before a reply — its serving worker died or the pool shut down",
+                    self.adapter,
+                    self.worker
+                ))
+            }
             Err(_) => {
                 // the worker dropped our reply sender without
                 // answering: its thread died (panicking backend) —
@@ -314,11 +534,16 @@ impl Drop for Pending {
 }
 
 /// N [`BatchServer`] workers over one shared [`AdapterRegistry`], with
-/// adapter-affinity routing and async submission (module docs).
+/// adapter-affinity routing, fused mixed-adapter forwards, work
+/// stealing, and async submission (module docs).
 pub struct ServerPool {
     workers: Vec<PoolWorker>,
     registry: Arc<AdapterRegistry>,
     routing: Mutex<RoutingCounters>,
+    /// Present iff the work-stealing scheduler is active.
+    bus: Option<Arc<StealBus>>,
+    /// Pool-wide liveness tally (drives the last-death overflow purge).
+    watch: Arc<DeathWatch>,
     spill_depth: usize,
     seq: usize,
     vocab: usize,
@@ -356,17 +581,51 @@ impl ServerPool {
         F: Fn(usize) -> Result<Box<dyn ServeBackend>> + Send + Sync + 'static,
     {
         let n = (if cfg.workers == 0 { serve_workers() } else { cfg.workers }).clamp(1, 64);
+        // stealing needs a sibling to steal from, and the env kill
+        // switch wins over the config so verify.sh can pin the legacy
+        // scheduler without touching call sites
+        let steal = cfg.steal && serve_steal() && n > 1;
+        let bus = steal.then(|| Arc::new(StealBus::new(n)));
+        let watch = Arc::new(DeathWatch { alive: AtomicUsize::new(n), bus: bus.clone() });
         let factory = Arc::new(make_backend);
         let mut workers = Vec::with_capacity(n);
         for w in 0..n {
             let f = factory.clone();
-            let server = BatchServer::spawn_with(
-                ServerConfig { max_wait: cfg.max_wait },
+            let feeder: Option<Feeder> = bus.as_ref().map(|bus| {
+                let bus = bus.clone();
+                Box::new(move |max: usize| {
+                    let mut got = bus.pop_own(w, max);
+                    if got.is_empty() {
+                        got = bus.steal_from_busiest(w, max);
+                    }
+                    got
+                }) as Feeder
+            });
+            let shared = Arc::new(WorkerShared::new(watch.clone()));
+            // proactive death marking: a panicking worker marks ITSELF
+            // during unwind, so even a death whose only witnesses are
+            // parked/stolen requests (which deliberately blame nobody
+            // — see Pending::resolve) still reaches the DeathWatch and
+            // can trigger the last-death overflow purge
+            let exit_hook: ExitHook = {
+                let shared = shared.clone();
+                Box::new(move |panicked: bool| {
+                    if panicked {
+                        shared.mark_dead(
+                            "worker thread panicked (backend fault)".to_string(),
+                        );
+                    }
+                })
+            };
+            let server = BatchServer::spawn_with_feeder(
+                ServerConfig { max_wait: cfg.max_wait, fused: cfg.fused },
                 registry.clone(),
                 move || f(w),
+                feeder,
+                Some(exit_hook),
             )
             .with_context(|| format!("spawning pool worker {w} of {n}"))?;
-            workers.push(PoolWorker { server, shared: Arc::new(WorkerShared::default()) });
+            workers.push(PoolWorker { server, shared });
         }
         let spill_depth = cfg
             .spill_depth
@@ -389,6 +648,8 @@ impl ServerPool {
             workers,
             registry,
             routing: Mutex::new(RoutingCounters::default()),
+            bus,
+            watch,
             spill_depth,
             seq,
             vocab,
@@ -415,21 +676,29 @@ impl ServerPool {
         &self.registry
     }
 
-    /// Pick a target worker for an adapter whose home index is `home`:
-    /// the first alive worker probing forward from home, spilled to
-    /// the least-loaded alive worker when saturated. `None` when every
-    /// worker is dead. Returns (index, spilled, rerouted).
-    fn route(&self, home: usize) -> Option<(usize, bool, bool)> {
+    /// Is the work-stealing scheduler active on this pool?
+    pub fn stealing(&self) -> bool {
+        self.bus.is_some()
+    }
+
+    /// First alive worker probing forward around the ring from `home`.
+    /// `None` when every worker is dead. Returns (index, rerouted).
+    fn first_alive(&self, home: usize) -> Option<(usize, bool)> {
         let n = self.workers.len();
-        let mut primary = None;
         for off in 0..n {
             let i = (home + off) % n;
             if self.workers[i].shared.is_alive() {
-                primary = Some((i, off != 0));
-                break;
+                return Some((i, off != 0));
             }
         }
-        let (pi, rerouted) = primary?;
+        None
+    }
+
+    /// Legacy-scheduler target for an adapter homed at `home`: the
+    /// first alive worker from home, pushed to the least-loaded alive
+    /// worker when saturated. Returns (index, spilled, rerouted).
+    fn route(&self, home: usize) -> Option<(usize, bool, bool)> {
+        let (pi, rerouted) = self.first_alive(home)?;
         let depth = self.workers[pi].shared.in_flight.load(Ordering::Acquire);
         if depth >= self.spill_depth {
             let spill = self
@@ -450,18 +719,98 @@ impl ServerPool {
     /// Submit without waiting for the reply: returns a [`Pending`]
     /// handle. Malformed prompts and unknown adapters fail here,
     /// before routing; a dead target worker is marked and the request
-    /// reroutes transparently. Backpressure caveat: each worker's
-    /// request queue is bounded (1024 slots), so once every alive
-    /// worker is saturated past its spill depth AND the target queue
-    /// is full, this call blocks until a slot frees — an open-loop
-    /// submitter that never harvests its handles will eventually stall
-    /// here instead of exhausting memory (turning a full queue into an
-    /// error return is a ROADMAP next step).
+    /// reroutes transparently. With stealing on, a saturated home
+    /// worker's request parks in its overflow (served by the home
+    /// worker when it catches up or by whichever worker goes idle
+    /// first); with stealing off it spills to the least-loaded worker.
+    /// Backpressure caveat: each worker's direct queue is bounded
+    /// (1024 slots), so under the legacy scheduler a fully saturated
+    /// pool can block this call until a slot frees; the stealing
+    /// scheduler parks instead (unbounded overflow), so an open-loop
+    /// submitter that never harvests its handles trades that block for
+    /// parked-queue growth (pool-level deadlines/bounded overflow stay
+    /// a ROADMAP next step).
     pub fn submit_async(&self, adapter: &str, tokens: Vec<i32>) -> Result<Pending> {
         let n = self.workers.len();
         let home = home_worker(adapter, n);
         let mut tokens = tokens;
         loop {
+            // stealing scheduler: saturated-but-alive home ⇒ park in
+            // its overflow, preserving affinity when the home catches
+            // up and letting idle siblings pull otherwise
+            if let Some(bus) = &self.bus {
+                let (pi, rerouted) = self.first_alive(home).ok_or_else(|| {
+                    anyhow!("all {n} pool workers are dead (adapter '{adapter}')")
+                })?;
+                let w = &self.workers[pi];
+                let depth = w.shared.in_flight.load(Ordering::Acquire);
+                if depth >= self.spill_depth {
+                    // same submit-time validation (and rejected
+                    // accounting) a direct submit would get
+                    w.server.check_request(adapter, &tokens)?;
+                    let (reply_tx, reply_rx) = sync_channel(1);
+                    bus.park(
+                        pi,
+                        Request {
+                            adapter: adapter.to_string(),
+                            tokens,
+                            enqueued: Instant::now(),
+                            reply: reply_tx,
+                        },
+                    );
+                    // close the park-vs-purge race: if the LAST worker
+                    // died between the liveness check above and the
+                    // push, DeathWatch's purge may have swept an
+                    // empty queue — re-check (lock-free: the watch's
+                    // tally, not n dead-mutexes, on this hot path) now
+                    // that the item is visible and purge again, so the
+                    // just-parked request resolves instead of
+                    // stranding (either this purge or the one ordered
+                    // after the final mark_dead sees it)
+                    if self.watch.alive.load(Ordering::Acquire) == 0 {
+                        bus.purge();
+                    }
+                    if rerouted {
+                        self.routing.lock().unwrap().reroutes += 1;
+                    }
+                    w.shared.routed.fetch_add(1, Ordering::AcqRel);
+                    w.shared.in_flight.fetch_add(1, Ordering::AcqRel);
+                    return Ok(Pending {
+                        rx: reply_rx,
+                        shared: w.shared.clone(),
+                        worker: pi,
+                        adapter: adapter.to_string(),
+                        parked: true,
+                        settled: false,
+                    });
+                }
+                match w.server.try_submit(adapter, tokens) {
+                    Ok(rx) => {
+                        if rerouted {
+                            self.routing.lock().unwrap().reroutes += 1;
+                        }
+                        w.shared.routed.fetch_add(1, Ordering::AcqRel);
+                        w.shared.in_flight.fetch_add(1, Ordering::AcqRel);
+                        return Ok(Pending {
+                            rx,
+                            shared: w.shared.clone(),
+                            worker: pi,
+                            adapter: adapter.to_string(),
+                            parked: false,
+                            settled: false,
+                        });
+                    }
+                    Err(SubmitError::Rejected(e)) => return Err(e),
+                    Err(SubmitError::WorkerGone(t)) => {
+                        w.shared
+                            .mark_dead("worker exited before accepting a request".to_string());
+                        tokens = t;
+                        continue;
+                    }
+                }
+            }
+
+            // legacy scheduler: push-spill off a saturated home
             let (idx, spilled, rerouted) = self.route(home).ok_or_else(|| {
                 anyhow!("all {n} pool workers are dead (adapter '{adapter}')")
             })?;
@@ -487,6 +836,7 @@ impl ServerPool {
                         shared: w.shared.clone(),
                         worker: idx,
                         adapter: adapter.to_string(),
+                        parked: false,
                         settled: false,
                     });
                 }
@@ -514,11 +864,24 @@ impl ServerPool {
             let r = self.routing.lock().unwrap();
             (r.spills, r.reroutes)
         };
-        let mut out = PoolStats { spills, reroutes, ..PoolStats::default() };
+        let (steals, parked) = self
+            .bus
+            .as_ref()
+            .map(|b| {
+                (
+                    b.steals.load(Ordering::Acquire),
+                    b.parked.load(Ordering::Acquire),
+                )
+            })
+            .unwrap_or((0, 0));
+        let mut out = PoolStats { spills, reroutes, steals, parked, ..PoolStats::default() };
         for w in &self.workers {
             let server = w.server.stats();
             out.requests += server.requests;
             out.batches += server.batches;
+            out.fused_batches += server.fused_batches;
+            out.upload_hits += server.upload.hits;
+            out.upload_misses += server.upload.misses;
             out.rejected += server.rejected;
             for (name, a) in &server.per_adapter {
                 let e = out.per_adapter.entry(name.clone()).or_default();
@@ -536,13 +899,19 @@ impl ServerPool {
         out
     }
 
-    /// Graceful shutdown: every worker drains its queue first, so all
-    /// outstanding [`Pending`] handles resolve (with a reply, or with
-    /// the dead-worker error for workers that already died).
+    /// Graceful shutdown: every worker drains its queue (and, via its
+    /// feeder, the parked overflow — including queues stranded by dead
+    /// siblings) first, so all outstanding [`Pending`] handles resolve
+    /// (with a reply, or with the dead-worker error for requests that
+    /// died with their worker).
     pub fn shutdown(self) {
         for w in self.workers {
             w.server.shutdown();
         }
+        // anything still parked here could only belong to a pool whose
+        // workers ALL died before draining; dropping the bus drops the
+        // reply senders, resolving those handles with the death error
+        drop(self.bus);
     }
 }
 
@@ -595,6 +964,26 @@ mod tests {
     }
 
     #[test]
+    fn steal_env_override_parsing() {
+        assert!(!parse_steal_override("0"));
+        assert!(!parse_steal_override(" false "));
+        assert!(!parse_steal_override("OFF"));
+        assert!(!parse_steal_override("no"));
+        assert!(parse_steal_override("1"));
+        assert!(parse_steal_override("true"));
+        assert!(parse_steal_override("")); // anything-but-off means on
+    }
+
+    #[test]
+    fn pool_config_builders() {
+        let c = PoolConfig::new(2, Duration::from_millis(1));
+        assert!(c.fused && c.steal);
+        assert!(!c.serial().fused);
+        let c = PoolConfig::new(2, Duration::from_millis(1)).no_steal();
+        assert!(!c.steal && c.fused);
+    }
+
+    #[test]
     fn home_worker_deterministic_in_range() {
         for n in 1..=8 {
             for name in ["a", "tenant0", "tenant1", "a-long-adapter-id"] {
@@ -639,14 +1028,16 @@ mod tests {
         assert_eq!(s.requests, 10);
         assert_eq!(s.alive(), 2);
         assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.parked, 0);
         assert_eq!(s.per_adapter.len(), 3);
         assert_eq!(s.per_adapter["t0"].requests, 4);
         assert_eq!(s.workers.len(), 2);
         assert_eq!(s.workers.iter().map(|w| w.routed).sum::<usize>(), 10);
-        // affinity: with no spills, each adapter's requests all landed
-        // on its home worker
+        // affinity: with no contention, each adapter's requests all
+        // landed on its home worker — parking/stealing never fired
         assert_eq!(s.spills, 0);
         assert_eq!(s.reroutes, 0);
+        assert_eq!(s.steals, 0);
         for i in 0..3 {
             let name = format!("t{i}");
             let home = home_worker(&name, 2);
@@ -657,6 +1048,11 @@ mod tests {
             );
         }
         assert!(s.mean_batch_size() >= 1.0);
+        // the fused drain path served these (one forward per drain)
+        assert!(s.fused_batches >= 1, "{s:?}");
+        assert_eq!(s.fused_batches, s.batches, "{s:?}");
+        // each worker fingerprint-cached its adapters after one miss
+        assert!(s.upload_misses >= 1, "{s:?}");
         pool.shutdown();
     }
 
@@ -701,5 +1097,15 @@ mod tests {
         .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("pool worker 2") && msg.contains("no device"), "{msg}");
+    }
+
+    #[test]
+    fn single_worker_pool_disables_stealing() {
+        let registry = Arc::new(AdapterRegistry::with_capacity(base(5), (0.0, 0.0), 2));
+        registry.register("a", adapter(50)).unwrap();
+        let pool = reference_pool(1, registry);
+        assert!(!pool.stealing(), "nothing to steal from on a 1-worker pool");
+        assert!(pool.query("a", vec![1, 2]).is_ok());
+        pool.shutdown();
     }
 }

@@ -23,6 +23,17 @@
 //! Cache capacity comes from the `IRQLORA_ADAPTER_CACHE` environment
 //! variable (mirroring `IRQLORA_THREADS`: positive integers honored,
 //! zero/garbage ignored), default [`DEFAULT_CACHE_CAPACITY`].
+//!
+//! Every lookup is generation-tagged ([`AdapterRegistry::merged_tagged`]):
+//! the registration generation is a registry-wide monotonic id bumped
+//! on every (re)register and **preserved** across evict/re-merge of an
+//! unchanged source. That pair `(name, generation)` is the key the
+//! serving backends build their device-side caches on — the
+//! `PjrtBackend` adapter device-buffer LRU and the `ReferenceBackend`
+//! fingerprint cache (see `coordinator::backend`) — which is what lets
+//! a fused mixed-adapter batch reuse uploads across drains without any
+//! pointer-ABA hazard. By default the device cache is sized to this
+//! registry's merged-cache capacity, so the two tiers age together.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};

@@ -3,15 +3,21 @@
 //!
 //! Requests (adapter id + token prompt) arrive on a channel; a worker
 //! thread drains up to `batch` of them (waiting at most `max_wait`
-//! after the first), groups them by adapter, pads each group into one
-//! fixed-shape forward call, and replies with the next-token logits
-//! per request. One worker serves many adapters over one *shared*
-//! base: the expensive artifact (the dequantized ICQ-quantized base)
-//! exists once per worker, uploaded once by the backend, while
-//! adapters are cheap per-tenant state routed through an
-//! [`AdapterRegistry`] (merged on demand, LRU-cached). This is the
-//! dynamic-batching structure of vLLM-style multi-LoRA routers
-//! reduced to the single-device case this paper needs.
+//! after the first), slot-packs the drained set into ONE padded
+//! fixed-shape **fused** forward call — even when the batch spans
+//! several adapters ([`fused_slot_plan`] gives each adapter a
+//! contiguous row span, `ServeBackend::forward_fused` runs it) — and
+//! replies with the next-token logits per request. The pre-fusion
+//! one-forward-per-adapter-group path is kept in-tree
+//! ([`ServerConfig::serial`]) as the bit-identity oracle the tests and
+//! the paired `[per-group serial]` bench rows compare against.
+//!
+//! One worker serves many adapters over one *shared* base: the
+//! expensive artifact (the dequantized ICQ-quantized base) exists once
+//! per worker, uploaded once by the backend, while adapters are cheap
+//! per-tenant state routed through an [`AdapterRegistry`] (merged on
+//! demand, LRU-cached; the backend keeps its own device-side adapter
+//! cache keyed by `(name, generation)`).
 //!
 //! Malformed prompts (empty / over-length) and unknown adapters are
 //! rejected at [`BatchServer::submit`] time — a bad request never
@@ -20,10 +26,14 @@
 //!
 //! The worker owns its execution backend (for PJRT: an
 //! `OwnedExecutor` holding the runtime by `Arc`), so spawning N
-//! servers no longer leaks N runtimes.
+//! servers no longer leaks N runtimes. A routing layer
+//! ([`super::pool::ServerPool`]) may additionally install a *feeder* —
+//! a pull-source of parked requests the worker polls when its own
+//! channel runs dry (own overflow first, work stolen from a saturated
+//! sibling when idle) and tops spare batch slots from after a drain.
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -32,7 +42,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::data::PAD;
 use crate::runtime::Manifest;
 
-use super::backend::{PjrtBackend, ServeBackend};
+use super::backend::{AdapterGroup, PjrtBackend, ServeBackend, UploadStats};
 use super::registry::AdapterRegistry;
 
 /// One inference reply.
@@ -46,22 +56,64 @@ pub struct Reply {
     pub queued: Duration,
     /// Total request latency.
     pub latency: Duration,
-    /// How many requests shared the forward call (all same-adapter).
+    /// How many requests shared the forward call (fused batches may
+    /// span several adapters; serial-oracle batches are same-adapter).
     pub batch_size: usize,
 }
 
-struct Request {
-    adapter: String,
-    tokens: Vec<i32>,
-    enqueued: Instant,
-    reply: SyncSender<Result<Reply, String>>,
+/// One queued request. `pub(crate)` so the pool's overflow/steal layer
+/// can park fully-formed requests and hand them back to a worker
+/// through its feeder.
+pub(crate) struct Request {
+    pub(crate) adapter: String,
+    pub(crate) tokens: Vec<i32>,
+    pub(crate) enqueued: Instant,
+    pub(crate) reply: SyncSender<Result<Reply, String>>,
 }
+
+/// Pull-source of extra requests for a worker, installed by a routing
+/// layer. `feeder(max)` returns at most `max` requests — the worker's
+/// own parked overflow first, then (when that is empty) work stolen
+/// from a saturated or dead sibling, so any worker with spare batch
+/// slots rescues parked requests instead of letting them starve
+/// behind a busy or dead home.
+pub(crate) type Feeder = Box<dyn FnMut(usize) -> Vec<Request> + Send>;
+
+/// Invoked exactly once when the worker thread exits; the argument is
+/// whether the thread was PANICKING (a backend fault) as opposed to a
+/// normal shutdown drain or a failed init. Routing layers use it to
+/// mark the worker dead proactively — without it, a worker that dies
+/// while serving only parked/stolen requests would never be observed
+/// dead by any submit or direct reply.
+pub(crate) type ExitHook = Box<dyn FnOnce(bool) + Send>;
+
+/// Drop guard that fires the [`ExitHook`] however the worker thread
+/// ends (return or unwind).
+struct ExitGuard(Option<ExitHook>);
+
+impl Drop for ExitGuard {
+    fn drop(&mut self) {
+        if let Some(hook) = self.0.take() {
+            hook(std::thread::panicking());
+        }
+    }
+}
+
+/// Idle-poll bounds for a worker with a feeder installed: it re-polls
+/// the feeder between channel receives, starting at the floor and
+/// backing off exponentially to the ceiling while nothing arrives (a
+/// fully idle pool wakes each worker ~60×/s instead of 1000×/s; any
+/// work resets the backoff, so steal latency under load stays at the
+/// floor). Workers without a feeder block on their channel as before.
+const IDLE_POLL_MIN: Duration = Duration::from_millis(1);
+const IDLE_POLL_MAX: Duration = Duration::from_millis(16);
 
 /// Per-adapter serving counters.
 #[derive(Clone, Debug, Default)]
 pub struct AdapterServeStats {
     pub requests: usize,
-    /// Forward calls run for this adapter.
+    /// Forward calls this adapter rode in (fused calls count once per
+    /// participating adapter).
     pub batches: usize,
     pub occupancy_sum: usize,
 }
@@ -80,12 +132,24 @@ impl AdapterServeStats {
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     pub requests: usize,
-    /// Total forward calls (one per same-adapter group).
+    /// Total forward calls (fused mode: one per drained batch; serial
+    /// oracle mode: one per same-adapter group).
     pub batches: usize,
     pub batch_occupancy_sum: usize,
+    /// Fused forward calls (always 0 in serial oracle mode).
+    pub fused_batches: usize,
+    /// Rows served by fused forwards (occupancy of the fused calls).
+    pub fused_rows: usize,
+    /// Distinct adapters summed over fused calls (`/ fused_batches` =
+    /// mean adapters per fused forward).
+    pub fused_adapters: usize,
     /// Requests rejected at submit time (malformed prompt / unknown
     /// adapter); they never occupied a batch slot.
     pub rejected: usize,
+    /// Backend adapter-cache counters (device-buffer uploads for PJRT,
+    /// fingerprint recomputes for the reference backend), snapshotted
+    /// after each forward.
+    pub upload: UploadStats,
     /// Per-adapter occupancy breakdown.
     pub per_adapter: BTreeMap<String, AdapterServeStats>,
 }
@@ -98,6 +162,15 @@ impl ServerStats {
             self.batch_occupancy_sum as f64 / self.batches as f64
         }
     }
+
+    /// Mean rows per fused forward call.
+    pub fn mean_fused_occupancy(&self) -> f64 {
+        if self.fused_batches == 0 {
+            0.0
+        } else {
+            self.fused_rows as f64 / self.fused_batches as f64
+        }
+    }
 }
 
 /// Server configuration.
@@ -105,6 +178,28 @@ pub struct ServerConfig {
     /// Max time the batcher waits to fill a batch after the first
     /// request arrives.
     pub max_wait: Duration,
+    /// `true` (default): one fused forward per drained batch, however
+    /// many adapters it spans. `false`: the pre-fusion per-adapter-
+    /// group serial path — kept as the bit-identity oracle.
+    pub fused: bool,
+}
+
+impl ServerConfig {
+    pub fn new(max_wait: Duration) -> ServerConfig {
+        ServerConfig { max_wait, fused: true }
+    }
+
+    /// Switch to the per-group serial oracle path.
+    pub fn serial(mut self) -> ServerConfig {
+        self.fused = false;
+        self
+    }
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig::new(Duration::from_millis(2))
+    }
 }
 
 /// Why a submission did not enqueue — split so routing layers
@@ -119,6 +214,27 @@ pub enum SubmitError {
     /// request never reached a queue. The prompt tokens are handed
     /// back so the caller can reroute without a clone.
     WorkerGone(Vec<i32>),
+}
+
+/// Slot-packing plan for one fused drained batch: group the drained
+/// requests' adapter ids in first-arrival order, preserving submit
+/// order within every adapter. Each returned entry is `(adapter,
+/// request indices in row order)`; rows are assigned contiguously
+/// group after group, so the `i`-th index of group `g` sits in row
+/// `(sum of earlier group sizes) + i` and the total row count equals
+/// `adapters.len()` (the drain never hands over more than the
+/// backend's `batch`). Pure — property-tested directly in
+/// `tests/proptests.rs`, and the worker routes every fused drain
+/// through it.
+pub fn fused_slot_plan<'a>(adapters: &[&'a str]) -> Vec<(&'a str, Vec<usize>)> {
+    let mut plan: Vec<(&str, Vec<usize>)> = Vec::new();
+    for (i, a) in adapters.iter().enumerate() {
+        match plan.iter_mut().find(|(name, _)| name == a) {
+            Some((_, idx)) => idx.push(i),
+            None => plan.push((a, vec![i])),
+        }
+    }
+    plan
 }
 
 /// Handle to a running batch server.
@@ -163,6 +279,24 @@ impl BatchServer {
     where
         F: FnOnce() -> Result<Box<dyn ServeBackend>> + Send + 'static,
     {
+        Self::spawn_with_feeder(cfg, registry, make_backend, None, None)
+    }
+
+    /// [`Self::spawn_with`] plus an optional [`Feeder`] — the pull
+    /// hook [`super::pool::ServerPool`]'s overflow/steal scheduler
+    /// installs. Without a feeder the worker blocks on its channel
+    /// exactly as before; with one it polls the feeder whenever the
+    /// channel runs dry and before launching a non-full batch.
+    pub(crate) fn spawn_with_feeder<F>(
+        cfg: ServerConfig,
+        registry: Arc<AdapterRegistry>,
+        make_backend: F,
+        feeder: Option<Feeder>,
+        exit_hook: Option<ExitHook>,
+    ) -> Result<BatchServer>
+    where
+        F: FnOnce() -> Result<Box<dyn ServeBackend>> + Send + 'static,
+    {
         let (tx, rx) = sync_channel::<Request>(1024);
         let stats = Arc::new(Mutex::new(ServerStats::default()));
         let stats_w = stats.clone();
@@ -170,6 +304,7 @@ impl BatchServer {
 
         let (ready_tx, ready_rx) = sync_channel::<Result<(usize, usize, usize), String>>(1);
         let handle = std::thread::spawn(move || {
+            let _exit_guard = ExitGuard(exit_hook);
             let mut backend = match make_backend() {
                 Ok(b) => {
                     let _ = ready_tx.send(Ok(b.shape()));
@@ -182,14 +317,55 @@ impl BatchServer {
             };
             let (batch, _, _) = backend.shape();
             let mut tok_scratch: Vec<i32> = Vec::new();
+            let mut feeder = feeder;
+            let mut idle_poll = IDLE_POLL_MIN;
 
-            loop {
-                // block for the first request
-                let first = match rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => break, // all senders dropped: shut down
-                };
-                let mut pending = vec![first];
+            'serve: loop {
+                // acquire the first request(s): the channel, else
+                // parked/stolen work from the feeder, else block. Once
+                // the channel disconnects the worker keeps serving
+                // whatever the feeder still holds (shutdown drains the
+                // overflow, including queues stranded by dead
+                // siblings), then exits.
+                let mut pending: Vec<Request> = Vec::new();
+                let mut disconnected = false;
+                while pending.is_empty() {
+                    match rx.try_recv() {
+                        Ok(r) => {
+                            pending.push(r);
+                            break;
+                        }
+                        Err(TryRecvError::Empty) => {}
+                        Err(TryRecvError::Disconnected) => disconnected = true,
+                    }
+                    if let Some(f) = feeder.as_mut() {
+                        pending.extend(f(batch));
+                        if !pending.is_empty() {
+                            break;
+                        }
+                    }
+                    if disconnected {
+                        break 'serve;
+                    }
+                    if feeder.is_some() {
+                        match rx.recv_timeout(idle_poll) {
+                            Ok(r) => pending.push(r),
+                            Err(RecvTimeoutError::Timeout) => {
+                                idle_poll = (idle_poll * 2).min(IDLE_POLL_MAX);
+                            }
+                            Err(RecvTimeoutError::Disconnected) => disconnected = true,
+                        }
+                    } else {
+                        match rx.recv() {
+                            Ok(r) => pending.push(r),
+                            Err(_) => break 'serve,
+                        }
+                    }
+                }
+                // got work: poll eagerly again while traffic flows
+                idle_poll = IDLE_POLL_MIN;
+
+                // fill the batch from the channel within the window
                 let deadline = Instant::now() + cfg.max_wait;
                 while pending.len() < batch {
                     let now = Instant::now();
@@ -202,26 +378,44 @@ impl BatchServer {
                         Err(RecvTimeoutError::Disconnected) => break,
                     }
                 }
-
-                // group by adapter, preserving first-arrival order; each
-                // group runs as its own forward call so replies can never
-                // read another adapter's logits
-                let mut groups: Vec<(String, Vec<Request>)> = Vec::new();
-                for r in pending {
-                    match groups.iter().position(|(a, _)| *a == r.adapter) {
-                        Some(i) => groups[i].1.push(r),
-                        None => groups.push((r.adapter.clone(), vec![r])),
+                // top spare slots from the parked overflow (own queue
+                // first; a sibling's if ours is empty) — spare batch
+                // capacity anywhere in the pool serves parked work
+                if pending.len() < batch {
+                    if let Some(f) = feeder.as_mut() {
+                        pending.extend(f(batch - pending.len()));
                     }
                 }
-                for (adapter, group) in groups {
-                    run_group(
-                        backend.as_mut(),
-                        &registry_w,
-                        &stats_w,
-                        &adapter,
-                        group,
-                        &mut tok_scratch,
-                    );
+
+                // slot-pack by adapter, preserving first-arrival group
+                // order and submit order within each adapter
+                let ids: Vec<&str> = pending.iter().map(|r| r.adapter.as_str()).collect();
+                let plan: Vec<(String, Vec<usize>)> = fused_slot_plan(&ids)
+                    .into_iter()
+                    .map(|(a, idx)| (a.to_string(), idx))
+                    .collect();
+                let mut slots: Vec<Option<Request>> =
+                    pending.into_iter().map(Some).collect();
+                let groups: Vec<(String, Vec<Request>)> = plan
+                    .into_iter()
+                    .map(|(a, idx)| {
+                        (a, idx.into_iter().map(|i| slots[i].take().unwrap()).collect())
+                    })
+                    .collect();
+
+                if cfg.fused {
+                    run_fused(backend.as_mut(), &registry_w, &stats_w, groups, &mut tok_scratch);
+                } else {
+                    for (adapter, group) in groups {
+                        run_group(
+                            backend.as_mut(),
+                            &registry_w,
+                            &stats_w,
+                            &adapter,
+                            group,
+                            &mut tok_scratch,
+                        );
+                    }
                 }
             }
         });
@@ -256,6 +450,25 @@ impl BatchServer {
         &self.registry
     }
 
+    /// The submit-time validation alone (prompt length, adapter
+    /// existence), without enqueueing — for routing layers that park
+    /// requests in their own queues. Failures are counted in
+    /// [`ServerStats::rejected`], exactly like a rejected submit.
+    pub(crate) fn check_request(&self, adapter: &str, tokens: &[i32]) -> Result<()> {
+        if tokens.is_empty() || tokens.len() > self.seq {
+            self.stats.lock().unwrap().rejected += 1;
+            bail!("prompt length {} out of range 1..={}", tokens.len(), self.seq);
+        }
+        if !self.registry.contains(adapter) {
+            self.stats.lock().unwrap().rejected += 1;
+            bail!(
+                "unknown adapter '{adapter}' (registered: {:?})",
+                self.registry.names()
+            );
+        }
+        Ok(())
+    }
+
     /// Submit a prompt for `adapter`; returns a receiver for the
     /// reply. Empty / over-length prompts and unknown adapters are
     /// rejected here, before they can occupy a batch slot.
@@ -281,20 +494,8 @@ impl BatchServer {
         adapter: &str,
         tokens: Vec<i32>,
     ) -> Result<Receiver<Result<Reply, String>>, SubmitError> {
-        if tokens.is_empty() || tokens.len() > self.seq {
-            self.stats.lock().unwrap().rejected += 1;
-            return Err(SubmitError::Rejected(anyhow!(
-                "prompt length {} out of range 1..={}",
-                tokens.len(),
-                self.seq
-            )));
-        }
-        if !self.registry.contains(adapter) {
-            self.stats.lock().unwrap().rejected += 1;
-            return Err(SubmitError::Rejected(anyhow!(
-                "unknown adapter '{adapter}' (registered: {:?})",
-                self.registry.names()
-            )));
+        if let Err(e) = self.check_request(adapter, &tokens) {
+            return Err(SubmitError::Rejected(e));
         }
         let Some(tx) = self.tx.as_ref() else {
             return Err(SubmitError::WorkerGone(tokens));
@@ -344,8 +545,190 @@ impl Drop for BatchServer {
     }
 }
 
+/// Slice one request's next-token logits out of a forward result and
+/// deliver its reply (or the slicing error). `row` is the request's
+/// absolute row within the call that produced `logits`; `bsz` is how
+/// many requests shared that call. One implementation for the fused,
+/// fallback, and serial-oracle paths, so the three can never drift.
+fn deliver_reply(
+    logits: &[f32],
+    seq: usize,
+    vocab: usize,
+    row: usize,
+    adapter: &str,
+    bsz: usize,
+    launch: Instant,
+    r: Request,
+) {
+    let off = (row * seq + r.tokens.len() - 1) * vocab;
+    let resp = if off + vocab <= logits.len() {
+        Ok(Reply {
+            adapter: adapter.to_string(),
+            logits: logits[off..off + vocab].to_vec(),
+            queued: launch - r.enqueued,
+            latency: r.enqueued.elapsed(),
+            batch_size: bsz,
+        })
+    } else {
+        Err(format!(
+            "backend returned {} logits, need at least {}",
+            logits.len(),
+            off + vocab
+        ))
+    };
+    let _ = r.reply.send(resp);
+}
+
+/// Serve one drained batch — possibly spanning several adapters —
+/// with a SINGLE fused forward: each adapter group gets a contiguous
+/// row span in one padded token matrix, and every request's reply is
+/// sliced from the shared logits at its absolute row. A group whose
+/// merge fails gets its error without poisoning co-batched groups;
+/// the forward itself failing fails every request that rode in it.
+fn run_fused(
+    backend: &mut dyn ServeBackend,
+    registry: &AdapterRegistry,
+    stats: &Mutex<ServerStats>,
+    groups: Vec<(String, Vec<Request>)>,
+    tok_scratch: &mut Vec<i32>,
+) {
+    let (batch, seq, vocab) = backend.shape();
+    let launch = Instant::now();
+
+    // resolve merged weights and assign row spans
+    let mut metas: Vec<AdapterGroup> = Vec::with_capacity(groups.len());
+    let mut reqs: Vec<Vec<Request>> = Vec::with_capacity(groups.len());
+    let mut row = 0usize;
+    for (adapter, group) in groups {
+        match registry.merged_tagged(&adapter) {
+            Ok((generation, weights)) => {
+                let rows = row..row + group.len();
+                row = rows.end;
+                metas.push(AdapterGroup { name: adapter, generation, weights, rows });
+                reqs.push(group);
+            }
+            Err(e) => {
+                // merge failure: this group errors, the rest still
+                // fuse; counted as one attempted batch, mirroring what
+                // the serial oracle path records for the same stream
+                let msg = format!("{e:#}");
+                let mut s = stats.lock().unwrap();
+                s.requests += group.len();
+                s.batches += 1;
+                s.batch_occupancy_sum += group.len();
+                let a = s.per_adapter.entry(adapter).or_default();
+                a.requests += group.len();
+                a.batches += 1;
+                a.occupancy_sum += group.len();
+                drop(s);
+                for r in group {
+                    let _ = r.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+    if metas.is_empty() {
+        return;
+    }
+    let bsz = row;
+    debug_assert!(bsz <= batch);
+
+    // prompts were validated at submit time: 1..=seq tokens each
+    tok_scratch.clear();
+    tok_scratch.resize(batch * seq, PAD);
+    for (g, group) in metas.iter().zip(&reqs) {
+        for (i, r) in group.iter().enumerate() {
+            let row = g.rows.start + i;
+            tok_scratch[row * seq..row * seq + r.tokens.len()].copy_from_slice(&r.tokens);
+        }
+    }
+
+    let result = backend.forward_fused(&metas, tok_scratch.as_slice());
+
+    {
+        let mut s = stats.lock().unwrap();
+        s.requests += bsz;
+        s.batches += 1;
+        s.batch_occupancy_sum += bsz;
+        s.fused_batches += 1;
+        s.fused_rows += bsz;
+        s.fused_adapters += metas.len();
+        s.upload = backend.upload_stats();
+        for (g, group) in metas.iter().zip(&reqs) {
+            let a = s.per_adapter.entry(g.name.clone()).or_default();
+            a.requests += group.len();
+            a.batches += 1;
+            a.occupancy_sum += group.len();
+        }
+    }
+
+    match result {
+        Ok(logits) => {
+            for (g, group) in metas.iter().zip(reqs) {
+                for (i, r) in group.into_iter().enumerate() {
+                    deliver_reply(&logits, seq, vocab, g.rows.start + i, &g.name, bsz, launch, r);
+                }
+            }
+        }
+        // a multi-group fused forward that ERRORS (not panics) falls
+        // back to serving each group alone, so one group's failure
+        // keeps the serial path's isolation: healthy co-batched
+        // tenants still get answers, only the failing group errors
+        Err(e) if metas.len() > 1 => {
+            run_fused_fallback(backend, metas, reqs, tok_scratch, &e);
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for group in reqs {
+                for r in group {
+                    let _ = r.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Recovery path for a failed multi-group fused forward: re-serve each
+/// group through its own [`ServeBackend::forward`] call (rows packed
+/// from 0, bit-identical to the serial oracle by the fused contract)
+/// and deliver per-group results — exactly the isolation the
+/// pre-fusion path had. The drain's stats were already recorded by
+/// [`run_fused`]; the recovery forwards are not double-counted.
+fn run_fused_fallback(
+    backend: &mut dyn ServeBackend,
+    metas: Vec<AdapterGroup>,
+    reqs: Vec<Vec<Request>>,
+    tok_scratch: &mut Vec<i32>,
+    fused_err: &anyhow::Error,
+) {
+    let (batch, seq, vocab) = backend.shape();
+    for (g, group) in metas.into_iter().zip(reqs) {
+        let bsz = group.len();
+        let launch = Instant::now();
+        tok_scratch.clear();
+        tok_scratch.resize(batch * seq, PAD);
+        for (i, r) in group.iter().enumerate() {
+            tok_scratch[i * seq..i * seq + r.tokens.len()].copy_from_slice(&r.tokens);
+        }
+        match backend.forward(&g.name, g.generation, &g.weights, tok_scratch.as_slice()) {
+            Ok(logits) => {
+                for (i, r) in group.into_iter().enumerate() {
+                    deliver_reply(&logits, seq, vocab, i, &g.name, bsz, launch, r);
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#} (fused forward had failed: {fused_err:#})");
+                for r in group {
+                    let _ = r.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
 /// Pad one same-adapter group into a single forward call and deliver
-/// per-request replies (or the shared error).
+/// per-request replies (or the shared error). The pre-fusion serial
+/// path — kept as the oracle [`run_fused`] is verified against.
 fn run_group(
     backend: &mut dyn ServeBackend,
     registry: &AdapterRegistry,
@@ -362,10 +745,8 @@ fn run_group(
     // prompts were validated at submit time: 1..=seq tokens each
     tok_scratch.clear();
     tok_scratch.resize(batch * seq, PAD);
-    let mut positions = Vec::with_capacity(bsz);
     for (i, r) in group.iter().enumerate() {
         tok_scratch[i * seq..i * seq + r.tokens.len()].copy_from_slice(&r.tokens);
-        positions.push(r.tokens.len() - 1);
     }
 
     let result = registry.merged_tagged(adapter).and_then(|(generation, w)| {
@@ -377,6 +758,7 @@ fn run_group(
         s.requests += bsz;
         s.batches += 1;
         s.batch_occupancy_sum += bsz;
+        s.upload = backend.upload_stats();
         let a = s.per_adapter.entry(adapter.to_string()).or_default();
         a.requests += bsz;
         a.batches += 1;
@@ -386,23 +768,7 @@ fn run_group(
     match result {
         Ok(logits) => {
             for (i, r) in group.into_iter().enumerate() {
-                let off = (i * seq + positions[i]) * vocab;
-                let resp = if off + vocab <= logits.len() {
-                    Ok(Reply {
-                        adapter: adapter.to_string(),
-                        logits: logits[off..off + vocab].to_vec(),
-                        queued: launch - r.enqueued,
-                        latency: r.enqueued.elapsed(),
-                        batch_size: bsz,
-                    })
-                } else {
-                    Err(format!(
-                        "backend returned {} logits, need at least {}",
-                        logits.len(),
-                        off + vocab
-                    ))
-                };
-                let _ = r.reply.send(resp);
+                deliver_reply(&logits, seq, vocab, i, adapter, bsz, launch, r);
             }
         }
         Err(e) => {
@@ -432,5 +798,39 @@ mod tests {
         let a = AdapterServeStats { requests: 6, batches: 3, occupancy_sum: 6 };
         assert!((a.mean_batch_size() - 2.0).abs() < 1e-12);
         assert_eq!(AdapterServeStats::default().mean_batch_size(), 0.0);
+
+        let f = ServerStats {
+            fused_batches: 2,
+            fused_rows: 7,
+            fused_adapters: 3,
+            ..ServerStats::default()
+        };
+        assert!((f.mean_fused_occupancy() - 3.5).abs() < 1e-12);
+        assert_eq!(ServerStats::default().mean_fused_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn slot_plan_groups_in_arrival_order() {
+        let plan = fused_slot_plan(&["b", "a", "b", "c", "a", "b"]);
+        assert_eq!(
+            plan,
+            vec![
+                ("b", vec![0, 2, 5]),
+                ("a", vec![1, 4]),
+                ("c", vec![3]),
+            ]
+        );
+        assert!(fused_slot_plan(&[]).is_empty());
+        let single = fused_slot_plan(&["x"]);
+        assert_eq!(single, vec![("x", vec![0])]);
+    }
+
+    #[test]
+    fn server_config_builders() {
+        let c = ServerConfig::new(Duration::from_millis(3));
+        assert!(c.fused);
+        assert_eq!(c.max_wait, Duration::from_millis(3));
+        assert!(!c.serial().fused);
+        assert!(ServerConfig::default().fused);
     }
 }

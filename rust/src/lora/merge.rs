@@ -43,11 +43,14 @@ pub fn merge_l1_into(l1: &[f32], h: usize, r: usize, beta1: f32, out: &mut Vec<f
     out.clear();
     out.extend_from_slice(l1);
     threads::par_chunks_mut_with(out.as_mut_slice(), r, 64, |i, row| {
+        // the touched columns of row i are exactly j ≡ gi (mod g) with
+        // gi < g, so walk them directly instead of scanning every j
+        // and testing `j % g == gi` (no per-element modulo on the
+        // serving-reload hot path; bit-identical — the touched set and
+        // the single add per element are unchanged)
         let gi = i / seg_i;
-        for (j, v) in row.iter_mut().enumerate() {
-            if j % g == gi {
-                *v += add;
-            }
+        for v in row[gi..].iter_mut().step_by(g) {
+            *v += add;
         }
     });
 }
@@ -70,11 +73,10 @@ pub fn merge_l2_into(l2: &[f32], r: usize, o: usize, beta2: f32, out: &mut Vec<f
     out.clear();
     out.extend_from_slice(l2);
     threads::par_chunks_mut_with(out.as_mut_slice(), o, 64, |i, row| {
+        // strided writes: see merge_l1_into
         let gi = i / seg_i;
-        for (j, v) in row.iter_mut().enumerate() {
-            if j % g == gi {
-                *v += add;
-            }
+        for v in row[gi..].iter_mut().step_by(g) {
+            *v += add;
         }
     });
 }
@@ -192,6 +194,52 @@ mod tests {
             for j in 0..r {
                 let want = if j % g == i / (h / g) { add } else { 0.0 };
                 assert_eq!(m[i * r + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    /// The branchy per-element-modulo form the strided merge replaced,
+    /// kept as the oracle: ℓ̃[i,j] = ℓ[i,j] + add iff j % g == i/seg_i.
+    fn merge_branchy(l: &[f32], rows: usize, cols: usize, g: usize, add: f32) -> Vec<f32> {
+        let seg_i = rows / g;
+        let mut out = l.to_vec();
+        for i in 0..rows {
+            let gi = i / seg_i;
+            for (j, v) in out[i * cols..(i + 1) * cols].iter_mut().enumerate() {
+                if j % g == gi {
+                    *v += add;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn strided_merge_bit_identical_to_branchy_oracle() {
+        let mut rng = Rng::new(79);
+        // multiple, non-multiple, and gcd==1 shapes
+        for (h, r, o) in [
+            (16usize, 4usize, 8usize),
+            (64, 8, 64),
+            (12, 8, 20),
+            (18, 12, 30),
+            (7, 3, 5), // gcd(7,3)=1, gcd(5,3)=1: every element touched
+            (128, 64, 128),
+        ] {
+            let l1 = rng.normal_vec(h * r, 0.0, 0.2);
+            let l2 = rng.normal_vec(r * o, 0.0, 0.2);
+            let (b1, b2) = (rng.normal(), rng.normal());
+            let g1 = gcd(h, r);
+            let want1 = merge_branchy(&l1, h, r, g1, b1 * g1 as f32 / h as f32);
+            let got1 = merge_l1(&l1, h, r, b1);
+            for (i, (a, b)) in got1.iter().zip(&want1).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "l1 h={h} r={r} i={i}");
+            }
+            let g2 = gcd(o, r);
+            let want2 = merge_branchy(&l2, r, o, g2, b2 * g2 as f32 / r as f32);
+            let got2 = merge_l2(&l2, r, o, b2);
+            for (i, (a, b)) in got2.iter().zip(&want2).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "l2 r={r} o={o} i={i}");
             }
         }
     }

@@ -19,7 +19,10 @@
 //! Serve flags:  --workers N (0 = IRQLORA_SERVE_WORKERS, default 2)
 //!               --adapters K  --requests M  --reference (offline
 //!               deterministic backend; also the fallback when
-//!               artifacts are missing)
+//!               artifacts are missing)  --fused (default) /
+//!               --no-fused (per-group serial oracle path)
+//!               --no-steal (disable the work-stealing scheduler;
+//!               also IRQLORA_SERVE_STEAL=0)
 
 use anyhow::{bail, Context, Result};
 
@@ -47,6 +50,8 @@ struct Cli {
     adapters: usize,
     requests: usize,
     reference: bool,
+    fused: bool,
+    steal: bool,
 }
 
 fn parse_args() -> Result<Cli> {
@@ -70,6 +75,8 @@ fn parse_args() -> Result<Cli> {
     let mut adapters = 4usize;
     let mut requests = 64usize;
     let mut reference = false;
+    let mut fused = true;
+    let mut steal = true;
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
@@ -150,6 +157,15 @@ fn parse_args() -> Result<Cli> {
             "--reference" => {
                 reference = true;
             }
+            "--fused" => {
+                fused = true;
+            }
+            "--no-fused" => {
+                fused = false;
+            }
+            "--no-steal" => {
+                steal = false;
+            }
             s if arg.is_none() && !s.starts_with("--") => arg = Some(s.to_string()),
             s => bail!("unknown flag {s}\n{USAGE}"),
         }
@@ -177,6 +193,8 @@ fn parse_args() -> Result<Cli> {
         adapters,
         requests,
         reference,
+        fused,
+        steal,
     })
 }
 
@@ -184,7 +202,8 @@ const USAGE: &str = "usage: irqlora <pretrain|quantize|plan|finetune|serve|table
 [--sizes xs,s] [--pretrain-steps N] [--finetune-steps N] [--eval-per-group N] \
 [--seed N] [--method ARM] [--bits K] [--full] \
 [--budget B] [--floor K] [--ceil K] [--synthetic] [--check] \
-[--workers N] [--adapters K] [--requests M] [--reference]";
+[--workers N] [--adapters K] [--requests M] [--reference] \
+[--fused|--no-fused] [--no-steal]";
 
 fn arm_by_name(name: &str, k: u8) -> Result<Arm> {
     Ok(match name {
@@ -427,14 +446,13 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     const VOCAB: usize = 64;
     let registry = synthetic_serve_registry(n_adapters, cli.cfg.seed);
     let reg = registry.clone();
-    let pool = ServerPool::spawn_with(
-        PoolConfig::new(workers, Duration::from_millis(2)),
-        registry,
-        move |_w| {
-            Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
-                as Box<dyn ServeBackend>)
-        },
-    )?;
+    let mut pcfg = PoolConfig::new(workers, Duration::from_millis(2));
+    pcfg.fused = cli.fused;
+    pcfg.steal = cli.steal;
+    let pool = ServerPool::spawn_with(pcfg, registry, move |_w| {
+        Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+            as Box<dyn ServeBackend>)
+    })?;
     println!(
         "reference pool: {} workers, {n_adapters} adapters, {n_requests} requests",
         pool.workers()
@@ -507,13 +525,10 @@ fn cmd_serve_pjrt(
     let nl = irqlora::coordinator::trainer::train_layout(tspec.inputs.len(), nb)?;
     let lora_specs = tspec.inputs[nb..nb + nl].to_vec();
 
-    let (registry, pool) = serve_pool(
-        manifest,
-        tag,
-        &qm,
-        arm.masks,
-        PoolConfig::new(workers, Duration::from_millis(2)),
-    )?;
+    let mut pcfg = PoolConfig::new(workers, Duration::from_millis(2));
+    pcfg.fused = cli.fused;
+    pcfg.steal = cli.steal;
+    let (registry, pool) = serve_pool(manifest, tag, &qm, arm.masks, pcfg)?;
     for i in 0..n_adapters {
         let mut arng = Rng::new(cli.cfg.seed ^ (0xada0 + i as u64));
         registry.register(
@@ -550,11 +565,16 @@ fn cmd_serve_pjrt(
 fn print_pool_report(stats: &irqlora::coordinator::PoolStats, done: usize, wall: f64) {
     println!(
         "\nserved {done} requests in {wall:.2}s ({:.1} req/s, mean batch {:.2}, \
-         spills {}, reroutes {})",
+         spills {}, reroutes {}, steals {})",
         done as f64 / wall.max(1e-9),
         stats.mean_batch_size(),
         stats.spills,
-        stats.reroutes
+        stats.reroutes,
+        stats.steals
+    );
+    println!(
+        "fused forwards {} of {} (adapter-cache uploads: {} hits / {} misses)",
+        stats.fused_batches, stats.batches, stats.upload_hits, stats.upload_misses
     );
     println!(
         "{:>7} {:>9} {:>9} {:>11} {:>6}",

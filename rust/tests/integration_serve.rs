@@ -58,7 +58,7 @@ fn spawn_server(
     let server = BatchServer::spawn(
         m,
         tag,
-        ServerConfig { max_wait },
+        ServerConfig::new(max_wait),
         registry,
     )
     .unwrap();

@@ -45,11 +45,11 @@ fn tiny_adapter(seed: u64) -> NamedTensors {
 
 fn spawn_reference(
     registry: Arc<AdapterRegistry>,
-    max_wait: Duration,
+    cfg: ServerConfig,
     delay: Duration,
 ) -> BatchServer {
     let reg = registry.clone();
-    BatchServer::spawn_with(ServerConfig { max_wait }, registry, move || {
+    BatchServer::spawn_with(cfg, registry, move || {
         let mut b = ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base());
         b.forward_delay = delay;
         Ok(Box::new(b) as Box<dyn ServeBackend>)
@@ -80,10 +80,15 @@ fn three_plus_adapters_one_quantized_base_no_cross_contamination() {
         .collect();
     let adapter_of = |i: usize| format!("tenant{}", i % 4);
 
-    // oracle: each (adapter, prompt) served alone, sequentially
+    // oracle: each (adapter, prompt) served alone, sequentially, on
+    // the per-group serial path
     let mut expect = Vec::new();
     {
-        let solo = spawn_reference(registry.clone(), Duration::from_millis(1), Duration::ZERO);
+        let solo = spawn_reference(
+            registry.clone(),
+            ServerConfig::new(Duration::from_millis(1)).serial(),
+            Duration::ZERO,
+        );
         for (i, p) in prompts.iter().enumerate() {
             expect.push(solo.query(&adapter_of(i), p.clone()).unwrap().logits);
         }
@@ -91,8 +96,13 @@ fn three_plus_adapters_one_quantized_base_no_cross_contamination() {
     }
 
     // mixed load: submit everything up front, so the batcher's window
-    // deterministically drains full, multi-adapter pending sets
-    let server = spawn_reference(registry.clone(), Duration::from_millis(200), Duration::ZERO);
+    // deterministically drains full, multi-adapter pending sets that
+    // each run as ONE fused forward
+    let server = spawn_reference(
+        registry.clone(),
+        ServerConfig::new(Duration::from_millis(200)),
+        Duration::ZERO,
+    );
     let rxs: Vec<_> = prompts
         .iter()
         .enumerate()
@@ -115,9 +125,14 @@ fn three_plus_adapters_one_quantized_base_no_cross_contamination() {
     let stats = server.stats();
     assert_eq!(stats.requests, prompts.len());
     assert_eq!(stats.batch_occupancy_sum, prompts.len());
-    // pending sets mixed adapters: groups split them, so forward calls
-    // outnumber adapters but stay below one-per-request
+    // fused drains: ONE forward per drained batch even though every
+    // batch mixed all four adapters
     assert!(stats.batches < prompts.len(), "no batching: {stats:?}");
+    assert_eq!(stats.fused_batches, stats.batches, "{stats:?}");
+    assert!(
+        stats.fused_adapters > stats.fused_batches,
+        "drains never mixed adapters: {stats:?}"
+    );
     assert_eq!(stats.per_adapter.len(), 4);
     for i in 0..4 {
         let a = &stats.per_adapter[&adapter_of(i)];
@@ -169,7 +184,7 @@ fn adapter_cache_eviction_reload_bit_identical() {
 fn worker_init_failure_surfaces_cleanly() {
     let registry = Arc::new(AdapterRegistry::new(tiny_base(51), (0.0, 0.0)));
     let err = BatchServer::spawn_with(
-        ServerConfig { max_wait: Duration::from_millis(1) },
+        ServerConfig::new(Duration::from_millis(1)),
         registry,
         || anyhow::bail!("no device for you"),
     )
@@ -192,7 +207,7 @@ fn pjrt_spawn_without_runtime_errors_cleanly() {
         // no artifacts: exercise the error path via a doomed factory
         let registry = Arc::new(AdapterRegistry::new(tiny_base(52), (0.0, 0.0)));
         let r = BatchServer::spawn_with(
-            ServerConfig { max_wait: Duration::from_millis(1) },
+            ServerConfig::new(Duration::from_millis(1)),
             registry.clone(),
             {
                 let reg = registry.clone();
@@ -212,7 +227,7 @@ fn pjrt_spawn_without_runtime_errors_cleanly() {
     let r = BatchServer::spawn(
         manifest,
         "xs",
-        ServerConfig { max_wait: Duration::from_millis(1) },
+        ServerConfig::new(Duration::from_millis(1)),
         registry,
     );
     // either a working PJRT (ok) or a clean error — never a hang
@@ -231,7 +246,7 @@ fn shutdown_drains_in_flight_requests() {
     registry.register("a", tiny_adapter(62)).unwrap();
     let server = spawn_reference(
         registry,
-        Duration::from_millis(1),
+        ServerConfig::new(Duration::from_millis(1)),
         Duration::from_millis(15),
     );
     let rxs: Vec<_> = (0..6)
@@ -254,7 +269,11 @@ fn shutdown_drains_in_flight_requests() {
 fn submit_rejects_malformed_and_unknown_before_batching() {
     let registry = Arc::new(AdapterRegistry::new(tiny_base(71), (0.0, 0.0)));
     registry.register("good", tiny_adapter(72)).unwrap();
-    let server = spawn_reference(registry, Duration::from_millis(1), Duration::ZERO);
+    let server = spawn_reference(
+        registry,
+        ServerConfig::new(Duration::from_millis(1)),
+        Duration::ZERO,
+    );
 
     let err = server.submit("good", vec![]).unwrap_err();
     assert!(format!("{err:#}").contains("out of range"), "{err:#}");
@@ -279,7 +298,11 @@ fn submit_rejects_malformed_and_unknown_before_batching() {
 fn live_registration_and_removal() {
     let registry = Arc::new(AdapterRegistry::new(tiny_base(81), (1.0, 1.0)));
     registry.register("a", tiny_adapter(82)).unwrap();
-    let server = spawn_reference(registry.clone(), Duration::from_millis(1), Duration::ZERO);
+    let server = spawn_reference(
+        registry.clone(),
+        ServerConfig::new(Duration::from_millis(1)),
+        Duration::ZERO,
+    );
 
     assert!(server.submit("late", vec![1, 2]).is_err());
     registry.register("late", tiny_adapter(83)).unwrap();
@@ -290,5 +313,87 @@ fn live_registration_and_removal() {
     assert!(server.submit("late", vec![1, 2]).is_err());
     // the original tenant is untouched
     assert!(server.query("a", vec![3, 4]).is_ok());
+    server.shutdown();
+}
+
+/// A backend that ERRORS (not panics) on one adapter inside a fused
+/// mixed-adapter drain must not poison co-batched tenants: the worker
+/// falls back to per-group execution, the healthy group's replies stay
+/// bit-identical to the serial oracle, and only the failing adapter's
+/// requests error. (A panicking backend is the pool-level blast-radius
+/// test in failure_injection.rs — this covers the recoverable case.)
+#[test]
+fn fused_batch_isolates_an_erroring_adapter_via_per_group_fallback() {
+    struct ErrOnAdapter(ReferenceBackend);
+    impl ServeBackend for ErrOnAdapter {
+        fn shape(&self) -> (usize, usize, usize) {
+            self.0.shape()
+        }
+        fn forward(
+            &mut self,
+            name: &str,
+            generation: u64,
+            weights: &std::sync::Arc<NamedTensors>,
+            tokens: &[i32],
+        ) -> anyhow::Result<Vec<f32>> {
+            if name == "flaky" {
+                anyhow::bail!("injected transient failure for '{name}'");
+            }
+            self.0.forward(name, generation, weights, tokens)
+        }
+        // no forward_fused override: the default per-group scatter
+        // aborts on the flaky group's error, which is exactly what
+        // triggers the server's per-group fallback
+    }
+
+    let base = tiny_base(91);
+    let registry = Arc::new(AdapterRegistry::new(base, (1.0, 1.0)));
+    registry.register("good", tiny_adapter(92)).unwrap();
+    registry.register("flaky", tiny_adapter(93)).unwrap();
+
+    // serial oracle for the healthy tenant
+    let good_prompt = vec![2, 5, 1];
+    let expected = {
+        let reg = registry.clone();
+        let solo = BatchServer::spawn_with(
+            ServerConfig::new(Duration::from_millis(1)).serial(),
+            registry.clone(),
+            move || {
+                Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                    as Box<dyn ServeBackend>)
+            },
+        )
+        .unwrap();
+        let logits = solo.query("good", good_prompt.clone()).unwrap().logits;
+        solo.shutdown();
+        logits
+    };
+
+    let reg = registry.clone();
+    let server = BatchServer::spawn_with(
+        // 200ms window: both submissions land in ONE fused drain
+        ServerConfig::new(Duration::from_millis(200)),
+        registry,
+        move || {
+            Ok(Box::new(ErrOnAdapter(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base())))
+                as Box<dyn ServeBackend>)
+        },
+    )
+    .unwrap();
+
+    let good_rx = server.submit("good", good_prompt.clone()).unwrap();
+    let flaky_rx = server.submit("flaky", vec![1, 2]).unwrap();
+
+    let good_reply = good_rx.recv().unwrap().expect("healthy co-batched tenant failed");
+    assert_eq!(
+        good_reply.logits, expected,
+        "fallback-served healthy tenant diverged from the serial oracle"
+    );
+    let flaky_err = flaky_rx.recv().unwrap().unwrap_err();
+    assert!(flaky_err.contains("injected transient failure"), "{flaky_err}");
+
+    // the worker survived the error — it keeps serving
+    let again = server.query("good", good_prompt).unwrap();
+    assert_eq!(again.logits, expected);
     server.shutdown();
 }

@@ -116,12 +116,14 @@ fn pool_replies_bit_identical_to_serial_oracle_under_contention() {
     let registry = contended_registry(11);
     let stream = request_stream();
 
-    // oracle: one worker, every request served alone, in order
+    // oracle: one worker, every request served alone, in order, on
+    // the pre-fusion per-group SERIAL path — the fused pool replies
+    // must match it bit for bit
     let mut expected: Vec<Vec<f32>> = Vec::with_capacity(stream.len());
     {
         let reg = registry.clone();
         let solo = BatchServer::spawn_with(
-            ServerConfig { max_wait: Duration::from_millis(1) },
+            ServerConfig::new(Duration::from_millis(1)).serial(),
             registry.clone(),
             move || {
                 Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
@@ -201,12 +203,85 @@ fn pool_replies_bit_identical_to_serial_oracle_under_contention() {
         );
     }
     assert_eq!(s.workers.iter().map(|w| w.routed).sum::<usize>(), total);
+    // every pooled forward was a fused drain (the serial path served
+    // only the oracle), and the fingerprint/device cache plumbing
+    // recorded its misses
+    assert_eq!(s.fused_batches, s.batches, "{s:?}");
+    assert!(s.fused_batches >= 1, "{s:?}");
+    assert!(s.upload_misses >= 1, "{s:?}");
     // contention kept re-merging past the oracle's churn
     assert!(
         registry.stats().evictions > oracle_evictions,
         "pooled run added no evictions: {:?}",
         registry.stats()
     );
+    pool.shutdown();
+}
+
+/// Work stealing under a skewed load: one hot adapter floods its home
+/// worker past the park threshold while the other workers sit idle —
+/// the idle workers must pull parked requests from the hot worker's
+/// overflow (steals > 0), and every reply must STILL be bit-identical
+/// to the per-group serial single-server oracle. Skipped when the
+/// environment pins the legacy scheduler (`IRQLORA_SERVE_STEAL=0`);
+/// the rest of this battery covers that path.
+#[test]
+fn stealing_balances_a_saturated_worker_bit_identically() {
+    if !irqlora::coordinator::serve_steal() {
+        return;
+    }
+    let registry = contended_registry(59);
+    const HOT: &str = "tenant0";
+    const N_REQ: usize = 64;
+    let prompts: Vec<Vec<i32>> = (0..N_REQ)
+        .map(|i| {
+            let len = 1 + (i * 3) % SEQ;
+            (0..len).map(|t| ((i * 11 + t * 5) % (VOCAB - 1)) as i32 + 1).collect()
+        })
+        .collect();
+
+    // serial single-server oracle
+    let mut expected: Vec<Vec<f32>> = Vec::with_capacity(N_REQ);
+    {
+        let reg = registry.clone();
+        let solo = BatchServer::spawn_with(
+            ServerConfig::new(Duration::from_millis(1)).serial(),
+            registry.clone(),
+            move || {
+                Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                    as Box<dyn ServeBackend>)
+            },
+        )
+        .unwrap();
+        for p in &prompts {
+            expected.push(solo.query(HOT, p.clone()).unwrap().logits);
+        }
+        solo.shutdown();
+    }
+
+    // slow backend: the home worker cannot keep up with an open-loop
+    // burst, so in-flight crosses the park threshold (2 × BATCH = 8)
+    // and idle workers get something to steal
+    let pool = reference_pool(4, registry, Duration::from_millis(5));
+    assert!(pool.stealing());
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| pool.submit_async(HOT, p.clone()).unwrap())
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait().unwrap_or_else(|e| panic!("request {i}: {e:#}"));
+        assert_eq!(r.logits, expected[i], "stolen/parked request {i} diverged");
+    }
+
+    let s = pool.stats();
+    assert_eq!(s.requests, N_REQ, "{s:?}");
+    assert_eq!(s.parked, 0, "overflow not drained: {s:?}");
+    assert!(
+        s.steals > 0,
+        "64 open-loop requests against a 5ms-per-forward home worker \
+         never got stolen by the 3 idle workers: {s:?}"
+    );
+    assert_eq!(s.spills, 0, "stealing scheduler must not push-spill: {s:?}");
     pool.shutdown();
 }
 
@@ -219,12 +294,13 @@ fn shutdown_drains_all_inflight_async_handles() {
     let registry = contended_registry(23);
     let stream = request_stream();
 
-    // oracle for the wave we will strand in flight
+    // oracle for the wave we will strand in flight (serial per-group
+    // path, so fused drains are checked against the pre-fusion truth)
     let mut expected: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
     {
         let reg = registry.clone();
         let solo = BatchServer::spawn_with(
-            ServerConfig { max_wait: Duration::from_millis(1) },
+            ServerConfig::new(Duration::from_millis(1)).serial(),
             registry.clone(),
             move || {
                 Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))

@@ -347,3 +347,50 @@ fn prop_entropy_bounds_and_permutation_invariance() {
         assert!((h1 - h2).abs() < 1e-12, "seed={seed}: entropy not permutation-invariant");
     });
 }
+
+#[test]
+fn prop_fused_slot_plan_order_and_bounds() {
+    use irqlora::coordinator::fused_slot_plan;
+    // for any drained request sequence (the worker never hands over
+    // more than max_batch requests), the fused slot plan must: cover
+    // every request exactly once, keep submit order within each
+    // adapter, keep groups in first-arrival order, and assign row
+    // spans that never exceed max_batch.
+    cases(40, 31, |seed, rng| {
+        let max_batch = 1 + rng.below(16);
+        let n = 1 + rng.below(max_batch);
+        let n_adapters = 1 + rng.below(6);
+        let ids: Vec<String> =
+            (0..n).map(|_| format!("t{}", rng.below(n_adapters))).collect();
+        let refs: Vec<&str> = ids.iter().map(String::as_str).collect();
+        let plan = fused_slot_plan(&refs);
+
+        // total coverage, each request exactly once
+        let mut seen: Vec<usize> = plan.iter().flat_map(|(_, idx)| idx.clone()).collect();
+        assert_eq!(seen.len(), n, "seed={seed}: row count != request count");
+        assert!(seen.len() <= max_batch, "seed={seed}: exceeded max_batch");
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "seed={seed}: not a permutation");
+
+        let mut first_arrival_prev = None;
+        for (adapter, idx) in &plan {
+            // submit order preserved within the adapter
+            for w in idx.windows(2) {
+                assert!(w[0] < w[1], "seed={seed} {adapter}: submit order broken");
+            }
+            // indices really belong to this adapter
+            for &i in idx {
+                assert_eq!(&refs[i], adapter, "seed={seed}: wrong group for request {i}");
+            }
+            // groups appear in first-arrival order
+            if let Some(prev) = first_arrival_prev {
+                assert!(idx[0] > prev, "seed={seed}: groups out of arrival order");
+            }
+            first_arrival_prev = Some(idx[0]);
+        }
+        // one group per distinct adapter
+        let distinct: std::collections::BTreeSet<&&str> =
+            refs.iter().collect();
+        assert_eq!(plan.len(), distinct.len(), "seed={seed}");
+    });
+}

@@ -38,6 +38,12 @@ echo "== pool concurrency battery (IRQLORA_SERVE_WORKERS=4) =="
 # merged cache (the tests pin the cache capacity themselves).
 (cd rust && IRQLORA_SERVE_WORKERS=4 cargo test -q --test pool_concurrency)
 
+echo "== pool concurrency battery, legacy scheduler (IRQLORA_SERVE_STEAL=0) =="
+# Pin the pre-stealing push-spill scheduler: the kill switch must keep
+# the whole battery green (the steal-specific test self-skips), so the
+# legacy path stays a supported escape hatch, not dead code.
+(cd rust && IRQLORA_SERVE_WORKERS=4 IRQLORA_SERVE_STEAL=0 cargo test -q --test pool_concurrency)
+
 # Formatting gate. Advisory by default (the tree predates the check
 # and this container has no rustfmt to normalize it with); set
 # VERIFY_FMT_STRICT=1 to hard-fail once `cargo fmt` has run.
@@ -94,6 +100,17 @@ if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
     echo "verify.sh: ERROR: serve_latency smoke emitted no per-worker pool rows" >&2
     echo "verify.sh: (the 2-worker reference-backend pool scenario should run without artifacts)" >&2
     exit 7
+  fi
+  if ! grep -q "serve_latency fused workers=" "$SMOKE_JSON" \
+     || ! grep -q "per-group serial" "$SMOKE_JSON"; then
+    echo "verify.sh: ERROR: serve_latency smoke emitted no paired fused/[per-group serial] rows" >&2
+    echo "verify.sh: (the fused-vs-serial reference sweep should run without artifacts)" >&2
+    exit 8
+  fi
+  if ! grep -q "serve_latency pool steal=on" "$SMOKE_JSON" \
+     || ! grep -q "serve_latency pool steal=off" "$SMOKE_JSON"; then
+    echo "verify.sh: ERROR: serve_latency smoke emitted no steal=on/off pool rows" >&2
+    exit 9
   fi
 fi
 
