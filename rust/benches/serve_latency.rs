@@ -32,6 +32,13 @@
 //!   against a 4-worker pool with the work-stealing scheduler on vs
 //!   off (`serve_latency pool steal=on|off workers=4 adapters=8`);
 //!   the printed table carries the steal/spill counters.
+//! - **Saturation** (always runs): open-loop offered load paced at
+//!   ~2× the pool's measured clean throughput against a small parked
+//!   overflow, so admission control actually engages. Rows
+//!   `serve_latency saturation p50|p99|shed workers=4`: delivered
+//!   request wait at p50/p99 (ns_per_iter), shed count (iters of the
+//!   shed row), delivered-vs-shed per_sec. `scripts/verify.sh`
+//!   asserts the family exists in the smoke JSON.
 //!
 //! Run: cargo bench --bench serve_latency
 
@@ -61,6 +68,7 @@ fn main() {
     pool_scaling(&mut sink);
     fused_vs_serial(&mut sink);
     steal_on_off(&mut sink);
+    saturation(&mut sink);
 
     let path = bench_json_path("BENCH_quant.json");
     match sink.write_merged(&path) {
@@ -573,4 +581,154 @@ fn steal_on_off(sink: &mut JsonSink) {
         );
         pool.shutdown();
     }
+}
+
+/// Saturation under admission control: calibrate the pool's clean
+/// closed-loop throughput, then offer an open-loop stream paced at 2×
+/// that rate against a deliberately small parked overflow. Reports
+/// what a graceful-shedding server should show: delivered p50/p99
+/// wait stays bounded while the excess is refused with `Overloaded`
+/// (counted in the `shed` row) instead of growing queues without
+/// limit. With `IRQLORA_SERVE_STEAL=0` the legacy scheduler has no
+/// parked overflow, so the shed row legitimately reads 0.
+fn saturation(sink: &mut JsonSink) {
+    use irqlora::coordinator::ServeError;
+    const BATCH: usize = 8;
+    const SEQ: usize = 32;
+    const VOCAB: usize = 64;
+    const WORKERS: usize = 4;
+    let n_adapters = 4usize;
+    let n_req = (irqlora::bench_harness::iters(512).max(64)).min(1200);
+
+    let registry = synthetic_serve_registry(n_adapters, 17);
+    let reg = registry.clone();
+    let mut cfg = PoolConfig::new(WORKERS, Duration::from_millis(1));
+    cfg.spill_depth = Some(2);
+    cfg.park_bound = Some(16);
+    cfg.park_age = Some(Duration::from_millis(4));
+    let pool = ServerPool::spawn_with(cfg, registry.clone(), move |_w| {
+        Ok(Box::new(
+            ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base())
+                .with_forward_delay(Duration::from_micros(300)),
+        ) as Box<dyn ServeBackend>)
+    })
+    .unwrap();
+
+    let mut rng = Rng::new(29);
+    let mut gen = |i: usize| {
+        let adapter = format!("tenant{}", i % n_adapters);
+        let len = 1 + rng.below(SEQ - 1);
+        let prompt: Vec<i32> = (0..len).map(|_| 1 + rng.below(VOCAB - 1) as i32).collect();
+        (adapter, prompt)
+    };
+
+    // calibration: closed-loop (windowed) clean throughput
+    let cal = irqlora::bench_harness::iters(128).max(32);
+    let t = Timer::start();
+    let mut window = Vec::new();
+    for i in 0..cal {
+        let (adapter, prompt) = gen(i);
+        window.push(pool.submit_async(&adapter, prompt).unwrap());
+        if window.len() >= 8 {
+            for p in window.drain(..) {
+                p.wait().unwrap();
+            }
+        }
+    }
+    for p in window.drain(..) {
+        p.wait().unwrap();
+    }
+    let clean_rate = cal as f64 / t.elapsed_secs().max(1e-9);
+
+    // offered load at 2× the measured clean rate, open loop: nothing
+    // is harvested until every submission is in
+    let gap = Duration::from_secs_f64(1.0 / (2.0 * clean_rate));
+    let mut handles = Vec::new();
+    let mut shed = 0usize;
+    let t = Timer::start();
+    for i in 0..n_req {
+        let (adapter, prompt) = gen(i);
+        match pool.submit_async(&adapter, prompt) {
+            Ok(p) => handles.push(p),
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("saturation submit failed unexpectedly: {e}"),
+        }
+        std::thread::sleep(gap);
+    }
+    // harvest: admitted requests can still be shed while parked (the
+    // 4ms aging bound), which is exactly the graceful degradation this
+    // row measures — count those with the refusals, panic on anything
+    // else (no faults are injected here)
+    let mut waits: Vec<f64> = Vec::new();
+    for p in handles {
+        match p.wait() {
+            Ok(reply) => waits.push(reply.latency.as_secs_f64()),
+            Err(ServeError::DeadlineExceeded { .. }) => shed += 1,
+            Err(e) => panic!("saturation harvest failed unexpectedly: {e}"),
+        }
+    }
+    let wall = t.elapsed_secs();
+    let delivered = waits.len();
+    if waits.is_empty() {
+        // pathological (everything refused): still emit the row family
+        // so downstream greps see it, with honest zeros
+        for row in ["p50", "p99"] {
+            sink.push_raw(&format!("serve_latency saturation {row} workers=4"), 0, 0.0, 0.0, None);
+        }
+        sink.push_raw(
+            "serve_latency saturation shed workers=4",
+            shed,
+            0.0,
+            0.0,
+            Some(shed as f64 / wall),
+        );
+        pool.shutdown();
+        return;
+    }
+    waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| waits[((waits.len() - 1) as f64 * p) as usize];
+    let stats = pool.stats();
+
+    println!(
+        "\nsaturation (reference backend, {WORKERS} workers, 2x clean rate \
+         {:.0} req/s offered, park bound 16):",
+        2.0 * clean_rate
+    );
+    println!(
+        "{:>10} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "delivered", "shed", "p50 ms", "p99 ms", "req/s", "parked peak"
+    );
+    println!(
+        "{:>10} {:>8} {:>12.3} {:>12.3} {:>12.1} {:>12}",
+        delivered,
+        shed,
+        q(0.5) * 1e3,
+        q(0.99) * 1e3,
+        delivered as f64 / wall,
+        stats.parked_peak,
+    );
+    sink.push_raw(
+        "serve_latency saturation p50 workers=4",
+        delivered,
+        q(0.5) * 1e9,
+        waits[0] * 1e9,
+        Some(delivered as f64 / wall),
+    );
+    sink.push_raw(
+        "serve_latency saturation p99 workers=4",
+        delivered,
+        q(0.99) * 1e9,
+        waits[0] * 1e9,
+        Some(delivered as f64 / wall),
+    );
+    // shed row: iters = refused requests; ns fields are meaningless
+    // for refusals and stay zeroed (the pool_scaling convention)
+    sink.push_raw(
+        "serve_latency saturation shed workers=4",
+        shed,
+        0.0,
+        0.0,
+        Some(shed as f64 / wall),
+    );
+    pool.shutdown();
 }

@@ -1,0 +1,305 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! [`FaultBackend`] wraps any [`ServeBackend`] and perturbs its
+//! forward calls according to a seeded, **deterministic** schedule:
+//! given the same [`FaultConfig`] and the same sequence of forward
+//! calls, the same calls fault. There is no clock or RNG draw at
+//! fault-decision time — every decision is a pure function of the
+//! per-backend call counter and the config — so a chaos run is
+//! replayable and the soak battery (`rust/tests/chaos_soak.rs`) can
+//! assert exact counter consistency.
+//!
+//! Fault kinds (each independently optional):
+//! - **error-on-nth-call**: every `error_every`-th forward returns an
+//!   `Err` instead of running (the worker survives — the server
+//!   isolates or falls back, and replies carry
+//!   `ServeError::BackendFault`);
+//! - **panic**: the `panic_after`-th forward panics, killing the
+//!   worker thread (the pool's death handling reroutes subsequent
+//!   traffic);
+//! - **injected latency**: every `delay_every`-th forward sleeps
+//!   `delay` before running (builds queue depth, exercising parking,
+//!   aging, and admission control);
+//! - **per-adapter targeting**: when `target_adapter` is set, a fault
+//!   only fires on calls whose batch contains that adapter — healthy
+//!   tenants ride clean forwards.
+//!
+//! `irqlora serve --chaos <seed>` wires a seed-derived config under
+//! the reference demo; tests construct explicit configs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::model::weights::NamedTensors;
+
+use super::backend::{AdapterGroup, ServeBackend, UploadStats};
+
+/// Deterministic fault schedule for one [`FaultBackend`]. All knobs
+/// count *forward calls* on that backend instance (fused and
+/// per-group calls alike), starting at 1.
+#[derive(Clone, Debug, Default)]
+pub struct FaultConfig {
+    /// Every n-th forward returns an injected error (None: never).
+    pub error_every: Option<u64>,
+    /// The n-th forward panics, killing the worker thread (None:
+    /// never). One-shot by construction — the thread does not survive
+    /// to make an (n+k)-th call.
+    pub panic_after: Option<u64>,
+    /// Every n-th forward sleeps `delay` first (None: never).
+    pub delay_every: Option<u64>,
+    /// Injected sleep for `delay_every` calls.
+    pub delay: Duration,
+    /// Restrict every fault kind to calls whose batch contains this
+    /// adapter (None: any call can fault).
+    pub target_adapter: Option<String>,
+}
+
+impl FaultConfig {
+    /// Derive a full schedule from one seed — the `--chaos <seed>`
+    /// mapping. Pure and stable: the same seed always produces the
+    /// same schedule. Spreads the seed's bits across the knobs so
+    /// nearby seeds still differ; every derived schedule injects
+    /// errors and latency, and two seeds in three also panic one
+    /// worker (exercising death + reroute under load).
+    pub fn from_seed(seed: u64) -> FaultConfig {
+        // FNV-style bit mix so low-entropy seeds (0, 1, 2...) still
+        // spread across the knob ranges
+        let mut x = seed.wrapping_mul(0x100000001b3).wrapping_add(0x9e3779b97f4a7c15);
+        x ^= x >> 29;
+        FaultConfig {
+            error_every: Some(4 + x % 6),
+            panic_after: if x % 3 != 0 { Some(24 + (x >> 8) % 32) } else { None },
+            delay_every: Some(3 + (x >> 16) % 4),
+            delay: Duration::from_micros(100 + (x >> 24) % 400),
+            target_adapter: None,
+        }
+    }
+
+    /// Builder: fault only calls carrying `adapter`.
+    pub fn targeting(mut self, adapter: &str) -> FaultConfig {
+        self.target_adapter = Some(adapter.to_string());
+        self
+    }
+
+    /// Builder: disable the panic knob (e.g. for workers that must
+    /// stay alive through a soak).
+    pub fn no_panic(mut self) -> FaultConfig {
+        self.panic_after = None;
+        self
+    }
+}
+
+/// Injected-fault counters, shared out of the worker thread via
+/// [`FaultBackend::stats`] so tests and the CLI can reconcile observed
+/// failures against what was actually injected.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    /// Forward calls that reached this backend (faulted or not).
+    pub forwards: AtomicU64,
+    /// Calls answered with an injected error.
+    pub errors_injected: AtomicU64,
+    /// Calls that panicked (0 or 1 per backend — the thread dies).
+    pub panics_injected: AtomicU64,
+    /// Calls that slept the injected latency first.
+    pub delays_injected: AtomicU64,
+}
+
+impl FaultStats {
+    pub fn forwards(&self) -> u64 {
+        self.forwards.load(Ordering::Acquire)
+    }
+    pub fn errors(&self) -> u64 {
+        self.errors_injected.load(Ordering::Acquire)
+    }
+    pub fn panics(&self) -> u64 {
+        self.panics_injected.load(Ordering::Acquire)
+    }
+    pub fn delays(&self) -> u64 {
+        self.delays_injected.load(Ordering::Acquire)
+    }
+}
+
+/// [`ServeBackend`] wrapper driven by a [`FaultConfig`] (module docs).
+/// Wraps any backend — reference or PJRT — without touching its
+/// results: a non-faulted call is passed through verbatim, so
+/// delivered replies stay bit-identical to the unwrapped backend's.
+pub struct FaultBackend {
+    inner: Box<dyn ServeBackend>,
+    cfg: FaultConfig,
+    calls: u64,
+    stats: Arc<FaultStats>,
+}
+
+impl FaultBackend {
+    pub fn new(inner: Box<dyn ServeBackend>, cfg: FaultConfig) -> FaultBackend {
+        FaultBackend { inner, cfg, calls: 0, stats: Arc::new(FaultStats::default()) }
+    }
+
+    /// Handle to the injected-fault counters; clone it out before
+    /// moving the backend into a worker.
+    pub fn stats(&self) -> Arc<FaultStats> {
+        self.stats.clone()
+    }
+
+    /// Decide this call's fault. Counts the call, then applies the
+    /// schedule in severity order (panic > error > delay); `targeted`
+    /// is whether the batch contains the target adapter (vacuously
+    /// true without targeting).
+    fn fault_for_call(&mut self, targeted: bool) -> Result<()> {
+        self.calls += 1;
+        self.stats.forwards.fetch_add(1, Ordering::AcqRel);
+        if !targeted {
+            return Ok(());
+        }
+        if self.cfg.panic_after == Some(self.calls) {
+            self.stats.panics_injected.fetch_add(1, Ordering::AcqRel);
+            panic!("chaos: injected panic at forward call {}", self.calls);
+        }
+        if let Some(n) = self.cfg.error_every {
+            if n > 0 && self.calls % n == 0 {
+                self.stats.errors_injected.fetch_add(1, Ordering::AcqRel);
+                bail!("chaos: injected backend error at forward call {}", self.calls);
+            }
+        }
+        if let Some(n) = self.cfg.delay_every {
+            if n > 0 && self.calls % n == 0 && !self.cfg.delay.is_zero() {
+                self.stats.delays_injected.fetch_add(1, Ordering::AcqRel);
+                std::thread::sleep(self.cfg.delay);
+            }
+        }
+        Ok(())
+    }
+
+    fn targets(&self, adapter: &str) -> bool {
+        self.cfg.target_adapter.as_deref().map_or(true, |t| t == adapter)
+    }
+}
+
+impl ServeBackend for FaultBackend {
+    fn shape(&self) -> (usize, usize, usize) {
+        self.inner.shape()
+    }
+
+    fn forward(
+        &mut self,
+        name: &str,
+        generation: u64,
+        weights: &Arc<NamedTensors>,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let targeted = self.targets(name);
+        self.fault_for_call(targeted)?;
+        self.inner.forward(name, generation, weights, tokens)
+    }
+
+    fn forward_fused(&mut self, groups: &[AdapterGroup], tokens: &[i32]) -> Result<Vec<f32>> {
+        let targeted = self
+            .cfg
+            .target_adapter
+            .as_deref()
+            .map_or(true, |t| groups.iter().any(|g| g.name == t));
+        self.fault_for_call(targeted)?;
+        self.inner.forward_fused(groups, tokens)
+    }
+
+    fn upload_stats(&self) -> UploadStats {
+        self.inner.upload_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::ReferenceBackend;
+
+    fn inner() -> Box<dyn ServeBackend> {
+        Box::new(ReferenceBackend::new(2, 4, 6, &NamedTensors::new()))
+    }
+
+    #[test]
+    fn from_seed_is_deterministic_and_seed_sensitive() {
+        for seed in [0u64, 1, 7, 0xdead_beef] {
+            let a = FaultConfig::from_seed(seed);
+            let b = FaultConfig::from_seed(seed);
+            assert_eq!(a.error_every, b.error_every);
+            assert_eq!(a.panic_after, b.panic_after);
+            assert_eq!(a.delay_every, b.delay_every);
+            assert_eq!(a.delay, b.delay);
+            assert!(a.error_every.unwrap() >= 4);
+            assert!(a.delay_every.unwrap() >= 3);
+        }
+        // adjacent seeds must not collapse onto one schedule
+        let spread: std::collections::BTreeSet<u64> =
+            (0..16).map(|s| FaultConfig::from_seed(s).error_every.unwrap()).collect();
+        assert!(spread.len() > 1, "seed mixing collapsed: {spread:?}");
+    }
+
+    #[test]
+    fn error_schedule_fires_on_exact_calls() {
+        let cfg = FaultConfig {
+            error_every: Some(3),
+            ..FaultConfig::default()
+        };
+        let mut fb = FaultBackend::new(inner(), cfg);
+        let stats = fb.stats();
+        let w = Arc::new(NamedTensors::new());
+        let toks = vec![1i32; 2 * 4];
+        for call in 1..=9u64 {
+            let r = fb.forward("a", 0, &w, &toks);
+            if call % 3 == 0 {
+                let e = r.unwrap_err();
+                assert!(format!("{e:#}").contains("chaos"), "{e:#}");
+            } else {
+                assert!(r.is_ok(), "call {call} unexpectedly faulted");
+            }
+        }
+        assert_eq!(stats.forwards(), 9);
+        assert_eq!(stats.errors(), 3);
+        assert_eq!(stats.panics(), 0);
+    }
+
+    #[test]
+    fn targeting_spares_other_adapters() {
+        let cfg = FaultConfig {
+            error_every: Some(1), // every targeted call errors
+            ..FaultConfig::default()
+        }
+        .targeting("victim");
+        let mut fb = FaultBackend::new(inner(), cfg);
+        let stats = fb.stats();
+        let w = Arc::new(NamedTensors::new());
+        let toks = vec![1i32; 2 * 4];
+        assert!(fb.forward("healthy", 0, &w, &toks).is_ok());
+        assert!(fb.forward("victim", 0, &w, &toks).is_err());
+        assert!(fb.forward("healthy", 0, &w, &toks).is_ok());
+        assert_eq!(stats.forwards(), 3);
+        assert_eq!(stats.errors(), 1);
+    }
+
+    #[test]
+    fn untouched_calls_pass_through_bit_identical() {
+        let mut plain = ReferenceBackend::new(2, 4, 6, &NamedTensors::new());
+        let mut fb = FaultBackend::new(inner(), FaultConfig::default());
+        let w = Arc::new(NamedTensors::new());
+        let toks = vec![2i32; 2 * 4];
+        let a = plain.forward("t", 1, &w, &toks).unwrap();
+        let b = fb.forward("t", 1, &w, &toks).unwrap();
+        assert_eq!(a, b, "no-fault wrapper must not perturb logits");
+    }
+
+    #[test]
+    fn panic_schedule_panics_on_exact_call() {
+        let cfg = FaultConfig { panic_after: Some(2), ..FaultConfig::default() };
+        let mut fb = FaultBackend::new(inner(), cfg);
+        let w = Arc::new(NamedTensors::new());
+        let toks = vec![1i32; 2 * 4];
+        assert!(fb.forward("a", 0, &w, &toks).is_ok());
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = fb.forward("a", 0, &w, &toks);
+        }));
+        assert!(caught.is_err(), "second call must panic");
+    }
+}

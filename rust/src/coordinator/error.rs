@@ -1,0 +1,171 @@
+//! Typed serving-failure taxonomy for the pool/server stack.
+//!
+//! Every way a serving request can fail is one [`ServeError`] variant,
+//! so callers can dispatch on the *kind* of failure instead of
+//! grepping message strings (which is what the pre-taxonomy
+//! `Result<_, String>` reply channel forced). The variants split along
+//! the axis a front door actually cares about — **is retrying this
+//! request useful?** ([`ServeError::retryable`]):
+//!
+//! | variant            | meaning                                   | retry? |
+//! |--------------------|-------------------------------------------|--------|
+//! | `Rejected`         | the request itself is bad (malformed      | no     |
+//! |                    | prompt, unknown/evicted adapter)          |        |
+//! | `Overloaded`       | admission control refused it: the bounded | yes,   |
+//! |                    | parked overflow is full                   | later  |
+//! | `DeadlineExceeded` | its per-request deadline passed before a  | no —   |
+//! |                    | forward ran (shed, not executed)          | budget |
+//! |                    |                                           | is gone|
+//! | `WorkerDead`       | a worker died under it (panicking         | yes —  |
+//! |                    | backend); other workers may be healthy    | reroute|
+//! | `BackendFault`     | the forward itself errored (transient or  | maybe  |
+//! |                    | not — the backend's message says)         |        |
+//! | `Shutdown`         | the pool has no alive workers / is gone   | no     |
+//!
+//! The error crosses threads (it travels the reply channel from worker
+//! to handle), so it is `Clone + Send + Sync` and carries owned
+//! strings rather than borrowed sources. It implements
+//! `std::error::Error`, so `?` in an `anyhow::Result` context converts
+//! it transparently — existing callers keep working while typed
+//! callers match on the variant.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Why a serving request failed — see the module docs for the
+/// taxonomy and retryability table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request itself is invalid: malformed prompt, unknown
+    /// adapter at submit, or an adapter evicted between submit and
+    /// drain. Resubmitting the same request is pointless.
+    Rejected(String),
+    /// Admission control refused the request: its home worker is
+    /// saturated AND the bounded parked overflow (`IRQLORA_PARK_BOUND`)
+    /// is full. `depth` is the pool-wide parked count observed;
+    /// `retry_after_hint` is a coarse estimate of when capacity may
+    /// free up (queue depth × batch window) — retry after it.
+    Overloaded {
+        depth: usize,
+        retry_after_hint: Duration,
+    },
+    /// The request's deadline passed before any forward ran for it;
+    /// it was shed (at submit, in the parked overflow, or in the
+    /// drain) instead of executing dead work. `waited` is how long it
+    /// had been queued when shed.
+    DeadlineExceeded { waited: Duration },
+    /// A worker died under the request (panicking backend, exited
+    /// thread). `worker` is the routing target when one can be blamed;
+    /// `None` for parked requests, which any worker may have pulled.
+    /// Other workers may be healthy — resubmitting reroutes.
+    WorkerDead {
+        worker: Option<usize>,
+        reason: String,
+    },
+    /// The backend's forward call itself failed (the worker survived).
+    /// The message is the backend's own; whether a retry helps depends
+    /// on it (transient device hiccup vs deterministic shape error).
+    BackendFault(String),
+    /// The pool is shut down or every worker is dead; nothing will
+    /// serve a resubmit.
+    Shutdown,
+}
+
+impl ServeError {
+    /// Is resubmitting this request potentially useful? `Overloaded`
+    /// (after the hint) and `WorkerDead` (reroutes to a live worker)
+    /// are; `Rejected`/`DeadlineExceeded`/`Shutdown` are not, and
+    /// `BackendFault` is conservatively treated as not (the backend's
+    /// message must be consulted to know better).
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            ServeError::Overloaded { .. } | ServeError::WorkerDead { .. }
+        )
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Rejected(msg) => write!(f, "{msg}"),
+            ServeError::Overloaded { depth, retry_after_hint } => write!(
+                f,
+                "pool overloaded: parked overflow full ({depth} parked); \
+                 retry after ~{}ms",
+                retry_after_hint.as_millis()
+            ),
+            ServeError::DeadlineExceeded { waited } => write!(
+                f,
+                "deadline exceeded: request shed after waiting {waited:?} \
+                 without reaching a forward"
+            ),
+            ServeError::WorkerDead { worker: Some(w), reason } => {
+                write!(f, "pool worker {w} died: {reason}")
+            }
+            ServeError::WorkerDead { worker: None, reason } => write!(f, "{reason}"),
+            ServeError::BackendFault(msg) => write!(f, "backend fault: {msg}"),
+            ServeError::Shutdown => {
+                write!(f, "serving pool is shut down (no alive workers)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retryability_split() {
+        assert!(ServeError::Overloaded {
+            depth: 3,
+            retry_after_hint: Duration::from_millis(2)
+        }
+        .retryable());
+        assert!(ServeError::WorkerDead { worker: Some(1), reason: "died".into() }
+            .retryable());
+        assert!(!ServeError::Rejected("bad prompt".into()).retryable());
+        assert!(
+            !ServeError::DeadlineExceeded { waited: Duration::from_millis(5) }.retryable()
+        );
+        assert!(!ServeError::BackendFault("oom".into()).retryable());
+        assert!(!ServeError::Shutdown.retryable());
+    }
+
+    #[test]
+    fn display_keeps_matchable_substrings() {
+        // callers (and older tests) grep these words — keep them stable
+        let s = ServeError::Rejected("unknown adapter 'x'".into()).to_string();
+        assert!(s.contains("unknown adapter"));
+        let s = ServeError::WorkerDead {
+            worker: Some(2),
+            reason: "died while serving adapter 'a'".into(),
+        }
+        .to_string();
+        assert!(s.contains("died"));
+        let s = ServeError::Overloaded {
+            depth: 7,
+            retry_after_hint: Duration::from_millis(4),
+        }
+        .to_string();
+        assert!(s.contains("overloaded") && s.contains('7'));
+        let s =
+            ServeError::DeadlineExceeded { waited: Duration::from_millis(1) }.to_string();
+        assert!(s.contains("deadline exceeded"));
+        assert!(ServeError::BackendFault("x".into()).to_string().contains("backend fault"));
+        assert!(ServeError::Shutdown.to_string().contains("shut down"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn takes_anyhow() -> anyhow::Result<()> {
+            Err(ServeError::Shutdown)?;
+            Ok(())
+        }
+        let err = takes_anyhow().unwrap_err();
+        assert!(format!("{err:#}").contains("shut down"));
+    }
+}

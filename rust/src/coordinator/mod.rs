@@ -14,10 +14,27 @@
 //!   (one worker, one fused forward per drained batch);
 //! - [`pool`]: N server workers sharded over one registry, with
 //!   adapter-affinity routing, work stealing between idle workers,
-//!   and async submission;
+//!   async submission, and admission control (bounded parked
+//!   overflow, per-request deadlines, parked-request aging, bounded
+//!   dead-worker retry);
+//! - [`error`]: the typed [`ServeError`] taxonomy every serving
+//!   failure resolves to — `Rejected` / `Overloaded` /
+//!   `DeadlineExceeded` / `WorkerDead` / `BackendFault` / `Shutdown`,
+//!   split by whether a retry is useful;
+//! - [`chaos`]: seeded deterministic fault injection
+//!   ([`FaultBackend`] over any `ServeBackend`: error-on-nth-call,
+//!   panic, injected latency, per-adapter targeting) powering the
+//!   chaos soak battery and `irqlora serve --chaos <seed>`;
 //! - [`experiment`]: per-table-row orchestration with run caching.
+//!
+//! Serving env knobs (see the README for the full table):
+//! `IRQLORA_SERVE_WORKERS`, `IRQLORA_SERVE_STEAL`,
+//! `IRQLORA_PARK_BOUND`, `IRQLORA_PARK_AGE_MS`,
+//! `IRQLORA_ADAPTER_CACHE`, `IRQLORA_DEVICE_CACHE`.
 
 pub mod backend;
+pub mod chaos;
+pub mod error;
 pub mod evaluator;
 pub mod experiment;
 pub mod pool;
@@ -30,12 +47,17 @@ pub use backend::{
     device_cache_capacity, AdapterGroup, PjrtBackend, ReferenceBackend, ServeBackend,
     UploadStats,
 };
+pub use chaos::{FaultBackend, FaultConfig, FaultStats};
+pub use error::ServeError;
 pub use evaluator::{EvalResult, Evaluator};
 pub use experiment::{
     plan_quantized, pretrained_base, run_arm, serve_pool, serve_registry,
     synthetic_serve_registry, Arm, ArmResult, RunCfg,
 };
-pub use pool::{serve_steal, Pending, PoolConfig, PoolStats, PoolWorkerStats, ServerPool};
+pub use pool::{
+    park_age, park_bound, serve_steal, Pending, PoolConfig, PoolStats, PoolWorkerStats,
+    ServerPool,
+};
 pub use quantize::{quantize_model, quantize_model_planned, QuantizedModel};
 pub use registry::{AdapterRegistry, RegistryStats};
 pub use server::{fused_slot_plan, BatchServer, Reply, ServerConfig, ServerStats, SubmitError};

@@ -46,12 +46,26 @@
 //!   service.
 //!
 //! Submission is asynchronous: [`ServerPool::submit_async`] returns a
-//! [`Pending`] handle without waiting for the reply (validation
-//! failures — malformed prompt, unknown adapter — still fail fast at
-//! submit time, exactly like `BatchServer::submit`; a completely
-//! saturated pool applies backpressure — see the method docs).
-//! `Pending::wait` blocks for the reply;
-//! `Pending::try_wait` polls. The blocking [`ServerPool::query`] is
+//! [`Pending`] handle without waiting for the reply, and every failure
+//! is a typed [`ServeError`] — validation fails fast with `Rejected`,
+//! exactly like `BatchServer::submit`. **Admission control** bounds the
+//! parked overflow ([`park_bound`], the `IRQLORA_PARK_BOUND` knob):
+//! when a saturated home worker's overflow is full the submit returns
+//! `Overloaded { depth, retry_after_hint }` *immediately* instead of
+//! parking unboundedly, so an open-loop submitter sheds load instead of
+//! growing queues without limit. Requests may carry a per-request
+//! deadline ([`ServerPool::submit_with_deadline`]); one that expires
+//! before its forward launches is shed with `DeadlineExceeded` at
+//! whichever touch point sees it first (submit, parked-overflow pop,
+//! drain) — dead work is never executed. Parked requests **age**: once
+//! parked longer than [`park_age`] (`IRQLORA_PARK_AGE_MS`) they are
+//! promoted ahead of fresh channel arrivals at their home's next
+//! drain, so a home that never goes idle cannot starve its overflow.
+//! Transient dead-worker submits reroute under a bounded retry budget
+//! (counted in [`PoolStats::retries`]).
+//! `Pending::wait` blocks for the reply; `Pending::try_wait` polls;
+//! [`Pending::wait_timeout`] / [`Pending::wait_deadline`] bound the
+//! block. The blocking [`ServerPool::query`] is
 //! submit + wait. [`ServerPool::shutdown`] drains every worker:
 //! already-submitted `Pending` handles all resolve before the workers
 //! exit (same drain semantics as `BatchServer::shutdown`, per worker;
@@ -70,20 +84,23 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvError, TryRecvError};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvError, RecvTimeoutError, TryRecvError,
+};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::runtime::Manifest;
 use crate::util::hash::{fnv1a, FNV1A_SEED};
 
 use super::backend::{PjrtBackend, ServeBackend};
+use super::error::ServeError;
 use super::registry::AdapterRegistry;
 use super::server::{
-    AdapterServeStats, BatchServer, ExitHook, Feeder, Reply, Request, ServerConfig,
-    ServerStats, SubmitError,
+    AdapterServeStats, BatchServer, ExitHook, FeedPass, Feeder, Reply, Request,
+    ServerConfig, ServerStats, SubmitError,
 };
 
 /// Worker count when `IRQLORA_SERVE_WORKERS` is unset.
@@ -128,6 +145,58 @@ fn parse_steal_override(v: &str) -> bool {
     )
 }
 
+/// Parked-overflow capacity when `IRQLORA_PARK_BOUND` is unset: the
+/// pool-wide number of requests that may sit parked before
+/// `submit_async` starts refusing with `ServeError::Overloaded`.
+pub const DEFAULT_PARK_BOUND: usize = 1024;
+
+/// Resolve the parked-overflow bound: the `IRQLORA_PARK_BOUND`
+/// override, else [`DEFAULT_PARK_BOUND`].
+pub fn park_bound() -> usize {
+    std::env::var("IRQLORA_PARK_BOUND")
+        .ok()
+        .and_then(|v| parse_park_bound_override(&v))
+        .unwrap_or(DEFAULT_PARK_BOUND)
+}
+
+/// Interpret an `IRQLORA_PARK_BOUND` value: positive integers are
+/// honored (capped at 2^20 — beyond that the bound is no longer a
+/// memory guarantee); zero and garbage are ignored. Pure so it is
+/// testable without process-global env mutation.
+fn parse_park_bound_override(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n.min(1 << 20)),
+        _ => None,
+    }
+}
+
+/// Aging threshold when `IRQLORA_PARK_AGE_MS` is unset: a request
+/// parked longer than this is promoted ahead of fresh arrivals at its
+/// home worker's next drain.
+pub const DEFAULT_PARK_AGE: Duration = Duration::from_millis(20);
+
+/// Resolve the parked-request aging threshold: the
+/// `IRQLORA_PARK_AGE_MS` override (milliseconds; `0` promotes parked
+/// work ahead of fresh arrivals immediately), else
+/// [`DEFAULT_PARK_AGE`].
+pub fn park_age() -> Duration {
+    std::env::var("IRQLORA_PARK_AGE_MS")
+        .ok()
+        .and_then(|v| parse_park_age_override(&v))
+        .unwrap_or(DEFAULT_PARK_AGE)
+}
+
+/// Interpret an `IRQLORA_PARK_AGE_MS` value: a non-negative integer
+/// millisecond count (capped at 10 minutes; `0` is meaningful —
+/// promote immediately); garbage is ignored. Pure so it is testable
+/// without process-global env mutation.
+fn parse_park_age_override(v: &str) -> Option<Duration> {
+    v.trim()
+        .parse::<u64>()
+        .ok()
+        .map(|ms| Duration::from_millis(ms.min(600_000)))
+}
+
 /// Consistent adapter→worker assignment: FNV-1a over the adapter id
 /// (`util::hash`, the same hash checkpoint checksums use), reduced mod
 /// `n_workers`. Deterministic across processes and runs (no
@@ -160,11 +229,27 @@ pub struct PoolConfig {
     /// `IRQLORA_SERVE_STEAL` env kill switch ([`serve_steal`]), and
     /// inert on single-worker pools.
     pub steal: bool,
+    /// Pool-wide parked-overflow capacity; `None` means [`park_bound`]
+    /// (the `IRQLORA_PARK_BOUND` env default). A full overflow makes
+    /// `submit_async` refuse with `ServeError::Overloaded`.
+    pub park_bound: Option<usize>,
+    /// Parked-request aging threshold; `None` means [`park_age`] (the
+    /// `IRQLORA_PARK_AGE_MS` env default). Parked longer than this, a
+    /// request is promoted ahead of fresh arrivals.
+    pub park_age: Option<Duration>,
 }
 
 impl PoolConfig {
     pub fn new(workers: usize, max_wait: Duration) -> PoolConfig {
-        PoolConfig { workers, max_wait, spill_depth: None, fused: true, steal: true }
+        PoolConfig {
+            workers,
+            max_wait,
+            spill_depth: None,
+            fused: true,
+            steal: true,
+            park_bound: None,
+            park_age: None,
+        }
     }
 
     /// Pin the per-group serial oracle forward path.
@@ -183,32 +268,96 @@ impl PoolConfig {
 /// Pool-level store of parked requests, shared between the submit path
 /// (which parks when a home worker saturates) and the worker feeders
 /// (which pull): one FIFO overflow queue per worker, a pool-wide
-/// parked count for cheap idle checks, and the steal counter.
+/// parked count doubling as the admission-control bound, the aging
+/// threshold, and the steal / shed counters.
 struct StealBus {
     queues: Vec<Mutex<VecDeque<Request>>>,
     parked: AtomicUsize,
     steals: AtomicUsize,
+    /// Pool-wide parked capacity ([`park_bound`] / the config
+    /// override); [`Self::try_park`] refuses beyond it.
+    bound: usize,
+    /// Promotion threshold for [`Self::pop_own_aged`] ([`park_age`]).
+    age: Duration,
+    /// High-water mark of `parked` — by the CAS in
+    /// [`Self::try_park`], can never exceed `bound`.
+    parked_peak: AtomicUsize,
+    /// Parked requests shed with `DeadlineExceeded` at a pop.
+    shed_deadline: AtomicUsize,
 }
 
 impl StealBus {
-    fn new(n: usize) -> StealBus {
+    fn new(n: usize, bound: usize, age: Duration) -> StealBus {
         StealBus {
             queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
             parked: AtomicUsize::new(0),
             steals: AtomicUsize::new(0),
+            bound: bound.max(1),
+            age,
+            parked_peak: AtomicUsize::new(0),
+            shed_deadline: AtomicUsize::new(0),
         }
     }
 
-    fn park(&self, worker: usize, r: Request) {
-        // increment BEFORE pushing: every item visible in a queue has
-        // its increment completed, so a drain's decrement can never
-        // underflow the counter (the transient add-done/push-pending
-        // overcount only costs a harmless empty poll)
-        self.parked.fetch_add(1, Ordering::AcqRel);
+    /// Park `r` for `worker` unless the pool-wide overflow is at its
+    /// bound — then hand the request back so the submit path can
+    /// refuse it with `Overloaded`. The slot is RESERVED by CAS before
+    /// the push (not a load-then-add), so concurrent parkers can never
+    /// drive `parked` past `bound` between them — the admission bound
+    /// is exact, not advisory. (Reserving before pushing also means a
+    /// drain's decrement can never underflow; the transient
+    /// reserved-but-unpushed state only costs a harmless empty poll.)
+    fn try_park(&self, worker: usize, r: Request) -> Result<(), Request> {
+        let mut cur = self.parked.load(Ordering::Acquire);
+        loop {
+            if cur >= self.bound {
+                return Err(r);
+            }
+            match self.parked.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
         self.queues[worker].lock().unwrap().push_back(r);
+        let depth = cur + 1;
+        let mut peak = self.parked_peak.load(Ordering::Acquire);
+        while depth > peak {
+            match self.parked_peak.compare_exchange_weak(
+                peak,
+                depth,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(seen) => peak = seen,
+            }
+        }
+        Ok(())
     }
 
-    /// Pop up to `max` requests parked for `worker` (FIFO).
+    /// Answer every expired request in `popped` with
+    /// `DeadlineExceeded` (counting it) and return the live remainder.
+    /// Runs at every pop — the parked-overflow deadline touch point.
+    fn shed_expired(&self, popped: Vec<Request>, now: Instant) -> Vec<Request> {
+        let mut live = Vec::with_capacity(popped.len());
+        for r in popped {
+            if r.expired(now) {
+                self.shed_deadline.fetch_add(1, Ordering::AcqRel);
+                r.shed_expired();
+            } else {
+                live.push(r);
+            }
+        }
+        live
+    }
+
+    /// Pop up to `max` requests parked for `worker` (FIFO); expired
+    /// ones are shed, not returned.
     fn pop_own(&self, worker: usize, max: usize) -> Vec<Request> {
         if max == 0 || self.parked.load(Ordering::Acquire) == 0 {
             return Vec::new();
@@ -220,13 +369,41 @@ impl StealBus {
         if take > 0 {
             self.parked.fetch_sub(take, Ordering::AcqRel);
         }
-        out
+        self.shed_expired(out, Instant::now())
+    }
+
+    /// Pop up to `max` requests parked for `worker` that have aged past
+    /// the promotion threshold. FIFO order means the queue front is the
+    /// oldest parked request, so the aged set is exactly the queue's
+    /// prefix — the pop stops at the first not-yet-aged request.
+    /// Expired ones are shed, not returned.
+    fn pop_own_aged(&self, worker: usize, max: usize) -> Vec<Request> {
+        if max == 0 || self.parked.load(Ordering::Acquire) == 0 {
+            return Vec::new();
+        }
+        let now = Instant::now();
+        let mut q = self.queues[worker].lock().unwrap();
+        let mut out: Vec<Request> = Vec::new();
+        while out.len() < max {
+            match q.front() {
+                Some(r) if now.duration_since(r.enqueued) >= self.age => {
+                    out.push(q.pop_front().unwrap());
+                }
+                _ => break,
+            }
+        }
+        drop(q);
+        if !out.is_empty() {
+            self.parked.fetch_sub(out.len(), Ordering::AcqRel);
+        }
+        self.shed_expired(out, now)
     }
 
     /// Steal up to `max` requests from the longest overflow queue of
     /// any *other* worker (dead ones included — that is how requests
     /// stranded by a worker death get rescued). FIFO within the
-    /// victim's queue.
+    /// victim's queue; expired ones are shed, not returned (and not
+    /// counted as steals — shed work was never served).
     fn steal_from_busiest(&self, thief: usize, max: usize) -> Vec<Request> {
         if max == 0 || self.parked.load(Ordering::Acquire) == 0 {
             return Vec::new();
@@ -250,9 +427,12 @@ impl StealBus {
         drop(q);
         if take > 0 {
             self.parked.fetch_sub(take, Ordering::AcqRel);
-            self.steals.fetch_add(take, Ordering::AcqRel);
         }
-        out
+        let live = self.shed_expired(out, Instant::now());
+        if !live.is_empty() {
+            self.steals.fetch_add(live.len(), Ordering::AcqRel);
+        }
+        live
     }
 
     /// Drop every parked request (closing their reply senders, so
@@ -346,6 +526,15 @@ struct PoolWorker {
 struct RoutingCounters {
     spills: usize,
     reroutes: usize,
+    /// Transient dead-worker submit reroute retries spent (bounded per
+    /// submit by the pool's retry budget).
+    retries: usize,
+    /// Submits refused with `Overloaded` (parked overflow full).
+    shed_overload: usize,
+    /// Submits shed with `DeadlineExceeded` before reaching a worker
+    /// (the pool-level pre-routing touch point; worker-level and
+    /// parked-overflow sheds are counted where they happen).
+    shed_deadline: usize,
 }
 
 /// One worker's slice of [`PoolStats`].
@@ -388,6 +577,19 @@ pub struct PoolStats {
     pub upload_misses: usize,
     /// Submit-time rejections, summed across workers.
     pub rejected: usize,
+    /// Submits refused with `ServeError::Overloaded` because the
+    /// bounded parked overflow was full (admission control).
+    pub shed_overload: usize,
+    /// Requests shed with `ServeError::DeadlineExceeded`, summed over
+    /// every touch point: pool submit, worker submit/drain, and
+    /// parked-overflow pops.
+    pub shed_deadline: usize,
+    /// Transient dead-worker reroute retries spent at submit (each
+    /// bounded per request by the pool's retry budget).
+    pub retries: usize,
+    /// High-water mark of the parked overflow; never exceeds the
+    /// pool's park bound (`IRQLORA_PARK_BOUND` / config override).
+    pub parked_peak: usize,
     /// Per-adapter occupancy, summed across workers.
     pub per_adapter: BTreeMap<String, AdapterServeStats>,
 }
@@ -421,7 +623,7 @@ impl PoolStats {
 /// handle abandons the reply (the worker still serves the request);
 /// the pool's in-flight accounting settles either way.
 pub struct Pending {
-    rx: Receiver<Result<Reply, String>>,
+    rx: Receiver<Result<Reply, ServeError>>,
     shared: Arc<WorkerShared>,
     worker: usize,
     adapter: String,
@@ -455,24 +657,38 @@ impl Pending {
         }
     }
 
-    fn resolve(&mut self, got: Result<Result<Reply, String>, RecvError>) -> Result<Reply> {
+    fn consumed(&self) -> ServeError {
+        ServeError::Rejected(format!(
+            "reply for adapter '{}' already consumed",
+            self.adapter
+        ))
+    }
+
+    fn resolve(
+        &mut self,
+        got: Result<Result<Reply, ServeError>, RecvError>,
+    ) -> Result<Reply, ServeError> {
         self.settle();
         match got {
-            Ok(Ok(r)) => Ok(r),
-            Ok(Err(e)) => Err(anyhow!("request failed: {e}")),
+            // the worker answered — a reply, or the typed failure it
+            // recorded (Rejected / DeadlineExceeded / BackendFault…):
+            // pass it through untouched
+            Ok(r) => r,
             Err(_) if self.parked => {
                 // a parked request's reply sender can be dropped by
                 // whichever worker pulled it — a dying thief, not
                 // necessarily the (possibly healthy) home this handle
                 // counted against — or by pool teardown. Blame nobody:
                 // an actually-dead server gets marked by its OWN
-                // requests (reply drop above, WorkerGone at submit).
-                Err(anyhow!(
-                    "request for adapter '{}' (parked for worker {}) was dropped \
-                     before a reply — its serving worker died or the pool shut down",
-                    self.adapter,
-                    self.worker
-                ))
+                // requests (reply drop below, WorkerGone at submit).
+                Err(ServeError::WorkerDead {
+                    worker: None,
+                    reason: format!(
+                        "request for adapter '{}' (parked for worker {}) was dropped \
+                         before a reply — its serving worker died or the pool shut down",
+                        self.adapter, self.worker
+                    ),
+                })
             }
             Err(_) => {
                 // the worker dropped our reply sender without
@@ -486,11 +702,13 @@ impl Pending {
                     self.adapter
                 );
                 self.shared.mark_dead(reason);
-                Err(anyhow!(
-                    "pool worker {} died while serving adapter '{}'",
-                    self.worker,
-                    self.adapter
-                ))
+                Err(ServeError::WorkerDead {
+                    worker: Some(self.worker),
+                    reason: format!(
+                        "while serving adapter '{}' (reply dropped without an answer)",
+                        self.adapter
+                    ),
+                })
             }
         }
     }
@@ -498,12 +716,9 @@ impl Pending {
     /// Block until the reply arrives (or the worker dies). Like
     /// [`Self::try_wait`], a reply already consumed by an earlier poll
     /// reports an error — it must not be misread as a worker death.
-    pub fn wait(mut self) -> Result<Reply> {
+    pub fn wait(mut self) -> Result<Reply, ServeError> {
         if self.settled {
-            return Err(anyhow!(
-                "reply for adapter '{}' already consumed",
-                self.adapter
-            ));
+            return Err(self.consumed());
         }
         let got = self.rx.recv();
         self.resolve(got)
@@ -512,18 +727,38 @@ impl Pending {
     /// Poll for the reply: `None` while still in flight. After it has
     /// returned `Some`, the reply is consumed — further polls report
     /// an error rather than misreading the closed channel as a death.
-    pub fn try_wait(&mut self) -> Option<Result<Reply>> {
+    pub fn try_wait(&mut self) -> Option<Result<Reply, ServeError>> {
         if self.settled {
-            return Some(Err(anyhow!(
-                "reply for adapter '{}' already consumed",
-                self.adapter
-            )));
+            return Some(Err(self.consumed()));
         }
         match self.rx.try_recv() {
             Ok(r) => Some(self.resolve(Ok(r))),
             Err(TryRecvError::Empty) => None,
             Err(TryRecvError::Disconnected) => Some(self.resolve(Err(RecvError))),
         }
+    }
+
+    /// [`Self::wait`] bounded by the caller's own patience: blocks at
+    /// most `timeout`, returning `None` when the reply has not arrived
+    /// in time. The handle stays usable after a `None` — call again
+    /// with a fresh timeout, or fall through to a blocking `wait`.
+    /// Once it returns `Some`, the reply is consumed (further calls
+    /// report the consumed error), matching [`Self::try_wait`].
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Result<Reply, ServeError>> {
+        if self.settled {
+            return Some(Err(self.consumed()));
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(self.resolve(Ok(r))),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(self.resolve(Err(RecvError))),
+        }
+    }
+
+    /// [`Self::wait_timeout`] against an absolute deadline (a deadline
+    /// already in the past degenerates to a single non-blocking poll).
+    pub fn wait_deadline(&mut self, deadline: Instant) -> Option<Result<Reply, ServeError>> {
+        self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
     }
 }
 
@@ -545,9 +780,17 @@ pub struct ServerPool {
     /// Pool-wide liveness tally (drives the last-death overflow purge).
     watch: Arc<DeathWatch>,
     spill_depth: usize,
+    /// Per-worker batcher window, kept for the `Overloaded`
+    /// retry-after hint (≈ how long one drained batch occupies a
+    /// worker).
+    max_wait: Duration,
     seq: usize,
     vocab: usize,
 }
+
+/// Sleep between dead-worker submit reroute attempts, scaled by the
+/// attempt number (linear backoff: 50µs, 100µs, …).
+const SUBMIT_RETRY_BACKOFF: Duration = Duration::from_micros(50);
 
 impl ServerPool {
     /// Spawn a pool of PJRT-backed workers over the manifest's
@@ -585,7 +828,9 @@ impl ServerPool {
         // switch wins over the config so verify.sh can pin the legacy
         // scheduler without touching call sites
         let steal = cfg.steal && serve_steal() && n > 1;
-        let bus = steal.then(|| Arc::new(StealBus::new(n)));
+        let bound = cfg.park_bound.unwrap_or_else(park_bound).max(1);
+        let age = cfg.park_age.unwrap_or_else(park_age);
+        let bus = steal.then(|| Arc::new(StealBus::new(n, bound, age)));
         let watch = Arc::new(DeathWatch { alive: AtomicUsize::new(n), bus: bus.clone() });
         let factory = Arc::new(make_backend);
         let mut workers = Vec::with_capacity(n);
@@ -593,12 +838,18 @@ impl ServerPool {
             let f = factory.clone();
             let feeder: Option<Feeder> = bus.as_ref().map(|bus| {
                 let bus = bus.clone();
-                Box::new(move |max: usize| {
-                    let mut got = bus.pop_own(w, max);
-                    if got.is_empty() {
-                        got = bus.steal_from_busiest(w, max);
+                Box::new(move |pass: FeedPass, max: usize| match pass {
+                    // promotion pass: only this worker's own parked
+                    // requests past the aging threshold — stealing
+                    // stays an idle-capacity affair (the Any pass)
+                    FeedPass::Aged => bus.pop_own_aged(w, max),
+                    FeedPass::Any => {
+                        let mut got = bus.pop_own(w, max);
+                        if got.is_empty() {
+                            got = bus.steal_from_busiest(w, max);
+                        }
+                        got
                     }
-                    got
                 }) as Feeder
             });
             let shared = Arc::new(WorkerShared::new(watch.clone()));
@@ -651,6 +902,7 @@ impl ServerPool {
             bus,
             watch,
             spill_depth,
+            max_wait: cfg.max_wait,
             seq,
             vocab,
         })
@@ -717,31 +969,60 @@ impl ServerPool {
     }
 
     /// Submit without waiting for the reply: returns a [`Pending`]
-    /// handle. Malformed prompts and unknown adapters fail here,
-    /// before routing; a dead target worker is marked and the request
-    /// reroutes transparently. With stealing on, a saturated home
-    /// worker's request parks in its overflow (served by the home
-    /// worker when it catches up or by whichever worker goes idle
-    /// first); with stealing off it spills to the least-loaded worker.
-    /// Backpressure caveat: each worker's direct queue is bounded
-    /// (1024 slots), so under the legacy scheduler a fully saturated
-    /// pool can block this call until a slot frees; the stealing
-    /// scheduler parks instead (unbounded overflow), so an open-loop
-    /// submitter that never harvests its handles trades that block for
-    /// parked-queue growth (pool-level deadlines/bounded overflow stay
-    /// a ROADMAP next step).
-    pub fn submit_async(&self, adapter: &str, tokens: Vec<i32>) -> Result<Pending> {
+    /// handle, or a typed [`ServeError`]. Malformed prompts and
+    /// unknown adapters fail here with `Rejected`, before routing; a
+    /// dead target worker is marked and the request reroutes
+    /// transparently (bounded retry budget, counted in
+    /// [`PoolStats::retries`]); an all-dead pool fails with
+    /// `Shutdown`. With stealing on, a saturated home worker's request
+    /// parks in its *bounded* overflow (served by the home worker when
+    /// it catches up, promoted once aged, or pulled by whichever
+    /// worker goes idle first) — and when that overflow is FULL the
+    /// submit refuses with `Overloaded { depth, retry_after_hint }`
+    /// instead of growing queues without limit, so an open-loop
+    /// submitter sheds load at the door. With stealing off it spills
+    /// to the least-loaded worker (each worker's direct queue is
+    /// bounded at 1024 slots, so a fully saturated legacy pool can
+    /// block this call until a slot frees).
+    pub fn submit_async(&self, adapter: &str, tokens: Vec<i32>) -> Result<Pending, ServeError> {
+        self.submit_with_deadline(adapter, tokens, None)
+    }
+
+    /// [`Self::submit_async`] with an optional per-request deadline.
+    /// A request still queued (anywhere — worker channel, parked
+    /// overflow, drained batch) when `deadline` passes is shed with
+    /// `DeadlineExceeded` instead of executing dead work; one that
+    /// reaches its forward before the deadline is served normally.
+    /// `None` waits forever (the plain `submit_async` behavior).
+    pub fn submit_with_deadline(
+        &self,
+        adapter: &str,
+        tokens: Vec<i32>,
+        deadline: Option<Instant>,
+    ) -> Result<Pending, ServeError> {
+        // shed already-dead work before spending any routing effort on
+        // it (the submit-time deadline touch point)
+        if deadline.map_or(false, |d| Instant::now() >= d) {
+            self.routing.lock().unwrap().shed_deadline += 1;
+            return Err(ServeError::DeadlineExceeded { waited: Duration::ZERO });
+        }
         let n = self.workers.len();
         let home = home_worker(adapter, n);
         let mut tokens = tokens;
+        // each WorkerGone reroute marks its worker dead, so the loop
+        // naturally terminates within n iterations; the explicit
+        // budget is a backstop that also drives the backoff and the
+        // observable retry counter
+        let retry_budget = n + 2;
+        let mut attempts = 0usize;
         loop {
             // stealing scheduler: saturated-but-alive home ⇒ park in
             // its overflow, preserving affinity when the home catches
             // up and letting idle siblings pull otherwise
             if let Some(bus) = &self.bus {
-                let (pi, rerouted) = self.first_alive(home).ok_or_else(|| {
-                    anyhow!("all {n} pool workers are dead (adapter '{adapter}')")
-                })?;
+                let Some((pi, rerouted)) = self.first_alive(home) else {
+                    return Err(ServeError::Shutdown);
+                };
                 let w = &self.workers[pi];
                 let depth = w.shared.in_flight.load(Ordering::Acquire);
                 if depth >= self.spill_depth {
@@ -749,15 +1030,28 @@ impl ServerPool {
                     // accounting) a direct submit would get
                     w.server.check_request(adapter, &tokens)?;
                     let (reply_tx, reply_rx) = sync_channel(1);
-                    bus.park(
+                    let parked = bus.try_park(
                         pi,
                         Request {
                             adapter: adapter.to_string(),
                             tokens,
                             enqueued: Instant::now(),
+                            deadline,
                             reply: reply_tx,
                         },
                     );
+                    if let Err(refused) = parked {
+                        // admission control: the bounded overflow is
+                        // full — refuse NOW with a typed, retryable
+                        // error instead of queueing without limit
+                        drop(refused);
+                        self.routing.lock().unwrap().shed_overload += 1;
+                        let parked_depth = bus.parked.load(Ordering::Acquire);
+                        return Err(ServeError::Overloaded {
+                            depth: parked_depth,
+                            retry_after_hint: self.retry_hint(parked_depth),
+                        });
+                    }
                     // close the park-vs-purge race: if the LAST worker
                     // died between the liveness check above and the
                     // push, DeathWatch's purge may have swept an
@@ -784,7 +1078,7 @@ impl ServerPool {
                         settled: false,
                     });
                 }
-                match w.server.try_submit(adapter, tokens) {
+                match w.server.try_submit_at(adapter, tokens, deadline) {
                     Ok(rx) => {
                         if rerouted {
                             self.routing.lock().unwrap().reroutes += 1;
@@ -805,17 +1099,19 @@ impl ServerPool {
                         w.shared
                             .mark_dead("worker exited before accepting a request".to_string());
                         tokens = t;
+                        attempts += 1;
+                        self.count_retry(pi, attempts, retry_budget)?;
                         continue;
                     }
                 }
             }
 
             // legacy scheduler: push-spill off a saturated home
-            let (idx, spilled, rerouted) = self.route(home).ok_or_else(|| {
-                anyhow!("all {n} pool workers are dead (adapter '{adapter}')")
-            })?;
+            let Some((idx, spilled, rerouted)) = self.route(home) else {
+                return Err(ServeError::Shutdown);
+            };
             let w = &self.workers[idx];
-            match w.server.try_submit(adapter, tokens) {
+            match w.server.try_submit_at(adapter, tokens, deadline) {
                 Ok(rx) => {
                     // one off-home cause per request: a dead home is
                     // the root cause even if the replacement was also
@@ -847,34 +1143,79 @@ impl ServerPool {
                     w.shared
                         .mark_dead("worker exited before accepting a request".to_string());
                     tokens = t;
+                    attempts += 1;
+                    self.count_retry(idx, attempts, retry_budget)?;
                 }
             }
         }
     }
 
+    /// Coarse `Overloaded` retry-after estimate: how many batch drains
+    /// (each occupying a worker ≈ one `max_wait` window plus the
+    /// forward) the current parked depth represents.
+    fn retry_hint(&self, parked_depth: usize) -> Duration {
+        let batch = self.workers[0].server.max_batch().max(1);
+        let drains = (parked_depth / batch + 1).min(1 << 16) as u32;
+        self.max_wait.max(Duration::from_millis(1)) * drains
+    }
+
+    /// Count one dead-worker reroute retry (with linear backoff) and
+    /// fail the submit with a typed `WorkerDead` once the budget is
+    /// spent; `Ok(())` means "retry".
+    fn count_retry(
+        &self,
+        worker: usize,
+        attempts: usize,
+        budget: usize,
+    ) -> Result<(), ServeError> {
+        self.routing.lock().unwrap().retries += 1;
+        if attempts > budget {
+            return Err(ServeError::WorkerDead {
+                worker: Some(worker),
+                reason: format!(
+                    "submit retry budget exhausted after {attempts} dead-worker reroutes"
+                ),
+            });
+        }
+        std::thread::sleep(SUBMIT_RETRY_BACKOFF * attempts.min(64) as u32);
+        Ok(())
+    }
+
     /// Submit and wait (the blocking path `BatchServer::query` users
     /// expect).
-    pub fn query(&self, adapter: &str, tokens: Vec<i32>) -> Result<Reply> {
+    pub fn query(&self, adapter: &str, tokens: Vec<i32>) -> Result<Reply, ServeError> {
         self.submit_async(adapter, tokens)?.wait()
     }
 
     /// Aggregate metrics snapshot (module docs).
     pub fn stats(&self) -> PoolStats {
-        let (spills, reroutes) = {
+        let (spills, reroutes, retries, shed_overload, mut shed_deadline) = {
             let r = self.routing.lock().unwrap();
-            (r.spills, r.reroutes)
+            (r.spills, r.reroutes, r.retries, r.shed_overload, r.shed_deadline)
         };
-        let (steals, parked) = self
+        let (steals, parked, parked_peak, bus_shed) = self
             .bus
             .as_ref()
             .map(|b| {
                 (
                     b.steals.load(Ordering::Acquire),
                     b.parked.load(Ordering::Acquire),
+                    b.parked_peak.load(Ordering::Acquire),
+                    b.shed_deadline.load(Ordering::Acquire),
                 )
             })
-            .unwrap_or((0, 0));
-        let mut out = PoolStats { spills, reroutes, steals, parked, ..PoolStats::default() };
+            .unwrap_or((0, 0, 0, 0));
+        shed_deadline += bus_shed;
+        let mut out = PoolStats {
+            spills,
+            reroutes,
+            steals,
+            parked,
+            retries,
+            shed_overload,
+            parked_peak,
+            ..PoolStats::default()
+        };
         for w in &self.workers {
             let server = w.server.stats();
             out.requests += server.requests;
@@ -883,6 +1224,7 @@ impl ServerPool {
             out.upload_hits += server.upload.hits;
             out.upload_misses += server.upload.misses;
             out.rejected += server.rejected;
+            shed_deadline += server.shed_deadline;
             for (name, a) in &server.per_adapter {
                 let e = out.per_adapter.entry(name.clone()).or_default();
                 e.requests += a.requests;
@@ -896,6 +1238,7 @@ impl ServerPool {
                 server,
             });
         }
+        out.shed_deadline = shed_deadline;
         out
     }
 
@@ -1038,6 +1381,11 @@ mod tests {
         assert_eq!(s.spills, 0);
         assert_eq!(s.reroutes, 0);
         assert_eq!(s.steals, 0);
+        // nothing was shed or retried on this uncontended run
+        assert_eq!(s.shed_overload, 0);
+        assert_eq!(s.shed_deadline, 0);
+        assert_eq!(s.retries, 0);
+        assert_eq!(s.parked_peak, 0);
         for i in 0..3 {
             let name = format!("t{i}");
             let home = home_worker(&name, 2);
@@ -1106,6 +1454,246 @@ mod tests {
         let pool = reference_pool(1, registry);
         assert!(!pool.stealing(), "nothing to steal from on a 1-worker pool");
         assert!(pool.query("a", vec![1, 2]).is_ok());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn park_knob_parsing() {
+        assert_eq!(parse_park_bound_override("8"), Some(8));
+        assert_eq!(parse_park_bound_override(" 16 "), Some(16));
+        assert_eq!(parse_park_bound_override("0"), None);
+        assert_eq!(parse_park_bound_override("junk"), None);
+        assert_eq!(parse_park_bound_override("99999999"), Some(1 << 20)); // capped
+        assert!(park_bound() >= 1);
+
+        assert_eq!(parse_park_age_override("0"), Some(Duration::ZERO));
+        assert_eq!(parse_park_age_override(" 25 "), Some(Duration::from_millis(25)));
+        assert_eq!(parse_park_age_override("-3"), None);
+        assert_eq!(parse_park_age_override("junk"), None);
+        assert_eq!(
+            parse_park_age_override("9999999999"),
+            Some(Duration::from_millis(600_000)) // capped
+        );
+    }
+
+    /// Build a `Request` as the park path would, optionally back-dating
+    /// its enqueue time (aging) and attaching a deadline; the receiver
+    /// is returned so sheds can be observed.
+    fn parked_request(
+        adapter: &str,
+        aged_by: Duration,
+        deadline: Option<Instant>,
+    ) -> (Request, Receiver<Result<Reply, ServeError>>) {
+        let (tx, rx) = sync_channel(1);
+        (
+            Request {
+                adapter: adapter.to_string(),
+                tokens: vec![1, 2],
+                enqueued: Instant::now() - aged_by,
+                deadline,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn bus_bound_is_exact_and_peak_tracked() {
+        let bus = StealBus::new(2, 2, Duration::from_millis(20));
+        let (r1, _k1) = parked_request("a", Duration::ZERO, None);
+        let (r2, _k2) = parked_request("a", Duration::ZERO, None);
+        let (r3, _k3) = parked_request("a", Duration::ZERO, None);
+        assert!(bus.try_park(0, r1).is_ok());
+        assert!(bus.try_park(1, r2).is_ok());
+        // the bound is POOL-WIDE: queue 0 holds one, queue 1 holds one,
+        // and a third park anywhere refuses
+        assert!(bus.try_park(0, r3).is_err(), "third park must refuse at bound 2");
+        assert_eq!(bus.parked.load(Ordering::Acquire), 2);
+        assert_eq!(bus.parked_peak.load(Ordering::Acquire), 2);
+        // popping frees capacity again; the peak is a high-water mark
+        assert_eq!(bus.pop_own(0, 8).len(), 1);
+        let (r4, _k4) = parked_request("a", Duration::ZERO, None);
+        assert!(bus.try_park(0, r4).is_ok());
+        assert_eq!(bus.parked_peak.load(Ordering::Acquire), 2);
+    }
+
+    #[test]
+    fn bus_aged_pop_promotes_only_the_aged_prefix() {
+        let bus = StealBus::new(1, 16, Duration::from_secs(2));
+        let (old, _k1) = parked_request("a", Duration::from_secs(5), None);
+        let (fresh, _k2) = parked_request("a", Duration::ZERO, None);
+        assert!(bus.try_park(0, old).is_ok());
+        assert!(bus.try_park(0, fresh).is_ok());
+        // only the aged front comes back; the fresh request stays
+        let got = bus.pop_own_aged(0, 8);
+        assert_eq!(got.len(), 1, "exactly the aged prefix is promoted");
+        assert_eq!(bus.parked.load(Ordering::Acquire), 1);
+        assert!(bus.pop_own_aged(0, 8).is_empty(), "fresh request must not be promoted");
+        assert_eq!(bus.pop_own(0, 8).len(), 1, "the Any pass still drains it");
+    }
+
+    #[test]
+    fn bus_pops_shed_expired_requests() {
+        let bus = StealBus::new(2, 16, Duration::ZERO);
+        let (dead, dead_rx) = parked_request(
+            "a",
+            Duration::from_millis(10),
+            Some(Instant::now() - Duration::from_millis(5)),
+        );
+        let (live, _live_rx) =
+            parked_request("a", Duration::ZERO, Some(Instant::now() + Duration::from_secs(30)));
+        assert!(bus.try_park(0, dead).is_ok());
+        assert!(bus.try_park(0, live).is_ok());
+        let got = bus.pop_own(0, 8);
+        assert_eq!(got.len(), 1, "the expired request must be shed, not returned");
+        assert_eq!(bus.shed_deadline.load(Ordering::Acquire), 1);
+        assert_eq!(bus.parked.load(Ordering::Acquire), 0);
+        match dead_rx.recv().unwrap() {
+            Err(ServeError::DeadlineExceeded { waited }) => {
+                assert!(waited >= Duration::from_millis(5), "{waited:?}");
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        // the steal path sheds too — and a shed is not a steal (it was
+        // never served)
+        let (dead2, dead2_rx) = parked_request(
+            "b",
+            Duration::from_millis(10),
+            Some(Instant::now() - Duration::from_millis(1)),
+        );
+        assert!(bus.try_park(0, dead2).is_ok());
+        assert!(bus.steal_from_busiest(1, 8).is_empty());
+        assert_eq!(bus.steals.load(Ordering::Acquire), 0);
+        assert!(matches!(
+            dead2_rx.recv().unwrap(),
+            Err(ServeError::DeadlineExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn full_overflow_refuses_with_overloaded() {
+        let registry = Arc::new(AdapterRegistry::with_capacity(base(7), (1.0, 1.0), 4));
+        // one adapter homed on each worker, so both drain loops can be
+        // pinned inside their batch fill windows below
+        let hot = (0..64)
+            .map(|i| format!("h{i}"))
+            .find(|n| home_worker(n, 2) == 0)
+            .unwrap();
+        let other = (0..64)
+            .map(|i| format!("o{i}"))
+            .find(|n| home_worker(n, 2) == 1)
+            .unwrap();
+        registry.register(&hot, adapter(70)).unwrap();
+        registry.register(&other, adapter(71)).unwrap();
+        let mut cfg = PoolConfig::new(2, Duration::from_millis(100));
+        cfg.spill_depth = Some(1);
+        cfg.park_bound = Some(1);
+        let reg = registry.clone();
+        let pool = ServerPool::spawn_with(cfg, registry, move |_w| {
+            Ok(Box::new(ReferenceBackend::new(4, 8, 12, reg.base()))
+                as Box<dyn ServeBackend>)
+        })
+        .unwrap();
+        if !pool.stealing() {
+            return; // IRQLORA_SERVE_STEAL=0 run: no overflow to bound
+        }
+        // worker 1 enters its 100ms fill window (so it cannot steal
+        // the parked request while the burst below lands)...
+        let busy_other = pool.submit_async(&other, vec![1, 2]).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        // ...then a burst at worker 0: one direct (depth 1 = spill
+        // threshold), one parked (overflow 1/1), and the third REFUSED
+        let h1 = pool.submit_async(&hot, vec![1, 2]).unwrap();
+        let h2 = pool.submit_async(&hot, vec![1, 3]).unwrap();
+        let err = pool.submit_async(&hot, vec![1, 4]).unwrap_err();
+        match &err {
+            ServeError::Overloaded { depth, retry_after_hint } => {
+                assert!(*depth >= 1, "{err:?}");
+                assert!(*retry_after_hint > Duration::ZERO, "{err:?}");
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert!(err.retryable(), "Overloaded must invite a later retry");
+        // shedding, not collapse: everything ADMITTED is still served
+        busy_other.wait().unwrap();
+        h1.wait().unwrap();
+        h2.wait().unwrap();
+        let s = pool.stats();
+        assert_eq!(s.shed_overload, 1, "{s:?}");
+        assert_eq!(s.parked_peak, 1, "{s:?}");
+        assert_eq!(s.parked, 0, "{s:?}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_shed_at_submit() {
+        let registry = Arc::new(AdapterRegistry::with_capacity(base(8), (1.0, 1.0), 4));
+        registry.register("a", adapter(80)).unwrap();
+        let pool = reference_pool(2, registry);
+        let err = pool
+            .submit_with_deadline(
+                "a",
+                vec![1, 2],
+                Some(Instant::now() - Duration::from_millis(1)),
+            )
+            .unwrap_err();
+        assert!(matches!(err, ServeError::DeadlineExceeded { .. }), "{err:?}");
+        assert!(!err.retryable(), "the request's time budget is gone");
+        // a live deadline serves normally
+        let r = pool
+            .submit_with_deadline("a", vec![1, 2], Some(Instant::now() + Duration::from_secs(30)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.adapter, "a");
+        let s = pool.stats();
+        assert_eq!(s.shed_deadline, 1, "{s:?}");
+        assert_eq!(s.requests, 1, "{s:?}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn wait_timeout_and_deadline_bound_blocking() {
+        let registry = Arc::new(AdapterRegistry::with_capacity(base(9), (1.0, 1.0), 4));
+        registry.register("a", adapter(90)).unwrap();
+        let reg = registry.clone();
+        let pool = ServerPool::spawn_with(
+            PoolConfig::new(1, Duration::from_millis(1)),
+            registry,
+            move |_w| {
+                Ok(Box::new(
+                    ReferenceBackend::new(4, 8, 12, reg.base())
+                        .with_forward_delay(Duration::from_millis(40)),
+                ) as Box<dyn ServeBackend>)
+            },
+        )
+        .unwrap();
+        let mut h = pool.submit_async("a", vec![1, 2]).unwrap();
+        assert!(
+            h.wait_timeout(Duration::from_millis(1)).is_none(),
+            "a 40ms forward cannot answer within 1ms"
+        );
+        let r = h.wait_timeout(Duration::from_secs(30)).expect("must arrive").unwrap();
+        assert_eq!(r.adapter, "a");
+        // consumed: further bounded waits report the consumed error —
+        // never a hang, never a phantom worker death
+        match h.wait_timeout(Duration::from_millis(1)) {
+            Some(Err(ServeError::Rejected(msg))) => {
+                assert!(msg.contains("already consumed"), "{msg}");
+            }
+            other => panic!("expected consumed error, got {other:?}"),
+        }
+        drop(h);
+        let mut h2 = pool.submit_async("a", vec![1, 3]).unwrap();
+        assert!(
+            h2.wait_deadline(Instant::now()).is_none(),
+            "a past deadline degenerates to a non-blocking poll"
+        );
+        let r2 = h2
+            .wait_deadline(Instant::now() + Duration::from_secs(30))
+            .expect("must arrive")
+            .unwrap();
+        assert_eq!(r2.adapter, "a");
         pool.shutdown();
     }
 }

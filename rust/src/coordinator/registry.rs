@@ -45,6 +45,8 @@ use crate::lora::merge::merge_adapter;
 use crate::model::checkpoint;
 use crate::model::weights::{validate_adapter, validate_adapter_shapes, NamedTensors};
 
+use super::error::ServeError;
+
 /// Merged-weight cache capacity when `IRQLORA_ADAPTER_CACHE` is unset.
 pub const DEFAULT_CACHE_CAPACITY: usize = 8;
 
@@ -373,6 +375,27 @@ impl AdapterRegistry {
                 }
             }
         }
+    }
+
+    /// [`Self::merged_tagged`] classified into the serving taxonomy:
+    /// a failure because the adapter is not (or no longer) registered
+    /// is the caller's problem — [`ServeError::Rejected`] — while a
+    /// reload/merge failure of a *registered* adapter is
+    /// infrastructure — [`ServeError::BackendFault`]. The full anyhow
+    /// chain is flattened into the message either way, so existing
+    /// substring matches ("unknown adapter", "reloading adapter")
+    /// keep working.
+    pub(crate) fn merged_for_serving(
+        &self,
+        name: &str,
+    ) -> Result<(u64, Arc<NamedTensors>), ServeError> {
+        self.merged_tagged(name).map_err(|e| {
+            if !self.contains(name) {
+                ServeError::Rejected(format!("{e:#}"))
+            } else {
+                ServeError::BackendFault(format!("{e:#}"))
+            }
+        })
     }
 }
 

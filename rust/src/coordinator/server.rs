@@ -31,6 +31,19 @@
 //! a pull-source of parked requests the worker polls when its own
 //! channel runs dry (own overflow first, work stolen from a saturated
 //! sibling when idle) and tops spare batch slots from after a drain.
+//! Each drain additionally starts by asking the feeder for *aged*
+//! parked requests ([`FeedPass::Aged`]) — a request parked behind a
+//! saturated home is promoted ahead of fresh channel arrivals once it
+//! has waited `IRQLORA_PARK_AGE_MS`, so a home that never goes idle
+//! can no longer starve its overflow.
+//!
+//! Failures travel the reply channel as typed
+//! [`ServeError`](super::error::ServeError) values (not strings):
+//! submit-time validation yields `Rejected`, an expired per-request
+//! deadline sheds with `DeadlineExceeded` before any forward runs
+//! (counted in [`ServerStats::shed_deadline`]), and forward/merge
+//! failures arrive as `BackendFault`/`Rejected` — so callers can
+//! tell retryable from fatal without parsing messages.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
@@ -43,6 +56,7 @@ use crate::data::PAD;
 use crate::runtime::Manifest;
 
 use super::backend::{AdapterGroup, PjrtBackend, ServeBackend, UploadStats};
+use super::error::ServeError;
 use super::registry::AdapterRegistry;
 
 /// One inference reply.
@@ -68,16 +82,46 @@ pub(crate) struct Request {
     pub(crate) adapter: String,
     pub(crate) tokens: Vec<i32>,
     pub(crate) enqueued: Instant,
-    pub(crate) reply: SyncSender<Result<Reply, String>>,
+    /// Shed (with `ServeError::DeadlineExceeded`) instead of served if
+    /// still queued past this instant. `None`: wait forever.
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) reply: SyncSender<Result<Reply, ServeError>>,
+}
+
+impl Request {
+    /// Has this request's deadline passed?
+    pub(crate) fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| now >= d)
+    }
+
+    /// Consume the request, answering it with the deadline-shed error.
+    pub(crate) fn shed_expired(self) {
+        let _ = self
+            .reply
+            .send(Err(ServeError::DeadlineExceeded { waited: self.enqueued.elapsed() }));
+    }
+}
+
+/// Which parked requests a [`Feeder`] poll may return.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum FeedPass {
+    /// Only requests parked longer than the aging threshold
+    /// (`IRQLORA_PARK_AGE_MS`) — polled at the START of each drain, so
+    /// aged parked work is promoted ahead of fresh channel arrivals.
+    Aged,
+    /// Any parked request (own overflow first, then stolen) — polled
+    /// when the channel runs dry and to top spare batch slots.
+    Any,
 }
 
 /// Pull-source of extra requests for a worker, installed by a routing
-/// layer. `feeder(max)` returns at most `max` requests — the worker's
-/// own parked overflow first, then (when that is empty) work stolen
-/// from a saturated or dead sibling, so any worker with spare batch
-/// slots rescues parked requests instead of letting them starve
-/// behind a busy or dead home.
-pub(crate) type Feeder = Box<dyn FnMut(usize) -> Vec<Request> + Send>;
+/// layer. `feeder(pass, max)` returns at most `max` requests — the
+/// worker's own parked overflow first, then (when that is empty) work
+/// stolen from a saturated or dead sibling, so any worker with spare
+/// batch slots rescues parked requests instead of letting them starve
+/// behind a busy or dead home. The [`FeedPass::Aged`] pass restricts
+/// the pull to requests past the aging threshold (promotion).
+pub(crate) type Feeder = Box<dyn FnMut(FeedPass, usize) -> Vec<Request> + Send>;
 
 /// Invoked exactly once when the worker thread exits; the argument is
 /// whether the thread was PANICKING (a backend fault) as opposed to a
@@ -146,6 +190,11 @@ pub struct ServerStats {
     /// Requests rejected at submit time (malformed prompt / unknown
     /// adapter); they never occupied a batch slot.
     pub rejected: usize,
+    /// Requests shed with `DeadlineExceeded` by this worker — expired
+    /// at submit time or in the drain before their forward launched.
+    /// (Requests shed while parked are counted by the pool's overflow
+    /// layer, not here.) Shed work never runs.
+    pub shed_deadline: usize,
     /// Backend adapter-cache counters (device-buffer uploads for PJRT,
     /// fingerprint recomputes for the reference backend), snapshotted
     /// after each forward.
@@ -207,9 +256,13 @@ impl Default for ServerConfig {
 /// to the caller) from a bad *worker* (mark it dead and reroute).
 #[derive(Debug)]
 pub enum SubmitError {
-    /// Malformed prompt or unknown adapter. Counted in
-    /// [`ServerStats::rejected`]; resubmitting elsewhere is pointless.
-    Rejected(anyhow::Error),
+    /// The request cannot be served by ANY worker — a typed
+    /// [`ServeError`]: `Rejected` (malformed prompt / unknown adapter,
+    /// counted in [`ServerStats::rejected`]) or `DeadlineExceeded`
+    /// (already expired at submit, counted in
+    /// [`ServerStats::shed_deadline`]). Resubmitting elsewhere is
+    /// pointless.
+    Rejected(ServeError),
     /// The worker thread is gone (panicked backend or shut down); the
     /// request never reached a queue. The prompt tokens are handed
     /// back so the caller can reroute without a clone.
@@ -329,6 +382,13 @@ impl BatchServer {
                 // siblings), then exits.
                 let mut pending: Vec<Request> = Vec::new();
                 let mut disconnected = false;
+                // aged parked requests FIRST: promoted ahead of
+                // whatever fresh traffic sits in the channel, so a
+                // home that never drains its channel backlog cannot
+                // starve its overflow (`IRQLORA_PARK_AGE_MS`)
+                if let Some(f) = feeder.as_mut() {
+                    pending.extend(f(FeedPass::Aged, batch));
+                }
                 while pending.is_empty() {
                     match rx.try_recv() {
                         Ok(r) => {
@@ -339,7 +399,7 @@ impl BatchServer {
                         Err(TryRecvError::Disconnected) => disconnected = true,
                     }
                     if let Some(f) = feeder.as_mut() {
-                        pending.extend(f(batch));
+                        pending.extend(f(FeedPass::Any, batch));
                         if !pending.is_empty() {
                             break;
                         }
@@ -383,7 +443,25 @@ impl BatchServer {
                 // capacity anywhere in the pool serves parked work
                 if pending.len() < batch {
                     if let Some(f) = feeder.as_mut() {
-                        pending.extend(f(batch - pending.len()));
+                        pending.extend(f(FeedPass::Any, batch - pending.len()));
+                    }
+                }
+
+                // deadline shedding at the drain touch point: a
+                // request whose deadline passed while queued is
+                // answered with `DeadlineExceeded` and never occupies
+                // a batch slot — dead work is shed, not executed
+                let now = Instant::now();
+                if pending.iter().any(|r| r.expired(now)) {
+                    let (live, dead): (Vec<Request>, Vec<Request>) =
+                        pending.into_iter().partition(|r| !r.expired(now));
+                    stats_w.lock().unwrap().shed_deadline += dead.len();
+                    for r in dead {
+                        r.shed_expired();
+                    }
+                    pending = live;
+                    if pending.is_empty() {
+                        continue 'serve;
                     }
                 }
 
@@ -454,17 +532,21 @@ impl BatchServer {
     /// existence), without enqueueing — for routing layers that park
     /// requests in their own queues. Failures are counted in
     /// [`ServerStats::rejected`], exactly like a rejected submit.
-    pub(crate) fn check_request(&self, adapter: &str, tokens: &[i32]) -> Result<()> {
+    pub(crate) fn check_request(&self, adapter: &str, tokens: &[i32]) -> Result<(), ServeError> {
         if tokens.is_empty() || tokens.len() > self.seq {
             self.stats.lock().unwrap().rejected += 1;
-            bail!("prompt length {} out of range 1..={}", tokens.len(), self.seq);
+            return Err(ServeError::Rejected(format!(
+                "prompt length {} out of range 1..={}",
+                tokens.len(),
+                self.seq
+            )));
         }
         if !self.registry.contains(adapter) {
             self.stats.lock().unwrap().rejected += 1;
-            bail!(
+            return Err(ServeError::Rejected(format!(
                 "unknown adapter '{adapter}' (registered: {:?})",
                 self.registry.names()
-            );
+            )));
         }
         Ok(())
     }
@@ -476,10 +558,10 @@ impl BatchServer {
         &self,
         adapter: &str,
         tokens: Vec<i32>,
-    ) -> Result<Receiver<Result<Reply, String>>> {
+    ) -> Result<Receiver<Result<Reply, ServeError>>> {
         match self.try_submit(adapter, tokens) {
             Ok(rx) => Ok(rx),
-            Err(SubmitError::Rejected(e)) => Err(e),
+            Err(SubmitError::Rejected(e)) => Err(e.into()),
             Err(SubmitError::WorkerGone(_)) => Err(anyhow!("server worker exited")),
         }
     }
@@ -493,9 +575,29 @@ impl BatchServer {
         &self,
         adapter: &str,
         tokens: Vec<i32>,
-    ) -> Result<Receiver<Result<Reply, String>>, SubmitError> {
+    ) -> Result<Receiver<Result<Reply, ServeError>>, SubmitError> {
+        self.try_submit_at(adapter, tokens, None)
+    }
+
+    /// [`Self::try_submit`] with an optional per-request deadline: a
+    /// deadline already in the past is shed here (typed
+    /// `DeadlineExceeded`, counted in [`ServerStats::shed_deadline`])
+    /// without touching the queue; one still in the future rides with
+    /// the request and is honored at every later touch point.
+    pub fn try_submit_at(
+        &self,
+        adapter: &str,
+        tokens: Vec<i32>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<Reply, ServeError>>, SubmitError> {
         if let Err(e) = self.check_request(adapter, &tokens) {
             return Err(SubmitError::Rejected(e));
+        }
+        if deadline.map_or(false, |d| Instant::now() >= d) {
+            self.stats.lock().unwrap().shed_deadline += 1;
+            return Err(SubmitError::Rejected(ServeError::DeadlineExceeded {
+                waited: Duration::ZERO,
+            }));
         }
         let Some(tx) = self.tx.as_ref() else {
             return Err(SubmitError::WorkerGone(tokens));
@@ -505,6 +607,7 @@ impl BatchServer {
             adapter: adapter.to_string(),
             tokens,
             enqueued: Instant::now(),
+            deadline,
             reply: reply_tx,
         }) {
             Ok(()) => Ok(reply_rx),
@@ -570,11 +673,11 @@ fn deliver_reply(
             batch_size: bsz,
         })
     } else {
-        Err(format!(
+        Err(ServeError::BackendFault(format!(
             "backend returned {} logits, need at least {}",
             logits.len(),
             off + vocab
-        ))
+        )))
     };
     let _ = r.reply.send(resp);
 }
@@ -600,7 +703,7 @@ fn run_fused(
     let mut reqs: Vec<Vec<Request>> = Vec::with_capacity(groups.len());
     let mut row = 0usize;
     for (adapter, group) in groups {
-        match registry.merged_tagged(&adapter) {
+        match registry.merged_for_serving(&adapter) {
             Ok((generation, weights)) => {
                 let rows = row..row + group.len();
                 row = rows.end;
@@ -608,10 +711,11 @@ fn run_fused(
                 reqs.push(group);
             }
             Err(e) => {
-                // merge failure: this group errors, the rest still
-                // fuse; counted as one attempted batch, mirroring what
-                // the serial oracle path records for the same stream
-                let msg = format!("{e:#}");
+                // merge failure: this group errors (typed — `Rejected`
+                // for an adapter evicted since submit, `BackendFault`
+                // otherwise), the rest still fuse; counted as one
+                // attempted batch, mirroring what the serial oracle
+                // path records for the same stream
                 let mut s = stats.lock().unwrap();
                 s.requests += group.len();
                 s.batches += 1;
@@ -622,7 +726,7 @@ fn run_fused(
                 a.occupancy_sum += group.len();
                 drop(s);
                 for r in group {
-                    let _ = r.reply.send(Err(msg.clone()));
+                    let _ = r.reply.send(Err(e.clone()));
                 }
             }
         }
@@ -678,10 +782,10 @@ fn run_fused(
             run_fused_fallback(backend, metas, reqs, tok_scratch, &e);
         }
         Err(e) => {
-            let msg = format!("{e:#}");
+            let fault = ServeError::BackendFault(format!("{e:#}"));
             for group in reqs {
                 for r in group {
-                    let _ = r.reply.send(Err(msg.clone()));
+                    let _ = r.reply.send(Err(fault.clone()));
                 }
             }
         }
@@ -717,9 +821,11 @@ fn run_fused_fallback(
                 }
             }
             Err(e) => {
-                let msg = format!("{e:#} (fused forward had failed: {fused_err:#})");
+                let fault = ServeError::BackendFault(format!(
+                    "{e:#} (fused forward had failed: {fused_err:#})"
+                ));
                 for r in group {
-                    let _ = r.reply.send(Err(msg.clone()));
+                    let _ = r.reply.send(Err(fault.clone()));
                 }
             }
         }
@@ -749,8 +855,10 @@ fn run_group(
         tok_scratch[i * seq..i * seq + r.tokens.len()].copy_from_slice(&r.tokens);
     }
 
-    let result = registry.merged_tagged(adapter).and_then(|(generation, w)| {
-        backend.forward(adapter, generation, &w, tok_scratch.as_slice())
+    let result = registry.merged_for_serving(adapter).and_then(|(generation, w)| {
+        backend
+            .forward(adapter, generation, &w, tok_scratch.as_slice())
+            .map_err(|e| ServeError::BackendFault(format!("{e:#}")))
     });
 
     {
@@ -772,9 +880,8 @@ fn run_group(
             }
         }
         Err(e) => {
-            let msg = format!("{e:#}");
             for r in group {
-                let _ = r.reply.send(Err(msg.clone()));
+                let _ = r.reply.send(Err(e.clone()));
             }
         }
     }

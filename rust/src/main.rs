@@ -23,6 +23,9 @@
 //!               --no-fused (per-group serial oracle path)
 //!               --no-steal (disable the work-stealing scheduler;
 //!               also IRQLORA_SERVE_STEAL=0)
+//!               --chaos SEED (reference demo under seeded
+//!               deterministic fault injection: per-worker injected
+//!               errors/panics/latency, shed + retry accounting)
 
 use anyhow::{bail, Context, Result};
 
@@ -52,6 +55,7 @@ struct Cli {
     reference: bool,
     fused: bool,
     steal: bool,
+    chaos: Option<u64>,
 }
 
 fn parse_args() -> Result<Cli> {
@@ -77,6 +81,7 @@ fn parse_args() -> Result<Cli> {
     let mut reference = false;
     let mut fused = true;
     let mut steal = true;
+    let mut chaos = None;
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
@@ -166,6 +171,10 @@ fn parse_args() -> Result<Cli> {
             "--no-steal" => {
                 steal = false;
             }
+            "--chaos" => {
+                i += 1;
+                chaos = Some(args.get(i).context("--chaos needs a seed")?.parse()?);
+            }
             s if arg.is_none() && !s.starts_with("--") => arg = Some(s.to_string()),
             s => bail!("unknown flag {s}\n{USAGE}"),
         }
@@ -195,6 +204,7 @@ fn parse_args() -> Result<Cli> {
         reference,
         fused,
         steal,
+        chaos,
     })
 }
 
@@ -203,7 +213,7 @@ const USAGE: &str = "usage: irqlora <pretrain|quantize|plan|finetune|serve|table
 [--seed N] [--method ARM] [--bits K] [--full] \
 [--budget B] [--floor K] [--ceil K] [--synthetic] [--check] \
 [--workers N] [--adapters K] [--requests M] [--reference] \
-[--fused|--no-fused] [--no-steal]";
+[--fused|--no-fused] [--no-steal] [--chaos SEED]";
 
 fn arm_by_name(name: &str, k: u8) -> Result<Arm> {
     Ok(match name {
@@ -431,6 +441,11 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let n_adapters = cli.adapters.max(1);
     let n_requests = cli.requests.max(1);
 
+    if let Some(seed) = cli.chaos {
+        // chaos always runs the deterministic offline backend — the
+        // point is a replayable fault schedule, not artifact coverage
+        return cmd_serve_chaos(cli, workers, n_adapters, n_requests, seed);
+    }
     if !cli.reference {
         match Manifest::load("artifacts") {
             Ok(manifest) => return cmd_serve_pjrt(cli, manifest, workers, n_adapters, n_requests),
@@ -466,6 +481,134 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     })?;
     print_pool_report(&pool.stats(), done, wall);
     pool.shutdown();
+    Ok(())
+}
+
+/// The `serve --chaos SEED` arm: the reference demo with every
+/// worker's backend wrapped in a seed-derived [`FaultBackend`]
+/// (worker w gets `FaultConfig::from_seed(seed ^ w)`), so injected
+/// errors, panics, and latency replay identically for a given seed.
+/// Unlike the clean demo this drive tolerates failed requests: every
+/// outcome is classified and reconciled against the pool's shed/retry
+/// counters and the per-worker injected-fault counters in the report.
+fn cmd_serve_chaos(
+    cli: &Cli,
+    workers: usize,
+    n_adapters: usize,
+    n_requests: usize,
+    seed: u64,
+) -> Result<()> {
+    use irqlora::coordinator::pool::{PoolConfig, ServerPool};
+    use irqlora::coordinator::{
+        synthetic_serve_registry, FaultBackend, FaultConfig, FaultStats, ReferenceBackend,
+        ServeBackend, ServeError,
+    };
+    use irqlora::util::Rng;
+    use std::sync::{Arc, Mutex};
+    use std::time::{Duration, Instant};
+
+    const BATCH: usize = 8;
+    const SEQ: usize = 32;
+    const VOCAB: usize = 64;
+    let registry = synthetic_serve_registry(n_adapters, cli.cfg.seed);
+    let reg = registry.clone();
+    let mut pcfg = PoolConfig::new(workers, Duration::from_millis(2));
+    pcfg.fused = cli.fused;
+    pcfg.steal = cli.steal;
+    let fault_stats: Arc<Mutex<Vec<(usize, Arc<FaultStats>)>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let fs = fault_stats.clone();
+    let pool = ServerPool::spawn_with(pcfg, registry, move |w| {
+        let inner = Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+            as Box<dyn ServeBackend>;
+        let fb = FaultBackend::new(inner, FaultConfig::from_seed(seed ^ w as u64));
+        fs.lock().unwrap().push((w, fb.stats()));
+        Ok(Box::new(fb) as Box<dyn ServeBackend>)
+    })?;
+    println!(
+        "chaos pool: {} workers (seed {seed}), {n_adapters} adapters, {n_requests} requests",
+        pool.workers()
+    );
+
+    #[derive(Default)]
+    struct Tally {
+        delivered: usize,
+        backend_faults: usize,
+        worker_dead: usize,
+        deadline: usize,
+        overloaded: usize,
+        rejected: usize,
+        shutdown: usize,
+    }
+    impl Tally {
+        fn record(&mut self, r: Result<irqlora::coordinator::Reply, ServeError>) {
+            match r {
+                Ok(_) => self.delivered += 1,
+                Err(ServeError::BackendFault(_)) => self.backend_faults += 1,
+                Err(ServeError::WorkerDead { .. }) => self.worker_dead += 1,
+                Err(ServeError::DeadlineExceeded { .. }) => self.deadline += 1,
+                Err(ServeError::Overloaded { .. }) => self.overloaded += 1,
+                Err(ServeError::Rejected(_)) => self.rejected += 1,
+                Err(ServeError::Shutdown) => self.shutdown += 1,
+            }
+        }
+    }
+
+    let mut tally = Tally::default();
+    let mut prng = Rng::new(cli.cfg.seed ^ 0x5e21);
+    let t = irqlora::util::timer::Timer::start();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let adapter = format!("tenant{}", i % n_adapters);
+        let len = 1 + prng.below(SEQ - 1);
+        let prompt: Vec<i32> = (0..len).map(|_| 1 + prng.below(VOCAB - 1) as i32).collect();
+        // every 8th request carries a tight deadline so shedding is on
+        // the menu even when the pool keeps up
+        let deadline = (i % 8 == 7).then(|| Instant::now() + Duration::from_millis(5));
+        match pool.submit_with_deadline(&adapter, prompt, deadline) {
+            Ok(p) => pending.push(p),
+            Err(e) => tally.record(Err(e)),
+        }
+        if pending.len() >= 64 {
+            for p in pending.drain(..) {
+                tally.record(p.wait());
+            }
+        }
+    }
+    for p in pending.drain(..) {
+        tally.record(p.wait());
+    }
+    let wall = t.elapsed_secs();
+
+    let stats = pool.stats();
+    print_pool_report(&stats, tally.delivered, wall);
+    println!(
+        "chaos outcomes: {} delivered, {} backend faults, {} worker-dead, \
+         {} deadline, {} overloaded, {} rejected, {} shutdown",
+        tally.delivered,
+        tally.backend_faults,
+        tally.worker_dead,
+        tally.deadline,
+        tally.overloaded,
+        tally.rejected,
+        tally.shutdown
+    );
+    let mut injected = fault_stats.lock().unwrap();
+    injected.sort_by_key(|(w, _)| *w);
+    for (w, s) in injected.iter() {
+        println!(
+            "worker {w} injected: {} forwards, {} errors, {} panics, {} delays",
+            s.forwards(),
+            s.errors(),
+            s.panics(),
+            s.delays()
+        );
+    }
+    drop(injected);
+    pool.shutdown();
+    if tally.delivered == 0 {
+        bail!("chaos run delivered nothing — the pool lost liveness under injected faults");
+    }
     Ok(())
 }
 
@@ -575,6 +718,10 @@ fn print_pool_report(stats: &irqlora::coordinator::PoolStats, done: usize, wall:
     println!(
         "fused forwards {} of {} (adapter-cache uploads: {} hits / {} misses)",
         stats.fused_batches, stats.batches, stats.upload_hits, stats.upload_misses
+    );
+    println!(
+        "admission: shed_overload {}, shed_deadline {}, submit retries {}, parked peak {}",
+        stats.shed_overload, stats.shed_deadline, stats.retries, stats.parked_peak
     );
     println!(
         "{:>7} {:>9} {:>9} {:>11} {:>6}",

@@ -38,6 +38,76 @@ const VERSION_PLANNED: u32 = 2;
 /// Cap on the serialized plan section (a plan is a few dozen bytes per
 /// tensor; anything near this is corruption).
 const MAX_PLAN_BYTES: usize = 1 << 24;
+/// Smallest possible on-disk footprint of one tensor entry (empty
+/// name, rank 0, no data): name_len u32 + rank u32. Used to bound the
+/// header's tensor count against the real file size.
+const MIN_ENTRY_BYTES: u64 = 8;
+
+/// Typed rejection reasons for `.irqc` parsing. Every reader returns
+/// one of these (wrapped in [`anyhow::Error`]) instead of panicking or
+/// allocating unbounded memory when fed a truncated or crafted file —
+/// the header is fully distrusted: counts and lengths are checked
+/// against the actual on-disk size before any allocation or seek.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// The first four bytes are not `IRQC`.
+    BadMagic,
+    /// A version this build does not know how to read.
+    UnsupportedVersion(u32),
+    /// The header claims more tensors than the file could possibly
+    /// hold (each entry needs ≥ [`MIN_ENTRY_BYTES`] bytes).
+    AbsurdCount { count: u64, file_len: u64 },
+    /// Plan section longer than [`MAX_PLAN_BYTES`] or than the file.
+    PlanTooLarge { plan_len: u64, file_len: u64 },
+    /// A tensor name longer than the 4096-byte cap.
+    NameTooLong(u64),
+    /// A tensor rank beyond the supported 8 dims.
+    RankTooLarge(u64),
+    /// Dims whose element product overflows or exceeds the 2^30 cap.
+    TensorTooLarge(Vec<usize>),
+    /// A tensor's data payload extends past the end of the file.
+    DataOverrun { needed: u64, file_len: u64 },
+    /// Payload bytes do not hash to the stored trailer checksum.
+    ChecksumMismatch,
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::BadMagic => write!(f, "not an IRQC checkpoint"),
+            CheckpointError::UnsupportedVersion(v) => {
+                write!(f, "unsupported checkpoint version {v}")
+            }
+            CheckpointError::AbsurdCount { count, file_len } => write!(
+                f,
+                "corrupt checkpoint: header claims {count} tensors but the file \
+                 is only {file_len} bytes"
+            ),
+            CheckpointError::PlanTooLarge { plan_len, file_len } => write!(
+                f,
+                "corrupt checkpoint: plan section of {plan_len} bytes \
+                 (file is {file_len} bytes)"
+            ),
+            CheckpointError::NameTooLong(n) => {
+                write!(f, "corrupt checkpoint: name length {n}")
+            }
+            CheckpointError::RankTooLarge(r) => write!(f, "corrupt checkpoint: rank {r}"),
+            CheckpointError::TensorTooLarge(dims) => {
+                write!(f, "corrupt checkpoint: tensor too large {dims:?}")
+            }
+            CheckpointError::DataOverrun { needed, file_len } => write!(
+                f,
+                "truncated checkpoint: tensor data needs {needed} bytes but the \
+                 file is only {file_len} bytes"
+            ),
+            CheckpointError::ChecksumMismatch => {
+                write!(f, "checkpoint checksum mismatch — file corrupt")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
 
 /// Save without a plan — version-1 bytes, identical to every
 /// checkpoint written before the mixed-precision planner existed.
@@ -96,34 +166,52 @@ fn save_impl(nt: &NamedTensors, plan: Option<&PrecisionPlan>, path: &Path) -> Re
     Ok(())
 }
 
+/// Open a checkpoint for reading plus its real on-disk length — the
+/// bound every header-declared count and size is checked against.
+fn open_checked(path: &Path) -> Result<(std::io::BufReader<std::fs::File>, u64)> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("opening checkpoint {}", path.display()))?
+        .len();
+    Ok((std::io::BufReader::new(f), file_len))
+}
+
 /// Shared header prelude of every reader: magic, version (validated
-/// against the two known formats), tensor count.
-fn read_prelude(f: &mut impl Read) -> Result<(u32, usize)> {
+/// against the two known formats), tensor count (validated against
+/// what `file_len` bytes could possibly hold, so a crafted count of
+/// 2^32 cannot drive a 2^32-iteration parse loop or a pre-allocation).
+fn read_prelude(f: &mut impl Read, file_len: u64) -> Result<(u32, usize)> {
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        bail!("not an IRQC checkpoint");
+        return Err(CheckpointError::BadMagic.into());
     }
     let mut u32b = [0u8; 4];
     f.read_exact(&mut u32b)?;
     let version = u32::from_le_bytes(u32b);
     if version != VERSION && version != VERSION_PLANNED {
-        bail!("unsupported checkpoint version {version}");
+        return Err(CheckpointError::UnsupportedVersion(version).into());
     }
     f.read_exact(&mut u32b)?;
-    Ok((version, u32::from_le_bytes(u32b) as usize))
+    let count = u32::from_le_bytes(u32b) as u64;
+    if count > file_len / MIN_ENTRY_BYTES {
+        return Err(CheckpointError::AbsurdCount { count, file_len }.into());
+    }
+    Ok((version, count as usize))
 }
 
 /// The version-2 plan section: length-prefixed blob, capped at
-/// [`MAX_PLAN_BYTES`].
-fn read_plan_blob(f: &mut impl Read) -> Result<Vec<u8>> {
+/// [`MAX_PLAN_BYTES`] and at the file's own size.
+fn read_plan_blob(f: &mut impl Read, file_len: u64) -> Result<Vec<u8>> {
     let mut u32b = [0u8; 4];
     f.read_exact(&mut u32b)?;
-    let plan_len = u32::from_le_bytes(u32b) as usize;
-    if plan_len > MAX_PLAN_BYTES {
-        bail!("corrupt checkpoint: plan section of {plan_len} bytes");
+    let plan_len = u32::from_le_bytes(u32b) as u64;
+    if plan_len > MAX_PLAN_BYTES as u64 || plan_len > file_len {
+        return Err(CheckpointError::PlanTooLarge { plan_len, file_len }.into());
     }
-    let mut blob = vec![0u8; plan_len];
+    let mut blob = vec![0u8; plan_len as usize];
     f.read_exact(&mut blob)?;
     Ok(blob)
 }
@@ -131,11 +219,22 @@ fn read_plan_blob(f: &mut impl Read) -> Result<Vec<u8>> {
 /// Element count of a header's dims with overflow treated as
 /// corruption (a crafted header like [2^33, 2^31] must not wrap to a
 /// small product and dodge the size cap).
-fn checked_elems(dims: &[usize]) -> Result<usize> {
+fn checked_elems(dims: &[usize]) -> Result<usize, CheckpointError> {
     dims.iter()
         .try_fold(1usize, |acc, &d| acc.checked_mul(d))
         .filter(|&n| n <= 1 << 30)
-        .ok_or_else(|| anyhow::anyhow!("corrupt checkpoint: tensor too large {dims:?}"))
+        .ok_or_else(|| CheckpointError::TensorTooLarge(dims.to_vec()))
+}
+
+/// Bytes one tensor's f32 payload claims, rejected up front when it
+/// cannot fit in the file — the guard that keeps `load` from
+/// allocating gigabytes for a kilobyte of crafted header.
+fn checked_data_len(n: usize, file_len: u64) -> Result<usize, CheckpointError> {
+    let needed = n as u64 * 4;
+    if needed > file_len {
+        return Err(CheckpointError::DataOverrun { needed, file_len });
+    }
+    Ok(needed as usize)
 }
 
 /// Load the tensors of a (version 1 or 2) checkpoint, discarding any
@@ -150,17 +249,14 @@ pub fn load_with_plan(
     path: impl AsRef<Path>,
 ) -> Result<(NamedTensors, Option<PrecisionPlan>)> {
     let path = path.as_ref();
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path)
-            .with_context(|| format!("opening checkpoint {}", path.display()))?,
-    );
+    let (mut f, file_len) = open_checked(path)?;
     let (version, count) =
-        read_prelude(&mut f).with_context(|| format!("reading {}", path.display()))?;
+        read_prelude(&mut f, file_len).with_context(|| format!("reading {}", path.display()))?;
 
     let mut out = NamedTensors::new();
     let mut check = FNV1A_SEED;
     let plan = if version == VERSION_PLANNED {
-        let blob = read_plan_blob(&mut f)?;
+        let blob = read_plan_blob(&mut f, file_len)?;
         check = fnv1a(check, &blob);
         Some(PrecisionPlan::from_bytes(&blob).context("checkpoint precision plan")?)
     } else {
@@ -169,26 +265,26 @@ pub fn load_with_plan(
     let mut u32b = [0u8; 4];
     for _ in 0..count {
         f.read_exact(&mut u32b)?;
-        let name_len = u32::from_le_bytes(u32b) as usize;
+        let name_len = u32::from_le_bytes(u32b) as u64;
         if name_len > 4096 {
-            bail!("corrupt checkpoint: name length {name_len}");
+            return Err(CheckpointError::NameTooLong(name_len).into());
         }
-        let mut name = vec![0u8; name_len];
+        let mut name = vec![0u8; name_len as usize];
         f.read_exact(&mut name)?;
         let name = String::from_utf8(name).context("non-utf8 tensor name")?;
         f.read_exact(&mut u32b)?;
-        let rank = u32::from_le_bytes(u32b) as usize;
+        let rank = u32::from_le_bytes(u32b) as u64;
         if rank > 8 {
-            bail!("corrupt checkpoint: rank {rank}");
+            return Err(CheckpointError::RankTooLarge(rank).into());
         }
-        let mut dims = Vec::with_capacity(rank);
+        let mut dims = Vec::with_capacity(rank as usize);
         let mut u64b = [0u8; 8];
         for _ in 0..rank {
             f.read_exact(&mut u64b)?;
             dims.push(u64::from_le_bytes(u64b) as usize);
         }
         let n = checked_elems(&dims)?;
-        let mut bytes = vec![0u8; n * 4];
+        let mut bytes = vec![0u8; checked_data_len(n, file_len)?];
         f.read_exact(&mut bytes)?;
         check = fnv1a(check, &bytes);
         let data: Vec<f32> = bytes
@@ -201,7 +297,7 @@ pub fn load_with_plan(
     f.read_exact(&mut u64b)
         .context("truncated checkpoint (missing checksum)")?;
     if u64::from_le_bytes(u64b) != check {
-        bail!("checkpoint checksum mismatch — file corrupt");
+        return Err(CheckpointError::ChecksumMismatch.into());
     }
     Ok((out, plan))
 }
@@ -215,40 +311,45 @@ pub fn load_with_plan(
 pub fn peek_entries(path: impl AsRef<Path>) -> Result<Vec<(String, Vec<usize>)>> {
     use std::io::{Seek, SeekFrom};
     let path = path.as_ref();
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path)
-            .with_context(|| format!("opening checkpoint {}", path.display()))?,
-    );
+    let (mut f, file_len) = open_checked(path)?;
     let (version, count) =
-        read_prelude(&mut f).with_context(|| format!("reading {}", path.display()))?;
+        read_prelude(&mut f, file_len).with_context(|| format!("reading {}", path.display()))?;
     if version == VERSION_PLANNED {
-        read_plan_blob(&mut f)?; // peek skips the plan (it is small)
+        read_plan_blob(&mut f, file_len)?; // peek skips the plan (it is small)
     }
 
     let mut u32b = [0u8; 4];
     let mut out = Vec::with_capacity(count.min(4096));
     for _ in 0..count {
         f.read_exact(&mut u32b)?;
-        let name_len = u32::from_le_bytes(u32b) as usize;
+        let name_len = u32::from_le_bytes(u32b) as u64;
         if name_len > 4096 {
-            bail!("corrupt checkpoint: name length {name_len}");
+            return Err(CheckpointError::NameTooLong(name_len).into());
         }
-        let mut name = vec![0u8; name_len];
+        let mut name = vec![0u8; name_len as usize];
         f.read_exact(&mut name)?;
         let name = String::from_utf8(name).context("non-utf8 tensor name")?;
         f.read_exact(&mut u32b)?;
-        let rank = u32::from_le_bytes(u32b) as usize;
+        let rank = u32::from_le_bytes(u32b) as u64;
         if rank > 8 {
-            bail!("corrupt checkpoint: rank {rank}");
+            return Err(CheckpointError::RankTooLarge(rank).into());
         }
-        let mut dims = Vec::with_capacity(rank);
+        let mut dims = Vec::with_capacity(rank as usize);
         let mut u64b = [0u8; 8];
         for _ in 0..rank {
             f.read_exact(&mut u64b)?;
             dims.push(u64::from_le_bytes(u64b) as usize);
         }
         let n = checked_elems(&dims)?;
-        f.seek(SeekFrom::Current(n as i64 * 4))
+        // a seek can't OOM and never fails past EOF, so peek must
+        // check the span against the bytes actually left in the file —
+        // the same truncation load would hit as a failed read_exact
+        let span = checked_data_len(n, file_len)? as u64;
+        let pos = f.stream_position()?;
+        if pos.saturating_add(span) > file_len {
+            return Err(CheckpointError::DataOverrun { needed: span, file_len }.into());
+        }
+        f.seek(SeekFrom::Current(span as i64))
             .context("seeking past tensor data")?;
         out.push((name, dims));
     }
@@ -260,16 +361,13 @@ pub fn peek_entries(path: impl AsRef<Path>) -> Result<Vec<(String, Vec<usize>)>>
 /// Like [`peek_entries`], this does NOT verify the file checksum.
 pub fn peek_plan(path: impl AsRef<Path>) -> Result<Option<PrecisionPlan>> {
     let path = path.as_ref();
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path)
-            .with_context(|| format!("opening checkpoint {}", path.display()))?,
-    );
+    let (mut f, file_len) = open_checked(path)?;
     let (version, _count) =
-        read_prelude(&mut f).with_context(|| format!("reading {}", path.display()))?;
+        read_prelude(&mut f, file_len).with_context(|| format!("reading {}", path.display()))?;
     if version != VERSION_PLANNED {
         return Ok(None);
     }
-    let blob = read_plan_blob(&mut f)?;
+    let blob = read_plan_blob(&mut f, file_len)?;
     PrecisionPlan::from_bytes(&blob)
         .context("checkpoint precision plan")
         .map(Some)
@@ -376,6 +474,110 @@ mod tests {
     fn missing_file_clear_error() {
         let err = load("/nonexistent/ckpt.irqc").unwrap_err().to_string();
         assert!(err.contains("opening checkpoint"));
+    }
+
+    /// Header bytes up to and including `count`, with nothing after.
+    fn header(version: u32, count: u32) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"IRQC");
+        bytes.extend_from_slice(&version.to_le_bytes());
+        bytes.extend_from_slice(&count.to_le_bytes());
+        bytes
+    }
+
+    #[test]
+    fn absurd_count_rejected_against_file_size() {
+        // a 12-byte file claiming u32::MAX tensors must fail the
+        // header check instantly — not spin u32::MAX loop iterations
+        // of read_exact failures or pre-size any buffer from it
+        let p = tmp("absurd_count");
+        std::fs::write(&p, header(1, u32::MAX)).unwrap();
+        for err in [
+            load(&p).unwrap_err(),
+            peek_entries(&p).map(|_| ()).unwrap_err(),
+            peek_plan(&p).map(|_| ()).unwrap_err(),
+        ] {
+            let msg = format!("{err:#}");
+            assert!(msg.contains("corrupt checkpoint"), "{msg}");
+            assert!(msg.contains("4294967295"), "{msg}");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn data_overrun_rejected_before_allocation() {
+        // one tensor claiming 2^28 elements (1 GiB of f32) in a
+        // ~40-byte file: the length check must fire before the data
+        // buffer is allocated, for load and peek alike
+        let p = tmp("data_overrun");
+        let mut bytes = header(1, 1);
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        bytes.push(b'w');
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // rank
+        bytes.extend_from_slice(&(1u64 << 28).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        for err in [load(&p).unwrap_err(), peek_entries(&p).map(|_| ()).unwrap_err()] {
+            let msg = format!("{err:#}");
+            assert!(msg.contains("truncated checkpoint"), "{msg}");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn plan_length_capped_by_file_size() {
+        // version-2 header whose plan_len field claims more bytes than
+        // the file holds (but is still under MAX_PLAN_BYTES)
+        let p = tmp("plan_overrun");
+        let mut bytes = header(2, 0);
+        bytes.extend_from_slice(&(1u32 << 20).to_le_bytes()); // plan_len: 1 MiB
+        std::fs::write(&p, &bytes).unwrap();
+        let msg = format!("{:#}", load_with_plan(&p).unwrap_err());
+        assert!(msg.contains("plan section"), "{msg}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn truncated_files_error_at_every_cut() {
+        // a valid checkpoint cut at any byte boundary must return Err
+        // (never panic, hang, or Ok) from all three readers
+        let mut nt = NamedTensors::new();
+        nt.push("l0.wq", Tensor::full(&[4, 2], 0.5));
+        nt.push("b", Tensor::full(&[3], -1.0));
+        let p = tmp("truncate_sweep");
+        save_with_plan(&nt, &sample_plan(), &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        let plan_len =
+            u32::from_le_bytes(full[12..16].try_into().unwrap()) as usize;
+        for cut in 0..full.len() {
+            std::fs::write(&p, &full[..cut]).unwrap();
+            // load validates everything incl. the trailer checksum:
+            // every proper prefix must fail
+            assert!(load(&p).is_err(), "cut={cut} loaded");
+            // peek stops after the last header entry (checksum is
+            // explicitly unvalidated), so only cuts that remove entry
+            // or data bytes must fail
+            if cut + 8 < full.len() {
+                assert!(peek_entries(&p).is_err(), "cut={cut} peeked");
+            }
+            // peek_plan needs header + plan section only
+            if cut < 16 + plan_len {
+                assert!(peek_plan(&p).is_err(), "cut={cut} peeked plan");
+            }
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn typed_error_variants_surface() {
+        let e = CheckpointError::AbsurdCount { count: 9, file_len: 12 };
+        assert_eq!(e.clone(), e);
+        assert!(e.to_string().contains("corrupt checkpoint"));
+        // a typed error converts into the crate error via `?`
+        fn f() -> Result<()> {
+            Err(CheckpointError::ChecksumMismatch)?;
+            Ok(())
+        }
+        assert!(format!("{:#}", f().unwrap_err()).contains("checksum"));
     }
 
     fn sample_plan() -> PrecisionPlan {

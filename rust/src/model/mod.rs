@@ -5,4 +5,5 @@
 pub mod checkpoint;
 pub mod weights;
 
+pub use checkpoint::CheckpointError;
 pub use weights::NamedTensors;

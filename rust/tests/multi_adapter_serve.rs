@@ -390,7 +390,7 @@ fn fused_batch_isolates_an_erroring_adapter_via_per_group_fallback() {
         "fallback-served healthy tenant diverged from the serial oracle"
     );
     let flaky_err = flaky_rx.recv().unwrap().unwrap_err();
-    assert!(flaky_err.contains("injected transient failure"), "{flaky_err}");
+    assert!(flaky_err.to_string().contains("injected transient failure"), "{flaky_err}");
 
     // the worker survived the error — it keeps serving
     let again = server.query("good", good_prompt).unwrap();

@@ -298,6 +298,102 @@ fn prop_gcd_properties() {
 }
 
 #[test]
+fn prop_malformed_checkpoint_parsing_is_total() {
+    use irqlora::model::checkpoint::{
+        load, load_with_plan, peek_entries, peek_plan, save, save_with_plan,
+    };
+    use irqlora::model::NamedTensors;
+    use irqlora::precision::{PlanEntry, PrecisionPlan};
+
+    // parsers of `.irqc` bytes must be total: any truncation, bit
+    // flip, or crafted header field (absurd counts, lengths, dims)
+    // yields Ok or a typed Err — never a panic, hang, or an
+    // allocation sized from an unchecked header field
+    let tmp = |tag: &str| {
+        std::env::temp_dir().join(format!("irqc_prop_{tag}_{}", std::process::id()))
+    };
+    let saved_bytes = |with_plan: bool| {
+        let mut nt = NamedTensors::new();
+        nt.push("l0.wq", Tensor::new(&[4, 3], (0..12).map(|i| i as f32 * 0.25).collect()));
+        nt.push("bias", Tensor::new(&[5], vec![1.0; 5]));
+        let p = tmp(if with_plan { "v2" } else { "v1" });
+        if with_plan {
+            let plan = PrecisionPlan {
+                budget_bits: 3.0,
+                block: 64,
+                entries: vec![PlanEntry {
+                    name: "l0.wq".into(),
+                    k: 4,
+                    n_params: 12,
+                    entropy: 3.1,
+                    bits_per_weight: 4.2,
+                }],
+            };
+            save_with_plan(&nt, &plan, &p).unwrap();
+        } else {
+            save(&nt, &p).unwrap();
+        }
+        let b = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        b
+    };
+    let base_v1 = saved_bytes(false);
+    let base_v2 = saved_bytes(true);
+
+    let p = tmp("fuzz");
+    cases(150, 32, |seed, rng| {
+        let mut bytes = if rng.chance(0.5) { base_v1.clone() } else { base_v2.clone() };
+        match rng.below(4) {
+            0 => {
+                // proper-prefix truncation
+                bytes.truncate(rng.below(bytes.len()));
+            }
+            1 => {
+                // 1-4 random bit flips anywhere
+                for _ in 0..1 + rng.below(4) {
+                    let i = rng.below(bytes.len());
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+            }
+            2 => {
+                // overwrite a length/count-bearing u32 with an absurd
+                // value (count @8, plan_len / first name_len @12,
+                // or any aligned field)
+                let off = *rng.pick(&[8usize, 12, 16, 4 * rng.below(bytes.len() / 4)]);
+                let off = off.min(bytes.len() - 4);
+                let v: u32 = match rng.below(3) {
+                    0 => u32::MAX,
+                    1 => 1 << 31,
+                    _ => rng.below(1 << 30) as u32,
+                };
+                bytes[off..off + 4].copy_from_slice(&v.to_le_bytes());
+            }
+            _ => {
+                // append trailing garbage (readers must not trust EOF
+                // position as a validity signal)
+                let extra = 1 + rng.below(64);
+                bytes.extend((0..extra).map(|_| rng.below(256) as u8));
+            }
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let l = load(&p);
+        let lp = load_with_plan(&p);
+        let _ = peek_entries(&p);
+        let _ = peek_plan(&p);
+        assert_eq!(l.is_ok(), lp.is_ok(), "seed={seed}: load vs load_with_plan disagree");
+    });
+    // truncations specifically must always fail the checksum-validated
+    // reader, at every cut of both formats
+    for base in [&base_v1, &base_v2] {
+        for cut in [0, 3, 7, 11, 12, 15, base.len() / 2, base.len() - 1] {
+            std::fs::write(&p, &base[..cut]).unwrap();
+            assert!(load(&p).is_err(), "cut={cut} loaded");
+        }
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
 fn prop_pool_affinity_deterministic_and_balanced() {
     use irqlora::coordinator::pool::home_worker;
     // adapter-affinity routing must be a pure function of (adapter id,

@@ -44,6 +44,21 @@ echo "== pool concurrency battery, legacy scheduler (IRQLORA_SERVE_STEAL=0) =="
 # legacy path stays a supported escape hatch, not dead code.
 (cd rust && IRQLORA_SERVE_WORKERS=4 IRQLORA_SERVE_STEAL=0 cargo test -q --test pool_concurrency)
 
+echo "== chaos soak (seeded deterministic fault injection) =="
+# The soak battery replays fixed seeds (11/23/47) against the pool with
+# a FaultBackend wrapper: every handle must resolve, delivered replies
+# must match the serial oracle bit-for-bit, parked depth stays under
+# park_bound, and PoolStats counters reconcile exactly with observed
+# client outcomes. Also re-run under the legacy scheduler so shedding
+# and accounting hold with stealing disabled.
+(cd rust && cargo test -q --test chaos_soak)
+(cd rust && IRQLORA_SERVE_STEAL=0 cargo test -q --test chaos_soak)
+
+echo "== chaos serve smoke (irqlora serve --reference --chaos 7) =="
+# One end-to-end CLI run with injected faults: liveness is the gate —
+# the command bails nonzero if the pool delivers nothing.
+(cd rust && cargo run --release --quiet -- serve --reference --chaos 7)
+
 # Formatting gate. Advisory by default (the tree predates the check
 # and this container has no rustfmt to normalize it with); set
 # VERIFY_FMT_STRICT=1 to hard-fail once `cargo fmt` has run.
@@ -111,6 +126,12 @@ if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
      || ! grep -q "serve_latency pool steal=off" "$SMOKE_JSON"; then
     echo "verify.sh: ERROR: serve_latency smoke emitted no steal=on/off pool rows" >&2
     exit 9
+  fi
+  if ! grep -q "serve_latency saturation p50 workers=" "$SMOKE_JSON" \
+     || ! grep -q "serve_latency saturation shed workers=" "$SMOKE_JSON"; then
+    echo "verify.sh: ERROR: serve_latency smoke emitted no saturation (2x overload) rows" >&2
+    echo "verify.sh: (delivered p50/p99 + shed count under admission control should always emit)" >&2
+    exit 10
   fi
 fi
 
