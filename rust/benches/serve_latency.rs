@@ -28,6 +28,13 @@
 //!   `... [per-group serial]` (the pre-fusion oracle path) so the
 //!   before/after ratio of the one-forward-per-drain rewrite travels
 //!   with the code. `scripts/verify.sh` asserts both flavors exist.
+//! - **Native vs reference** (always runs): the same mixed-adapter
+//!   offered load at 1/4/8 adapters × 1/2/4 workers, once per HAL
+//!   backend — `serve_latency backend=native workers=W adapters=K`
+//!   paired with `... backend=reference ...` — built through
+//!   `BackendRegistry::pool_factory` so the bench exercises the exact
+//!   manifest-validated construction path `irqlora serve --backend`
+//!   uses. `scripts/verify.sh` asserts both flavors exist.
 //! - **Steal on/off** (always runs): a skewed hot-adapter burst
 //!   against a 4-worker pool with the work-stealing scheduler on vs
 //!   off (`serve_latency pool steal=on|off workers=4 adapters=8`);
@@ -67,6 +74,7 @@ fn main() {
     reference_multi_adapter(&mut sink);
     pool_scaling(&mut sink);
     fused_vs_serial(&mut sink);
+    native_vs_reference(&mut sink);
     steal_on_off(&mut sink);
     saturation(&mut sink);
 
@@ -488,6 +496,124 @@ fn fused_vs_serial(sink: &mut JsonSink) {
                 sink.push_raw(
                     &format!(
                         "serve_latency fused workers={workers} adapters={n_adapters}{suffix}"
+                    ),
+                    n_req,
+                    total.as_secs_f64() / n_req as f64 * 1e9,
+                    fastest.as_secs_f64() * 1e9,
+                    Some(n_req as f64 / wall),
+                );
+                drop(pool);
+            }
+        }
+    }
+}
+
+/// Paired native-vs-reference rows: the same mixed-adapter offered
+/// load at 1/4/8 adapters × 1/2/4 workers, run once per HAL backend.
+/// Workers are constructed through `BackendRegistry::pool_factory` —
+/// the same manifest-validated path as `irqlora serve --backend` — so
+/// any capability regression (e.g. a backend that stops supporting the
+/// serve shape) fails here loudly instead of silently dropping rows.
+/// Both backends are bit-identical by contract (the cross-backend test
+/// matrix asserts it), so the pair isolates pure compute/layout cost.
+fn native_vs_reference(sink: &mut JsonSink) {
+    use irqlora::hal::{BackendRegistry, BackendRequest};
+    const BATCH: usize = 8;
+    const SEQ: usize = 32;
+    const VOCAB: usize = 64;
+    let per_client = irqlora::bench_harness::iters(96).max(16);
+
+    let hal = BackendRegistry::builtin();
+    let backends: Vec<String> = ["native", "reference"]
+        .iter()
+        .map(|s| s.to_string())
+        .filter(|name| match hal.availability(name) {
+            Ok(()) => true,
+            Err(reason) => {
+                eprintln!("skipping backend '{name}' in native-vs-reference ({reason})");
+                false
+            }
+        })
+        .collect();
+
+    println!(
+        "\nnative vs reference backend ({per_client} req/client, 2 clients/worker):"
+    );
+    println!(
+        "{:>10} {:>8} {:>9} {:>12} {:>12}",
+        "backend", "workers", "adapters", "req/s", "mean ms"
+    );
+    for &workers in &[1usize, 2, 4] {
+        for &n_adapters in &[1usize, 4, 8] {
+            let registry = synthetic_serve_registry(n_adapters, 19);
+            for name in &backends {
+                let mut req = BackendRequest::new(BATCH, SEQ, VOCAB);
+                req.workers = workers;
+                let factory = hal
+                    .pool_factory(name, &req, registry.base().clone(), "bench")
+                    .unwrap();
+                let pool = Arc::new(
+                    ServerPool::spawn_with(
+                        PoolConfig::new(workers, Duration::from_millis(2)),
+                        registry.clone(),
+                        factory,
+                    )
+                    .unwrap(),
+                );
+                let clients = 2 * workers;
+                let t = Timer::start();
+                let mut handles = Vec::new();
+                for c in 0..clients {
+                    let pool = pool.clone();
+                    handles.push(std::thread::spawn(move || {
+                        let mut rng = Rng::new(80 + c as u64);
+                        let mut total = Duration::ZERO;
+                        let mut fastest = Duration::MAX;
+                        let mut window = Vec::new();
+                        for i in 0..per_client {
+                            let adapter = format!("tenant{}", (c + i) % n_adapters);
+                            let len = 1 + rng.below(SEQ - 1);
+                            let prompt: Vec<i32> = (0..len)
+                                .map(|_| 1 + rng.below(VOCAB - 1) as i32)
+                                .collect();
+                            window.push(pool.submit_async(&adapter, prompt).unwrap());
+                            if window.len() >= 8 {
+                                for p in window.drain(..) {
+                                    let r = p.wait().unwrap();
+                                    total += r.latency;
+                                    fastest = fastest.min(r.latency);
+                                }
+                            }
+                        }
+                        for p in window.drain(..) {
+                            let r = p.wait().unwrap();
+                            total += r.latency;
+                            fastest = fastest.min(r.latency);
+                        }
+                        (total, fastest)
+                    }));
+                }
+                let results: Vec<_> =
+                    handles.into_iter().map(|h| h.join().unwrap()).collect();
+                let wall = t.elapsed_secs();
+                let n_req = clients * per_client;
+                let total: Duration = results.iter().map(|(t, _)| *t).sum();
+                let fastest = results
+                    .iter()
+                    .map(|(_, f)| *f)
+                    .min()
+                    .unwrap_or(Duration::ZERO);
+                println!(
+                    "{:>10} {:>8} {:>9} {:>12.1} {:>12.3}",
+                    name,
+                    workers,
+                    n_adapters,
+                    n_req as f64 / wall,
+                    total.as_secs_f64() / n_req as f64 * 1e3,
+                );
+                sink.push_raw(
+                    &format!(
+                        "serve_latency backend={name} workers={workers} adapters={n_adapters}"
                     ),
                     n_req,
                     total.as_secs_f64() / n_req as f64 * 1e9,

@@ -34,19 +34,21 @@ impl BenchResult {
 }
 
 /// Measured-iteration count for a bench: `default_iters`, or 1 when
-/// `IRQLORA_BENCH_QUICK` is set to a non-empty, non-"0" value.
+/// `IRQLORA_BENCH_QUICK` is set to a non-empty, non-"0" value (read
+/// through `util::env`).
 pub fn iters(default_iters: usize) -> usize {
-    if quick_mode(std::env::var("IRQLORA_BENCH_QUICK").ok().as_deref()) {
+    if crate::util::env::bench_quick() {
         1
     } else {
         default_iters
     }
 }
 
-/// Whether an `IRQLORA_BENCH_QUICK` value means "quick mode on".
-/// Pure so it is testable without process-global env mutation.
+/// Whether an `IRQLORA_BENCH_QUICK` value means "quick mode on"
+/// (parse in `util::env`).
+#[cfg(test)]
 fn quick_mode(v: Option<&str>) -> bool {
-    matches!(v, Some(s) if !s.is_empty() && s != "0")
+    crate::util::env::parse_quick(v)
 }
 
 fn sample<F: FnMut()>(warmup: usize, iters: usize, f: &mut F) -> (f64, f64, f64) {
@@ -294,7 +296,7 @@ fn field_num(line: &str, key: &str) -> Option<f64> {
 /// `IRQLORA_BENCH_JSON` override, else places `name` at the repo root
 /// (benches run with CWD = `rust/`, so that is usually `../name`).
 pub fn bench_json_path(name: &str) -> PathBuf {
-    if let Ok(p) = std::env::var("IRQLORA_BENCH_JSON") {
+    if let Some(p) = crate::util::env::bench_json() {
         return PathBuf::from(p);
     }
     let parent = Path::new("..");

@@ -82,9 +82,6 @@ pub struct UploadStats {
     pub misses: usize,
 }
 
-/// Device-buffer cache capacity cap (mirrors the registry's cap).
-const DEVICE_CACHE_MAX: usize = 4096;
-
 /// Resolve the per-worker adapter device-buffer cache capacity: the
 /// `IRQLORA_DEVICE_CACHE` override, else the registry's merged-cache
 /// size ([`super::registry::cache_capacity`]) — one device slot per
@@ -93,45 +90,41 @@ const DEVICE_CACHE_MAX: usize = 4096;
 /// host RAM — an operator who raises `IRQLORA_ADAPTER_CACHE` for a
 /// large host cache should set `IRQLORA_DEVICE_CACHE` explicitly to
 /// what the accelerator can actually hold (this knob exists precisely
-/// to decouple the two tiers).
+/// to decouple the two tiers). Reads through `util::env`.
 pub fn device_cache_capacity() -> usize {
-    std::env::var("IRQLORA_DEVICE_CACHE")
-        .ok()
-        .and_then(|v| parse_device_cache_override(&v))
-        .unwrap_or_else(super::registry::cache_capacity)
+    crate::util::env::device_cache()
 }
 
 /// Interpret an `IRQLORA_DEVICE_CACHE` value: positive integers are
-/// honored (capped at 4096); zero and garbage are ignored. Pure so it
-/// is testable without process-global env mutation.
+/// honored (capped at 4096); zero and garbage are ignored (parse in
+/// `util::env`).
+#[cfg(test)]
 fn parse_device_cache_override(v: &str) -> Option<usize> {
-    match v.trim().parse::<usize>() {
-        Ok(n) if n >= 1 => Some(n.min(DEVICE_CACHE_MAX)),
-        _ => None,
-    }
+    crate::util::env::parse_count(v, crate::util::env::CACHE_CAP)
 }
 
 /// Tiny `(adapter name, generation)`-keyed LRU shared by the PJRT
-/// device-buffer cache and the reference fingerprint cache — ONE
+/// device-buffer cache, the reference fingerprint cache, and the
+/// native backend's fingerprint cache (`hal::native`) — ONE
 /// implementation of the touch/insert/evict/counter logic, so the
 /// offline tests really exercise the same aging the device path uses.
 /// Linear scan: capacities are small (≤4096) and lookups happen once
 /// per forward, not per element.
-struct KeyedLru<V> {
+pub(crate) struct KeyedLru<V> {
     /// front = coldest, back = hottest.
     entries: VecDeque<((String, u64), V)>,
     cap: usize,
-    stats: UploadStats,
+    pub(crate) stats: UploadStats,
 }
 
 impl<V> KeyedLru<V> {
-    fn new(cap: usize) -> KeyedLru<V> {
+    pub(crate) fn new(cap: usize) -> KeyedLru<V> {
         KeyedLru { entries: VecDeque::new(), cap: cap.max(1), stats: UploadStats::default() }
     }
 
     /// Hit path: move the entry to the hottest slot, count the hit,
     /// and return its index (valid until the next mutation).
-    fn touch(&mut self, name: &str, generation: u64) -> Option<usize> {
+    pub(crate) fn touch(&mut self, name: &str, generation: u64) -> Option<usize> {
         let pos = self
             .entries
             .iter()
@@ -144,7 +137,7 @@ impl<V> KeyedLru<V> {
 
     /// Miss path: insert as hottest, count the miss, evict the coldest
     /// beyond capacity, and return the new entry's index.
-    fn insert(&mut self, name: &str, generation: u64, value: V) -> usize {
+    pub(crate) fn insert(&mut self, name: &str, generation: u64, value: V) -> usize {
         self.stats.misses += 1;
         self.entries.push_back(((name.to_string(), generation), value));
         while self.entries.len() > self.cap {
@@ -153,7 +146,7 @@ impl<V> KeyedLru<V> {
         self.entries.len() - 1
     }
 
-    fn get(&self, idx: usize) -> &V {
+    pub(crate) fn get(&self, idx: usize) -> &V {
         &self.entries[idx].1
     }
 }
@@ -454,18 +447,65 @@ impl ReferenceBackend {
     }
 }
 
+/// Fingerprint tile width, in elements. 4096 = 64 quantization blocks
+/// of 64 values, so for every k in 1..=8 a tile boundary falls on a
+/// whole packed byte (`4096 * k` bits ≡ `512 * k` bytes) — the
+/// property `hal::native` relies on to stream tiles straight out of
+/// packed storage through `quant::fused::dequantize_packed_into`
+/// without ever materializing a full dequantized tensor.
+pub(crate) const FP_TILE: usize = 4096;
+
 /// Order- and position-sensitive weighted sum over every tensor value:
 /// any change anywhere in the collection moves it.
-fn fingerprint(nt: &NamedTensors) -> f64 {
+///
+/// Defined as a two-level fold so every consumer can reproduce it
+/// bit-exactly regardless of how it obtains the values: per-tile
+/// partials ([`fp_tile_partial`], strictly serial within a tile) are
+/// summed in tile order, tiles may be *computed* in parallel, and
+/// tensors fold left in collection order. The tile partials themselves
+/// are what `hal::native` computes from packed storage — same tiles,
+/// same fold, same bits.
+pub(crate) fn fingerprint(nt: &NamedTensors) -> f64 {
     let mut fp = 0f64;
-    let mut i = 0u64;
+    let mut start = 0u64;
     for t in nt.tensors() {
-        for &v in t.data() {
-            i += 1;
-            fp += v as f64 * ((i % 127) + 1) as f64;
-        }
+        fp += fingerprint_slice(start, t.data());
+        start += t.data().len() as u64;
     }
     fp
+}
+
+/// Fingerprint one tensor's values, `start` elements into the
+/// collection-wide element stream. Tiles are computed in parallel but
+/// reduced serially in tile order, so the result is independent of
+/// worker count.
+pub(crate) fn fingerprint_slice(start: u64, data: &[f32]) -> f64 {
+    let n_tiles = data.len().div_ceil(FP_TILE);
+    if n_tiles <= 1 {
+        return fp_tile_partial(start, data);
+    }
+    let partials = crate::util::threads::par_map_with(n_tiles, 4, |ti| {
+        let lo = ti * FP_TILE;
+        let hi = (lo + FP_TILE).min(data.len());
+        fp_tile_partial(start + lo as u64, &data[lo..hi])
+    });
+    let mut fp = 0f64;
+    for p in partials {
+        fp += p;
+    }
+    fp
+}
+
+/// Serial weighted sum over one tile: element `j` of `vals` is global
+/// element `start + j` (0-based) and carries weight
+/// `((start + j + 1) % 127) + 1`.
+pub(crate) fn fp_tile_partial(start: u64, vals: &[f32]) -> f64 {
+    let mut p = 0f64;
+    for (j, &v) in vals.iter().enumerate() {
+        let i = start + j as u64 + 1;
+        p += v as f64 * ((i % 127) + 1) as f64;
+    }
+    p
 }
 
 impl ServeBackend for ReferenceBackend {
@@ -573,6 +613,37 @@ mod tests {
         let d = swapped.get_mut("w").unwrap().data_mut();
         d.swap(0, 1);
         assert_ne!(fingerprint(&a), fingerprint(&swapped));
+    }
+
+    /// The tiled fingerprint must be a pure function of the value
+    /// stream — the parallel tile computation and the multi-tensor
+    /// fold have to land on the exact bits a serial tile-ordered fold
+    /// produces, because `hal::native` reproduces that fold from
+    /// packed storage and asserts bit-identity against it.
+    #[test]
+    fn fingerprint_matches_serial_tile_fold() {
+        let mut rng = Rng::new(99);
+        let n1 = FP_TILE * 2 + 137; // multi-tile with a ragged tail
+        let n2 = 513;
+        let mut nt = NamedTensors::new();
+        nt.push("a", Tensor::new(&[n1], rng.normal_vec(n1, 0.0, 1.0)));
+        nt.push("b", Tensor::new(&[n2], rng.normal_vec(n2, 0.0, 1.0)));
+
+        let mut want = 0f64;
+        let mut start = 0u64;
+        for t in nt.tensors() {
+            let data = t.data();
+            let mut slice_fp = 0f64;
+            let mut lo = 0usize;
+            while lo < data.len() {
+                let hi = (lo + FP_TILE).min(data.len());
+                slice_fp += fp_tile_partial(start + lo as u64, &data[lo..hi]);
+                lo = hi;
+            }
+            want += slice_fp;
+            start += data.len() as u64;
+        }
+        assert_eq!(fingerprint(&nt).to_bits(), want.to_bits());
     }
 
     #[test]

@@ -239,6 +239,28 @@ pub fn serve_pool(
     Ok((registry, pool))
 }
 
+/// [`serve_pool`]'s HAL-routed sibling: spawn an N-worker pool over a
+/// NAMED backend (`reference`, `native`, `pjrt`, …) resolved through
+/// [`crate::hal::BackendRegistry::builtin`]. The (manifest, request,
+/// pool config) combination is validated BEFORE any worker spawns —
+/// an unknown name, failed gate, or unsupported shape comes back as
+/// a typed [`crate::hal::HalError`] here, not as a dead worker
+/// mid-drain. This is the engine behind `irqlora serve --backend
+/// NAME` and the cross-backend test batteries.
+pub fn serve_pool_backend(
+    backend: &str,
+    shape: (usize, usize, usize),
+    cfg: PoolConfig,
+    registry: std::sync::Arc<AdapterRegistry>,
+) -> Result<ServerPool> {
+    let (batch, seq, vocab) = shape;
+    let mut req = crate::hal::BackendRequest::new(batch, seq, vocab);
+    req.workers = cfg.workers;
+    let hal = crate::hal::BackendRegistry::builtin();
+    let factory = hal.pool_factory(backend, &req, registry.base().clone(), "serve")?;
+    ServerPool::spawn_with(cfg, registry, factory)
+}
+
 /// Plan + quantize a base under a storage budget: profile every
 /// projection's ICQ entropy across the candidate bit-widths, solve
 /// the greedy information-per-bit allocation, and quantize mixed-k

@@ -51,8 +51,8 @@ pub use chaos::{FaultBackend, FaultConfig, FaultStats};
 pub use error::ServeError;
 pub use evaluator::{EvalResult, Evaluator};
 pub use experiment::{
-    plan_quantized, pretrained_base, run_arm, serve_pool, serve_registry,
-    synthetic_serve_registry, Arm, ArmResult, RunCfg,
+    plan_quantized, pretrained_base, run_arm, serve_pool, serve_pool_backend,
+    serve_registry, synthetic_serve_registry, Arm, ArmResult, RunCfg,
 };
 pub use pool::{
     park_age, park_bound, serve_steal, Pending, PoolConfig, PoolStats, PoolWorkerStats,

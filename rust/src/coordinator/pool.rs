@@ -103,98 +103,80 @@ use super::server::{
     ServerConfig, ServerStats, SubmitError,
 };
 
-/// Worker count when `IRQLORA_SERVE_WORKERS` is unset.
-pub const DEFAULT_SERVE_WORKERS: usize = 2;
+/// Worker count when `IRQLORA_SERVE_WORKERS` is unset (declared in
+/// `util::env` with the other knobs).
+pub const DEFAULT_SERVE_WORKERS: usize = crate::util::env::DEFAULT_SERVE_WORKERS;
 
 /// Resolve the pool worker count: the `IRQLORA_SERVE_WORKERS`
-/// override, else [`DEFAULT_SERVE_WORKERS`].
+/// override, else [`DEFAULT_SERVE_WORKERS`]. Reads through
+/// `util::env`.
 pub fn serve_workers() -> usize {
-    std::env::var("IRQLORA_SERVE_WORKERS")
-        .ok()
-        .and_then(|v| parse_workers_override(&v))
-        .unwrap_or(DEFAULT_SERVE_WORKERS)
+    crate::util::env::serve_workers()
 }
 
 /// Interpret an `IRQLORA_SERVE_WORKERS` value: positive integers are
-/// honored (capped at 64); zero and garbage are ignored. Pure so it is
-/// testable without process-global env mutation (mirrors
-/// `util::threads::parse_thread_override`).
+/// honored (capped at 64); zero and garbage are ignored. The parse
+/// lives in `util::env`; this wrapper anchors the contract tests.
+#[cfg(test)]
 fn parse_workers_override(v: &str) -> Option<usize> {
-    match v.trim().parse::<usize>() {
-        Ok(n) if n >= 1 => Some(n.min(64)),
-        _ => None,
-    }
+    crate::util::env::parse_count(v, crate::util::env::SERVE_WORKERS_CAP)
 }
 
 /// Is work-stealing allowed by the environment? `IRQLORA_SERVE_STEAL`
 /// set to `0` / `false` / `off` / `no` disables it (the kill switch
 /// `scripts/verify.sh` uses to pin the legacy spill scheduler);
-/// anything else — including unset — leaves it on.
+/// anything else — including unset — leaves it on. Reads through
+/// `util::env`.
 pub fn serve_steal() -> bool {
-    std::env::var("IRQLORA_SERVE_STEAL")
-        .map(|v| parse_steal_override(&v))
-        .unwrap_or(true)
+    crate::util::env::serve_steal()
 }
 
-/// Interpret an `IRQLORA_SERVE_STEAL` value. Pure so it is testable
-/// without process-global env mutation.
+/// Interpret an `IRQLORA_SERVE_STEAL` value (parse in `util::env`).
+#[cfg(test)]
 fn parse_steal_override(v: &str) -> bool {
-    !matches!(
-        v.trim().to_ascii_lowercase().as_str(),
-        "0" | "false" | "off" | "no"
-    )
+    crate::util::env::parse_off_flag(v)
 }
 
 /// Parked-overflow capacity when `IRQLORA_PARK_BOUND` is unset: the
 /// pool-wide number of requests that may sit parked before
 /// `submit_async` starts refusing with `ServeError::Overloaded`.
-pub const DEFAULT_PARK_BOUND: usize = 1024;
+pub const DEFAULT_PARK_BOUND: usize = crate::util::env::DEFAULT_PARK_BOUND;
 
 /// Resolve the parked-overflow bound: the `IRQLORA_PARK_BOUND`
-/// override, else [`DEFAULT_PARK_BOUND`].
+/// override, else [`DEFAULT_PARK_BOUND`]. Reads through `util::env`.
 pub fn park_bound() -> usize {
-    std::env::var("IRQLORA_PARK_BOUND")
-        .ok()
-        .and_then(|v| parse_park_bound_override(&v))
-        .unwrap_or(DEFAULT_PARK_BOUND)
+    crate::util::env::park_bound()
 }
 
 /// Interpret an `IRQLORA_PARK_BOUND` value: positive integers are
 /// honored (capped at 2^20 — beyond that the bound is no longer a
-/// memory guarantee); zero and garbage are ignored. Pure so it is
-/// testable without process-global env mutation.
+/// memory guarantee); zero and garbage are ignored (parse in
+/// `util::env`).
+#[cfg(test)]
 fn parse_park_bound_override(v: &str) -> Option<usize> {
-    match v.trim().parse::<usize>() {
-        Ok(n) if n >= 1 => Some(n.min(1 << 20)),
-        _ => None,
-    }
+    crate::util::env::parse_count(v, crate::util::env::PARK_BOUND_CAP)
 }
 
 /// Aging threshold when `IRQLORA_PARK_AGE_MS` is unset: a request
 /// parked longer than this is promoted ahead of fresh arrivals at its
 /// home worker's next drain.
-pub const DEFAULT_PARK_AGE: Duration = Duration::from_millis(20);
+pub const DEFAULT_PARK_AGE: Duration =
+    Duration::from_millis(crate::util::env::DEFAULT_PARK_AGE_MS);
 
 /// Resolve the parked-request aging threshold: the
 /// `IRQLORA_PARK_AGE_MS` override (milliseconds; `0` promotes parked
 /// work ahead of fresh arrivals immediately), else
-/// [`DEFAULT_PARK_AGE`].
+/// [`DEFAULT_PARK_AGE`]. Reads through `util::env`.
 pub fn park_age() -> Duration {
-    std::env::var("IRQLORA_PARK_AGE_MS")
-        .ok()
-        .and_then(|v| parse_park_age_override(&v))
-        .unwrap_or(DEFAULT_PARK_AGE)
+    crate::util::env::park_age()
 }
 
 /// Interpret an `IRQLORA_PARK_AGE_MS` value: a non-negative integer
 /// millisecond count (capped at 10 minutes; `0` is meaningful —
-/// promote immediately); garbage is ignored. Pure so it is testable
-/// without process-global env mutation.
+/// promote immediately); garbage is ignored (parse in `util::env`).
+#[cfg(test)]
 fn parse_park_age_override(v: &str) -> Option<Duration> {
-    v.trim()
-        .parse::<u64>()
-        .ok()
-        .map(|ms| Duration::from_millis(ms.min(600_000)))
+    crate::util::env::parse_ms(v, crate::util::env::PARK_AGE_CAP_MS)
 }
 
 /// Consistent adapter→worker assignment: FNV-1a over the adapter id

@@ -47,8 +47,9 @@ use crate::model::weights::{validate_adapter, validate_adapter_shapes, NamedTens
 
 use super::error::ServeError;
 
-/// Merged-weight cache capacity when `IRQLORA_ADAPTER_CACHE` is unset.
-pub const DEFAULT_CACHE_CAPACITY: usize = 8;
+/// Merged-weight cache capacity when `IRQLORA_ADAPTER_CACHE` is unset
+/// (declared in `util::env` with the other knobs).
+pub const DEFAULT_CACHE_CAPACITY: usize = crate::util::env::DEFAULT_ADAPTER_CACHE;
 
 /// How many times [`AdapterRegistry::merged_tagged`] re-merges when a
 /// concurrent re-register keeps invalidating its work before it gives
@@ -56,22 +57,18 @@ pub const DEFAULT_CACHE_CAPACITY: usize = 8;
 pub const MAX_MERGE_RETRIES: usize = 3;
 
 /// Resolve the merged-cache capacity: the `IRQLORA_ADAPTER_CACHE`
-/// override, else [`DEFAULT_CACHE_CAPACITY`].
+/// override, else [`DEFAULT_CACHE_CAPACITY`]. Reads through
+/// `util::env`.
 pub fn cache_capacity() -> usize {
-    std::env::var("IRQLORA_ADAPTER_CACHE")
-        .ok()
-        .and_then(|v| parse_cache_override(&v))
-        .unwrap_or(DEFAULT_CACHE_CAPACITY)
+    crate::util::env::adapter_cache()
 }
 
 /// Interpret an `IRQLORA_ADAPTER_CACHE` value: positive integers are
-/// honored (capped at 4096); zero and garbage are ignored. Pure so it
-/// is testable without process-global env mutation.
+/// honored (capped at 4096); zero and garbage are ignored (parse in
+/// `util::env`).
+#[cfg(test)]
 fn parse_cache_override(v: &str) -> Option<usize> {
-    match v.trim().parse::<usize>() {
-        Ok(n) if n >= 1 => Some(n.min(4096)),
-        _ => None,
-    }
+    crate::util::env::parse_count(v, crate::util::env::CACHE_CAP)
 }
 
 /// Where an adapter's raw (unmerged) tensors live.

@@ -1,0 +1,312 @@
+//! Backend capability manifests and the HAL error taxonomy.
+//!
+//! A [`BackendManifest`] is a backend's declarative self-description:
+//! which quantizer families and bit-widths it can serve, the largest
+//! `[batch, seq, vocab]` shape it accepts, whether its fused
+//! multi-adapter forward is a true single launch, what its
+//! adapter-side cache holds, and roughly how much memory it wants.
+//! The [`super::BackendRegistry`] validates a manifest once at
+//! registration and a (manifest, plan, pool config) combination once
+//! at construction — typed [`HalError`]s at the edge instead of
+//! runtime surprises mid-drain (IR-QLoRA's versatility claim is that
+//! ICQ/IEC compose with multiple quantization frameworks; the
+//! manifest is where a backend states which of them it actually
+//! executes).
+
+use std::fmt;
+
+/// A quantizer family a backend can serve (paper §4.3: IR-QLoRA
+/// composes with NormalFloat- and Integer-family frameworks; QA-LoRA
+/// is the group-wise integer reference point).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantFamily {
+    /// NF-k codebooks (QLoRA NF4 lineage, ICQ-calibrated or not).
+    NormalFloat,
+    /// Group-wise integer grids (QA-LoRA lineage, GPTQ).
+    Integer,
+}
+
+impl fmt::Display for QuantFamily {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QuantFamily::NormalFloat => write!(f, "nf"),
+            QuantFamily::Integer => write!(f, "int"),
+        }
+    }
+}
+
+/// What a backend's adapter-side cache holds, i.e. what a `hit` in
+/// its `UploadStats` means.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheSemantics {
+    /// No adapter-side cache; every forward rebuilds adapter state.
+    None,
+    /// Host-side per-adapter fingerprint/summary (reference, native).
+    HostFingerprint,
+    /// Device-resident uploaded buffers (PJRT).
+    DeviceBuffer,
+}
+
+impl fmt::Display for CacheSemantics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CacheSemantics::None => write!(f, "none"),
+            CacheSemantics::HostFingerprint => write!(f, "host-fingerprint"),
+            CacheSemantics::DeviceBuffer => write!(f, "device-buffer"),
+        }
+    }
+}
+
+/// Declarative backend capabilities. Validated by
+/// [`BackendManifest::validate`] at registration.
+#[derive(Clone, Debug)]
+pub struct BackendManifest {
+    /// Registry key (`reference`, `native`, `pjrt`, …).
+    pub name: String,
+    /// Quantizer families whose (dequantized/merged) models this
+    /// backend serves.
+    pub quant_families: Vec<QuantFamily>,
+    /// Supported storage bit-widths k (each in 1..=8).
+    pub bit_widths: Vec<u8>,
+    /// Largest batch (rows per forward) the backend accepts.
+    pub max_batch: usize,
+    /// Largest padded sequence length.
+    pub max_seq: usize,
+    /// Largest vocab.
+    pub max_vocab: usize,
+    /// `true` iff `forward_fused` is a TRUE single-launch mixed-adapter
+    /// forward. Backends whose fused path is the inherited per-group
+    /// scatter (one launch per adapter group — correct, but not
+    /// fused execution) declare `false`.
+    pub fused_multi_adapter: bool,
+    /// What the adapter-side cache holds.
+    pub cache: CacheSemantics,
+    /// Approximate per-worker memory appetite in bytes (caches +
+    /// scratch, excluding the shared base) — capacity-planning hint,
+    /// not an enforced limit.
+    pub approx_memory_bytes: usize,
+}
+
+impl BackendManifest {
+    /// Structural validation: every field a registry can check without
+    /// instantiating the backend. Returns the first problem found.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.trim().is_empty() {
+            return Err("backend name is empty".into());
+        }
+        if self.quant_families.is_empty() {
+            return Err("manifest declares no quantizer families".into());
+        }
+        if self.bit_widths.is_empty() {
+            return Err("manifest declares no supported bit-widths".into());
+        }
+        for &k in &self.bit_widths {
+            if !(1..=8).contains(&k) {
+                return Err(format!("bit-width k={k} outside 1..=8"));
+            }
+        }
+        if self.max_batch == 0 {
+            return Err("max_batch is zero".into());
+        }
+        if self.max_seq == 0 {
+            return Err("max_seq is zero".into());
+        }
+        if self.max_vocab == 0 {
+            return Err("max_vocab is zero".into());
+        }
+        Ok(())
+    }
+
+    /// Does this manifest cover `req`? Returns the first capability
+    /// gap as a human-readable reason (the registry wraps it in
+    /// [`HalError::Unsupported`]).
+    pub fn supports(&self, req: &super::BackendRequest) -> Result<(), String> {
+        if req.batch == 0 || req.seq == 0 || req.vocab == 0 {
+            return Err(format!(
+                "requested shape [{}, {}, {}] has a zero dimension",
+                req.batch, req.seq, req.vocab
+            ));
+        }
+        if req.batch > self.max_batch {
+            return Err(format!(
+                "requested batch {} exceeds max_batch {}",
+                req.batch, self.max_batch
+            ));
+        }
+        if req.seq > self.max_seq {
+            return Err(format!(
+                "requested seq {} exceeds max_seq {}",
+                req.seq, self.max_seq
+            ));
+        }
+        if req.vocab > self.max_vocab {
+            return Err(format!(
+                "requested vocab {} exceeds max_vocab {}",
+                req.vocab, self.max_vocab
+            ));
+        }
+        for &k in &req.bit_widths {
+            if !self.bit_widths.contains(&k) {
+                return Err(format!(
+                    "plan uses k={k}, backend supports {:?}",
+                    self.bit_widths
+                ));
+            }
+        }
+        if let Some(fam) = req.family {
+            if !self.quant_families.contains(&fam) {
+                return Err(format!("quantizer family '{fam}' not supported"));
+            }
+        }
+        if req.require_fused && !self.fused_multi_adapter {
+            return Err(
+                "single-launch fused multi-adapter forward required but not offered".into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Construction-time HAL failures: everything that can go wrong
+/// BEFORE a backend serves its first request. Runtime serving
+/// failures stay in `coordinator::ServeError`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HalError {
+    /// No backend registered under this name.
+    UnknownBackend {
+        name: String,
+        /// What IS registered, for the error message.
+        available: Vec<String>,
+    },
+    /// Registered, but its gate (feature/env/artifact check) refused.
+    Unavailable { name: String, reason: String },
+    /// The manifest failed structural validation at registration (or
+    /// contradicts the implementation, e.g. fused claimed but not
+    /// implemented).
+    InvalidManifest { name: String, reason: String },
+    /// A name was registered twice.
+    DuplicateBackend { name: String },
+    /// The manifest cannot cover the requested (plan, pool config)
+    /// combination.
+    Unsupported { backend: String, reason: String },
+}
+
+impl fmt::Display for HalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HalError::UnknownBackend { name, available } => write!(
+                f,
+                "unknown backend '{name}' (registered: {})",
+                available.join(", ")
+            ),
+            HalError::Unavailable { name, reason } => {
+                write!(f, "backend '{name}' unavailable: {reason}")
+            }
+            HalError::InvalidManifest { name, reason } => {
+                write!(f, "invalid manifest for backend '{name}': {reason}")
+            }
+            HalError::DuplicateBackend { name } => {
+                write!(f, "backend '{name}' is already registered")
+            }
+            HalError::Unsupported { backend, reason } => {
+                write!(f, "backend '{backend}' cannot serve this plan: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HalError {}
+
+#[cfg(test)]
+mod tests {
+    use super::super::BackendRequest;
+    use super::*;
+
+    fn good() -> BackendManifest {
+        BackendManifest {
+            name: "t".into(),
+            quant_families: vec![QuantFamily::NormalFloat],
+            bit_widths: vec![2, 4],
+            max_batch: 8,
+            max_seq: 32,
+            max_vocab: 64,
+            fused_multi_adapter: true,
+            cache: CacheSemantics::HostFingerprint,
+            approx_memory_bytes: 1 << 20,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_well_formed() {
+        assert_eq!(good().validate(), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_malformed() {
+        let mut m = good();
+        m.bit_widths = vec![0];
+        assert!(m.validate().unwrap_err().contains("outside 1..=8"));
+        let mut m = good();
+        m.bit_widths = vec![4, 9];
+        assert!(m.validate().unwrap_err().contains("k=9"));
+        let mut m = good();
+        m.max_batch = 0;
+        assert!(m.validate().unwrap_err().contains("max_batch"));
+        let mut m = good();
+        m.bit_widths.clear();
+        assert!(m.validate().is_err());
+        let mut m = good();
+        m.name = "  ".into();
+        assert!(m.validate().is_err());
+        let mut m = good();
+        m.quant_families.clear();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn supports_checks_shape_k_family_fused() {
+        let m = good();
+        let ok = BackendRequest::new(8, 32, 64);
+        assert_eq!(m.supports(&ok), Ok(()));
+
+        let mut req = BackendRequest::new(9, 32, 64);
+        assert!(m.supports(&req).unwrap_err().contains("batch"));
+        req = BackendRequest::new(8, 33, 64);
+        assert!(m.supports(&req).unwrap_err().contains("seq"));
+        req = BackendRequest::new(8, 32, 65);
+        assert!(m.supports(&req).unwrap_err().contains("vocab"));
+
+        req = BackendRequest::new(8, 32, 64);
+        req.bit_widths = vec![4, 3];
+        assert!(m.supports(&req).unwrap_err().contains("k=3"));
+
+        req = BackendRequest::new(8, 32, 64);
+        req.family = Some(QuantFamily::Integer);
+        assert!(m.supports(&req).unwrap_err().contains("family"));
+
+        let mut unfused = good();
+        unfused.fused_multi_adapter = false;
+        req = BackendRequest::new(8, 32, 64);
+        req.require_fused = true;
+        assert!(unfused.supports(&req).is_err());
+        assert_eq!(m.supports(&req), Ok(()));
+    }
+
+    #[test]
+    fn hal_error_display_is_matchable() {
+        let e = HalError::UnknownBackend {
+            name: "x".into(),
+            available: vec!["reference".into(), "native".into()],
+        };
+        let s = e.to_string();
+        assert!(s.contains("unknown backend 'x'") && s.contains("reference"));
+        let e = HalError::Unsupported { backend: "pjrt".into(), reason: "nope".into() };
+        assert!(e.to_string().contains("cannot serve this plan"));
+        // converts into the vendored anyhow shim via `?`
+        fn f() -> anyhow::Result<()> {
+            Err(HalError::DuplicateBackend { name: "d".into() })?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("already registered"));
+    }
+}

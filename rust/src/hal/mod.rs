@@ -1,0 +1,33 @@
+//! Hardware abstraction layer for serving backends.
+//!
+//! Everything execution-touching goes through here: a backend
+//! declares what it can do in a [`BackendManifest`], registers a
+//! factory in the [`BackendRegistry`] under a name (feature-/
+//! artifact-gated where applicable), and callers resolve a
+//! `(manifest, plan, pool config)` combination — as a
+//! [`BackendRequest`] — ONCE, at construction time, getting a typed
+//! [`HalError`] instead of a runtime surprise mid-drain. The CLI
+//! (`irqlora serve --backend NAME`, `irqlora backends`), the serving
+//! pool, the latency bench, and the cross-backend test batteries all
+//! select backends through this registry.
+//!
+//! In-tree backends:
+//!
+//! - `reference` — the deterministic host-side oracle
+//!   ([`crate::coordinator::ReferenceBackend`]); always available,
+//!   and the bit-identity yardstick for everything else;
+//! - `native` — the cache-blocked, row-parallel CPU backend
+//!   ([`NativeBackend`]), bit-identical to `reference` with a true
+//!   single-launch fused path and streaming quantized construction;
+//! - `pjrt` — the compiled-graph backend
+//!   ([`crate::coordinator::PjrtBackend`]); registered behind an
+//!   artifact gate (and today the vendored `xla` stub), so the
+//!   real-PJRT restore is a factory swap, not a refactor.
+
+pub mod manifest;
+pub mod native;
+pub mod registry;
+
+pub use manifest::{BackendManifest, CacheSemantics, HalError, QuantFamily};
+pub use native::NativeBackend;
+pub use registry::{BackendCtx, BackendEntry, BackendRegistry, BackendRequest};

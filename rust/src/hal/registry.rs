@@ -1,0 +1,564 @@
+//! Named backend registration and construction-time validation.
+//!
+//! The [`BackendRegistry`] is the HAL's front door: factories are
+//! registered under a name together with their [`BackendManifest`],
+//! validated at registration (malformed or contradictory manifests
+//! are refused with a typed [`HalError`], not discovered at drain
+//! time), and resolved against a [`BackendRequest`] — the serving
+//! plan's shape, bit-widths, and quantizer family — before a single
+//! worker spawns. `builtin()` registers the three in-tree backends
+//! (`reference`, `native`, `pjrt`), the `native`/`pjrt` entries
+//! behind cargo features so a trimmed build simply doesn't list them.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{QuantizedModel, ServeBackend};
+use crate::model::weights::NamedTensors;
+use crate::quant::Method;
+
+use super::manifest::{BackendManifest, CacheSemantics, HalError, QuantFamily};
+
+/// What the caller wants to serve: pool shape plus the plan's
+/// quantization footprint. Checked against a manifest by
+/// [`BackendManifest::supports`] at construction time.
+#[derive(Clone, Debug)]
+pub struct BackendRequest {
+    /// Rows per forward (the pool's padded batch).
+    pub batch: usize,
+    /// Padded sequence length.
+    pub seq: usize,
+    /// Vocab size.
+    pub vocab: usize,
+    /// Distinct storage bit-widths the base model's plan uses (empty
+    /// = unconstrained, e.g. a synthetic f32 fixture).
+    pub bit_widths: Vec<u8>,
+    /// Quantizer family of the base model, if quantized.
+    pub family: Option<QuantFamily>,
+    /// Demand a TRUE single-launch fused multi-adapter forward (the
+    /// inherited per-group scatter is correct but does not qualify).
+    pub require_fused: bool,
+    /// Worker count the pool will spawn (capacity-planning hint).
+    pub workers: usize,
+}
+
+impl BackendRequest {
+    /// An unconstrained request for a `[batch, seq, vocab]` pool.
+    pub fn new(batch: usize, seq: usize, vocab: usize) -> BackendRequest {
+        BackendRequest {
+            batch,
+            seq,
+            vocab,
+            bit_widths: Vec::new(),
+            family: None,
+            require_fused: false,
+            workers: 1,
+        }
+    }
+
+    /// Derive the quantization footprint from a quantized model: the
+    /// distinct per-tensor bit-widths actually stored and the method's
+    /// quantizer family.
+    pub fn from_plan(
+        batch: usize,
+        seq: usize,
+        vocab: usize,
+        qm: &QuantizedModel,
+    ) -> BackendRequest {
+        let mut req = BackendRequest::new(batch, seq, vocab);
+        req.family = match qm.method {
+            Method::Fp16 => None,
+            Method::Nf { .. } | Method::NfIcq { .. } | Method::Planned => {
+                Some(QuantFamily::NormalFloat)
+            }
+            Method::Int { .. } | Method::IntIcq { .. } | Method::Gptq { .. } => {
+                Some(QuantFamily::Integer)
+            }
+        };
+        let mut ks: Vec<u8> = qm.storage.iter().map(|(_, qt)| qt.k).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        req.bit_widths = ks;
+        req
+    }
+}
+
+/// Everything a factory gets to build ONE worker's backend.
+pub struct BackendCtx {
+    /// The validated request the pool was constructed with.
+    pub request: BackendRequest,
+    /// The registry's shared (dequantized) base weights.
+    pub base: Arc<NamedTensors>,
+    /// Model size tag (PJRT graph selection).
+    pub tag: String,
+    /// Worker index within the pool.
+    pub worker: usize,
+}
+
+/// Per-worker backend factory.
+pub type BackendFactory =
+    Arc<dyn Fn(&BackendCtx) -> Result<Box<dyn ServeBackend>> + Send + Sync>;
+
+/// Availability gate: an entry may be registered but temporarily
+/// unusable (missing artifacts, stubbed dependency, env opt-out).
+pub type BackendGate = Arc<dyn Fn() -> Result<(), String> + Send + Sync>;
+
+/// One registered backend: manifest + factory (+ optional gate).
+pub struct BackendEntry {
+    pub manifest: BackendManifest,
+    /// Does the implementation actually override `forward_fused` with
+    /// a single-launch mixed batch? Cross-checked against
+    /// `manifest.fused_multi_adapter` at registration — claiming fused
+    /// without implementing it is a manifest contradiction.
+    pub implements_fused: bool,
+    /// `None` = always available.
+    pub gate: Option<BackendGate>,
+    pub factory: BackendFactory,
+}
+
+/// Named, validated backend entries. `BTreeMap` so listings and the
+/// capability table are deterministically ordered.
+#[derive(Default)]
+pub struct BackendRegistry {
+    entries: BTreeMap<String, BackendEntry>,
+}
+
+impl BackendRegistry {
+    /// An empty registry (tests, embedders with custom backends).
+    pub fn new() -> BackendRegistry {
+        BackendRegistry { entries: BTreeMap::new() }
+    }
+
+    /// The in-tree backends. `reference` is unconditional (it is the
+    /// bit-identity oracle everything else is judged against);
+    /// `native` and `pjrt` ride behind cargo features.
+    pub fn builtin() -> BackendRegistry {
+        let mut r = BackendRegistry::new();
+        r.register(reference_entry()).expect("builtin reference entry must validate");
+        #[cfg(feature = "backend-native")]
+        r.register(native_entry()).expect("builtin native entry must validate");
+        #[cfg(feature = "backend-pjrt")]
+        r.register(pjrt_entry()).expect("builtin pjrt entry must validate");
+        r
+    }
+
+    /// Validate and insert. Typed rejection for malformed manifests,
+    /// manifest/implementation contradictions, and duplicate names.
+    pub fn register(&mut self, entry: BackendEntry) -> Result<(), HalError> {
+        let name = entry.manifest.name.clone();
+        entry
+            .manifest
+            .validate()
+            .map_err(|reason| HalError::InvalidManifest { name: name.clone(), reason })?;
+        if entry.manifest.fused_multi_adapter && !entry.implements_fused {
+            return Err(HalError::InvalidManifest {
+                name,
+                reason: "manifest claims a single-launch fused multi-adapter forward \
+                         but the implementation does not provide one"
+                    .into(),
+            });
+        }
+        if self.entries.contains_key(&name) {
+            return Err(HalError::DuplicateBackend { name });
+        }
+        self.entries.insert(name, entry);
+        Ok(())
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BackendEntry> {
+        self.entries.get(name)
+    }
+
+    /// Full construction-time check: the name exists, its gate admits,
+    /// and its manifest covers `req`. This is the call that turns
+    /// "runtime surprise mid-drain" into a typed error before any
+    /// worker spawns.
+    pub fn resolve(&self, name: &str, req: &BackendRequest) -> Result<&BackendEntry, HalError> {
+        let entry = self.entries.get(name).ok_or_else(|| HalError::UnknownBackend {
+            name: name.to_string(),
+            available: self.names(),
+        })?;
+        if let Some(gate) = &entry.gate {
+            gate().map_err(|reason| HalError::Unavailable {
+                name: name.to_string(),
+                reason,
+            })?;
+        }
+        entry.manifest.supports(req).map_err(|reason| HalError::Unsupported {
+            backend: name.to_string(),
+            reason,
+        })?;
+        Ok(entry)
+    }
+
+    /// Resolve `name` for `req` and return a per-worker factory in the
+    /// shape `ServerPool::spawn_with` takes. Validation happens HERE,
+    /// once; the returned closure only instantiates.
+    pub fn pool_factory(
+        &self,
+        name: &str,
+        req: &BackendRequest,
+        base: Arc<NamedTensors>,
+        tag: &str,
+    ) -> Result<
+        impl Fn(usize) -> Result<Box<dyn ServeBackend>> + Send + Sync + 'static,
+        HalError,
+    > {
+        let entry = self.resolve(name, req)?;
+        let factory = entry.factory.clone();
+        let req = req.clone();
+        let tag = tag.to_string();
+        Ok(move |worker: usize| {
+            let ctx = BackendCtx {
+                request: req.clone(),
+                base: base.clone(),
+                tag: tag.clone(),
+                worker,
+            };
+            factory(&ctx)
+        })
+    }
+
+    /// Whether `name` would pass its gate right now (the capability
+    /// table's "available" column).
+    pub fn availability(&self, name: &str) -> Result<(), String> {
+        match self.entries.get(name) {
+            None => Err("not registered".into()),
+            Some(e) => match &e.gate {
+                None => Ok(()),
+                Some(g) => g(),
+            },
+        }
+    }
+
+    /// Markdown capability table — what `irqlora backends` prints and
+    /// what the README's backend table is generated from.
+    pub fn capability_table(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            "| Backend | Families | Bit-widths k | Max batch×seq×vocab | \
+             Fused multi-adapter | Cache | ~Mem/worker | Available |\n",
+        );
+        s.push_str("|---|---|---|---|---|---|---|---|\n");
+        for (name, e) in &self.entries {
+            let m = &e.manifest;
+            let families = m
+                .quant_families
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("+");
+            let ks = m
+                .bit_widths
+                .iter()
+                .map(|k| k.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            let avail = match self.availability(name) {
+                Ok(()) => "yes".to_string(),
+                Err(reason) => format!("no — {reason}"),
+            };
+            s.push_str(&format!(
+                "| `{name}` | {families} | {ks} | {}×{}×{} | {} | {} | {} | {avail} |\n",
+                m.max_batch,
+                m.max_seq,
+                m.max_vocab,
+                if m.fused_multi_adapter { "yes" } else { "scatter" },
+                m.cache,
+                fmt_mem(m.approx_memory_bytes),
+            ));
+        }
+        s
+    }
+}
+
+fn fmt_mem(bytes: usize) -> String {
+    if bytes >= 1 << 30 {
+        format!("{} GiB", bytes >> 30)
+    } else if bytes >= 1 << 20 {
+        format!("{} MiB", bytes >> 20)
+    } else if bytes >= 1 << 10 {
+        format!("{} KiB", bytes >> 10)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+const ALL_K: [u8; 8] = [1, 2, 3, 4, 5, 6, 7, 8];
+
+/// `reference`: the deterministic host-side oracle. Serves anything —
+/// it consumes already-dequantized merged weights, so every family
+/// and bit-width reduces to the same f32 path.
+fn reference_entry() -> BackendEntry {
+    BackendEntry {
+        manifest: BackendManifest {
+            name: "reference".into(),
+            quant_families: vec![QuantFamily::NormalFloat, QuantFamily::Integer],
+            bit_widths: ALL_K.to_vec(),
+            max_batch: 1024,
+            max_seq: 8192,
+            max_vocab: 1 << 20,
+            fused_multi_adapter: true,
+            cache: CacheSemantics::HostFingerprint,
+            approx_memory_bytes: 1 << 20,
+        },
+        implements_fused: true,
+        gate: None,
+        factory: Arc::new(|ctx: &BackendCtx| {
+            let r = &ctx.request;
+            Ok(Box::new(crate::coordinator::ReferenceBackend::new(
+                r.batch, r.seq, r.vocab, &ctx.base,
+            )) as Box<dyn ServeBackend>)
+        }),
+    }
+}
+
+/// `native`: the cache-blocked CPU backend (`hal::native`), fused
+/// natively, bit-identical to `reference`.
+#[cfg(feature = "backend-native")]
+fn native_entry() -> BackendEntry {
+    BackendEntry {
+        manifest: BackendManifest {
+            name: "native".into(),
+            quant_families: vec![QuantFamily::NormalFloat, QuantFamily::Integer],
+            bit_widths: ALL_K.to_vec(),
+            max_batch: 1024,
+            max_seq: 8192,
+            max_vocab: 1 << 20,
+            fused_multi_adapter: true,
+            cache: CacheSemantics::HostFingerprint,
+            approx_memory_bytes: 1 << 26,
+        },
+        implements_fused: true,
+        gate: None,
+        factory: Arc::new(|ctx: &BackendCtx| {
+            let r = &ctx.request;
+            Ok(Box::new(super::native::NativeBackend::new(
+                r.batch, r.seq, r.vocab, &ctx.base,
+            )) as Box<dyn ServeBackend>)
+        }),
+    }
+}
+
+/// `pjrt`: the compiled-graph backend. Its fused path is the
+/// inherited per-group scatter (one graph launch per adapter group;
+/// the device cache is what it wins with), so `fused_multi_adapter`
+/// is declared `false`. Gated on compiled artifacts being present —
+/// and the vendored `xla` being real, which today it is not (the
+/// real-PJRT restore is a ROADMAP carry-over; this entry is its
+/// landing pad, so the swap is a Cargo.toml edit, not a refactor).
+#[cfg(feature = "backend-pjrt")]
+fn pjrt_entry() -> BackendEntry {
+    BackendEntry {
+        manifest: BackendManifest {
+            name: "pjrt".into(),
+            quant_families: vec![QuantFamily::NormalFloat, QuantFamily::Integer],
+            bit_widths: ALL_K.to_vec(),
+            max_batch: 64,
+            max_seq: 2048,
+            max_vocab: 1 << 17,
+            fused_multi_adapter: false,
+            cache: CacheSemantics::DeviceBuffer,
+            approx_memory_bytes: 1 << 30,
+        },
+        implements_fused: false,
+        gate: Some(Arc::new(|| {
+            if !std::path::Path::new("artifacts/manifest.json").exists() {
+                return Err(
+                    "no artifacts/manifest.json (run `make artifacts`; note the vendored \
+                     `xla` is an offline stub — real PJRT restore is a ROADMAP carry-over)"
+                        .into(),
+                );
+            }
+            Ok(())
+        })),
+        factory: Arc::new(|ctx: &BackendCtx| {
+            let manifest = crate::runtime::Manifest::load("artifacts")?;
+            Ok(Box::new(crate::coordinator::PjrtBackend::new(
+                &manifest, &ctx.tag, &ctx.base,
+            )?) as Box<dyn ServeBackend>)
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_entry(name: &str) -> BackendEntry {
+        BackendEntry {
+            manifest: BackendManifest {
+                name: name.into(),
+                quant_families: vec![QuantFamily::NormalFloat],
+                bit_widths: vec![4],
+                max_batch: 4,
+                max_seq: 8,
+                max_vocab: 16,
+                fused_multi_adapter: false,
+                cache: CacheSemantics::None,
+                approx_memory_bytes: 1024,
+            },
+            implements_fused: false,
+            gate: None,
+            factory: Arc::new(|ctx: &BackendCtx| {
+                let r = &ctx.request;
+                Ok(Box::new(crate::coordinator::ReferenceBackend::new(
+                    r.batch, r.seq, r.vocab, &ctx.base,
+                )) as Box<dyn ServeBackend>)
+            }),
+        }
+    }
+
+    #[test]
+    fn builtin_lists_reference_native_pjrt() {
+        let r = BackendRegistry::builtin();
+        let names = r.names();
+        assert!(names.contains(&"reference".to_string()), "{names:?}");
+        assert!(names.contains(&"native".to_string()), "{names:?}");
+        assert!(names.contains(&"pjrt".to_string()), "{names:?}");
+        // reference and native are gate-free; pjrt is gated on
+        // artifacts (absent in the offline build)
+        assert!(r.availability("reference").is_ok());
+        assert!(r.availability("native").is_ok());
+        let table = r.capability_table();
+        for n in ["reference", "native", "pjrt"] {
+            assert!(table.contains(&format!("`{n}`")), "{table}");
+        }
+    }
+
+    #[test]
+    fn registration_rejects_malformed_manifests_typed() {
+        let mut r = BackendRegistry::new();
+
+        // k outside 1..=8
+        let mut e = dummy_entry("bad-k");
+        e.manifest.bit_widths = vec![4, 9];
+        match r.register(e) {
+            Err(HalError::InvalidManifest { name, reason }) => {
+                assert_eq!(name, "bad-k");
+                assert!(reason.contains("k=9"), "{reason}");
+            }
+            other => panic!("expected InvalidManifest, got {other:?}"),
+        }
+
+        // zero max_batch
+        let mut e = dummy_entry("zero-batch");
+        e.manifest.max_batch = 0;
+        match r.register(e) {
+            Err(HalError::InvalidManifest { reason, .. }) => {
+                assert!(reason.contains("max_batch"), "{reason}");
+            }
+            other => panic!("expected InvalidManifest, got {other:?}"),
+        }
+
+        // fused claimed but unimplemented: a contradiction, not a typo
+        let mut e = dummy_entry("liar");
+        e.manifest.fused_multi_adapter = true;
+        e.implements_fused = false;
+        match r.register(e) {
+            Err(HalError::InvalidManifest { reason, .. }) => {
+                assert!(reason.contains("fused"), "{reason}");
+            }
+            other => panic!("expected InvalidManifest, got {other:?}"),
+        }
+
+        // duplicates are typed too
+        r.register(dummy_entry("dup")).unwrap();
+        match r.register(dummy_entry("dup")) {
+            Err(HalError::DuplicateBackend { name }) => assert_eq!(name, "dup"),
+            other => panic!("expected DuplicateBackend, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resolve_is_typed_end_to_end() {
+        let mut r = BackendRegistry::new();
+        r.register(dummy_entry("tiny")).unwrap();
+
+        match r.resolve("nope", &BackendRequest::new(1, 1, 1)) {
+            Err(HalError::UnknownBackend { name, available }) => {
+                assert_eq!(name, "nope");
+                assert_eq!(available, vec!["tiny".to_string()]);
+            }
+            other => panic!("expected UnknownBackend, got {:?}", other.err()),
+        }
+
+        // shape beyond the manifest: Unsupported at construction time
+        match r.resolve("tiny", &BackendRequest::new(5, 8, 16)) {
+            Err(HalError::Unsupported { backend, reason }) => {
+                assert_eq!(backend, "tiny");
+                assert!(reason.contains("batch"), "{reason}");
+            }
+            other => panic!("expected Unsupported, got {:?}", other.err()),
+        }
+
+        // unsupported k from the plan
+        let mut req = BackendRequest::new(4, 8, 16);
+        req.bit_widths = vec![2];
+        assert!(matches!(
+            r.resolve("tiny", &req),
+            Err(HalError::Unsupported { .. })
+        ));
+
+        // demanding true fused from a scatter backend
+        let mut req = BackendRequest::new(4, 8, 16);
+        req.require_fused = true;
+        assert!(matches!(
+            r.resolve("tiny", &req),
+            Err(HalError::Unsupported { .. })
+        ));
+
+        // a gated entry reports Unavailable with the gate's reason
+        let mut gated = dummy_entry("gated");
+        gated.gate = Some(Arc::new(|| Err("artifacts missing".into())));
+        r.register(gated).unwrap();
+        match r.resolve("gated", &BackendRequest::new(4, 8, 16)) {
+            Err(HalError::Unavailable { reason, .. }) => {
+                assert!(reason.contains("artifacts"), "{reason}");
+            }
+            other => panic!("expected Unavailable, got {:?}", other.err()),
+        }
+
+        // the happy path still resolves
+        assert!(r.resolve("tiny", &BackendRequest::new(4, 8, 16)).is_ok());
+    }
+
+    #[test]
+    fn pool_factory_builds_working_workers() {
+        use crate::model::weights::NamedTensors;
+        use crate::util::{Rng, Tensor};
+
+        let mut rng = Rng::new(5);
+        let mut base = NamedTensors::new();
+        base.push("w", Tensor::new(&[32], rng.normal_vec(32, 0.0, 1.0)));
+        let base = Arc::new(base);
+
+        let reg = BackendRegistry::builtin();
+        let req = BackendRequest::new(2, 4, 8);
+        let make = reg.pool_factory("reference", &req, base.clone(), "xs").unwrap();
+        let mut be = make(0).unwrap();
+        assert_eq!(be.shape(), (2, 4, 8));
+        let w = Arc::new(NamedTensors::new());
+        let toks = vec![1i32; 2 * 4];
+        assert_eq!(be.forward("a", 0, &w, &toks).unwrap().len(), 2 * 4 * 8);
+
+        // pjrt resolves to a typed Unavailable without artifacts
+        match reg.pool_factory("pjrt", &req, base, "xs") {
+            Ok(_) => {
+                // only reachable in a checkout that has artifacts
+                assert!(std::path::Path::new("artifacts/manifest.json").exists());
+            }
+            Err(HalError::Unavailable { reason, .. }) => {
+                assert!(reason.contains("artifacts"), "{reason}");
+            }
+            Err(other) => panic!("expected Unavailable, got {other:?}"),
+        }
+    }
+}

@@ -13,6 +13,9 @@
 //! - [`model`] / [`data`] — NanoLLaMA substrate and synthetic corpora;
 //! - [`runtime`] — PJRT loader/executor for the AOT HLO artifacts;
 //! - [`coordinator`] — quantize → finetune → evaluate → serve pipeline;
+//! - [`hal`] — serving-backend HAL: capability manifests, validated
+//!   registration, and named backend selection (`reference`, `native`,
+//!   `pjrt`);
 //! - [`tables`] — paper-format table/figure regeneration.
 
 pub mod util;
@@ -22,6 +25,7 @@ pub mod lora;
 pub mod model;
 pub mod data;
 pub mod coordinator;
+pub mod hal;
 
 pub use util::{Rng, Tensor};
 pub mod runtime;

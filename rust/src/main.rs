@@ -5,7 +5,8 @@
 //! irqlora quantize --size s --method ir-qlora  quantize + report entropy/storage
 //! irqlora plan [--budget 3.2] [--synthetic]    mixed-precision allocation table
 //! irqlora finetune --size s --arm ir-qlora     full arm: quantize + LoRA finetune + eval
-//! irqlora serve [--workers N] [--reference]    N-worker sharded serving pool demo
+//! irqlora serve [--workers N] [--backend B]    N-worker sharded serving pool demo
+//! irqlora backends                             HAL backend capability table
 //! irqlora table <1|2|3|4|5|6|7|8|9|10|11>      regenerate a paper table
 //! irqlora figure <4|5>                         regenerate a paper figure
 //! irqlora all                                  every table + figure
@@ -17,9 +18,14 @@
 //!               --synthetic (offline fixture model)  --check (assert
 //!               budget met + entropy ≥ uniform 3-bit)
 //! Serve flags:  --workers N (0 = IRQLORA_SERVE_WORKERS, default 2)
-//!               --adapters K  --requests M  --reference (offline
-//!               deterministic backend; also the fallback when
-//!               artifacts are missing)  --fused (default) /
+//!               --adapters K  --requests M
+//!               --backend B (named HAL backend: reference | native |
+//!               pjrt | …; validated against its capability manifest
+//!               BEFORE workers spawn. Unset: IRQLORA_SERVE_BACKEND
+//!               if set, else the legacy auto-selection — PJRT when
+//!               artifacts exist, reference otherwise)
+//!               --reference (alias for --backend reference; also the
+//!               fallback when artifacts are missing)  --fused (default) /
 //!               --no-fused (per-group serial oracle path)
 //!               --no-steal (disable the work-stealing scheduler;
 //!               also IRQLORA_SERVE_STEAL=0)
@@ -52,6 +58,7 @@ struct Cli {
     workers: usize,
     adapters: usize,
     requests: usize,
+    backend: Option<String>,
     reference: bool,
     fused: bool,
     steal: bool,
@@ -78,6 +85,7 @@ fn parse_args() -> Result<Cli> {
     let mut workers = 0usize;
     let mut adapters = 4usize;
     let mut requests = 64usize;
+    let mut backend = None;
     let mut reference = false;
     let mut fused = true;
     let mut steal = true;
@@ -159,6 +167,10 @@ fn parse_args() -> Result<Cli> {
                 i += 1;
                 requests = args.get(i).context("--requests needs a value")?.parse()?;
             }
+            "--backend" => {
+                i += 1;
+                backend = Some(args.get(i).context("--backend needs a name")?.clone());
+            }
             "--reference" => {
                 reference = true;
             }
@@ -201,6 +213,7 @@ fn parse_args() -> Result<Cli> {
         workers,
         adapters,
         requests,
+        backend,
         reference,
         fused,
         steal,
@@ -208,11 +221,12 @@ fn parse_args() -> Result<Cli> {
     })
 }
 
-const USAGE: &str = "usage: irqlora <pretrain|quantize|plan|finetune|serve|table N|figure N|all> \
+const USAGE: &str = "usage: irqlora \
+<pretrain|quantize|plan|finetune|serve|backends|table N|figure N|all> \
 [--sizes xs,s] [--pretrain-steps N] [--finetune-steps N] [--eval-per-group N] \
 [--seed N] [--method ARM] [--bits K] [--full] \
 [--budget B] [--floor K] [--ceil K] [--synthetic] [--check] \
-[--workers N] [--adapters K] [--requests M] [--reference] \
+[--workers N] [--adapters K] [--requests M] [--backend NAME] [--reference] \
 [--fused|--no-fused] [--no-steal] [--chaos SEED]";
 
 fn arm_by_name(name: &str, k: u8) -> Result<Arm> {
@@ -250,6 +264,12 @@ fn main() -> Result<()> {
         // loads the manifest itself (the --reference demo and the
         // artifacts-missing fallback run without it)
         return cmd_serve(&cli);
+    }
+    if cli.cmd == "backends" {
+        // print the HAL capability table (no artifacts/PJRT needed)
+        let reg = irqlora::hal::BackendRegistry::builtin();
+        print!("{}", reg.capability_table());
+        return Ok(());
     }
 
     let manifest = Manifest::load("artifacts").context(
@@ -427,49 +447,83 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
 /// shared `AdapterRegistry`, fire a mixed-adapter request stream
 /// through `submit_async`, and print the aggregate `PoolStats`
 /// (per-worker routing/occupancy, per-adapter requests, spills).
-/// With artifacts present it serves the quantized pretrained base
-/// through PJRT workers; `--reference` (or missing artifacts) runs
-/// the deterministic offline backend instead, so the scale-out path
-/// is demo-able in toolchain-only environments.
+///
+/// Backend selection goes through the HAL: `--backend NAME` (or
+/// `IRQLORA_SERVE_BACKEND`) resolves the name against the builtin
+/// [`irqlora::hal::BackendRegistry`] — capability-validated before
+/// any worker spawns, so an unknown name or unsupported combination
+/// is a typed error here. `--reference` is the legacy alias for
+/// `--backend reference`. With nothing named, the legacy auto-path
+/// holds: PJRT when artifacts exist, reference demo otherwise.
 fn cmd_serve(cli: &Cli) -> Result<()> {
-    use irqlora::coordinator::pool::{serve_workers, PoolConfig, ServerPool};
-    use irqlora::coordinator::{synthetic_serve_registry, ReferenceBackend, ServeBackend};
-    use irqlora::util::Rng;
-    use std::time::Duration;
+    use irqlora::coordinator::pool::serve_workers;
 
     let workers = if cli.workers == 0 { serve_workers() } else { cli.workers };
     let n_adapters = cli.adapters.max(1);
     let n_requests = cli.requests.max(1);
 
     if let Some(seed) = cli.chaos {
-        // chaos always runs the deterministic offline backend — the
-        // point is a replayable fault schedule, not artifact coverage
+        // chaos runs the named (default reference) offline backend —
+        // the point is a replayable fault schedule
         return cmd_serve_chaos(cli, workers, n_adapters, n_requests, seed);
     }
-    if !cli.reference {
-        match Manifest::load("artifacts") {
-            Ok(manifest) => return cmd_serve_pjrt(cli, manifest, workers, n_adapters, n_requests),
-            Err(e) => log::warn!("no artifacts ({e:#}) — serving the reference-backend demo"),
-        }
-    }
 
-    // offline demo: the shared synthetic fixture over the
-    // deterministic reference backend (same path the bench smoke
-    // exercises)
+    let named = cli
+        .backend
+        .clone()
+        .or_else(|| cli.reference.then(|| "reference".to_string()))
+        .or_else(irqlora::util::env::serve_backend_override);
+    match named.as_deref() {
+        // pjrt keeps its rich demo (quantized pretrained base, real
+        // LoRA adapters) — but only after the HAL confirms the entry
+        // is registered and available, so the failure is typed
+        Some("pjrt") => {
+            let hal = irqlora::hal::BackendRegistry::builtin();
+            if let Err(reason) = hal.availability("pjrt") {
+                bail!("backend 'pjrt' unavailable: {reason}");
+            }
+            let manifest = Manifest::load("artifacts").context(
+                "backend 'pjrt' needs artifacts/manifest.json (run `make artifacts`)",
+            )?;
+            cmd_serve_pjrt(cli, manifest, workers, n_adapters, n_requests)
+        }
+        Some(name) => cmd_serve_named(cli, name, workers, n_adapters, n_requests),
+        None => match Manifest::load("artifacts") {
+            Ok(manifest) => cmd_serve_pjrt(cli, manifest, workers, n_adapters, n_requests),
+            Err(e) => {
+                log::warn!("no artifacts ({e:#}) — serving the reference-backend demo");
+                cmd_serve_named(cli, "reference", workers, n_adapters, n_requests)
+            }
+        },
+    }
+}
+
+/// Offline demo over a NAMED HAL backend (`reference`, `native`, …):
+/// the shared synthetic fixture, resolved and capability-validated
+/// through [`irqlora::coordinator::serve_pool_backend`]. Same path
+/// the bench smoke and the cross-backend batteries exercise.
+fn cmd_serve_named(
+    cli: &Cli,
+    name: &str,
+    workers: usize,
+    n_adapters: usize,
+    n_requests: usize,
+) -> Result<()> {
+    use irqlora::coordinator::pool::PoolConfig;
+    use irqlora::coordinator::{serve_pool_backend, synthetic_serve_registry};
+    use irqlora::util::Rng;
+    use std::time::Duration;
+
     const BATCH: usize = 8;
     const SEQ: usize = 32;
     const VOCAB: usize = 64;
     let registry = synthetic_serve_registry(n_adapters, cli.cfg.seed);
-    let reg = registry.clone();
     let mut pcfg = PoolConfig::new(workers, Duration::from_millis(2));
     pcfg.fused = cli.fused;
     pcfg.steal = cli.steal;
-    let pool = ServerPool::spawn_with(pcfg, registry, move |_w| {
-        Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
-            as Box<dyn ServeBackend>)
-    })?;
+    let pool = serve_pool_backend(name, (BATCH, SEQ, VOCAB), pcfg, registry)?;
     println!(
-        "reference pool: {} workers, {n_adapters} adapters, {n_requests} requests",
+        "{name} pool: {} workers, {n_adapters} adapters, {n_requests} requests",
         pool.workers()
     );
 
@@ -484,13 +538,16 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// The `serve --chaos SEED` arm: the reference demo with every
-/// worker's backend wrapped in a seed-derived [`FaultBackend`]
-/// (worker w gets `FaultConfig::from_seed(seed ^ w)`), so injected
-/// errors, panics, and latency replay identically for a given seed.
-/// Unlike the clean demo this drive tolerates failed requests: every
-/// outcome is classified and reconciled against the pool's shed/retry
-/// counters and the per-worker injected-fault counters in the report.
+/// The `serve --chaos SEED` arm: the offline demo with every worker's
+/// backend wrapped in a seed-derived [`FaultBackend`] (worker w gets
+/// `FaultConfig::from_seed(seed ^ w)`), so injected errors, panics,
+/// and latency replay identically for a given seed. The inner engine
+/// is the HAL-resolved named backend (`--backend`, default
+/// `reference`), so the chaos battery runs against any registered
+/// CPU backend. Unlike the clean demo this drive tolerates failed
+/// requests: every outcome is classified and reconciled against the
+/// pool's shed/retry counters and the per-worker injected-fault
+/// counters in the report.
 fn cmd_serve_chaos(
     cli: &Cli,
     workers: usize,
@@ -500,9 +557,10 @@ fn cmd_serve_chaos(
 ) -> Result<()> {
     use irqlora::coordinator::pool::{PoolConfig, ServerPool};
     use irqlora::coordinator::{
-        synthetic_serve_registry, FaultBackend, FaultConfig, FaultStats, ReferenceBackend,
-        ServeBackend, ServeError,
+        synthetic_serve_registry, FaultBackend, FaultConfig, FaultStats, ServeBackend,
+        ServeError,
     };
+    use irqlora::hal::{BackendRegistry, BackendRequest};
     use irqlora::util::Rng;
     use std::sync::{Arc, Mutex};
     use std::time::{Duration, Instant};
@@ -510,23 +568,33 @@ fn cmd_serve_chaos(
     const BATCH: usize = 8;
     const SEQ: usize = 32;
     const VOCAB: usize = 64;
+    let name = cli
+        .backend
+        .clone()
+        .unwrap_or_else(|| irqlora::util::env::serve_backend());
     let registry = synthetic_serve_registry(n_adapters, cli.cfg.seed);
-    let reg = registry.clone();
     let mut pcfg = PoolConfig::new(workers, Duration::from_millis(2));
     pcfg.fused = cli.fused;
     pcfg.steal = cli.steal;
+    let mut req = BackendRequest::new(BATCH, SEQ, VOCAB);
+    req.workers = workers;
+    let make_inner = BackendRegistry::builtin().pool_factory(
+        &name,
+        &req,
+        registry.base().clone(),
+        "serve",
+    )?;
     let fault_stats: Arc<Mutex<Vec<(usize, Arc<FaultStats>)>>> =
         Arc::new(Mutex::new(Vec::new()));
     let fs = fault_stats.clone();
     let pool = ServerPool::spawn_with(pcfg, registry, move |w| {
-        let inner = Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
-            as Box<dyn ServeBackend>;
-        let fb = FaultBackend::new(inner, FaultConfig::from_seed(seed ^ w as u64));
+        let fb = FaultBackend::new(make_inner(w)?, FaultConfig::from_seed(seed ^ w as u64));
         fs.lock().unwrap().push((w, fb.stats()));
         Ok(Box::new(fb) as Box<dyn ServeBackend>)
     })?;
     println!(
-        "chaos pool: {} workers (seed {seed}), {n_adapters} adapters, {n_requests} requests",
+        "chaos pool ({name}): {} workers (seed {seed}), {n_adapters} adapters, \
+         {n_requests} requests",
         pool.workers()
     );
 

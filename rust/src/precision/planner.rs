@@ -275,21 +275,14 @@ impl PlannerConfig {
     /// `IRQLORA_BIT_CEIL` whenever THEY are set. Invalid values are
     /// ignored, mirroring `IRQLORA_THREADS`.
     pub fn from_env_or(default_budget: f64) -> PlannerConfig {
-        let budget = std::env::var("IRQLORA_BIT_BUDGET")
-            .ok()
-            .as_deref()
-            .and_then(parse_budget)
-            .unwrap_or(default_budget);
-        let mut cfg = PlannerConfig::new(budget);
-        if let Ok(v) = std::env::var("IRQLORA_BIT_FLOOR") {
-            if let Some(f) = parse_k(&v) {
-                cfg.floor = f;
-            }
+        let mut cfg = PlannerConfig::new(
+            crate::util::env::bit_budget().unwrap_or(default_budget),
+        );
+        if let Some(f) = crate::util::env::bit_floor() {
+            cfg.floor = f;
         }
-        if let Ok(v) = std::env::var("IRQLORA_BIT_CEIL") {
-            if let Some(c) = parse_k(&v) {
-                cfg.ceil = c;
-            }
+        if let Some(c) = crate::util::env::bit_ceil() {
+            cfg.ceil = c;
         }
         cfg
     }
@@ -308,21 +301,17 @@ impl PlannerConfig {
 }
 
 /// Interpret an `IRQLORA_BIT_BUDGET` value: positive finite numbers are
-/// honored; garbage is ignored. Pure so it is testable without
-/// process-global env mutation.
+/// honored; garbage is ignored (parse in `util::env`; this remains the
+/// public entry point `main.rs` uses for `--budget`).
 pub fn parse_budget(v: &str) -> Option<f64> {
-    match v.trim().parse::<f64>() {
-        Ok(b) if b.is_finite() && b > 0.0 => Some(b),
-        _ => None,
-    }
+    crate::util::env::parse_f64_pos(v)
 }
 
-/// Interpret a floor/ceiling value: integers in 1..=8.
+/// Interpret a floor/ceiling value: integers in 1..=8 (parse in
+/// `util::env`).
+#[cfg(test)]
 fn parse_k(v: &str) -> Option<u8> {
-    match v.trim().parse::<u8>() {
-        Ok(k) if (1..=8).contains(&k) => Some(k),
-        _ => None,
-    }
+    crate::util::env::parse_k(v)
 }
 
 /// Solve the allocation: deterministic greedy marginal-gain ascent

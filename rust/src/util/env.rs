@@ -1,0 +1,405 @@
+//! Central registry of `IRQLORA_*` environment knobs.
+//!
+//! Every knob the process reads is declared ONCE here: its name, its
+//! default, what it means, and the typed parser that interprets it.
+//! The per-module resolvers (`util::threads::worker_count`,
+//! `coordinator::pool::serve_workers`, …) delegate here, so the
+//! [`knobs`] table is the source of truth the README env-knob table
+//! and the `irqlora backends` capability output are generated from —
+//! a knob that exists in code but not in this table is a bug, and the
+//! README-drift test in this module enforces the reverse direction.
+//!
+//! Parsing convention (uniform across knobs): positive values are
+//! honored, zero/garbage is ignored and falls back to the default —
+//! except where zero is meaningful (`IRQLORA_PARK_AGE_MS`) or the
+//! knob is an off-switch (`IRQLORA_SERVE_STEAL`). All parsers are
+//! pure functions of the string value so they are testable without
+//! mutating the process-global environment (tests run in parallel).
+
+use std::time::Duration;
+
+/// One declared environment knob.
+#[derive(Clone, Copy, Debug)]
+pub struct Knob {
+    /// Environment variable name (`IRQLORA_*`).
+    pub name: &'static str,
+    /// Human-readable default (what an unset knob resolves to).
+    pub default: &'static str,
+    /// One-line meaning, suitable for a generated docs table.
+    pub meaning: &'static str,
+}
+
+/// Default pool worker count (`IRQLORA_SERVE_WORKERS` unset).
+pub const DEFAULT_SERVE_WORKERS: usize = 2;
+/// Default pool-wide parked-overflow capacity (`IRQLORA_PARK_BOUND`
+/// unset).
+pub const DEFAULT_PARK_BOUND: usize = 1024;
+/// Default parked-request aging threshold in milliseconds
+/// (`IRQLORA_PARK_AGE_MS` unset).
+pub const DEFAULT_PARK_AGE_MS: u64 = 20;
+/// Default merged-weight (host) cache capacity
+/// (`IRQLORA_ADAPTER_CACHE` unset).
+pub const DEFAULT_ADAPTER_CACHE: usize = 8;
+/// Default serving backend name (`IRQLORA_SERVE_BACKEND` unset).
+pub const DEFAULT_SERVE_BACKEND: &str = "reference";
+
+/// Cap on `IRQLORA_THREADS`.
+pub const THREADS_CAP: usize = 256;
+/// Cap on `IRQLORA_SERVE_WORKERS` (mirrors the `PoolConfig` clamp).
+pub const SERVE_WORKERS_CAP: usize = 64;
+/// Cap on the host and device cache knobs.
+pub const CACHE_CAP: usize = 4096;
+/// Cap on `IRQLORA_PARK_BOUND` — beyond this the bound is no longer a
+/// memory guarantee.
+pub const PARK_BOUND_CAP: usize = 1 << 20;
+/// Cap on `IRQLORA_PARK_AGE_MS` (10 minutes).
+pub const PARK_AGE_CAP_MS: u64 = 600_000;
+
+/// The full knob table, one entry per environment variable the
+/// process reads. Order matches the README table.
+pub fn knobs() -> &'static [Knob] {
+    const KNOBS: &[Knob] = &[
+        Knob {
+            name: "IRQLORA_THREADS",
+            default: "autodetect (<= 32)",
+            meaning: "Worker threads for parallel quantize/pack/profile paths. \
+                      Pin for reproducible benches.",
+        },
+        Knob {
+            name: "IRQLORA_SERVE_BACKEND",
+            default: "reference",
+            meaning: "Default HAL serving backend when the CLI/tests do not name one \
+                      (`irqlora backends` lists what is registered).",
+        },
+        Knob {
+            name: "IRQLORA_SERVE_WORKERS",
+            default: "2",
+            meaning: "`ServerPool` worker count when `PoolConfig.workers == 0`.",
+        },
+        Knob {
+            name: "IRQLORA_SERVE_STEAL",
+            default: "on (`0` = off)",
+            meaning: "Work-stealing scheduler kill switch; off restores the legacy \
+                      push-spill scheduler.",
+        },
+        Knob {
+            name: "IRQLORA_PARK_BOUND",
+            default: "1024",
+            meaning: "Max requests parked in the overflow queues, pool-wide. A full \
+                      overflow refuses new work with `ServeError::Overloaded` instead \
+                      of queueing without bound.",
+        },
+        Knob {
+            name: "IRQLORA_PARK_AGE_MS",
+            default: "20",
+            meaning: "Max age of a parked request before it is shed with \
+                      `DeadlineExceeded` (even without an explicit per-request \
+                      deadline).",
+        },
+        Knob {
+            name: "IRQLORA_ADAPTER_CACHE",
+            default: "8",
+            meaning: "Registry LRU capacity for merged serving weights (host RAM).",
+        },
+        Knob {
+            name: "IRQLORA_DEVICE_CACHE",
+            default: "= adapter cache",
+            meaning: "Per-worker device-buffer LRU for uploaded adapters (device \
+                      memory — budget separately when raising the host cache).",
+        },
+        Knob {
+            name: "IRQLORA_BIT_BUDGET",
+            default: "—",
+            meaning: "Planner target, average packed code bits/weight (e.g. `3.2`).",
+        },
+        Knob {
+            name: "IRQLORA_BIT_FLOOR",
+            default: "2",
+            meaning: "Planner per-tensor minimum bit-width.",
+        },
+        Knob {
+            name: "IRQLORA_BIT_CEIL",
+            default: "8",
+            meaning: "Planner per-tensor maximum bit-width.",
+        },
+        Knob {
+            name: "IRQLORA_BENCH_QUICK",
+            default: "off",
+            meaning: "Benches run one measured iteration (smoke mode).",
+        },
+        Knob {
+            name: "IRQLORA_BENCH_JSON",
+            default: "`BENCH_quant.json`",
+            meaning: "Redirect bench row output (verify.sh points it at a scratch \
+                      file so smoke noise never lands in the tracked file).",
+        },
+    ];
+    KNOBS
+}
+
+// ---------------------------------------------------------------------------
+// Pure parsers (no env access — testable without global mutation).
+// ---------------------------------------------------------------------------
+
+/// Interpret a positive-count knob value: integers `>= 1` are honored
+/// (capped at `cap`); zero and garbage are ignored.
+pub fn parse_count(v: &str, cap: usize) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n.min(cap)),
+        _ => None,
+    }
+}
+
+/// Interpret an on/off kill-switch value: `0` / `false` / `off` /
+/// `no` (case-insensitive) mean off; anything else means on.
+pub fn parse_off_flag(v: &str) -> bool {
+    !matches!(
+        v.trim().to_ascii_lowercase().as_str(),
+        "0" | "false" | "off" | "no"
+    )
+}
+
+/// Interpret a millisecond-count knob value: a non-negative integer
+/// (capped at `cap_ms`; `0` is meaningful); garbage is ignored.
+pub fn parse_ms(v: &str, cap_ms: u64) -> Option<Duration> {
+    v.trim()
+        .parse::<u64>()
+        .ok()
+        .map(|ms| Duration::from_millis(ms.min(cap_ms)))
+}
+
+/// Interpret a positive-float knob value (the planner bit budget):
+/// positive finite numbers are honored; garbage is ignored.
+pub fn parse_f64_pos(v: &str) -> Option<f64> {
+    match v.trim().parse::<f64>() {
+        Ok(b) if b.is_finite() && b > 0.0 => Some(b),
+        _ => None,
+    }
+}
+
+/// Interpret a bit-width knob value: integers in 1..=8.
+pub fn parse_k(v: &str) -> Option<u8> {
+    match v.trim().parse::<u8>() {
+        Ok(k) if (1..=8).contains(&k) => Some(k),
+        _ => None,
+    }
+}
+
+/// Whether a quick-mode flag value means "on": any non-empty value
+/// other than `0`.
+pub fn parse_quick(v: Option<&str>) -> bool {
+    matches!(v, Some(s) if !s.is_empty() && s != "0")
+}
+
+/// Interpret a backend-name knob value: a trimmed, non-empty name.
+pub fn parse_name(v: &str) -> Option<String> {
+    let t = v.trim();
+    if t.is_empty() {
+        None
+    } else {
+        Some(t.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed accessors — the ONLY `std::env::var("IRQLORA_*")` call sites.
+// ---------------------------------------------------------------------------
+
+fn var(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+/// `IRQLORA_THREADS` override, if set and valid.
+pub fn threads_override() -> Option<usize> {
+    var("IRQLORA_THREADS").and_then(|v| parse_count(&v, THREADS_CAP))
+}
+
+/// `IRQLORA_SERVE_WORKERS`, else [`DEFAULT_SERVE_WORKERS`].
+pub fn serve_workers() -> usize {
+    var("IRQLORA_SERVE_WORKERS")
+        .and_then(|v| parse_count(&v, SERVE_WORKERS_CAP))
+        .unwrap_or(DEFAULT_SERVE_WORKERS)
+}
+
+/// `IRQLORA_SERVE_STEAL` kill switch (unset means on).
+pub fn serve_steal() -> bool {
+    var("IRQLORA_SERVE_STEAL")
+        .map(|v| parse_off_flag(&v))
+        .unwrap_or(true)
+}
+
+/// `IRQLORA_PARK_BOUND`, else [`DEFAULT_PARK_BOUND`].
+pub fn park_bound() -> usize {
+    var("IRQLORA_PARK_BOUND")
+        .and_then(|v| parse_count(&v, PARK_BOUND_CAP))
+        .unwrap_or(DEFAULT_PARK_BOUND)
+}
+
+/// `IRQLORA_PARK_AGE_MS`, else [`DEFAULT_PARK_AGE_MS`].
+pub fn park_age() -> Duration {
+    var("IRQLORA_PARK_AGE_MS")
+        .and_then(|v| parse_ms(&v, PARK_AGE_CAP_MS))
+        .unwrap_or(Duration::from_millis(DEFAULT_PARK_AGE_MS))
+}
+
+/// `IRQLORA_ADAPTER_CACHE`, else [`DEFAULT_ADAPTER_CACHE`].
+pub fn adapter_cache() -> usize {
+    var("IRQLORA_ADAPTER_CACHE")
+        .and_then(|v| parse_count(&v, CACHE_CAP))
+        .unwrap_or(DEFAULT_ADAPTER_CACHE)
+}
+
+/// `IRQLORA_DEVICE_CACHE`, else the host merged-cache capacity
+/// ([`adapter_cache`]) — one device slot per host-cached merge.
+pub fn device_cache() -> usize {
+    var("IRQLORA_DEVICE_CACHE")
+        .and_then(|v| parse_count(&v, CACHE_CAP))
+        .unwrap_or_else(adapter_cache)
+}
+
+/// `IRQLORA_BIT_BUDGET` override, if set and valid.
+pub fn bit_budget() -> Option<f64> {
+    var("IRQLORA_BIT_BUDGET").and_then(|v| parse_f64_pos(&v))
+}
+
+/// `IRQLORA_BIT_FLOOR` override, if set and valid.
+pub fn bit_floor() -> Option<u8> {
+    var("IRQLORA_BIT_FLOOR").and_then(|v| parse_k(&v))
+}
+
+/// `IRQLORA_BIT_CEIL` override, if set and valid.
+pub fn bit_ceil() -> Option<u8> {
+    var("IRQLORA_BIT_CEIL").and_then(|v| parse_k(&v))
+}
+
+/// `IRQLORA_BENCH_QUICK` quick-mode flag.
+pub fn bench_quick() -> bool {
+    parse_quick(var("IRQLORA_BENCH_QUICK").as_deref())
+}
+
+/// `IRQLORA_BENCH_JSON` output-path override, if set.
+pub fn bench_json() -> Option<String> {
+    var("IRQLORA_BENCH_JSON")
+}
+
+/// `IRQLORA_SERVE_BACKEND`, else [`DEFAULT_SERVE_BACKEND`]. The CLI
+/// `--backend` flag and test batteries consult this to pick a HAL
+/// backend when none is named explicitly.
+pub fn serve_backend() -> String {
+    serve_backend_override().unwrap_or_else(|| DEFAULT_SERVE_BACKEND.to_string())
+}
+
+/// `IRQLORA_SERVE_BACKEND` only when explicitly set — the CLI uses
+/// this to tell "operator pinned a backend" apart from the default
+/// (where `irqlora serve` keeps its legacy artifacts-then-fallback
+/// auto-selection).
+pub fn serve_backend_override() -> Option<String> {
+    var("IRQLORA_SERVE_BACKEND").and_then(|v| parse_name(&v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_parser_contract() {
+        assert_eq!(parse_count("2", 64), Some(2));
+        assert_eq!(parse_count(" 8 ", 64), Some(8));
+        assert_eq!(parse_count("99999", 64), Some(64)); // capped
+        assert_eq!(parse_count("0", 64), None); // zero ignored
+        assert_eq!(parse_count("garbage", 64), None);
+        assert_eq!(parse_count("", 64), None);
+    }
+
+    #[test]
+    fn off_flag_parser_contract() {
+        for off in ["0", "false", "off", "no", " OFF ", "False"] {
+            assert!(!parse_off_flag(off), "{off:?} should mean off");
+        }
+        for on in ["1", "true", "on", "yes", "", "anything"] {
+            assert!(parse_off_flag(on), "{on:?} should mean on");
+        }
+    }
+
+    #[test]
+    fn ms_parser_keeps_zero_meaningful() {
+        assert_eq!(parse_ms("0", 600_000), Some(Duration::from_millis(0)));
+        assert_eq!(parse_ms("250", 600_000), Some(Duration::from_millis(250)));
+        assert_eq!(
+            parse_ms("999999999", 600_000),
+            Some(Duration::from_millis(600_000))
+        );
+        assert_eq!(parse_ms("nope", 600_000), None);
+    }
+
+    #[test]
+    fn float_and_k_parsers() {
+        assert_eq!(parse_f64_pos("3.2"), Some(3.2));
+        assert_eq!(parse_f64_pos("0"), None);
+        assert_eq!(parse_f64_pos("-1"), None);
+        assert_eq!(parse_f64_pos("inf"), None);
+        assert_eq!(parse_k("4"), Some(4));
+        assert_eq!(parse_k("0"), None);
+        assert_eq!(parse_k("9"), None);
+    }
+
+    #[test]
+    fn quick_and_name_parsers() {
+        assert!(!parse_quick(None));
+        assert!(!parse_quick(Some("")));
+        assert!(!parse_quick(Some("0")));
+        assert!(parse_quick(Some("1")));
+        assert_eq!(parse_name("  native "), Some("native".to_string()));
+        assert_eq!(parse_name("   "), None);
+    }
+
+    #[test]
+    fn knob_table_is_complete_and_unique() {
+        let ks = knobs();
+        assert!(ks.len() >= 13);
+        let mut names: Vec<&str> = ks.iter().map(|k| k.name).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate knob declared");
+        for k in ks {
+            assert!(k.name.starts_with("IRQLORA_"), "{} not namespaced", k.name);
+            assert!(!k.meaning.is_empty());
+        }
+        // every knob this module resolves is declared in the table
+        for resolved in [
+            "IRQLORA_THREADS",
+            "IRQLORA_SERVE_BACKEND",
+            "IRQLORA_SERVE_WORKERS",
+            "IRQLORA_SERVE_STEAL",
+            "IRQLORA_PARK_BOUND",
+            "IRQLORA_PARK_AGE_MS",
+            "IRQLORA_ADAPTER_CACHE",
+            "IRQLORA_DEVICE_CACHE",
+            "IRQLORA_BIT_BUDGET",
+            "IRQLORA_BIT_FLOOR",
+            "IRQLORA_BIT_CEIL",
+            "IRQLORA_BENCH_QUICK",
+            "IRQLORA_BENCH_JSON",
+        ] {
+            assert!(
+                ks.iter().any(|k| k.name == resolved),
+                "{resolved} missing from knobs()"
+            );
+        }
+    }
+
+    #[test]
+    fn readme_documents_every_knob() {
+        // Docs can't drift from code: the README env-knob table must
+        // mention every declared knob by name.
+        let readme = include_str!("../../../README.md");
+        for k in knobs() {
+            assert!(
+                readme.contains(k.name),
+                "README.md does not document {}",
+                k.name
+            );
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! statistics, a small tensor type, half-precision codec, threading
 //! helpers, and timers. Everything above `util` builds on these.
 
+pub mod env;
 pub mod f16;
 pub mod hash;
 pub mod mathfn;

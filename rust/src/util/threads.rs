@@ -16,13 +16,12 @@
 pub const DEFAULT_MIN_PARALLEL: usize = 64;
 
 /// Number of worker threads to use. Honors the `IRQLORA_THREADS`
-/// environment override (reproducible benches, CI determinism); falls
-/// back to `available_parallelism`, capped at 32.
+/// environment override (reproducible benches, CI determinism, read
+/// through `util::env`); falls back to `available_parallelism`,
+/// capped at 32.
 pub fn worker_count() -> usize {
-    if let Ok(v) = std::env::var("IRQLORA_THREADS") {
-        if let Some(n) = parse_thread_override(&v) {
-            return n;
-        }
+    if let Some(n) = crate::util::env::threads_override() {
+        return n;
     }
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -31,13 +30,12 @@ pub fn worker_count() -> usize {
 }
 
 /// Interpret an `IRQLORA_THREADS` value: positive integers are honored
-/// (capped at 256); zero and garbage are ignored (autodetect). Pure so
-/// it is testable without process-global env mutation.
+/// (capped at 256); zero and garbage are ignored (autodetect). The
+/// parse itself lives in `util::env` with the other knobs; this
+/// wrapper keeps the historical contract tests anchored here.
+#[cfg(test)]
 fn parse_thread_override(v: &str) -> Option<usize> {
-    match v.trim().parse::<usize>() {
-        Ok(n) if n >= 1 => Some(n.min(256)),
-        _ => None,
-    }
+    crate::util::env::parse_count(v, crate::util::env::THREADS_CAP)
 }
 
 /// Parallel map `f(i)` for `i in 0..n`, preserving order, with the

@@ -1,0 +1,359 @@
+//! Cross-backend capability matrix for the serving HAL.
+//!
+//! The backend registry (`irqlora::hal`) is the single source of truth
+//! for what each backend can do; this battery derives its coverage
+//! from the manifests instead of hard-coding backend names:
+//!
+//! - **capability-driven fan-out**: every registered backend whose
+//!   manifest claims the battery's required capabilities (serve shape,
+//!   fused multi-adapter forward, availability gate) runs the full
+//!   pooled contention battery — today that is `reference` and
+//!   `native`; a future backend joins the matrix just by registering;
+//! - **cross-backend bit-identity**: every pooled reply from every
+//!   capable backend is compared bit-for-bit against ONE serial
+//!   single-worker `ReferenceBackend` oracle, so two backends cannot
+//!   drift from each other without failing here;
+//! - **typed rejection**: malformed or contradictory manifests are
+//!   refused at registration, and unsupported (manifest, request)
+//!   combinations are refused at resolve time, each with the matching
+//!   [`HalError`] variant — never a mid-drain runtime surprise.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use irqlora::coordinator::backend::{ReferenceBackend, ServeBackend};
+use irqlora::coordinator::pool::{PoolConfig, ServerPool};
+use irqlora::coordinator::{synthetic_serve_registry, BatchServer, ServerConfig};
+use irqlora::data::PAD;
+use irqlora::hal::{
+    BackendEntry, BackendManifest, BackendRegistry, BackendRequest, CacheSemantics, HalError,
+    QuantFamily,
+};
+
+const BATCH: usize = 8;
+const SEQ: usize = 32;
+const VOCAB: usize = 64;
+const TENANTS: usize = 6;
+const WORKERS: usize = 4;
+/// Fixture seed: the oracle and every backend's pool rebuild the same
+/// registry from it, so merged adapter weights are identical inputs.
+const FIXTURE_SEED: u64 = 7;
+
+/// The battery's capability requirements, as a typed request: the
+/// serve shape plus a native fused multi-adapter forward (the pool
+/// drains through `forward_fused`, so a scatter-only backend would
+/// measure the default path twice).
+fn battery_request() -> BackendRequest {
+    let mut req = BackendRequest::new(BATCH, SEQ, VOCAB);
+    req.workers = WORKERS;
+    req.require_fused = true;
+    req
+}
+
+/// Every registered backend whose manifest satisfies the battery
+/// request AND whose gate reports it available in this environment.
+fn capable_backends(req: &BackendRequest) -> Vec<String> {
+    let hal = BackendRegistry::builtin();
+    hal.names().into_iter().filter(|n| hal.resolve(n, req).is_ok()).collect()
+}
+
+/// Deterministic mixed-tenant request stream shared by the oracle and
+/// every backend under test.
+fn stream() -> Vec<(String, Vec<i32>)> {
+    (0..64)
+        .map(|i| {
+            let tenant = format!("tenant{}", i % TENANTS);
+            let len = 1 + (i * 7) % SEQ;
+            let prompt: Vec<i32> = (0..len)
+                .map(|t| ((i * 13 + t * 5) % (VOCAB - 1)) as i32 + 1)
+                .collect();
+            (tenant, prompt)
+        })
+        .collect()
+}
+
+/// Serial single-worker reference oracle: each (tenant, prompt) served
+/// alone, in order, on the per-group serial path.
+fn oracle_logits(stream: &[(String, Vec<i32>)]) -> Vec<Vec<f32>> {
+    let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+    let reg = registry.clone();
+    let oracle = BatchServer::spawn_with(
+        ServerConfig::new(Duration::from_millis(1)).serial(),
+        registry,
+        move || {
+            Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                as Box<dyn ServeBackend>)
+        },
+    )
+    .unwrap();
+    let expected = stream
+        .iter()
+        .map(|(t, p)| oracle.query(t, p.clone()).unwrap().logits)
+        .collect();
+    oracle.shutdown();
+    expected
+}
+
+/// The matrix itself: every capable backend serves the same contended
+/// mixed-tenant stream through a 4-worker pool built by the HAL
+/// factory, and every reply must be bit-identical to the serial
+/// reference oracle. The capable set must contain both in-tree CPU
+/// backends — if `native` ever stops claiming (or supporting) the
+/// battery capabilities, this fails loudly instead of shrinking
+/// coverage to reference-only.
+#[test]
+fn every_capable_backend_matches_the_serial_reference_oracle() {
+    let req = battery_request();
+    let capable = capable_backends(&req);
+    assert!(
+        capable.iter().any(|n| n == "reference"),
+        "reference missing from capable set {capable:?}"
+    );
+    assert!(
+        capable.iter().any(|n| n == "native"),
+        "native missing from capable set {capable:?}"
+    );
+
+    let stream = stream();
+    let expected = oracle_logits(&stream);
+
+    let hal = BackendRegistry::builtin();
+    for name in &capable {
+        let name = name.as_str();
+        let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+        let factory = hal
+            .pool_factory(name, &req, registry.base().clone(), "matrix")
+            .unwrap_or_else(|e| panic!("backend '{name}': {e}"));
+        let pool = ServerPool::spawn_with(
+            PoolConfig::new(WORKERS, Duration::from_millis(2)),
+            registry,
+            factory,
+        )
+        .unwrap();
+
+        const SUBMITTERS: usize = 4;
+        std::thread::scope(|scope| {
+            for t in 0..SUBMITTERS {
+                let pool = &pool;
+                let stream = &stream;
+                let expected = &expected;
+                scope.spawn(move || {
+                    let mut inflight: Vec<(usize, irqlora::coordinator::Pending)> = Vec::new();
+                    let mut check = |inflight: &mut Vec<(usize, irqlora::coordinator::Pending)>| {
+                        for (j, h) in inflight.drain(..) {
+                            let r = h.wait().unwrap();
+                            assert_eq!(
+                                r.logits, expected[j],
+                                "backend '{name}' request {j} diverged from the serial \
+                                 reference oracle"
+                            );
+                        }
+                    };
+                    for k in 0..stream.len() {
+                        let i = (k + t * 11) % stream.len();
+                        let (tenant, prompt) = &stream[i];
+                        inflight.push((i, pool.submit_async(tenant, prompt.clone()).unwrap()));
+                        if inflight.len() >= 8 {
+                            check(&mut inflight);
+                        }
+                    }
+                    check(&mut inflight);
+                });
+            }
+        });
+
+        let s = pool.stats();
+        assert_eq!(s.requests, SUBMITTERS * stream.len(), "backend '{name}': {s:?}");
+        assert_eq!(s.fused_batches, s.batches, "backend '{name}' fell off the fused path: {s:?}");
+        pool.shutdown();
+    }
+}
+
+/// Backend-level spot check below the pool machinery: one padded batch
+/// (real token rows + PAD tail rows) through `forward` on every
+/// capable backend's worker 0, bit-compared against the reference
+/// worker and against each other, with identical upload-cache
+/// accounting (one miss, then one hit, for the same generation).
+#[test]
+fn single_forward_and_cache_accounting_agree_across_backends() {
+    let req = battery_request();
+    let hal = BackendRegistry::builtin();
+    let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+    let (generation, weights) = registry.merged_tagged("tenant0").unwrap();
+
+    let mut tokens = vec![PAD; BATCH * SEQ];
+    for b in 0..BATCH - 2 {
+        // ragged real rows; the last two rows stay all-PAD
+        for t in 0..(3 + 5 * b).min(SEQ) {
+            tokens[b * SEQ + t] = ((b * 17 + t * 3) % (VOCAB - 1)) as i32 + 1;
+        }
+    }
+
+    let mut want: Option<(String, Vec<f32>)> = None;
+    for name in capable_backends(&req) {
+        let factory = hal
+            .pool_factory(&name, &req, registry.base().clone(), "matrix")
+            .unwrap_or_else(|e| panic!("backend '{name}': {e}"));
+        let mut backend = factory(0).unwrap();
+        assert_eq!(backend.shape(), (BATCH, SEQ, VOCAB), "backend '{name}'");
+        let first = backend.forward("tenant0", generation, &weights, &tokens).unwrap();
+        let again = backend.forward("tenant0", generation, &weights, &tokens).unwrap();
+        assert_eq!(first, again, "backend '{name}' is not deterministic");
+        let stats = backend.upload_stats();
+        assert_eq!(
+            (stats.misses, stats.hits),
+            (1, 1),
+            "backend '{name}' adapter-cache accounting drifted"
+        );
+        match &want {
+            None => want = Some((name, first)),
+            Some((base_name, base)) => {
+                assert_eq!(first.len(), base.len(), "'{name}' vs '{base_name}'");
+                for (i, (a, b)) in first.iter().zip(base.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "logit {i}: backend '{name}' != backend '{base_name}'"
+                    );
+                }
+            }
+        }
+    }
+    assert!(want.is_some(), "no capable backend ran");
+}
+
+/// A well-formed manifest for the rejection tests, with a factory that
+/// would actually work if the entry were ever resolved.
+fn dummy_entry(name: &str) -> BackendEntry {
+    BackendEntry {
+        manifest: BackendManifest {
+            name: name.to_string(),
+            quant_families: vec![QuantFamily::NormalFloat],
+            bit_widths: vec![4],
+            max_batch: 4,
+            max_seq: 8,
+            max_vocab: 16,
+            fused_multi_adapter: false,
+            cache: CacheSemantics::None,
+            approx_memory_bytes: 1024,
+        },
+        implements_fused: false,
+        gate: None,
+        factory: Arc::new(|ctx| {
+            Ok(Box::new(ReferenceBackend::new(
+                ctx.request.batch,
+                ctx.request.seq,
+                ctx.request.vocab,
+                &ctx.base,
+            )) as Box<dyn ServeBackend>)
+        }),
+    }
+}
+
+/// Malformed and contradictory manifests must be refused AT
+/// REGISTRATION with the typed `InvalidManifest` / `DuplicateBackend`
+/// errors — the registry never holds an entry it could not construct
+/// a valid backend from.
+#[test]
+fn registration_refuses_malformed_and_contradictory_manifests() {
+    let mut reg = BackendRegistry::new();
+
+    let mut e = dummy_entry("bad-k");
+    e.manifest.bit_widths = vec![4, 9];
+    match reg.register(e) {
+        Err(HalError::InvalidManifest { name, reason }) => {
+            assert_eq!(name, "bad-k");
+            assert!(reason.contains("k=9"), "{reason}");
+        }
+        other => panic!("k=9 accepted: {other:?}"),
+    }
+
+    let mut e = dummy_entry("no-batch");
+    e.manifest.max_batch = 0;
+    assert!(matches!(reg.register(e), Err(HalError::InvalidManifest { .. })));
+
+    let mut e = dummy_entry("no-family");
+    e.manifest.quant_families.clear();
+    assert!(matches!(reg.register(e), Err(HalError::InvalidManifest { .. })));
+
+    // contradictory: the manifest advertises a single-launch fused
+    // forward the implementation does not provide
+    let mut e = dummy_entry("fused-liar");
+    e.manifest.fused_multi_adapter = true;
+    match reg.register(e) {
+        Err(HalError::InvalidManifest { name, reason }) => {
+            assert_eq!(name, "fused-liar");
+            assert!(reason.contains("fused"), "{reason}");
+        }
+        other => panic!("fused-without-implementation accepted: {other:?}"),
+    }
+
+    reg.register(dummy_entry("dup")).unwrap();
+    assert!(matches!(
+        reg.register(dummy_entry("dup")),
+        Err(HalError::DuplicateBackend { .. })
+    ));
+
+    // the failed registrations left no residue
+    assert_eq!(reg.names(), vec!["dup".to_string()]);
+}
+
+/// Unsupported (manifest, request) combinations must be refused at
+/// RESOLVE time — before any worker spawns — with the typed
+/// `Unknown` / `Unsupported` variants, and the builtin `pjrt` entry's
+/// availability gate must report `Unavailable` when no compiled
+/// artifacts exist.
+#[test]
+fn resolve_refuses_unsupported_combinations_with_typed_errors() {
+    let hal = BackendRegistry::builtin();
+
+    match hal.resolve("warp-drive", &BackendRequest::new(1, 1, 1)) {
+        Err(HalError::UnknownBackend { name, available }) => {
+            assert_eq!(name, "warp-drive");
+            assert!(available.iter().any(|n| n == "reference"), "{available:?}");
+            assert!(available.iter().any(|n| n == "native"), "{available:?}");
+        }
+        other => panic!("unknown backend resolved: {other:?}"),
+    }
+
+    // shape beyond the reference manifest's max_batch
+    let big = BackendRequest::new(100_000, SEQ, VOCAB);
+    match hal.resolve("reference", &big) {
+        Err(HalError::Unsupported { backend, reason }) => {
+            assert_eq!(backend, "reference");
+            assert!(reason.contains("batch"), "{reason}");
+        }
+        other => panic!("oversized batch resolved: {other:?}"),
+    }
+
+    // a fused requirement against a manifest that only scatters
+    let mut reg = BackendRegistry::new();
+    reg.register(dummy_entry("scatter-only")).unwrap();
+    let mut req = BackendRequest::new(4, 8, 16);
+    req.require_fused = true;
+    assert!(matches!(
+        reg.resolve("scatter-only", &req),
+        Err(HalError::Unsupported { .. })
+    ));
+    // a bit-width the manifest does not claim
+    let mut req = BackendRequest::new(4, 8, 16);
+    req.bit_widths = vec![2];
+    match reg.resolve("scatter-only", &req) {
+        Err(HalError::Unsupported { reason, .. }) => {
+            assert!(reason.contains("k=2"), "{reason}")
+        }
+        other => panic!("unclaimed bit-width resolved: {other:?}"),
+    }
+
+    // pjrt stays registered (its restore is a ROADMAP carry-over) but
+    // gates itself off until `make artifacts` has produced a manifest
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        match hal.resolve("pjrt", &BackendRequest::new(1, 1, 1)) {
+            Err(HalError::Unavailable { name, reason }) => {
+                assert_eq!(name, "pjrt");
+                assert!(reason.contains("artifacts"), "{reason}");
+            }
+            other => panic!("gated pjrt resolved without artifacts: {other:?}"),
+        }
+    }
+}

@@ -17,9 +17,18 @@
 //! The fault schedule is a pure function of the seed (see
 //! `coordinator::chaos`), so each `#[test]` here replays the same
 //! injected-fault sequence on every run.
+//!
+//! The faulted pool's inner backends come from the HAL registry's
+//! validated factory for `IRQLORA_SERVE_BACKEND` (default
+//! `reference`); `scripts/verify.sh` reruns this file with
+//! `IRQLORA_SERVE_BACKEND=native` so the chaos contract is asserted
+//! over the native CPU backend too. The clean serial oracle stays
+//! pinned to `ReferenceBackend` regardless, so delivered-reply
+//! bit-identity is checked *across* backends, not just within one.
 
 use irqlora::coordinator::backend::{ReferenceBackend, ServeBackend};
 use irqlora::coordinator::pool::{PoolConfig, ServerPool};
+use irqlora::hal::{BackendRegistry, BackendRequest};
 use irqlora::coordinator::{
     synthetic_serve_registry, BatchServer, FaultBackend, FaultConfig, FaultStats, ServeError,
     ServerConfig,
@@ -41,11 +50,19 @@ const FIXTURE_SEED: u64 = 7;
 
 fn soak(seed: u64) {
     let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
-    let reg = registry.clone();
     let mut pcfg = PoolConfig::new(WORKERS, Duration::from_millis(1));
     pcfg.spill_depth = Some(2);
     pcfg.park_bound = Some(PARK_BOUND);
     pcfg.park_age = Some(Duration::from_millis(5));
+    // faulted workers wrap whatever backend the env selects, built
+    // through the manifest-validated HAL factory — a bad name or an
+    // unsupported shape fails here with a typed error, not mid-soak
+    let backend_name = irqlora::util::env::serve_backend();
+    let mut req = BackendRequest::new(BATCH, SEQ, VOCAB);
+    req.workers = WORKERS;
+    let make_inner = BackendRegistry::builtin()
+        .pool_factory(&backend_name, &req, registry.base().clone(), "soak")
+        .unwrap_or_else(|e| panic!("backend '{backend_name}' rejected for soak: {e}"));
     let fault_stats: Arc<Mutex<Vec<Arc<FaultStats>>>> = Arc::new(Mutex::new(Vec::new()));
     let fs = fault_stats.clone();
     let pool = ServerPool::spawn_with(pcfg, registry, move |w| {
@@ -56,9 +73,7 @@ fn soak(seed: u64) {
         } else {
             FaultConfig::from_seed(seed ^ w as u64).no_panic()
         };
-        let inner = Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
-            as Box<dyn ServeBackend>;
-        let fb = FaultBackend::new(inner, cfg);
+        let fb = FaultBackend::new(make_inner(w)?, cfg);
         fs.lock().unwrap().push(fb.stats());
         Ok(Box::new(fb) as Box<dyn ServeBackend>)
     })

@@ -12,7 +12,12 @@
 //! `scripts/verify.sh` runs this file a second time with
 //! `IRQLORA_SERVE_WORKERS=4` exported so the env-sized pool path is
 //! covered explicitly (the tests themselves also floor the worker
-//! count at 4).
+//! count at 4), and a third time with `IRQLORA_SERVE_BACKEND=native`
+//! so the whole battery replays over the native CPU backend: the
+//! pooled side is built through the HAL registry's validated factory,
+//! while the serial oracle stays pinned to `ReferenceBackend` — so a
+//! native-vs-reference bit divergence fails these assertions, not
+//! just the dedicated backend-matrix tests.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -22,6 +27,7 @@ use std::time::{Duration, Instant};
 use irqlora::coordinator::backend::{ReferenceBackend, ServeBackend};
 use irqlora::coordinator::pool::{home_worker, serve_workers, PoolConfig, ServerPool};
 use irqlora::coordinator::{quantize_model, AdapterRegistry, BatchServer, ServerConfig};
+use irqlora::hal::{BackendRegistry, BackendRequest, NativeBackend};
 use irqlora::lora::merge::merge_adapter;
 use irqlora::model::weights::NamedTensors;
 use irqlora::quant::Method;
@@ -73,21 +79,45 @@ fn contended_registry(seed: u64) -> Arc<AdapterRegistry> {
     registry
 }
 
-fn reference_pool(
+/// Pool over the env-selected HAL backend (`IRQLORA_SERVE_BACKEND`,
+/// default `reference`). The request is validated against the
+/// backend's capability manifest up front — the same typed-error path
+/// `irqlora serve --backend` takes — so a misconfigured rerun fails at
+/// construction, not mid-battery. When a forward delay is needed the
+/// backend is built by name (the delay knob is a concrete-type
+/// builder); the delay-free case goes through the registry factory
+/// verbatim. The serial oracles below stay pinned to
+/// `ReferenceBackend` either way.
+fn env_backend_pool(
     workers: usize,
     registry: Arc<AdapterRegistry>,
     delay: Duration,
 ) -> ServerPool {
-    let reg = registry.clone();
-    ServerPool::spawn_with(
-        PoolConfig::new(workers, Duration::from_millis(2)),
-        registry,
-        move |_w| {
-            Ok(Box::new(
-                ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()).with_forward_delay(delay),
-            ) as Box<dyn ServeBackend>)
-        },
-    )
+    let name = irqlora::util::env::serve_backend();
+    let mut req = BackendRequest::new(BATCH, SEQ, VOCAB);
+    req.workers = workers;
+    let hal = BackendRegistry::builtin();
+    hal.resolve(&name, &req)
+        .unwrap_or_else(|e| panic!("backend '{name}' rejected for this battery: {e}"));
+    let pcfg = PoolConfig::new(workers, Duration::from_millis(2));
+    if delay.is_zero() {
+        let factory = hal
+            .pool_factory(&name, &req, registry.base().clone(), "test")
+            .unwrap_or_else(|e| panic!("backend '{name}': {e}"));
+        return ServerPool::spawn_with(pcfg, registry, factory).unwrap();
+    }
+    let base = registry.base().clone();
+    ServerPool::spawn_with(pcfg, registry, move |_w| {
+        let b: Box<dyn ServeBackend> = match name.as_str() {
+            "native" => Box::new(
+                NativeBackend::new(BATCH, SEQ, VOCAB, &base).with_forward_delay(delay),
+            ),
+            _ => Box::new(
+                ReferenceBackend::new(BATCH, SEQ, VOCAB, &base).with_forward_delay(delay),
+            ),
+        };
+        Ok(b)
+    })
     .unwrap()
 }
 
@@ -145,7 +175,7 @@ fn pool_replies_bit_identical_to_serial_oracle_under_contention() {
     );
 
     let n_workers = serve_workers().max(4);
-    let pool = reference_pool(n_workers, registry.clone(), Duration::ZERO);
+    let pool = env_backend_pool(n_workers, registry.clone(), Duration::ZERO);
     assert!(pool.workers() >= 4);
 
     const SUBMITTERS: usize = 6;
@@ -262,7 +292,7 @@ fn stealing_balances_a_saturated_worker_bit_identically() {
     // slow backend: the home worker cannot keep up with an open-loop
     // burst, so in-flight crosses the park threshold (2 × BATCH = 8)
     // and idle workers get something to steal
-    let pool = reference_pool(4, registry, Duration::from_millis(5));
+    let pool = env_backend_pool(4, registry, Duration::from_millis(5));
     assert!(pool.stealing());
     let handles: Vec<_> = prompts
         .iter()
@@ -315,7 +345,7 @@ fn shutdown_drains_all_inflight_async_handles() {
         solo.shutdown();
     }
 
-    let pool = reference_pool(
+    let pool = env_backend_pool(
         serve_workers().max(4),
         registry,
         Duration::from_millis(5), // keep the queues non-empty at shutdown
@@ -459,7 +489,7 @@ fn serve_workers_honors_env_when_set() {
 fn affinity_routes_every_adapter_to_its_home_worker() {
     let registry = contended_registry(47);
     let n_workers = serve_workers().max(4);
-    let pool = reference_pool(n_workers, registry, Duration::ZERO);
+    let pool = env_backend_pool(n_workers, registry, Duration::ZERO);
     for i in 0..N_ADAPTERS {
         let name = format!("tenant{i}");
         for round in 0..3 {

@@ -431,6 +431,98 @@ fn prop_pool_affinity_deterministic_and_balanced() {
 }
 
 #[test]
+fn prop_native_backend_bit_identical_to_reference() {
+    use irqlora::coordinator::backend::{AdapterGroup, ReferenceBackend, ServeBackend};
+    use irqlora::coordinator::quantize_model;
+    use irqlora::hal::NativeBackend;
+    use irqlora::model::weights::NamedTensors;
+    use irqlora::quant::Method;
+    use std::sync::Arc;
+
+    // the native cache-blocked backend must be bit-identical to the
+    // reference oracle for every logit — across k in {2,3,4,8} (its
+    // streaming tile constructor really dequantizes packed NF-k
+    // storage, including partial last blocks), arbitrary shapes,
+    // partial batches (trailing all-PAD rows), ragged rows, and
+    // multi-group fused forwards with unowned gap rows
+    cases(12, 33, |seed, rng| {
+        let k = *rng.pick(&[2u8, 3, 4, 8]);
+        let batch = 2 + rng.below(6);
+        let seq = 1 + rng.below(24);
+        let vocab = 2 + rng.below(150);
+
+        let mut base = NamedTensors::new();
+        let n0 = 64 * (1 + rng.below(6)) + rng.below(64); // partial last block
+        base.push("l0.wq", Tensor::new(&[n0], rng.normal_vec(n0, 0.0, 0.05)));
+        base.push("embed", Tensor::new(&[33], rng.normal_vec(33, 0.0, 0.1)));
+        let qm = quantize_model(&base, Method::NfIcq { k }, seed ^ 9).unwrap();
+        assert!(!qm.storage.is_empty(), "seed={seed}: no packed storage to stream from");
+
+        let mut native = NativeBackend::from_quantized(batch, seq, vocab, &qm);
+        let mut reference = ReferenceBackend::new(batch, seq, vocab, &qm.dequantized);
+
+        // two adapters' merged weights — contents arbitrary, only the
+        // fingerprints matter to both backends
+        let weights: Vec<Arc<NamedTensors>> = (0..2)
+            .map(|_| {
+                let mut aw = NamedTensors::new();
+                aw.push("l0.wq", Tensor::new(&[16], rng.normal_vec(16, 0.0, 0.3)));
+                Arc::new(aw)
+            })
+            .collect();
+
+        // partial batch: only the first `rows` rows carry tokens,
+        // with ragged per-row lengths (PAD tails)
+        let rows = 1 + rng.below(batch);
+        let mut tokens = vec![irqlora::data::PAD; batch * seq];
+        for b in 0..rows {
+            let len = 1 + rng.below(seq);
+            for slot in tokens[b * seq..].iter_mut().take(len) {
+                *slot = 1 + rng.below(200) as i32;
+            }
+        }
+
+        let got = native.forward("a", 1, &weights[0], &tokens).unwrap();
+        let want = reference.forward("a", 1, &weights[0], &tokens).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "seed={seed} k={k} batch={batch} seq={seq} vocab={vocab} i={i}: {g} vs {w}"
+            );
+        }
+
+        // fused: two groups over the occupied rows, with an unowned
+        // gap row whenever the partial batch leaves room for one
+        let split = 1 + rng.below(rows.max(2) - 1).min(rows - 1);
+        let groups = vec![
+            AdapterGroup {
+                name: "a".into(),
+                generation: 1,
+                weights: weights[0].clone(),
+                rows: 0..split,
+            },
+            AdapterGroup {
+                name: "b".into(),
+                generation: 3,
+                weights: weights[1].clone(),
+                rows: split..rows,
+            },
+        ];
+        let got = native.forward_fused(&groups, &tokens).unwrap();
+        let want = reference.forward_fused(&groups, &tokens).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "seed={seed} k={k} fused i={i}");
+        }
+        assert_eq!(
+            native.upload_stats(),
+            reference.upload_stats(),
+            "seed={seed}: adapter-cache accounting diverged"
+        );
+    });
+}
+
+#[test]
 fn prop_entropy_bounds_and_permutation_invariance() {
     cases(30, 10, |seed, rng| {
         let k = 2 + rng.below(3) as u8;

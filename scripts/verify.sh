@@ -54,6 +54,27 @@ echo "== chaos soak (seeded deterministic fault injection) =="
 (cd rust && cargo test -q --test chaos_soak)
 (cd rust && IRQLORA_SERVE_STEAL=0 cargo test -q --test chaos_soak)
 
+echo "== backend HAL matrix (irqlora backends + native-backend batteries) =="
+# The capability listing must include both in-tree CPU backends; a
+# registration/validation regression that drops one would otherwise
+# only surface when someone asks for it by name.
+BACKENDS_OUT="$(cd rust && cargo run --release --quiet -- backends)"
+if ! grep -q '`reference`' <<<"$BACKENDS_OUT" \
+   || ! grep -q '`native`' <<<"$BACKENDS_OUT"; then
+  echo "verify.sh: ERROR: 'irqlora backends' does not list both reference and native:" >&2
+  echo "$BACKENDS_OUT" >&2
+  exit 11
+fi
+# Replay the concurrency + chaos batteries over the native CPU backend
+# (the pooled side is built through the HAL's validated factory; the
+# serial oracle inside the tests stays pinned to reference, so this is
+# a cross-backend bit-identity gate, not just a smoke).
+(cd rust && IRQLORA_SERVE_BACKEND=native IRQLORA_SERVE_WORKERS=4 \
+  cargo test -q --test pool_concurrency)
+(cd rust && IRQLORA_SERVE_BACKEND=native cargo test -q --test chaos_soak)
+# One end-to-end CLI run over the native backend.
+(cd rust && cargo run --release --quiet -- serve --backend native --workers 2)
+
 echo "== chaos serve smoke (irqlora serve --reference --chaos 7) =="
 # One end-to-end CLI run with injected faults: liveness is the gate —
 # the command bails nonzero if the pool delivers nothing.
@@ -132,6 +153,12 @@ if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
     echo "verify.sh: ERROR: serve_latency smoke emitted no saturation (2x overload) rows" >&2
     echo "verify.sh: (delivered p50/p99 + shed count under admission control should always emit)" >&2
     exit 10
+  fi
+  if ! grep -q "serve_latency backend=native" "$SMOKE_JSON" \
+     || ! grep -q "serve_latency backend=reference" "$SMOKE_JSON"; then
+    echo "verify.sh: ERROR: serve_latency smoke emitted no paired backend=native/backend=reference rows" >&2
+    echo "verify.sh: (the HAL-built native-vs-reference sweep should run without artifacts)" >&2
+    exit 12
   fi
 fi
 
