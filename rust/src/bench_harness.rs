@@ -6,7 +6,10 @@
 //! Besides stdout, benches can record results machine-readably through
 //! [`JsonSink`], which merges into `BENCH_quant.json` at the repo root
 //! (same-name entries are replaced, other benches' entries are kept) so
-//! the perf trajectory is tracked across PRs. Environment knobs:
+//! the perf trajectory is tracked across PRs — and compared across
+//! snapshots by `scripts/perf_compare.sh`. Every row carries
+//! provenance: a wall-clock `ts` and a best-effort `git_rev` (empty
+//! when git is unavailable). Environment knobs:
 //!
 //! - `IRQLORA_BENCH_QUICK=1` — [`iters`] returns 1 (CI smoke mode;
 //!   `scripts/verify.sh` sets it);
@@ -156,6 +159,12 @@ pub struct JsonEntry {
     /// Units (elements, requests, …) per second, when the bench
     /// reported throughput.
     pub per_sec: Option<f64>,
+    /// Unix epoch seconds the row was recorded at (0 when the clock
+    /// is unreadable).
+    pub ts: u64,
+    /// Short git revision of the recording tree — best-effort: empty
+    /// when `git` is unavailable or the CWD is not a work tree.
+    pub git_rev: String,
 }
 
 /// Collects [`JsonEntry`]s and writes them as a stable, dependency-free
@@ -200,6 +209,8 @@ impl JsonSink {
             ns_per_iter,
             ns_min,
             per_sec,
+            ts: epoch_secs(),
+            git_rev: git_rev().to_string(),
         });
     }
 
@@ -216,12 +227,14 @@ impl JsonSink {
                 None => "null".to_string(),
             };
             s.push_str(&format!(
-                "    {{\"name\": \"{}\", \"iters\": {}, \"ns_per_iter\": {}, \"ns_min\": {}, \"per_sec\": {}}}{}\n",
+                "    {{\"name\": \"{}\", \"iters\": {}, \"ns_per_iter\": {}, \"ns_min\": {}, \"per_sec\": {}, \"ts\": {}, \"git_rev\": \"{}\"}}{}\n",
                 e.name,
                 e.iters,
                 fnum(e.ns_per_iter),
                 fnum(e.ns_min),
                 per_sec,
+                e.ts,
+                e.git_rev,
                 if i + 1 == merged.len() { "" } else { "," },
             ));
         }
@@ -244,6 +257,32 @@ fn fnum(x: f64) -> String {
     } else {
         "0.000".to_string()
     }
+}
+
+/// Unix epoch seconds, 0 when the clock is unreadable (a pre-epoch
+/// clock should not fail the write path).
+fn epoch_secs() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Best-effort short git revision of the recording tree, resolved once
+/// per process. Empty when `git` is missing, errors, or the CWD is not
+/// inside a work tree — bench rows must never fail over provenance.
+fn git_rev() -> &'static str {
+    static REV: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    REV.get_or_init(|| {
+        std::process::Command::new("git")
+            .args(["rev-parse", "--short", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|s| sanitize(s.trim()))
+            .unwrap_or_default()
+    })
 }
 
 /// Parse a file previously written by [`JsonSink::write_merged`]. Only
@@ -270,6 +309,9 @@ pub fn read_entries(path: &Path) -> Option<Vec<JsonEntry>> {
             ns_per_iter: ns,
             ns_min,
             per_sec: field_num(line, "per_sec"),
+            // absent in pre-stamp files: default rather than reject
+            ts: field_num(line, "ts").unwrap_or(0.0) as u64,
+            git_rev: field_str(line, "git_rev").unwrap_or_default(),
         });
     }
     Some(out)
@@ -360,9 +402,38 @@ mod tests {
         assert!((beta.per_sec.unwrap() - 100.0).abs() < 1e-9);
         assert!(back.iter().any(|e| e.name == "alpha (1M)"));
 
-        // the document is self-describing
+        // the document is self-describing and rows carry provenance
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("irqlora-bench-v1"));
+        assert!(text.contains("\"ts\": "));
+        assert!(text.contains("\"git_rev\": \""));
+        let alpha = back.iter().find(|e| e.name == "alpha (1M)").unwrap();
+        assert!(alpha.ts > 0, "push_raw must stamp a wall-clock ts");
+        // git_rev is best-effort (may be empty offline) but must stay
+        // JSON-safe when present
+        assert!(!alpha.git_rev.contains('"') && !alpha.git_rev.contains('\\'));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_entries_tolerates_pre_stamp_rows() {
+        let dir = std::env::temp_dir().join(format!(
+            "irqlora_bench_prestamp_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.json");
+        std::fs::write(
+            &path,
+            "{\n  \"schema\": \"irqlora-bench-v1\",\n  \"results\": [\n    \
+             {\"name\": \"legacy\", \"iters\": 2, \"ns_per_iter\": 10.000, \
+             \"ns_min\": 9.000, \"per_sec\": null}\n  ]\n}\n",
+        )
+        .unwrap();
+        let back = read_entries(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].ts, 0);
+        assert_eq!(back[0].git_rev, "");
         std::fs::remove_dir_all(&dir).ok();
     }
 

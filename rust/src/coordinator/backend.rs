@@ -331,6 +331,35 @@ impl PjrtBackend {
     }
 }
 
+/// Per-backend forward timers (`hal.forward_time{backend=...}` /
+/// `hal.fused_forward_time{backend=...}`), resolved once per process
+/// and cached — the per-call cost is one branch when telemetry is
+/// disabled, a clock read + relaxed atomics when enabled.
+pub(crate) struct ForwardTimers {
+    pub(crate) forward: crate::telemetry::Timer,
+    pub(crate) fused: crate::telemetry::Timer,
+}
+
+impl ForwardTimers {
+    pub(crate) fn resolve(backend: &str) -> ForwardTimers {
+        let reg = crate::telemetry::global();
+        ForwardTimers {
+            forward: reg.timer("hal.forward_time", &[("backend", backend)]),
+            fused: reg.timer("hal.fused_forward_time", &[("backend", backend)]),
+        }
+    }
+}
+
+fn telem_pjrt() -> &'static ForwardTimers {
+    static T: std::sync::OnceLock<ForwardTimers> = std::sync::OnceLock::new();
+    T.get_or_init(|| ForwardTimers::resolve("pjrt"))
+}
+
+fn telem_reference() -> &'static ForwardTimers {
+    static T: std::sync::OnceLock<ForwardTimers> = std::sync::OnceLock::new();
+    T.get_or_init(|| ForwardTimers::resolve("reference"))
+}
+
 impl ServeBackend for PjrtBackend {
     fn shape(&self) -> (usize, usize, usize) {
         (self.batch, self.seq, self.vocab)
@@ -343,6 +372,7 @@ impl ServeBackend for PjrtBackend {
         weights: &Arc<NamedTensors>,
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
+        let _t = telem_pjrt().forward.start();
         let idx = self.ensure_uploaded(name, generation, weights)?;
         let tok = self.exe.upload_i32(self.nb + self.nl + 2, tokens)?;
         let adapter_bufs = self.device_cache.get(idx);
@@ -520,6 +550,7 @@ impl ServeBackend for ReferenceBackend {
         weights: &Arc<NamedTensors>,
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
+        let _t = telem_reference().forward.start();
         if tokens.len() != self.batch * self.seq {
             bail!(
                 "token matrix has {} elems, expected batch*seq = {}",
@@ -547,6 +578,7 @@ impl ServeBackend for ReferenceBackend {
     /// fingerprint. One `forward_delay` sleep per fused batch — one
     /// "launch", however many adapters ride in it.
     fn forward_fused(&mut self, groups: &[AdapterGroup], tokens: &[i32]) -> Result<Vec<f32>> {
+        let _t = telem_reference().fused.start();
         if tokens.len() != self.batch * self.seq {
             bail!(
                 "token matrix has {} elems, expected batch*seq = {}",

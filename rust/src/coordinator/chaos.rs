@@ -131,11 +131,52 @@ pub struct FaultBackend {
     cfg: FaultConfig,
     calls: u64,
     stats: Arc<FaultStats>,
+    telem: ChaosTelem,
+}
+
+/// Telemetry mirrors of [`FaultStats`], incremented at the same
+/// mutation sites (so a `chaos.*` snapshot reconciles exactly with the
+/// struct counters). No-op handles unless the resolving registry is
+/// enabled.
+#[derive(Clone)]
+struct ChaosTelem {
+    forwards: crate::telemetry::Counter,
+    errors: crate::telemetry::Counter,
+    panics: crate::telemetry::Counter,
+    delays: crate::telemetry::Counter,
+}
+
+impl ChaosTelem {
+    fn resolve(reg: &crate::telemetry::Registry) -> ChaosTelem {
+        ChaosTelem {
+            forwards: reg.counter("chaos.forwards", &[]),
+            errors: reg.counter("chaos.errors_injected", &[]),
+            panics: reg.counter("chaos.panics_injected", &[]),
+            delays: reg.counter("chaos.delays_injected", &[]),
+        }
+    }
 }
 
 impl FaultBackend {
     pub fn new(inner: Box<dyn ServeBackend>, cfg: FaultConfig) -> FaultBackend {
-        FaultBackend { inner, cfg, calls: 0, stats: Arc::new(FaultStats::default()) }
+        Self::with_telemetry(inner, cfg, &crate::telemetry::global())
+    }
+
+    /// [`Self::new`] recording into an explicit telemetry registry
+    /// instead of the process-global one — how parallel tests get
+    /// isolated `chaos.*` counters without touching process env.
+    pub fn with_telemetry(
+        inner: Box<dyn ServeBackend>,
+        cfg: FaultConfig,
+        reg: &crate::telemetry::Registry,
+    ) -> FaultBackend {
+        FaultBackend {
+            inner,
+            cfg,
+            calls: 0,
+            stats: Arc::new(FaultStats::default()),
+            telem: ChaosTelem::resolve(reg),
+        }
     }
 
     /// Handle to the injected-fault counters; clone it out before
@@ -151,22 +192,26 @@ impl FaultBackend {
     fn fault_for_call(&mut self, targeted: bool) -> Result<()> {
         self.calls += 1;
         self.stats.forwards.fetch_add(1, Ordering::AcqRel);
+        self.telem.forwards.inc();
         if !targeted {
             return Ok(());
         }
         if self.cfg.panic_after == Some(self.calls) {
             self.stats.panics_injected.fetch_add(1, Ordering::AcqRel);
+            self.telem.panics.inc();
             panic!("chaos: injected panic at forward call {}", self.calls);
         }
         if let Some(n) = self.cfg.error_every {
             if n > 0 && self.calls % n == 0 {
                 self.stats.errors_injected.fetch_add(1, Ordering::AcqRel);
+                self.telem.errors.inc();
                 bail!("chaos: injected backend error at forward call {}", self.calls);
             }
         }
         if let Some(n) = self.cfg.delay_every {
             if n > 0 && self.calls % n == 0 && !self.cfg.delay.is_zero() {
                 self.stats.delays_injected.fetch_add(1, Ordering::AcqRel);
+                self.telem.delays.inc();
                 std::thread::sleep(self.cfg.delay);
             }
         }

@@ -93,6 +93,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::runtime::Manifest;
+use crate::telemetry;
 use crate::util::hash::{fnv1a, FNV1A_SEED};
 
 use super::backend::{PjrtBackend, ServeBackend};
@@ -219,6 +220,12 @@ pub struct PoolConfig {
     /// `IRQLORA_PARK_AGE_MS` env default). Parked longer than this, a
     /// request is promoted ahead of fresh arrivals.
     pub park_age: Option<Duration>,
+    /// Telemetry registry this pool (and its workers) record into;
+    /// `None` means the process-global registry
+    /// ([`crate::telemetry::global`], enabled by `IRQLORA_TELEMETRY`).
+    /// Tests inject a scoped enabled registry here so parallel test
+    /// binaries never touch process env or each other's counters.
+    pub telemetry: Option<Arc<telemetry::Registry>>,
 }
 
 impl PoolConfig {
@@ -231,6 +238,7 @@ impl PoolConfig {
             steal: true,
             park_bound: None,
             park_age: None,
+            telemetry: None,
         }
     }
 
@@ -266,6 +274,13 @@ struct StealBus {
     parked_peak: AtomicUsize,
     /// Parked requests shed with `DeadlineExceeded` at a pop.
     shed_deadline: AtomicUsize,
+    /// Telemetry mirrors of `steals` / `shed_deadline` /
+    /// `parked_peak`, incremented at the same sites. No-op handles
+    /// (the [`StealBus::new`] default) unless the pool attaches live
+    /// ones at spawn.
+    t_steals: telemetry::Counter,
+    t_shed_deadline: telemetry::Counter,
+    t_parked_peak: telemetry::Gauge,
 }
 
 impl StealBus {
@@ -278,6 +293,9 @@ impl StealBus {
             age,
             parked_peak: AtomicUsize::new(0),
             shed_deadline: AtomicUsize::new(0),
+            t_steals: telemetry::Counter::noop(),
+            t_shed_deadline: telemetry::Counter::noop(),
+            t_parked_peak: telemetry::Gauge::noop(),
         }
     }
 
@@ -307,6 +325,7 @@ impl StealBus {
         }
         self.queues[worker].lock().unwrap().push_back(r);
         let depth = cur + 1;
+        self.t_parked_peak.set_max(depth as u64);
         let mut peak = self.parked_peak.load(Ordering::Acquire);
         while depth > peak {
             match self.parked_peak.compare_exchange_weak(
@@ -330,6 +349,7 @@ impl StealBus {
         for r in popped {
             if r.expired(now) {
                 self.shed_deadline.fetch_add(1, Ordering::AcqRel);
+                self.t_shed_deadline.inc();
                 r.shed_expired();
             } else {
                 live.push(r);
@@ -413,6 +433,7 @@ impl StealBus {
         let live = self.shed_expired(out, Instant::now());
         if !live.is_empty() {
             self.steals.fetch_add(live.len(), Ordering::AcqRel);
+            self.t_steals.add(live.len() as u64);
         }
         live
     }
@@ -502,6 +523,32 @@ impl WorkerShared {
 struct PoolWorker {
     server: BatchServer,
     shared: Arc<WorkerShared>,
+}
+
+/// Telemetry mirrors of [`RoutingCounters`] (and the bus counters the
+/// pool-level `pool.*` keys cover), incremented at the same mutation
+/// sites so [`PoolStats`] and a telemetry snapshot reconcile exactly.
+/// Resolved once at spawn from `PoolConfig.telemetry` (else the
+/// process-global registry); all no-ops when that registry is
+/// disabled.
+struct PoolTelem {
+    spills: telemetry::Counter,
+    reroutes: telemetry::Counter,
+    retries: telemetry::Counter,
+    shed_overload: telemetry::Counter,
+    shed_deadline: telemetry::Counter,
+}
+
+impl PoolTelem {
+    fn resolve(reg: &telemetry::Registry) -> PoolTelem {
+        PoolTelem {
+            spills: reg.counter("pool.spills", &[]),
+            reroutes: reg.counter("pool.reroutes", &[]),
+            retries: reg.counter("pool.retries", &[]),
+            shed_overload: reg.counter("pool.shed_overload", &[]),
+            shed_deadline: reg.counter("pool.shed_deadline", &[]),
+        }
+    }
 }
 
 #[derive(Default)]
@@ -757,6 +804,7 @@ pub struct ServerPool {
     workers: Vec<PoolWorker>,
     registry: Arc<AdapterRegistry>,
     routing: Mutex<RoutingCounters>,
+    telem: PoolTelem,
     /// Present iff the work-stealing scheduler is active.
     bus: Option<Arc<StealBus>>,
     /// Pool-wide liveness tally (drives the last-death overflow purge).
@@ -812,7 +860,18 @@ impl ServerPool {
         let steal = cfg.steal && serve_steal() && n > 1;
         let bound = cfg.park_bound.unwrap_or_else(park_bound).max(1);
         let age = cfg.park_age.unwrap_or_else(park_age);
-        let bus = steal.then(|| Arc::new(StealBus::new(n, bound, age)));
+        let treg = cfg.telemetry.clone().unwrap_or_else(telemetry::global);
+        let telem = PoolTelem::resolve(&treg);
+        let serve_telem = super::server::ServeTelem::resolve(&treg);
+        let bus = steal.then(|| {
+            let mut b = StealBus::new(n, bound, age);
+            b.t_steals = treg.counter("pool.steals", &[]);
+            // bus sheds and routing sheds fold into ONE pool-level key,
+            // matching how PoolStats::shed_deadline folds them
+            b.t_shed_deadline = telem.shed_deadline.clone();
+            b.t_parked_peak = treg.gauge("pool.parked_peak", &[]);
+            Arc::new(b)
+        });
         let watch = Arc::new(DeathWatch { alive: AtomicUsize::new(n), bus: bus.clone() });
         let factory = Arc::new(make_backend);
         let mut workers = Vec::with_capacity(n);
@@ -856,6 +915,7 @@ impl ServerPool {
                 move || f(w),
                 feeder,
                 Some(exit_hook),
+                serve_telem.clone(),
             )
             .with_context(|| format!("spawning pool worker {w} of {n}"))?;
             workers.push(PoolWorker { server, shared });
@@ -881,6 +941,7 @@ impl ServerPool {
             workers,
             registry,
             routing: Mutex::new(RoutingCounters::default()),
+            telem,
             bus,
             watch,
             spill_depth,
@@ -986,6 +1047,7 @@ impl ServerPool {
         // it (the submit-time deadline touch point)
         if deadline.map_or(false, |d| Instant::now() >= d) {
             self.routing.lock().unwrap().shed_deadline += 1;
+            self.telem.shed_deadline.inc();
             return Err(ServeError::DeadlineExceeded { waited: Duration::ZERO });
         }
         let n = self.workers.len();
@@ -1028,6 +1090,7 @@ impl ServerPool {
                         // error instead of queueing without limit
                         drop(refused);
                         self.routing.lock().unwrap().shed_overload += 1;
+                        self.telem.shed_overload.inc();
                         let parked_depth = bus.parked.load(Ordering::Acquire);
                         return Err(ServeError::Overloaded {
                             depth: parked_depth,
@@ -1048,6 +1111,7 @@ impl ServerPool {
                     }
                     if rerouted {
                         self.routing.lock().unwrap().reroutes += 1;
+                        self.telem.reroutes.inc();
                     }
                     w.shared.routed.fetch_add(1, Ordering::AcqRel);
                     w.shared.in_flight.fetch_add(1, Ordering::AcqRel);
@@ -1064,6 +1128,7 @@ impl ServerPool {
                     Ok(rx) => {
                         if rerouted {
                             self.routing.lock().unwrap().reroutes += 1;
+                            self.telem.reroutes.inc();
                         }
                         w.shared.routed.fetch_add(1, Ordering::AcqRel);
                         w.shared.in_flight.fetch_add(1, Ordering::AcqRel);
@@ -1103,8 +1168,10 @@ impl ServerPool {
                         let mut r = self.routing.lock().unwrap();
                         if rerouted {
                             r.reroutes += 1;
+                            self.telem.reroutes.inc();
                         } else if spilled {
                             r.spills += 1;
+                            self.telem.spills.inc();
                         }
                     }
                     w.shared.routed.fetch_add(1, Ordering::AcqRel);
@@ -1151,6 +1218,7 @@ impl ServerPool {
         budget: usize,
     ) -> Result<(), ServeError> {
         self.routing.lock().unwrap().retries += 1;
+        self.telem.retries.inc();
         if attempts > budget {
             return Err(ServeError::WorkerDead {
                 worker: Some(worker),

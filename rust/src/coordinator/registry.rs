@@ -295,6 +295,7 @@ impl AdapterRegistry {
                     // counted its miss, so don't also count a hit
                     if attempts == 0 {
                         inner.stats.hits += 1;
+                        telem_merge_cache()[0].inc();
                     }
                     inner.touch(name);
                     return Ok((g, m));
@@ -303,6 +304,7 @@ impl AdapterRegistry {
                     // one logical lookup = at most one miss, however
                     // many times a racing re-register forces a re-merge
                     inner.stats.misses += 1;
+                    telem_merge_cache()[1].inc();
                 }
                 match inner.sources.get(name) {
                     Some((g, s)) => (*g, s.clone()),
@@ -351,6 +353,7 @@ impl AdapterRegistry {
                             Some(cold) => {
                                 inner.merged.remove(&cold);
                                 inner.stats.evictions += 1;
+                                telem_merge_cache()[2].inc();
                             }
                             None => break,
                         }
@@ -394,6 +397,17 @@ impl AdapterRegistry {
             }
         })
     }
+}
+
+/// Cached merge-cache telemetry counters `[hit, miss, eviction]`,
+/// mirrored at the exact sites that bump [`RegistryStats`] (no-ops
+/// unless `IRQLORA_TELEMETRY=1`).
+fn telem_merge_cache() -> &'static [crate::telemetry::Counter; 3] {
+    static C: std::sync::OnceLock<[crate::telemetry::Counter; 3]> = std::sync::OnceLock::new();
+    C.get_or_init(|| {
+        let reg = crate::telemetry::global();
+        ["hit", "miss", "eviction"].map(|ev| reg.counter("serve.merge_cache", &[("event", ev)]))
+    })
 }
 
 #[cfg(test)]

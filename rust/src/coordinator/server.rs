@@ -58,6 +58,64 @@ use crate::runtime::Manifest;
 use super::backend::{AdapterGroup, PjrtBackend, ServeBackend, UploadStats};
 use super::error::ServeError;
 use super::registry::AdapterRegistry;
+use crate::telemetry;
+
+/// Telemetry counter handles for the serving hot path, resolved ONCE
+/// at spawn (resolution takes the registry mutex; recording is a
+/// branch + relaxed atomic) and cloned into each worker. Every handle
+/// is a no-op when the resolving registry is disabled — the default
+/// unless `IRQLORA_TELEMETRY=1` or a test injects a scoped registry
+/// via `PoolConfig.telemetry`.
+///
+/// These counters are incremented at the SAME mutation sites as the
+/// [`ServerStats`] fields of the same name, so the struct view and
+/// the telemetry view reconcile exactly by construction (asserted per
+/// seed by the chaos-soak battery).
+#[derive(Clone)]
+pub(crate) struct ServeTelem {
+    reg: Arc<telemetry::Registry>,
+    pub(crate) requests: telemetry::Counter,
+    pub(crate) batches: telemetry::Counter,
+    pub(crate) fused_batches: telemetry::Counter,
+    pub(crate) fused_rows: telemetry::Counter,
+    pub(crate) fused_adapters: telemetry::Counter,
+    pub(crate) rejected: telemetry::Counter,
+    pub(crate) shed_deadline: telemetry::Counter,
+    /// Deltas of the backend's monotonic [`UploadStats`], mirrored
+    /// each time a worker snapshots them into `ServerStats.upload`.
+    pub(crate) upload_hits: telemetry::Counter,
+    pub(crate) upload_misses: telemetry::Counter,
+}
+
+impl ServeTelem {
+    pub(crate) fn resolve(reg: &Arc<telemetry::Registry>) -> ServeTelem {
+        ServeTelem {
+            reg: reg.clone(),
+            requests: reg.counter("serve.requests", &[]),
+            batches: reg.counter("serve.batches", &[]),
+            fused_batches: reg.counter("serve.fused_batches", &[]),
+            fused_rows: reg.counter("serve.fused_rows", &[]),
+            fused_adapters: reg.counter("serve.fused_adapters", &[]),
+            rejected: reg.counter("serve.rejected", &[]),
+            shed_deadline: reg.counter("serve.shed_deadline", &[]),
+            upload_hits: reg.counter("serve.upload", &[("event", "hit")]),
+            upload_misses: reg.counter("serve.upload", &[("event", "miss")]),
+        }
+    }
+
+    /// Per-adapter request counter — resolved per drain (cold-ish:
+    /// once per batch, not per request; instant no-op when disabled).
+    pub(crate) fn adapter_requests(&self, adapter: &str) -> telemetry::Counter {
+        self.reg.counter("serve.adapter_requests", &[("adapter", adapter)])
+    }
+
+    /// Mirror a fresh monotonic upload snapshot against the previous
+    /// one, crediting the deltas to the hit/miss counters.
+    pub(crate) fn upload_delta(&self, prev: UploadStats, now: UploadStats) {
+        self.upload_hits.add(now.hits.saturating_sub(prev.hits) as u64);
+        self.upload_misses.add(now.misses.saturating_sub(prev.misses) as u64);
+    }
+}
 
 /// One inference reply.
 #[derive(Clone, Debug)]
@@ -296,6 +354,7 @@ pub struct BatchServer {
     handle: Option<std::thread::JoinHandle<()>>,
     stats: Arc<Mutex<ServerStats>>,
     registry: Arc<AdapterRegistry>,
+    telem: ServeTelem,
     batch: usize,
     seq: usize,
     vocab: usize,
@@ -332,7 +391,8 @@ impl BatchServer {
     where
         F: FnOnce() -> Result<Box<dyn ServeBackend>> + Send + 'static,
     {
-        Self::spawn_with_feeder(cfg, registry, make_backend, None, None)
+        let telem = ServeTelem::resolve(&telemetry::global());
+        Self::spawn_with_feeder(cfg, registry, make_backend, None, None, telem)
     }
 
     /// [`Self::spawn_with`] plus an optional [`Feeder`] — the pull
@@ -346,6 +406,7 @@ impl BatchServer {
         make_backend: F,
         feeder: Option<Feeder>,
         exit_hook: Option<ExitHook>,
+        telem: ServeTelem,
     ) -> Result<BatchServer>
     where
         F: FnOnce() -> Result<Box<dyn ServeBackend>> + Send + 'static,
@@ -354,6 +415,7 @@ impl BatchServer {
         let stats = Arc::new(Mutex::new(ServerStats::default()));
         let stats_w = stats.clone();
         let registry_w = registry.clone();
+        let telem_w = telem.clone();
 
         let (ready_tx, ready_rx) = sync_channel::<Result<(usize, usize, usize), String>>(1);
         let handle = std::thread::spawn(move || {
@@ -456,6 +518,7 @@ impl BatchServer {
                     let (live, dead): (Vec<Request>, Vec<Request>) =
                         pending.into_iter().partition(|r| !r.expired(now));
                     stats_w.lock().unwrap().shed_deadline += dead.len();
+                    telem_w.shed_deadline.add(dead.len() as u64);
                     for r in dead {
                         r.shed_expired();
                     }
@@ -482,13 +545,21 @@ impl BatchServer {
                     .collect();
 
                 if cfg.fused {
-                    run_fused(backend.as_mut(), &registry_w, &stats_w, groups, &mut tok_scratch);
+                    run_fused(
+                        backend.as_mut(),
+                        &registry_w,
+                        &stats_w,
+                        &telem_w,
+                        groups,
+                        &mut tok_scratch,
+                    );
                 } else {
                     for (adapter, group) in groups {
                         run_group(
                             backend.as_mut(),
                             &registry_w,
                             &stats_w,
+                            &telem_w,
                             &adapter,
                             group,
                             &mut tok_scratch,
@@ -503,7 +574,7 @@ impl BatchServer {
             .context("server worker died during init")?
             .map_err(|e| anyhow!("server init failed: {e}"))?;
 
-        Ok(BatchServer { tx: Some(tx), handle: Some(handle), stats, registry, batch, seq, vocab })
+        Ok(BatchServer { tx: Some(tx), handle: Some(handle), stats, registry, telem, batch, seq, vocab })
     }
 
     /// Largest prompt (in tokens) the server accepts.
@@ -535,6 +606,7 @@ impl BatchServer {
     pub(crate) fn check_request(&self, adapter: &str, tokens: &[i32]) -> Result<(), ServeError> {
         if tokens.is_empty() || tokens.len() > self.seq {
             self.stats.lock().unwrap().rejected += 1;
+            self.telem.rejected.inc();
             return Err(ServeError::Rejected(format!(
                 "prompt length {} out of range 1..={}",
                 tokens.len(),
@@ -543,6 +615,7 @@ impl BatchServer {
         }
         if !self.registry.contains(adapter) {
             self.stats.lock().unwrap().rejected += 1;
+            self.telem.rejected.inc();
             return Err(ServeError::Rejected(format!(
                 "unknown adapter '{adapter}' (registered: {:?})",
                 self.registry.names()
@@ -595,6 +668,7 @@ impl BatchServer {
         }
         if deadline.map_or(false, |d| Instant::now() >= d) {
             self.stats.lock().unwrap().shed_deadline += 1;
+            self.telem.shed_deadline.inc();
             return Err(SubmitError::Rejected(ServeError::DeadlineExceeded {
                 waited: Duration::ZERO,
             }));
@@ -692,6 +766,7 @@ fn run_fused(
     backend: &mut dyn ServeBackend,
     registry: &AdapterRegistry,
     stats: &Mutex<ServerStats>,
+    telem: &ServeTelem,
     groups: Vec<(String, Vec<Request>)>,
     tok_scratch: &mut Vec<i32>,
 ) {
@@ -720,11 +795,14 @@ fn run_fused(
                 s.requests += group.len();
                 s.batches += 1;
                 s.batch_occupancy_sum += group.len();
-                let a = s.per_adapter.entry(adapter).or_default();
+                let a = s.per_adapter.entry(adapter.clone()).or_default();
                 a.requests += group.len();
                 a.batches += 1;
                 a.occupancy_sum += group.len();
                 drop(s);
+                telem.requests.add(group.len() as u64);
+                telem.batches.inc();
+                telem.adapter_requests(&adapter).add(group.len() as u64);
                 for r in group {
                     let _ = r.reply.send(Err(e.clone()));
                 }
@@ -757,13 +835,23 @@ fn run_fused(
         s.fused_batches += 1;
         s.fused_rows += bsz;
         s.fused_adapters += metas.len();
-        s.upload = backend.upload_stats();
+        let up = backend.upload_stats();
+        telem.upload_delta(s.upload, up);
+        s.upload = up;
         for (g, group) in metas.iter().zip(&reqs) {
             let a = s.per_adapter.entry(g.name.clone()).or_default();
             a.requests += group.len();
             a.batches += 1;
             a.occupancy_sum += group.len();
         }
+    }
+    telem.requests.add(bsz as u64);
+    telem.batches.inc();
+    telem.fused_batches.inc();
+    telem.fused_rows.add(bsz as u64);
+    telem.fused_adapters.add(metas.len() as u64);
+    for (g, group) in metas.iter().zip(&reqs) {
+        telem.adapter_requests(&g.name).add(group.len() as u64);
     }
 
     match result {
@@ -839,6 +927,7 @@ fn run_group(
     backend: &mut dyn ServeBackend,
     registry: &AdapterRegistry,
     stats: &Mutex<ServerStats>,
+    telem: &ServeTelem,
     adapter: &str,
     group: Vec<Request>,
     tok_scratch: &mut Vec<i32>,
@@ -866,12 +955,17 @@ fn run_group(
         s.requests += bsz;
         s.batches += 1;
         s.batch_occupancy_sum += bsz;
-        s.upload = backend.upload_stats();
+        let up = backend.upload_stats();
+        telem.upload_delta(s.upload, up);
+        s.upload = up;
         let a = s.per_adapter.entry(adapter.to_string()).or_default();
         a.requests += bsz;
         a.batches += 1;
         a.occupancy_sum += bsz;
     }
+    telem.requests.add(bsz as u64);
+    telem.batches.inc();
+    telem.adapter_requests(adapter).add(bsz as u64);
 
     match result {
         Ok(logits) => {

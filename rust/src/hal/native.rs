@@ -225,6 +225,15 @@ impl NativeBackend {
     }
 }
 
+/// `hal.forward_time{backend=native}` / `hal.fused_forward_time{...}`
+/// timers, resolved once per process (no-op handles when telemetry is
+/// disabled).
+fn telem_native() -> &'static crate::coordinator::backend::ForwardTimers {
+    static T: std::sync::OnceLock<crate::coordinator::backend::ForwardTimers> =
+        std::sync::OnceLock::new();
+    T.get_or_init(|| crate::coordinator::backend::ForwardTimers::resolve("native"))
+}
+
 impl ServeBackend for NativeBackend {
     fn shape(&self) -> (usize, usize, usize) {
         (self.batch, self.seq, self.vocab)
@@ -237,6 +246,7 @@ impl ServeBackend for NativeBackend {
         weights: &Arc<NamedTensors>,
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
+        let _t = telem_native().forward.start();
         if tokens.len() != self.batch * self.seq {
             bail!(
                 "token matrix has {} elems, expected batch*seq = {}",
@@ -258,6 +268,7 @@ impl ServeBackend for NativeBackend {
     /// resolved once in group order (cache-traffic parity with the
     /// reference), one row-parallel sweep over the whole batch.
     fn forward_fused(&mut self, groups: &[AdapterGroup], tokens: &[i32]) -> Result<Vec<f32>> {
+        let _t = telem_native().fused.start();
         if tokens.len() != self.batch * self.seq {
             bail!(
                 "token matrix has {} elems, expected batch*seq = {}",

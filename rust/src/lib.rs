@@ -16,6 +16,9 @@
 //! - [`hal`] — serving-backend HAL: capability manifests, validated
 //!   registration, and named backend selection (`reference`, `native`,
 //!   `pjrt`);
+//! - [`telemetry`] — labeled counters/gauges/timers threaded through
+//!   quantize → plan → merge → serve (zero-cost unless
+//!   `IRQLORA_TELEMETRY=1`; JSONL snapshots + `irqlora stats`);
 //! - [`tables`] — paper-format table/figure regeneration.
 
 pub mod util;
@@ -26,6 +29,7 @@ pub mod model;
 pub mod data;
 pub mod coordinator;
 pub mod hal;
+pub mod telemetry;
 
 pub use util::{Rng, Tensor};
 pub mod runtime;

@@ -93,6 +93,7 @@ pub fn merge_l2_into(l2: &[f32], r: usize, o: usize, beta2: f32, out: &mut Vec<f
 /// the registry's evict/reload path relies on.
 pub fn merge_adapter(lora: &NamedTensors, masks: (f32, f32)) -> Result<NamedTensors> {
     validate_adapter(lora)?;
+    telem_merges().inc();
     let betas = lora.get("betas")?;
     let n_proj = betas.shape()[1];
     let beta_at = |stem: &str, which: usize| -> Result<f32> {
@@ -125,6 +126,13 @@ pub fn merge_adapter(lora: &NamedTensors, masks: (f32, f32)) -> Result<NamedTens
         }
     }
     Ok(out)
+}
+
+/// Cached telemetry counter for Eq. 16/17 merges (no-op unless
+/// `IRQLORA_TELEMETRY=1`).
+fn telem_merges() -> &'static crate::telemetry::Counter {
+    static C: std::sync::OnceLock<crate::telemetry::Counter> = std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::global().counter("lora.merges", &[]))
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@
 //! irqlora plan [--budget 3.2] [--synthetic]    mixed-precision allocation table
 //! irqlora finetune --size s --arm ir-qlora     full arm: quantize + LoRA finetune + eval
 //! irqlora serve [--workers N] [--backend B]    N-worker sharded serving pool demo
+//! irqlora stats [FILE]                         last snapshot of a telemetry JSONL
 //! irqlora backends                             HAL backend capability table
 //! irqlora table <1|2|3|4|5|6|7|8|9|10|11>      regenerate a paper table
 //! irqlora figure <4|5>                         regenerate a paper figure
@@ -222,7 +223,7 @@ fn parse_args() -> Result<Cli> {
 }
 
 const USAGE: &str = "usage: irqlora \
-<pretrain|quantize|plan|finetune|serve|backends|table N|figure N|all> \
+<pretrain|quantize|plan|finetune|serve|stats [FILE]|backends|table N|figure N|all> \
 [--sizes xs,s] [--pretrain-steps N] [--finetune-steps N] [--eval-per-group N] \
 [--seed N] [--method ARM] [--bits K] [--full] \
 [--budget B] [--floor K] [--ceil K] [--synthetic] [--check] \
@@ -247,6 +248,15 @@ fn arm_by_name(name: &str, k: u8) -> Result<Arm> {
 }
 
 fn main() -> Result<()> {
+    let result = run();
+    // final telemetry snapshot: the periodic flusher ticks once a
+    // second, so without this the tail of a fast run never lands in
+    // the JSONL (a no-op when telemetry or the JSONL sink is off)
+    let _ = irqlora::telemetry::global().flush_jsonl();
+    result
+}
+
+fn run() -> Result<()> {
     init_logger();
     let cli = parse_args()?;
     let sizes: Vec<&str> = cli.sizes.iter().map(String::as_str).collect();
@@ -264,6 +274,11 @@ fn main() -> Result<()> {
         // loads the manifest itself (the --reference demo and the
         // artifacts-missing fallback run without it)
         return cmd_serve(&cli);
+    }
+    if cli.cmd == "stats" {
+        // render a telemetry JSONL's last snapshot (no artifacts, no
+        // PJRT, no manifest — a pure file read)
+        return cmd_stats(&cli);
     }
     if cli.cmd == "backends" {
         // print the HAL capability table (no artifacts/PJRT needed)
@@ -440,7 +455,46 @@ fn cmd_plan(cli: &Cli) -> Result<()> {
         }
         println!("planner check OK");
     }
+    maybe_print_telemetry();
     Ok(())
+}
+
+/// The `stats` verb: parse a telemetry JSONL file (the positional
+/// argument, else `IRQLORA_TELEMETRY_JSONL`) and render its LAST
+/// snapshot as the same table a live process prints — post-mortem
+/// observability for a run that already exited.
+fn cmd_stats(cli: &Cli) -> Result<()> {
+    let path = cli
+        .arg
+        .clone()
+        .or_else(irqlora::util::env::telemetry_jsonl)
+        .context("stats needs a JSONL path (argument or IRQLORA_TELEMETRY_JSONL)")?;
+    let last = irqlora::telemetry::read_last_snapshot(std::path::Path::new(&path))
+        .with_context(|| format!("no well-formed telemetry snapshot in {path}"))?;
+    println!(
+        "telemetry snapshot {} at +{:.0}ms ({} keys) from {path}",
+        last.snapshot,
+        last.ts_ms,
+        last.entries.len()
+    );
+    print!("{}", irqlora::telemetry::render_table(&last.entries));
+    Ok(())
+}
+
+/// Print the process-global telemetry snapshot after a verb's own
+/// report, when telemetry is on — so `IRQLORA_TELEMETRY=1 irqlora
+/// serve …` shows its counters without needing the JSONL sink.
+fn maybe_print_telemetry() {
+    let reg = irqlora::telemetry::global();
+    if !reg.is_enabled() {
+        return;
+    }
+    let entries = reg.snapshot();
+    if entries.is_empty() {
+        return;
+    }
+    println!("\ntelemetry ({} keys):", entries.len());
+    print!("{}", irqlora::telemetry::render_table(&entries));
 }
 
 /// The `serve` verb: spin up an N-worker [`ServerPool`] over one
@@ -535,6 +589,7 @@ fn cmd_serve_named(
     })?;
     print_pool_report(&pool.stats(), done, wall);
     pool.shutdown();
+    maybe_print_telemetry();
     Ok(())
 }
 
@@ -674,6 +729,7 @@ fn cmd_serve_chaos(
     }
     drop(injected);
     pool.shutdown();
+    maybe_print_telemetry();
     if tally.delivered == 0 {
         bail!("chaos run delivered nothing — the pool lost liveness under injected faults");
     }
@@ -768,6 +824,7 @@ fn cmd_serve_pjrt(
     })?;
     print_pool_report(&pool.stats(), done, wall);
     pool.shutdown();
+    maybe_print_telemetry();
     Ok(())
 }
 

@@ -319,6 +319,7 @@ fn parse_k(v: &str) -> Option<u8> {
 /// and config produce identical plans (stable iteration order, no
 /// randomness, first-wins tie-breaking).
 pub fn plan(profile: &ModelProfile, cfg: &PlannerConfig) -> Result<PrecisionPlan> {
+    let _solve_t = crate::telemetry::global().timer("plan.solve_time", &[]).start();
     if profile.tensors.is_empty() {
         bail!("nothing to plan: the profile has no quantized projections");
     }
@@ -414,7 +415,17 @@ pub fn plan(profile: &ModelProfile, cfg: &PlannerConfig) -> Result<PrecisionPlan
             }
         })
         .collect();
-    Ok(PrecisionPlan { budget_bits: cfg.budget_bits, block: profile.block, entries })
+    let plan = PrecisionPlan { budget_bits: cfg.budget_bits, block: profile.block, entries };
+    // chosen-k histogram: one count per planned tensor, labeled by the
+    // bit-width the solve landed on
+    let reg = crate::telemetry::global();
+    if reg.is_enabled() {
+        for e in &plan.entries {
+            let ks = e.k.to_string();
+            reg.counter("plan.chosen_k", &[("k", ks.as_str())]).inc();
+        }
+    }
+    Ok(plan)
 }
 
 #[cfg(test)]

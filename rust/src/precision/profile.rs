@@ -165,6 +165,7 @@ pub fn profile_tensor(name: &str, w: &[f32], cfg: &ProfileConfig) -> TensorProfi
 /// Profile every quantized projection tensor of `weights` (the same
 /// selection rule as `coordinator::quantize::quantize_model`).
 pub fn profile_model(weights: &NamedTensors, cfg: &ProfileConfig) -> ModelProfile {
+    let _profile_t = crate::telemetry::global().timer("plan.profile_time", &[]).start();
     let tensors = weights
         .iter()
         .filter(|(n, _)| is_quantized_proj(n))

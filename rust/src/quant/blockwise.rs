@@ -121,6 +121,7 @@ pub fn quantize_into(
         },
         None => q.taus = None,
     }
+    telem_blocks().add(k, n_blocks as u64);
 
     // Pass 1: per-block absmax scales, parallel over scale chunks.
     threads::par_chunks_mut_with(&mut q.scales, SCALE_CHUNK_BLOCKS, 2, |ci, sc| {
@@ -289,12 +290,26 @@ pub fn pack_codes_into(codes: &[u8], k: u8, out: &mut Vec<u8>) {
     let total_bits = codes.len() * k as usize;
     out.clear();
     out.resize(total_bits.div_ceil(8), 0);
+    telem_packed_bytes().add(k, out.len() as u64);
     let bytes_per_chunk = PACK_CHUNK_ELEMS * k as usize / 8;
     threads::par_chunks_mut_with(out, bytes_per_chunk, 2, |ci, bytes| {
         let start = ci * PACK_CHUNK_ELEMS;
         let end = (start + PACK_CHUNK_ELEMS).min(codes.len());
         pack_slice(&codes[start..end], k, bytes);
     });
+}
+
+/// Cached telemetry handles for the hot quantize/pack paths (no-ops
+/// unless `IRQLORA_TELEMETRY=1`): resolved once, so recording costs
+/// one `OnceLock` load plus the handle's own branch per call.
+fn telem_blocks() -> &'static crate::telemetry::PerK {
+    static C: std::sync::OnceLock<crate::telemetry::PerK> = std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::PerK::resolve("quant.blocks_quantized"))
+}
+
+fn telem_packed_bytes() -> &'static crate::telemetry::PerK {
+    static C: std::sync::OnceLock<crate::telemetry::PerK> = std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::PerK::resolve("quant.packed_bytes"))
 }
 
 /// Reference implementation of [`pack_codes`] (original serial loop).

@@ -100,6 +100,7 @@ pub fn dequantize_packed_into(
     }
     let l = lut(k);
     let kb = k as usize;
+    telem_dequant_bytes().add(k, (len * kb).div_ceil(8) as u64);
     if (block * kb) % 8 != 0 {
         return dequantize_packed_serial(packed, k, len, block, scales, taus, out);
     }
@@ -136,6 +137,13 @@ pub fn dequantize_packed_into(
             });
         }
     });
+}
+
+/// Cached telemetry handle for packed bytes consumed by LUT dequant
+/// (no-op unless `IRQLORA_TELEMETRY=1`).
+fn telem_dequant_bytes() -> &'static crate::telemetry::PerK {
+    static C: OnceLock<crate::telemetry::PerK> = OnceLock::new();
+    C.get_or_init(|| crate::telemetry::PerK::resolve("quant.dequant_bytes"))
 }
 
 /// Shared word-at-a-time k-bit walk through a `u64` bit accumulator:

@@ -1,0 +1,220 @@
+//! JSONL snapshot persistence: one JSON object per metric per
+//! snapshot, appended to the `IRQLORA_TELEMETRY_JSONL` path:
+//!
+//! ```json
+//! {"snapshot": 3, "ts_ms": 1204.511, "kind": "counter", "key": "serve.requests", "value": 272, "count": 0}
+//! ```
+//!
+//! `snapshot` is a per-registry sequence number, `ts_ms` a monotonic
+//! offset from registry creation (never wall-clock, so a paused or
+//! NTP-stepped host can't produce time travel). Timers store raw
+//! total nanoseconds in `value` and samples in `count`.
+//!
+//! The reader ([`read_last_snapshot`]) is the `irqlora stats` verb's
+//! backend: it keeps only the highest-sequence snapshot, tolerating a
+//! file that mixes periodic and final flushes. Writer and reader use
+//! the same hand-rolled field conventions as `bench_harness` — no
+//! JSON dependency.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use super::registry::{Kind, SnapshotEntry};
+
+/// Append-only JSONL writer. The file is opened lazily at first
+/// flush, so constructing a registry with a path but never recording
+/// doesn't create an empty file.
+pub(super) struct Appender {
+    path: PathBuf,
+    file: Option<File>,
+}
+
+impl Appender {
+    pub(super) fn new(path: PathBuf) -> Appender {
+        Appender { path, file: None }
+    }
+
+    pub(super) fn append(
+        &mut self,
+        seq: u64,
+        ts_ms: f64,
+        entries: &[SnapshotEntry],
+    ) -> std::io::Result<()> {
+        if self.file.is_none() {
+            self.file = Some(
+                OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(&self.path)?,
+            );
+        }
+        let f = self.file.as_mut().unwrap();
+        let mut buf = String::with_capacity(entries.len() * 96);
+        for e in entries {
+            buf.push_str(&format!(
+                "{{\"snapshot\": {seq}, \"ts_ms\": {ts_ms:.3}, \"kind\": \"{}\", \
+                 \"key\": \"{}\", \"value\": {}, \"count\": {}}}\n",
+                e.kind.as_str(),
+                sanitize(&e.key),
+                e.value,
+                e.count,
+            ));
+        }
+        f.write_all(buf.as_bytes())?;
+        f.flush()
+    }
+}
+
+/// Keys are code-controlled (`name{label=value}`), but adapter names
+/// can flow into labels — force JSON-safety the same way the bench
+/// harness does: quotes, backslashes, and control bytes become `_`.
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c == '"' || c == '\\' || c.is_control() { '_' } else { c })
+        .collect()
+}
+
+/// The highest-sequence snapshot found in a telemetry JSONL file.
+pub struct LastSnapshot {
+    /// Snapshot sequence number.
+    pub snapshot: u64,
+    /// Monotonic ms offset the snapshot was taken at.
+    pub ts_ms: f64,
+    /// Key-ordered entries, as written.
+    pub entries: Vec<SnapshotEntry>,
+}
+
+/// Parse a telemetry JSONL file and return its last (highest
+/// `snapshot`) snapshot. `None` if the file is unreadable or holds no
+/// well-formed lines.
+pub fn read_last_snapshot(path: &Path) -> Option<LastSnapshot> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let best = text
+        .lines()
+        .filter_map(|l| field_num(l.trim(), "snapshot"))
+        .map(|s| s as u64)
+        .max()?;
+    let mut ts_ms = 0.0;
+    let mut entries = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        let Some(seq) = field_num(line, "snapshot") else {
+            continue;
+        };
+        if seq as u64 != best {
+            continue;
+        }
+        let (Some(kind), Some(key), Some(value)) = (
+            field_str(line, "kind").and_then(|k| Kind::from_str(&k)),
+            field_str(line, "key"),
+            field_num(line, "value"),
+        ) else {
+            continue;
+        };
+        ts_ms = field_num(line, "ts_ms").unwrap_or(ts_ms);
+        entries.push(SnapshotEntry {
+            key,
+            kind,
+            value: value as u64,
+            count: field_num(line, "count").unwrap_or(0.0) as u64,
+        });
+    }
+    if entries.is_empty() {
+        None
+    } else {
+        Some(LastSnapshot { snapshot: best, ts_ms, entries })
+    }
+}
+
+/// Extract a `"field": "string"` value from one JSONL line.
+fn field_str(line: &str, field: &str) -> Option<String> {
+    let pat = format!("\"{field}\": \"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+/// Extract a `"field": number` value from one JSONL line.
+fn field_num(line: &str, field: &str) -> Option<f64> {
+    let pat = format!("\"{field}\": ");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest
+        .find(|c: char| c == ',' || c == '}')
+        .unwrap_or(rest.len());
+    rest[..end].trim().parse::<f64>().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("irqlora_telem_{}_{name}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn appender_roundtrips_through_reader() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let r = Registry::enabled().with_jsonl(&path);
+        r.counter("serve.requests", &[]).add(42);
+        r.timer("plan.solve_time", &[]).record(std::time::Duration::from_micros(5));
+        r.flush_jsonl().unwrap();
+        r.counter("serve.requests", &[]).add(8);
+        r.flush_jsonl().unwrap();
+
+        // every line is one JSON object
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() >= 4);
+        for line in text.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        }
+
+        // the reader keeps only the LAST snapshot (the updated total)
+        let last = read_last_snapshot(&path).unwrap();
+        assert_eq!(last.snapshot, 1);
+        let req = last
+            .entries
+            .iter()
+            .find(|e| e.key == "serve.requests")
+            .unwrap();
+        assert_eq!((req.kind, req.value), (Kind::Counter, 50));
+        let timer = last
+            .entries
+            .iter()
+            .find(|e| e.key == "plan.solve_time")
+            .unwrap();
+        assert_eq!(timer.count, 1);
+        assert!(timer.value >= 5_000);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn disabled_registry_never_creates_the_file() {
+        let path = tmp("disabled");
+        let _ = std::fs::remove_file(&path);
+        let r = Registry::disabled().with_jsonl(&path);
+        r.counter("x", &[]).inc();
+        r.flush_jsonl().unwrap();
+        assert!(!path.exists(), "disabled telemetry must not write files");
+    }
+
+    #[test]
+    fn reader_rejects_garbage_and_empty() {
+        let path = tmp("garbage");
+        std::fs::write(&path, "not json\n{\"half\": 1\n").unwrap();
+        assert!(read_last_snapshot(&path).is_none());
+        std::fs::remove_file(&path).unwrap();
+        assert!(read_last_snapshot(Path::new("/nonexistent/telem.jsonl")).is_none());
+    }
+
+    #[test]
+    fn labels_survive_sanitization() {
+        assert_eq!(sanitize("a{k=4}"), "a{k=4}");
+        assert_eq!(sanitize("bad\"quote\\and\ncontrol"), "bad_quote_and_control");
+    }
+}

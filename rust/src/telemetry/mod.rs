@@ -1,0 +1,111 @@
+//! Process-wide telemetry: labeled counters, gauges, and scoped
+//! timers threaded through quantize → plan → merge → serve.
+//!
+//! Design goals, in priority order:
+//!
+//! 1. **Zero cost when disabled.** Recording is off unless
+//!    `IRQLORA_TELEMETRY=1`. Every instrumentation site holds a
+//!    [`Counter`]/[`Gauge`]/[`Timer`] *handle*; a handle from a
+//!    disabled registry is a `None` and every operation on it is a
+//!    single branch — no key formatting, no allocation, no atomics
+//!    (`rust/tests/telemetry_disabled.rs` asserts the zero-allocation
+//!    property under a counting global allocator).
+//! 2. **Lock-free hot path when enabled.** A handle points at a
+//!    [`registry::Slot`] of cache-line-padded atomic stripes; threads
+//!    hash onto stripes, so concurrent increments don't bounce one
+//!    cache line. The registry's mutex is taken only when a handle is
+//!    *resolved* (component construction), never per event.
+//! 3. **One counter, many views.** The serving layer's public stats
+//!    structs (`PoolStats`, `ServerStats`, `UploadStats`,
+//!    `FaultStats`) are incremented at the *same* mutation sites as
+//!    their telemetry counters, so the two views reconcile exactly by
+//!    construction — the chaos-soak battery asserts equality per seed.
+//!
+//! Keys are `name{label=value,...}` strings (e.g.
+//! `quant.blocks_quantized{k=4}`, `hal.forward_time{backend=native}`).
+//! With `IRQLORA_TELEMETRY_JSONL=path` the global registry appends one
+//! JSON object per metric per snapshot — periodic (~1 s) and final —
+//! with monotonic `ts_ms` timestamps; `irqlora stats FILE` renders the
+//! last snapshot as the same table [`render_table`] produces from a
+//! live [`Registry::snapshot`].
+//!
+//! Tests that need an *enabled* registry inject their own scoped
+//! [`Registry`] (`PoolConfig.telemetry`, `FaultBackend::with_telemetry`)
+//! instead of mutating the process environment — tests run in
+//! parallel and the env is process-global.
+
+mod jsonl;
+mod registry;
+
+pub use jsonl::{read_last_snapshot, LastSnapshot};
+pub use registry::{
+    render_table, Counter, Gauge, Kind, Registry, SnapshotEntry, Timer, TimerGuard,
+};
+
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+/// Cadence of the global registry's periodic JSONL flusher thread.
+const FLUSH_PERIOD: Duration = Duration::from_secs(1);
+
+/// The process-global registry: enabled iff `IRQLORA_TELEMETRY=1` at
+/// first use, with a JSONL appender iff `IRQLORA_TELEMETRY_JSONL` is
+/// also set (in which case a detached ~1 s flusher thread keeps the
+/// file fresh; `main` writes the final snapshot on exit). Library code
+/// that has no injected registry records here; when disabled, every
+/// handle it hands out is a no-op.
+pub fn global() -> Arc<Registry> {
+    static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+    static FLUSHER: OnceLock<()> = OnceLock::new();
+    let reg = GLOBAL.get_or_init(|| {
+        if crate::util::env::telemetry_enabled() {
+            let mut r = Registry::enabled();
+            if let Some(path) = crate::util::env::telemetry_jsonl() {
+                r = r.with_jsonl(path);
+            }
+            Arc::new(r)
+        } else {
+            Arc::new(Registry::disabled())
+        }
+    });
+    if reg.has_jsonl() {
+        FLUSHER.get_or_init(|| {
+            let r = reg.clone();
+            let _ = std::thread::Builder::new()
+                .name("irqlora-telemetry-flush".into())
+                .spawn(move || loop {
+                    std::thread::sleep(FLUSH_PERIOD);
+                    let _ = r.flush_jsonl();
+                });
+        });
+    }
+    reg.clone()
+}
+
+/// Cached per-k counter handles (k ∈ 1..=8) for hot-path quant
+/// metrics: resolving a handle takes the registry mutex and formats a
+/// key, so callers resolve a `PerK` once (in a `OnceLock`) and record
+/// through it — per-event cost is an array index plus the handle's
+/// own branch/atomic.
+pub struct PerK([Counter; 8]);
+
+impl PerK {
+    /// Resolve `name{k=1}` … `name{k=8}` from the global registry.
+    pub fn resolve(name: &'static str) -> PerK {
+        let reg = global();
+        PerK(std::array::from_fn(|i| {
+            let ks = (i + 1).to_string();
+            reg.counter(name, &[("k", ks.as_str())])
+        }))
+    }
+
+    /// Add `n` to the `k`-labeled counter. Out-of-range `k` (never
+    /// produced by the quant layer, which validates 1..=8) is ignored
+    /// rather than panicking inside an observability call.
+    #[inline]
+    pub fn add(&self, k: u8, n: u64) {
+        if let Some(c) = self.0.get((k as usize).wrapping_sub(1)) {
+            c.add(n);
+        }
+    }
+}

@@ -1,0 +1,562 @@
+//! The metric registry and its handle types.
+//!
+//! A [`Registry`] maps `name{label=value,...}` keys to [`Slot`]s of
+//! striped, cache-line-aligned atomics. Handles ([`Counter`],
+//! [`Gauge`], [`Timer`]) are `Option<Arc<Slot>>`: `None` from a
+//! disabled registry (every operation is one branch, nothing else),
+//! `Some` from an enabled one (relaxed atomic adds on a per-thread
+//! stripe). The registry mutex guards only the key → slot map, taken
+//! at handle resolution time — never on the record path.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::jsonl;
+
+/// Stripes per slot. Threads hash onto stripes so concurrent
+/// increments of one hot counter don't all bounce a single cache
+/// line; reads sum all stripes.
+const STRIPES: usize = 8;
+
+/// One cache-line-padded atomic cell.
+#[repr(align(64))]
+struct Stripe(AtomicU64);
+
+/// What a key measures — fixed at first resolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Monotonic event count (`value` = total, `count` unused).
+    Counter,
+    /// Last-set / high-water value (`value` only, stripe 0).
+    Gauge,
+    /// Accumulated duration (`value` = total ns, `count` = samples).
+    Timer,
+}
+
+impl Kind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Timer => "timer",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Kind> {
+        match s {
+            "counter" => Some(Kind::Counter),
+            "gauge" => Some(Kind::Gauge),
+            "timer" => Some(Kind::Timer),
+            _ => None,
+        }
+    }
+}
+
+/// Striped storage behind one metric key.
+pub(super) struct Slot {
+    kind: Kind,
+    value: [Stripe; STRIPES],
+    count: [Stripe; STRIPES],
+}
+
+/// This thread's stripe index: assigned round-robin on first use so
+/// distinct recording threads usually land on distinct cache lines.
+fn stripe_index() -> usize {
+    use std::cell::Cell;
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static IDX: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    IDX.with(|c| {
+        let mut i = c.get();
+        if i == usize::MAX {
+            i = NEXT.fetch_add(1, Ordering::Relaxed) % STRIPES;
+            c.set(i);
+        }
+        i
+    })
+}
+
+impl Slot {
+    fn new(kind: Kind) -> Slot {
+        Slot {
+            kind,
+            value: std::array::from_fn(|_| Stripe(AtomicU64::new(0))),
+            count: std::array::from_fn(|_| Stripe(AtomicU64::new(0))),
+        }
+    }
+
+    #[inline]
+    fn add_value(&self, n: u64) {
+        self.value[stripe_index()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn add_count(&self, n: u64) {
+        self.count[stripe_index()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Gauges live in stripe 0 only (a gauge is a point value, not a
+    /// sum, so striping would be meaningless).
+    fn set(&self, v: u64) {
+        self.value[0].0.store(v, Ordering::Relaxed);
+    }
+
+    /// Monotonic high-water update (CAS loop, lock-free).
+    fn set_max(&self, v: u64) {
+        let a = &self.value[0].0;
+        let mut cur = a.load(Ordering::Relaxed);
+        while v > cur {
+            match a.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn value_total(&self) -> u64 {
+        match self.kind {
+            Kind::Gauge => self.value[0].0.load(Ordering::Acquire),
+            _ => self.value.iter().map(|s| s.0.load(Ordering::Acquire)).sum(),
+        }
+    }
+
+    fn count_total(&self) -> u64 {
+        self.count.iter().map(|s| s.0.load(Ordering::Acquire)).sum()
+    }
+}
+
+/// Monotonic event counter handle. Cheap to clone (an `Arc`).
+#[derive(Clone, Default)]
+pub struct Counter(Option<Arc<Slot>>);
+
+impl Counter {
+    /// A handle that records nothing (what a disabled registry hands
+    /// out; also the `Default`).
+    pub fn noop() -> Counter {
+        Counter(None)
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if let Some(s) = &self.0 {
+            s.add_value(n);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current total (0 from a no-op handle).
+    pub fn get(&self) -> u64 {
+        self.0.as_ref().map_or(0, |s| s.value_total())
+    }
+}
+
+/// Point-value / high-water gauge handle.
+#[derive(Clone, Default)]
+pub struct Gauge(Option<Arc<Slot>>);
+
+impl Gauge {
+    pub fn noop() -> Gauge {
+        Gauge(None)
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        if let Some(s) = &self.0 {
+            s.set(v);
+        }
+    }
+
+    /// Raise the gauge to `v` if `v` is higher (high-water semantics).
+    #[inline]
+    pub fn set_max(&self, v: u64) {
+        if let Some(s) = &self.0 {
+            s.set_max(v);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.as_ref().map_or(0, |s| s.value_total())
+    }
+}
+
+/// Accumulating duration handle: total elapsed ns + sample count.
+#[derive(Clone, Default)]
+pub struct Timer(Option<Arc<Slot>>);
+
+impl Timer {
+    pub fn noop() -> Timer {
+        Timer(None)
+    }
+
+    /// Scoped measurement: the returned guard records the elapsed
+    /// time when dropped. A no-op handle's guard never reads the
+    /// clock at all.
+    #[inline]
+    pub fn start(&self) -> TimerGuard {
+        TimerGuard {
+            slot: self.0.clone(),
+            start: self.0.as_ref().map(|_| Instant::now()),
+        }
+    }
+
+    /// Record an externally measured duration.
+    pub fn record(&self, d: Duration) {
+        if let Some(s) = &self.0 {
+            s.add_value(saturating_ns(d));
+            s.add_count(1);
+        }
+    }
+
+    /// Total recorded time (zero from a no-op handle).
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.0.as_ref().map_or(0, |s| s.value_total()))
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.0.as_ref().map_or(0, |s| s.count_total())
+    }
+}
+
+/// Drop guard returned by [`Timer::start`].
+pub struct TimerGuard {
+    slot: Option<Arc<Slot>>,
+    start: Option<Instant>,
+}
+
+impl Drop for TimerGuard {
+    fn drop(&mut self) {
+        if let (Some(s), Some(t)) = (&self.slot, self.start) {
+            s.add_value(saturating_ns(t.elapsed()));
+            s.add_count(1);
+        }
+    }
+}
+
+fn saturating_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// One metric's consistent read, as taken by [`Registry::snapshot`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapshotEntry {
+    /// `name{label=value,...}` key.
+    pub key: String,
+    pub kind: Kind,
+    /// Counter total / gauge value / timer total ns.
+    pub value: u64,
+    /// Timer sample count (0 for counters and gauges).
+    pub count: u64,
+}
+
+/// A registry of labeled metrics. See the module docs for the design;
+/// the process-global instance is [`super::global`], and tests inject
+/// scoped instances (`Registry::enabled()`) instead of touching the
+/// environment.
+pub struct Registry {
+    enabled: bool,
+    /// `BTreeMap` so snapshots come out key-sorted without a sort.
+    slots: Mutex<BTreeMap<String, Arc<Slot>>>,
+    /// Origin for monotonic JSONL timestamps.
+    origin: Instant,
+    /// JSONL appender; presence is fixed at construction so the hot
+    /// `has_jsonl` check needs no lock.
+    jsonl: Option<Mutex<jsonl::Appender>>,
+    /// Snapshot sequence number for JSONL lines.
+    snapshots: AtomicU64,
+}
+
+impl Registry {
+    /// A registry whose handles are all no-ops.
+    pub fn disabled() -> Registry {
+        Registry::build(false)
+    }
+
+    /// A recording registry (no JSONL until [`Registry::with_jsonl`]).
+    pub fn enabled() -> Registry {
+        Registry::build(true)
+    }
+
+    fn build(enabled: bool) -> Registry {
+        Registry {
+            enabled,
+            slots: Mutex::new(BTreeMap::new()),
+            origin: Instant::now(),
+            jsonl: None,
+            snapshots: AtomicU64::new(0),
+        }
+    }
+
+    /// Attach a JSONL appender (builder style). Ignored on a disabled
+    /// registry — disabled telemetry must never create files.
+    pub fn with_jsonl(mut self, path: impl Into<PathBuf>) -> Registry {
+        if self.enabled {
+            self.jsonl = Some(Mutex::new(jsonl::Appender::new(path.into())));
+        }
+        self
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn has_jsonl(&self) -> bool {
+        self.jsonl.is_some()
+    }
+
+    /// Resolve a slot. The disabled check comes FIRST: a disabled
+    /// registry returns before any key string is formatted, so
+    /// handle resolution allocates nothing when telemetry is off.
+    fn slot(&self, kind: Kind, name: &str, labels: &[(&str, &str)]) -> Option<Arc<Slot>> {
+        if !self.enabled {
+            return None;
+        }
+        let key = format_key(name, labels);
+        let mut slots = self.slots.lock().unwrap();
+        let slot = slots.entry(key).or_insert_with(|| Arc::new(Slot::new(kind)));
+        debug_assert!(
+            slot.kind == kind,
+            "telemetry key '{name}' re-resolved with a different kind"
+        );
+        Some(slot.clone())
+    }
+
+    /// A counter handle for `name{labels}`.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        Counter(self.slot(Kind::Counter, name, labels))
+    }
+
+    /// A gauge handle for `name{labels}`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        Gauge(self.slot(Kind::Gauge, name, labels))
+    }
+
+    /// A timer handle for `name{labels}`.
+    pub fn timer(&self, name: &str, labels: &[(&str, &str)]) -> Timer {
+        Timer(self.slot(Kind::Timer, name, labels))
+    }
+
+    /// Milliseconds since this registry was created (the monotonic
+    /// timestamp JSONL lines carry).
+    pub fn ts_ms(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Key-sorted consistent-enough read of every metric. (Relaxed
+    /// counters: each value is exact for events that happened-before
+    /// the read; the snapshot is not a cross-metric atomic cut.)
+    pub fn snapshot(&self) -> Vec<SnapshotEntry> {
+        let slots = self.slots.lock().unwrap();
+        slots
+            .iter()
+            .map(|(k, s)| SnapshotEntry {
+                key: k.clone(),
+                kind: s.kind,
+                value: s.value_total(),
+                count: s.count_total(),
+            })
+            .collect()
+    }
+
+    /// Append one snapshot to the attached JSONL file (no-op without
+    /// one). Called periodically by the global flusher thread and once
+    /// more by `main` on exit.
+    pub fn flush_jsonl(&self) -> std::io::Result<()> {
+        let Some(app) = &self.jsonl else {
+            return Ok(());
+        };
+        let snap = self.snapshot();
+        let seq = self.snapshots.fetch_add(1, Ordering::AcqRel);
+        // serialize writers so periodic + final flushes can't interleave
+        app.lock().unwrap().append(seq, self.ts_ms(), &snap)
+    }
+}
+
+/// `name` → `name`, `name` + labels → `name{k1=v1,k2=v2}`. Label
+/// order is the caller's; instrumentation sites pass a fixed slice so
+/// one metric always formats to one key.
+fn format_key(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut s = String::with_capacity(name.len() + 16);
+    s.push_str(name);
+    s.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push('=');
+        s.push_str(v);
+    }
+    s.push('}');
+    s
+}
+
+/// Compact duration formatting for the stats table ("1.234s",
+/// "12.345ms", "6.7µs", "890ns").
+fn fmt_ns(ns: u64) -> String {
+    let s = ns as f64 / 1e9;
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1}µs", s * 1e6)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Render snapshot entries as the aligned table `irqlora stats`
+/// prints (also used by the serve verbs when telemetry is on).
+pub fn render_table(entries: &[SnapshotEntry]) -> String {
+    let key_w = entries
+        .iter()
+        .map(|e| e.key.len())
+        .chain(std::iter::once("key".len()))
+        .max()
+        .unwrap_or(3);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "  {:<key_w$}  {:<7}  {:>14}  {:>8}  {:>12}\n",
+        "key", "kind", "value", "count", "mean"
+    ));
+    for e in entries {
+        let (value, count, mean) = match e.kind {
+            Kind::Counter | Kind::Gauge => (e.value.to_string(), "-".into(), "-".into()),
+            Kind::Timer => (
+                fmt_ns(e.value),
+                e.count.to_string(),
+                fmt_ns(e.value / e.count.max(1)),
+            ),
+        };
+        out.push_str(&format!(
+            "  {:<key_w$}  {:<7}  {:>14}  {:>8}  {:>12}\n",
+            e.key,
+            e.kind.as_str(),
+            value,
+            count,
+            mean
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_hands_out_noops() {
+        let r = Registry::disabled();
+        let c = r.counter("a", &[("x", "1")]);
+        c.add(5);
+        assert_eq!(c.get(), 0);
+        let g = r.gauge("b", &[]);
+        g.set(9);
+        g.set_max(11);
+        assert_eq!(g.get(), 0);
+        let t = r.timer("c", &[]);
+        drop(t.start());
+        t.record(Duration::from_millis(1));
+        assert_eq!(t.samples(), 0);
+        assert!(r.snapshot().is_empty());
+        assert!(r.flush_jsonl().is_ok());
+    }
+
+    #[test]
+    fn counter_sums_across_threads_and_handles() {
+        let r = Arc::new(Registry::enabled());
+        let c = r.counter("hits", &[]);
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // a later handle for the same key sees the same slot
+        assert_eq!(r.counter("hits", &[]).get(), 80_000);
+    }
+
+    #[test]
+    fn keys_carry_labels_and_sort() {
+        let r = Registry::enabled();
+        r.counter("quant.blocks", &[("k", "4")]).add(3);
+        r.counter("quant.blocks", &[("k", "2")]).inc();
+        r.gauge("serve.parked_peak", &[]).set_max(7);
+        let snap = r.snapshot();
+        let keys: Vec<&str> = snap.iter().map(|e| e.key.as_str()).collect();
+        assert_eq!(
+            keys,
+            ["quant.blocks{k=2}", "quant.blocks{k=4}", "serve.parked_peak"]
+        );
+        assert_eq!(snap[1].value, 3);
+        assert_eq!(snap[2].kind, Kind::Gauge);
+        assert_eq!(snap[2].value, 7);
+    }
+
+    #[test]
+    fn gauge_set_max_is_monotone() {
+        let r = Registry::enabled();
+        let g = r.gauge("peak", &[]);
+        g.set_max(5);
+        g.set_max(3);
+        assert_eq!(g.get(), 5);
+        g.set_max(9);
+        assert_eq!(g.get(), 9);
+        g.set(2); // plain set still overwrites
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn timer_guard_accumulates() {
+        let r = Registry::enabled();
+        let t = r.timer("work", &[]);
+        for _ in 0..3 {
+            let _g = t.start();
+            std::hint::black_box(1 + 1);
+        }
+        t.record(Duration::from_micros(10));
+        assert_eq!(t.samples(), 4);
+        assert!(t.total() >= Duration::from_micros(10));
+        let snap = r.snapshot();
+        assert_eq!(snap[0].kind, Kind::Timer);
+        assert_eq!(snap[0].count, 4);
+    }
+
+    #[test]
+    fn table_renders_every_kind() {
+        let r = Registry::enabled();
+        r.counter("serve.requests", &[]).add(272);
+        r.timer("plan.solve_time", &[]).record(Duration::from_millis(2));
+        let table = render_table(&r.snapshot());
+        assert!(table.contains("serve.requests"));
+        assert!(table.contains("272"));
+        assert!(table.contains("plan.solve_time"));
+        assert!(table.contains("2.000ms"));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(890), "890ns");
+        assert_eq!(fmt_ns(6_700), "6.7µs");
+        assert_eq!(fmt_ns(12_345_000), "12.345ms");
+        assert_eq!(fmt_ns(1_234_000_000), "1.234s");
+    }
+}

@@ -133,6 +133,20 @@ pub fn knobs() -> &'static [Knob] {
             meaning: "Redirect bench row output (verify.sh points it at a scratch \
                       file so smoke noise never lands in the tracked file).",
         },
+        Knob {
+            name: "IRQLORA_TELEMETRY",
+            default: "off",
+            meaning: "Enable telemetry recording (`telemetry::global()`). Unset/`0`: \
+                      every handle is a compiled-in no-op — zero allocation, zero \
+                      atomics on the hot path.",
+        },
+        Knob {
+            name: "IRQLORA_TELEMETRY_JSONL",
+            default: "—",
+            meaning: "Append periodic + final telemetry snapshots to this JSONL path \
+                      (only with `IRQLORA_TELEMETRY=1`); `irqlora stats FILE` renders \
+                      the last snapshot.",
+        },
     ];
     KNOBS
 }
@@ -282,6 +296,17 @@ pub fn bench_json() -> Option<String> {
     var("IRQLORA_BENCH_JSON")
 }
 
+/// `IRQLORA_TELEMETRY` recording flag (unset/`0`/empty means off —
+/// same convention as the quick-mode flag).
+pub fn telemetry_enabled() -> bool {
+    parse_quick(var("IRQLORA_TELEMETRY").as_deref())
+}
+
+/// `IRQLORA_TELEMETRY_JSONL` snapshot path, if set and non-empty.
+pub fn telemetry_jsonl() -> Option<String> {
+    var("IRQLORA_TELEMETRY_JSONL").and_then(|v| parse_name(&v))
+}
+
 /// `IRQLORA_SERVE_BACKEND`, else [`DEFAULT_SERVE_BACKEND`]. The CLI
 /// `--backend` flag and test batteries consult this to pick a HAL
 /// backend when none is named explicitly.
@@ -356,7 +381,7 @@ mod tests {
     #[test]
     fn knob_table_is_complete_and_unique() {
         let ks = knobs();
-        assert!(ks.len() >= 13);
+        assert!(ks.len() >= 15);
         let mut names: Vec<&str> = ks.iter().map(|k| k.name).collect();
         let before = names.len();
         names.sort_unstable();
@@ -381,6 +406,8 @@ mod tests {
             "IRQLORA_BIT_CEIL",
             "IRQLORA_BENCH_QUICK",
             "IRQLORA_BENCH_JSON",
+            "IRQLORA_TELEMETRY",
+            "IRQLORA_TELEMETRY_JSONL",
         ] {
             assert!(
                 ks.iter().any(|k| k.name == resolved),

@@ -33,6 +33,7 @@ use irqlora::coordinator::{
     synthetic_serve_registry, BatchServer, FaultBackend, FaultConfig, FaultStats, ServeError,
     ServerConfig,
 };
+use irqlora::telemetry;
 use irqlora::util::Rng;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -48,12 +49,30 @@ const VOCAB: usize = 64;
 /// seed, so the oracle registry is reproducible independently.
 const FIXTURE_SEED: u64 = 7;
 
+/// Value of `key` in a snapshot (0 when absent — a counter that never
+/// fired is equivalent to one resolved at 0).
+fn telem_value(entries: &[telemetry::SnapshotEntry], key: &str) -> u64 {
+    entries.iter().find(|e| e.key == key).map_or(0, |e| e.value)
+}
+
 fn soak(seed: u64) {
     let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+    // scoped ENABLED telemetry registry with a JSONL sink, injected
+    // through PoolConfig (never process env — tests run in parallel):
+    // after the soak its counters must reconcile EXACTLY with
+    // PoolStats/FaultStats, and the JSONL's final snapshot must
+    // round-trip the live snapshot
+    let jsonl_path = std::env::temp_dir().join(format!(
+        "irqlora_chaos_telem_{}_{seed}.jsonl",
+        std::process::id()
+    ));
+    std::fs::remove_file(&jsonl_path).ok(); // appender appends: drop stale runs
+    let treg = Arc::new(telemetry::Registry::enabled().with_jsonl(&jsonl_path));
     let mut pcfg = PoolConfig::new(WORKERS, Duration::from_millis(1));
     pcfg.spill_depth = Some(2);
     pcfg.park_bound = Some(PARK_BOUND);
     pcfg.park_age = Some(Duration::from_millis(5));
+    pcfg.telemetry = Some(treg.clone());
     // faulted workers wrap whatever backend the env selects, built
     // through the manifest-validated HAL factory — a bad name or an
     // unsupported shape fails here with a typed error, not mid-soak
@@ -65,6 +84,7 @@ fn soak(seed: u64) {
         .unwrap_or_else(|e| panic!("backend '{backend_name}' rejected for soak: {e}"));
     let fault_stats: Arc<Mutex<Vec<Arc<FaultStats>>>> = Arc::new(Mutex::new(Vec::new()));
     let fs = fault_stats.clone();
+    let treg_w = treg.clone();
     let pool = ServerPool::spawn_with(pcfg, registry, move |w| {
         // worker 0 keeps its seed-derived panic knob (death + reroute
         // under load); the others must survive the whole soak
@@ -73,7 +93,7 @@ fn soak(seed: u64) {
         } else {
             FaultConfig::from_seed(seed ^ w as u64).no_panic()
         };
-        let fb = FaultBackend::new(make_inner(w)?, cfg);
+        let fb = FaultBackend::with_telemetry(make_inner(w)?, cfg, &treg_w);
         fs.lock().unwrap().push(fb.stats());
         Ok(Box::new(fb) as Box<dyn ServeBackend>)
     })
@@ -192,6 +212,83 @@ fn soak(seed: u64) {
     let total_forwards: u64 = injected.iter().map(|s| s.forwards()).sum();
     assert!(total_forwards > 0, "seed={seed}: no forwards reached the backends");
     assert!(total_errors > 0, "seed={seed}: the chaos schedule never fired");
+
+    // telemetry reconciliation: the scoped registry's counters were
+    // incremented at the SAME mutation sites as the struct stats, so
+    // they must agree EXACTLY — any drift means a mirror is missing
+    // or double-counted
+    let snap = treg.snapshot();
+    let tv = |key: &str| telem_value(&snap, key);
+    assert_eq!(tv("serve.requests"), stats.requests as u64, "seed={seed}: serve.requests");
+    assert_eq!(tv("serve.batches"), stats.batches as u64, "seed={seed}: serve.batches");
+    assert_eq!(
+        tv("serve.fused_batches"),
+        stats.fused_batches as u64,
+        "seed={seed}: serve.fused_batches"
+    );
+    assert_eq!(tv("serve.rejected"), stats.rejected as u64, "seed={seed}: serve.rejected");
+    assert_eq!(
+        tv("pool.shed_overload"),
+        stats.shed_overload as u64,
+        "seed={seed}: pool.shed_overload"
+    );
+    assert_eq!(
+        tv("pool.shed_deadline") + tv("serve.shed_deadline"),
+        stats.shed_deadline as u64,
+        "seed={seed}: shed_deadline views disagree"
+    );
+    assert_eq!(tv("pool.retries"), stats.retries as u64, "seed={seed}: pool.retries");
+    assert_eq!(tv("pool.steals"), stats.steals as u64, "seed={seed}: pool.steals");
+    assert_eq!(tv("pool.reroutes"), stats.reroutes as u64, "seed={seed}: pool.reroutes");
+    assert_eq!(tv("pool.spills"), stats.spills as u64, "seed={seed}: pool.spills");
+    assert_eq!(
+        tv("pool.parked_peak"),
+        stats.parked_peak as u64,
+        "seed={seed}: pool.parked_peak"
+    );
+    assert_eq!(
+        tv("serve.upload{event=hit}"),
+        stats.upload_hits as u64,
+        "seed={seed}: upload hit deltas must telescope to the stats snapshot"
+    );
+    assert_eq!(
+        tv("serve.upload{event=miss}"),
+        stats.upload_misses as u64,
+        "seed={seed}: upload miss deltas"
+    );
+    // per-adapter: every tenant's telemetry counter matches its slice
+    for (name, a) in &stats.per_adapter {
+        assert_eq!(
+            tv(&format!("serve.adapter_requests{{adapter={name}}}")),
+            a.requests as u64,
+            "seed={seed}: adapter_requests for {name}"
+        );
+    }
+    // chaos.* mirrors FaultStats exactly (summed across workers)
+    assert_eq!(tv("chaos.forwards"), total_forwards, "seed={seed}: chaos.forwards");
+    assert_eq!(tv("chaos.errors_injected"), total_errors, "seed={seed}: chaos.errors");
+    assert_eq!(
+        tv("chaos.panics_injected"),
+        injected.iter().map(|s| s.panics()).sum::<u64>(),
+        "seed={seed}: chaos.panics"
+    );
+    assert_eq!(
+        tv("chaos.delays_injected"),
+        injected.iter().map(|s| s.delays()).sum::<u64>(),
+        "seed={seed}: chaos.delays"
+    );
+
+    // JSONL sink: the final flushed snapshot must round-trip the live
+    // snapshot bit-for-bit (scoped registries have no background
+    // flusher — the explicit flush IS the final snapshot)
+    treg.flush_jsonl().expect("flushing telemetry JSONL");
+    let last = telemetry::read_last_snapshot(&jsonl_path)
+        .unwrap_or_else(|| panic!("seed={seed}: no well-formed snapshot in {jsonl_path:?}"));
+    assert_eq!(
+        last.entries, snap,
+        "seed={seed}: JSONL final snapshot diverges from the live registry"
+    );
+    std::fs::remove_file(&jsonl_path).ok();
 
     // correctness: every delivered reply is bit-identical to a clean
     // serial single-worker oracle over an identically-built registry

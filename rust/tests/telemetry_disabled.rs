@@ -1,0 +1,100 @@
+//! Disabled telemetry must be zero-cost — not "cheap", ZERO:
+//!
+//! - resolving a handle from a disabled registry returns before any
+//!   key string is formatted (no allocation);
+//! - every recording op on a no-op handle is a single branch on a
+//!   `None` (no allocation, no clock read);
+//! - a disabled registry never creates its JSONL file, even when
+//!   `with_jsonl` was called.
+//!
+//! Enforced with a counting `#[global_allocator]`: the steady-state
+//! window (handle resolution + 10k recording ops + a flush) must see
+//! exactly zero heap allocations. This file deliberately holds ONE
+//! `#[test]` — a second test running on a sibling thread would
+//! allocate inside the window and turn the assert flaky.
+
+use irqlora::telemetry::Registry;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// `System` with an allocation odometer. Frees are not counted — the
+/// contract under test is "allocates nothing", so only acquisitions
+/// matter.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_telemetry_allocates_nothing_and_writes_nothing() {
+    // Construction may allocate (map, mutexes) — only the steady
+    // state after construction has the zero-allocation contract.
+    let sink = std::env::temp_dir()
+        .join(format!("irqlora_disabled_telem_{}.jsonl", std::process::id()));
+    std::fs::remove_file(&sink).ok();
+    let reg = Registry::disabled().with_jsonl(&sink);
+    assert!(!reg.is_enabled());
+    assert!(!reg.has_jsonl(), "a disabled registry must drop the JSONL attachment");
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+
+    // Handle resolution: the disabled check precedes key formatting,
+    // so even label-carrying lookups allocate nothing.
+    let c = reg.counter("serve.requests", &[("adapter", "tenant0")]);
+    let g = reg.gauge("pool.parked_peak", &[]);
+    let t = reg.timer("hal.forward_time", &[("backend", "reference")]);
+
+    for i in 0..10_000u64 {
+        c.inc();
+        c.add(i);
+        g.set(i);
+        g.set_max(i);
+        // guard drop records nothing and never reads the clock
+        let _guard = t.start();
+    }
+    // flush on a registry without a sink is Ok(()) and touches no file
+    reg.flush_jsonl().expect("disabled flush must be a no-op Ok(())");
+
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "disabled telemetry allocated {} times in the steady state",
+        after - before
+    );
+
+    // nothing was recorded anywhere...
+    assert_eq!(c.get(), 0);
+    assert_eq!(g.get(), 0);
+    assert_eq!(t.samples(), 0);
+    assert_eq!(t.total().as_nanos(), 0);
+    assert!(reg.snapshot().is_empty(), "disabled registry grew slots");
+    // ...and no JSONL file ever appeared
+    assert!(
+        !sink.exists(),
+        "disabled registry created {sink:?} — disabled telemetry must never touch disk"
+    );
+}

@@ -1,0 +1,150 @@
+#!/usr/bin/env bash
+# Perf-regression gate over two bench-harness JSON snapshots.
+#
+#   scripts/perf_compare.sh OLD.json NEW.json
+#
+# Each input is the one-row-per-line format the in-tree bench harness
+# writes (rust/src/bench_harness.rs / BENCH_quant.json):
+#
+#   {"name": "...", "iters": N, "ns_per_iter": X, "ns_min": X,
+#    "per_sec": P, "ts": EPOCH, "git_rev": "abc1234"}
+#
+# For every row present in BOTH files, ns_per_iter is compared; a row
+# that got slower by more than the noise threshold fails the gate.
+# Rows only in NEW are informational (new benches are fine); rows only
+# in OLD are a warning by default — a bench silently disappearing is
+# how perf coverage rots.
+#
+# Knobs (env):
+#   PERF_COMPARE_THRESHOLD       allowed slowdown in percent (default 10)
+#   PERF_COMPARE_OVERRIDES       file of per-bench thresholds, one per
+#                                line: "<percent> <bench name...>"
+#                                (name may contain spaces; '#' comments
+#                                and blank lines ignored)
+#   PERF_COMPARE_STRICT_MISSING  1 = rows missing from NEW fail too
+#
+# Exit codes:
+#   0   within threshold
+#   2   usage / unreadable input
+#   20  at least one regression (or strict-missing violation)
+set -euo pipefail
+
+usage() {
+  echo "usage: $0 OLD.json NEW.json" >&2
+  echo "  (bench-harness snapshots; see rust/src/bench_harness.rs)" >&2
+  exit 2
+}
+
+[[ $# -eq 2 ]] || usage
+OLD="$1"
+NEW="$2"
+for f in "$OLD" "$NEW"; do
+  if [[ ! -s "$f" ]]; then
+    echo "perf_compare: ERROR: '$f' is missing or empty" >&2
+    exit 2
+  fi
+done
+
+THRESHOLD="${PERF_COMPARE_THRESHOLD:-10}"
+OVERRIDES="${PERF_COMPARE_OVERRIDES:-}"
+STRICT_MISSING="${PERF_COMPARE_STRICT_MISSING:-0}"
+
+if [[ -n "$OVERRIDES" && ! -r "$OVERRIDES" ]]; then
+  echo "perf_compare: ERROR: PERF_COMPARE_OVERRIDES='$OVERRIDES' is not readable" >&2
+  exit 2
+fi
+
+rc=0
+awk -v threshold="$THRESHOLD" -v overrides="$OVERRIDES" \
+    -v strict="$STRICT_MISSING" -v oldfile="$OLD" -v newfile="$NEW" '
+# Minimal field extraction for the harness line format (flat object,
+# ": "-separated) — same contract read_entries() relies on in Rust.
+function jstr(line, key,    pat, i, s) {
+  pat = "\"" key "\": \""
+  i = index(line, pat)
+  if (i == 0) return ""
+  s = substr(line, i + length(pat))
+  i = index(s, "\"")
+  return (i > 0) ? substr(s, 1, i - 1) : ""
+}
+function jnum(line, key,    pat, i, s) {
+  pat = "\"" key "\": "
+  i = index(line, pat)
+  if (i == 0) return ""
+  s = substr(line, i + length(pat))
+  sub(/[,}].*$/, "", s)
+  return s + 0
+}
+function provenance(rev, ts) {
+  if (rev == "" && ts == 0) return "(no provenance stamps)"
+  return sprintf("(rev %s, ts %d)", (rev == "" ? "?" : rev), ts)
+}
+BEGIN {
+  # per-bench threshold overrides: "<percent> <name with spaces>"
+  if (overrides != "") {
+    while ((getline line < overrides) > 0) {
+      sub(/^[ \t]+/, "", line)
+      if (line == "" || line ~ /^#/) continue
+      sp = index(line, " ")
+      if (sp == 0) continue
+      over[substr(line, sp + 1)] = substr(line, 1, sp - 1) + 0
+    }
+    close(overrides)
+  }
+}
+NR == FNR {
+  if (index($0, "\"name\"") == 0) next
+  name = jstr($0, "name")
+  old_ns[name] = jnum($0, "ns_per_iter")
+  old_rev = jstr($0, "git_rev"); old_ts = jnum($0, "ts")
+  next
+}
+{
+  if (index($0, "\"name\"") == 0) next
+  name = jstr($0, "name")
+  new_ns[name] = jnum($0, "ns_per_iter")
+  new_rev = jstr($0, "git_rev"); new_ts = jnum($0, "ts")
+}
+END {
+  printf "perf_compare: old %s %s\n", oldfile, provenance(old_rev, old_ts)
+  printf "perf_compare: new %s %s\n", newfile, provenance(new_rev, new_ts)
+  bad = 0; compared = 0
+  for (name in old_ns) {
+    if (!(name in new_ns)) {
+      missing++
+      printf "  MISSING   %-60s (in old only)\n", name
+      if (strict != 0) bad++
+      continue
+    }
+    o = old_ns[name]; n = new_ns[name]
+    compared++
+    if (o <= 0) {
+      printf "  SKIP      %-60s old ns_per_iter is 0\n", name
+      continue
+    }
+    pct = (n - o) / o * 100.0
+    lim = (name in over) ? over[name] : threshold + 0
+    if (pct > lim) {
+      bad++
+      printf "  REGRESSED %-60s %12.1f -> %12.1f ns/iter  (%+.1f%% > %.1f%%)\n", \
+        name, o, n, pct, lim
+    } else if (pct < -lim) {
+      printf "  improved  %-60s %12.1f -> %12.1f ns/iter  (%+.1f%%)\n", name, o, n, pct
+    } else {
+      printf "  ok        %-60s %12.1f -> %12.1f ns/iter  (%+.1f%%)\n", name, o, n, pct
+    }
+  }
+  for (name in new_ns) if (!(name in old_ns)) {
+    printf "  new       %-60s %12.1f ns/iter (no baseline)\n", name, new_ns[name]
+  }
+  if (compared == 0 && missing == 0) {
+    print "perf_compare: ERROR: no comparable rows found" > "/dev/stderr"
+    exit 2
+  }
+  printf "perf_compare: %d compared, %d regressed (threshold %.1f%%)\n", \
+    compared, bad, threshold + 0
+  if (bad > 0) exit 20
+}
+' "$OLD" "$NEW" || rc=$?
+
+exit "$rc"

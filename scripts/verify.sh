@@ -17,6 +17,42 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "== perf_compare.sh self-test (toolchain-free) =="
+# The perf gate is pure bash/awk, so it is exercised even in
+# containers without cargo: identical snapshots must pass, and a
+# synthetic 30% slowdown must fail with the regression exit code (20).
+PC_DIR="$(mktemp -d -t irqlora_perf_compare.XXXXXX)"
+# (traps replace, not stack — every later trap in this script must
+# keep removing $PC_DIR)
+trap 'rm -rf "$PC_DIR"' EXIT
+cat > "$PC_DIR/old.json" <<'PCEOF'
+{"name": "selftest_bench_a", "iters": 100, "ns_per_iter": 1000.0, "ns_min": 990.0, "per_sec": 1000000.0, "ts": 1754500000, "git_rev": "selftest"}
+{"name": "selftest_bench_b", "iters": 100, "ns_per_iter": 2000.0, "ns_min": 1900.0, "per_sec": 500000.0, "ts": 1754500000, "git_rev": "selftest"}
+PCEOF
+sed 's/"ns_per_iter": 1000\.0/"ns_per_iter": 1300.0/' "$PC_DIR/old.json" > "$PC_DIR/regressed.json"
+if ! scripts/perf_compare.sh "$PC_DIR/old.json" "$PC_DIR/old.json" >/dev/null; then
+  echo "verify.sh: ERROR: perf_compare.sh rejected identical snapshots" >&2
+  exit 14
+fi
+pc_rc=0
+scripts/perf_compare.sh "$PC_DIR/old.json" "$PC_DIR/regressed.json" >/dev/null || pc_rc=$?
+if [[ "$pc_rc" != 20 ]]; then
+  echo "verify.sh: ERROR: perf_compare.sh missed a 30% regression (exit $pc_rc, want 20)" >&2
+  exit 14
+fi
+echo "verify.sh: perf_compare self-test OK (identical pass, regression exit 20)"
+
+# Optional real comparison: arm a baseline by copying a measured
+# BENCH_quant.json to BENCH_baseline.json; the gate then enforces the
+# noise threshold on every verify run. Skipped while either file has
+# no harness rows (the tracked file starts as a pending-first-run
+# placeholder until a cargo-equipped environment populates it).
+if grep -q '"ns_per_iter"' BENCH_baseline.json 2>/dev/null \
+   && grep -q '"ns_per_iter"' BENCH_quant.json 2>/dev/null; then
+  echo "== perf gate: BENCH_baseline.json vs BENCH_quant.json =="
+  scripts/perf_compare.sh BENCH_baseline.json BENCH_quant.json
+fi
+
 if ! command -v cargo >/dev/null 2>&1; then
   echo "verify.sh: WARNING: no cargo on PATH — Rust tier-1 skipped." >&2
   echo "verify.sh: (this container lacks the Rust toolchain; see ROADMAP open items)" >&2
@@ -80,6 +116,48 @@ echo "== chaos serve smoke (irqlora serve --reference --chaos 7) =="
 # the command bails nonzero if the pool delivers nothing.
 (cd rust && cargo run --release --quiet -- serve --reference --chaos 7)
 
+echo "== telemetry smoke (IRQLORA_TELEMETRY=1 + JSONL + stats verb) =="
+# End-to-end over the env knobs (not the test-scoped injection): a
+# serve run and a plan run with telemetry on must emit well-formed
+# JSONL snapshots containing the expected keys, and `irqlora stats`
+# must render the file back. Guards the knob plumbing, the JSONL
+# appender, and the exit-time final flush in main().
+TELEM_JSONL="$PC_DIR/telem_serve.jsonl"
+(cd rust && IRQLORA_TELEMETRY=1 IRQLORA_TELEMETRY_JSONL="$TELEM_JSONL" \
+  cargo run --release --quiet -- serve --reference --workers 2 >/dev/null)
+if [[ ! -s "$TELEM_JSONL" ]]; then
+  echo "verify.sh: ERROR: telemetry serve smoke wrote no JSONL" >&2
+  exit 13
+fi
+if grep -vq '^{.*}$' "$TELEM_JSONL"; then
+  echo "verify.sh: ERROR: malformed telemetry JSONL line(s):" >&2
+  grep -v '^{.*}$' "$TELEM_JSONL" | head -3 >&2
+  exit 13
+fi
+if ! grep -q '"key": "serve.requests", "value": [1-9]' "$TELEM_JSONL"; then
+  echo "verify.sh: ERROR: telemetry JSONL shows no served requests" >&2
+  exit 13
+fi
+if ! grep -q 'hal.forward_time{backend=' "$TELEM_JSONL"; then
+  echo "verify.sh: ERROR: telemetry JSONL has no per-backend forward timers" >&2
+  exit 13
+fi
+STATS_OUT="$(cd rust && cargo run --release --quiet -- stats "$TELEM_JSONL")"
+if ! grep -q 'serve.requests' <<<"$STATS_OUT"; then
+  echo "verify.sh: ERROR: 'irqlora stats' failed to render the JSONL back:" >&2
+  echo "$STATS_OUT" >&2
+  exit 13
+fi
+TELEM_PLAN_JSONL="$PC_DIR/telem_plan.jsonl"
+(cd rust && IRQLORA_TELEMETRY=1 IRQLORA_TELEMETRY_JSONL="$TELEM_PLAN_JSONL" \
+  cargo run --release --quiet -- plan --synthetic --budget 3.0 --check >/dev/null)
+if ! grep -q 'plan.chosen_k{k=' "$TELEM_PLAN_JSONL" \
+   || ! grep -q 'quant.blocks_quantized{k=' "$TELEM_PLAN_JSONL"; then
+  echo "verify.sh: ERROR: plan telemetry lacks plan.chosen_k / quant.blocks_quantized keys" >&2
+  exit 13
+fi
+echo "verify.sh: telemetry smoke OK"
+
 # Formatting gate. Advisory by default (the tree predates the check
 # and this container has no rustfmt to normalize it with); set
 # VERIFY_FMT_STRICT=1 to hard-fail once `cargo fmt` has run.
@@ -104,7 +182,7 @@ echo "== planner smoke (plan --synthetic --budget 3.0 --check) =="
 if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
   echo "== bench smoke (IRQLORA_BENCH_QUICK=1) =="
   SMOKE_JSON="$(mktemp -t irqlora_bench_smoke.XXXXXX.json)"
-  trap 'rm -f "$SMOKE_JSON"' EXIT
+  trap 'rm -f "$SMOKE_JSON"; rm -rf "$PC_DIR"' EXIT
   (
     cd rust
     export IRQLORA_BENCH_QUICK=1
