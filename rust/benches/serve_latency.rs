@@ -39,6 +39,14 @@
 //!   against a 4-worker pool with the work-stealing scheduler on vs
 //!   off (`serve_latency pool steal=on|off workers=4 adapters=8`);
 //!   the printed table carries the steal/spill counters.
+//! - **Streamed vs oneshot** (always runs): the same skewed open-loop
+//!   burst as paired 4-step decode streams vs one-shot requests
+//!   (`serve_latency streamed|oneshot ttft p50|p99 workers=4
+//!   adapters=8`: ns_per_iter = time-to-first-token at that quantile;
+//!   `... tokens_per_sec ...`: per_sec = decode tokens/s) so the
+//!   continuous-batching scheduler's join/leave overhead travels next
+//!   to the one-shot path it grew out of. `scripts/verify.sh` asserts
+//!   both flavors exist.
 //! - **Saturation** (always runs): open-loop offered load paced at
 //!   ~2× the pool's measured clean throughput against a small parked
 //!   overflow, so admission control actually engages. Rows
@@ -76,6 +84,7 @@ fn main() {
     fused_vs_serial(&mut sink);
     native_vs_reference(&mut sink);
     steal_on_off(&mut sink);
+    streamed_vs_oneshot(&mut sink);
     saturation(&mut sink);
 
     let path = bench_json_path("BENCH_quant.json");
@@ -704,6 +713,132 @@ fn steal_on_off(sink: &mut JsonSink) {
             total.as_secs_f64() / n_req as f64 * 1e9,
             fastest.as_secs_f64() * 1e9,
             Some(n_req as f64 / wall),
+        );
+        pool.shutdown();
+    }
+}
+
+/// Paired streamed-vs-oneshot rows: the same skewed open-loop offered
+/// load (half on one hot adapter) against a 4-worker continuous-
+/// batching pool, once as 4-step decode streams and once as one-shot
+/// requests. Streamed rows report time-to-first-token — the p50/p99 of
+/// each stream's first-step submit-to-reply latency — plus decode
+/// throughput in tokens/sec; the oneshot pair reports the same
+/// quantities, where TTFT degenerates to full request latency and
+/// every request emits exactly one token. Harvest iterates each
+/// `Pending` as a stream for both arms (a one-shot is a 1-step
+/// stream), so the rows measure the scheduler clients actually use.
+fn streamed_vs_oneshot(sink: &mut JsonSink) {
+    const BATCH: usize = 8;
+    const SEQ: usize = 32;
+    const VOCAB: usize = 64;
+    const WORKERS: usize = 4;
+    const STEPS: usize = 4;
+    let n_adapters = 8usize;
+    let n_req = (irqlora::bench_harness::iters(384).max(64)).min(900);
+
+    let registry = synthetic_serve_registry(n_adapters, 13);
+    println!(
+        "\nstreamed vs oneshot (reference backend, {WORKERS} workers, {n_adapters} adapters, \
+         {n_req} open-loop requests, {STEPS}-step streams, 50% on one hot adapter):"
+    );
+    println!(
+        "{:>9} {:>13} {:>13} {:>12} {:>12}",
+        "mode", "ttft p50 ms", "ttft p99 ms", "tokens/s", "req/s"
+    );
+    for &streamed in &[true, false] {
+        let reg = registry.clone();
+        let pool = ServerPool::spawn_with(
+            PoolConfig::new(WORKERS, Duration::from_millis(2)),
+            registry.clone(),
+            move |_w| {
+                Ok(Box::new(
+                    ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base())
+                        .with_forward_delay(Duration::from_micros(300)),
+                ) as Box<dyn ServeBackend>)
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(21);
+        let t = Timer::start();
+        let handles: Vec<_> = (0..n_req)
+            .map(|i| {
+                // identical skew to the steal_on_off burst: every other
+                // request hammers tenant0, the rest spread
+                let adapter = if i % 2 == 0 {
+                    "tenant0".to_string()
+                } else {
+                    format!("tenant{}", 1 + i % (n_adapters - 1))
+                };
+                // leave room for STEPS-1 decoded tokens within SEQ
+                let len = 1 + rng.below(SEQ - STEPS);
+                let prompt: Vec<i32> =
+                    (0..len).map(|_| 1 + rng.below(VOCAB - 1) as i32).collect();
+                if streamed {
+                    pool.submit_stream(&adapter, prompt, STEPS).unwrap()
+                } else {
+                    pool.submit_async(&adapter, prompt).unwrap()
+                }
+            })
+            .collect();
+        let mut ttft: Vec<f64> = Vec::with_capacity(n_req);
+        let mut tokens = 0usize;
+        for h in handles {
+            let mut first = true;
+            for r in h {
+                let r = r.unwrap();
+                if first {
+                    ttft.push(r.latency.as_secs_f64());
+                    first = false;
+                }
+                tokens += 1;
+                if r.last {
+                    break;
+                }
+            }
+        }
+        let wall = t.elapsed_secs();
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| ttft[((ttft.len() - 1) as f64 * p) as usize];
+        let mode = if streamed { "streamed" } else { "oneshot" };
+        println!(
+            "{:>9} {:>13.3} {:>13.3} {:>12.1} {:>12.1}",
+            mode,
+            q(0.5) * 1e3,
+            q(0.99) * 1e3,
+            tokens as f64 / wall,
+            n_req as f64 / wall,
+        );
+        sink.push_raw(
+            &format!(
+                "serve_latency {mode} ttft p50 workers={WORKERS} adapters={n_adapters}"
+            ),
+            n_req,
+            q(0.5) * 1e9,
+            ttft[0] * 1e9,
+            Some(n_req as f64 / wall),
+        );
+        sink.push_raw(
+            &format!(
+                "serve_latency {mode} ttft p99 workers={WORKERS} adapters={n_adapters}"
+            ),
+            n_req,
+            q(0.99) * 1e9,
+            ttft[0] * 1e9,
+            Some(n_req as f64 / wall),
+        );
+        // tokens row: iters = tokens emitted, per_sec = decode
+        // throughput, ns_per_iter = mean wall time per emitted token;
+        // ns_min is zeroed (the pool_scaling convention for fields
+        // that would otherwise carry a misleading pseudo-latency)
+        sink.push_raw(
+            &format!(
+                "serve_latency {mode} tokens_per_sec workers={WORKERS} adapters={n_adapters}"
+            ),
+            tokens,
+            wall / tokens.max(1) as f64 * 1e9,
+            0.0,
+            Some(tokens as f64 / wall),
         );
         pool.shutdown();
     }

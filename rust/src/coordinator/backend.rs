@@ -238,6 +238,59 @@ pub trait ServeBackend {
         Ok(out)
     }
 
+    /// Run ONE decode step for a (possibly mixed-adapter) batch:
+    /// `tokens` is the same padded `[batch, seq]` matrix as
+    /// [`Self::forward_fused`], `lens[b]` is row `b`'s live prefix
+    /// length (must be in `1..=seq` for rows owned by a group; ignored
+    /// for unowned rows), and the returned `[batch, vocab]` buffer
+    /// holds, for each owned row `b`, the next-token logits at
+    /// position `lens[b] - 1`.
+    ///
+    /// Contract: row `b` of the result is bit-identical to slicing
+    /// `forward_fused(groups, tokens)` at `(b*seq + lens[b]-1)*vocab`.
+    /// The default implementation does exactly that slice, so every
+    /// backend inherits a correct streaming path; backends whose
+    /// manifest declares `streaming_decode` override it with a true
+    /// single-position compute (reference, native).
+    fn forward_step(
+        &mut self,
+        groups: &[AdapterGroup],
+        tokens: &[i32],
+        lens: &[usize],
+    ) -> Result<Vec<f32>> {
+        let (batch, seq, vocab) = self.shape();
+        if lens.len() != batch {
+            bail!("lens has {} entries, expected batch = {batch}", lens.len());
+        }
+        for g in groups {
+            for row in g.rows.clone() {
+                if row >= batch {
+                    bail!(
+                        "adapter group '{}' rows {}..{} exceed batch {batch}",
+                        g.name,
+                        g.rows.start,
+                        g.rows.end
+                    );
+                }
+                if !(1..=seq).contains(&lens[row]) {
+                    bail!("row {row} prefix length {} out of range 1..={seq}", lens[row]);
+                }
+            }
+        }
+        let full = self.forward_fused(groups, tokens)?;
+        let mut out = vec![0f32; batch * vocab];
+        for g in groups {
+            for row in g.rows.clone() {
+                let off = (row * seq + lens[row] - 1) * vocab;
+                if off + vocab > full.len() {
+                    bail!("backend returned {} logits, need at least {}", full.len(), off + vocab);
+                }
+                out[row * vocab..(row + 1) * vocab].copy_from_slice(&full[off..off + vocab]);
+            }
+        }
+        Ok(out)
+    }
+
     /// Adapter-side cache counters so far (uploads for PJRT,
     /// fingerprint recomputes for the reference stand-in). Default:
     /// zeros, for backends without such a cache.
@@ -338,6 +391,10 @@ impl PjrtBackend {
 pub(crate) struct ForwardTimers {
     pub(crate) forward: crate::telemetry::Timer,
     pub(crate) fused: crate::telemetry::Timer,
+    /// One decode step of the streaming path (true single-position
+    /// `forward_step` overrides only; the inherited slice records
+    /// under `fused` because it runs a whole fused forward).
+    pub(crate) step: crate::telemetry::Timer,
 }
 
 impl ForwardTimers {
@@ -346,6 +403,7 @@ impl ForwardTimers {
         ForwardTimers {
             forward: reg.timer("hal.forward_time", &[("backend", backend)]),
             fused: reg.timer("hal.fused_forward_time", &[("backend", backend)]),
+            step: reg.timer("hal.step_forward_time", &[("backend", backend)]),
         }
     }
 }
@@ -473,6 +531,30 @@ impl ReferenceBackend {
                     + 1e-4 * prefix * ((v % 7) as f64 + 1.0))
                     as f32;
             }
+        }
+    }
+
+    /// Fill one row's `[vocab]` next-token logits at position
+    /// `len - 1` — the single-position compute behind `forward_step`.
+    /// The prefix fold and the per-slot formula are the SAME
+    /// expressions [`Self::row_into`] evaluates at `t = len - 1`, in
+    /// the same accumulation order, so the streamed step is
+    /// bit-identical to slicing the full `[seq, vocab]` row.
+    fn step_row_into(&self, afp: f64, row_tokens: &[i32], len: usize, out_row: &mut [f32]) {
+        debug_assert!(len >= 1 && len <= row_tokens.len());
+        debug_assert_eq!(out_row.len(), self.vocab);
+        let mut prefix = 0f64;
+        for t in 0..len {
+            let tok = row_tokens[t];
+            if tok != PAD {
+                prefix += (t as f64 + 1.0) * (tok as f64 + 1.0);
+            }
+        }
+        for (v, slot) in out_row.iter_mut().enumerate() {
+            *slot = (1e-3 * self.base_fp
+                + 1e-2 * afp * ((v % 31) as f64 + 1.0)
+                + 1e-4 * prefix * ((v % 7) as f64 + 1.0))
+                as f32;
         }
     }
 }
@@ -611,6 +693,64 @@ impl ServeBackend for ReferenceBackend {
                     afp,
                     &tokens[row * self.seq..(row + 1) * self.seq],
                     &mut out[row * self.seq * self.vocab..(row + 1) * self.seq * self.vocab],
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    /// True single-position streaming step: only position `lens[b]-1`
+    /// of each live row is computed (a `seq`-fold cost reduction over
+    /// the inherited full-forward-then-slice default). One
+    /// `forward_delay` sleep per step — one "launch" per decode step.
+    fn forward_step(
+        &mut self,
+        groups: &[AdapterGroup],
+        tokens: &[i32],
+        lens: &[usize],
+    ) -> Result<Vec<f32>> {
+        let _t = telem_reference().step.start();
+        if tokens.len() != self.batch * self.seq {
+            bail!(
+                "token matrix has {} elems, expected batch*seq = {}",
+                tokens.len(),
+                self.batch * self.seq
+            );
+        }
+        if lens.len() != self.batch {
+            bail!("lens has {} entries, expected batch = {}", lens.len(), self.batch);
+        }
+        for g in groups {
+            if g.rows.end > self.batch {
+                bail!(
+                    "adapter group '{}' rows {}..{} exceed batch {}",
+                    g.name,
+                    g.rows.start,
+                    g.rows.end,
+                    self.batch
+                );
+            }
+            for row in g.rows.clone() {
+                if !(1..=self.seq).contains(&lens[row]) {
+                    bail!("row {row} prefix length {} out of range 1..={}", lens[row], self.seq);
+                }
+            }
+        }
+        if !self.forward_delay.is_zero() {
+            std::thread::sleep(self.forward_delay);
+        }
+        let fps: Vec<f64> = groups
+            .iter()
+            .map(|g| self.adapter_fp(&g.name, g.generation, &g.weights))
+            .collect();
+        let mut out = vec![0f32; self.batch * self.vocab];
+        for (g, &afp) in groups.iter().zip(&fps) {
+            for row in g.rows.clone() {
+                self.step_row_into(
+                    afp,
+                    &tokens[row * self.seq..(row + 1) * self.seq],
+                    lens[row],
+                    &mut out[row * self.vocab..(row + 1) * self.vocab],
                 );
             }
         }
@@ -803,6 +943,82 @@ mod tests {
             rows: 4..batch + 1,
         };
         assert!(fused_be.forward_fused(&[bad], &tokens).is_err());
+    }
+
+    /// The streaming contract: `forward_step` at prefix length `len`
+    /// must be bit-identical to slicing the fused `[batch, seq,
+    /// vocab]` result at position `len - 1` — for the reference
+    /// override AND for the inherited full-forward-then-slice default.
+    #[test]
+    fn forward_step_bit_identical_to_fused_slice() {
+        let base = named(7, 48);
+        let (batch, seq, vocab) = (5usize, 4usize, 6usize);
+        let w: Vec<Arc<NamedTensors>> =
+            (0..3).map(|i| Arc::new(named(10 + i, 24))).collect();
+        let row_lens = [(0usize, 3usize), (1, 1), (2, 4), (3, 2), (4, 3)];
+        let mut tokens = vec![PAD; batch * seq];
+        for (row, len) in row_lens {
+            for t in 0..len {
+                tokens[row * seq + t] = (row * 7 + t * 3 + 1) as i32;
+            }
+        }
+        let mut lens = [0usize; 5];
+        for (row, len) in row_lens {
+            lens[row] = len;
+        }
+        let groups: Vec<AdapterGroup> = [(0usize, 0usize..2), (1, 2..3), (2, 3..5)]
+            .into_iter()
+            .map(|(i, rows)| AdapterGroup {
+                name: format!("t{i}"),
+                generation: i as u64,
+                weights: w[i].clone(),
+                rows,
+            })
+            .collect();
+
+        let mut be = ReferenceBackend::new(batch, seq, vocab, &base);
+        let fused = be.forward_fused(&groups, &tokens).unwrap();
+        let step = be.forward_step(&groups, &tokens, &lens).unwrap();
+        assert_eq!(step.len(), batch * vocab);
+        for (row, len) in row_lens {
+            let want = &fused[(row * seq + len - 1) * vocab..(row * seq + len) * vocab];
+            let got = &step[row * vocab..(row + 1) * vocab];
+            for (a, b) in got.iter().zip(want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {row}");
+            }
+        }
+
+        // the inherited default (forward_fused + slice) agrees
+        struct NoOverride(ReferenceBackend);
+        impl ServeBackend for NoOverride {
+            fn shape(&self) -> (usize, usize, usize) {
+                self.0.shape()
+            }
+            fn forward(
+                &mut self,
+                name: &str,
+                generation: u64,
+                weights: &Arc<NamedTensors>,
+                tokens: &[i32],
+            ) -> Result<Vec<f32>> {
+                self.0.forward(name, generation, weights, tokens)
+            }
+        }
+        let mut default_be = NoOverride(ReferenceBackend::new(batch, seq, vocab, &base));
+        let default_step = default_be.forward_step(&groups, &tokens, &lens).unwrap();
+        for (a, b) in default_step.iter().zip(&step) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // malformed lens are rejected by both paths
+        assert!(be.forward_step(&groups, &tokens, &lens[..4]).is_err());
+        let mut zero = lens;
+        zero[0] = 0;
+        assert!(be.forward_step(&groups, &tokens, &zero).is_err());
+        assert!(default_be.forward_step(&groups, &tokens, &zero).is_err());
+        let mut over = lens;
+        over[2] = seq + 1;
+        assert!(be.forward_step(&groups, &tokens, &over).is_err());
     }
 
     #[test]

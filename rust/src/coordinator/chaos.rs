@@ -105,6 +105,9 @@ pub struct FaultStats {
     pub panics_injected: AtomicU64,
     /// Calls that slept the injected latency first.
     pub delays_injected: AtomicU64,
+    /// The subset of `forwards` that were single-position decode steps
+    /// (`forward_step`) — the continuous-batching hot path.
+    pub step_forwards: AtomicU64,
 }
 
 impl FaultStats {
@@ -119,6 +122,9 @@ impl FaultStats {
     }
     pub fn delays(&self) -> u64 {
         self.delays_injected.load(Ordering::Acquire)
+    }
+    pub fn steps(&self) -> u64 {
+        self.step_forwards.load(Ordering::Acquire)
     }
 }
 
@@ -144,6 +150,7 @@ struct ChaosTelem {
     errors: crate::telemetry::Counter,
     panics: crate::telemetry::Counter,
     delays: crate::telemetry::Counter,
+    steps: crate::telemetry::Counter,
 }
 
 impl ChaosTelem {
@@ -153,6 +160,7 @@ impl ChaosTelem {
             errors: reg.counter("chaos.errors_injected", &[]),
             panics: reg.counter("chaos.panics_injected", &[]),
             delays: reg.counter("chaos.delays_injected", &[]),
+            steps: reg.counter("chaos.step_forwards", &[]),
         }
     }
 }
@@ -250,6 +258,28 @@ impl ServeBackend for FaultBackend {
         self.inner.forward_fused(groups, tokens)
     }
 
+    // Explicit wrap — NOT the trait default. Inheriting the default
+    // would route a step through this wrapper's own faulted
+    // `forward_fused`, double-counting the call in the schedule and
+    // desynchronizing chaos replay between streamed and one-shot runs.
+    // A step is ONE schedule tick, exactly like a fused forward.
+    fn forward_step(
+        &mut self,
+        groups: &[AdapterGroup],
+        tokens: &[i32],
+        lens: &[usize],
+    ) -> Result<Vec<f32>> {
+        let targeted = self
+            .cfg
+            .target_adapter
+            .as_deref()
+            .map_or(true, |t| groups.iter().any(|g| g.name == t));
+        self.stats.step_forwards.fetch_add(1, Ordering::AcqRel);
+        self.telem.steps.inc();
+        self.fault_for_call(targeted)?;
+        self.inner.forward_step(groups, tokens, lens)
+    }
+
     fn upload_stats(&self) -> UploadStats {
         self.inner.upload_stats()
     }
@@ -333,6 +363,31 @@ mod tests {
         let a = plain.forward("t", 1, &w, &toks).unwrap();
         let b = fb.forward("t", 1, &w, &toks).unwrap();
         assert_eq!(a, b, "no-fault wrapper must not perturb logits");
+    }
+
+    #[test]
+    fn step_forwards_tick_the_same_schedule() {
+        // a decode step is one schedule tick, interleaved with full
+        // forwards on the SAME counter — and tracked separately
+        let cfg = FaultConfig { error_every: Some(2), ..FaultConfig::default() };
+        let mut fb = FaultBackend::new(inner(), cfg);
+        let stats = fb.stats();
+        let w = Arc::new(NamedTensors::new());
+        let toks = vec![1i32; 2 * 4];
+        let lens = vec![2usize; 2];
+        let groups = vec![AdapterGroup {
+            name: "a".to_string(),
+            generation: 0,
+            weights: w.clone(),
+            rows: 0..2,
+        }];
+        assert!(fb.forward("a", 0, &w, &toks).is_ok()); // call 1
+        let e = fb.forward_step(&groups, &toks, &lens).unwrap_err(); // call 2 faults
+        assert!(format!("{e:#}").contains("chaos"), "{e:#}");
+        assert!(fb.forward_step(&groups, &toks, &lens).is_ok()); // call 3
+        assert_eq!(stats.forwards(), 3, "steps and forwards share one schedule");
+        assert_eq!(stats.steps(), 2);
+        assert_eq!(stats.errors(), 1);
     }
 
     #[test]

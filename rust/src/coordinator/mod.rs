@@ -10,8 +10,9 @@
 //! - [`backend`]: serving forward engines (PJRT-owning + offline
 //!   reference), with fused mixed-adapter forwards and
 //!   generation-keyed adapter device caches;
-//! - [`server`]: multi-adapter dynamic-batching inference server
-//!   (one worker, one fused forward per drained batch);
+//! - [`server`]: multi-adapter continuous-batching inference server
+//!   (one worker, an always-running active set advanced one fused
+//!   decode step per iteration; streams join/leave between steps);
 //! - [`pool`]: N server workers sharded over one registry, with
 //!   adapter-affinity routing, work stealing between idle workers,
 //!   async submission, and admission control (bounded parked
@@ -60,5 +61,8 @@ pub use pool::{
 };
 pub use quantize::{quantize_model, quantize_model_planned, QuantizedModel};
 pub use registry::{AdapterRegistry, RegistryStats};
-pub use server::{fused_slot_plan, BatchServer, Reply, ServerConfig, ServerStats, SubmitError};
+pub use server::{
+    fused_slot_plan, greedy_next_token, BatchServer, Reply, ServerConfig, ServerStats,
+    SubmitError,
+};
 pub use trainer::{Finetuner, Pretrainer};

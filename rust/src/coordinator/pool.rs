@@ -63,6 +63,10 @@
 //! drain, so a home that never goes idle cannot starve its overflow.
 //! Transient dead-worker submits reroute under a bounded retry budget
 //! (counted in [`PoolStats::retries`]).
+//! Streams ([`ServerPool::submit_stream`]) ride the same routing,
+//! parking, and stealing as one-shot submits; the returned handle
+//! yields one reply per decode step via [`Pending::next_step`] (or its
+//! `Iterator` impl) and settles on the terminal step.
 //! `Pending::wait` blocks for the reply; `Pending::try_wait` polls;
 //! [`Pending::wait_timeout`] / [`Pending::wait_deadline`] bound the
 //! block. The blocking [`ServerPool::query`] is
@@ -610,9 +614,17 @@ pub struct PoolStats {
     /// bounded parked overflow was full (admission control).
     pub shed_overload: usize,
     /// Requests shed with `ServeError::DeadlineExceeded`, summed over
-    /// every touch point: pool submit, worker submit/drain, and
-    /// parked-overflow pops.
+    /// every touch point: pool submit, worker submit/admission/
+    /// mid-stream step boundaries, and parked-overflow pops.
     pub shed_deadline: usize,
+    /// The subset of `shed_deadline` that hit a stream after it had
+    /// already delivered at least one step, summed across workers.
+    pub shed_midstream: usize,
+    /// Decode-step results delivered, summed across workers (a
+    /// one-shot request contributes 1; an S-step stream up to S).
+    pub steps: usize,
+    /// Requests admitted with more than one decode step, summed.
+    pub stream_requests: usize,
     /// Transient dead-worker reroute retries spent at submit (each
     /// bounded per request by the pool's retry budget).
     pub retries: usize,
@@ -697,13 +709,23 @@ impl Pending {
         &mut self,
         got: Result<Result<Reply, ServeError>, RecvError>,
     ) -> Result<Reply, ServeError> {
-        self.settle();
         match got {
-            // the worker answered — a reply, or the typed failure it
-            // recorded (Rejected / DeadlineExceeded / BackendFault…):
-            // pass it through untouched
-            Ok(r) => r,
+            // the worker delivered a step: the handle settles only on
+            // the stream's TERMINAL message (`last` step or a typed
+            // failure) — a one-shot request's single reply has
+            // `last == true`, so its accounting is unchanged
+            Ok(Ok(r)) => {
+                if r.last {
+                    self.settle();
+                }
+                Ok(r)
+            }
+            Ok(Err(e)) => {
+                self.settle();
+                Err(e)
+            }
             Err(_) if self.parked => {
+                self.settle();
                 // a parked request's reply sender can be dropped by
                 // whichever worker pulled it — a dying thief, not
                 // necessarily the (possibly healthy) home this handle
@@ -720,6 +742,7 @@ impl Pending {
                 })
             }
             Err(_) => {
+                self.settle();
                 // the worker dropped our reply sender without
                 // answering: its thread died (panicking backend) —
                 // record the death so routing stops using it. The
@@ -788,6 +811,32 @@ impl Pending {
     /// already in the past degenerates to a single non-blocking poll).
     pub fn wait_deadline(&mut self, deadline: Instant) -> Option<Result<Reply, ServeError>> {
         self.wait_timeout(deadline.saturating_duration_since(Instant::now()))
+    }
+
+    /// Block for the stream's next decode step: `Some(Ok(reply))` per
+    /// step ([`Reply::last`] marks the final one), `Some(Err(..))` on a
+    /// terminal failure (deadline shed mid-stream, backend fault,
+    /// worker death), and `None` once the stream has terminated (the
+    /// last/error reply was already returned). For a one-shot submit
+    /// this yields exactly one `Some`. [`Pending`] also implements
+    /// `Iterator` over the same sequence, so
+    /// `for step in pending { .. }` streams the tokens.
+    pub fn next_step(&mut self) -> Option<Result<Reply, ServeError>> {
+        if self.settled {
+            return None;
+        }
+        let got = self.rx.recv();
+        Some(self.resolve(got))
+    }
+}
+
+/// Token streaming: each `next()` blocks for one decode step, ending
+/// after the terminal reply (see [`Pending::next_step`]).
+impl Iterator for Pending {
+    type Item = Result<Reply, ServeError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_step()
     }
 }
 
@@ -1043,6 +1092,51 @@ impl ServerPool {
         tokens: Vec<i32>,
         deadline: Option<Instant>,
     ) -> Result<Pending, ServeError> {
+        self.submit_inner(adapter, tokens, 1, deadline)
+    }
+
+    /// Submit an S-step greedy decode stream: the request rides the
+    /// same routing (affinity, parking, stealing, aging) as a one-shot
+    /// submit, joins its worker's always-running batch, and the
+    /// returned [`Pending`] yields one [`Reply`] per decode step via
+    /// [`Pending::next_step`] / its `Iterator` impl (each step's
+    /// logits are computed at the stream's current last position; the
+    /// worker extends the prompt greedily between steps). `steps == 1`
+    /// is exactly [`Self::submit_async`]. Step counts outside
+    /// `1..=IRQLORA_STREAM_MAX_STEPS`, or prompts too long to extend
+    /// (`tokens.len() + steps - 1 > seq`), are `Rejected` at submit.
+    pub fn submit_stream(
+        &self,
+        adapter: &str,
+        tokens: Vec<i32>,
+        steps: usize,
+    ) -> Result<Pending, ServeError> {
+        self.submit_inner(adapter, tokens, steps, None)
+    }
+
+    /// [`Self::submit_stream`] with an optional deadline honored
+    /// BETWEEN decode steps: a stream whose deadline passes mid-flight
+    /// is shed with `DeadlineExceeded` at its next step boundary
+    /// (counted in [`PoolStats::shed_deadline`] and, if it had already
+    /// streamed a step, `shed_midstream`) without disturbing
+    /// co-batched tenants.
+    pub fn submit_stream_with_deadline(
+        &self,
+        adapter: &str,
+        tokens: Vec<i32>,
+        steps: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Pending, ServeError> {
+        self.submit_inner(adapter, tokens, steps, deadline)
+    }
+
+    fn submit_inner(
+        &self,
+        adapter: &str,
+        tokens: Vec<i32>,
+        steps: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Pending, ServeError> {
         // shed already-dead work before spending any routing effort on
         // it (the submit-time deadline touch point)
         if deadline.map_or(false, |d| Instant::now() >= d) {
@@ -1072,13 +1166,18 @@ impl ServerPool {
                 if depth >= self.spill_depth {
                     // same submit-time validation (and rejected
                     // accounting) a direct submit would get
-                    w.server.check_request(adapter, &tokens)?;
-                    let (reply_tx, reply_rx) = sync_channel(1);
+                    w.server.check_stream(adapter, &tokens, steps)?;
+                    // one reply slot per step so whichever worker
+                    // eventually pulls this stream never blocks on a
+                    // lazy harvester (same capacity a direct stream
+                    // submit gets)
+                    let (reply_tx, reply_rx) = sync_channel(steps.max(1));
                     let parked = bus.try_park(
                         pi,
                         Request {
                             adapter: adapter.to_string(),
                             tokens,
+                            steps,
                             enqueued: Instant::now(),
                             deadline,
                             reply: reply_tx,
@@ -1124,7 +1223,7 @@ impl ServerPool {
                         settled: false,
                     });
                 }
-                match w.server.try_submit_at(adapter, tokens, deadline) {
+                match w.server.try_submit_stream_at(adapter, tokens, steps, deadline) {
                     Ok(rx) => {
                         if rerouted {
                             self.routing.lock().unwrap().reroutes += 1;
@@ -1158,7 +1257,7 @@ impl ServerPool {
                 return Err(ServeError::Shutdown);
             };
             let w = &self.workers[idx];
-            match w.server.try_submit_at(adapter, tokens, deadline) {
+            match w.server.try_submit_stream_at(adapter, tokens, steps, deadline) {
                 Ok(rx) => {
                     // one off-home cause per request: a dead home is
                     // the root cause even if the replacement was also
@@ -1274,6 +1373,9 @@ impl ServerPool {
             out.upload_hits += server.upload.hits;
             out.upload_misses += server.upload.misses;
             out.rejected += server.rejected;
+            out.shed_midstream += server.shed_midstream;
+            out.steps += server.steps;
+            out.stream_requests += server.stream_requests;
             shed_deadline += server.shed_deadline;
             for (name, a) in &server.per_adapter {
                 let e = out.per_adapter.entry(name.clone()).or_default();
@@ -1539,6 +1641,7 @@ mod tests {
             Request {
                 adapter: adapter.to_string(),
                 tokens: vec![1, 2],
+                steps: 1,
                 enqueued: Instant::now() - aged_by,
                 deadline,
                 reply: tx,
@@ -1699,6 +1802,42 @@ mod tests {
         let s = pool.stats();
         assert_eq!(s.shed_deadline, 1, "{s:?}");
         assert_eq!(s.requests, 1, "{s:?}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn stream_steps_match_one_shot_oracle() {
+        let registry = Arc::new(AdapterRegistry::with_capacity(base(11), (1.0, 1.0), 4));
+        registry.register("a", adapter(110)).unwrap();
+        let pool = reference_pool(2, registry);
+        let steps = 3usize;
+        let h = pool.submit_stream("a", vec![1, 2], steps).unwrap();
+        let mut prefix = vec![1i32, 2];
+        let mut got_steps = 0usize;
+        for (i, got) in h.enumerate() {
+            let r = got.unwrap();
+            assert_eq!(r.step, i + 1);
+            assert_eq!(r.last, i + 1 == steps);
+            // each streamed step must equal the one-shot reply for the
+            // stream's prefix at that step (the replay oracle)
+            let oracle = pool.query("a", prefix.clone()).unwrap();
+            assert_eq!(r.logits, oracle.logits, "step {} diverged", i + 1);
+            prefix.push(super::super::server::greedy_next_token(&r.logits));
+            got_steps += 1;
+        }
+        assert_eq!(got_steps, steps, "iterator must end after the last step");
+
+        let s = pool.stats();
+        assert_eq!(s.stream_requests, 1, "{s:?}");
+        // the stream delivered `steps` results; each oracle query one
+        assert_eq!(s.steps, 2 * steps, "{s:?}");
+        assert_eq!(s.requests, steps + 1, "{s:?}");
+
+        // stream validation: no room for the extensions (seq = 8),
+        // zero steps, absurd step counts — all Rejected at submit
+        assert!(pool.submit_stream("a", vec![1; 8], 2).is_err());
+        assert!(pool.submit_stream("a", vec![1], 0).is_err());
+        assert!(pool.submit_stream("a", vec![1], 1 << 20).is_err());
         pool.shutdown();
     }
 

@@ -1,16 +1,25 @@
-//! Multi-adapter batched inference server (the serving-path L3
-//! component).
+//! Multi-adapter continuous-batching inference server (the
+//! serving-path L3 component).
 //!
-//! Requests (adapter id + token prompt) arrive on a channel; a worker
-//! thread drains up to `batch` of them (waiting at most `max_wait`
-//! after the first), slot-packs the drained set into ONE padded
-//! fixed-shape **fused** forward call — even when the batch spans
-//! several adapters ([`fused_slot_plan`] gives each adapter a
-//! contiguous row span, `ServeBackend::forward_fused` runs it) — and
-//! replies with the next-token logits per request. The pre-fusion
+//! Requests (adapter id + token prompt + decode step count) arrive on
+//! a channel; a worker thread keeps an **always-running active set**
+//! of up to `batch` in-flight streams and advances ALL of them one
+//! decode step per loop iteration: the active rows are slot-packed by
+//! adapter ([`fused_slot_plan`]) into ONE padded fixed-shape
+//! `ServeBackend::forward_step` call, each row's next-token logits are
+//! streamed to its caller as an incremental [`Reply`] (`step`/`last`),
+//! and non-final rows are extended by one greedy token
+//! ([`greedy_next_token`]). Requests JOIN the running batch whenever a
+//! slot is free (no drain barrier — time-to-first-token is one step
+//! away, not a whole batch) and LEAVE it independently when their
+//! steps are done, their deadline passes mid-stream, or their caller
+//! drops the stream. A one-shot request is simply a 1-step stream, so
+//! the pre-streaming API and every PR 4–6 invariant (affinity routing,
+//! stealing, aging, shedding) ride the same loop. The pre-fusion
 //! one-forward-per-adapter-group path is kept in-tree
 //! ([`ServerConfig::serial`]) as the bit-identity oracle the tests and
-//! the paired `[per-group serial]` bench rows compare against.
+//! the paired `[per-group serial]` bench rows compare against — it
+//! advances step-wise too, but through plain `forward` calls.
 //!
 //! One worker serves many adapters over one *shared* base: the
 //! expensive artifact (the dequantized ICQ-quantized base) exists once
@@ -81,6 +90,15 @@ pub(crate) struct ServeTelem {
     pub(crate) fused_adapters: telemetry::Counter,
     pub(crate) rejected: telemetry::Counter,
     pub(crate) shed_deadline: telemetry::Counter,
+    /// Streamed decode-step results delivered (`serve.steps`).
+    pub(crate) steps: telemetry::Counter,
+    /// Requests admitted with more than one decode step
+    /// (`serve.stream_requests`).
+    pub(crate) stream_requests: telemetry::Counter,
+    /// Deadline sheds that hit a stream AFTER it had delivered at
+    /// least one step (`serve.shed_midstream`; also counted in
+    /// `serve.shed_deadline`).
+    pub(crate) shed_midstream: telemetry::Counter,
     /// Deltas of the backend's monotonic [`UploadStats`], mirrored
     /// each time a worker snapshots them into `ServerStats.upload`.
     pub(crate) upload_hits: telemetry::Counter,
@@ -98,6 +116,9 @@ impl ServeTelem {
             fused_adapters: reg.counter("serve.fused_adapters", &[]),
             rejected: reg.counter("serve.rejected", &[]),
             shed_deadline: reg.counter("serve.shed_deadline", &[]),
+            steps: reg.counter("serve.steps", &[]),
+            stream_requests: reg.counter("serve.stream_requests", &[]),
+            shed_midstream: reg.counter("serve.shed_midstream", &[]),
             upload_hits: reg.counter("serve.upload", &[("event", "hit")]),
             upload_misses: reg.counter("serve.upload", &[("event", "miss")]),
         }
@@ -117,20 +138,30 @@ impl ServeTelem {
     }
 }
 
-/// One inference reply.
+/// One inference reply — one decode step of a stream. A one-shot
+/// request is a 1-step stream, so its single reply has `step == 1`,
+/// `last == true`.
 #[derive(Clone, Debug)]
 pub struct Reply {
     /// Adapter that served the request.
     pub adapter: String,
-    /// Next-token logits at the last prompt position.
+    /// Next-token logits at the stream's current last position (the
+    /// prompt's for step 1; after each greedy extension thereafter).
     pub logits: Vec<f32>,
-    /// Time spent queued before its batch launched.
+    /// Time spent queued before the stream's FIRST step launched
+    /// (identical across a stream's replies — the TTFT queue wait).
     pub queued: Duration,
-    /// Total request latency.
+    /// Latency from submit to this step's delivery. For step 1 this is
+    /// the time-to-first-token.
     pub latency: Duration,
-    /// How many requests shared the forward call (fused batches may
-    /// span several adapters; serial-oracle batches are same-adapter).
+    /// How many requests shared the forward call that computed this
+    /// step (fused steps may span several adapters; serial-oracle
+    /// calls are same-adapter).
     pub batch_size: usize,
+    /// 1-based step index within the stream.
+    pub step: usize,
+    /// `true` on the stream's final reply.
+    pub last: bool,
 }
 
 /// One queued request. `pub(crate)` so the pool's overflow/steal layer
@@ -138,10 +169,17 @@ pub struct Reply {
 /// through its feeder.
 pub(crate) struct Request {
     pub(crate) adapter: String,
+    /// The prompt at submit; the worker appends one greedy token per
+    /// delivered non-final step while the stream is active.
     pub(crate) tokens: Vec<i32>,
+    /// Decode steps to serve (1 = classic one-shot). Validated at
+    /// submit: `tokens.len() + steps - 1 <= seq` and
+    /// `steps <= IRQLORA_STREAM_MAX_STEPS`.
+    pub(crate) steps: usize,
     pub(crate) enqueued: Instant,
     /// Shed (with `ServeError::DeadlineExceeded`) instead of served if
-    /// still queued past this instant. `None`: wait forever.
+    /// still queued — or mid-stream — past this instant. `None`: wait
+    /// forever.
     pub(crate) deadline: Option<Instant>,
     pub(crate) reply: SyncSender<Result<Reply, ServeError>>,
 }
@@ -158,6 +196,47 @@ impl Request {
             .reply
             .send(Err(ServeError::DeadlineExceeded { waited: self.enqueued.elapsed() }));
     }
+}
+
+/// One in-flight stream in the worker's active set.
+struct ActiveRow {
+    req: Request,
+    /// Steps already delivered.
+    done: usize,
+    /// When the stream's first step launched (fixes `Reply::queued`
+    /// for every step of the stream).
+    first_launch: Option<Instant>,
+    /// Marked when the stream must leave the active set (steps
+    /// complete, errored, or caller gone).
+    finished: bool,
+}
+
+impl ActiveRow {
+    fn admit(req: Request) -> ActiveRow {
+        ActiveRow { req, done: 0, first_launch: None, finished: false }
+    }
+
+    /// Current live prefix length (prompt + greedy extensions so far).
+    fn len(&self) -> usize {
+        self.req.tokens.len()
+    }
+}
+
+/// The decode rule every streaming path and every oracle shares:
+/// greedy argmax over one step's logits, first maximum winning ties,
+/// mapped to the 1-BASED token id `argmax + 1` (so a generated token
+/// can never collide with `PAD == 0`). Deterministic given bit-exact
+/// logits — which is exactly what the backend contract guarantees —
+/// so a streamed prefix can be replayed against the one-shot oracle.
+pub fn greedy_next_token(logits: &[f32]) -> i32 {
+    debug_assert!(!logits.is_empty());
+    let mut best = 0usize;
+    for (v, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = v;
+        }
+    }
+    (best + 1) as i32
 }
 
 /// Which parked requests a [`Feeder`] poll may return.
@@ -249,10 +328,20 @@ pub struct ServerStats {
     /// adapter); they never occupied a batch slot.
     pub rejected: usize,
     /// Requests shed with `DeadlineExceeded` by this worker — expired
-    /// at submit time or in the drain before their forward launched.
-    /// (Requests shed while parked are counted by the pool's overflow
-    /// layer, not here.) Shed work never runs.
+    /// at submit time, in the admission path before their first step
+    /// launched, or mid-stream between steps. (Requests shed while
+    /// parked are counted by the pool's overflow layer, not here.)
+    /// Shed work never runs another step.
     pub shed_deadline: usize,
+    /// The subset of `shed_deadline` that hit a stream AFTER it had
+    /// delivered at least one step (the mid-stream sheds).
+    pub shed_midstream: usize,
+    /// Decode-step results delivered: a one-shot request contributes
+    /// 1, an S-step stream up to S. `steps / seconds` is the worker's
+    /// tokens/sec.
+    pub steps: usize,
+    /// Requests admitted with more than one decode step.
+    pub stream_requests: usize,
     /// Backend adapter-cache counters (device-buffer uploads for PJRT,
     /// fingerprint recomputes for the reference backend), snapshotted
     /// after each forward.
@@ -432,84 +521,118 @@ impl BatchServer {
             };
             let (batch, _, _) = backend.shape();
             let mut tok_scratch: Vec<i32> = Vec::new();
+            let mut lens_scratch: Vec<usize> = Vec::new();
             let mut feeder = feeder;
             let mut idle_poll = IDLE_POLL_MIN;
+            // the always-running batch: in-flight streams advance one
+            // decode step per loop iteration; arrivals join free slots
+            // between steps, finished/shed/abandoned streams leave
+            let mut active: Vec<ActiveRow> = Vec::new();
 
             'serve: loop {
-                // acquire the first request(s): the channel, else
-                // parked/stolen work from the feeder, else block. Once
-                // the channel disconnects the worker keeps serving
-                // whatever the feeder still holds (shutdown drains the
-                // overflow, including queues stranded by dead
-                // siblings), then exits.
                 let mut pending: Vec<Request> = Vec::new();
-                let mut disconnected = false;
-                // aged parked requests FIRST: promoted ahead of
-                // whatever fresh traffic sits in the channel, so a
-                // home that never drains its channel backlog cannot
-                // starve its overflow (`IRQLORA_PARK_AGE_MS`)
-                if let Some(f) = feeder.as_mut() {
-                    pending.extend(f(FeedPass::Aged, batch));
-                }
-                while pending.is_empty() {
-                    match rx.try_recv() {
-                        Ok(r) => {
-                            pending.push(r);
-                            break;
-                        }
-                        Err(TryRecvError::Empty) => {}
-                        Err(TryRecvError::Disconnected) => disconnected = true,
-                    }
+                if active.is_empty() {
+                    // idle: acquire the first request(s) exactly as the
+                    // pre-streaming drain did — the channel, else
+                    // parked/stolen work from the feeder, else block.
+                    // Once the channel disconnects the worker keeps
+                    // serving whatever the feeder still holds (shutdown
+                    // drains the overflow, including queues stranded by
+                    // dead siblings), then exits.
+                    let mut disconnected = false;
+                    // aged parked requests FIRST: promoted ahead of
+                    // whatever fresh traffic sits in the channel, so a
+                    // home that never drains its channel backlog cannot
+                    // starve its overflow (`IRQLORA_PARK_AGE_MS`)
                     if let Some(f) = feeder.as_mut() {
-                        pending.extend(f(FeedPass::Any, batch));
-                        if !pending.is_empty() {
-                            break;
-                        }
+                        pending.extend(f(FeedPass::Aged, batch));
                     }
-                    if disconnected {
-                        break 'serve;
-                    }
-                    if feeder.is_some() {
-                        match rx.recv_timeout(idle_poll) {
-                            Ok(r) => pending.push(r),
-                            Err(RecvTimeoutError::Timeout) => {
-                                idle_poll = (idle_poll * 2).min(IDLE_POLL_MAX);
+                    while pending.is_empty() {
+                        match rx.try_recv() {
+                            Ok(r) => {
+                                pending.push(r);
+                                break;
                             }
-                            Err(RecvTimeoutError::Disconnected) => disconnected = true,
+                            Err(TryRecvError::Empty) => {}
+                            Err(TryRecvError::Disconnected) => disconnected = true,
                         }
-                    } else {
-                        match rx.recv() {
+                        if let Some(f) = feeder.as_mut() {
+                            pending.extend(f(FeedPass::Any, batch));
+                            if !pending.is_empty() {
+                                break;
+                            }
+                        }
+                        if disconnected {
+                            break 'serve;
+                        }
+                        if feeder.is_some() {
+                            match rx.recv_timeout(idle_poll) {
+                                Ok(r) => pending.push(r),
+                                Err(RecvTimeoutError::Timeout) => {
+                                    idle_poll = (idle_poll * 2).min(IDLE_POLL_MAX);
+                                }
+                                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+                            }
+                        } else {
+                            match rx.recv() {
+                                Ok(r) => pending.push(r),
+                                Err(_) => break 'serve,
+                            }
+                        }
+                    }
+                    // got work: poll eagerly again while traffic flows
+                    idle_poll = IDLE_POLL_MIN;
+
+                    // fill the batch from the channel within the window
+                    // — ONLY when starting fresh; a running batch never
+                    // blocks on arrivals (that would stall every
+                    // in-flight stream's next token)
+                    let deadline = Instant::now() + cfg.max_wait;
+                    while pending.len() < batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
                             Ok(r) => pending.push(r),
-                            Err(_) => break 'serve,
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                    // top spare slots from the parked overflow (own
+                    // queue first; a sibling's if ours is empty)
+                    if pending.len() < batch {
+                        if let Some(f) = feeder.as_mut() {
+                            pending.extend(f(FeedPass::Any, batch - pending.len()));
+                        }
+                    }
+                } else if active.len() < batch {
+                    // the batch is running: top spare slots WITHOUT
+                    // blocking — aged parked promotion first, then the
+                    // channel, then any parked/stolen work. This is the
+                    // continuous-batching join point: an arrival waits
+                    // at most one decode step, not a whole batch drain.
+                    let free = batch - active.len();
+                    if let Some(f) = feeder.as_mut() {
+                        pending.extend(f(FeedPass::Aged, free));
+                    }
+                    while pending.len() < free {
+                        match rx.try_recv() {
+                            Ok(r) => pending.push(r),
+                            // Disconnected: keep stepping the active
+                            // streams; the idle path handles exit once
+                            // they drain
+                            Err(_) => break,
+                        }
+                    }
+                    if pending.len() < free {
+                        if let Some(f) = feeder.as_mut() {
+                            pending.extend(f(FeedPass::Any, free - pending.len()));
                         }
                     }
                 }
-                // got work: poll eagerly again while traffic flows
-                idle_poll = IDLE_POLL_MIN;
 
-                // fill the batch from the channel within the window
-                let deadline = Instant::now() + cfg.max_wait;
-                while pending.len() < batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(r) => pending.push(r),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-                // top spare slots from the parked overflow (own queue
-                // first; a sibling's if ours is empty) — spare batch
-                // capacity anywhere in the pool serves parked work
-                if pending.len() < batch {
-                    if let Some(f) = feeder.as_mut() {
-                        pending.extend(f(FeedPass::Any, batch - pending.len()));
-                    }
-                }
-
-                // deadline shedding at the drain touch point: a
+                // deadline shedding at the admission touch point: a
                 // request whose deadline passed while queued is
                 // answered with `DeadlineExceeded` and never occupies
                 // a batch slot — dead work is shed, not executed
@@ -523,49 +646,62 @@ impl BatchServer {
                         r.shed_expired();
                     }
                     pending = live;
-                    if pending.is_empty() {
+                }
+                for r in pending {
+                    active.push(ActiveRow::admit(r));
+                }
+                if active.is_empty() {
+                    continue 'serve;
+                }
+
+                // mid-stream deadline shedding: a stream whose
+                // deadline passes BETWEEN steps leaves the batch with
+                // `DeadlineExceeded` before another step runs —
+                // co-batched tenants keep streaming, mirroring the
+                // fused-error isolation contract
+                let now = Instant::now();
+                if active.iter().any(|a| a.req.expired(now)) {
+                    let (live, dead): (Vec<ActiveRow>, Vec<ActiveRow>) =
+                        active.drain(..).partition(|a| !a.req.expired(now));
+                    active = live;
+                    let mid = dead.iter().filter(|a| a.done > 0).count();
+                    {
+                        let mut s = stats_w.lock().unwrap();
+                        s.shed_deadline += dead.len();
+                        s.shed_midstream += mid;
+                    }
+                    telem_w.shed_deadline.add(dead.len() as u64);
+                    telem_w.shed_midstream.add(mid as u64);
+                    for a in dead {
+                        a.req.shed_expired();
+                    }
+                    if active.is_empty() {
                         continue 'serve;
                     }
                 }
 
-                // slot-pack by adapter, preserving first-arrival group
-                // order and submit order within each adapter
-                let ids: Vec<&str> = pending.iter().map(|r| r.adapter.as_str()).collect();
-                let plan: Vec<(String, Vec<usize>)> = fused_slot_plan(&ids)
-                    .into_iter()
-                    .map(|(a, idx)| (a.to_string(), idx))
-                    .collect();
-                let mut slots: Vec<Option<Request>> =
-                    pending.into_iter().map(Some).collect();
-                let groups: Vec<(String, Vec<Request>)> = plan
-                    .into_iter()
-                    .map(|(a, idx)| {
-                        (a, idx.into_iter().map(|i| slots[i].take().unwrap()).collect())
-                    })
-                    .collect();
-
+                // one decode step for the whole active set
                 if cfg.fused {
-                    run_fused(
+                    run_step_fused(
                         backend.as_mut(),
                         &registry_w,
                         &stats_w,
                         &telem_w,
-                        groups,
+                        &mut active,
                         &mut tok_scratch,
+                        &mut lens_scratch,
                     );
                 } else {
-                    for (adapter, group) in groups {
-                        run_group(
-                            backend.as_mut(),
-                            &registry_w,
-                            &stats_w,
-                            &telem_w,
-                            &adapter,
-                            group,
-                            &mut tok_scratch,
-                        );
-                    }
+                    run_step_serial(
+                        backend.as_mut(),
+                        &registry_w,
+                        &stats_w,
+                        &telem_w,
+                        &mut active,
+                        &mut tok_scratch,
+                    );
                 }
+                active.retain(|a| !a.finished);
             }
         });
 
@@ -624,6 +760,41 @@ impl BatchServer {
         Ok(())
     }
 
+    /// Stream-specific validation on top of [`Self::check_request`]:
+    /// the step count must be positive, within
+    /// `IRQLORA_STREAM_MAX_STEPS`, and the prompt must leave room for
+    /// every greedy extension (`tokens.len() + steps - 1 <= seq` —
+    /// step i runs on a prefix of `tokens.len() + i - 1` tokens).
+    /// Failures are counted in [`ServerStats::rejected`], exactly like
+    /// a rejected one-shot submit.
+    pub(crate) fn check_stream(
+        &self,
+        adapter: &str,
+        tokens: &[i32],
+        steps: usize,
+    ) -> Result<(), ServeError> {
+        self.check_request(adapter, tokens)?;
+        let max_steps = crate::util::env::stream_max_steps();
+        if steps == 0 || steps > max_steps {
+            self.stats.lock().unwrap().rejected += 1;
+            self.telem.rejected.inc();
+            return Err(ServeError::Rejected(format!(
+                "stream steps {steps} out of range 1..={max_steps} (IRQLORA_STREAM_MAX_STEPS)"
+            )));
+        }
+        if tokens.len() + steps - 1 > self.seq {
+            self.stats.lock().unwrap().rejected += 1;
+            self.telem.rejected.inc();
+            return Err(ServeError::Rejected(format!(
+                "prompt length {} + {steps} decode steps overruns seq {} \
+                 (need prompt + steps - 1 <= seq)",
+                tokens.len(),
+                self.seq
+            )));
+        }
+        Ok(())
+    }
+
     /// Submit a prompt for `adapter`; returns a receiver for the
     /// reply. Empty / over-length prompts and unknown adapters are
     /// rejected here, before they can occupy a batch slot.
@@ -663,7 +834,41 @@ impl BatchServer {
         tokens: Vec<i32>,
         deadline: Option<Instant>,
     ) -> Result<Receiver<Result<Reply, ServeError>>, SubmitError> {
-        if let Err(e) = self.check_request(adapter, &tokens) {
+        self.try_submit_stream_at(adapter, tokens, 1, deadline)
+    }
+
+    /// Submit an S-step greedy decode stream: the stream joins the
+    /// worker's always-running batch and each decode step arrives on
+    /// the returned receiver as an incremental [`Reply`] ([`Reply::step`]
+    /// numbers it, [`Reply::last`] marks the final one). Between steps
+    /// the worker extends the prompt with [`greedy_next_token`] of the
+    /// step's logits. `steps == 1` is exactly [`Self::submit`].
+    pub fn submit_stream(
+        &self,
+        adapter: &str,
+        tokens: Vec<i32>,
+        steps: usize,
+    ) -> Result<Receiver<Result<Reply, ServeError>>> {
+        match self.try_submit_stream_at(adapter, tokens, steps, None) {
+            Ok(rx) => Ok(rx),
+            Err(SubmitError::Rejected(e)) => Err(e.into()),
+            Err(SubmitError::WorkerGone(_)) => Err(anyhow!("server worker exited")),
+        }
+    }
+
+    /// [`Self::submit_stream`] with the routing-layer failure split of
+    /// [`Self::try_submit_at`], plus an optional deadline that is
+    /// honored BETWEEN decode steps: a stream whose deadline passes
+    /// mid-flight is shed with `DeadlineExceeded` on its next step
+    /// boundary without disturbing co-batched streams.
+    pub fn try_submit_stream_at(
+        &self,
+        adapter: &str,
+        tokens: Vec<i32>,
+        steps: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<Reply, ServeError>>, SubmitError> {
+        if let Err(e) = self.check_stream(adapter, &tokens, steps) {
             return Err(SubmitError::Rejected(e));
         }
         if deadline.map_or(false, |d| Instant::now() >= d) {
@@ -676,10 +881,14 @@ impl BatchServer {
         let Some(tx) = self.tx.as_ref() else {
             return Err(SubmitError::WorkerGone(tokens));
         };
-        let (reply_tx, reply_rx) = sync_channel(1);
+        // one slot per step: the worker's step sends never block even
+        // if the caller harvests lazily (at most `steps` messages —
+        // j successful steps then at most one terminal error)
+        let (reply_tx, reply_rx) = sync_channel(steps);
         match tx.send(Request {
             adapter: adapter.to_string(),
             tokens,
+            steps,
             enqueued: Instant::now(),
             deadline,
             reply: reply_tx,
@@ -722,89 +931,138 @@ impl Drop for BatchServer {
     }
 }
 
-/// Slice one request's next-token logits out of a forward result and
-/// deliver its reply (or the slicing error). `row` is the request's
-/// absolute row within the call that produced `logits`; `bsz` is how
-/// many requests shared that call. One implementation for the fused,
-/// fallback, and serial-oracle paths, so the three can never drift.
-fn deliver_reply(
+/// Count a group's first-step rows (a stream is a `request` once, at
+/// its first step — never recounted on later steps) and which of those
+/// are multi-step streams.
+fn fresh_rows(active: &[ActiveRow], idx: &[usize]) -> (usize, usize) {
+    let fresh = idx.iter().filter(|&&i| active[i].done == 0).count();
+    let streams = idx
+        .iter()
+        .filter(|&&i| active[i].done == 0 && active[i].req.steps > 1)
+        .count();
+    (fresh, streams)
+}
+
+/// Deliver one step's logits (`logits[off..off + vocab]`) to a stream
+/// and advance it: the step is counted, the greedy next token is
+/// appended for the following step, and the row retires when the
+/// stream completes, the slice is short (backend shape fault), or the
+/// caller dropped its receiver (computing further steps would be
+/// wasted work). `bsz` is how many rows shared the call that produced
+/// `logits`. One implementation for the fused, fallback, and
+/// serial-oracle paths, so the three can never drift.
+#[allow(clippy::too_many_arguments)]
+fn advance_row(
+    a: &mut ActiveRow,
     logits: &[f32],
-    seq: usize,
+    off: usize,
     vocab: usize,
-    row: usize,
     adapter: &str,
     bsz: usize,
     launch: Instant,
-    r: Request,
+    stats: &Mutex<ServerStats>,
+    telem: &ServeTelem,
 ) {
-    let off = (row * seq + r.tokens.len() - 1) * vocab;
-    let resp = if off + vocab <= logits.len() {
-        Ok(Reply {
-            adapter: adapter.to_string(),
-            logits: logits[off..off + vocab].to_vec(),
-            queued: launch - r.enqueued,
-            latency: r.enqueued.elapsed(),
-            batch_size: bsz,
-        })
-    } else {
-        Err(ServeError::BackendFault(format!(
+    let first_launch = *a.first_launch.get_or_insert(launch);
+    if off + vocab > logits.len() {
+        let _ = a.req.reply.send(Err(ServeError::BackendFault(format!(
             "backend returned {} logits, need at least {}",
             logits.len(),
             off + vocab
-        )))
-    };
-    let _ = r.reply.send(resp);
+        ))));
+        a.finished = true;
+        return;
+    }
+    let slice = &logits[off..off + vocab];
+    let step = a.done + 1;
+    let last = step == a.req.steps;
+    let sent = a
+        .req
+        .reply
+        .send(Ok(Reply {
+            adapter: adapter.to_string(),
+            logits: slice.to_vec(),
+            queued: first_launch - a.req.enqueued,
+            latency: a.req.enqueued.elapsed(),
+            batch_size: bsz,
+            step,
+            last,
+        }))
+        .is_ok();
+    a.done = step;
+    stats.lock().unwrap().steps += 1;
+    telem.steps.inc();
+    if last || !sent {
+        a.finished = true;
+    } else {
+        a.req.tokens.push(greedy_next_token(slice));
+    }
 }
 
-/// Serve one drained batch — possibly spanning several adapters —
-/// with a SINGLE fused forward: each adapter group gets a contiguous
-/// row span in one padded token matrix, and every request's reply is
-/// sliced from the shared logits at its absolute row. A group whose
-/// merge fails gets its error without poisoning co-batched groups;
-/// the forward itself failing fails every request that rode in it.
-fn run_fused(
+/// Advance the whole active set by ONE decode step with a SINGLE
+/// fused [`ServeBackend::forward_step`]: each adapter group gets a
+/// contiguous row span in one padded token matrix (each row holding
+/// that stream's CURRENT prefix — prompt plus the greedy tokens of
+/// earlier steps), and every stream's step reply is sliced from the
+/// `[batch, vocab]` result at its absolute row. A group whose merge
+/// fails errors out (retiring its streams) without poisoning
+/// co-batched groups; the step itself failing falls back per-group.
+fn run_step_fused(
     backend: &mut dyn ServeBackend,
     registry: &AdapterRegistry,
     stats: &Mutex<ServerStats>,
     telem: &ServeTelem,
-    groups: Vec<(String, Vec<Request>)>,
+    active: &mut [ActiveRow],
     tok_scratch: &mut Vec<i32>,
+    lens_scratch: &mut Vec<usize>,
 ) {
     let (batch, seq, vocab) = backend.shape();
     let launch = Instant::now();
 
+    // slot-pack by adapter, preserving first-arrival group order and
+    // admission order within each adapter
+    let ids: Vec<&str> = active.iter().map(|a| a.req.adapter.as_str()).collect();
+    let plan: Vec<(String, Vec<usize>)> = fused_slot_plan(&ids)
+        .into_iter()
+        .map(|(a, idx)| (a.to_string(), idx))
+        .collect();
+
     // resolve merged weights and assign row spans
-    let mut metas: Vec<AdapterGroup> = Vec::with_capacity(groups.len());
-    let mut reqs: Vec<Vec<Request>> = Vec::with_capacity(groups.len());
+    let mut metas: Vec<AdapterGroup> = Vec::with_capacity(plan.len());
+    let mut members: Vec<Vec<usize>> = Vec::with_capacity(plan.len());
     let mut row = 0usize;
-    for (adapter, group) in groups {
+    for (adapter, idx) in plan {
         match registry.merged_for_serving(&adapter) {
             Ok((generation, weights)) => {
-                let rows = row..row + group.len();
+                let rows = row..row + idx.len();
                 row = rows.end;
                 metas.push(AdapterGroup { name: adapter, generation, weights, rows });
-                reqs.push(group);
+                members.push(idx);
             }
             Err(e) => {
                 // merge failure: this group errors (typed — `Rejected`
                 // for an adapter evicted since submit, `BackendFault`
-                // otherwise), the rest still fuse; counted as one
-                // attempted batch, mirroring what the serial oracle
-                // path records for the same stream
+                // otherwise) and its streams retire, the rest still
+                // fuse; counted as one attempted batch, with only
+                // first-step rows counted as requests
+                let (fresh, streams) = fresh_rows(active, &idx);
                 let mut s = stats.lock().unwrap();
-                s.requests += group.len();
+                s.requests += fresh;
+                s.stream_requests += streams;
                 s.batches += 1;
-                s.batch_occupancy_sum += group.len();
+                s.batch_occupancy_sum += idx.len();
                 let a = s.per_adapter.entry(adapter.clone()).or_default();
-                a.requests += group.len();
+                a.requests += fresh;
                 a.batches += 1;
-                a.occupancy_sum += group.len();
+                a.occupancy_sum += idx.len();
                 drop(s);
-                telem.requests.add(group.len() as u64);
+                telem.requests.add(fresh as u64);
+                telem.stream_requests.add(streams as u64);
                 telem.batches.inc();
-                telem.adapter_requests(&adapter).add(group.len() as u64);
-                for r in group {
-                    let _ = r.reply.send(Err(e.clone()));
+                telem.adapter_requests(&adapter).add(fresh as u64);
+                for &i in &idx {
+                    let _ = active[i].req.reply.send(Err(e.clone()));
+                    active[i].finished = true;
                 }
             }
         }
@@ -815,21 +1073,37 @@ fn run_fused(
     let bsz = row;
     debug_assert!(bsz <= batch);
 
-    // prompts were validated at submit time: 1..=seq tokens each
+    // prompts were validated at submit time to leave room for every
+    // greedy extension: len + steps - 1 <= seq
     tok_scratch.clear();
     tok_scratch.resize(batch * seq, PAD);
-    for (g, group) in metas.iter().zip(&reqs) {
-        for (i, r) in group.iter().enumerate() {
+    lens_scratch.clear();
+    lens_scratch.resize(batch, 1);
+    for (g, idx) in metas.iter().zip(&members) {
+        for (i, &ai) in idx.iter().enumerate() {
             let row = g.rows.start + i;
-            tok_scratch[row * seq..row * seq + r.tokens.len()].copy_from_slice(&r.tokens);
+            let toks = &active[ai].req.tokens;
+            tok_scratch[row * seq..row * seq + toks.len()].copy_from_slice(toks);
+            lens_scratch[row] = toks.len();
         }
     }
 
-    let result = backend.forward_fused(&metas, tok_scratch.as_slice());
+    let result = backend.forward_step(&metas, tok_scratch.as_slice(), lens_scratch.as_slice());
 
+    let (fresh, streams) = {
+        let mut f = 0usize;
+        let mut st = 0usize;
+        for idx in &members {
+            let (a, b) = fresh_rows(active, idx);
+            f += a;
+            st += b;
+        }
+        (f, st)
+    };
     {
         let mut s = stats.lock().unwrap();
-        s.requests += bsz;
+        s.requests += fresh;
+        s.stream_requests += streams;
         s.batches += 1;
         s.batch_occupancy_sum += bsz;
         s.fused_batches += 1;
@@ -838,144 +1112,203 @@ fn run_fused(
         let up = backend.upload_stats();
         telem.upload_delta(s.upload, up);
         s.upload = up;
-        for (g, group) in metas.iter().zip(&reqs) {
+        for (g, idx) in metas.iter().zip(&members) {
+            let (gf, _) = fresh_rows(active, idx);
             let a = s.per_adapter.entry(g.name.clone()).or_default();
-            a.requests += group.len();
+            a.requests += gf;
             a.batches += 1;
-            a.occupancy_sum += group.len();
+            a.occupancy_sum += idx.len();
         }
     }
-    telem.requests.add(bsz as u64);
+    telem.requests.add(fresh as u64);
+    telem.stream_requests.add(streams as u64);
     telem.batches.inc();
     telem.fused_batches.inc();
     telem.fused_rows.add(bsz as u64);
     telem.fused_adapters.add(metas.len() as u64);
-    for (g, group) in metas.iter().zip(&reqs) {
-        telem.adapter_requests(&g.name).add(group.len() as u64);
+    for (g, idx) in metas.iter().zip(&members) {
+        let (gf, _) = fresh_rows(active, idx);
+        telem.adapter_requests(&g.name).add(gf as u64);
     }
 
     match result {
-        Ok(logits) => {
-            for (g, group) in metas.iter().zip(reqs) {
-                for (i, r) in group.into_iter().enumerate() {
-                    deliver_reply(&logits, seq, vocab, g.rows.start + i, &g.name, bsz, launch, r);
+        Ok(step_logits) => {
+            for (g, idx) in metas.iter().zip(&members) {
+                for (i, &ai) in idx.iter().enumerate() {
+                    let off = (g.rows.start + i) * vocab;
+                    advance_row(
+                        &mut active[ai],
+                        &step_logits,
+                        off,
+                        vocab,
+                        &g.name,
+                        bsz,
+                        launch,
+                        stats,
+                        telem,
+                    );
                 }
             }
         }
-        // a multi-group fused forward that ERRORS (not panics) falls
-        // back to serving each group alone, so one group's failure
+        // a multi-group fused step that ERRORS (not panics) falls
+        // back to stepping each group alone, so one group's failure
         // keeps the serial path's isolation: healthy co-batched
-        // tenants still get answers, only the failing group errors
+        // tenants still get their next token, only the failing group
+        // errors
         Err(e) if metas.len() > 1 => {
-            run_fused_fallback(backend, metas, reqs, tok_scratch, &e);
+            run_step_fallback(backend, active, &metas, &members, tok_scratch, &e, stats, telem);
         }
         Err(e) => {
             let fault = ServeError::BackendFault(format!("{e:#}"));
-            for group in reqs {
-                for r in group {
-                    let _ = r.reply.send(Err(fault.clone()));
+            for idx in &members {
+                for &ai in idx {
+                    let _ = active[ai].req.reply.send(Err(fault.clone()));
+                    active[ai].finished = true;
                 }
             }
         }
     }
 }
 
-/// Recovery path for a failed multi-group fused forward: re-serve each
-/// group through its own [`ServeBackend::forward`] call (rows packed
-/// from 0, bit-identical to the serial oracle by the fused contract)
-/// and deliver per-group results — exactly the isolation the
-/// pre-fusion path had. The drain's stats were already recorded by
-/// [`run_fused`]; the recovery forwards are not double-counted.
-fn run_fused_fallback(
+/// Recovery path for a failed multi-group fused step: re-serve each
+/// group through its own full [`ServeBackend::forward`] call (rows
+/// packed from 0, bit-identical to the fused step by the forward_step
+/// contract) and slice each stream's position from the full logits —
+/// exactly the isolation the pre-fusion path had. The step's stats
+/// were already recorded by [`run_step_fused`]; the recovery forwards
+/// are not double-counted.
+#[allow(clippy::too_many_arguments)]
+fn run_step_fallback(
     backend: &mut dyn ServeBackend,
-    metas: Vec<AdapterGroup>,
-    reqs: Vec<Vec<Request>>,
+    active: &mut [ActiveRow],
+    metas: &[AdapterGroup],
+    members: &[Vec<usize>],
     tok_scratch: &mut Vec<i32>,
     fused_err: &anyhow::Error,
+    stats: &Mutex<ServerStats>,
+    telem: &ServeTelem,
 ) {
     let (batch, seq, vocab) = backend.shape();
-    for (g, group) in metas.into_iter().zip(reqs) {
-        let bsz = group.len();
+    for (g, idx) in metas.iter().zip(members) {
+        let bsz = idx.len();
         let launch = Instant::now();
         tok_scratch.clear();
         tok_scratch.resize(batch * seq, PAD);
-        for (i, r) in group.iter().enumerate() {
-            tok_scratch[i * seq..i * seq + r.tokens.len()].copy_from_slice(&r.tokens);
+        for (i, &ai) in idx.iter().enumerate() {
+            let toks = &active[ai].req.tokens;
+            tok_scratch[i * seq..i * seq + toks.len()].copy_from_slice(toks);
         }
         match backend.forward(&g.name, g.generation, &g.weights, tok_scratch.as_slice()) {
             Ok(logits) => {
-                for (i, r) in group.into_iter().enumerate() {
-                    deliver_reply(&logits, seq, vocab, i, &g.name, bsz, launch, r);
+                for (i, &ai) in idx.iter().enumerate() {
+                    let off = (i * seq + active[ai].len() - 1) * vocab;
+                    advance_row(
+                        &mut active[ai],
+                        &logits,
+                        off,
+                        vocab,
+                        &g.name,
+                        bsz,
+                        launch,
+                        stats,
+                        telem,
+                    );
                 }
             }
             Err(e) => {
                 let fault = ServeError::BackendFault(format!(
                     "{e:#} (fused forward had failed: {fused_err:#})"
                 ));
-                for r in group {
-                    let _ = r.reply.send(Err(fault.clone()));
+                for &ai in idx {
+                    let _ = active[ai].req.reply.send(Err(fault.clone()));
+                    active[ai].finished = true;
                 }
             }
         }
     }
 }
 
-/// Pad one same-adapter group into a single forward call and deliver
-/// per-request replies (or the shared error). The pre-fusion serial
-/// path — kept as the oracle [`run_fused`] is verified against.
-fn run_group(
+/// Advance the active set by one decode step with one full
+/// [`ServeBackend::forward`] call per same-adapter group (rows packed
+/// from 0), slicing each stream's current position from the full
+/// logits. The pre-fusion serial path — kept as the oracle
+/// [`run_step_fused`] is verified against; per step it is exactly the
+/// old one-shot `run_group` on the streams' current prefixes.
+fn run_step_serial(
     backend: &mut dyn ServeBackend,
     registry: &AdapterRegistry,
     stats: &Mutex<ServerStats>,
     telem: &ServeTelem,
-    adapter: &str,
-    group: Vec<Request>,
+    active: &mut [ActiveRow],
     tok_scratch: &mut Vec<i32>,
 ) {
     let (batch, seq, vocab) = backend.shape();
-    debug_assert!(group.len() <= batch);
-    let bsz = group.len();
-    let launch = Instant::now();
+    let ids: Vec<&str> = active.iter().map(|a| a.req.adapter.as_str()).collect();
+    let plan: Vec<(String, Vec<usize>)> = fused_slot_plan(&ids)
+        .into_iter()
+        .map(|(a, idx)| (a.to_string(), idx))
+        .collect();
 
-    // prompts were validated at submit time: 1..=seq tokens each
-    tok_scratch.clear();
-    tok_scratch.resize(batch * seq, PAD);
-    for (i, r) in group.iter().enumerate() {
-        tok_scratch[i * seq..i * seq + r.tokens.len()].copy_from_slice(&r.tokens);
-    }
+    for (adapter, idx) in plan {
+        debug_assert!(idx.len() <= batch);
+        let bsz = idx.len();
+        let launch = Instant::now();
 
-    let result = registry.merged_for_serving(adapter).and_then(|(generation, w)| {
-        backend
-            .forward(adapter, generation, &w, tok_scratch.as_slice())
-            .map_err(|e| ServeError::BackendFault(format!("{e:#}")))
-    });
-
-    {
-        let mut s = stats.lock().unwrap();
-        s.requests += bsz;
-        s.batches += 1;
-        s.batch_occupancy_sum += bsz;
-        let up = backend.upload_stats();
-        telem.upload_delta(s.upload, up);
-        s.upload = up;
-        let a = s.per_adapter.entry(adapter.to_string()).or_default();
-        a.requests += bsz;
-        a.batches += 1;
-        a.occupancy_sum += bsz;
-    }
-    telem.requests.add(bsz as u64);
-    telem.batches.inc();
-    telem.adapter_requests(adapter).add(bsz as u64);
-
-    match result {
-        Ok(logits) => {
-            for (i, r) in group.into_iter().enumerate() {
-                deliver_reply(&logits, seq, vocab, i, adapter, bsz, launch, r);
-            }
+        tok_scratch.clear();
+        tok_scratch.resize(batch * seq, PAD);
+        for (i, &ai) in idx.iter().enumerate() {
+            let toks = &active[ai].req.tokens;
+            tok_scratch[i * seq..i * seq + toks.len()].copy_from_slice(toks);
         }
-        Err(e) => {
-            for r in group {
-                let _ = r.reply.send(Err(e.clone()));
+
+        let result = registry.merged_for_serving(&adapter).and_then(|(generation, w)| {
+            backend
+                .forward(&adapter, generation, &w, tok_scratch.as_slice())
+                .map_err(|e| ServeError::BackendFault(format!("{e:#}")))
+        });
+
+        let (fresh, streams) = fresh_rows(active, &idx);
+        {
+            let mut s = stats.lock().unwrap();
+            s.requests += fresh;
+            s.stream_requests += streams;
+            s.batches += 1;
+            s.batch_occupancy_sum += bsz;
+            let up = backend.upload_stats();
+            telem.upload_delta(s.upload, up);
+            s.upload = up;
+            let a = s.per_adapter.entry(adapter.clone()).or_default();
+            a.requests += fresh;
+            a.batches += 1;
+            a.occupancy_sum += bsz;
+        }
+        telem.requests.add(fresh as u64);
+        telem.stream_requests.add(streams as u64);
+        telem.batches.inc();
+        telem.adapter_requests(&adapter).add(fresh as u64);
+
+        match result {
+            Ok(logits) => {
+                for (i, &ai) in idx.iter().enumerate() {
+                    let off = (i * seq + active[ai].len() - 1) * vocab;
+                    advance_row(
+                        &mut active[ai],
+                        &logits,
+                        off,
+                        vocab,
+                        &adapter,
+                        bsz,
+                        launch,
+                        stats,
+                        telem,
+                    );
+                }
+            }
+            Err(e) => {
+                for &ai in &idx {
+                    let _ = active[ai].req.reply.send(Err(e.clone()));
+                    active[ai].finished = true;
+                }
             }
         }
     }
@@ -1033,5 +1366,35 @@ mod tests {
         assert_eq!(c.max_wait, Duration::from_millis(3));
         assert!(!c.serial().fused);
         assert!(ServerConfig::default().fused);
+    }
+
+    #[test]
+    fn greedy_next_token_is_first_max_one_based() {
+        // plain argmax, shifted past PAD == 0
+        assert_eq!(greedy_next_token(&[0.0, 3.0, 1.0]), 2);
+        assert_eq!(greedy_next_token(&[5.0, 3.0, 1.0]), 1);
+        // ties break to the FIRST maximum (strict `>` never replaces)
+        assert_eq!(greedy_next_token(&[1.0, 7.0, 7.0, 7.0]), 2);
+        // single-logit vocab can only emit token 1
+        assert_eq!(greedy_next_token(&[-2.0]), 1);
+        // the result is never PAD
+        assert_ne!(greedy_next_token(&[0.0; 8]), crate::data::PAD);
+    }
+
+    #[test]
+    fn active_row_admit_tracks_prefix() {
+        let (tx, _rx) = sync_channel(1);
+        let a = ActiveRow::admit(Request {
+            adapter: "t".into(),
+            tokens: vec![1, 2, 3],
+            steps: 4,
+            enqueued: Instant::now(),
+            deadline: None,
+            reply: tx,
+        });
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.done, 0);
+        assert!(!a.finished);
+        assert!(a.first_launch.is_none());
     }
 }

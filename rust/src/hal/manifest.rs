@@ -79,6 +79,13 @@ pub struct BackendManifest {
     /// scatter (one launch per adapter group — correct, but not
     /// fused execution) declare `false`.
     pub fused_multi_adapter: bool,
+    /// `true` iff `forward_step` is a TRUE single-position decode step
+    /// (the continuous-batching hot path pays one position per step).
+    /// Backends that inherit the default full-forward-then-slice step
+    /// declare `false` — streaming still *works* there (the default is
+    /// bit-identical), it just recomputes the whole `[batch, seq]`
+    /// forward each step.
+    pub streaming_decode: bool,
     /// What the adapter-side cache holds.
     pub cache: CacheSemantics,
     /// Approximate per-worker memory appetite in bytes (caches +
@@ -163,6 +170,11 @@ impl BackendManifest {
                 "single-launch fused multi-adapter forward required but not offered".into(),
             );
         }
+        if req.require_streaming && !self.streaming_decode {
+            return Err(
+                "single-position streaming decode required but not offered".into(),
+            );
+        }
         Ok(())
     }
 }
@@ -231,6 +243,7 @@ mod tests {
             max_seq: 32,
             max_vocab: 64,
             fused_multi_adapter: true,
+            streaming_decode: true,
             cache: CacheSemantics::HostFingerprint,
             approx_memory_bytes: 1 << 20,
         }
@@ -289,6 +302,16 @@ mod tests {
         req = BackendRequest::new(8, 32, 64);
         req.require_fused = true;
         assert!(unfused.supports(&req).is_err());
+        assert_eq!(m.supports(&req), Ok(()));
+
+        let mut sliced = good();
+        sliced.streaming_decode = false;
+        req = BackendRequest::new(8, 32, 64);
+        req.require_streaming = true;
+        assert!(sliced
+            .supports(&req)
+            .unwrap_err()
+            .contains("streaming decode"));
         assert_eq!(m.supports(&req), Ok(()));
     }
 

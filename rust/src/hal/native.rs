@@ -212,6 +212,34 @@ impl NativeBackend {
         }
     }
 
+    /// Fill one row's `[vocab]` next-token logits at position
+    /// `len - 1` — the single-position analogue of [`Self::fill_row`].
+    /// Same prefix fold (t-order over the first `len` tokens), same
+    /// per-slot DAG `(f0 + f1*a) + f2*b`, one column-striped sweep, so
+    /// the result is bit-identical to slot `len - 1` of the full row.
+    fn step_row_into(&self, f1: f64, row_tokens: &[i32], len: usize, out_row: &mut [f32]) {
+        debug_assert!(len >= 1 && len <= row_tokens.len());
+        debug_assert_eq!(out_row.len(), self.vocab);
+        let mut prefix = 0f64;
+        for (t, &tok) in row_tokens.iter().enumerate().take(len) {
+            if tok != PAD {
+                prefix += (t as f64 + 1.0) * (tok as f64 + 1.0);
+            }
+        }
+        let f2 = 1e-4 * prefix;
+        let mut vt = 0usize;
+        while vt < self.vocab {
+            let ve = (vt + COL_TILE).min(self.vocab);
+            let w1 = &self.w1[vt..ve];
+            let w2 = &self.w2[vt..ve];
+            let stripe = &mut out_row[vt..ve];
+            for ((slot, &a), &b) in stripe.iter_mut().zip(w1).zip(w2) {
+                *slot = ((self.f0 + f1 * a) + f2 * b) as f32;
+            }
+            vt = ve;
+        }
+    }
+
     /// Shard `out`'s rows across the thread pool and fill row `b`
     /// under `owner(b)`'s hoisted adapter term (`None` = padding row,
     /// left zeroed — same as the reference).
@@ -302,6 +330,63 @@ impl ServeBackend for NativeBackend {
         Ok(out)
     }
 
+    /// Native single-position streaming step: one delay, fingerprints
+    /// resolved once in group order, then only position `lens[b] - 1`
+    /// of each owned row is computed (row-parallel over the step's
+    /// `[batch, vocab]` output).
+    fn forward_step(
+        &mut self,
+        groups: &[AdapterGroup],
+        tokens: &[i32],
+        lens: &[usize],
+    ) -> Result<Vec<f32>> {
+        let _t = telem_native().step.start();
+        if tokens.len() != self.batch * self.seq {
+            bail!(
+                "token matrix has {} elems, expected batch*seq = {}",
+                tokens.len(),
+                self.batch * self.seq
+            );
+        }
+        if lens.len() != self.batch {
+            bail!("lens has {} entries, expected batch = {}", lens.len(), self.batch);
+        }
+        for g in groups {
+            if g.rows.end > self.batch {
+                bail!(
+                    "adapter group '{}' rows {}..{} exceed batch {}",
+                    g.name,
+                    g.rows.start,
+                    g.rows.end,
+                    self.batch
+                );
+            }
+            for row in g.rows.clone() {
+                if !(1..=self.seq).contains(&lens[row]) {
+                    bail!("row {row} prefix length {} out of range 1..={}", lens[row], self.seq);
+                }
+            }
+        }
+        if !self.forward_delay.is_zero() {
+            std::thread::sleep(self.forward_delay);
+        }
+        let mut owners: Vec<Option<f64>> = vec![None; self.batch];
+        for g in groups {
+            let f1 = 1e-2 * self.adapter_fp(&g.name, g.generation, &g.weights);
+            for row in g.rows.clone() {
+                owners[row] = Some(f1);
+            }
+        }
+        let (seq, vocab) = (self.seq, self.vocab);
+        let mut out = vec![0f32; self.batch * vocab];
+        crate::util::threads::par_chunks_mut_with(&mut out, vocab, 2, |b, row_out| {
+            if let Some(f1) = owners[b] {
+                self.step_row_into(f1, &tokens[b * seq..(b + 1) * seq], lens[b], row_out);
+            }
+        });
+        Ok(out)
+    }
+
     fn upload_stats(&self) -> UploadStats {
         self.fp_cache.stats
     }
@@ -385,6 +470,54 @@ mod tests {
         assert!(native.forward_fused(&[bad], &tokens).is_err());
         // wrong token-matrix size rejected
         assert!(native.forward("a", 0, &w[0], &[1, 2]).is_err());
+    }
+
+    /// The native single-position step must agree bit-for-bit with the
+    /// reference step AND with slicing the native fused forward at
+    /// each row's live position.
+    #[test]
+    fn step_bit_identical_to_reference_step_and_fused_slice() {
+        let base = named(7, 200);
+        let (batch, seq, vocab) = (5usize, 4usize, 70usize);
+        let w: Vec<Arc<NamedTensors>> =
+            (0..3).map(|i| Arc::new(named(10 + i, 24))).collect();
+        let row_lens = [(0usize, 3usize), (1, 1), (2, 4), (3, 2)];
+        let mut tokens = vec![PAD; batch * seq];
+        for (row, len) in row_lens {
+            for t in 0..len {
+                tokens[row * seq + t] = (row * 7 + t * 3 + 1) as i32;
+            }
+        }
+        // row 4 unowned: lens entry ignored, output row left zeroed
+        let mut lens = [1usize; 5];
+        for (row, len) in row_lens {
+            lens[row] = len;
+        }
+        let groups: Vec<AdapterGroup> = [(0usize, 0usize..2), (1, 2..3), (2, 3..4)]
+            .into_iter()
+            .map(|(i, rows)| AdapterGroup {
+                name: format!("t{i}"),
+                generation: i as u64,
+                weights: w[i].clone(),
+                rows,
+            })
+            .collect();
+        let mut native = NativeBackend::new(batch, seq, vocab, &base);
+        let mut refer = ReferenceBackend::new(batch, seq, vocab, &base);
+        let a = native.forward_step(&groups, &tokens, &lens).unwrap();
+        let b = refer.forward_step(&groups, &tokens, &lens).unwrap();
+        assert_bits_eq(&a, &b, "streamed step");
+        let fused = native.forward_fused(&groups, &tokens).unwrap();
+        for (row, len) in row_lens {
+            let want = &fused[(row * seq + len - 1) * vocab..(row * seq + len) * vocab];
+            assert_bits_eq(&a[row * vocab..(row + 1) * vocab], want, "fused slice");
+        }
+        assert!(a[4 * vocab..].iter().all(|&x| x == 0.0), "unowned row stays zeroed");
+        // malformed lens rejected
+        assert!(native.forward_step(&groups, &tokens, &lens[..3]).is_err());
+        let mut zero = lens;
+        zero[0] = 0;
+        assert!(native.forward_step(&groups, &tokens, &zero).is_err());
     }
 
     /// The streaming packed-storage construction must land on the

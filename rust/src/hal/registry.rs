@@ -40,6 +40,10 @@ pub struct BackendRequest {
     /// Demand a TRUE single-launch fused multi-adapter forward (the
     /// inherited per-group scatter is correct but does not qualify).
     pub require_fused: bool,
+    /// Demand a TRUE single-position streaming decode step (the
+    /// inherited full-forward-then-slice default is correct but does
+    /// not qualify).
+    pub require_streaming: bool,
     /// Worker count the pool will spawn (capacity-planning hint).
     pub workers: usize,
 }
@@ -54,6 +58,7 @@ impl BackendRequest {
             bit_widths: Vec::new(),
             family: None,
             require_fused: false,
+            require_streaming: false,
             workers: 1,
         }
     }
@@ -113,6 +118,11 @@ pub struct BackendEntry {
     /// `manifest.fused_multi_adapter` at registration — claiming fused
     /// without implementing it is a manifest contradiction.
     pub implements_fused: bool,
+    /// Does the implementation actually override `forward_step` with a
+    /// single-position decode? Cross-checked against
+    /// `manifest.streaming_decode` at registration, same as the fused
+    /// claim.
+    pub implements_step: bool,
     /// `None` = always available.
     pub gate: Option<BackendGate>,
     pub factory: BackendFactory,
@@ -156,6 +166,14 @@ impl BackendRegistry {
             return Err(HalError::InvalidManifest {
                 name,
                 reason: "manifest claims a single-launch fused multi-adapter forward \
+                         but the implementation does not provide one"
+                    .into(),
+            });
+        }
+        if entry.manifest.streaming_decode && !entry.implements_step {
+            return Err(HalError::InvalidManifest {
+                name,
+                reason: "manifest claims a single-position streaming decode step \
                          but the implementation does not provide one"
                     .into(),
             });
@@ -244,9 +262,9 @@ impl BackendRegistry {
         let mut s = String::new();
         s.push_str(
             "| Backend | Families | Bit-widths k | Max batch×seq×vocab | \
-             Fused multi-adapter | Cache | ~Mem/worker | Available |\n",
+             Fused multi-adapter | Streaming | Cache | ~Mem/worker | Available |\n",
         );
-        s.push_str("|---|---|---|---|---|---|---|---|\n");
+        s.push_str("|---|---|---|---|---|---|---|---|---|\n");
         for (name, e) in &self.entries {
             let m = &e.manifest;
             let families = m
@@ -266,11 +284,12 @@ impl BackendRegistry {
                 Err(reason) => format!("no — {reason}"),
             };
             s.push_str(&format!(
-                "| `{name}` | {families} | {ks} | {}×{}×{} | {} | {} | {} | {avail} |\n",
+                "| `{name}` | {families} | {ks} | {}×{}×{} | {} | {} | {} | {} | {avail} |\n",
                 m.max_batch,
                 m.max_seq,
                 m.max_vocab,
                 if m.fused_multi_adapter { "yes" } else { "scatter" },
+                if m.streaming_decode { "yes" } else { "sliced" },
                 m.cache,
                 fmt_mem(m.approx_memory_bytes),
             ));
@@ -306,10 +325,12 @@ fn reference_entry() -> BackendEntry {
             max_seq: 8192,
             max_vocab: 1 << 20,
             fused_multi_adapter: true,
+            streaming_decode: true,
             cache: CacheSemantics::HostFingerprint,
             approx_memory_bytes: 1 << 20,
         },
         implements_fused: true,
+        implements_step: true,
         gate: None,
         factory: Arc::new(|ctx: &BackendCtx| {
             let r = &ctx.request;
@@ -333,10 +354,12 @@ fn native_entry() -> BackendEntry {
             max_seq: 8192,
             max_vocab: 1 << 20,
             fused_multi_adapter: true,
+            streaming_decode: true,
             cache: CacheSemantics::HostFingerprint,
             approx_memory_bytes: 1 << 26,
         },
         implements_fused: true,
+        implements_step: true,
         gate: None,
         factory: Arc::new(|ctx: &BackendCtx| {
             let r = &ctx.request;
@@ -365,10 +388,12 @@ fn pjrt_entry() -> BackendEntry {
             max_seq: 2048,
             max_vocab: 1 << 17,
             fused_multi_adapter: false,
+            streaming_decode: false,
             cache: CacheSemantics::DeviceBuffer,
             approx_memory_bytes: 1 << 30,
         },
         implements_fused: false,
+        implements_step: false,
         gate: Some(Arc::new(|| {
             if !std::path::Path::new("artifacts/manifest.json").exists() {
                 return Err(
@@ -402,10 +427,12 @@ mod tests {
                 max_seq: 8,
                 max_vocab: 16,
                 fused_multi_adapter: false,
+                streaming_decode: false,
                 cache: CacheSemantics::None,
                 approx_memory_bytes: 1024,
             },
             implements_fused: false,
+            implements_step: false,
             gate: None,
             factory: Arc::new(|ctx: &BackendCtx| {
                 let r = &ctx.request;
@@ -469,6 +496,17 @@ mod tests {
             other => panic!("expected InvalidManifest, got {other:?}"),
         }
 
+        // streaming claimed but unimplemented: same contradiction class
+        let mut e = dummy_entry("stream-liar");
+        e.manifest.streaming_decode = true;
+        e.implements_step = false;
+        match r.register(e) {
+            Err(HalError::InvalidManifest { reason, .. }) => {
+                assert!(reason.contains("streaming"), "{reason}");
+            }
+            other => panic!("expected InvalidManifest, got {other:?}"),
+        }
+
         // duplicates are typed too
         r.register(dummy_entry("dup")).unwrap();
         match r.register(dummy_entry("dup")) {
@@ -510,6 +548,14 @@ mod tests {
         // demanding true fused from a scatter backend
         let mut req = BackendRequest::new(4, 8, 16);
         req.require_fused = true;
+        assert!(matches!(
+            r.resolve("tiny", &req),
+            Err(HalError::Unsupported { .. })
+        ));
+
+        // demanding true streaming decode from a sliced-step backend
+        let mut req = BackendRequest::new(4, 8, 16);
+        req.require_streaming = true;
         assert!(matches!(
             r.resolve("tiny", &req),
             Err(HalError::Unsupported { .. })

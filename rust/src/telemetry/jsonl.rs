@@ -14,7 +14,10 @@
 //! backend: it keeps only the highest-sequence snapshot, tolerating a
 //! file that mixes periodic and final flushes. Writer and reader use
 //! the same hand-rolled field conventions as `bench_harness` — no
-//! JSON dependency.
+//! JSON dependency — but the reader anchors on whole top-level keys
+//! with a string-aware scan, so a field name occurring inside a label
+//! value (or as a suffix of a longer key, `ts` vs `ts_ms`) can never
+//! forge or shadow a field.
 
 use std::fs::{File, OpenOptions};
 use std::io::Write;
@@ -127,24 +130,81 @@ pub fn read_last_snapshot(path: &Path) -> Option<LastSnapshot> {
     }
 }
 
-/// Extract a `"field": "string"` value from one JSONL line.
+/// Scan one flat JSONL object for the top-level `"field":` key and
+/// return the raw text after its colon. Unlike a substring search,
+/// this walks the line tracking quoted strings (with `\` escapes), so
+/// a field name can only match as a whole quoted key followed by a
+/// colon — never as the suffix of a longer key (`ts` vs `ts_ms`) and
+/// never inside an adversarial label value.
+fn field_raw<'a>(line: &'a str, field: &str) -> Option<&'a str> {
+    let b = line.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] != b'"' {
+            i += 1;
+            continue;
+        }
+        // a quoted token: scan to its closing quote, honouring escapes
+        let start = i + 1;
+        let mut j = start;
+        while j < b.len() && b[j] != b'"' {
+            j += if b[j] == b'\\' { 2 } else { 1 };
+        }
+        if j >= b.len() {
+            return None; // unterminated string
+        }
+        // a key iff the next non-space byte is ':'; otherwise it was a
+        // string value — keep scanning after it either way
+        let mut k = j + 1;
+        while k < b.len() && b[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        if k < b.len() && b[k] == b':' {
+            k += 1;
+            while k < b.len() && b[k].is_ascii_whitespace() {
+                k += 1;
+            }
+            if &line[start..j] == field {
+                return Some(&line[k..]);
+            }
+            i = k;
+        } else {
+            i = j + 1;
+        }
+    }
+    None
+}
+
+/// Extract a `"field": "string"` value from one JSONL line. Escape
+/// sequences are passed through verbatim ([`sanitize`] never emits
+/// them, so our own files contain none).
 fn field_str(line: &str, field: &str) -> Option<String> {
-    let pat = format!("\"{field}\": \"");
-    let start = line.find(&pat)? + pat.len();
-    let rest = &line[start..];
-    let end = rest.find('"')?;
-    Some(rest[..end].to_string())
+    let raw = field_raw(line, field)?;
+    let b = raw.as_bytes();
+    if b.first() != Some(&b'"') {
+        return None;
+    }
+    let mut j = 1;
+    while j < b.len() && b[j] != b'"' {
+        j += if b[j] == b'\\' { 2 } else { 1 };
+    }
+    if j < b.len() {
+        Some(raw[1..j].to_string())
+    } else {
+        None
+    }
 }
 
 /// Extract a `"field": number` value from one JSONL line.
 fn field_num(line: &str, field: &str) -> Option<f64> {
-    let pat = format!("\"{field}\": ");
-    let start = line.find(&pat)? + pat.len();
-    let rest = &line[start..];
-    let end = rest
+    let raw = field_raw(line, field)?;
+    if raw.starts_with('"') {
+        return None; // a string where a number was expected
+    }
+    let end = raw
         .find(|c: char| c == ',' || c == '}')
-        .unwrap_or(rest.len());
-    rest[..end].trim().parse::<f64>().ok()
+        .unwrap_or(raw.len());
+    raw[..end].trim().parse::<f64>().ok()
 }
 
 #[cfg(test)]
@@ -216,5 +276,40 @@ mod tests {
     fn labels_survive_sanitization() {
         assert_eq!(sanitize("a{k=4}"), "a{k=4}");
         assert_eq!(sanitize("bad\"quote\\and\ncontrol"), "bad_quote_and_control");
+    }
+
+    #[test]
+    fn fields_anchor_on_whole_keys_not_substrings() {
+        // a sanitized label can legally contain field names and fake
+        // `name: value` text; none of it may satisfy a field lookup
+        let line = "{\"snapshot\": 2, \"ts_ms\": 10.500, \"kind\": \"counter\", \
+                    \"key\": \"k{label=snapshot, value: 99, count}\", \
+                    \"value\": 7, \"count\": 1}";
+        assert_eq!(field_num(line, "snapshot"), Some(2.0));
+        assert_eq!(field_num(line, "ts_ms"), Some(10.5));
+        assert_eq!(field_num(line, "value"), Some(7.0));
+        assert_eq!(field_num(line, "count"), Some(1.0));
+        assert_eq!(
+            field_str(line, "key").as_deref(),
+            Some("k{label=snapshot, value: 99, count}")
+        );
+        // `ts` is a suffix-colliding non-key: it must NOT resolve via
+        // the `ts_ms` key, and `kind` must not resolve as a number
+        assert_eq!(field_num(line, "ts"), None);
+        assert_eq!(field_num(line, "kind"), None);
+    }
+
+    #[test]
+    fn escaped_quotes_cannot_forge_fields() {
+        // foreign files may escape quotes; an injected `\"value\": 999`
+        // inside a string is data, not a key
+        let line = "{\"snapshot\": 1, \"kind\": \"counter\", \
+                    \"key\": \"a\\\", \\\"value\\\": 999, \\\"x\", \
+                    \"value\": 7, \"count\": 0}";
+        assert_eq!(field_num(line, "value"), Some(7.0));
+        assert_eq!(field_num(line, "snapshot"), Some(1.0));
+        // unterminated string: refuse the whole line, don't misparse
+        assert_eq!(field_num("{\"key\": \"open, \"value\": 7}", "missing"), None);
+        assert_eq!(field_num("{\"snapshot\": 3, \"key\": \"trail\\", "snapshot"), Some(3.0));
     }
 }

@@ -42,6 +42,9 @@ pub const DEFAULT_PARK_AGE_MS: u64 = 20;
 pub const DEFAULT_ADAPTER_CACHE: usize = 8;
 /// Default serving backend name (`IRQLORA_SERVE_BACKEND` unset).
 pub const DEFAULT_SERVE_BACKEND: &str = "reference";
+/// Default per-stream decode-step ceiling (`IRQLORA_STREAM_MAX_STEPS`
+/// unset).
+pub const DEFAULT_STREAM_MAX_STEPS: usize = 64;
 
 /// Cap on `IRQLORA_THREADS`.
 pub const THREADS_CAP: usize = 256;
@@ -54,6 +57,9 @@ pub const CACHE_CAP: usize = 4096;
 pub const PARK_BOUND_CAP: usize = 1 << 20;
 /// Cap on `IRQLORA_PARK_AGE_MS` (10 minutes).
 pub const PARK_AGE_CAP_MS: u64 = 600_000;
+/// Cap on `IRQLORA_STREAM_MAX_STEPS` — a stream cannot outlast the
+/// longest supported sequence anyway.
+pub const STREAM_MAX_STEPS_CAP: usize = 4096;
 
 /// The full knob table, one entry per environment variable the
 /// process reads. Order matches the README table.
@@ -92,9 +98,18 @@ pub fn knobs() -> &'static [Knob] {
         Knob {
             name: "IRQLORA_PARK_AGE_MS",
             default: "20",
-            meaning: "Max age of a parked request before it is shed with \
-                      `DeadlineExceeded` (even without an explicit per-request \
-                      deadline).",
+            meaning: "Age at which a parked request is PROMOTED: workers poll aged \
+                      parked work ahead of fresh channel arrivals at the start of \
+                      each admission pass, so a saturated home cannot starve its \
+                      overflow. (Expiry is separate — only an explicit per-request \
+                      deadline sheds with `DeadlineExceeded`.)",
+        },
+        Knob {
+            name: "IRQLORA_STREAM_MAX_STEPS",
+            default: "64",
+            meaning: "Max decode steps one `submit_stream` request may ask for; \
+                      larger step counts are rejected at submit time (the prompt \
+                      must also leave room: `prompt + steps - 1 <= seq`).",
         },
         Knob {
             name: "IRQLORA_ADAPTER_CACHE",
@@ -256,6 +271,13 @@ pub fn park_age() -> Duration {
         .unwrap_or(Duration::from_millis(DEFAULT_PARK_AGE_MS))
 }
 
+/// `IRQLORA_STREAM_MAX_STEPS`, else [`DEFAULT_STREAM_MAX_STEPS`].
+pub fn stream_max_steps() -> usize {
+    var("IRQLORA_STREAM_MAX_STEPS")
+        .and_then(|v| parse_count(&v, STREAM_MAX_STEPS_CAP))
+        .unwrap_or(DEFAULT_STREAM_MAX_STEPS)
+}
+
 /// `IRQLORA_ADAPTER_CACHE`, else [`DEFAULT_ADAPTER_CACHE`].
 pub fn adapter_cache() -> usize {
     var("IRQLORA_ADAPTER_CACHE")
@@ -381,7 +403,7 @@ mod tests {
     #[test]
     fn knob_table_is_complete_and_unique() {
         let ks = knobs();
-        assert!(ks.len() >= 15);
+        assert!(ks.len() >= 16);
         let mut names: Vec<&str> = ks.iter().map(|k| k.name).collect();
         let before = names.len();
         names.sort_unstable();
@@ -399,6 +421,7 @@ mod tests {
             "IRQLORA_SERVE_STEAL",
             "IRQLORA_PARK_BOUND",
             "IRQLORA_PARK_AGE_MS",
+            "IRQLORA_STREAM_MAX_STEPS",
             "IRQLORA_ADAPTER_CACHE",
             "IRQLORA_DEVICE_CACHE",
             "IRQLORA_BIT_BUDGET",

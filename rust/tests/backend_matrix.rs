@@ -169,6 +169,91 @@ fn every_capable_backend_matches_the_serial_reference_oracle() {
     }
 }
 
+/// Streamed decode across the matrix: every backend whose manifest
+/// claims `streaming_decode` serves multi-step streams through a
+/// pooled continuous-batching worker, and every per-step logit row
+/// must be bit-identical to the serial reference oracle's one-shot
+/// answer for the greedy-extended prefix at that step. Both in-tree
+/// CPU backends must claim the capability.
+#[test]
+fn streamed_decode_matches_the_serial_oracle_across_backends() {
+    let mut req = battery_request();
+    req.require_streaming = true;
+    let capable = capable_backends(&req);
+    assert!(
+        capable.iter().any(|n| n == "reference"),
+        "reference missing from streaming-capable set {capable:?}"
+    );
+    assert!(
+        capable.iter().any(|n| n == "native"),
+        "native missing from streaming-capable set {capable:?}"
+    );
+
+    let oracle_registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+    let oracle_reg = oracle_registry.clone();
+    let oracle = BatchServer::spawn_with(
+        ServerConfig::new(Duration::from_millis(1)).serial(),
+        oracle_registry,
+        move || {
+            Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, oracle_reg.base()))
+                as Box<dyn ServeBackend>)
+        },
+    )
+    .unwrap();
+
+    let hal = BackendRegistry::builtin();
+    for name in &capable {
+        let name = name.as_str();
+        let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+        let factory = hal
+            .pool_factory(name, &req, registry.base().clone(), "matrix-stream")
+            .unwrap_or_else(|e| panic!("backend '{name}': {e}"));
+        let pool = ServerPool::spawn_with(
+            PoolConfig::new(2, Duration::from_millis(2)),
+            registry,
+            factory,
+        )
+        .unwrap();
+
+        let cases = [(0usize, 4usize), (1, 3), (3, 2)];
+        for (tn, steps) in cases {
+            let tenant = format!("tenant{tn}");
+            let prompt: Vec<i32> = vec![1, 2 + tn as i32, 3];
+            let mut prefix = prompt.clone();
+            let mut delivered = 0usize;
+            for (j, r) in pool.submit_stream(&tenant, prompt, steps).unwrap().enumerate() {
+                let r = r.unwrap_or_else(|e| panic!("backend '{name}' step {}: {e}", j + 1));
+                assert_eq!(r.step, j + 1, "backend '{name}'");
+                assert_eq!(r.last, j + 1 == steps, "backend '{name}'");
+                let want = oracle.query(&tenant, prefix.clone()).unwrap().logits;
+                assert_eq!(r.logits.len(), want.len(), "backend '{name}'");
+                for (i, (a, b)) in r.logits.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "backend '{name}' tenant '{tenant}' step {} logit {i} diverged \
+                         from the serial oracle",
+                        j + 1
+                    );
+                }
+                prefix.push(irqlora::coordinator::greedy_next_token(&r.logits));
+                delivered += 1;
+            }
+            assert_eq!(delivered, steps, "backend '{name}' tenant '{tenant}'");
+        }
+
+        let s = pool.stats();
+        assert_eq!(s.stream_requests, cases.len(), "backend '{name}': {s:?}");
+        assert_eq!(
+            s.steps,
+            cases.iter().map(|(_, n)| *n).sum::<usize>(),
+            "backend '{name}': {s:?}"
+        );
+        pool.shutdown();
+    }
+    oracle.shutdown();
+}
+
 /// Backend-level spot check below the pool machinery: one padded batch
 /// (real token rows + PAD tail rows) through `forward` on every
 /// capable backend's worker 0, bit-compared against the reference
@@ -234,10 +319,12 @@ fn dummy_entry(name: &str) -> BackendEntry {
             max_seq: 8,
             max_vocab: 16,
             fused_multi_adapter: false,
+            streaming_decode: false,
             cache: CacheSemantics::None,
             approx_memory_bytes: 1024,
         },
         implements_fused: false,
+        implements_step: false,
         gate: None,
         factory: Arc::new(|ctx| {
             Ok(Box::new(ReferenceBackend::new(
@@ -288,6 +375,18 @@ fn registration_refuses_malformed_and_contradictory_manifests() {
         other => panic!("fused-without-implementation accepted: {other:?}"),
     }
 
+    // contradictory: the manifest advertises a single-position decode
+    // step the implementation does not provide
+    let mut e = dummy_entry("stream-liar");
+    e.manifest.streaming_decode = true;
+    match reg.register(e) {
+        Err(HalError::InvalidManifest { name, reason }) => {
+            assert_eq!(name, "stream-liar");
+            assert!(reason.contains("streaming"), "{reason}");
+        }
+        other => panic!("streaming-without-implementation accepted: {other:?}"),
+    }
+
     reg.register(dummy_entry("dup")).unwrap();
     assert!(matches!(
         reg.register(dummy_entry("dup")),
@@ -335,6 +434,15 @@ fn resolve_refuses_unsupported_combinations_with_typed_errors() {
         reg.resolve("scatter-only", &req),
         Err(HalError::Unsupported { .. })
     ));
+    // a streaming requirement against a manifest with no decode step
+    let mut req = BackendRequest::new(4, 8, 16);
+    req.require_streaming = true;
+    match reg.resolve("scatter-only", &req) {
+        Err(HalError::Unsupported { reason, .. }) => {
+            assert!(reason.contains("streaming"), "{reason}")
+        }
+        other => panic!("streaming resolved against a sliced manifest: {other:?}"),
+    }
     // a bit-width the manifest does not claim
     let mut req = BackendRequest::new(4, 8, 16);
     req.bit_widths = vec![2];

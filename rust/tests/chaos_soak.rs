@@ -7,8 +7,10 @@
 //! - **bounded memory**: the parked-overflow peak never exceeds the
 //!   configured `park_bound`, and an open-loop submitter is shed with
 //!   `Overloaded` instead of growing queues;
-//! - **correctness under faults**: every delivered reply is
-//!   bit-identical to a clean single-worker serial oracle;
+//! - **correctness under faults**: every delivered reply — including
+//!   every per-step logit row of the multi-step decode streams mixed
+//!   into the load — is bit-identical to a clean single-worker serial
+//!   oracle replaying the stream's greedy prefix at that step;
 //! - **honest accounting**: `PoolStats` shed/retry counters reconcile
 //!   exactly against the outcomes observed on the client side;
 //! - **graceful degradation**: healthy tenants keep getting answers
@@ -30,8 +32,8 @@ use irqlora::coordinator::backend::{ReferenceBackend, ServeBackend};
 use irqlora::coordinator::pool::{PoolConfig, ServerPool};
 use irqlora::hal::{BackendRegistry, BackendRequest};
 use irqlora::coordinator::{
-    synthetic_serve_registry, BatchServer, FaultBackend, FaultConfig, FaultStats, ServeError,
-    ServerConfig,
+    greedy_next_token, synthetic_serve_registry, BatchServer, FaultBackend, FaultConfig,
+    FaultStats, ServeError, ServerConfig,
 };
 use irqlora::telemetry;
 use irqlora::util::Rng;
@@ -100,11 +102,14 @@ fn soak(seed: u64) {
     .unwrap();
 
     // open-loop skewed load: half the traffic on one hot tenant, every
-    // 4th request with a tight deadline; nothing is drained until all
-    // submissions are in, so overload shedding is actually reachable
+    // 4th request with a tight deadline, every 5th a multi-step decode
+    // STREAM (riding the same deadlines, so mid-stream shedding under
+    // chaos is reachable); nothing is drained until all submissions
+    // are in, so overload shedding is actually reachable
     let mut rng = Rng::new(seed.wrapping_mul(0x9e3779b97f4a7c15) ^ 0xc0ffee);
     let mut handles = Vec::new();
     let (mut overloaded, mut shed_at_submit, mut refused_dead) = (0usize, 0usize, 0usize);
+    let mut streams_admitted = 0usize;
     for i in 0..REQUESTS {
         let tenant = if rng.chance(0.5) {
             "tenant0".to_string()
@@ -114,8 +119,12 @@ fn soak(seed: u64) {
         let len = 1 + rng.below(8);
         let prompt: Vec<i32> = (0..len).map(|_| 1 + rng.below(VOCAB - 1) as i32).collect();
         let deadline = (i % 4 == 3).then(|| Instant::now() + Duration::from_millis(5));
-        match pool.submit_with_deadline(&tenant, prompt.clone(), deadline) {
-            Ok(p) => handles.push((tenant, prompt, p)),
+        let steps = if i % 5 == 0 { 2 + rng.below(3) } else { 1 };
+        match pool.submit_stream_with_deadline(&tenant, prompt.clone(), steps, deadline) {
+            Ok(p) => {
+                streams_admitted += (steps > 1) as usize;
+                handles.push((tenant, prompt, steps, p));
+            }
             Err(ServeError::Overloaded { depth, retry_after_hint }) => {
                 assert!(depth > 0, "seed={seed}: Overloaded with empty overflow");
                 assert!(
@@ -133,16 +142,43 @@ fn soak(seed: u64) {
         }
     }
 
-    // liveness: every handle must resolve well inside the timeout
+    // liveness: every handle must resolve well inside the timeout —
+    // streams step by step, the greedy prefix recorded per step so the
+    // oracle can replay it. `delivered` holds every Ok logit row as
+    // (tenant, exact tokens the row was computed for, logits).
     let mut delivered: Vec<(String, Vec<i32>, Vec<f32>)> = Vec::new();
-    let (mut ddl, mut faulted, mut dead) = (0usize, 0usize, 0usize);
-    for (tenant, prompt, mut h) in handles {
-        let r = h
-            .wait_timeout(Duration::from_secs(30))
-            .unwrap_or_else(|| panic!("seed={seed}: a handle never resolved — liveness lost"));
-        match r {
-            Ok(reply) => delivered.push((tenant, prompt, reply.logits)),
-            Err(ServeError::DeadlineExceeded { .. }) => ddl += 1,
+    let (mut completed, mut ddl, mut faulted, mut dead) = (0usize, 0usize, 0usize, 0usize);
+    let (mut ok_replies, mut ddl_midstream, mut streams_with_step) = (0usize, 0usize, 0usize);
+    for (tenant, prompt, steps, mut h) in handles {
+        let mut prefix = prompt;
+        let mut steps_seen = 0usize;
+        let terminal = loop {
+            let r = h.wait_timeout(Duration::from_secs(30)).unwrap_or_else(|| {
+                panic!("seed={seed}: a handle never resolved — liveness lost")
+            });
+            match r {
+                Ok(reply) => {
+                    steps_seen += 1;
+                    assert_eq!(reply.step, steps_seen, "seed={seed}: steps out of order");
+                    assert_eq!(reply.last, steps_seen == steps, "seed={seed}");
+                    ok_replies += 1;
+                    delivered.push((tenant.clone(), prefix.clone(), reply.logits.clone()));
+                    if reply.last {
+                        break Ok(());
+                    }
+                    prefix.push(greedy_next_token(&reply.logits));
+                }
+                Err(e) => break Err(e),
+            }
+        };
+        let got_any = steps_seen > 0;
+        streams_with_step += (steps > 1 && got_any) as usize;
+        match terminal {
+            Ok(()) => completed += 1,
+            Err(ServeError::DeadlineExceeded { .. }) => {
+                ddl += 1;
+                ddl_midstream += got_any as usize;
+            }
             Err(ServeError::BackendFault(msg)) => {
                 assert!(msg.contains("chaos"), "seed={seed}: non-injected fault: {msg}");
                 faulted += 1;
@@ -157,7 +193,7 @@ fn soak(seed: u64) {
 
     // every submitted request is accounted for exactly once
     assert_eq!(
-        delivered.len() + ddl + faulted + dead + overloaded + shed_at_submit + refused_dead,
+        completed + ddl + faulted + dead + overloaded + shed_at_submit + refused_dead,
         REQUESTS,
         "seed={seed}: outcomes do not partition the request stream"
     );
@@ -191,6 +227,30 @@ fn soak(seed: u64) {
         stats.shed_deadline,
         ddl + shed_at_submit,
         "seed={seed}: shed_deadline disagrees with observed DeadlineExceeded outcomes"
+    );
+    // step-level accounting: a decode step is counted exactly when a
+    // step reply is delivered; a mid-stream shed is exactly a
+    // DeadlineExceeded terminal after ≥ 1 delivered step
+    assert_eq!(
+        stats.steps, ok_replies,
+        "seed={seed}: steps counter disagrees with delivered step replies"
+    );
+    assert_eq!(
+        stats.shed_midstream, ddl_midstream,
+        "seed={seed}: shed_midstream disagrees with streams shed after a step"
+    );
+    assert!(
+        stats.shed_midstream <= stats.shed_deadline,
+        "seed={seed}: shed_midstream must be a subset of shed_deadline"
+    );
+    // a stream is counted at its first decode step, so the counter is
+    // bracketed by streams that produced a step (a first fused attempt
+    // can fault without delivering) and streams admitted at submit
+    assert!(
+        streams_with_step <= stats.stream_requests
+            && stats.stream_requests <= streams_admitted,
+        "seed={seed}: stream_requests {} outside [{streams_with_step}, {streams_admitted}]",
+        stats.stream_requests
     );
     assert!(
         stats.retries <= REQUESTS * (WORKERS + 2),
@@ -237,6 +297,17 @@ fn soak(seed: u64) {
         stats.shed_deadline as u64,
         "seed={seed}: shed_deadline views disagree"
     );
+    assert_eq!(tv("serve.steps"), stats.steps as u64, "seed={seed}: serve.steps");
+    assert_eq!(
+        tv("serve.stream_requests"),
+        stats.stream_requests as u64,
+        "seed={seed}: serve.stream_requests"
+    );
+    assert_eq!(
+        tv("serve.shed_midstream"),
+        stats.shed_midstream as u64,
+        "seed={seed}: serve.shed_midstream"
+    );
     assert_eq!(tv("pool.retries"), stats.retries as u64, "seed={seed}: pool.retries");
     assert_eq!(tv("pool.steals"), stats.steals as u64, "seed={seed}: pool.steals");
     assert_eq!(tv("pool.reroutes"), stats.reroutes as u64, "seed={seed}: pool.reroutes");
@@ -266,6 +337,11 @@ fn soak(seed: u64) {
     }
     // chaos.* mirrors FaultStats exactly (summed across workers)
     assert_eq!(tv("chaos.forwards"), total_forwards, "seed={seed}: chaos.forwards");
+    assert_eq!(
+        tv("chaos.step_forwards"),
+        injected.iter().map(|s| s.steps()).sum::<u64>(),
+        "seed={seed}: chaos.step_forwards"
+    );
     assert_eq!(tv("chaos.errors_injected"), total_errors, "seed={seed}: chaos.errors");
     assert_eq!(
         tv("chaos.panics_injected"),
@@ -290,8 +366,10 @@ fn soak(seed: u64) {
     );
     std::fs::remove_file(&jsonl_path).ok();
 
-    // correctness: every delivered reply is bit-identical to a clean
-    // serial single-worker oracle over an identically-built registry
+    // correctness: every delivered logit row (one-shot replies AND
+    // each stream step, keyed by the exact prefix it was computed for)
+    // is bit-identical to a clean serial single-worker oracle over an
+    // identically-built registry
     let oracle_reg = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
     let oreg = oracle_reg.clone();
     let oracle = BatchServer::spawn_with(
@@ -311,6 +389,83 @@ fn soak(seed: u64) {
         );
     }
     oracle.shutdown();
+}
+
+/// Steal-then-shed: with stealing ON, slow workers, and tight
+/// deadlines on an open-loop burst, requests are shed wherever they
+/// sit — at submit, parked, stolen onto another worker's queue, or in
+/// a drained batch — and every shed is counted EXACTLY once across the
+/// pool/server `shed_deadline` split, reconciling with the client-side
+/// outcome partition. (This is the fold the telemetry wiring clones
+/// per-view; any double-count or missed mirror breaks the equalities.)
+#[test]
+fn steal_then_shed_counts_every_deadline_exactly_once() {
+    let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+    let treg = Arc::new(telemetry::Registry::enabled());
+    let mut pcfg = PoolConfig::new(2, Duration::from_millis(1));
+    pcfg.steal = true;
+    pcfg.park_bound = Some(4);
+    pcfg.park_age = Some(Duration::from_millis(1));
+    pcfg.telemetry = Some(treg.clone());
+    let reg = registry.clone();
+    let pool = ServerPool::spawn_with(pcfg, registry, move |_w| {
+        Ok(Box::new(
+            ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base())
+                .with_forward_delay(Duration::from_millis(8)),
+        ) as Box<dyn ServeBackend>)
+    })
+    .unwrap();
+
+    let mut handles = Vec::new();
+    let (mut shed_submit, mut overloaded) = (0usize, 0usize);
+    const BURST: usize = 120;
+    for i in 0..BURST {
+        // two tenants so one worker can sit idle and steal
+        let tenant = format!("tenant{}", i % 2);
+        let deadline = (i % 2 == 1).then(|| Instant::now() + Duration::from_millis(12));
+        match pool.submit_with_deadline(&tenant, vec![1 + (i % 8) as i32], deadline) {
+            Ok(p) => handles.push(p),
+            Err(ServeError::DeadlineExceeded { .. }) => shed_submit += 1,
+            Err(ServeError::Overloaded { .. }) => overloaded += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let (mut delivered, mut ddl) = (0usize, 0usize);
+    for mut h in handles {
+        match h.wait_timeout(Duration::from_secs(30)).expect("liveness lost") {
+            Ok(_) => delivered += 1,
+            Err(ServeError::DeadlineExceeded { .. }) => ddl += 1,
+            Err(e) => panic!("unexpected terminal error: {e}"),
+        }
+    }
+
+    let stats = pool.stats();
+    assert_eq!(
+        delivered + ddl + shed_submit + overloaded,
+        BURST,
+        "outcomes do not partition the burst: {stats:?}"
+    );
+    assert!(delivered > 0, "nothing delivered: {stats:?}");
+    assert!(
+        ddl + shed_submit > 0,
+        "no deadline ever fired — the scenario lost its teeth: {stats:?}"
+    );
+    assert_eq!(
+        stats.shed_deadline,
+        ddl + shed_submit,
+        "a shed was dropped or double-counted: {stats:?}"
+    );
+    assert_eq!(stats.shed_midstream, 0, "one-shot load cannot shed mid-stream: {stats:?}");
+    let snap = treg.snapshot();
+    let tv = |key: &str| telem_value(&snap, key);
+    assert_eq!(
+        tv("pool.shed_deadline") + tv("serve.shed_deadline"),
+        stats.shed_deadline as u64,
+        "the two shed_deadline views do not sum to the fold"
+    );
+    assert_eq!(tv("serve.steps"), stats.steps as u64, "serve.steps");
+    assert_eq!(stats.steps, delivered, "each one-shot delivery is exactly one step");
+    pool.shutdown();
 }
 
 #[test]

@@ -8,6 +8,7 @@ use irqlora::quant::{
     blockwise, double_quant::DoubleQuant, entropy, fp8, fused, icq, integer, nf,
     DequantScratch, QuantizedTensor,
 };
+use irqlora::telemetry::{read_last_snapshot, Registry};
 use irqlora::util::f16;
 use irqlora::util::{stats, Rng, Tensor};
 
@@ -581,4 +582,55 @@ fn prop_fused_slot_plan_order_and_bounds() {
             refs.iter().collect();
         assert_eq!(plan.len(), distinct.len(), "seed={seed}");
     });
+}
+
+#[test]
+fn prop_jsonl_roundtrip_survives_adversarial_labels() {
+    // Adapter names flow into telemetry label values, so any byte soup
+    // must survive Appender -> read_last_snapshot with exactly the
+    // documented sanitization (quote / backslash / control -> '_') —
+    // and must never forge or shadow a neighbouring line's fields,
+    // even when the label spells out field names like `value: 99`.
+    const NASTY: &[char] = &[
+        'a', 'Z', '9', '"', '\\', '\n', '\t', '{', '}', ',', ':', ' ', '.', 'é', '→',
+        'v', 'l', 'u', 'e', 's', 'n', 'p', 'h', 'o', 't',
+    ];
+    let path = std::env::temp_dir()
+        .join(format!("irqlora_prop_jsonl_{}.jsonl", std::process::id()));
+    cases(40, 77, |seed, rng| {
+        let _ = std::fs::remove_file(&path);
+        let r = Registry::enabled().with_jsonl(&path);
+        let n_labels = 1 + rng.below(3);
+        let mut wanted: Vec<(String, u64)> = Vec::new();
+        for li in 0..n_labels {
+            let len = 1 + rng.below(16);
+            let val: String = (0..len).map(|_| NASTY[rng.below(NASTY.len())]).collect();
+            let v = rng.below(10_000) as u64 + 1;
+            let li_s = li.to_string();
+            r.counter("prop.requests", &[("adapter", val.as_str()), ("i", li_s.as_str())])
+                .add(v);
+            let sanitized: String = val
+                .chars()
+                .map(|c| if c == '"' || c == '\\' || c.is_control() { '_' } else { c })
+                .collect();
+            wanted.push((format!("prop.requests{{adapter={sanitized},i={li}}}"), v));
+        }
+        r.counter("prop.sentinel", &[]).add(7);
+        r.flush_jsonl().unwrap();
+
+        let last =
+            read_last_snapshot(&path).unwrap_or_else(|| panic!("seed={seed}: unreadable file"));
+        for (key, v) in &wanted {
+            let e = last.entries.iter().find(|e| &e.key == key).unwrap_or_else(|| {
+                panic!(
+                    "seed={seed}: key {key:?} missing from {:?}",
+                    last.entries.iter().map(|e| &e.key).collect::<Vec<_>>()
+                )
+            });
+            assert_eq!(e.value, *v, "seed={seed} key={key:?}");
+        }
+        let s = last.entries.iter().find(|e| e.key == "prop.sentinel").unwrap();
+        assert_eq!(s.value, 7, "seed={seed}: sentinel shadowed by adversarial neighbour");
+    });
+    let _ = std::fs::remove_file(&path);
 }

@@ -1,0 +1,349 @@
+//! Streaming-decode battery: continuous batching end to end.
+//!
+//! - **bit-identity**: every per-step logit row of every concurrent
+//!   stream is bit-identical to BOTH the one-shot fused answer for the
+//!   greedy-extended prefix at that step and a clean serial per-group
+//!   oracle, for k ∈ {2, 3, 4, 8} mixed-adapter stream sets — and the
+//!   serial-mode (`fused: false`) scheduler reproduces the fused-mode
+//!   streams exactly;
+//! - **mid-stream deadline shed**: a stream whose deadline expires
+//!   after it has produced tokens terminates with `DeadlineExceeded`,
+//!   is counted once in `shed_midstream`, and does NOT poison the
+//!   co-batched tenant riding in the same fused steps;
+//! - **mid-stream worker death**: an injected panic between decode
+//!   steps surfaces as `WorkerDead` on the live iterator after the
+//!   already-delivered steps, which remain bit-correct.
+//!
+//! The oracle strategy mirrors `chaos_soak`: reference logits depend
+//! only on (base, adapter, row tokens), so a one-shot query for the
+//! prefix a stream had at step j reproduces that step exactly.
+
+use irqlora::coordinator::backend::{ReferenceBackend, ServeBackend};
+use irqlora::coordinator::pool::{PoolConfig, ServerPool};
+use irqlora::coordinator::{
+    greedy_next_token, synthetic_serve_registry, BatchServer, FaultBackend, FaultConfig,
+    ServeError, ServerConfig,
+};
+use irqlora::telemetry;
+use std::time::{Duration, Instant};
+
+const BATCH: usize = 8;
+const SEQ: usize = 32;
+const VOCAB: usize = 64;
+const TENANTS: usize = 8;
+const FIXTURE_SEED: u64 = 7;
+
+fn serial_oracle() -> BatchServer {
+    let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+    let reg = registry.clone();
+    BatchServer::spawn_with(
+        ServerConfig::new(Duration::from_millis(1)).serial(),
+        registry,
+        move || {
+            Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                as Box<dyn ServeBackend>)
+        },
+    )
+    .unwrap()
+}
+
+/// (tenant, prompt, steps) for `k` concurrent mixed-adapter streams.
+fn stream_specs(k: usize) -> Vec<(String, Vec<i32>, usize)> {
+    (0..k)
+        .map(|i| {
+            let tenant = format!("tenant{}", i % TENANTS);
+            let prompt: Vec<i32> = (0..2 + i % 3)
+                .map(|t| (1 + (i * 13 + t * 5) % (VOCAB - 1)) as i32)
+                .collect();
+            (tenant, prompt, 3 + i % 4)
+        })
+        .collect()
+}
+
+/// Drive every spec as a live stream on `pool`, concurrently (so the
+/// streams actually co-batch), returning each stream's per-step logits.
+fn drive_streams(
+    pool: &ServerPool,
+    specs: &[(String, Vec<i32>, usize)],
+) -> Vec<Vec<Vec<f32>>> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|(tenant, prompt, steps)| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let pending = pool.submit_stream(tenant, prompt.clone(), *steps).unwrap();
+                    for (j, r) in pending.enumerate() {
+                        let r = r.unwrap_or_else(|e| {
+                            panic!("stream '{tenant}' step {}: {e}", j + 1)
+                        });
+                        assert_eq!(r.step, j + 1, "stream '{tenant}'");
+                        assert_eq!(r.last, j + 1 == *steps, "stream '{tenant}'");
+                        out.push(r.logits);
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// k concurrent mixed-adapter streams on the fused continuous-batching
+/// pool: every step bit-identical to the one-shot fused answer AND the
+/// serial per-group oracle for the greedy prefix at that step, and the
+/// serial-mode scheduler reproduces the fused-mode streams exactly.
+#[test]
+fn concurrent_streams_match_oneshot_and_serial_oracles() {
+    let oracle = serial_oracle();
+    for k in [2usize, 3, 4, 8] {
+        let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+        let reg = registry.clone();
+        let pool = ServerPool::spawn_with(
+            PoolConfig::new(2, Duration::from_millis(2)),
+            registry,
+            move |_w| {
+                Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                    as Box<dyn ServeBackend>)
+            },
+        )
+        .unwrap();
+
+        let specs = stream_specs(k);
+        let streamed = drive_streams(&pool, &specs);
+
+        let mut oneshot_queries = 0usize;
+        for (si, ((tenant, prompt, steps), stream)) in specs.iter().zip(&streamed).enumerate()
+        {
+            assert_eq!(stream.len(), *steps, "k={k} stream {si} lost steps");
+            let mut prefix = prompt.clone();
+            for (j, logits) in stream.iter().enumerate() {
+                let serial = oracle.query(tenant, prefix.clone()).unwrap().logits;
+                let oneshot = pool.query(tenant, prefix.clone()).unwrap().logits;
+                oneshot_queries += 1;
+                assert_eq!(logits.len(), serial.len(), "k={k} stream {si}");
+                for (i, a) in logits.iter().enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        serial[i].to_bits(),
+                        "k={k} stream {si} step {} logit {i}: streamed vs serial oracle",
+                        j + 1
+                    );
+                    assert_eq!(
+                        a.to_bits(),
+                        oneshot[i].to_bits(),
+                        "k={k} stream {si} step {} logit {i}: streamed vs one-shot fused",
+                        j + 1
+                    );
+                }
+                prefix.push(greedy_next_token(logits));
+            }
+        }
+
+        let s = pool.stats();
+        let stream_steps: usize = specs.iter().map(|(_, _, n)| *n).sum();
+        assert_eq!(s.stream_requests, k, "k={k}: {s:?}");
+        assert_eq!(s.steps, stream_steps + oneshot_queries, "k={k}: {s:?}");
+        assert_eq!(s.requests, k + oneshot_queries, "k={k}: {s:?}");
+        assert_eq!(s.fused_batches, s.batches, "k={k} fell off the fused path: {s:?}");
+        pool.shutdown();
+
+        // the serial-mode scheduler (per-group forward per step) must
+        // reproduce the fused-mode streams bit-for-bit
+        let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+        let reg = registry.clone();
+        let mut pcfg = PoolConfig::new(2, Duration::from_millis(2));
+        pcfg.fused = false;
+        let serial_pool = ServerPool::spawn_with(pcfg, registry, move |_w| {
+            Ok(Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base()))
+                as Box<dyn ServeBackend>)
+        })
+        .unwrap();
+        let serial_streamed = drive_streams(&serial_pool, &specs);
+        for (si, (fused, serial)) in streamed.iter().zip(&serial_streamed).enumerate() {
+            assert_eq!(fused.len(), serial.len(), "k={k} stream {si}");
+            for (j, (fl, sl)) in fused.iter().zip(serial).enumerate() {
+                for (i, (a, b)) in fl.iter().zip(sl).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "k={k} stream {si} step {} logit {i}: fused vs serial scheduler",
+                        j + 1
+                    );
+                }
+            }
+        }
+        let s = serial_pool.stats();
+        assert_eq!(s.fused_batches, 0, "k={k}: serial config used the fused path: {s:?}");
+        assert_eq!(s.steps, stream_steps, "k={k}: {s:?}");
+        serial_pool.shutdown();
+    }
+    oracle.shutdown();
+}
+
+/// A stream whose deadline expires mid-decode is shed with
+/// `DeadlineExceeded` after the steps it already produced, counted
+/// once in `shed_midstream` — and the co-batched tenant's stream runs
+/// to completion bit-identically (no poisoning).
+#[test]
+fn midstream_deadline_shed_does_not_poison_cobatched_stream() {
+    let oracle = serial_oracle();
+    let treg = std::sync::Arc::new(telemetry::Registry::enabled());
+    let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+    let reg = registry.clone();
+    // one worker, a generous fill window (both streams join the first
+    // fused step), and a slow backend so the deadline lands mid-stream
+    let mut pcfg = PoolConfig::new(1, Duration::from_millis(50));
+    pcfg.telemetry = Some(treg.clone());
+    let pool = ServerPool::spawn_with(pcfg, registry, move |_w| {
+        Ok(Box::new(
+            ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base())
+                .with_forward_delay(Duration::from_millis(25)),
+        ) as Box<dyn ServeBackend>)
+    })
+    .unwrap();
+
+    // doomed: 30 steps at ~25ms each would take ~750ms; the 400ms
+    // deadline expires after the first steps have landed but long
+    // before the last (3 prompt tokens + 29 extensions just fits SEQ)
+    let doomed = pool
+        .submit_stream_with_deadline(
+            "tenant0",
+            vec![1, 2, 3],
+            30,
+            Some(Instant::now() + Duration::from_millis(400)),
+        )
+        .unwrap();
+    let healthy = pool.submit_stream("tenant1", vec![4, 5], 5).unwrap();
+
+    let (doomed_steps, healthy_logits) = std::thread::scope(|scope| {
+        let d = scope.spawn(move || {
+            let mut ok = 0usize;
+            let mut shed = false;
+            for r in doomed {
+                match r {
+                    Ok(reply) => {
+                        assert!(!shed, "a step arrived after the terminal shed");
+                        assert_eq!(reply.step, ok + 1);
+                        ok += 1;
+                    }
+                    Err(ServeError::DeadlineExceeded { .. }) => shed = true,
+                    Err(e) => panic!("doomed stream: unexpected error {e}"),
+                }
+            }
+            assert!(shed, "the doomed stream was never shed");
+            ok
+        });
+        let h = scope.spawn(move || {
+            let mut out = Vec::new();
+            for (j, r) in healthy.enumerate() {
+                let r = r.unwrap_or_else(|e| panic!("healthy stream step {}: {e}", j + 1));
+                if j == 0 {
+                    assert_eq!(
+                        r.batch_size, 2,
+                        "the streams did not co-batch — the test lost its point"
+                    );
+                }
+                out.push(r.logits);
+            }
+            out
+        });
+        (d.join().unwrap(), h.join().unwrap())
+    });
+
+    assert!(doomed_steps >= 1, "deadline expired before any step was produced");
+    assert!(doomed_steps < 30, "the doomed stream was never shed");
+    assert_eq!(healthy_logits.len(), 5, "the healthy stream lost steps");
+    let mut prefix = vec![4, 5];
+    for (j, logits) in healthy_logits.iter().enumerate() {
+        let want = oracle.query("tenant1", prefix.clone()).unwrap().logits;
+        for (i, (a, b)) in logits.iter().zip(&want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "healthy stream step {} logit {i} poisoned by the co-batched shed",
+                j + 1
+            );
+        }
+        prefix.push(greedy_next_token(logits));
+    }
+
+    let s = pool.stats();
+    assert_eq!(s.shed_midstream, 1, "{s:?}");
+    assert_eq!(s.shed_deadline, 1, "{s:?}");
+    assert_eq!(s.stream_requests, 2, "{s:?}");
+    assert_eq!(s.steps, doomed_steps + 5, "{s:?}");
+
+    // telemetry mirrors the step-level counters at the same sites
+    let snap = treg.snapshot();
+    let tv = |key: &str| snap.iter().find(|e| e.key == key).map_or(0, |e| e.value);
+    assert_eq!(tv("serve.steps"), s.steps as u64);
+    assert_eq!(tv("serve.stream_requests"), s.stream_requests as u64);
+    assert_eq!(tv("serve.shed_midstream"), s.shed_midstream as u64);
+    assert_eq!(
+        tv("pool.shed_deadline") + tv("serve.shed_deadline"),
+        s.shed_deadline as u64,
+        "shed_deadline views disagree"
+    );
+    pool.shutdown();
+    oracle.shutdown();
+}
+
+/// A worker panic between decode steps surfaces as `WorkerDead` on the
+/// live iterator; the steps delivered before the death are bit-correct.
+#[test]
+fn midstream_worker_death_surfaces_worker_dead() {
+    let oracle = serial_oracle();
+    let registry = synthetic_serve_registry(TENANTS, FIXTURE_SEED);
+    let reg = registry.clone();
+    let pool = ServerPool::spawn_with(
+        PoolConfig::new(1, Duration::from_millis(1)),
+        registry,
+        move |_w| {
+            // deterministic: the 4th backend call (= 4th decode step
+            // of the only stream) panics the worker
+            let cfg = FaultConfig { panic_after: Some(4), ..FaultConfig::default() };
+            Ok(Box::new(FaultBackend::new(
+                Box::new(ReferenceBackend::new(BATCH, SEQ, VOCAB, reg.base())),
+                cfg,
+            )) as Box<dyn ServeBackend>)
+        },
+    )
+    .unwrap();
+
+    let mut delivered: Vec<Vec<f32>> = Vec::new();
+    let mut died = false;
+    for (j, r) in pool.submit_stream("tenant2", vec![7, 8], 10).unwrap().enumerate() {
+        match r {
+            Ok(reply) => {
+                assert!(!died, "a step arrived after the terminal death");
+                assert_eq!(reply.step, j + 1);
+                delivered.push(reply.logits);
+            }
+            Err(ServeError::WorkerDead { .. }) => died = true,
+            Err(e) => panic!("unexpected terminal error: {e}"),
+        }
+    }
+    assert!(died, "the worker death never surfaced on the stream");
+    assert_eq!(delivered.len(), 3, "exactly the pre-panic steps must be delivered");
+
+    let mut prefix = vec![7, 8];
+    for (j, logits) in delivered.iter().enumerate() {
+        let want = oracle.query("tenant2", prefix.clone()).unwrap().logits;
+        for (i, (a, b)) in logits.iter().zip(&want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "pre-death step {} logit {i} diverged from the oracle",
+                j + 1
+            );
+        }
+        prefix.push(greedy_next_token(logits));
+    }
+
+    let s = pool.stats();
+    assert_eq!(s.steps, 3, "{s:?}");
+    assert!(s.workers[0].dead.is_some(), "the pool never noticed the death: {s:?}");
+    pool.shutdown();
+    oracle.shutdown();
+}

@@ -90,6 +90,12 @@ echo "== chaos soak (seeded deterministic fault injection) =="
 (cd rust && cargo test -q --test chaos_soak)
 (cd rust && IRQLORA_SERVE_STEAL=0 cargo test -q --test chaos_soak)
 
+echo "== streaming decode battery (continuous batching vs serial oracle) =="
+# Concurrent k-stream bit-identity against both the serial oracle and
+# the one-shot fused path, mid-stream deadline shed without poisoning
+# co-batched streams, and mid-stream worker death surfacing WorkerDead.
+(cd rust && cargo test -q --test streaming_decode)
+
 echo "== backend HAL matrix (irqlora backends + native-backend batteries) =="
 # The capability listing must include both in-tree CPU backends; a
 # registration/validation regression that drops one would otherwise
@@ -237,6 +243,14 @@ if [[ "${VERIFY_SKIP_BENCH:-0}" == 0 ]]; then
     echo "verify.sh: ERROR: serve_latency smoke emitted no paired backend=native/backend=reference rows" >&2
     echo "verify.sh: (the HAL-built native-vs-reference sweep should run without artifacts)" >&2
     exit 12
+  fi
+  if ! grep -q "serve_latency streamed ttft p50" "$SMOKE_JSON" \
+     || ! grep -q "serve_latency streamed ttft p99" "$SMOKE_JSON" \
+     || ! grep -q "serve_latency streamed tokens_per_sec" "$SMOKE_JSON" \
+     || ! grep -q "serve_latency oneshot ttft p50" "$SMOKE_JSON"; then
+    echo "verify.sh: ERROR: serve_latency smoke emitted no paired streamed/oneshot rows" >&2
+    echo "verify.sh: (continuous-batching TTFT p50/p99 + tokens/sec should run without artifacts)" >&2
+    exit 15
   fi
 fi
 
