@@ -1,0 +1,139 @@
+//! Bench: kernel-layer GEMM throughput — the packed-domain matvec
+//! (`kernels::gemm_packed`, y = W_q·x straight from NF-k codes)
+//! against its serial reference twin AND against the path it replaces
+//! (dequantize the tensor, then run the blocked dense kernel), plus
+//! the dense `gemm_f32` pair and the `lora::merge` delta pair.
+//!
+//! Every fast row has a `[reference serial]` partner with the same
+//! stem, so BENCH_quant.json records the before/after ratio with the
+//! code that produced it; verify.sh's smoke pass asserts the pairs
+//! exist. All pairs are bit-identical by the kernels' oracle contract
+//! (`tests/kernel_identity.rs`), so the rows measure the same
+//! arithmetic — only the storage domain and scheduling differ.
+//!
+//! Run: cargo bench --bench kernel_throughput
+//! Env: IRQLORA_BENCH_QUICK=1 (1 iter smoke), IRQLORA_THREADS=n,
+//!      IRQLORA_BENCH_JSON=path, IRQLORA_GEMM_BLOCK,
+//!      IRQLORA_GEMM_SERIAL_BELOW
+
+use irqlora::bench_harness::{bench_json_path, bench_throughput, iters, JsonSink};
+use irqlora::kernels::{
+    gemm_f32, gemm_f32_reference, gemm_packed_into, gemm_packed_reference, PackedGemmScratch,
+};
+use irqlora::lora::merge::{merge_delta_into, merge_delta_reference};
+use irqlora::quant::{DequantScratch, QuantizedTensor};
+use irqlora::util::{Rng, Tensor};
+
+fn main() {
+    let mut rng = Rng::new(9);
+    let it = iters(20);
+    let mut sink = JsonSink::new();
+
+    // --- packed matvec: k sweep × three sizes ---------------------
+    // Sizes straddle the serial threshold: the small shape runs the
+    // serial packed path, the larger two fan rows across workers.
+    let sizes: [(usize, usize); 3] = [(64, 256), (256, 1024), (512, 2048)];
+    for k in [2u8, 3, 4, 8] {
+        for (rows, cols) in sizes {
+            let n = rows * cols;
+            let w = Tensor::new(&[rows, cols], rng.normal_vec(n, 0.0, 0.02));
+            let qt = QuantizedTensor::quantize(&w, k, 64, None);
+            let x = rng.normal_vec(cols, 0.0, 1.0);
+            let stem = format!("gemm_packed_nf{k} ({rows}x{cols})");
+
+            let r = bench_throughput(
+                &format!("{stem} [reference serial]"),
+                1,
+                it,
+                n as f64,
+                "madd",
+                || {
+                    std::hint::black_box(gemm_packed_reference(&qt, &x));
+                },
+            );
+            sink.push(&r, Some(n as f64));
+
+            // the path gemm_packed replaces: materialize the f32
+            // matrix, then run the blocked dense kernel over it
+            let mut deq = vec![0f32; n];
+            let mut dq_scratch = DequantScratch::default();
+            let r = bench_throughput(
+                &format!("dequant_then_gemm_nf{k} ({rows}x{cols})"),
+                1,
+                it,
+                n as f64,
+                "madd",
+                || {
+                    qt.dequantize_into(&mut deq, &mut dq_scratch);
+                    std::hint::black_box(gemm_f32(&deq, &x, rows, cols, 1));
+                },
+            );
+            sink.push(&r, Some(n as f64));
+
+            let mut y = Vec::new();
+            let mut scratch = PackedGemmScratch::new();
+            let r = bench_throughput(&stem, 1, it, n as f64, "madd", || {
+                gemm_packed_into(&qt, &x, &mut y, &mut scratch);
+                std::hint::black_box(&y);
+            });
+            sink.push(&r, Some(n as f64));
+        }
+    }
+
+    // --- dense blocked kernel pair --------------------------------
+    let (m, kd, n_cols) = (256usize, 256usize, 64usize);
+    let a = rng.normal_vec(m * kd, 0.0, 0.5);
+    let b = rng.normal_vec(kd * n_cols, 0.0, 0.5);
+    let madds = (m * kd * n_cols) as f64;
+    let r = bench_throughput(
+        &format!("gemm_f32 ({m}x{kd}x{n_cols}) [reference serial]"),
+        1,
+        it,
+        madds,
+        "madd",
+        || {
+            std::hint::black_box(gemm_f32_reference(&a, &b, m, kd, n_cols));
+        },
+    );
+    sink.push(&r, Some(madds));
+    let r = bench_throughput(
+        &format!("gemm_f32 ({m}x{kd}x{n_cols})"),
+        1,
+        it,
+        madds,
+        "madd",
+        || {
+            std::hint::black_box(gemm_f32(&a, &b, m, kd, n_cols));
+        },
+    );
+    sink.push(&r, Some(madds));
+
+    // --- lora::merge dense-delta pair (ΔW = ℓ̃1·ℓ̃2) ---------------
+    let (h, rr, o) = (256usize, 16usize, 256usize);
+    let l1 = rng.normal_vec(h * rr, 0.0, 0.3);
+    let l2 = rng.normal_vec(rr * o, 0.0, 0.3);
+    let madds = (h * rr * o) as f64;
+    let r = bench_throughput(
+        &format!("merge_delta ({h}x{rr}x{o}) [reference serial]"),
+        1,
+        it,
+        madds,
+        "madd",
+        || {
+            std::hint::black_box(merge_delta_reference(&l1, &l2, h, rr, o));
+        },
+    );
+    sink.push(&r, Some(madds));
+    let mut delta = Vec::new();
+    let r = bench_throughput(&format!("merge_delta ({h}x{rr}x{o})"), 1, it, madds, "madd", || {
+        merge_delta_into(&l1, &l2, h, rr, o, &mut delta);
+        std::hint::black_box(&delta);
+    });
+    sink.push(&r, Some(madds));
+
+    let path = bench_json_path("BENCH_quant.json");
+    match sink.write_merged(&path) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}

@@ -110,6 +110,12 @@ impl<'rt> Evaluator<'rt> {
     /// never re-dequantize storage tensors per evaluation. Works for
     /// uniform-k and mixed-k (plan-driven) models alike: by this point
     /// the base is plain f32, so per-tensor bit-widths are invisible.
+    ///
+    /// Consumers that need `W_q·x` against a stored projection (rather
+    /// than the whole-graph forward) should not dequantize-then-matmul:
+    /// [`QuantizedModel::packed_matvec`] computes the same bits
+    /// straight from packed storage via `kernels::gemm_packed`, never
+    /// materializing the dequantized matrix.
     pub fn from_quantized(
         rt: &'rt Runtime,
         manifest: &Manifest,

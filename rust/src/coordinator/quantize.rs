@@ -57,6 +57,34 @@ impl QuantizedModel {
         self.reports.iter().map(|r| r.entropy).sum::<f64>() / self.reports.len() as f64
     }
 
+    /// `y = W_q·x` for the named quantized projection, computed
+    /// straight from packed NF-k storage via
+    /// [`crate::kernels::gemm_packed_into`] — the evaluator-facing
+    /// packed-domain replacement for "dequantize the tensor, then
+    /// matmul". Bit-identical to running
+    /// [`crate::kernels::gemm_f32_reference`] over
+    /// `self.dequantized[name]`, for every stored k (mixed-k models
+    /// dispatch per tensor). The dequantized matrix is never
+    /// materialized; with warm `y`/`scratch` the call allocates
+    /// nothing. Errors if `name` has no packed storage entry (f16 /
+    /// integer methods, pass-through tensors) — callers fall back to
+    /// the dense path for those.
+    pub fn packed_matvec(
+        &self,
+        name: &str,
+        x: &[f32],
+        y: &mut Vec<f32>,
+        scratch: &mut crate::kernels::PackedGemmScratch,
+    ) -> Result<()> {
+        let (_, qt) = self
+            .storage
+            .iter()
+            .find(|(n, _)| n == name)
+            .ok_or_else(|| anyhow!("tensor '{name}' has no packed storage entry"))?;
+        crate::kernels::gemm_packed_into(qt, x, y, scratch);
+        Ok(())
+    }
+
     /// Model storage in megabytes: quantized projections at their
     /// effective bits, everything else at 16-bit (Table 6 #Params).
     pub fn storage_mb(&self) -> f64 {
@@ -451,6 +479,64 @@ mod tests {
         }
         // non-projection tensors pass through
         assert_eq!(qm.dequantized.get("embed").unwrap(), m.get("embed").unwrap());
+    }
+
+    /// `packed_matvec` must land on the exact bits of the dense
+    /// dequantize-then-matmul oracle for every stored tensor — uniform
+    /// and mixed-k — and refuse tensors with no packed storage.
+    #[test]
+    fn packed_matvec_matches_dense_oracle() {
+        use crate::kernels::{gemm_f32_reference, PackedGemmScratch};
+        use crate::precision::{PlanEntry, PrecisionPlan};
+
+        let m = tiny_model(8);
+        let icq_cfg = icq::IcqConfig::default();
+        let plan = PrecisionPlan {
+            budget_bits: 3.0,
+            block: blockwise::DEFAULT_BLOCK,
+            entries: vec![
+                PlanEntry {
+                    name: "l0.wq".into(),
+                    k: 2,
+                    n_params: m.get("l0.wq").unwrap().len(),
+                    entropy: 0.0,
+                    bits_per_weight: 0.0,
+                },
+                PlanEntry {
+                    name: "l0.w2".into(),
+                    k: 8,
+                    n_params: m.get("l0.w2").unwrap().len(),
+                    entropy: 0.0,
+                    bits_per_weight: 0.0,
+                },
+            ],
+        };
+        for qm in [
+            quantize_model(&m, Method::NfIcq { k: 4 }, 0).unwrap(),
+            quantize_model_planned(&m, &plan, &icq_cfg).unwrap(),
+        ] {
+            let mut y = Vec::new();
+            let mut scratch = PackedGemmScratch::new();
+            for (name, qt) in &qm.storage {
+                let shape = qm.dequantized.get(name).unwrap().shape().to_vec();
+                let (rows, cols) = (shape[0], shape[1..].iter().product::<usize>());
+                assert_eq!(rows * cols, qt.len);
+                let x: Vec<f32> = (0..cols).map(|j| (j as f32 * 0.37).sin()).collect();
+                qm.packed_matvec(name, &x, &mut y, &mut scratch).unwrap();
+                let dense = qm.dequantized.get(name).unwrap().data();
+                let want = gemm_f32_reference(dense, &x, rows, cols, 1);
+                assert_eq!(y.len(), want.len(), "{name}");
+                for (i, (a, b)) in y.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{name} row {i}: {a} vs {b}");
+                }
+            }
+            // tensors with no packed storage are refused, not guessed at
+            let err = qm
+                .packed_matvec("embed", &[0.0; 64], &mut y, &mut scratch)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("no packed storage"), "{err}");
+        }
     }
 
     #[test]

@@ -525,6 +525,38 @@ mod tests {
         assert!(reg.merged("a").is_err());
     }
 
+    /// The kernel layer must not perturb the serving merge path:
+    /// registry-cached merged weights are byte-identical to a direct
+    /// `merge_adapter` call, and an evict/re-merge round trip
+    /// reproduces the exact same bytes under the exact same cache key
+    /// — `lora::merge` output is unchanged by `kernels` landing.
+    #[test]
+    fn merged_weights_byte_identical_to_direct_merge_across_round_trip() {
+        let masks = (0.8f32, 1.3f32);
+        let reg = AdapterRegistry::with_capacity(base(), masks, 4);
+        reg.register("a", adapter(11)).unwrap();
+        // adapter(seed) is deterministic, so this is the same source
+        let direct = merge_adapter(&adapter(11), masks).unwrap();
+        let (g1, m1) = reg.merged_tagged("a").unwrap();
+        assert_eq!(m1.len(), direct.len());
+        for (name, t) in direct.iter() {
+            let got = m1.get(name).unwrap();
+            assert_eq!(got.shape(), t.shape(), "{name}");
+            for (i, (a, b)) in got.data().iter().zip(t.data()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name} slot {i}");
+            }
+        }
+        reg.evict("a");
+        let (g2, m2) = reg.merged_tagged("a").unwrap();
+        assert_eq!(g1, g2, "evict/re-merge must keep the cache key");
+        for (name, t) in m1.iter() {
+            let got = m2.get(name).unwrap();
+            for (i, (a, b)) in got.data().iter().zip(t.data()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name} slot {i}");
+            }
+        }
+    }
+
     #[test]
     fn rejects_malformed_adapter() {
         let reg = AdapterRegistry::new(base(), (1.0, 1.0));

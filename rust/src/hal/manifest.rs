@@ -86,6 +86,13 @@ pub struct BackendManifest {
     /// bit-identical), it just recomputes the whole `[batch, seq]`
     /// forward each step.
     pub streaming_decode: bool,
+    /// `true` iff the backend consumes quantized base tensors straight
+    /// from packed NF-k storage via the packed-domain GEMM kernels
+    /// (`kernels::gemm_packed`) — no dequantized weight matrix is ever
+    /// materialized on its hot path. Backends that serve from the
+    /// model's dequantized f32 buffer declare `false` (correct, but
+    /// they pay the full dequant round trip per tensor).
+    pub packed_gemm: bool,
     /// What the adapter-side cache holds.
     pub cache: CacheSemantics,
     /// Approximate per-worker memory appetite in bytes (caches +
@@ -175,6 +182,9 @@ impl BackendManifest {
                 "single-position streaming decode required but not offered".into(),
             );
         }
+        if req.require_packed_gemm && !self.packed_gemm {
+            return Err("packed-domain GEMM required but not offered".into());
+        }
         Ok(())
     }
 }
@@ -244,6 +254,7 @@ mod tests {
             max_vocab: 64,
             fused_multi_adapter: true,
             streaming_decode: true,
+            packed_gemm: true,
             cache: CacheSemantics::HostFingerprint,
             approx_memory_bytes: 1 << 20,
         }
@@ -312,6 +323,16 @@ mod tests {
             .supports(&req)
             .unwrap_err()
             .contains("streaming decode"));
+        assert_eq!(m.supports(&req), Ok(()));
+
+        let mut dequant = good();
+        dequant.packed_gemm = false;
+        req = BackendRequest::new(8, 32, 64);
+        req.require_packed_gemm = true;
+        assert!(dequant
+            .supports(&req)
+            .unwrap_err()
+            .contains("packed-domain GEMM"));
         assert_eq!(m.supports(&req), Ok(()));
     }
 

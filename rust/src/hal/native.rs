@@ -20,14 +20,17 @@
 //!   are independent by contract, so a forward shards its `batch`
 //!   rows across the worker pool (deterministic regardless of worker
 //!   count — no cross-row reduction exists).
-//! - **Streaming quantized construction.** [`NativeBackend::from_quantized`]
+//! - **Packed-domain quantized construction.** [`NativeBackend::from_quantized`]
 //!   reduces the base fingerprint straight out of packed k-bit
 //!   storage, one [`FP_TILE`] tile at a time through
-//!   [`crate::quant::fused::dequantize_packed_into`] — the full
-//!   dequantized base is never materialized by this backend. The
-//!   tile width is 64 quantization blocks, so every tile starts on a
-//!   whole packed byte for every k in 1..=8 and the per-block scale
-//!   slices index cleanly.
+//!   [`crate::kernels::dot_packed`] — each tile's fingerprint is a
+//!   dot of the packed codes against the integer position weights
+//!   `((pos % 127) + 1)`, so neither the tile nor the full base is
+//!   ever dequantized. This is the `packed_gemm` manifest capability
+//!   the registry advertises for this backend. The tile width is 64
+//!   quantization blocks, so every tile starts on a whole packed byte
+//!   for every k in 1..=8 and the per-block scale slices index
+//!   cleanly.
 //! - **Native fused forward.** `forward_fused` is a true single
 //!   launch: one delay, adapter fingerprints resolved once in group
 //!   order (same cache traffic as the reference), then every owned
@@ -39,7 +42,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::coordinator::backend::{
-    device_cache_capacity, fingerprint, fingerprint_slice, fp_tile_partial, KeyedLru, FP_TILE,
+    device_cache_capacity, fingerprint, fingerprint_slice, KeyedLru, FP_TILE,
 };
 use crate::coordinator::{AdapterGroup, QuantizedModel, ServeBackend, UploadStats};
 use crate::data::PAD;
@@ -80,14 +83,19 @@ impl NativeBackend {
         Self::with_base_fp(batch, seq, vocab, fingerprint(base))
     }
 
-    /// Build over a quantized model, streaming the base fingerprint
+    /// Build over a quantized model, folding the base fingerprint
     /// straight out of packed storage: tensors fold in collection
     /// order; a tensor whose packed form is tile-compatible
-    /// (`FP_TILE % block == 0`) is reduced [`FP_TILE`] elements at a
-    /// time through `dequantize_packed_into` into one reused tile
-    /// buffer; everything else (pass-through f32 tensors,
-    /// exotic block sizes) falls back to the materialized values.
-    /// Lands on the exact bits of `new(.., &qm.dequantized)`.
+    /// (`FP_TILE % block == 0`) is reduced [`FP_TILE`] codes at a
+    /// time by [`crate::kernels::dot_packed`] against the fingerprint
+    /// position weights `((pos % 127) + 1)` (integers ≤ 127, exact in
+    /// f32, so the dot is bit-identical to dequantize-then-
+    /// [`crate::coordinator::backend::fp_tile_partial`] — see that
+    /// function's weight definition);
+    /// everything else (pass-through f32 tensors, exotic block sizes)
+    /// falls back to the materialized values. No tile is ever
+    /// dequantized. Lands on the exact bits of
+    /// `new(.., &qm.dequantized)`.
     pub fn from_quantized(
         batch: usize,
         seq: usize,
@@ -96,7 +104,7 @@ impl NativeBackend {
     ) -> NativeBackend {
         let mut fp = 0f64;
         let mut start = 0u64;
-        let mut tile = vec![0f32; FP_TILE];
+        let mut posw = vec![0f32; FP_TILE];
         let mut scales: Vec<f32> = Vec::new();
         let mut taus: Vec<f32> = Vec::new();
         for (name, t) in qm.dequantized.iter() {
@@ -122,16 +130,19 @@ impl NativeBackend {
                     while lo < qt.len {
                         let tile_len = (qt.len - lo).min(FP_TILE);
                         let block_lo = lo / qt.block;
-                        crate::quant::fused::dequantize_packed_into(
+                        for (j, w) in posw[..tile_len].iter_mut().enumerate() {
+                            *w = (((start + lo as u64 + j as u64 + 1) % 127) + 1) as f32;
+                        }
+                        fp += crate::kernels::dot_packed(
                             &qt.packed[lo / FP_TILE * bytes_per_tile..],
                             qt.k,
+                            0,
                             tile_len,
                             qt.block,
                             &scales[block_lo..],
                             if have_taus { Some(&taus[block_lo..]) } else { None },
-                            &mut tile[..tile_len],
+                            &posw[..tile_len],
                         );
-                        fp += fp_tile_partial(start + lo as u64, &tile[..tile_len]);
                         lo += tile_len;
                     }
                 }

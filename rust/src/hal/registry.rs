@@ -44,6 +44,11 @@ pub struct BackendRequest {
     /// inherited full-forward-then-slice default is correct but does
     /// not qualify).
     pub require_streaming: bool,
+    /// Demand packed-domain GEMM consumption of quantized storage
+    /// (`kernels::gemm_packed` — no dequantized weight matrix on the
+    /// hot path). Backends serving from the dequantized f32 buffer are
+    /// correct but do not qualify.
+    pub require_packed_gemm: bool,
     /// Worker count the pool will spawn (capacity-planning hint).
     pub workers: usize,
 }
@@ -59,6 +64,7 @@ impl BackendRequest {
             family: None,
             require_fused: false,
             require_streaming: false,
+            require_packed_gemm: false,
             workers: 1,
         }
     }
@@ -123,6 +129,12 @@ pub struct BackendEntry {
     /// `manifest.streaming_decode` at registration, same as the fused
     /// claim.
     pub implements_step: bool,
+    /// Does the implementation actually do its quantized-storage math
+    /// through the packed-domain kernels (`kernels::gemm_packed` /
+    /// `dot_packed`)? Cross-checked against `manifest.packed_gemm` at
+    /// registration — claiming packed GEMM while serving from the
+    /// dequantized buffer is a manifest contradiction.
+    pub implements_packed_gemm: bool,
     /// `None` = always available.
     pub gate: Option<BackendGate>,
     pub factory: BackendFactory,
@@ -175,6 +187,14 @@ impl BackendRegistry {
                 name,
                 reason: "manifest claims a single-position streaming decode step \
                          but the implementation does not provide one"
+                    .into(),
+            });
+        }
+        if entry.manifest.packed_gemm && !entry.implements_packed_gemm {
+            return Err(HalError::InvalidManifest {
+                name,
+                reason: "manifest claims packed-domain GEMM consumption of quantized \
+                         storage but the implementation does not provide it"
                     .into(),
             });
         }
@@ -262,9 +282,9 @@ impl BackendRegistry {
         let mut s = String::new();
         s.push_str(
             "| Backend | Families | Bit-widths k | Max batch×seq×vocab | \
-             Fused multi-adapter | Streaming | Cache | ~Mem/worker | Available |\n",
+             Fused multi-adapter | Streaming | Packed GEMM | Cache | ~Mem/worker | Available |\n",
         );
-        s.push_str("|---|---|---|---|---|---|---|---|---|\n");
+        s.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
         for (name, e) in &self.entries {
             let m = &e.manifest;
             let families = m
@@ -284,12 +304,13 @@ impl BackendRegistry {
                 Err(reason) => format!("no — {reason}"),
             };
             s.push_str(&format!(
-                "| `{name}` | {families} | {ks} | {}×{}×{} | {} | {} | {} | {} | {avail} |\n",
+                "| `{name}` | {families} | {ks} | {}×{}×{} | {} | {} | {} | {} | {} | {avail} |\n",
                 m.max_batch,
                 m.max_seq,
                 m.max_vocab,
                 if m.fused_multi_adapter { "yes" } else { "scatter" },
                 if m.streaming_decode { "yes" } else { "sliced" },
+                if m.packed_gemm { "yes" } else { "dequant" },
                 m.cache,
                 fmt_mem(m.approx_memory_bytes),
             ));
@@ -326,11 +347,13 @@ fn reference_entry() -> BackendEntry {
             max_vocab: 1 << 20,
             fused_multi_adapter: true,
             streaming_decode: true,
+            packed_gemm: false,
             cache: CacheSemantics::HostFingerprint,
             approx_memory_bytes: 1 << 20,
         },
         implements_fused: true,
         implements_step: true,
+        implements_packed_gemm: false,
         gate: None,
         factory: Arc::new(|ctx: &BackendCtx| {
             let r = &ctx.request;
@@ -342,7 +365,10 @@ fn reference_entry() -> BackendEntry {
 }
 
 /// `native`: the cache-blocked CPU backend (`hal::native`), fused
-/// natively, bit-identical to `reference`.
+/// natively, bit-identical to `reference`. Declares `packed_gemm`: its
+/// quantized-base construction path (`NativeBackend::from_quantized`)
+/// folds packed NF-k tiles through `kernels::dot_packed` without ever
+/// materializing the dequantized tensor.
 #[cfg(feature = "backend-native")]
 fn native_entry() -> BackendEntry {
     BackendEntry {
@@ -355,11 +381,13 @@ fn native_entry() -> BackendEntry {
             max_vocab: 1 << 20,
             fused_multi_adapter: true,
             streaming_decode: true,
+            packed_gemm: true,
             cache: CacheSemantics::HostFingerprint,
             approx_memory_bytes: 1 << 26,
         },
         implements_fused: true,
         implements_step: true,
+        implements_packed_gemm: true,
         gate: None,
         factory: Arc::new(|ctx: &BackendCtx| {
             let r = &ctx.request;
@@ -389,11 +417,13 @@ fn pjrt_entry() -> BackendEntry {
             max_vocab: 1 << 17,
             fused_multi_adapter: false,
             streaming_decode: false,
+            packed_gemm: false,
             cache: CacheSemantics::DeviceBuffer,
             approx_memory_bytes: 1 << 30,
         },
         implements_fused: false,
         implements_step: false,
+        implements_packed_gemm: false,
         gate: Some(Arc::new(|| {
             if !std::path::Path::new("artifacts/manifest.json").exists() {
                 return Err(
@@ -428,11 +458,13 @@ mod tests {
                 max_vocab: 16,
                 fused_multi_adapter: false,
                 streaming_decode: false,
+                packed_gemm: false,
                 cache: CacheSemantics::None,
                 approx_memory_bytes: 1024,
             },
             implements_fused: false,
             implements_step: false,
+            implements_packed_gemm: false,
             gate: None,
             factory: Arc::new(|ctx: &BackendCtx| {
                 let r = &ctx.request;
@@ -507,6 +539,17 @@ mod tests {
             other => panic!("expected InvalidManifest, got {other:?}"),
         }
 
+        // packed GEMM claimed but unimplemented: same contradiction class
+        let mut e = dummy_entry("packed-liar");
+        e.manifest.packed_gemm = true;
+        e.implements_packed_gemm = false;
+        match r.register(e) {
+            Err(HalError::InvalidManifest { reason, .. }) => {
+                assert!(reason.contains("packed"), "{reason}");
+            }
+            other => panic!("expected InvalidManifest, got {other:?}"),
+        }
+
         // duplicates are typed too
         r.register(dummy_entry("dup")).unwrap();
         match r.register(dummy_entry("dup")) {
@@ -556,6 +599,14 @@ mod tests {
         // demanding true streaming decode from a sliced-step backend
         let mut req = BackendRequest::new(4, 8, 16);
         req.require_streaming = true;
+        assert!(matches!(
+            r.resolve("tiny", &req),
+            Err(HalError::Unsupported { .. })
+        ));
+
+        // demanding packed-domain GEMM from a dequant-path backend
+        let mut req = BackendRequest::new(4, 8, 16);
+        req.require_packed_gemm = true;
         assert!(matches!(
             r.resolve("tiny", &req),
             Err(HalError::Unsupported { .. })

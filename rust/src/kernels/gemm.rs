@@ -1,0 +1,171 @@
+//! Dense f32 GEMM — blocked fast path + serial reference oracle.
+//!
+//! Layout convention: all matrices are row-major, `C[m×n] = A[m×k] ·
+//! B[k×n]`. Accumulation is f64 per output element, always in
+//! k-index order from 0 — the blocked kernel tiles *i* (row panels,
+//! parallel) and *j* (column stripes) but never splits the k
+//! reduction, so it is bit-identical to [`gemm_f32_reference`] for
+//! every shape and every stripe width.
+
+use crate::util::threads;
+
+/// Hard upper bound on the column-stripe width (`IRQLORA_GEMM_BLOCK`
+/// is capped to it): the blocked kernel keeps one f64 accumulator per
+/// stripe column on the stack, and this constant sizes that buffer.
+/// Mirrors [`crate::util::env::GEMM_BLOCK_CAP`].
+pub const GEMM_BLOCK_MAX: usize = 256;
+
+fn check_dims(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize) {
+    assert_eq!(a.len(), m * kd, "lhs must be m×k row-major");
+    assert_eq!(b.len(), kd * n, "rhs must be k×n row-major");
+}
+
+/// Serial reference GEMM: the in-tree oracle. One f64 accumulator per
+/// output element, k-index order, no tiling, no threads.
+pub fn gemm_f32_reference(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    gemm_f32_reference_into(a, b, m, kd, n, &mut out);
+    out
+}
+
+/// [`gemm_f32_reference`] into a caller buffer (allocation-free once
+/// `out` has capacity).
+pub fn gemm_f32_reference_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    out: &mut Vec<f32>,
+) {
+    check_dims(a, b, m, kd, n);
+    let _t = super::timers().reference.start();
+    out.clear();
+    out.resize(m * n, 0.0);
+    for i in 0..m {
+        let arow = &a[i * kd..(i + 1) * kd];
+        for j in 0..n {
+            let mut acc = 0f64;
+            for (p, &av) in arow.iter().enumerate() {
+                acc += av as f64 * b[p * n + j] as f64;
+            }
+            out[i * n + j] = acc as f32;
+        }
+    }
+}
+
+/// Blocked dense GEMM: row panels in parallel, column stripes of
+/// `IRQLORA_GEMM_BLOCK` width walked with a stack-resident f64
+/// accumulator per stripe column (B is streamed row-wise through the
+/// stripe, so both operands move through cache linearly). Bit-identical
+/// to [`gemm_f32_reference`]. Shapes under `IRQLORA_GEMM_SERIAL_BELOW`
+/// multiply-adds run serially — same arithmetic, no dispatch cost.
+pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    gemm_f32_into(a, b, m, kd, n, &mut out);
+    out
+}
+
+/// [`gemm_f32`] into a caller buffer (allocation-free once `out` has
+/// capacity — the per-stripe accumulator lives on the stack).
+pub fn gemm_f32_into(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize, out: &mut Vec<f32>) {
+    check_dims(a, b, m, kd, n);
+    let _t = super::timers().blocked.start();
+    out.clear();
+    out.resize(m * n, 0.0);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let bw = super::gemm_block().clamp(1, GEMM_BLOCK_MAX);
+    let min_rows = if m * kd * n < super::gemm_serial_below() {
+        usize::MAX // force the serial path of par_chunks_mut_with
+    } else {
+        2
+    };
+    threads::par_chunks_mut_with(out, n, min_rows, |i, row| {
+        let arow = &a[i * kd..(i + 1) * kd];
+        let mut acc = [0f64; GEMM_BLOCK_MAX];
+        let mut j0 = 0usize;
+        while j0 < n {
+            let w = (n - j0).min(bw);
+            acc[..w].fill(0.0);
+            for (p, &av) in arow.iter().enumerate() {
+                let av = av as f64;
+                let brow = &b[p * n + j0..p * n + j0 + w];
+                for (slot, &bv) in acc[..w].iter_mut().zip(brow) {
+                    *slot += av * bv as f64;
+                }
+            }
+            for (jj, &v) in acc[..w].iter().enumerate() {
+                row[j0 + jj] = v as f32;
+            }
+            j0 += w;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: length");
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx} i={i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_reference_ragged_shapes() {
+        let mut rng = Rng::new(70);
+        // primes, ones, stripe-straddling and panel-straddling sizes
+        for &(m, kd, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 7, 129),
+            (3, 1, 2),
+            (17, 13, 5),
+            (64, 64, 64),
+            (65, 33, 130),
+            (128, 3, 257),
+            (5, 300, 67),
+        ] {
+            let a = rng.normal_vec(m * kd, 0.0, 1.0);
+            let b = rng.normal_vec(kd * n, 0.0, 1.0);
+            let want = gemm_f32_reference(&a, &b, m, kd, n);
+            let got = gemm_f32(&a, &b, m, kd, n);
+            assert_bits_eq(&got, &want, &format!("{m}x{kd}x{n}"));
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        assert!(gemm_f32(&[], &[], 0, 4, 0).is_empty());
+        // kd = 0: well-defined all-zero result
+        let out = gemm_f32(&[], &[], 3, 0, 2);
+        assert_eq!(out, vec![0.0; 6]);
+        assert_bits_eq(&out, &gemm_f32_reference(&[], &[], 3, 0, 2), "kd=0");
+    }
+
+    #[test]
+    fn into_reuses_buffer_and_overwrites_stale_contents() {
+        let mut rng = Rng::new(71);
+        let (m, kd, n) = (9, 11, 13);
+        let a = rng.normal_vec(m * kd, 0.0, 1.0);
+        let b = rng.normal_vec(kd * n, 0.0, 1.0);
+        let mut out = vec![f32::NAN; 999]; // wrong size, garbage contents
+        gemm_f32_into(&a, &b, m, kd, n, &mut out);
+        assert_bits_eq(&out, &gemm_f32_reference(&a, &b, m, kd, n), "reuse");
+    }
+
+    #[test]
+    fn matvec_as_n_equals_one() {
+        let mut rng = Rng::new(72);
+        let (m, kd) = (33, 48);
+        let w = rng.normal_vec(m * kd, 0.0, 0.5);
+        let x = rng.normal_vec(kd, 0.0, 0.5);
+        let got = gemm_f32(&w, &x, m, kd, 1);
+        let want = gemm_f32_reference(&w, &x, m, kd, 1);
+        assert_bits_eq(&got, &want, "matvec");
+    }
+}

@@ -1,0 +1,104 @@
+//! Compute-kernel layer — dense and packed-domain GEMM with the
+//! repo's oracle discipline.
+//!
+//! Three entry points, one contract:
+//!
+//! - [`gemm_f32`] — cache-blocked dense `C = A·B` (row panels in
+//!   parallel via `util::threads`, column stripes of
+//!   `IRQLORA_GEMM_BLOCK` width, one stack-resident f64 accumulator
+//!   per stripe column). The `lora::merge` dense-delta path and every
+//!   future dense multiply route through it.
+//! - [`gemm_packed`] — the headline: `y = W_q·x` computed **directly
+//!   from packed NF-k storage**. Per quantization block the kernel
+//!   builds the 2^k-entry absmax-scaled LUT `cb[c]·s + τ` once — the
+//!   dequantizer's exact f32 expression, evaluated once per code
+//!   instead of once per weight — then streams the block's codes
+//!   through [`crate::quant::fused::walk_codes_from`] accumulating
+//!   `lut[code_j]·x_j` in f64. The dequantized tensor is never
+//!   materialized; per-block k only changes which LUT is loaded, which
+//!   is what makes mixed-k plans from `precision::` pay off at serve
+//!   time. A faster approximate variant, [`gemm_packed_hist`], buckets
+//!   x-contributions per code first (QA-LoRA's group-wise insight) and
+//!   does one 2^k-length dot per block — see its docs for the
+//!   tolerance contract.
+//! - a serial `*_reference` twin per kernel, kept as the in-tree
+//!   oracle.
+//!
+//! ## Bit-identity contract
+//!
+//! The fast paths never split or reorder a k-reduction: every output
+//! element is one f64 accumulator fed in index order, so the blocked /
+//! parallel / packed variants are **bit-identical** to their serial
+//! references (and [`gemm_packed`] is bit-identical to
+//! dequantize-then-[`gemm_f32_reference`] — same weights bitwise, same
+//! multiply-add DAG). Only *where* each subterm is computed moves.
+//! The one deliberate exception is [`gemm_packed_hist`]: bucketing
+//! reassociates the sum by code, which is exactly what buys its speed,
+//! so it carries its own serial twin (bit-identical to it) and a
+//! relative-error tolerance against the exact kernel instead of a
+//! bit-identity claim. `rust/tests/kernel_identity.rs` enforces all of
+//! this over ragged shapes, partial/zero blocks, k ∈ {2,3,4,8} and
+//! mixed-k planned models.
+//!
+//! Telemetry: `kernel.gemm_time{kind=reference|blocked|packed|packed_hist}`
+//! timers and the `kernel.packed_blocks{k=}` counter (per-block LUT
+//! loads — the packed kernels' unit of work).
+
+use std::sync::OnceLock;
+
+mod gemm;
+mod packed;
+
+pub use gemm::{
+    gemm_f32, gemm_f32_into, gemm_f32_reference, gemm_f32_reference_into, GEMM_BLOCK_MAX,
+};
+pub use packed::{
+    dot_packed, dot_packed_hist, gemm_packed, gemm_packed_hist, gemm_packed_hist_into,
+    gemm_packed_hist_reference, gemm_packed_into, gemm_packed_reference, PackedGemmScratch,
+};
+
+/// Cached `kernel.gemm_time{kind=...}` timers, resolved once per
+/// process (no-ops unless `IRQLORA_TELEMETRY=1`).
+struct KernelTimers {
+    reference: crate::telemetry::Timer,
+    blocked: crate::telemetry::Timer,
+    packed: crate::telemetry::Timer,
+    packed_hist: crate::telemetry::Timer,
+}
+
+fn timers() -> &'static KernelTimers {
+    static T: OnceLock<KernelTimers> = OnceLock::new();
+    T.get_or_init(|| {
+        let reg = crate::telemetry::global();
+        KernelTimers {
+            reference: reg.timer("kernel.gemm_time", &[("kind", "reference")]),
+            blocked: reg.timer("kernel.gemm_time", &[("kind", "blocked")]),
+            packed: reg.timer("kernel.gemm_time", &[("kind", "packed")]),
+            packed_hist: reg.timer("kernel.gemm_time", &[("kind", "packed_hist")]),
+        }
+    })
+}
+
+/// Cached `kernel.packed_blocks{k=}` counter: one increment per
+/// per-block LUT load in the packed kernels.
+fn telem_packed_blocks() -> &'static crate::telemetry::PerK {
+    static C: OnceLock<crate::telemetry::PerK> = OnceLock::new();
+    C.get_or_init(|| crate::telemetry::PerK::resolve("kernel.packed_blocks"))
+}
+
+/// `IRQLORA_GEMM_BLOCK`, latched on first kernel call. The kernels
+/// guarantee allocation-free steady-state `*_into` calls, and an env
+/// read allocates its key — so unlike the serving knobs these two are
+/// resolved once per process (the repo's tests never mutate the
+/// process environment; see `util::env` module docs).
+fn gemm_block() -> usize {
+    static V: OnceLock<usize> = OnceLock::new();
+    *V.get_or_init(crate::util::env::gemm_block)
+}
+
+/// `IRQLORA_GEMM_SERIAL_BELOW`, latched on first kernel call (see
+/// [`gemm_block`] for why).
+fn gemm_serial_below() -> usize {
+    static V: OnceLock<usize> = OnceLock::new();
+    *V.get_or_init(crate::util::env::gemm_serial_below)
+}

@@ -1,0 +1,424 @@
+//! Packed-domain GEMM — `y = W_q·x` straight from bit-packed NF-k
+//! codes, no dequantized intermediate.
+//!
+//! The weight tensor stays in its Eq. 10 storage form ([`
+//! QuantizedTensor`]: packed codes + double-quantized per-block
+//! constants). Per quantization block the kernel reconstructs the
+//! 2^k-entry scaled LUT `cb[c]·s + τ` **once per code** — the exact
+//! f32 expression the dequantizer evaluates once per *weight* — and
+//! then streams the block's codes word-at-a-time, accumulating
+//! `lut[code]·x_j` in f64 in element order. Because the weights it
+//! multiplies are bitwise the dequantizer's outputs and the reduction
+//! order is untouched, [`gemm_packed`] is bit-identical to
+//! dequantize-then-[`super::gemm_f32_reference`] for every geometry,
+//! including partial last blocks, unaligned `block·k % 8 != 0` layouts
+//! and mixed-k plans (per-block k just selects a different LUT).
+//!
+//! [`gemm_packed_hist`] is the reassociated variant: it buckets
+//! x-contributions per code first (a 2^k histogram per block run) and
+//! finishes with one 2^k-length dot against the scaled LUT — fewer
+//! multiplies when `block >> 2^k`, but the sum is regrouped by code,
+//! so it promises bit-identity only to its own serial twin plus a
+//! relative-error bound against the exact kernel.
+
+use crate::quant::fused::{lut, walk_codes, walk_codes_from};
+use crate::quant::QuantizedTensor;
+use crate::util::threads;
+
+/// Reusable scratch for the packed kernels: dequantized per-block
+/// constants, reused across calls so steady-state matvecs allocate
+/// nothing (the per-block LUT and histogram live on the stack).
+#[derive(Debug, Default)]
+pub struct PackedGemmScratch {
+    scales: Vec<f32>,
+    taus: Vec<f32>,
+}
+
+impl PackedGemmScratch {
+    pub fn new() -> PackedGemmScratch {
+        PackedGemmScratch::default()
+    }
+}
+
+/// Interpret a quantized tensor as a row-major matrix for `y = W·x`:
+/// `shape[0]` rows, the remaining dims flattened into columns (a 1-D
+/// tensor is a column vector: `len` rows × 1).
+fn matvec_dims(qt: &QuantizedTensor) -> (usize, usize) {
+    assert!(!qt.shape.is_empty(), "packed GEMM needs a shaped tensor");
+    let rows = qt.shape[0];
+    let cols: usize = qt.shape[1..].iter().product();
+    assert_eq!(rows * cols, qt.len, "shape does not cover len");
+    (rows, cols)
+}
+
+fn dequant_consts<'s>(
+    qt: &QuantizedTensor,
+    scratch: &'s mut PackedGemmScratch,
+) -> (&'s [f32], Option<&'s [f32]>) {
+    qt.scales.dequantize_into(&mut scratch.scales);
+    let taus = match &qt.taus {
+        Some(t) => {
+            t.dequantize_into(&mut scratch.taus);
+            Some(scratch.taus.as_slice())
+        }
+        None => None,
+    };
+    (scratch.scales.as_slice(), taus)
+}
+
+/// Exact packed-domain dot product over elements `start .. start+len`
+/// of a packed code stream: returns
+/// `Σ_j (cb[code_{start+j}]·s_b + τ_b) · x[j]` with one f64
+/// accumulator in element order — the identical arithmetic DAG as
+/// dequantizing those elements and folding them through
+/// [`super::gemm_f32_reference`].
+///
+/// `scales`/`taus` are indexed by `(start + j) / block`, i.e. they are
+/// block-aligned with the *given* `start` origin — callers that slice
+/// the packed stream (the native fingerprint tiles) slice the constant
+/// arrays to match and pass `start = 0`. `x[j]` pairs with element
+/// `start + j`. The per-block scaled LUT lives on the stack; this
+/// function allocates nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn dot_packed(
+    packed: &[u8],
+    k: u8,
+    start: usize,
+    len: usize,
+    block: usize,
+    scales: &[f32],
+    taus: Option<&[f32]>,
+    x: &[f32],
+) -> f64 {
+    assert!(block > 0);
+    assert!(x.len() >= len, "x shorter than the code run");
+    if len == 0 {
+        return 0.0;
+    }
+    let last_block = (start + len - 1) / block;
+    assert!(scales.len() > last_block, "need one scale per block");
+    if let Some(t) = taus {
+        assert!(t.len() > last_block, "need one tau per block");
+    }
+    let cb = lut(k).codebook();
+    let nvals = 1usize << k;
+    let mut lut_scaled = [0f32; 256];
+    let mut acc = 0f64;
+    let mut next_reload = 0usize; // j at which the block (and LUT) changes
+    let mut blocks = 0u64;
+    walk_codes_from(packed, k, start, len, |j, code| {
+        if j == next_reload {
+            let bi = (start + j) / block;
+            let s = scales[bi];
+            let tau = taus.map_or(0.0, |t| t[bi]);
+            for (c, slot) in lut_scaled[..nvals].iter_mut().enumerate() {
+                *slot = cb[c] * s + tau;
+            }
+            next_reload = j + (block - (start + j) % block);
+            blocks += 1;
+        }
+        acc += lut_scaled[code] as f64 * x[j] as f64;
+    });
+    super::telem_packed_blocks().add(k, blocks);
+    acc
+}
+
+/// Histogram (code-bucketed) packed dot over the same element range as
+/// [`dot_packed`]: per block run it accumulates `hist[code] += x[j]`
+/// in f64, then finishes with one 2^k-length dot against the scaled
+/// LUT in code order. Reassociates the sum by code — see the module
+/// docs for the tolerance contract. Allocates nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn dot_packed_hist(
+    packed: &[u8],
+    k: u8,
+    start: usize,
+    len: usize,
+    block: usize,
+    scales: &[f32],
+    taus: Option<&[f32]>,
+    x: &[f32],
+) -> f64 {
+    assert!(block > 0);
+    assert!(x.len() >= len, "x shorter than the code run");
+    if len == 0 {
+        return 0.0;
+    }
+    let last_block = (start + len - 1) / block;
+    assert!(scales.len() > last_block, "need one scale per block");
+    if let Some(t) = taus {
+        assert!(t.len() > last_block, "need one tau per block");
+    }
+    let cb = lut(k).codebook();
+    let nvals = 1usize << k;
+    let mut hist = [0f64; 256];
+    let mut acc = 0f64;
+    let mut blocks = 0u64;
+    let mut j = 0usize;
+    while j < len {
+        let bi = (start + j) / block;
+        let run = (block - (start + j) % block).min(len - j);
+        hist[..nvals].fill(0.0);
+        walk_codes_from(packed, k, start + j, run, |t, code| {
+            hist[code] += x[j + t] as f64;
+        });
+        let s = scales[bi];
+        let tau = taus.map_or(0.0, |t| t[bi]);
+        for (c, &h) in hist[..nvals].iter().enumerate() {
+            acc += h * ((cb[c] * s + tau) as f64);
+        }
+        blocks += 1;
+        j += run;
+    }
+    super::telem_packed_blocks().add(k, blocks);
+    acc
+}
+
+/// `y = W_q·x` directly from packed storage — exact path. Allocates a
+/// fresh output; see [`gemm_packed_into`] for the steady-state API.
+pub fn gemm_packed(qt: &QuantizedTensor, x: &[f32]) -> Vec<f32> {
+    let mut y = Vec::new();
+    let mut scratch = PackedGemmScratch::new();
+    gemm_packed_into(qt, x, &mut y, &mut scratch);
+    y
+}
+
+/// [`gemm_packed`] into caller buffers: rows fan out across
+/// `util::threads` workers (each row is one independent
+/// [`dot_packed`]); once `y` and `scratch` are warm, repeated calls
+/// allocate nothing and never materialize the dequantized matrix.
+/// Bit-identical to dequantize-then-[`super::gemm_f32_reference`].
+pub fn gemm_packed_into(
+    qt: &QuantizedTensor,
+    x: &[f32],
+    y: &mut Vec<f32>,
+    scratch: &mut PackedGemmScratch,
+) {
+    let (rows, cols) = matvec_dims(qt);
+    assert_eq!(x.len(), cols, "x must have one entry per column");
+    let _t = super::timers().packed.start();
+    let (scales, taus) = dequant_consts(qt, scratch);
+    y.clear();
+    y.resize(rows, 0.0);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let min_rows = if rows * cols < super::gemm_serial_below() {
+        usize::MAX // force the serial path of par_chunks_mut_with
+    } else {
+        2
+    };
+    threads::par_chunks_mut_with(y, 1, min_rows, |r, yr| {
+        yr[0] = dot_packed(&qt.packed, qt.k, r * cols, cols, qt.block, scales, taus, x) as f32;
+    });
+}
+
+/// Serial reference twin of [`gemm_packed`] — the in-tree oracle. One
+/// element-order walk over the whole tensor; each weight is
+/// reconstructed with the dequantizer's exact `cb[code]·s + τ`
+/// expression and folded into a per-row f64 accumulator. No stack LUT,
+/// no threads, no shared code with the fast path beyond the bit walk.
+pub fn gemm_packed_reference(qt: &QuantizedTensor, x: &[f32]) -> Vec<f32> {
+    let (rows, cols) = matvec_dims(qt);
+    assert_eq!(x.len(), cols, "x must have one entry per column");
+    let _t = super::timers().reference.start();
+    let cb = lut(qt.k).codebook();
+    let scales = qt.scales.dequantize();
+    let taus = qt.taus.as_ref().map(|t| t.dequantize());
+    let mut y = vec![0f32; rows];
+    if rows == 0 || cols == 0 {
+        return y;
+    }
+    let mut acc = 0f64;
+    let mut row = 0usize;
+    walk_codes(&qt.packed, qt.k, qt.len, |i, code| {
+        let bi = i / qt.block;
+        let tau = taus.as_ref().map_or(0.0, |t| t[bi]);
+        let w = cb[code] * scales[bi] + tau;
+        acc += w as f64 * x[i % cols] as f64;
+        if (i + 1) % cols == 0 {
+            y[row] = acc as f32;
+            row += 1;
+            acc = 0.0;
+        }
+    });
+    y
+}
+
+/// `y ≈ W_q·x` via per-block code histograms (QA-LoRA-style grouping).
+/// Allocating wrapper over [`gemm_packed_hist_into`].
+pub fn gemm_packed_hist(qt: &QuantizedTensor, x: &[f32]) -> Vec<f32> {
+    let mut y = Vec::new();
+    let mut scratch = PackedGemmScratch::new();
+    gemm_packed_hist_into(qt, x, &mut y, &mut scratch);
+    y
+}
+
+/// [`gemm_packed_hist`] into caller buffers: rows fan out in parallel,
+/// each row running [`dot_packed_hist`]. Bit-identical to
+/// [`gemm_packed_hist_reference`] (the per-row arithmetic is shared
+/// and rows are independent); matches [`gemm_packed`] only to
+/// tolerance.
+pub fn gemm_packed_hist_into(
+    qt: &QuantizedTensor,
+    x: &[f32],
+    y: &mut Vec<f32>,
+    scratch: &mut PackedGemmScratch,
+) {
+    let (rows, cols) = matvec_dims(qt);
+    assert_eq!(x.len(), cols, "x must have one entry per column");
+    let _t = super::timers().packed_hist.start();
+    let (scales, taus) = dequant_consts(qt, scratch);
+    y.clear();
+    y.resize(rows, 0.0);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let min_rows = if rows * cols < super::gemm_serial_below() {
+        usize::MAX
+    } else {
+        2
+    };
+    threads::par_chunks_mut_with(y, 1, min_rows, |r, yr| {
+        yr[0] = dot_packed_hist(&qt.packed, qt.k, r * cols, cols, qt.block, scales, taus, x) as f32;
+    });
+}
+
+/// Serial twin of [`gemm_packed_hist`]: the same per-row histogram
+/// arithmetic, one row at a time on the calling thread.
+pub fn gemm_packed_hist_reference(qt: &QuantizedTensor, x: &[f32]) -> Vec<f32> {
+    let (rows, cols) = matvec_dims(qt);
+    assert_eq!(x.len(), cols, "x must have one entry per column");
+    let _t = super::timers().reference.start();
+    let mut scratch = PackedGemmScratch::new();
+    let (scales, taus) = dequant_consts(qt, &mut scratch);
+    let mut y = vec![0f32; rows];
+    if cols == 0 {
+        return y;
+    }
+    for (r, yr) in y.iter_mut().enumerate() {
+        *yr = dot_packed_hist(&qt.packed, qt.k, r * cols, cols, qt.block, scales, taus, x) as f32;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::icq::IcqConfig;
+    use crate::util::{Rng, Tensor};
+
+    fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: length");
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx} i={i}: {a} vs {b}");
+        }
+    }
+
+    fn dequant_oracle(qt: &QuantizedTensor, x: &[f32]) -> Vec<f32> {
+        let (rows, cols) = matvec_dims(qt);
+        let w = qt.dequantize();
+        super::super::gemm_f32_reference(w.data(), x, rows, cols, 1)
+    }
+
+    #[test]
+    fn packed_matches_dequant_oracle_all_k() {
+        let mut rng = Rng::new(80);
+        for k in [2u8, 3, 4, 8] {
+            for &(rows, cols) in &[(4usize, 64usize), (7, 65), (16, 100), (33, 96)] {
+                let w = Tensor::new(&[rows, cols], rng.normal_vec(rows * cols, 0.0, 0.3));
+                let x = rng.normal_vec(cols, 0.0, 1.0);
+                for icq in [None, Some(IcqConfig::default())] {
+                    let qt = QuantizedTensor::quantize(&w, k, 64, icq.as_ref());
+                    let want = dequant_oracle(&qt, &x);
+                    let ctx = format!("k={k} {rows}x{cols} icq={}", icq.is_some());
+                    assert_bits_eq(&gemm_packed(&qt, &x), &want, &ctx);
+                    assert_bits_eq(&gemm_packed_reference(&qt, &x), &want, &ctx);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_handles_unaligned_blocks_and_partial_tails() {
+        // block*k % 8 != 0 geometries and rows that straddle blocks
+        let mut rng = Rng::new(81);
+        for &(k, block, rows, cols) in
+            &[(3u8, 10usize, 5usize, 13usize), (5, 9, 4, 21), (2, 3, 6, 7), (7, 11, 3, 40)]
+        {
+            let w = Tensor::new(&[rows, cols], rng.normal_vec(rows * cols, 0.0, 0.2));
+            let x = rng.normal_vec(cols, 0.0, 1.0);
+            let qt = QuantizedTensor::quantize(&w, k, block, None);
+            let want = dequant_oracle(&qt, &x);
+            let ctx = format!("k={k} block={block} {rows}x{cols}");
+            assert_bits_eq(&gemm_packed(&qt, &x), &want, &ctx);
+            assert_bits_eq(&gemm_packed_reference(&qt, &x), &want, &ctx);
+        }
+    }
+
+    #[test]
+    fn zero_blocks_and_degenerate_shapes() {
+        let w = Tensor::new(&[3, 64], vec![0.0f32; 192]);
+        let qt = QuantizedTensor::quantize(&w, 4, 64, None);
+        let x = vec![1.0f32; 64];
+        assert_eq!(gemm_packed(&qt, &x), vec![0.0; 3]);
+
+        // 1-D tensor: len×1 column vector
+        let mut rng = Rng::new(82);
+        let w = Tensor::new(&[70], rng.normal_vec(70, 0.0, 0.1));
+        let qt = QuantizedTensor::quantize(&w, 4, 64, None);
+        let got = gemm_packed(&qt, &[2.0]);
+        assert_bits_eq(&got, &dequant_oracle(&qt, &[2.0]), "1-D");
+    }
+
+    #[test]
+    fn hist_twins_bit_identical_and_close_to_exact() {
+        let mut rng = Rng::new(83);
+        for k in [2u8, 4, 8] {
+            let (rows, cols) = (9usize, 130usize);
+            let w = Tensor::new(&[rows, cols], rng.normal_vec(rows * cols, 0.0, 0.3));
+            let x = rng.normal_vec(cols, 0.0, 1.0);
+            let qt = QuantizedTensor::quantize(&w, k, 64, None);
+            let fast = gemm_packed_hist(&qt, &x);
+            let twin = gemm_packed_hist_reference(&qt, &x);
+            assert_bits_eq(&fast, &twin, &format!("hist twins k={k}"));
+            let exact = gemm_packed(&qt, &x);
+            for (i, (h, e)) in fast.iter().zip(&exact).enumerate() {
+                let tol = 1e-4 * (1.0 + e.abs());
+                assert!((h - e).abs() <= tol, "k={k} i={i}: hist {h} vs exact {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_packed_respects_start_origin() {
+        // slicing the stream and re-basing start must agree with the
+        // full-tensor walk — the native fingerprint tiles rely on this
+        let mut rng = Rng::new(84);
+        let n = 256usize;
+        let w = Tensor::new(&[n], rng.normal_vec(n, 0.0, 0.2));
+        let qt = QuantizedTensor::quantize(&w, 4, 64, None);
+        let scales = qt.scales.dequantize();
+        let x = rng.normal_vec(n, 0.0, 1.0);
+        let whole = dot_packed(&qt.packed, qt.k, 0, n, qt.block, &scales, None, &x);
+        let a = dot_packed(&qt.packed, qt.k, 0, 128, qt.block, &scales, None, &x[..128]);
+        let b = dot_packed(&qt.packed, qt.k, 128, 128, qt.block, &scales, None, &x[128..]);
+        // two half-dots re-associate the sum, so compare to the same split
+        let mut acc = 0f64;
+        let wd = qt.dequantize();
+        for (&wv, &xv) in wd.data().iter().zip(&x).take(128) {
+            acc += wv as f64 * xv as f64;
+        }
+        assert_eq!(a.to_bits(), acc.to_bits(), "first half");
+        let mut acc2 = 0f64;
+        for (&wv, &xv) in wd.data().iter().zip(&x).skip(128) {
+            acc2 += wv as f64 * xv as f64;
+        }
+        assert_eq!(b.to_bits(), acc2.to_bits(), "re-based second half");
+        let mut acc_whole = 0f64;
+        for (&wv, &xv) in wd.data().iter().zip(&x) {
+            acc_whole += wv as f64 * xv as f64;
+        }
+        assert_eq!(whole.to_bits(), acc_whole.to_bits(), "whole");
+    }
+}

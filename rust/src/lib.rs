@@ -10,6 +10,9 @@
 //!   baselines, in Rust;
 //! - [`precision`] — information-budgeted mixed-precision planning
 //!   (profile → plan → apply over the ICQ entropy metric);
+//! - [`kernels`] — dense + packed-domain GEMM kernels with serial
+//!   reference oracles (`gemm_f32`, `gemm_packed` computing y = W_q·x
+//!   straight from packed NF-k codes);
 //! - [`model`] / [`data`] — NanoLLaMA substrate and synthetic corpora;
 //! - [`runtime`] — PJRT loader/executor for the AOT HLO artifacts;
 //! - [`coordinator`] — quantize → finetune → evaluate → serve pipeline;
@@ -23,6 +26,7 @@
 
 pub mod util;
 pub mod quant;
+pub mod kernels;
 pub mod precision;
 pub mod lora;
 pub mod model;

@@ -128,6 +128,40 @@ pub fn merge_adapter(lora: &NamedTensors, masks: (f32, f32)) -> Result<NamedTens
     Ok(out)
 }
 
+/// Dense merged-branch delta ΔW = ℓ̃1·ℓ̃2 (h×o row-major) — the whole
+/// adapter contribution as one matrix, computed with the blocked
+/// kernel [`crate::kernels::gemm_f32`]. Serving never materializes
+/// this product ([`merge_adapter`] keeps the two thin matrices and the
+/// LRU caches those byte-for-byte, so cache keys and cached contents
+/// are untouched by the kernel layer) — but adapter diffing,
+/// checkpoint export and the kernel benches want the dense form, and
+/// this is the one sanctioned way to build it.
+pub fn merge_delta(l1m: &[f32], l2m: &[f32], h: usize, r: usize, o: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    merge_delta_into(l1m, l2m, h, r, o, &mut out);
+    out
+}
+
+/// [`merge_delta`] into a reused buffer (allocation-free once warm).
+pub fn merge_delta_into(
+    l1m: &[f32],
+    l2m: &[f32],
+    h: usize,
+    r: usize,
+    o: usize,
+    out: &mut Vec<f32>,
+) {
+    crate::kernels::gemm_f32_into(l1m, l2m, h, r, o, out);
+}
+
+/// Serial reference twin of [`merge_delta`]: the naive triple loop
+/// (one f64 accumulator per element, r-index order), kept as the
+/// oracle and as the before-side of the `kernel_throughput` bench
+/// pair. Bit-identical to [`merge_delta`].
+pub fn merge_delta_reference(l1m: &[f32], l2m: &[f32], h: usize, r: usize, o: usize) -> Vec<f32> {
+    crate::kernels::gemm_f32_reference(l1m, l2m, h, r, o)
+}
+
 /// Cached telemetry counter for Eq. 16/17 merges (no-op unless
 /// `IRQLORA_TELEMETRY=1`).
 fn telem_merges() -> &'static crate::telemetry::Counter {
@@ -334,6 +368,23 @@ mod tests {
         let again = merge_adapter(&adapter, (1.0, 0.0)).unwrap();
         for (name, t) in u1.iter() {
             assert_eq!(again.get(name).unwrap().data(), t.data(), "{name}");
+        }
+    }
+
+    #[test]
+    fn merge_delta_blocked_matches_reference() {
+        let mut rng = Rng::new(93);
+        for (h, r, o) in [(16usize, 4usize, 8usize), (64, 8, 64), (33, 7, 129)] {
+            let l1 = rng.normal_vec(h * r, 0.0, 0.2);
+            let l2 = rng.normal_vec(r * o, 0.0, 0.2);
+            let (b1, b2) = (rng.normal(), rng.normal());
+            let m1 = merge_l1(&l1, h, r, b1);
+            let m2 = merge_l2(&l2, r, o, b2);
+            let got = merge_delta(&m1, &m2, h, r, o);
+            let want = merge_delta_reference(&m1, &m2, h, r, o);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "h={h} r={r} o={o} i={i}");
+            }
         }
     }
 

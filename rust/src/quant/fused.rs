@@ -46,6 +46,13 @@ pub struct DequantLut {
 }
 
 impl DequantLut {
+    /// The raw NF-k codebook (2^k levels). The packed-domain kernels in
+    /// [`crate::kernels`] read this to build per-block scaled LUTs
+    /// (`cb[c] * s + τ`) without re-deriving the codebook per call.
+    pub fn codebook(&self) -> &[f32] {
+        &self.codebook
+    }
+
     fn new(k: u8) -> DequantLut {
         assert!((1..=8).contains(&k));
         let codebook = nf::codebook(k);
@@ -149,10 +156,11 @@ fn telem_dequant_bytes() -> &'static crate::telemetry::PerK {
 /// Shared word-at-a-time k-bit walk through a `u64` bit accumulator:
 /// calls `emit(i, code)` for each of the first `len` codes in
 /// `packed`, reading from bit 0. Both the parallel per-block path and
-/// the unaligned serial fallback run exactly this loop, so the subtle
-/// shift/mask/refill logic exists once.
+/// the unaligned serial fallback run exactly this loop — and the
+/// packed-domain GEMM kernels in [`crate::kernels`] iterate code runs
+/// through it — so the subtle shift/mask/refill logic exists once.
 #[inline]
-fn walk_codes(packed: &[u8], k: u8, len: usize, mut emit: impl FnMut(usize, usize)) {
+pub fn walk_codes(packed: &[u8], k: u8, len: usize, mut emit: impl FnMut(usize, usize)) {
     let mask = (1u64 << k) - 1;
     let kw = k as u32;
     let mut acc = 0u64;
@@ -165,6 +173,45 @@ fn walk_codes(packed: &[u8], k: u8, len: usize, mut emit: impl FnMut(usize, usiz
             nbits += 8;
         }
         emit(i, (acc & mask) as usize);
+        acc >>= kw;
+        nbits -= kw;
+    }
+}
+
+/// [`walk_codes`] starting from an arbitrary element offset `start`
+/// rather than bit 0: emits `emit(j, code)` for the codes of elements
+/// `start .. start + len`, with `j` counted from 0. The first code may
+/// begin mid-byte (`start * k % 8 != 0`); the partial leading byte is
+/// pre-shifted into the accumulator so the main loop is unchanged.
+/// This is what lets the packed GEMM kernels jump straight to a row's
+/// codes without walking the whole tensor.
+#[inline]
+pub fn walk_codes_from(
+    packed: &[u8],
+    k: u8,
+    start: usize,
+    len: usize,
+    mut emit: impl FnMut(usize, usize),
+) {
+    let skip_bits = start * k as usize;
+    let mut byte_idx = skip_bits / 8;
+    let rem = (skip_bits % 8) as u32;
+    let mask = (1u64 << k) - 1;
+    let kw = k as u32;
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    if rem != 0 {
+        acc = (packed[byte_idx] as u64) >> rem;
+        nbits = 8 - rem;
+        byte_idx += 1;
+    }
+    for j in 0..len {
+        while nbits < kw {
+            acc |= (packed[byte_idx] as u64) << nbits;
+            byte_idx += 1;
+            nbits += 8;
+        }
+        emit(j, (acc & mask) as usize);
         acc >>= kw;
         nbits -= kw;
     }
@@ -288,6 +335,26 @@ mod tests {
         assert_eq!(l.table[0xA3 * 2], cb[0x3]);
         assert_eq!(l.table[0xA3 * 2 + 1], cb[0xA]);
         assert_eq!(l.k, 4);
+    }
+
+    #[test]
+    fn walk_codes_from_matches_full_walk_at_any_offset() {
+        // every (k, start) combination must see exactly the codes the
+        // from-bit-0 walk sees, including starts that land mid-byte
+        let mut rng = Rng::new(62);
+        for k in 1..=8u8 {
+            let n = 97usize;
+            let codes: Vec<u8> = (0..n).map(|_| (rng.next_u64() & ((1u64 << k) - 1)) as u8).collect();
+            let packed = blockwise::pack_codes_reference(&codes, k);
+            let mut all = vec![0usize; n];
+            walk_codes(&packed, k, n, |i, c| all[i] = c);
+            for start in [0usize, 1, 2, 3, 7, 8, 9, 31, 63, 64, 96] {
+                let len = n - start;
+                let mut got = vec![usize::MAX; len];
+                walk_codes_from(&packed, k, start, len, |j, c| got[j] = c);
+                assert_eq!(got, &all[start..], "k={k} start={start}");
+            }
+        }
     }
 
     #[test]

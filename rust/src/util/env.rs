@@ -45,6 +45,11 @@ pub const DEFAULT_SERVE_BACKEND: &str = "reference";
 /// Default per-stream decode-step ceiling (`IRQLORA_STREAM_MAX_STEPS`
 /// unset).
 pub const DEFAULT_STREAM_MAX_STEPS: usize = 64;
+/// Default GEMM column-stripe width (`IRQLORA_GEMM_BLOCK` unset).
+pub const DEFAULT_GEMM_BLOCK: usize = 64;
+/// Default multiply-add count below which the GEMM kernels skip the
+/// thread pool (`IRQLORA_GEMM_SERIAL_BELOW` unset).
+pub const DEFAULT_GEMM_SERIAL_BELOW: usize = 8192;
 
 /// Cap on `IRQLORA_THREADS`.
 pub const THREADS_CAP: usize = 256;
@@ -60,6 +65,12 @@ pub const PARK_AGE_CAP_MS: u64 = 600_000;
 /// Cap on `IRQLORA_STREAM_MAX_STEPS` — a stream cannot outlast the
 /// longest supported sequence anyway.
 pub const STREAM_MAX_STEPS_CAP: usize = 4096;
+/// Cap on `IRQLORA_GEMM_BLOCK` — the blocked kernel keeps one f64
+/// accumulator per stripe column on the stack, sized to this cap
+/// (`kernels::GEMM_BLOCK_MAX` mirrors it).
+pub const GEMM_BLOCK_CAP: usize = 256;
+/// Cap on `IRQLORA_GEMM_SERIAL_BELOW`.
+pub const GEMM_SERIAL_BELOW_CAP: usize = 1 << 30;
 
 /// The full knob table, one entry per environment variable the
 /// process reads. Order matches the README table.
@@ -70,6 +81,21 @@ pub fn knobs() -> &'static [Knob] {
             default: "autodetect (<= 32)",
             meaning: "Worker threads for parallel quantize/pack/profile paths. \
                       Pin for reproducible benches.",
+        },
+        Knob {
+            name: "IRQLORA_GEMM_BLOCK",
+            default: "64",
+            meaning: "Column-stripe width for the blocked dense GEMM kernel \
+                      (`kernels::gemm_f32`), capped at 256. Every width produces \
+                      bit-identical output (the k-reduction order never changes); \
+                      tune for cache footprint only.",
+        },
+        Knob {
+            name: "IRQLORA_GEMM_SERIAL_BELOW",
+            default: "8192",
+            meaning: "Multiply-add count under which the GEMM kernels skip the \
+                      thread pool and run serially — tiny shapes cost more to \
+                      dispatch than to compute.",
         },
         Knob {
             name: "IRQLORA_SERVE_BACKEND",
@@ -278,6 +304,20 @@ pub fn stream_max_steps() -> usize {
         .unwrap_or(DEFAULT_STREAM_MAX_STEPS)
 }
 
+/// `IRQLORA_GEMM_BLOCK`, else [`DEFAULT_GEMM_BLOCK`].
+pub fn gemm_block() -> usize {
+    var("IRQLORA_GEMM_BLOCK")
+        .and_then(|v| parse_count(&v, GEMM_BLOCK_CAP))
+        .unwrap_or(DEFAULT_GEMM_BLOCK)
+}
+
+/// `IRQLORA_GEMM_SERIAL_BELOW`, else [`DEFAULT_GEMM_SERIAL_BELOW`].
+pub fn gemm_serial_below() -> usize {
+    var("IRQLORA_GEMM_SERIAL_BELOW")
+        .and_then(|v| parse_count(&v, GEMM_SERIAL_BELOW_CAP))
+        .unwrap_or(DEFAULT_GEMM_SERIAL_BELOW)
+}
+
 /// `IRQLORA_ADAPTER_CACHE`, else [`DEFAULT_ADAPTER_CACHE`].
 pub fn adapter_cache() -> usize {
     var("IRQLORA_ADAPTER_CACHE")
@@ -422,6 +462,8 @@ mod tests {
             "IRQLORA_PARK_BOUND",
             "IRQLORA_PARK_AGE_MS",
             "IRQLORA_STREAM_MAX_STEPS",
+            "IRQLORA_GEMM_BLOCK",
+            "IRQLORA_GEMM_SERIAL_BELOW",
             "IRQLORA_ADAPTER_CACHE",
             "IRQLORA_DEVICE_CACHE",
             "IRQLORA_BIT_BUDGET",

@@ -320,11 +320,13 @@ fn dummy_entry(name: &str) -> BackendEntry {
             max_vocab: 16,
             fused_multi_adapter: false,
             streaming_decode: false,
+            packed_gemm: false,
             cache: CacheSemantics::None,
             approx_memory_bytes: 1024,
         },
         implements_fused: false,
         implements_step: false,
+        implements_packed_gemm: false,
         gate: None,
         factory: Arc::new(|ctx| {
             Ok(Box::new(ReferenceBackend::new(
@@ -387,6 +389,18 @@ fn registration_refuses_malformed_and_contradictory_manifests() {
         other => panic!("streaming-without-implementation accepted: {other:?}"),
     }
 
+    // contradictory: the manifest claims packed-domain GEMM consumption
+    // of quantized storage, but the implementation only dequantizes
+    let mut e = dummy_entry("packed-liar");
+    e.manifest.packed_gemm = true;
+    match reg.register(e) {
+        Err(HalError::InvalidManifest { name, reason }) => {
+            assert_eq!(name, "packed-liar");
+            assert!(reason.contains("packed"), "{reason}");
+        }
+        other => panic!("packed-gemm-without-implementation accepted: {other:?}"),
+    }
+
     reg.register(dummy_entry("dup")).unwrap();
     assert!(matches!(
         reg.register(dummy_entry("dup")),
@@ -443,6 +457,19 @@ fn resolve_refuses_unsupported_combinations_with_typed_errors() {
         }
         other => panic!("streaming resolved against a sliced manifest: {other:?}"),
     }
+    // a packed-domain GEMM requirement against a dequant-path manifest
+    // — and the builtin `native` entry must satisfy the same demand
+    let mut req = BackendRequest::new(4, 8, 16);
+    req.require_packed_gemm = true;
+    match reg.resolve("scatter-only", &req) {
+        Err(HalError::Unsupported { reason, .. }) => {
+            assert!(reason.contains("packed"), "{reason}")
+        }
+        other => panic!("packed GEMM resolved against a dequant manifest: {other:?}"),
+    }
+    let mut req = BackendRequest::new(4, 8, 16);
+    req.require_packed_gemm = true;
+    assert!(hal.resolve("native", &req).is_ok(), "native must offer packed_gemm");
     // a bit-width the manifest does not claim
     let mut req = BackendRequest::new(4, 8, 16);
     req.bit_widths = vec![2];

@@ -1,0 +1,109 @@
+//! The packed GEMM path must compute on quantized storage, not around
+//! it — ISSUE acceptance: "the packed path never allocates a full
+//! dequantized weight matrix".
+//!
+//! Enforced with a counting `#[global_allocator]` (same harness as
+//! `telemetry_disabled.rs`), at two operating points:
+//!
+//! - **serial path** (shapes under `IRQLORA_GEMM_SERIAL_BELOW`
+//!   multiply-adds): with warm `y`/scratch buffers, a steady-state
+//!   `gemm_packed_into` window must see exactly ZERO heap
+//!   acquisitions — the per-block LUT lives on the stack;
+//! - **parallel path**: the worker fan-out may allocate bookkeeping
+//!   (thread handles), but the bytes acquired per call must stay far
+//!   below `rows·cols·4` — the cost of materializing the dequantized
+//!   f32 matrix even once.
+//!
+//! This file deliberately holds ONE `#[test]` — a sibling test's
+//! thread would allocate inside the measurement window and turn the
+//! asserts flaky.
+
+use irqlora::kernels::{gemm_packed_into, PackedGemmScratch};
+use irqlora::quant::QuantizedTensor;
+use irqlora::{Rng, Tensor};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// `System` with acquisition odometers (count + bytes). Frees are not
+/// counted — the contract under test is about acquisitions.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn packed_gemm_never_materializes_the_dequantized_matrix() {
+    let mut rng = Rng::new(0xA110C);
+    let mut y = Vec::new();
+    let mut scratch = PackedGemmScratch::new();
+
+    // --- serial path: 16×64 = 1024 madds, under the 8192 default ---
+    let (rows, cols) = (16usize, 64usize);
+    let w = Tensor::new(&[rows, cols], rng.normal_vec(rows * cols, 0.0, 0.8));
+    let qt = QuantizedTensor::quantize(&w, 4, 64, None);
+    let x: Vec<f32> = rng.normal_vec(cols, 0.0, 1.0);
+    // warm-up: sizes the buffers, latches the env knobs and resolves
+    // the (no-op) telemetry handles — all one-time costs by contract
+    gemm_packed_into(&qt, &x, &mut y, &mut scratch);
+    let y0 = y.clone();
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..100 {
+        gemm_packed_into(&qt, &x, &mut y, &mut scratch);
+    }
+    let grew = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        grew, 0,
+        "steady-state serial packed matvec acquired heap {grew} times — \
+         the packed kernel's hot path must be allocation-free"
+    );
+    // and the answers stayed the answers
+    for (i, (a, b)) in y.iter().zip(&y0).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "row {i} drifted across the window");
+    }
+
+    // --- parallel path: 256×512 = 131072 madds, well over 8192 ---
+    let (rows, cols) = (256usize, 512usize);
+    let w = Tensor::new(&[rows, cols], rng.normal_vec(rows * cols, 0.0, 0.8));
+    let qt = QuantizedTensor::quantize(&w, 2, 64, None);
+    let x: Vec<f32> = rng.normal_vec(cols, 0.0, 1.0);
+    gemm_packed_into(&qt, &x, &mut y, &mut scratch); // warm for this shape
+    let matrix_bytes = (rows * cols * std::mem::size_of::<f32>()) as u64;
+
+    let before = BYTES.load(Ordering::SeqCst);
+    gemm_packed_into(&qt, &x, &mut y, &mut scratch);
+    let spent = BYTES.load(Ordering::SeqCst) - before;
+    assert!(
+        spent < matrix_bytes,
+        "parallel packed matvec acquired {spent} bytes — enough to have \
+         materialized the {matrix_bytes}-byte dequantized matrix it is \
+         supposed to never build"
+    );
+}

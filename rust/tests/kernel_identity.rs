@@ -1,0 +1,195 @@
+//! Packed-kernel bit-identity battery (verify.sh gate, exit 17).
+//!
+//! The `kernels` layer's contract is that `gemm_packed` — computing
+//! y = W_q·x straight from packed NF-k storage — lands on the EXACT
+//! bits of the two-step oracle "dequantize the tensor, then run the
+//! serial `gemm_f32_reference` matmul", for every bit-width, every
+//! ragged shape, partial and all-zero blocks, and mixed-k planned
+//! models. verify.sh runs this battery under
+//! `IRQLORA_SERVE_BACKEND=native` so the packed path is exercised in
+//! the same process configuration the serving smoke uses.
+//!
+//! The sweeps are property-style: shapes, block sizes and inputs are
+//! drawn from the in-tree seeded [`Rng`] (the vendored dependency set
+//! has no proptest), so every run covers the same reproducible case
+//! matrix and any failure prints the exact (k, shape, block, icq)
+//! coordinates that produced it.
+
+use irqlora::coordinator::quantize::quantize_model_planned;
+use irqlora::kernels::{
+    gemm_f32, gemm_f32_reference, gemm_packed, gemm_packed_hist, gemm_packed_hist_reference,
+    gemm_packed_into, gemm_packed_reference, PackedGemmScratch,
+};
+use irqlora::model::weights::NamedTensors;
+use irqlora::precision::{PlanEntry, PrecisionPlan};
+use irqlora::quant::{icq::IcqConfig, QuantizedTensor};
+use irqlora::{Rng, Tensor};
+
+const SWEEP_K: [u8; 4] = [2, 3, 4, 8];
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx} row {i}: {a} vs {b}");
+    }
+}
+
+/// The two-step oracle the packed kernel must reproduce bit-for-bit.
+fn dequant_then_matmul(qt: &QuantizedTensor, x: &[f32]) -> Vec<f32> {
+    let rows = qt.shape[0];
+    let cols: usize = qt.shape[1..].iter().product();
+    gemm_f32_reference(qt.dequantize().data(), x, rows, cols, 1)
+}
+
+fn sweep_case(rng: &mut Rng, rows: usize, cols: usize, k: u8, block: usize, icq: Option<&IcqConfig>) {
+    let ctx = format!("rows={rows} cols={cols} k={k} block={block} icq={}", icq.is_some());
+    let w = Tensor::new(&[rows, cols], rng.normal_vec(rows * cols, 0.0, 0.8));
+    let qt = QuantizedTensor::quantize(&w, k, block, icq);
+    let x: Vec<f32> = rng.normal_vec(cols, 0.0, 1.0);
+    let want = dequant_then_matmul(&qt, &x);
+    assert_bits_eq(&gemm_packed(&qt, &x), &want, &ctx);
+    assert_bits_eq(&gemm_packed_reference(&qt, &x), &want, &ctx);
+    // the dense blocked kernel agrees with its own serial twin too
+    let dq = qt.dequantize();
+    assert_bits_eq(
+        &gemm_f32(dq.data(), &x, rows, cols, 1),
+        &want,
+        &format!("{ctx} [dense]"),
+    );
+}
+
+/// Ragged shapes × every supported k × vanilla/ICQ: the headline
+/// bit-identity sweep.
+#[test]
+fn packed_gemm_bit_identical_to_dequant_oracle_across_shapes_and_k() {
+    let mut rng = Rng::new(0x4b45524e);
+    let icq = IcqConfig::default();
+    // primes, singletons, and >serial-threshold sizes all included
+    let shapes: [(usize, usize); 6] = [(1, 1), (7, 13), (16, 64), (33, 1), (5, 129), (96, 97)];
+    for k in SWEEP_K {
+        for (rows, cols) in shapes {
+            sweep_case(&mut rng, rows, cols, k, 64, None);
+            sweep_case(&mut rng, rows, cols, k, 64, Some(&icq));
+        }
+    }
+}
+
+/// Blocks that end mid-row, rows that end mid-block, and block sizes
+/// where `block·k` is not a whole number of bytes (the dequantizer's
+/// serial-fallback geometry) — the packed walk must not lose or
+/// duplicate a single code.
+#[test]
+fn packed_gemm_handles_partial_blocks_and_unaligned_geometries() {
+    let mut rng = Rng::new(0x504b4731);
+    let icq = IcqConfig::default();
+    for k in SWEEP_K {
+        for (rows, cols, block) in [
+            (4usize, 10usize, 3usize), // block*k % 8 != 0 for k=2,3,4,8? (3k odd bytes)
+            (5, 9, 7),
+            (3, 17, 16),
+            (9, 31, 10),
+            (2, 5, 64), // one partial block spanning the whole tensor
+        ] {
+            sweep_case(&mut rng, rows, cols, k, block, None);
+            sweep_case(&mut rng, rows, cols, k, block, Some(&icq));
+        }
+    }
+}
+
+/// All-zero tensors quantize to zero-scale blocks; the packed kernel
+/// must reproduce the oracle's bits there too (including signed zeros).
+#[test]
+fn packed_gemm_zero_blocks_match_oracle() {
+    let mut rng = Rng::new(0x5a45524f);
+    for k in SWEEP_K {
+        let (rows, cols) = (6usize, 32usize);
+        let mut data = vec![0f32; rows * cols];
+        // half the blocks zero, half live
+        for (i, v) in data.iter_mut().enumerate() {
+            if (i / 16) % 2 == 0 {
+                *v = rng.normal();
+            }
+        }
+        let w = Tensor::new(&[rows, cols], data);
+        let qt = QuantizedTensor::quantize(&w, k, 16, None);
+        let x: Vec<f32> = rng.normal_vec(cols, 0.0, 1.0);
+        let want = dequant_then_matmul(&qt, &x);
+        assert_bits_eq(&gemm_packed(&qt, &x), &want, &format!("k={k} zero-blocks"));
+    }
+}
+
+/// Mixed-k planned models: every stored tensor keeps its own k, and
+/// both the raw kernel and the `QuantizedModel::packed_matvec` wrapper
+/// must match the dense oracle per tensor.
+#[test]
+fn packed_gemm_bit_identical_on_mixed_k_planned_models() {
+    let mut rng = Rng::new(0x4d495845);
+    let mut m = NamedTensors::new();
+    m.push("l0.wq", Tensor::new(&[24, 48], rng.normal_vec(24 * 48, 0.0, 0.7)));
+    m.push("l0.w2", Tensor::new(&[40, 24], rng.normal_vec(40 * 24, 0.0, 0.7)));
+    m.push("l1.wq", Tensor::new(&[24, 48], rng.normal_vec(24 * 48, 0.0, 0.7)));
+    m.push("embed", Tensor::new(&[10, 24], rng.normal_vec(240, 0.0, 0.7)));
+    let entries = [("l0.wq", 2u8), ("l0.w2", 4), ("l1.wq", 8)]
+        .into_iter()
+        .map(|(name, k)| PlanEntry {
+            name: name.into(),
+            k,
+            n_params: m.get(name).unwrap().len(),
+            entropy: 0.0,
+            bits_per_weight: 0.0,
+        })
+        .collect();
+    let plan = PrecisionPlan { budget_bits: 4.0, block: 24, entries };
+    let qm = quantize_model_planned(&m, &plan, &IcqConfig::default()).unwrap();
+    assert_eq!(qm.storage.len(), 3);
+
+    let mut y = Vec::new();
+    let mut scratch = PackedGemmScratch::new();
+    for (name, qt) in &qm.storage {
+        let cols: usize = qt.shape[1..].iter().product();
+        let x: Vec<f32> = rng.normal_vec(cols, 0.0, 1.0);
+        let want = dequant_then_matmul(qt, &x);
+        assert_bits_eq(&gemm_packed(qt, &x), &want, name);
+        qm.packed_matvec(name, &x, &mut y, &mut scratch).unwrap();
+        assert_bits_eq(&y, &want, &format!("{name} [packed_matvec]"));
+    }
+}
+
+/// The steady-state `_into` API reuses caller buffers across calls of
+/// different shapes without carrying stale state between them.
+#[test]
+fn packed_gemm_into_reuses_buffers_across_tensors() {
+    let mut rng = Rng::new(0x494e544f);
+    let mut y = vec![f32::NAN; 999]; // stale garbage must be cleared
+    let mut scratch = PackedGemmScratch::new();
+    for (rows, cols, k) in [(8usize, 24usize, 4u8), (3, 65, 2), (17, 8, 8)] {
+        let w = Tensor::new(&[rows, cols], rng.normal_vec(rows * cols, 0.0, 0.8));
+        let qt = QuantizedTensor::quantize(&w, k, 16, None);
+        let x: Vec<f32> = rng.normal_vec(cols, 0.0, 1.0);
+        gemm_packed_into(&qt, &x, &mut y, &mut scratch);
+        assert_bits_eq(&y, &dequant_then_matmul(&qt, &x), &format!("k={k}"));
+    }
+}
+
+/// The histogram variant is its own twin pair: parallel and serial
+/// must be bit-identical to each other, and within tolerance of the
+/// exact path (it reassociates the k-reduction by code, so exactness
+/// is not claimed — see `kernels` module docs).
+#[test]
+fn hist_variant_twins_agree_and_track_the_exact_path() {
+    let mut rng = Rng::new(0x48495354);
+    for k in SWEEP_K {
+        let (rows, cols) = (11usize, 53usize);
+        let w = Tensor::new(&[rows, cols], rng.normal_vec(rows * cols, 0.0, 0.8));
+        let qt = QuantizedTensor::quantize(&w, k, 16, Some(&IcqConfig::default()));
+        let x: Vec<f32> = rng.normal_vec(cols, 0.0, 1.0);
+        let fast = gemm_packed_hist(&qt, &x);
+        assert_bits_eq(&fast, &gemm_packed_hist_reference(&qt, &x), &format!("k={k} hist"));
+        for (i, (h, e)) in fast.iter().zip(gemm_packed(&qt, &x)).enumerate() {
+            assert!(
+                (h - e).abs() <= 1e-4 * (1.0 + e.abs()),
+                "k={k} row {i}: hist {h} vs exact {e}"
+            );
+        }
+    }
+}
